@@ -1,0 +1,94 @@
+//! END-TO-END DRIVER: the cluster-trace simulation (paper §VII-C/D).
+//!
+//! Exercises the full system on a real (synthetic Borg-like) workload:
+//! trace generation -> CSV round-trip through the Google-trace reader ->
+//! machine events as host add/remove -> task grouping into VMs ->
+//! injected spot instances -> full DES run with interruption/hibernation
+//! -> Fig. 12 series + §VII-D statistics + Figs. 10-11 self-profile.
+//! Results are recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example cluster_trace`
+//! Scale knobs: CM_MACHINES, CM_DAYS, CM_SPOTS, CM_MAX_VMS env vars.
+
+use cloudmarket::experiments::trace_sim::{self, TraceSimConfig};
+use cloudmarket::trace::reader;
+use cloudmarket::trace::synth::TraceGenerator;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let mut cfg = TraceSimConfig::default();
+    cfg.synth.machines = env_usize("CM_MACHINES", 200);
+    cfg.synth.days = env_f64("CM_DAYS", 2.0);
+    cfg.workload.spot_instances = env_usize("CM_SPOTS", 2_000);
+    cfg.workload.max_trace_vms = env_usize("CM_MAX_VMS", 20_000);
+
+    // 1. Generate the trace and round-trip it through the CSV reader to
+    //    prove the Google-trace ingestion path works end to end.
+    eprintln!(
+        "generating trace: {} machines x {:.1} days ...",
+        cfg.synth.machines, cfg.synth.days
+    );
+    let trace = TraceGenerator::new(cfg.synth.clone()).generate();
+    let dir = std::env::temp_dir().join("cloudmarket_trace_csv");
+    reader::write_trace_dir(&trace, &dir).expect("writing trace CSVs");
+    let (reread, stats) = reader::read_trace_dir(&dir).expect("reading trace CSVs");
+    assert_eq!(reread.tasks.len(), trace.tasks.len(), "CSV round-trip lost events");
+    eprintln!(
+        "trace reader: {} machine rows, {} task rows, {} malformed, {} bindings resolved",
+        stats.machine_rows, stats.task_rows, stats.malformed_rows, stats.resolved_bindings
+    );
+
+    // 2. Run the simulation (uses the same generator config internally).
+    eprintln!(
+        "simulating with {} injected spots (cap {} trace VMs) ...",
+        cfg.workload.spot_instances, cfg.workload.max_trace_vms
+    );
+    let out = trace_sim::run(&cfg);
+
+    // 3. Report: §VII-D table, Fig. 12 chart + CSV, Figs. 10-11 profile.
+    println!("{}", trace_sim::results_table(&out).render());
+    println!("{}", out.series.ascii_chart("spot_running", 100, 12));
+    println!("{}", out.series.ascii_chart("od_running", 100, 12));
+
+    let out_dir = std::path::PathBuf::from("results");
+    trace_sim::fig12_csv(&out)
+        .write_file(&out_dir.join("fig12_active_instances.csv"))
+        .expect("writing fig12 csv");
+    println!("wrote {}", out_dir.join("fig12_active_instances.csv").display());
+    if let Some(prof) = &out.selfprof {
+        prof.to_csv()
+            .write_file(&out_dir.join("fig10_11_selfprofile.csv"))
+            .expect("writing selfprofile csv");
+        println!(
+            "figs 10-11 self-profile: cpu peak {:.0}%, rss peak {:.0} MB, {} samples -> {}",
+            prof.max_of("cpu_pct").unwrap_or(0.0),
+            prof.max_of("rss_mb").unwrap_or(0.0),
+            prof.len(),
+            out_dir.join("fig10_11_selfprofile.csv").display()
+        );
+    }
+
+    // End-to-end sanity: the run must exhibit the paper's dynamics.
+    let s = &out.report.spot;
+    assert!(out.report.events_processed > 1_000, "simulation too small");
+    assert!(s.total_spot as usize == cfg.workload.spot_instances);
+    assert!(
+        s.interrupted_vms > 0,
+        "trace load must interrupt some spot instances"
+    );
+    assert!(
+        s.redeployments > 0,
+        "hibernated spots must recover in load dips (paper Fig. 12)"
+    );
+    println!(
+        "\ncluster_trace OK: {} events, {} spot interruptions, {} redeployments, wall {:?}",
+        out.report.events_processed, s.interruptions, s.redeployments, out.report.wall
+    );
+}

@@ -1,0 +1,70 @@
+//! RandomlyGeneratedInstances - the paper's §VII-B(a) test case.
+//!
+//! Instances (spot and on-demand, randomized profiles) are generated
+//! dynamically during the run; when on-demand capacity runs short,
+//! running spot instances (terminate behavior) are interrupted and appear
+//! as TERMINATED in the output table - the paper's Fig. 5 scenario.
+//!
+//! Run: `cargo run --release --example randomly_generated_instances`
+
+use cloudmarket::allocation::FirstFit;
+use cloudmarket::cloudlet::Cloudlet;
+use cloudmarket::engine::{Engine, EngineConfig};
+use cloudmarket::infra::HostSpec;
+use cloudmarket::metrics::tables;
+use cloudmarket::stats::Rng;
+use cloudmarket::vm::{SpotConfig, Vm, VmSpec, VmState, VmType};
+
+fn main() {
+    let mut cfg = EngineConfig::default();
+    cfg.min_dt = 0.5;
+    cfg.vm_destruction_delay = 1.0;
+    let mut engine = Engine::new(cfg, Box::new(FirstFit::new()));
+    let dc = engine.add_datacenter("dc0", 1.0);
+    for _ in 0..4 {
+        engine.add_host(dc, HostSpec::new(8, 1000.0, 32_768.0, 10_000.0, 1_000_000.0));
+    }
+
+    // "A clockTickListener dynamically generates new VM instances during
+    // simulation runtime" - equivalently, we pre-draw the random arrival
+    // schedule with a seeded RNG (identical distribution, deterministic).
+    let mut rng = Rng::new(7);
+    let spot_cfg = SpotConfig::terminate().with_min_running(0.0).with_warning(1.0);
+    let mut n_spot = 0;
+    let mut n_od = 0;
+    for _ in 0..40 {
+        let arrival = rng.uniform(0.0, 60.0);
+        let pes = rng.range_u64(1, 4) as u32;
+        let spec = VmSpec::new(1000.0, pes).with_ram(512.0 * pes as f64);
+        let work = rng.uniform(10.0, 40.0); // seconds of execution
+        let length = work * 1000.0 * pes as f64;
+        let vm = if rng.chance(0.4) {
+            n_spot += 1;
+            engine.submit_vm(Vm::spot(0, spec, spot_cfg).with_delay(arrival))
+        } else {
+            n_od += 1;
+            engine
+                .submit_vm(Vm::on_demand(0, spec).with_persistent(30.0).with_delay(arrival))
+        };
+        engine.submit_cloudlet(Cloudlet::new(0, length, pes).with_vm(vm));
+    }
+
+    engine.terminate_at(150.0);
+    let report = engine.run();
+
+    let all: Vec<usize> = (0..engine.world.vms.len()).collect();
+    println!("{}", tables::dynamic_vm_table(&engine.world, &all).render());
+    println!("{}", report.render());
+
+    let terminated_spots = engine
+        .world
+        .vms
+        .iter()
+        .filter(|v| v.vm_type == VmType::Spot && v.state == VmState::Terminated)
+        .count();
+    println!(
+        "\nrandomly_generated_instances OK: {n_spot} spots / {n_od} on-demand generated, \
+         {terminated_spots} spots TERMINATED by capacity contention"
+    );
+    assert!(report.spot.interruptions > 0, "scenario should produce interruptions");
+}

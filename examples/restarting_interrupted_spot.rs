@@ -1,0 +1,85 @@
+//! RestartingInterruptedSpot - the paper's §VII-B(b) test case.
+//!
+//! Several spot instances with persistent requests start first and fill
+//! two hosts; a wave of on-demand instances arrives 10 s later and
+//! preempts them; the spots hibernate, are resubmitted when the on-demand
+//! wave completes, and finish. Reproduces the Fig. 5/6 output tables
+//! (including average interruption times).
+//!
+//! Run: `cargo run --release --example restarting_interrupted_spot`
+
+use cloudmarket::allocation::HlemVmp;
+use cloudmarket::cloudlet::Cloudlet;
+use cloudmarket::engine::{Engine, EngineConfig};
+use cloudmarket::infra::HostSpec;
+use cloudmarket::metrics::tables;
+use cloudmarket::vm::{SpotConfig, Vm, VmSpec, VmState, VmType};
+
+fn main() {
+    let mut cfg = EngineConfig::default();
+    cfg.min_dt = 0.5;
+    cfg.vm_destruction_delay = 1.0;
+    let mut engine = Engine::new(cfg, Box::new(HlemVmp::plain()));
+    let dc = engine.add_datacenter("dc0", 1.0);
+    // Two 8-PE hosts (the paper's Fig. 5 shows hosts with 8 CPUs).
+    for _ in 0..2 {
+        engine.add_host(dc, HostSpec::new(8, 1000.0, 32_768.0, 10_000.0, 1_000_000.0));
+    }
+
+    // Three 4-PE spot instances with persistent requests + hibernation.
+    let spot_cfg = SpotConfig::hibernate()
+        .with_min_running(0.0)
+        .with_warning(0.0)
+        .with_hibernation_timeout(60.0);
+    let mut spots = Vec::new();
+    for _ in 0..3 {
+        let spec = VmSpec::new(1000.0, 4).with_ram(1_024.0);
+        let vm = engine.submit_vm(Vm::spot(0, spec, spot_cfg).with_persistent(60.0));
+        // 44_000 MI at 4000 MIPS -> 11 s of work.
+        engine.submit_cloudlet(Cloudlet::new(0, 44_000.0, 4).with_vm(vm));
+        spots.push(vm);
+    }
+
+    // Five 4-PE on-demand instances arrive at t=10 (22 s of work each);
+    // they need 20 PEs > the 16 available, so spots are interrupted and
+    // the fifth one waits.
+    let mut ods = Vec::new();
+    for _ in 0..5 {
+        let spec = VmSpec::new(1000.0, 4).with_ram(1_024.0);
+        let vm = engine
+            .submit_vm(Vm::on_demand(0, spec).with_persistent(120.0).with_delay(10.0));
+        engine.submit_cloudlet(Cloudlet::new(0, 88_000.0, 4).with_vm(vm));
+        ods.push(vm);
+    }
+
+    engine.terminate_at(200.0);
+    let report = engine.run();
+
+    let all: Vec<usize> = (0..engine.world.vms.len()).collect();
+    println!("{}", tables::dynamic_vm_table(&engine.world, &all).render());
+    println!("{}", tables::spot_vm_table(&engine.world, &all).render());
+    println!("{}", tables::execution_table(&engine.world, &all).render());
+    println!("{}", report.render());
+
+    // Invariants of the scenario.
+    let finished_spots = spots
+        .iter()
+        .filter(|&&v| engine.world.vms[v].state == VmState::Finished)
+        .count();
+    let interrupted = spots.iter().filter(|&&v| engine.world.vms[v].interruptions > 0).count();
+    assert!(interrupted >= 1, "at least one spot must be interrupted");
+    assert_eq!(finished_spots, 3, "all spots must eventually finish");
+    assert!(
+        engine
+            .world
+            .vms
+            .iter()
+            .filter(|v| v.vm_type == VmType::OnDemand)
+            .all(|v| v.state == VmState::Finished),
+        "all on-demand VMs must finish"
+    );
+    assert!(report.spot.redeployments >= 1);
+    println!(
+        "\nrestarting_interrupted_spot OK: {interrupted} spots interrupted, all resumed and finished"
+    );
+}

@@ -1,0 +1,150 @@
+"""AOT compile path: lower the L2 jax entry points to HLO *text* artifacts.
+
+The interchange format is HLO text, NOT ``.serialize()``-d HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the published
+``xla`` 0.1.6 crate (xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``).
+The text parser on the rust side reassigns ids and round-trips cleanly - see
+/opt/xla-example/load_hlo/ and DESIGN.md S5.
+
+Usage (normally via ``make artifacts``):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Writes:
+    artifacts/hlem_score.hlo.txt
+    artifacts/cloudlet_step.hlo.txt
+    artifacts/MANIFEST.json        (shapes + input-file hash; used by make
+                                    and by the rust runtime as a sanity check)
+
+Idempotent: if MANIFEST.json matches the current source hash the artifacts
+are left untouched (``make artifacts`` becomes a no-op).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+_SRC_FILES = [
+    "compile/model.py",
+    "compile/kernels/__init__.py",
+    "compile/kernels/ref.py",
+    "compile/kernels/hlem.py",
+    "compile/kernels/progress.py",
+    "compile/aot.py",
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def source_hash(base_dir: str) -> str:
+    """sha256 over the compile-path sources (the MANIFEST freshness key)."""
+    h = hashlib.sha256()
+    for rel in _SRC_FILES:
+        path = os.path.join(base_dir, rel)
+        with open(path, "rb") as f:
+            h.update(rel.encode())
+            h.update(f.read())
+    return h.hexdigest()
+
+
+def build_manifest(src_hash: str) -> dict:
+    return {
+        "source_hash": src_hash,
+        "jax_version": jax.__version__,
+        "entry_points": {
+            "hlem_score": {
+                "file": "hlem_score.hlo.txt",
+                "max_hosts": model.MAX_HOSTS,
+                "dims": model.DIMS,
+                "inputs": [
+                    f"caps f32[{model.MAX_HOSTS},{model.DIMS}]",
+                    f"free f32[{model.MAX_HOSTS},{model.DIMS}]",
+                    f"spot_used f32[{model.MAX_HOSTS},{model.DIMS}]",
+                    f"mask f32[{model.MAX_HOSTS}]",
+                    "alpha f32[]",
+                ],
+                "outputs": [
+                    f"hs f32[{model.MAX_HOSTS}]",
+                    f"ahs f32[{model.MAX_HOSTS}]",
+                ],
+            },
+            "cloudlet_step": {
+                "file": "cloudlet_step.hlo.txt",
+                "max_cloudlets": model.MAX_CLOUDLETS,
+                "inputs": [
+                    f"remaining f32[{model.MAX_CLOUDLETS}]",
+                    f"mips f32[{model.MAX_CLOUDLETS}]",
+                    "dt f32[]",
+                ],
+                "outputs": [
+                    f"remaining f32[{model.MAX_CLOUDLETS}]",
+                    f"finished f32[{model.MAX_CLOUDLETS}]",
+                ],
+            },
+        },
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    ap.add_argument("--force", action="store_true", help="rebuild even if fresh")
+    args = ap.parse_args()
+
+    base_dir = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out_dir = os.path.abspath(os.path.join(os.getcwd(), args.out_dir))
+    os.makedirs(out_dir, exist_ok=True)
+
+    src_hash = source_hash(base_dir)
+    manifest_path = os.path.join(out_dir, "MANIFEST.json")
+    if not args.force and os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                old = json.load(f)
+            if old.get("source_hash") == src_hash and all(
+                os.path.exists(os.path.join(out_dir, ep["file"]))
+                for ep in old.get("entry_points", {}).values()
+            ):
+                print(f"artifacts fresh (hash {src_hash[:12]}), nothing to do")
+                return 0
+        except (json.JSONDecodeError, KeyError):
+            pass  # stale/corrupt manifest -> rebuild
+
+    lowered_hlem = jax.jit(model.hlem_scores).lower(*model.hlem_example_args())
+    hlem_text = to_hlo_text(lowered_hlem)
+    hlem_path = os.path.join(out_dir, "hlem_score.hlo.txt")
+    with open(hlem_path, "w") as f:
+        f.write(hlem_text)
+    print(f"wrote {len(hlem_text):>9} chars  {hlem_path}")
+
+    lowered_step = jax.jit(model.cloudlet_step).lower(*model.cloudlet_example_args())
+    step_text = to_hlo_text(lowered_step)
+    step_path = os.path.join(out_dir, "cloudlet_step.hlo.txt")
+    with open(step_path, "w") as f:
+        f.write(step_text)
+    print(f"wrote {len(step_text):>9} chars  {step_path}")
+
+    with open(manifest_path, "w") as f:
+        json.dump(build_manifest(src_hash), f, indent=2)
+    print(f"wrote manifest        {manifest_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

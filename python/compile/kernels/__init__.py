@@ -1,0 +1,18 @@
+"""L1 pallas kernels for cloudmarket (build-time only; never on request path).
+
+- ``hlem``:     fused HLEM-VMP host-evaluation pipeline (Eqs. 3-11).
+- ``progress``: batched cloudlet progress update.
+- ``ref``:      pure-jnp oracles defining the semantics of both.
+"""
+
+from .hlem import hlem_scores_pallas
+from .progress import cloudlet_step_pallas
+from .ref import cloudlet_step_ref, entropy_weights_ref, hlem_scores_ref
+
+__all__ = [
+    "hlem_scores_pallas",
+    "cloudlet_step_pallas",
+    "hlem_scores_ref",
+    "entropy_weights_ref",
+    "cloudlet_step_ref",
+]

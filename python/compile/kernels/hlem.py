@@ -1,0 +1,119 @@
+"""L1 pallas kernel: fused HLEM-VMP host-evaluation pipeline (Eqs. 3-11).
+
+One fused kernel computes, for a padded batch of ``H`` hosts and ``D``
+resource dimensions:
+
+  min-max normalize -> proportional shares -> per-dimension entropy ->
+  variation factors -> weights -> host score HS -> spot load SL ->
+  adjusted score AHS
+
+TPU design notes (see DESIGN.md SHardware-Adaptation):
+
+- The paper has no GPU kernel to port; the hot-spot is a small dense
+  pipeline executed on *every* placement decision.  We lay the data out as
+  ``[D, H]`` (resource dimensions in sublanes, hosts in lanes) so that with
+  the production shape ``H = 128`` the host axis exactly fills a TPU lane
+  register and every reduction over hosts is a lane reduction.  The whole
+  working set (5 x D x H x 4 B = 10 KB at D=4, H=128) fits a single
+  VMEM-resident block, so the grid is trivial: one program, zero HBM
+  round-trips between pipeline stages (the Java original walks host lists
+  object-by-object per stage).
+- ``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+  Mosaic custom-calls.  The interpret path lowers to plain HLO, which is
+  what ``aot.py`` ships to the rust runtime.
+
+The public entry point ``hlem_scores_pallas`` keeps the oracle's ``[H, D]``
+interface and transposes at the boundary (XLA folds the transposes into the
+surrounding fusion).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EPS, NEG
+
+# f32 sentinel bounds for masked lane reductions (finite: avoids inf-inf NaNs).
+_BIG = 3.0e38
+
+
+def _hlem_kernel(caps_ref, free_ref, spot_ref, mask_ref, alpha_ref, hs_ref, ahs_ref):
+    """Fused scoring kernel over one ``[D, H]`` block.
+
+    Refs:
+      caps_ref:  f32[D, H] total capacities (transposed).
+      free_ref:  f32[D, H] available capacities (transposed).
+      spot_ref:  f32[D, H] spot-consumed capacities (transposed).
+      mask_ref:  f32[1, H] candidate mask.
+      alpha_ref: f32[1, 1] signed spot-load factor.
+      hs_ref:    f32[1, H] out - Eq. (9) host scores.
+      ahs_ref:   f32[1, H] out - Eq. (11) adjusted scores.
+    """
+    caps = caps_ref[...]
+    free = free_ref[...]
+    spot = spot_ref[...]
+    m = mask_ref[...]  # [1, H]
+    alpha = alpha_ref[0, 0]
+
+    d = free.shape[0]
+    n = jnp.sum(m)  # valid host count (scalar)
+
+    # --- Eq. (3): min-max normalization over valid hosts (lane reduction) ---
+    mn = jnp.min(jnp.where(m > 0.0, free, _BIG), axis=1, keepdims=True)  # [D, 1]
+    mx = jnp.max(jnp.where(m > 0.0, free, -_BIG), axis=1, keepdims=True)  # [D, 1]
+    rng = mx - mn
+    cnorm = jnp.where(rng > EPS, (free - mn) / jnp.maximum(rng, EPS), 0.5)  # [D, H]
+
+    # --- Eq. (4): proportional shares ---
+    col_sum = jnp.sum(free * m, axis=1, keepdims=True)  # [D, 1]
+    uniform = jnp.where(n > 0.0, 1.0 / jnp.maximum(n, 1.0), 0.0)
+    p = jnp.where(col_sum > EPS, free / jnp.maximum(col_sum, EPS), uniform) * m  # [D, H]
+
+    # --- Eq. (5)-(6): per-dimension entropy, k = 1/ln(n) (k = 0 for n <= 1) ---
+    plogp = jnp.where(p > 0.0, p * jnp.log(jnp.maximum(p, EPS)), 0.0)
+    k = jnp.where(n > 1.0, 1.0 / jnp.log(jnp.maximum(n, 2.0)), 0.0)
+    e = -k * jnp.sum(plogp, axis=1, keepdims=True)  # [D, 1]
+
+    # --- Eq. (7)-(8): variation factors -> weights ---
+    g = 1.0 - e  # [D, 1]
+    gsum = jnp.sum(g)
+    w = jnp.where(gsum > EPS, g / jnp.maximum(gsum, EPS), jnp.full((d, 1), 1.0 / d, jnp.float32))
+
+    # --- Eq. (9): host score (sublane reduction, D is tiny) ---
+    hs = jnp.sum(w * cnorm, axis=0, keepdims=True)  # [1, H]
+
+    # --- Eq. (10)-(11): spot load and adjusted score ---
+    frac = jnp.where(caps > EPS, spot / jnp.maximum(caps, EPS), 0.0)
+    sl = jnp.sum(w * frac, axis=0, keepdims=True)  # [1, H]
+    ahs = hs * (1.0 + alpha * sl)
+
+    hs_ref[...] = jnp.where(m > 0.0, hs, NEG)
+    ahs_ref[...] = jnp.where(m > 0.0, ahs, NEG)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def hlem_scores_pallas(caps, free, spot_used, mask, alpha):
+    """Pallas-backed HLEM-VMP scores with the oracle's ``[H, D]`` interface.
+
+    Args / returns: identical to ``ref.hlem_scores_ref``.
+    """
+    caps = jnp.asarray(caps, jnp.float32)
+    free = jnp.asarray(free, jnp.float32)
+    spot_used = jnp.asarray(spot_used, jnp.float32)
+    mask = jnp.asarray(mask, jnp.float32)
+    alpha = jnp.asarray(alpha, jnp.float32)
+
+    h, _d = caps.shape
+    hs, ahs = pl.pallas_call(
+        _hlem_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((1, h), jnp.float32),
+            jax.ShapeDtypeStruct((1, h), jnp.float32),
+        ),
+        interpret=True,
+    )(caps.T, free.T, spot_used.T, mask.reshape(1, h), alpha.reshape(1, 1))
+    return hs.reshape(h), ahs.reshape(h)

@@ -1,0 +1,88 @@
+"""L1 pallas kernel: batched cloudlet progress update.
+
+The paper identifies per-cloudlet execution updates as the dominant cost of
+its trace-scale simulations (SVII-D.1: "performance was constrained by
+cloudlet execution updates ... suggesting parallelization as a future
+optimization").  This kernel *is* that parallelization: one scheduling-
+interval tick advances every running cloudlet at once.
+
+TPU design notes:
+
+- Cloudlets are tiled in ``BLOCK = 1024``-lane blocks along the batch axis
+  via ``BlockSpec`` - the HBM<->VMEM schedule that replaces the Java
+  per-object update loop.  Each block is 3 x 1024 x 4 B = 12 KB of VMEM,
+  leaving headroom to double-buffer blocks while the VPU processes the
+  previous one (pallas pipelines grid steps automatically).
+- Pure elementwise VPU work; the MXU is idle by design (no matmul in this
+  computation).  The roofline comparison is therefore against the memory-
+  bound jnp reference, see EXPERIMENTS.md SPerf.
+- ``interpret=True`` as required for the CPU PJRT execution path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+
+
+def _progress_kernel(rem_ref, mips_ref, dt_ref, out_rem_ref, out_fin_ref):
+    """Advance one block of cloudlets by ``dt`` simulated seconds.
+
+    Refs:
+      rem_ref:     f32[1, BLOCK] remaining instructions (MI).
+      mips_ref:    f32[1, BLOCK] allocated MIPS.
+      dt_ref:      f32[1, 1] elapsed simulated seconds.
+      out_rem_ref: f32[1, BLOCK] out - updated remaining MI.
+      out_fin_ref: f32[1, BLOCK] out - 1.0 where the cloudlet just finished.
+    """
+    rem = rem_ref[...]
+    mips = mips_ref[...]
+    dt = dt_ref[0, 0]
+    nxt = jnp.maximum(rem - mips * dt, 0.0)
+    out_rem_ref[...] = nxt
+    out_fin_ref[...] = jnp.where((rem > 0.0) & (nxt <= 0.0), 1.0, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def cloudlet_step_pallas(remaining, mips, dt):
+    """Pallas-backed batched progress update; interface of ``ref.cloudlet_step_ref``.
+
+    ``remaining``/``mips`` must share a length that is a multiple of
+    ``BLOCK`` for the production artifact; arbitrary lengths are padded here
+    so property tests can sweep shapes.
+    """
+    remaining = jnp.asarray(remaining, jnp.float32)
+    mips = jnp.asarray(mips, jnp.float32)
+    dt = jnp.asarray(dt, jnp.float32)
+
+    n = remaining.shape[0]
+    padded = ((n + BLOCK - 1) // BLOCK) * BLOCK
+    pad = padded - n
+    rem_p = jnp.pad(remaining, (0, pad)).reshape(1, padded)
+    mips_p = jnp.pad(mips, (0, pad)).reshape(1, padded)
+
+    grid = padded // BLOCK
+    out_rem, out_fin = pl.pallas_call(
+        _progress_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((1, BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((1, BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((1, BLOCK), lambda i: (0, i)),
+        ],
+        out_shape=(
+            jax.ShapeDtypeStruct((1, padded), jnp.float32),
+            jax.ShapeDtypeStruct((1, padded), jnp.float32),
+        ),
+        interpret=True,
+    )(rem_p, mips_p, dt.reshape(1, 1))
+    return out_rem.reshape(padded)[:n], out_fin.reshape(padded)[:n]

@@ -1,0 +1,144 @@
+"""Pure-jnp correctness oracles for the cloudmarket L1 kernels.
+
+These functions define the *semantics* of the two artifacts the rust
+coordinator executes:
+
+- ``hlem_scores_ref``: the HLEM-VMP host-evaluation pipeline, Eqs. (3)-(9) of
+  the paper, plus the spot-load adjustment of Eqs. (10)-(11).
+- ``cloudlet_step_ref``: the batched cloudlet progress update (the paper's
+  measured simulation bottleneck, SVII-D.1).
+
+The pallas kernels in ``hlem.py`` / ``progress.py`` must match these to
+float32 tolerance; the pure-rust scorer in ``rust/src/allocation/scorer.rs``
+implements the identical math and is cross-checked against the AOT artifact
+in rust integration tests.
+
+Masking / degenerate-case contract (shared with rust, asserted in tests):
+
+- ``mask[i] == 0`` marks a padded or filtered-out host.  Masked hosts receive
+  score ``NEG`` (-1e30) and do not participate in any reduction.
+- min-max normalization (Eq. 3): when ``max == min`` over the valid hosts in
+  a dimension, the normalized capacity is defined as 0.5 for every valid
+  host (all hosts equivalent in that dimension).
+- proportional share (Eq. 4): when the valid-host sum of a dimension is 0,
+  the share is ``1/n`` (uniform).
+- entropy constant (Eq. 6): ``k = 1/ln(n)`` with ``n`` = number of valid
+  hosts; for ``n <= 1`` we define ``k = 0`` so that ``e_d = 0`` and the
+  weights collapse to uniform via the Eq. (7)-(8) path (all g_d equal).
+- Eq. (8) guard: if ``sum_d g_d == 0`` the weights are uniform ``1/D``.
+- spot load (Eq. 10): dimensions with zero total capacity contribute 0.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Score assigned to masked (padded / filtered-out) hosts.  Large-negative
+# instead of -inf so downstream arithmetic can never produce NaNs.
+NEG = -1.0e30
+
+# Epsilon guarding the min-max denominator and the weight-sum denominator.
+EPS = 1.0e-12
+
+
+def entropy_weights_ref(free: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Entropy-derived resource weights ``w_d`` (Eqs. 4-8).
+
+    Args:
+      free: ``f32[H, D]`` available capacity per host and resource dimension.
+      mask: ``f32[H]`` 1.0 for valid candidate hosts, 0.0 otherwise.
+
+    Returns:
+      ``f32[D]`` weights, summing to 1.
+    """
+    free = jnp.asarray(free, jnp.float32)
+    mask = jnp.asarray(mask, jnp.float32)
+    h, d = free.shape
+    m = mask[:, None]  # [H, 1]
+    n = jnp.sum(mask)  # valid host count
+
+    # Eq. (4): proportional share of each dimension held by each host.
+    col_sum = jnp.sum(free * m, axis=0)  # [D]
+    uniform = jnp.where(n > 0, 1.0 / jnp.maximum(n, 1.0), 0.0)
+    p = jnp.where(col_sum[None, :] > EPS, free / jnp.maximum(col_sum[None, :], EPS), uniform)
+    p = p * m  # masked hosts contribute nothing
+
+    # Eq. (5)-(6): entropy with k = 1/ln(n); define k = 0 for n <= 1.
+    plogp = jnp.where(p > 0.0, p * jnp.log(jnp.maximum(p, EPS)), 0.0)
+    k = jnp.where(n > 1.0, 1.0 / jnp.log(jnp.maximum(n, 2.0)), 0.0)
+    e = -k * jnp.sum(plogp, axis=0)  # [D]
+
+    # Eq. (7)-(8): variation factors -> normalized weights.
+    g = 1.0 - e
+    gsum = jnp.sum(g)
+    w = jnp.where(gsum > EPS, g / jnp.maximum(gsum, EPS), jnp.full((d,), 1.0 / d, jnp.float32))
+    return w.astype(jnp.float32)
+
+
+def hlem_scores_ref(
+    caps: jnp.ndarray,
+    free: jnp.ndarray,
+    spot_used: jnp.ndarray,
+    mask: jnp.ndarray,
+    alpha: jnp.ndarray,
+):
+    """HLEM-VMP host scores ``HS_i`` (Eq. 9) and adjusted ``AHS_i`` (Eq. 11).
+
+    Args:
+      caps:      ``f32[H, D]`` total capacity per host / dimension.
+      free:      ``f32[H, D]`` currently available capacity ``C_i^d(t)``.
+      spot_used: ``f32[H, D]`` capacity consumed by spot instances.
+      mask:      ``f32[H]`` candidate mask (1 valid, 0 padded/filtered).
+      alpha:     ``f32[]`` signed spot-load factor (negative = penalty).
+
+    Returns:
+      ``(hs f32[H], ahs f32[H])`` with masked hosts at ``NEG``.
+    """
+    caps = jnp.asarray(caps, jnp.float32)
+    free = jnp.asarray(free, jnp.float32)
+    spot_used = jnp.asarray(spot_used, jnp.float32)
+    mask = jnp.asarray(mask, jnp.float32)
+    alpha = jnp.asarray(alpha, jnp.float32)
+
+    m = mask[:, None]
+
+    # Eq. (3): min-max normalization over *valid* hosts per dimension.
+    big = jnp.float32(3.0e38)
+    mn = jnp.min(jnp.where(m > 0.0, free, big), axis=0)  # [D]
+    mx = jnp.max(jnp.where(m > 0.0, free, -big), axis=0)  # [D]
+    rng = mx - mn
+    cnorm = jnp.where(rng[None, :] > EPS, (free - mn[None, :]) / jnp.maximum(rng[None, :], EPS), 0.5)
+
+    w = entropy_weights_ref(free, mask)  # [D]
+
+    # Eq. (9): weighted sum of normalized capacities.
+    hs = jnp.sum(w[None, :] * cnorm, axis=1)  # [H]
+
+    # Eq. (10): spot load = weighted fraction of capacity held by spot VMs.
+    frac = jnp.where(caps > EPS, spot_used / jnp.maximum(caps, EPS), 0.0)
+    sl = jnp.sum(w[None, :] * frac, axis=1)  # [H]
+
+    # Eq. (11): adjusted host score.
+    ahs = hs * (1.0 + alpha * sl)
+
+    hs = jnp.where(mask > 0.0, hs, NEG)
+    ahs = jnp.where(mask > 0.0, ahs, NEG)
+    return hs.astype(jnp.float32), ahs.astype(jnp.float32)
+
+
+def cloudlet_step_ref(remaining: jnp.ndarray, mips: jnp.ndarray, dt: jnp.ndarray):
+    """Batched cloudlet progress update.
+
+    ``remaining`` holds outstanding instructions (MI) per cloudlet slot
+    (0 for finished or padded slots), ``mips`` the MIPS currently allocated
+    to that cloudlet, ``dt`` the elapsed simulated seconds.
+
+    Returns ``(remaining', finished)`` where ``finished`` is 1.0 exactly for
+    slots that crossed to completion in this step.
+    """
+    remaining = jnp.asarray(remaining, jnp.float32)
+    mips = jnp.asarray(mips, jnp.float32)
+    dt = jnp.asarray(dt, jnp.float32)
+    nxt = jnp.maximum(remaining - mips * dt, 0.0)
+    finished = jnp.where((remaining > 0.0) & (nxt <= 0.0), 1.0, 0.0)
+    return nxt.astype(jnp.float32), finished.astype(jnp.float32)

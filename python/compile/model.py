@@ -1,0 +1,76 @@
+"""L2 jax model: the compute graphs the rust coordinator executes via PJRT.
+
+Two entry points, both built on the L1 pallas kernels:
+
+- ``hlem_scores``: the HLEM-VMP host-evaluation pipeline (Eqs. 3-11) over a
+  fixed-size padded host batch.  The rust allocation hot path calls the
+  compiled artifact once per placement decision (or per scheduling interval,
+  scores are VM-independent - see DESIGN.md S4).
+- ``cloudlet_step``: batched cloudlet progress update over a fixed-size
+  padded cloudlet batch, called once per scheduling-interval tick.
+
+Production artifact shapes (padded by rust, masked in-graph):
+
+- ``MAX_HOSTS = 128``, ``DIMS = 4`` (CPU, RAM, BW, storage) - one VMEM tile.
+- ``MAX_CLOUDLETS = 4096`` - four 1024-lane pallas blocks.
+
+This module is imported only at build time by ``aot.py`` and by pytest;
+python is never on the simulation request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import cloudlet_step_pallas, hlem_scores_pallas
+
+# Artifact shapes - the contract with rust/src/runtime (see DESIGN.md S5).
+MAX_HOSTS = 128
+DIMS = 4
+MAX_CLOUDLETS = 4096
+
+
+def hlem_scores(caps, free, spot_used, mask, alpha):
+    """HLEM-VMP host scores; thin L2 wrapper over the fused L1 kernel.
+
+    Args:
+      caps:      f32[MAX_HOSTS, DIMS] total capacities (padded rows zero).
+      free:      f32[MAX_HOSTS, DIMS] available capacities C_i^d(t).
+      spot_used: f32[MAX_HOSTS, DIMS] capacity held by spot instances.
+      mask:      f32[MAX_HOSTS] 1.0 = candidate host, 0.0 = padded/filtered.
+      alpha:     f32[] signed spot-load factor (0.0 -> AHS == HS).
+
+    Returns:
+      (hs f32[MAX_HOSTS], ahs f32[MAX_HOSTS]); masked hosts score -1e30.
+    """
+    return hlem_scores_pallas(caps, free, spot_used, mask, alpha)
+
+
+def cloudlet_step(remaining, mips, dt):
+    """Batched cloudlet progress update; see ``kernels.progress``.
+
+    Args:
+      remaining: f32[MAX_CLOUDLETS] outstanding MI (0 = finished/padded).
+      mips:      f32[MAX_CLOUDLETS] allocated MIPS per slot.
+      dt:        f32[] elapsed simulated seconds.
+
+    Returns:
+      (remaining' f32[MAX_CLOUDLETS], finished f32[MAX_CLOUDLETS]).
+    """
+    return cloudlet_step_pallas(remaining, mips, dt)
+
+
+def hlem_example_args():
+    """ShapeDtypeStructs for lowering ``hlem_scores`` at the artifact shape."""
+    mat = jax.ShapeDtypeStruct((MAX_HOSTS, DIMS), jnp.float32)
+    vec = jax.ShapeDtypeStruct((MAX_HOSTS,), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    return (mat, mat, mat, vec, scalar)
+
+
+def cloudlet_example_args():
+    """ShapeDtypeStructs for lowering ``cloudlet_step`` at the artifact shape."""
+    vec = jax.ShapeDtypeStruct((MAX_CLOUDLETS,), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    return (vec, vec, scalar)

@@ -1,0 +1,90 @@
+"""AOT lowering sanity: the L2 entry points lower to loadable HLO text.
+
+These tests exercise the exact code path ``make artifacts`` runs, without
+writing into ``artifacts/`` (tmp dirs).  They guard the interchange contract
+with the rust runtime (DESIGN.md S5): parameter count/order, tuple return,
+and manifest freshness behaviour.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+def test_hlem_lowering_produces_hlo_text():
+    lowered = jax.jit(model.hlem_scores).lower(*model.hlem_example_args())
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    # Entry layout declares 5 parameters in order; f32 at artifact shapes.
+    layout = text.split("entry_computation_layout={(", 1)[1].split(")->")[0]
+    assert layout.count("f32[") == 5
+    assert f"f32[{model.MAX_HOSTS},{model.DIMS}]" in layout
+    assert f"f32[{model.MAX_HOSTS}]" in layout
+
+
+def test_cloudlet_lowering_produces_hlo_text():
+    lowered = jax.jit(model.cloudlet_step).lower(*model.cloudlet_example_args())
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    layout = text.split("entry_computation_layout={(", 1)[1].split(")->")[0]
+    assert layout.count("f32[") == 3
+    assert f"f32[{model.MAX_CLOUDLETS}]" in layout
+
+
+def test_lowered_hlem_executes_and_matches_eager():
+    """The lowered module computes the same numbers the eager path does."""
+    rng = np.random.default_rng(0)
+    caps = rng.uniform(1, 100, size=(model.MAX_HOSTS, model.DIMS)).astype(np.float32)
+    free = (caps * rng.uniform(0, 1, size=caps.shape)).astype(np.float32)
+    spot = (free * 0.3).astype(np.float32)
+    mask = np.zeros(model.MAX_HOSTS, np.float32)
+    mask[:100] = 1.0
+    alpha = np.float32(-0.5)
+
+    compiled = jax.jit(model.hlem_scores).lower(caps, free, spot, mask, alpha).compile()
+    hs_c, ahs_c = compiled(caps, free, spot, mask, alpha)
+    hs_e, ahs_e = model.hlem_scores(caps, free, spot, mask, alpha)
+    np.testing.assert_allclose(np.asarray(hs_c), np.asarray(hs_e), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(ahs_c), np.asarray(ahs_e), rtol=1e-6)
+
+
+def test_manifest_shapes_match_model():
+    m = aot.build_manifest("dummy")
+    eps = m["entry_points"]
+    assert eps["hlem_score"]["max_hosts"] == model.MAX_HOSTS
+    assert eps["hlem_score"]["dims"] == model.DIMS
+    assert eps["cloudlet_step"]["max_cloudlets"] == model.MAX_CLOUDLETS
+
+
+@pytest.mark.slow
+def test_aot_main_is_idempotent(tmp_path):
+    """Second invocation with unchanged sources is a no-op (make contract)."""
+    env = dict(os.environ)
+    pydir = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = tmp_path / "artifacts"
+
+    def run():
+        return subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", str(out)],
+            cwd=pydir, env=env, capture_output=True, text=True, timeout=600,
+        )
+
+    r1 = run()
+    assert r1.returncode == 0, r1.stderr
+    manifest1 = json.loads((out / "MANIFEST.json").read_text())
+    mtime1 = (out / "hlem_score.hlo.txt").stat().st_mtime_ns
+
+    r2 = run()
+    assert r2.returncode == 0, r2.stderr
+    assert "fresh" in r2.stdout
+    assert (out / "hlem_score.hlo.txt").stat().st_mtime_ns == mtime1
+    assert json.loads((out / "MANIFEST.json").read_text()) == manifest1

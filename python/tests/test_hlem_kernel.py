@@ -1,0 +1,142 @@
+"""Kernel-vs-oracle correctness for the fused HLEM-VMP pallas kernel.
+
+This is the CORE L1 correctness signal: ``hlem_scores_pallas`` (what the AOT
+artifact is built from) must match ``hlem_scores_ref`` (pure jnp, a direct
+transcription of Eqs. 3-11) across shapes, masks and degenerate inputs.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hlem_scores_pallas
+from compile.kernels.ref import NEG, entropy_weights_ref, hlem_scores_ref
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def _rand_inputs(rng, h, d, mask_p=0.8, equal_dim=None, zero_dim=None):
+    caps = rng.uniform(1.0, 100.0, size=(h, d)).astype(np.float32)
+    free = (caps * rng.uniform(0.0, 1.0, size=(h, d))).astype(np.float32)
+    spot = (free * rng.uniform(0.0, 1.0, size=(h, d))).astype(np.float32)
+    mask = (rng.uniform(size=h) < mask_p).astype(np.float32)
+    if mask.sum() == 0:
+        mask[0] = 1.0
+    if equal_dim is not None:
+        free[:, equal_dim] = 7.5  # max == min degenerate case
+    if zero_dim is not None:
+        free[:, zero_dim] = 0.0  # zero column-sum degenerate case
+    alpha = np.float32(rng.uniform(-1.0, 1.0))
+    return caps, free, spot, mask, alpha
+
+
+def _check(caps, free, spot, mask, alpha):
+    hs_k, ahs_k = hlem_scores_pallas(caps, free, spot, mask, alpha)
+    hs_r, ahs_r = hlem_scores_ref(caps, free, spot, mask, alpha)
+    np.testing.assert_allclose(np.asarray(hs_k), np.asarray(hs_r), rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(np.asarray(ahs_k), np.asarray(ahs_r), rtol=RTOL, atol=ATOL)
+    return np.asarray(hs_k), np.asarray(ahs_k)
+
+
+@pytest.mark.parametrize("h", [2, 3, 8, 17, 64, 128])
+@pytest.mark.parametrize("d", [1, 2, 4, 6])
+def test_matches_ref_across_shapes(h, d):
+    rng = np.random.default_rng(h * 1000 + d)
+    _check(*_rand_inputs(rng, h, d))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_matches_ref_production_shape(seed):
+    rng = np.random.default_rng(seed)
+    _check(*_rand_inputs(rng, 128, 4))
+
+
+def test_degenerate_equal_dimension():
+    """max == min in one dimension -> normalized capacity 0.5 (contract)."""
+    rng = np.random.default_rng(42)
+    _check(*_rand_inputs(rng, 16, 4, equal_dim=2))
+
+
+def test_degenerate_zero_dimension():
+    """column sum 0 -> proportional share 1/n (contract)."""
+    rng = np.random.default_rng(43)
+    _check(*_rand_inputs(rng, 16, 4, zero_dim=1))
+
+
+def test_single_valid_host():
+    """n == 1 -> entropy path collapses to uniform weights without NaNs."""
+    rng = np.random.default_rng(44)
+    caps, free, spot, mask, alpha = _rand_inputs(rng, 8, 4)
+    mask[:] = 0.0
+    mask[3] = 1.0
+    hs, ahs = _check(caps, free, spot, mask, alpha)
+    assert np.isfinite(hs[3]) and np.isfinite(ahs[3])
+    assert (hs[np.arange(8) != 3] == NEG).all()
+
+
+def test_all_hosts_identical():
+    """Identical hosts -> identical (and finite) scores."""
+    caps = np.full((8, 4), 50.0, np.float32)
+    free = np.full((8, 4), 20.0, np.float32)
+    spot = np.full((8, 4), 5.0, np.float32)
+    mask = np.ones(8, np.float32)
+    hs, ahs = _check(caps, free, spot, mask, np.float32(-0.5))
+    assert np.allclose(hs, hs[0]) and np.allclose(ahs, ahs[0])
+    assert np.isfinite(hs).all()
+
+
+def test_alpha_zero_means_no_adjustment():
+    rng = np.random.default_rng(45)
+    caps, free, spot, mask, _ = _rand_inputs(rng, 32, 4)
+    hs, ahs = _check(caps, free, spot, mask, np.float32(0.0))
+    np.testing.assert_allclose(hs, ahs, rtol=RTOL, atol=ATOL)
+
+
+def test_negative_alpha_penalizes_spot_heavy_hosts():
+    """With alpha < 0 a host identical except for spot load scores lower."""
+    caps = np.full((2, 4), 100.0, np.float32)
+    free = np.full((2, 4), 40.0, np.float32)
+    spot = np.zeros((2, 4), np.float32)
+    spot[1, :] = 50.0  # host 1 carries heavy spot load
+    mask = np.ones(2, np.float32)
+    _, ahs = _check(caps, free, spot, mask, np.float32(-0.5))
+    assert ahs[1] < ahs[0]
+
+
+def test_masked_hosts_do_not_influence_scores():
+    """Garbage in masked rows must not perturb valid hosts' scores."""
+    rng = np.random.default_rng(46)
+    caps, free, spot, mask, alpha = _rand_inputs(rng, 16, 4, mask_p=1.0)
+    mask[10:] = 0.0
+    hs_a, ahs_a = hlem_scores_ref(caps, free, spot, mask, alpha)
+    caps2, free2, spot2 = caps.copy(), free.copy(), spot.copy()
+    caps2[10:], free2[10:], spot2[10:] = 9e9, 9e9, 9e9
+    hs_b, ahs_b = hlem_scores_pallas(caps2, free2, spot2, mask, alpha)
+    np.testing.assert_allclose(np.asarray(hs_b)[:10], np.asarray(hs_a)[:10], rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(np.asarray(ahs_b)[:10], np.asarray(ahs_a)[:10], rtol=RTOL, atol=ATOL)
+
+
+def test_entropy_weights_sum_to_one():
+    rng = np.random.default_rng(47)
+    for _ in range(5):
+        caps, free, _, mask, _ = _rand_inputs(rng, 24, 4)
+        w = np.asarray(entropy_weights_ref(free, mask))
+        assert abs(w.sum() - 1.0) < 1e-5
+        assert (w >= -1e-6).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    h=st.integers(min_value=2, max_value=48),
+    d=st.integers(min_value=1, max_value=5),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    alpha=st.floats(min_value=-2.0, max_value=2.0, width=32),
+)
+def test_hypothesis_sweep(h, d, seed, alpha):
+    """Hypothesis sweep: kernel == oracle over random shapes/masks/alphas."""
+    rng = np.random.default_rng(seed)
+    caps, free, spot, mask, _ = _rand_inputs(rng, h, d)
+    _check(caps, free, spot, mask, np.float32(alpha))

@@ -1,0 +1,90 @@
+"""Kernel-vs-oracle correctness for the batched cloudlet-progress kernel."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cloudlet_step_pallas
+from compile.kernels.progress import BLOCK
+from compile.kernels.ref import cloudlet_step_ref
+
+
+def _check(remaining, mips, dt):
+    rem_k, fin_k = cloudlet_step_pallas(remaining, mips, dt)
+    rem_r, fin_r = cloudlet_step_ref(remaining, mips, dt)
+    rem_k, fin_k = np.asarray(rem_k), np.asarray(fin_k)
+    rem_r, fin_r = np.asarray(rem_r), np.asarray(fin_r)
+    # FMA-vs-separate rounding differs between the interpret-mode kernel and
+    # the jnp reference; for `rem - mips*dt` the error scales with the
+    # *operand* magnitude (cancellation), not the result, so atol is derived
+    # from the largest operand (float32 eps ~ 1.2e-7).
+    scale = float(max(np.max(np.abs(remaining), initial=1.0),
+                      np.max(np.abs(mips), initial=1.0) * float(dt), 1.0))
+    atol = 1e-6 * scale + 1e-6
+    np.testing.assert_allclose(rem_k, rem_r, rtol=1e-5, atol=atol)
+    # `finished` must agree except on slots that land within float noise of
+    # the completion boundary, where FMA rounding may legitimately flip it.
+    decided = rem_r > atol
+    np.testing.assert_array_equal(fin_k[decided], fin_r[decided])
+    return rem_k, fin_k
+
+
+@pytest.mark.parametrize("n", [1, 7, 1024, 1025, 4096, 5000])
+def test_matches_ref_across_lengths(n):
+    rng = np.random.default_rng(n)
+    remaining = rng.uniform(0.0, 1e6, size=n).astype(np.float32)
+    remaining[rng.uniform(size=n) < 0.2] = 0.0  # finished/padded slots
+    mips = rng.uniform(0.0, 5000.0, size=n).astype(np.float32)
+    _check(remaining, mips, np.float32(rng.uniform(0.1, 10.0)))
+
+
+def test_exact_completion_edge():
+    """A cloudlet whose remaining MI exactly equals mips*dt finishes."""
+    remaining = np.array([1000.0, 1000.0, 0.0], np.float32)
+    mips = np.array([100.0, 50.0, 100.0], np.float32)
+    rem, fin = _check(remaining, mips, np.float32(10.0))
+    assert rem[0] == 0.0 and fin[0] == 1.0  # exact hit
+    assert rem[1] == 500.0 and fin[1] == 0.0  # still running
+    assert rem[2] == 0.0 and fin[2] == 0.0  # already finished: no re-fire
+
+
+def test_zero_dt_is_identity():
+    rng = np.random.default_rng(7)
+    remaining = rng.uniform(0.0, 1e5, size=256).astype(np.float32)
+    mips = rng.uniform(0.0, 1e3, size=256).astype(np.float32)
+    rem, fin = _check(remaining, mips, np.float32(0.0))
+    np.testing.assert_array_equal(rem, remaining)
+    assert fin.sum() == 0.0
+
+
+def test_zero_mips_makes_no_progress():
+    """Hibernate semantics: deallocated VMs (0 MIPS) freeze their cloudlets."""
+    remaining = np.full(64, 5e4, np.float32)
+    mips = np.zeros(64, np.float32)
+    rem, fin = _check(remaining, mips, np.float32(100.0))
+    np.testing.assert_array_equal(rem, remaining)
+    assert fin.sum() == 0.0
+
+
+def test_block_boundary_independence():
+    """Slots at pallas block boundaries behave like interior slots."""
+    n = 3 * BLOCK
+    remaining = np.full(n, 1e4, np.float32)
+    mips = np.full(n, 100.0, np.float32)
+    rem, fin = _check(remaining, mips, np.float32(1.0))
+    assert np.unique(rem).size == 1 and np.unique(fin).size == 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=3000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    dt=st.floats(min_value=0.0, max_value=1e4, width=32),
+)
+def test_hypothesis_sweep(n, seed, dt):
+    rng = np.random.default_rng(seed)
+    remaining = rng.uniform(0.0, 1e6, size=n).astype(np.float32)
+    mips = rng.uniform(0.0, 1e4, size=n).astype(np.float32)
+    _check(remaining, mips, np.float32(dt))

@@ -1,0 +1,85 @@
+"""Property tests on the oracle itself (Eqs. 3-11 invariants).
+
+The oracle is the single source of truth for three implementations (pallas
+kernel, lowered artifact, pure-rust scorer), so its own mathematical
+invariants deserve direct coverage.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import NEG, entropy_weights_ref, hlem_scores_ref
+
+
+def _inputs(seed, h=16, d=4):
+    rng = np.random.default_rng(seed)
+    caps = rng.uniform(1, 100, size=(h, d)).astype(np.float32)
+    free = (caps * rng.uniform(0, 1, size=(h, d))).astype(np.float32)
+    spot = (free * rng.uniform(0, 1, size=(h, d))).astype(np.float32)
+    mask = np.ones(h, np.float32)
+    return caps, free, spot, mask
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), h=st.integers(2, 40), d=st.integers(1, 6))
+def test_weights_form_a_distribution(seed, h, d):
+    _, free, _, mask = _inputs(seed, h, d)
+    w = np.asarray(entropy_weights_ref(free, mask))
+    assert w.shape == (d,)
+    assert abs(w.sum() - 1.0) < 1e-5
+    assert (w >= -1e-6).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_scores_bounded_for_valid_hosts(seed):
+    """HS is a convex combination of values in [0,1] -> HS in [0,1]."""
+    caps, free, spot, mask = _inputs(seed)
+    hs, _ = hlem_scores_ref(caps, free, spot, mask, np.float32(0.0))
+    hs = np.asarray(hs)
+    assert ((hs >= -1e-5) & (hs <= 1.0 + 1e-5)).all()
+
+
+def test_more_free_capacity_scores_higher():
+    """A host dominating another in every dimension never scores lower."""
+    h, d = 8, 4
+    rng = np.random.default_rng(1)
+    caps = np.full((h, d), 100.0, np.float32)
+    free = rng.uniform(10, 50, size=(h, d)).astype(np.float32)
+    free[0] = free[1] + 20.0  # host 0 strictly dominates host 1
+    spot = np.zeros((h, d), np.float32)
+    mask = np.ones(h, np.float32)
+    hs, _ = hlem_scores_ref(caps, free, spot, mask, np.float32(0.0))
+    assert np.asarray(hs)[0] >= np.asarray(hs)[1]
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), alpha=st.floats(-2.0, 2.0, width=32))
+def test_ahs_sign_consistency(seed, alpha):
+    """alpha = 0 -> AHS == HS; masked hosts always NEG."""
+    caps, free, spot, mask = _inputs(seed)
+    mask[-3:] = 0.0
+    hs, ahs = hlem_scores_ref(caps, free, spot, mask, np.float32(alpha))
+    hs, ahs = np.asarray(hs), np.asarray(ahs)
+    assert (hs[-3:] == NEG).all() and (ahs[-3:] == NEG).all()
+    hs0, ahs0 = hlem_scores_ref(caps, free, spot, mask, np.float32(0.0))
+    np.testing.assert_allclose(np.asarray(hs0), np.asarray(ahs0))
+
+
+def test_zero_spot_usage_means_no_adjustment():
+    caps, free, _, mask = _inputs(5)
+    spot = np.zeros_like(free)
+    hs, ahs = hlem_scores_ref(caps, free, spot, mask, np.float32(-0.7))
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(ahs), rtol=1e-6)
+
+
+def test_scale_invariance_of_weights():
+    """Scaling one dimension's units (MB vs GB) must not change weights."""
+    _, free, _, mask = _inputs(9)
+    w1 = np.asarray(entropy_weights_ref(free, mask))
+    scaled = free.copy()
+    scaled[:, 2] *= 1024.0
+    w2 = np.asarray(entropy_weights_ref(scaled, mask))
+    np.testing.assert_allclose(w1, w2, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,49 @@
+//! Bench + regeneration of paper Fig. 12 and the §VII-D statistics
+//! (cluster-trace simulation with injected spot instances).
+//!
+//! Uses a reduced scale (50 machines x 0.25 day) so the bench iterates;
+//! the full-scale run is `examples/cluster_trace.rs`.
+
+use cloudmarket::benchkit::{banner, black_box, Bencher};
+use cloudmarket::experiments::trace_sim::{self, TraceSimConfig};
+use cloudmarket::trace::synth::SynthConfig;
+use cloudmarket::trace::workload::WorkloadConfig;
+
+fn bench_cfg() -> TraceSimConfig {
+    TraceSimConfig {
+        synth: SynthConfig {
+            machines: 50,
+            days: 0.25,
+            tasks_per_hour: 500.0,
+            ..Default::default()
+        },
+        workload: WorkloadConfig {
+            spot_instances: 300,
+            spot_durations: vec![1_800.0, 3_600.0],
+            max_trace_vms: 3_000,
+            ..Default::default()
+        },
+        profile: false,
+        sample_interval: 120.0,
+    }
+}
+
+fn main() {
+    banner("FIG 12 + SVII-D: cluster-trace simulation (bench scale)");
+    let cfg = bench_cfg();
+    let out = trace_sim::run(&cfg);
+    println!("{}", trace_sim::results_table(&out).render());
+    println!("{}", out.series.ascii_chart("spot_running", 90, 10));
+    let events = out.report.events_processed as f64;
+    println!(
+        "events/sec: {:.0}",
+        events / out.report.wall.as_secs_f64()
+    );
+
+    banner("timings (full run per iteration)");
+    let mut b = Bencher::heavy();
+    b.bench("trace sim 50 machines x 6h", Some(events), || {
+        black_box(trace_sim::run(&bench_cfg()));
+    });
+    b.write_json(std::path::Path::new("results/bench_fig12.json")).ok();
+}

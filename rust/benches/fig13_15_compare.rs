@@ -1,0 +1,36 @@
+//! Bench + regeneration of paper Tables II-III and Figs. 13-15
+//! (allocation-algorithm comparison).
+
+use cloudmarket::benchkit::{banner, black_box, Bencher};
+use cloudmarket::config::catalog;
+use cloudmarket::config::scenario::ComparisonConfig;
+use cloudmarket::experiments::compare;
+
+fn main() {
+    banner("TABLES II-III + FIGS 13-15: allocation-algorithm comparison");
+    println!("{}", catalog::host_table().render());
+    println!("{}", catalog::vm_table().render());
+
+    let cfg = ComparisonConfig::default();
+    let outcomes = compare::run_all(&cfg);
+    println!("{}", compare::fig14_table(&outcomes).render());
+    println!("{}", compare::fig15_table(&outcomes).render());
+    println!("{}", compare::shape_summary(&outcomes));
+
+    compare::fig13_csv(&outcomes)
+        .write_file(std::path::Path::new("results/fig13_active_instances.csv"))
+        .ok();
+
+    banner("multi-seed aggregate (5 seeds)");
+    let aggs = compare::run_multi(&cfg, 5);
+    println!("{}", compare::aggregate_table(&aggs).render());
+
+    banner("timings (one full policy run per iteration)");
+    let mut b = Bencher::heavy();
+    for (name, make) in compare::paper_policies() {
+        b.bench(&format!("scenario under {name}"), Some(2_007.0), || {
+            black_box(compare::run_policy(make, &cfg));
+        });
+    }
+    b.write_json(std::path::Path::new("results/bench_fig13_15.json")).ok();
+}

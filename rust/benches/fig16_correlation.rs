@@ -1,0 +1,44 @@
+//! Bench + regeneration of paper Fig. 16 (spot-advisor correlation).
+
+use cloudmarket::analysis::advisor::synth_dataset;
+use cloudmarket::analysis::{correlation_ratio, pearson, theils_u};
+use cloudmarket::benchkit::{banner, black_box, Bencher};
+use cloudmarket::experiments::advisor;
+
+fn main() {
+    banner("FIG 16: feature vs interruption-frequency association");
+    let ds = advisor::dataset(None, 7);
+    println!(
+        "dataset: {} rows ({} types x 3 regions x 2 OS)",
+        ds.rows.len(),
+        ds.type_names.len()
+    );
+    println!("{}", advisor::class_distribution_table(&ds).render());
+    println!("{}", advisor::fig16_table(&ds).render());
+
+    banner("timings");
+    let class: Vec<u32> = ds.rows.iter().map(|r| r.interruption_class).collect();
+    let types: Vec<u32> = ds.rows.iter().map(|r| r.instance_type).collect();
+    let vcpus: Vec<f64> = ds.rows.iter().map(|r| r.vcpus).collect();
+    let savings: Vec<f64> = ds.rows.iter().map(|r| r.savings_pct).collect();
+    let classf: Vec<f64> = class.iter().map(|&c| c as f64).collect();
+
+    let mut b = Bencher::new();
+    let n = ds.rows.len() as f64;
+    b.bench("synthesize dataset", Some(n), || {
+        black_box(synth_dataset(7));
+    });
+    b.bench("theils_u(type, class)", Some(n), || {
+        black_box(theils_u(&types, &class));
+    });
+    b.bench("correlation_ratio(class, vcpus)", Some(n), || {
+        black_box(correlation_ratio(&class, &vcpus));
+    });
+    b.bench("pearson(savings, class)", Some(n), || {
+        black_box(pearson(&savings, &classf));
+    });
+    b.bench("full fig16 association table", Some(n), || {
+        black_box(ds.fig16_associations());
+    });
+    b.write_json(std::path::Path::new("results/bench_fig16.json")).ok();
+}

@@ -1,0 +1,41 @@
+//! Bench + regeneration of paper Figs. 7-9 (trace concurrency analysis).
+//!
+//! Prints the figure series (the deliverable) and times generation +
+//! analysis at month scale.
+
+use cloudmarket::benchkit::{banner, black_box, Bencher};
+use cloudmarket::experiments::trace_analysis;
+use cloudmarket::trace::analysis::{
+    fig7_daily_task_concurrency, fig8_daily_cloudlet_concurrency, fig9_hour_of_day_peaks,
+};
+
+fn main() {
+    banner("FIGS 7-9: trace concurrency analysis (30-day synthetic Borg trace)");
+    let trace = trace_analysis::month_trace(42, 200);
+    println!(
+        "trace: {} machines, {} task submissions, horizon {:.0} days",
+        trace.machine_count(),
+        trace.task_count(),
+        trace.horizon / 86_400.0
+    );
+
+    println!("{}", trace_analysis::fig7_table(&trace).render());
+    println!("{}", trace_analysis::fig8_table(&trace).render());
+    println!("{}", trace_analysis::fig9_table(&trace).render());
+
+    banner("timings");
+    let mut b = Bencher::heavy();
+    b.bench("generate 30d trace (200 machines)", Some(trace.tasks.len() as f64), || {
+        black_box(trace_analysis::month_trace(42, 200));
+    });
+    b.bench("fig7 daily task concurrency", Some(trace.tasks.len() as f64), || {
+        black_box(fig7_daily_task_concurrency(&trace));
+    });
+    b.bench("fig8 daily cloudlet concurrency", Some(trace.tasks.len() as f64), || {
+        black_box(fig8_daily_cloudlet_concurrency(&trace));
+    });
+    b.bench("fig9 hour-of-day peaks", Some(trace.tasks.len() as f64), || {
+        black_box(fig9_hour_of_day_peaks(&trace));
+    });
+    b.write_json(std::path::Path::new("results/bench_fig7_9.json")).ok();
+}

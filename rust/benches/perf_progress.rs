@@ -1,0 +1,54 @@
+//! §Perf L3/L1: cloudlet-progress backends - the paper's measured
+//! bottleneck ("performance was constrained by cloudlet execution
+//! updates", §VII-D.1) ablated three ways:
+//!
+//! - naive: per-object scalar walk (the CloudSim-style baseline),
+//! - batched: SIMD-friendly parallel-array loop (production default),
+//! - pjrt: the AOT pallas kernel through the PJRT CPU client.
+
+use std::rc::Rc;
+
+use cloudmarket::benchkit::{banner, black_box, Bencher};
+use cloudmarket::engine::progress::{BatchedBackend, NaiveBackend, ProgressBackend};
+use cloudmarket::runtime::{artifacts, PjrtBackend, PjrtEngine, PjrtStep};
+use cloudmarket::stats::Rng;
+
+fn workload(rng: &mut Rng, n: usize) -> (Vec<f64>, Vec<f64>) {
+    let rem: Vec<f64> = (0..n)
+        .map(|_| if rng.chance(0.1) { 0.0 } else { rng.uniform(1e3, 1e7) })
+        .collect();
+    let mips: Vec<f64> = (0..n).map(|_| rng.uniform(100.0, 4e3)).collect();
+    (rem, mips)
+}
+
+fn bench_backend(b: &mut Bencher, name: &str, backend: &mut dyn ProgressBackend, n: usize) {
+    let mut rng = Rng::new(7);
+    let (rem0, mips) = workload(&mut rng, n);
+    let mut rem = rem0.clone();
+    let mut fin = Vec::new();
+    b.bench(&format!("{name} N={n}"), Some(n as f64), || {
+        rem.copy_from_slice(&rem0);
+        fin.clear();
+        backend.step(&mut rem, &mips, 1.0, &mut fin);
+        black_box(&fin);
+    });
+}
+
+fn main() {
+    banner("PERF: cloudlet progress backends (the paper's bottleneck)");
+    let mut b = Bencher::new();
+    for &n in &[1_024usize, 16_384, 262_144] {
+        bench_backend(&mut b, "naive", &mut NaiveBackend, n);
+        bench_backend(&mut b, "batched", &mut BatchedBackend, n);
+    }
+    if artifacts::artifacts_available() {
+        let engine = Rc::new(PjrtEngine::load_default().expect("loading artifacts"));
+        let mut pjrt = PjrtBackend(PjrtStep::new(engine));
+        for &n in &[1_024usize, 16_384, 262_144] {
+            bench_backend(&mut b, "pjrt", &mut pjrt, n);
+        }
+    } else {
+        println!("(artifacts not built - run `make artifacts` for the PJRT side)");
+    }
+    b.write_json(std::path::Path::new("results/bench_progress.json")).ok();
+}

@@ -1,0 +1,75 @@
+//! §Perf L3/RT: HLEM host-scoring latency - pure-rust scorer vs the
+//! PJRT-executed AOT artifact, across host-batch sizes.
+//!
+//! Expected shape: rust wins at small H (no FFI/launch overhead), the
+//! artifact amortizes at the full 128-host batch; the crossover is
+//! recorded in EXPERIMENTS.md §Perf.
+
+use std::rc::Rc;
+
+use cloudmarket::allocation::scorer::{HostScorer, RustScorer, ScoreInput};
+use cloudmarket::benchkit::{banner, black_box, Bencher};
+use cloudmarket::runtime::{artifacts, PjrtEngine, PjrtScorer};
+use cloudmarket::stats::Rng;
+
+fn random_input(
+    rng: &mut Rng,
+    n: usize,
+) -> (Vec<[f64; 4]>, Vec<[f64; 4]>, Vec<[f64; 4]>, Vec<bool>) {
+    let mut caps = Vec::new();
+    let mut free = Vec::new();
+    let mut spot = Vec::new();
+    let mut mask = Vec::new();
+    for _ in 0..n {
+        let mut c = [0.0; 4];
+        let mut f = [0.0; 4];
+        let mut s = [0.0; 4];
+        for d in 0..4 {
+            c[d] = rng.uniform(1.0, 1e5);
+            f[d] = c[d] * rng.next_f64();
+            s[d] = f[d] * rng.next_f64();
+        }
+        caps.push(c);
+        free.push(f);
+        spot.push(s);
+        mask.push(true);
+    }
+    (caps, free, spot, mask)
+}
+
+fn main() {
+    banner("PERF: HLEM scorer backends (rust vs PJRT artifact)");
+    let mut rng = Rng::new(1);
+    let mut b = Bencher::new();
+
+    let mut rust = RustScorer::new();
+    for &n in &[8usize, 32, 100, 128] {
+        let (caps, free, spot, mask) = random_input(&mut rng, n);
+        let input =
+            ScoreInput { caps: &caps, free: &free, spot_used: &spot, mask: &mask, alpha: -0.5 };
+        b.bench(&format!("rust scorer H={n}"), Some(n as f64), || {
+            black_box(rust.scores(&input));
+        });
+    }
+
+    if artifacts::artifacts_available() {
+        let engine = Rc::new(PjrtEngine::load_default().expect("loading artifacts"));
+        let mut pjrt = PjrtScorer::new(engine);
+        for &n in &[8usize, 32, 100, 128] {
+            let (caps, free, spot, mask) = random_input(&mut rng, n);
+            let input = ScoreInput {
+                caps: &caps,
+                free: &free,
+                spot_used: &spot,
+                mask: &mask,
+                alpha: -0.5,
+            };
+            b.bench(&format!("pjrt scorer H={n} (padded to 128)"), Some(n as f64), || {
+                black_box(pjrt.scores(&input));
+            });
+        }
+    } else {
+        println!("(artifacts not built - run `make artifacts` for the PJRT side)");
+    }
+    b.write_json(std::path::Path::new("results/bench_scorer.json")).ok();
+}

@@ -1,0 +1,322 @@
+//! Baseline heuristics (paper §II-D: First Fit, Next Fit, Best Fit, Worst
+//! Fit; First-Fit is the CloudSim Plus policy the evaluation compares
+//! against, §VII-E).
+//!
+//! All baselines share [`preempt::select_victims`] for the spot-preemption
+//! path, scanning hosts in their own characteristic order.
+
+use super::policy::AllocationPolicy;
+use super::preempt;
+use crate::engine::config::VictimPolicy;
+use crate::engine::world::World;
+use crate::infra::{Host, HostId};
+use crate::vm::{Vm, VmId};
+
+fn fits(host: &Host, vm: &Vm) -> bool {
+    host.fits(vm.spec.pes, vm.spec.ram, vm.spec.bw, vm.spec.storage)
+}
+
+/// Generic preemption scan: first host (in id order) where clearing
+/// interruptible spots makes room.
+fn scan_preemption(
+    world: &World,
+    vm: VmId,
+    now: f64,
+    victim_policy: VictimPolicy,
+) -> Option<(HostId, Vec<VmId>)> {
+    // Never preempt spots to place another spot (paper §V-C: spot VMs are
+    // interrupted when *on-demand* requests cannot be fulfilled).
+    if world.vms[vm].is_spot() {
+        return None;
+    }
+    for host in world.active_hosts() {
+        if let Some(victims) = preempt::select_victims(world, host, vm, now, victim_policy) {
+            return Some((host.id, victims));
+        }
+    }
+    None
+}
+
+/// First-Fit: first active host (id order) with room.
+pub struct FirstFit {
+    victim_policy: VictimPolicy,
+    decisions: u64,
+}
+
+impl FirstFit {
+    pub fn new() -> Self {
+        FirstFit { victim_policy: VictimPolicy::ListOrder, decisions: 0 }
+    }
+
+    pub fn with_victim_policy(mut self, p: VictimPolicy) -> Self {
+        self.victim_policy = p;
+        self
+    }
+}
+
+impl Default for FirstFit {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AllocationPolicy for FirstFit {
+    fn name(&self) -> &'static str {
+        "first-fit"
+    }
+
+    fn select_host(&mut self, world: &World, vm: VmId, _now: f64) -> Option<HostId> {
+        self.decisions += 1;
+        let v = &world.vms[vm];
+        world.active_hosts().find(|h| fits(h, v)).map(|h| h.id)
+    }
+
+    fn select_preemption(
+        &mut self,
+        world: &World,
+        vm: VmId,
+        now: f64,
+    ) -> Option<(HostId, Vec<VmId>)> {
+        scan_preemption(world, vm, now, self.victim_policy)
+    }
+
+    fn decisions(&self) -> u64 {
+        self.decisions
+    }
+}
+
+/// Best-Fit: feasible host with the *fewest* free PEs (tightest pack).
+pub struct BestFit {
+    victim_policy: VictimPolicy,
+    decisions: u64,
+}
+
+impl BestFit {
+    pub fn new() -> Self {
+        BestFit { victim_policy: VictimPolicy::ListOrder, decisions: 0 }
+    }
+}
+
+impl Default for BestFit {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AllocationPolicy for BestFit {
+    fn name(&self) -> &'static str {
+        "best-fit"
+    }
+
+    fn select_host(&mut self, world: &World, vm: VmId, _now: f64) -> Option<HostId> {
+        self.decisions += 1;
+        let v = &world.vms[vm];
+        world
+            .active_hosts()
+            .filter(|h| fits(h, v))
+            .min_by_key(|h| h.free_pes())
+            .map(|h| h.id)
+    }
+
+    fn select_preemption(
+        &mut self,
+        world: &World,
+        vm: VmId,
+        now: f64,
+    ) -> Option<(HostId, Vec<VmId>)> {
+        scan_preemption(world, vm, now, self.victim_policy)
+    }
+
+    fn decisions(&self) -> u64 {
+        self.decisions
+    }
+}
+
+/// Worst-Fit: feasible host with the *most* free PEs (load spreading).
+pub struct WorstFit {
+    victim_policy: VictimPolicy,
+    decisions: u64,
+}
+
+impl WorstFit {
+    pub fn new() -> Self {
+        WorstFit { victim_policy: VictimPolicy::ListOrder, decisions: 0 }
+    }
+}
+
+impl Default for WorstFit {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AllocationPolicy for WorstFit {
+    fn name(&self) -> &'static str {
+        "worst-fit"
+    }
+
+    fn select_host(&mut self, world: &World, vm: VmId, _now: f64) -> Option<HostId> {
+        self.decisions += 1;
+        let v = &world.vms[vm];
+        world
+            .active_hosts()
+            .filter(|h| fits(h, v))
+            .max_by_key(|h| h.free_pes())
+            .map(|h| h.id)
+    }
+
+    fn select_preemption(
+        &mut self,
+        world: &World,
+        vm: VmId,
+        now: f64,
+    ) -> Option<(HostId, Vec<VmId>)> {
+        scan_preemption(world, vm, now, self.victim_policy)
+    }
+
+    fn decisions(&self) -> u64 {
+        self.decisions
+    }
+}
+
+/// Round-Robin: rotate a cursor over hosts, take the first feasible one.
+pub struct RoundRobin {
+    cursor: usize,
+    victim_policy: VictimPolicy,
+    decisions: u64,
+}
+
+impl RoundRobin {
+    pub fn new() -> Self {
+        RoundRobin { cursor: 0, victim_policy: VictimPolicy::ListOrder, decisions: 0 }
+    }
+}
+
+impl Default for RoundRobin {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AllocationPolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn select_host(&mut self, world: &World, vm: VmId, _now: f64) -> Option<HostId> {
+        self.decisions += 1;
+        let n = world.hosts.len();
+        if n == 0 {
+            return None;
+        }
+        let v = &world.vms[vm];
+        for off in 0..n {
+            let idx = (self.cursor + off) % n;
+            let h = &world.hosts[idx];
+            if fits(h, v) {
+                self.cursor = (idx + 1) % n;
+                return Some(h.id);
+            }
+        }
+        None
+    }
+
+    fn select_preemption(
+        &mut self,
+        world: &World,
+        vm: VmId,
+        now: f64,
+    ) -> Option<(HostId, Vec<VmId>)> {
+        scan_preemption(world, vm, now, self.victim_policy)
+    }
+
+    fn decisions(&self) -> u64 {
+        self.decisions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infra::HostSpec;
+    use crate::vm::{SpotConfig, VmSpec, VmState};
+
+    /// Three hosts with 2/4/8 free PEs; returns (world, incoming vm id).
+    fn setup() -> (World, VmId) {
+        let mut w = World::new();
+        let dc = w.add_datacenter("dc", 1.0);
+        for pes in [2u32, 4, 8] {
+            w.add_host(dc, HostSpec::new(pes, 1000.0, 65_536.0, 40_000.0, 1_600_000.0), 0.0);
+        }
+        let vm = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, 2)));
+        (w, vm)
+    }
+
+    #[test]
+    fn first_fit_takes_lowest_id() {
+        let (w, vm) = setup();
+        assert_eq!(FirstFit::new().select_host(&w, vm, 0.0), Some(0));
+    }
+
+    #[test]
+    fn best_fit_takes_tightest() {
+        let (w, vm) = setup();
+        assert_eq!(BestFit::new().select_host(&w, vm, 0.0), Some(0)); // 2 free PEs
+    }
+
+    #[test]
+    fn worst_fit_takes_emptiest() {
+        let (w, vm) = setup();
+        assert_eq!(WorstFit::new().select_host(&w, vm, 0.0), Some(2)); // 8 free PEs
+    }
+
+    #[test]
+    fn round_robin_rotates() {
+        let (mut w, vm) = setup();
+        let mut rr = RoundRobin::new();
+        assert_eq!(rr.select_host(&w, vm, 0.0), Some(0));
+        // Simulate the placement so host 0 fills up.
+        let spec = w.vms[vm].spec;
+        w.hosts[0].commit(vm, spec.pes, spec.ram, spec.bw, spec.storage);
+        let vm2 = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, 2)));
+        assert_eq!(rr.select_host(&w, vm2, 0.0), Some(1));
+    }
+
+    #[test]
+    fn skips_infeasible_hosts() {
+        let (w, _) = setup();
+        let mut w = w;
+        let big = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, 6)));
+        assert_eq!(FirstFit::new().select_host(&w, big, 0.0), Some(2));
+        let huge = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, 16)));
+        assert_eq!(FirstFit::new().select_host(&w, huge, 0.0), None);
+    }
+
+    #[test]
+    fn preemption_only_for_on_demand() {
+        let (mut w, _) = setup();
+        // Fill host 0 with an interruptible spot.
+        let cfg = SpotConfig::terminate().with_min_running(0.0);
+        let sp = w.add_vm(Vm::spot(0, VmSpec::new(1000.0, 2), cfg));
+        let spec = w.vms[sp].spec;
+        w.hosts[0].commit(sp, spec.pes, spec.ram, spec.bw, spec.storage);
+        w.vms[sp].transition(VmState::Running);
+        w.vms[sp].history.record_start(0, 0.0);
+        // Fill hosts 1 and 2 completely with on-demand.
+        for h in [1usize, 2] {
+            let pes = w.hosts[h].spec.pes;
+            let od = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, pes)));
+            let spec = w.vms[od].spec;
+            w.hosts[h].commit(od, spec.pes, spec.ram, spec.bw, spec.storage);
+            w.vms[od].transition(VmState::Running);
+        }
+        let od_new = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, 2)));
+        let spot_new = w.add_vm(Vm::spot(0, VmSpec::new(1000.0, 2), cfg));
+        let mut ff = FirstFit::new();
+        // On-demand may preempt the spot on host 0.
+        let (h, victims) = ff.select_preemption(&w, od_new, 10.0).unwrap();
+        assert_eq!((h, victims), (0, vec![sp]));
+        // A spot VM must never preempt.
+        assert!(ff.select_preemption(&w, spot_new, 10.0).is_none());
+    }
+}

@@ -1,0 +1,23 @@
+//! VM allocation policies (paper §II-D, §V-E(b), §VI).
+//!
+//! - [`policy::AllocationPolicy`]: the `VmAllocationPolicyAbstract` role,
+//!   extended with spot preemption (`DynamicAllocation`, §V-E(b)).
+//! - [`heuristics`]: First-Fit / Best-Fit / Worst-Fit / Round-Robin
+//!   baselines (First-Fit is the paper's comparison baseline, §VII-E).
+//! - [`hlem`]: HLEM-VMP (Eqs. 1-9) and its spot-load-adjusted variant
+//!   (Eqs. 10-11) - the paper's §VI contribution.
+//! - [`scorer`]: the host-scoring backends (pure-rust oracle and the
+//!   PJRT-executed AOT artifact built from the L1 pallas kernel).
+//! - [`preempt`]: shared spot-victim selection (the `spotAllocation` /
+//!   `terminationBehavior` logic of `DynamicAllocation`).
+
+pub mod heuristics;
+pub mod hlem;
+pub mod policy;
+pub mod preempt;
+pub mod scorer;
+
+pub use heuristics::{BestFit, FirstFit, RoundRobin, WorstFit};
+pub use hlem::{HlemConfig, HlemVmp};
+pub use policy::AllocationPolicy;
+pub use scorer::{HostScorer, RustScorer, ScoreInput};

@@ -1,0 +1,41 @@
+//! The allocation-policy trait: host selection for plain placement and for
+//! placement-with-spot-preemption (the paper's `DynamicAllocation`
+//! extension of `VmAllocationPolicyAbstract`).
+
+use crate::engine::world::World;
+use crate::infra::HostId;
+use crate::vm::VmId;
+
+/// A VM placement strategy.
+///
+/// Policies receive an immutable world view and must not assume they are
+/// called in any particular order; the engine owns all mutation. `&mut
+/// self` allows stateful policies (Round-Robin cursor, scorer scratch
+/// buffers, decision counters).
+pub trait AllocationPolicy {
+    /// Human-readable name used in reports and benches.
+    fn name(&self) -> &'static str;
+
+    /// Choose a host with free capacity for `vm`, or `None`.
+    fn select_host(&mut self, world: &World, vm: VmId, now: f64) -> Option<HostId>;
+
+    /// Choose a host where interrupting the returned spot VMs would make
+    /// room for `vm` (paper §V-C: "the system attempts to free up
+    /// resources by interrupting spot instances; the selection of which
+    /// host to target ... depends on the active VM allocation policy").
+    ///
+    /// Only consulted for on-demand VMs after `select_host` failed.
+    /// Returns `(host, victims)`; victims must all be interruptible at
+    /// `now` and jointly sufficient.
+    fn select_preemption(
+        &mut self,
+        world: &World,
+        vm: VmId,
+        now: f64,
+    ) -> Option<(HostId, Vec<VmId>)>;
+
+    /// Number of placement decisions taken (for perf accounting).
+    fn decisions(&self) -> u64 {
+        0
+    }
+}

@@ -1,0 +1,130 @@
+//! Shared spot-victim selection: given a candidate host, pick which spot
+//! VMs to interrupt so that `vm` fits (the `spotAllocation` /
+//! `terminationBehavior` logic of the paper's `DynamicAllocation` class).
+
+use crate::engine::config::VictimPolicy;
+use crate::engine::world::World;
+use crate::infra::Host;
+use crate::vm::VmId;
+
+/// Order the interruptible spot VMs of `host` according to `policy`.
+///
+/// [`VictimPolicy::ListOrder`] is the paper's behavior (host VM-list =
+/// allocation order, §IX); the others are the future-work ablations.
+pub fn victim_order(world: &World, host: &Host, now: f64, policy: VictimPolicy) -> Vec<VmId> {
+    let mut victims = world.interruptible_spots(host, now);
+    match policy {
+        VictimPolicy::ListOrder => {}
+        VictimPolicy::Youngest => {
+            // Most recently started first (least sunk work destroyed).
+            victims.sort_by(|&a, &b| {
+                let sa = world.vms[a].history.intervals().last().map(|iv| iv.start).unwrap_or(0.0);
+                let sb = world.vms[b].history.intervals().last().map(|iv| iv.start).unwrap_or(0.0);
+                sb.partial_cmp(&sa).unwrap()
+            });
+        }
+        VictimPolicy::SmallestFirst => {
+            victims.sort_by(|&a, &b| {
+                let ma = world.vms[a].spec.total_mips();
+                let mb = world.vms[b].spec.total_mips();
+                ma.partial_cmp(&mb).unwrap()
+            });
+        }
+    }
+    victims
+}
+
+/// Minimal prefix of `victim_order` whose removal makes `vm` fit on
+/// `host`; `None` if even clearing all interruptible spots is not enough.
+pub fn select_victims(
+    world: &World,
+    host: &Host,
+    vm: VmId,
+    now: f64,
+    policy: VictimPolicy,
+) -> Option<Vec<VmId>> {
+    let vm_ref = &world.vms[vm];
+    let ordered = victim_order(world, host, now, policy);
+    if ordered.is_empty() {
+        return None;
+    }
+    let mut chosen: Vec<VmId> = Vec::new();
+    for v in ordered {
+        chosen.push(v);
+        if world.fits_with_clearing(host, vm_ref, &chosen) {
+            return Some(chosen);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infra::HostSpec;
+    use crate::vm::{SpotConfig, Vm, VmSpec, VmState};
+
+    /// World with one 8-PE host carrying `n` running 2-PE spot VMs started
+    /// at increasing times.
+    fn setup(n: usize) -> (World, usize) {
+        let mut w = World::new();
+        let dc = w.add_datacenter("dc", 1.0);
+        let h = w.add_host(dc, HostSpec::new(8, 1000.0, 65_536.0, 40_000.0, 1_600_000.0), 0.0);
+        for i in 0..n {
+            let cfg = SpotConfig::terminate().with_min_running(0.0);
+            let id = w.add_vm(Vm::spot(0, VmSpec::new(1000.0, 2), cfg));
+            let spec = w.vms[id].spec;
+            w.hosts[h].commit(id, spec.pes, spec.ram, spec.bw, spec.storage);
+            w.vms[id].transition(VmState::Running);
+            w.vms[id].host = Some(h);
+            w.vms[id].history.record_start(h, i as f64 * 10.0);
+        }
+        (w, h)
+    }
+
+    #[test]
+    fn list_order_takes_allocation_order() {
+        let (w, h) = setup(3);
+        let order = victim_order(&w, &w.hosts[h], 100.0, VictimPolicy::ListOrder);
+        assert_eq!(order, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn youngest_reverses_start_order() {
+        let (w, h) = setup(3);
+        let order = victim_order(&w, &w.hosts[h], 100.0, VictimPolicy::Youngest);
+        assert_eq!(order, vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn selects_minimal_prefix() {
+        let (mut w, h) = setup(4); // 8 PEs all used by 4x2-PE spots
+        // the incoming on-demand VM needing 4 PEs
+        let vm = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, 4)));
+        let victims = select_victims(&w, &w.hosts[h], vm, 100.0, VictimPolicy::ListOrder).unwrap();
+        assert_eq!(victims, vec![0, 1]); // 2 spots x 2 PEs free exactly 4
+    }
+
+    #[test]
+    fn none_when_clearing_insufficient() {
+        let (mut w, h) = setup(2); // only 4 PEs clearable, 4 free
+        let vm = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, 9))); // > host total
+        assert!(select_victims(&w, &w.hosts[h], vm, 100.0, VictimPolicy::ListOrder).is_none());
+    }
+
+    #[test]
+    fn min_runtime_blocks_victims() {
+        let (mut w, h) = setup(0);
+        let cfg = SpotConfig::terminate().with_min_running(1_000.0);
+        let sp = w.add_vm(Vm::spot(0, VmSpec::new(1000.0, 8), cfg));
+        let spec = w.vms[sp].spec;
+        w.hosts[h].commit(sp, spec.pes, spec.ram, spec.bw, spec.storage);
+        w.vms[sp].transition(VmState::Running);
+        w.vms[sp].history.record_start(h, 0.0);
+        let vm = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, 4)));
+        // At t=10 the spot has not met its min running time yet.
+        assert!(select_victims(&w, &w.hosts[h], vm, 10.0, VictimPolicy::ListOrder).is_none());
+        // At t=2000 it has.
+        assert!(select_victims(&w, &w.hosts[h], vm, 2000.0, VictimPolicy::ListOrder).is_some());
+    }
+}

@@ -1,0 +1,326 @@
+//! Host-scoring backends for HLEM-VMP.
+//!
+//! [`RustScorer`] is a direct f64 transcription of the oracle in
+//! `python/compile/kernels/ref.py` (Eqs. 3-11, same masking / degenerate-
+//! case contract - see the module docs there and DESIGN.md §5). The
+//! PJRT-backed scorer in [`crate::runtime::PjrtScorer`] executes the AOT
+//! artifact built from the L1 pallas kernel; an integration test
+//! cross-checks the two to float32 tolerance.
+
+use crate::engine::world::World;
+use crate::infra::Host;
+
+/// Number of resource dimensions (CPU, RAM, BW, storage).
+pub const DIMS: usize = 4;
+
+/// Score assigned to masked (filtered-out) hosts.
+pub const NEG: f64 = -1.0e30;
+
+const EPS: f64 = 1.0e-12;
+
+/// Input to a scoring call: per-host capacity/free/spot-usage vectors plus
+/// the candidate mask and the spot-load factor alpha.
+pub struct ScoreInput<'a> {
+    pub caps: &'a [[f64; DIMS]],
+    pub free: &'a [[f64; DIMS]],
+    pub spot_used: &'a [[f64; DIMS]],
+    pub mask: &'a [bool],
+    pub alpha: f64,
+}
+
+impl<'a> ScoreInput<'a> {
+    pub fn len(&self) -> usize {
+        self.caps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.caps.is_empty()
+    }
+
+    pub fn validate(&self) {
+        assert_eq!(self.caps.len(), self.free.len());
+        assert_eq!(self.caps.len(), self.spot_used.len());
+        assert_eq!(self.caps.len(), self.mask.len());
+    }
+}
+
+/// A host-scoring backend: returns (HS, AHS) per host; masked hosts get
+/// [`NEG`].
+pub trait HostScorer {
+    fn name(&self) -> &'static str;
+    fn scores(&mut self, input: &ScoreInput) -> (Vec<f64>, Vec<f64>);
+}
+
+/// Pure-rust scorer - the production fallback and the semantics oracle on
+/// the rust side.
+#[derive(Debug, Default)]
+pub struct RustScorer;
+
+impl RustScorer {
+    pub fn new() -> Self {
+        RustScorer
+    }
+
+    /// Entropy-derived resource weights w_d (Eqs. 4-8).
+    pub fn entropy_weights(free: &[[f64; DIMS]], mask: &[bool]) -> [f64; DIMS] {
+        let n_valid = mask.iter().filter(|&&m| m).count() as f64;
+
+        // Eq. (4): proportional shares.
+        let mut col_sum = [0.0; DIMS];
+        for (row, &m) in free.iter().zip(mask) {
+            if m {
+                for d in 0..DIMS {
+                    col_sum[d] += row[d];
+                }
+            }
+        }
+        let uniform = if n_valid > 0.0 { 1.0 / n_valid } else { 0.0 };
+
+        // Eq. (5)-(6): entropy with k = 1/ln(n); k = 0 for n <= 1.
+        let k = if n_valid > 1.0 { 1.0 / n_valid.ln() } else { 0.0 };
+        let mut e = [0.0; DIMS];
+        for d in 0..DIMS {
+            let mut acc = 0.0;
+            for (row, &m) in free.iter().zip(mask) {
+                if !m {
+                    continue;
+                }
+                let p = if col_sum[d] > EPS { row[d] / col_sum[d] } else { uniform };
+                if p > 0.0 {
+                    acc += p * p.max(EPS).ln();
+                }
+            }
+            e[d] = -k * acc;
+        }
+
+        // Eq. (7)-(8): variation factors -> weights.
+        let mut g = [0.0; DIMS];
+        let mut gsum = 0.0;
+        for d in 0..DIMS {
+            g[d] = 1.0 - e[d];
+            gsum += g[d];
+        }
+        let mut w = [0.0; DIMS];
+        for d in 0..DIMS {
+            w[d] = if gsum > EPS { g[d] / gsum } else { 1.0 / DIMS as f64 };
+        }
+        w
+    }
+}
+
+impl HostScorer for RustScorer {
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+
+    fn scores(&mut self, input: &ScoreInput) -> (Vec<f64>, Vec<f64>) {
+        input.validate();
+        let h = input.len();
+        let mut hs = vec![NEG; h];
+        let mut ahs = vec![NEG; h];
+        if h == 0 {
+            return (hs, ahs);
+        }
+
+        // Eq. (3): min-max bounds over valid hosts per dimension.
+        let mut mn = [f64::INFINITY; DIMS];
+        let mut mx = [f64::NEG_INFINITY; DIMS];
+        for (row, &m) in input.free.iter().zip(input.mask) {
+            if m {
+                for d in 0..DIMS {
+                    mn[d] = mn[d].min(row[d]);
+                    mx[d] = mx[d].max(row[d]);
+                }
+            }
+        }
+
+        let w = Self::entropy_weights(input.free, input.mask);
+
+        for i in 0..h {
+            if !input.mask[i] {
+                continue;
+            }
+            // Eq. (3) + (9): normalized capacities, weighted sum.
+            let mut score = 0.0;
+            for d in 0..DIMS {
+                let rng = mx[d] - mn[d];
+                let c = if rng > EPS { (input.free[i][d] - mn[d]) / rng } else { 0.5 };
+                score += w[d] * c;
+            }
+            // Eq. (10)-(11): spot load and adjusted score.
+            let mut sl = 0.0;
+            for d in 0..DIMS {
+                let frac = if input.caps[i][d] > EPS {
+                    input.spot_used[i][d] / input.caps[i][d]
+                } else {
+                    0.0
+                };
+                sl += w[d] * frac;
+            }
+            hs[i] = score;
+            ahs[i] = score * (1.0 + input.alpha * sl);
+        }
+        (hs, ahs)
+    }
+}
+
+/// Build a `ScoreInput`'s arrays from the world's active hosts with the
+/// mask supplied per host id (used by the HLEM policy and by tests).
+pub fn collect_host_arrays(
+    world: &World,
+    hosts: &[&Host],
+) -> (Vec<[f64; DIMS]>, Vec<[f64; DIMS]>, Vec<[f64; DIMS]>) {
+    let mut caps = Vec::with_capacity(hosts.len());
+    let mut free = Vec::with_capacity(hosts.len());
+    let mut spot = Vec::with_capacity(hosts.len());
+    for h in hosts {
+        caps.push(h.capacity_vec());
+        free.push(h.free_vec());
+        spot.push(world.spot_used_vec(h));
+    }
+    (caps, free, spot)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::Rng;
+
+    fn rand_input(rng: &mut Rng, h: usize) -> (Vec<[f64; 4]>, Vec<[f64; 4]>, Vec<[f64; 4]>, Vec<bool>) {
+        let mut caps = Vec::new();
+        let mut free = Vec::new();
+        let mut spot = Vec::new();
+        let mut mask = Vec::new();
+        for _ in 0..h {
+            let mut c = [0.0; 4];
+            let mut f = [0.0; 4];
+            let mut s = [0.0; 4];
+            for d in 0..4 {
+                c[d] = rng.uniform(1.0, 100.0);
+                f[d] = c[d] * rng.next_f64();
+                s[d] = f[d] * rng.next_f64();
+            }
+            caps.push(c);
+            free.push(f);
+            spot.push(s);
+            mask.push(rng.chance(0.8));
+        }
+        if !mask.iter().any(|&m| m) {
+            mask[0] = true;
+        }
+        (caps, free, spot, mask)
+    }
+
+    #[test]
+    fn weights_sum_to_one() {
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let (_, free, _, mask) = rand_input(&mut rng, 16);
+            let w = RustScorer::entropy_weights(&free, &mask);
+            let sum: f64 = w.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "weights {w:?}");
+            assert!(w.iter().all(|&x| x >= -1e-12));
+        }
+    }
+
+    #[test]
+    fn masked_hosts_get_neg() {
+        let mut rng = Rng::new(2);
+        let (caps, free, spot, mut mask) = rand_input(&mut rng, 8);
+        mask[3] = false;
+        let (hs, ahs) = RustScorer::new().scores(&ScoreInput {
+            caps: &caps,
+            free: &free,
+            spot_used: &spot,
+            mask: &mask,
+            alpha: -0.5,
+        });
+        assert_eq!(hs[3], NEG);
+        assert_eq!(ahs[3], NEG);
+    }
+
+    #[test]
+    fn hs_in_unit_interval_for_valid() {
+        let mut rng = Rng::new(3);
+        let (caps, free, spot, mask) = rand_input(&mut rng, 32);
+        let (hs, _) = RustScorer::new().scores(&ScoreInput {
+            caps: &caps,
+            free: &free,
+            spot_used: &spot,
+            mask: &mask,
+            alpha: 0.0,
+        });
+        for (s, &m) in hs.iter().zip(&mask) {
+            if m {
+                assert!((-1e-9..=1.0 + 1e-9).contains(s), "hs {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn alpha_zero_means_identity() {
+        let mut rng = Rng::new(4);
+        let (caps, free, spot, mask) = rand_input(&mut rng, 16);
+        let (hs, ahs) = RustScorer::new().scores(&ScoreInput {
+            caps: &caps,
+            free: &free,
+            spot_used: &spot,
+            mask: &mask,
+            alpha: 0.0,
+        });
+        assert_eq!(hs, ahs);
+    }
+
+    #[test]
+    fn negative_alpha_penalizes_spot_heavy_host() {
+        // Two identical hosts, host 1 loaded with spot.
+        let caps = vec![[100.0; 4]; 2];
+        let free = vec![[40.0; 4]; 2];
+        let spot = vec![[0.0; 4], [50.0; 4]];
+        let mask = vec![true, true];
+        let (_, ahs) = RustScorer::new().scores(&ScoreInput {
+            caps: &caps,
+            free: &free,
+            spot_used: &spot,
+            mask: &mask,
+            alpha: -0.5,
+        });
+        assert!(ahs[1] < ahs[0], "ahs {ahs:?}");
+    }
+
+    #[test]
+    fn single_valid_host_is_finite() {
+        let caps = vec![[10.0; 4]; 3];
+        let free = vec![[5.0; 4]; 3];
+        let spot = vec![[1.0; 4]; 3];
+        let mask = vec![false, true, false];
+        let (hs, ahs) = RustScorer::new().scores(&ScoreInput {
+            caps: &caps,
+            free: &free,
+            spot_used: &spot,
+            mask: &mask,
+            alpha: -0.5,
+        });
+        assert!(hs[1].is_finite() && ahs[1].is_finite());
+        assert_eq!(hs[0], NEG);
+        assert_eq!(hs[2], NEG);
+    }
+
+    #[test]
+    fn dominating_host_scores_at_least_as_high() {
+        let caps = vec![[100.0; 4]; 3];
+        let mut free = vec![[10.0; 4], [20.0; 4], [30.0; 4]];
+        free[2] = [35.0, 25.0, 30.0, 40.0]; // dominates host 1
+        let spot = vec![[0.0; 4]; 3];
+        let mask = vec![true; 3];
+        let (hs, _) = RustScorer::new().scores(&ScoreInput {
+            caps: &caps,
+            free: &free,
+            spot_used: &spot,
+            mask: &mask,
+            alpha: 0.0,
+        });
+        assert!(hs[2] >= hs[1]);
+        assert!(hs[1] >= hs[0]);
+    }
+}

@@ -1,0 +1,159 @@
+//! Association measures for mixed-type data (paper §VII-F(a): "Theil's U
+//! for nominal-nominal, correlation ratio (eta^2) for numeric-categorical,
+//! and Pearson correlation for numeric-numeric" - the dython.nominal
+//! measures re-implemented).
+
+use std::collections::HashMap;
+
+/// Pearson correlation coefficient of two numeric columns.
+/// Returns 0 for degenerate (constant) columns.
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (a, b) in x.iter().zip(y) {
+        sxy += (a - mx) * (b - my);
+        sxx += (a - mx) * (a - mx);
+        syy += (b - my) * (b - my);
+    }
+    if sxx <= 0.0 || syy <= 0.0 {
+        0.0
+    } else {
+        (sxy / (sxx.sqrt() * syy.sqrt())).clamp(-1.0, 1.0)
+    }
+}
+
+/// Correlation ratio eta (in [0,1]): how much of a numeric variable's
+/// variance is explained by a categorical grouping.
+pub fn correlation_ratio(categories: &[u32], values: &[f64]) -> f64 {
+    assert_eq!(categories.len(), values.len());
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mut groups: HashMap<u32, (f64, f64)> = HashMap::new(); // (sum, n)
+    for (&c, &v) in categories.iter().zip(values) {
+        let e = groups.entry(c).or_insert((0.0, 0.0));
+        e.0 += v;
+        e.1 += 1.0;
+    }
+    let n = values.len() as f64;
+    let grand_mean = values.iter().sum::<f64>() / n;
+    let between: f64 = groups
+        .values()
+        .map(|&(sum, cnt)| cnt * (sum / cnt - grand_mean).powi(2))
+        .sum();
+    let total: f64 = values.iter().map(|v| (v - grand_mean).powi(2)).sum();
+    if total <= 0.0 {
+        0.0
+    } else {
+        (between / total).clamp(0.0, 1.0).sqrt()
+    }
+}
+
+/// Shannon entropy of a categorical column (nats).
+fn entropy(counts: &HashMap<u32, f64>, n: f64) -> f64 {
+    counts
+        .values()
+        .map(|&c| {
+            let p = c / n;
+            if p > 0.0 { -p * p.ln() } else { 0.0 }
+        })
+        .sum()
+}
+
+/// Theil's uncertainty coefficient U(y | x) in [0,1]: the fraction of y's
+/// entropy explained by knowing x. Asymmetric: U(y|x) != U(x|y).
+pub fn theils_u(x: &[u32], y: &[u32]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    if x.is_empty() {
+        return 0.0;
+    }
+    let mut y_counts: HashMap<u32, f64> = HashMap::new();
+    for &v in y {
+        *y_counts.entry(v).or_insert(0.0) += 1.0;
+    }
+    let h_y = entropy(&y_counts, n);
+    if h_y <= 0.0 {
+        return 0.0; // y is constant: fully "explained"
+    }
+    // Conditional entropy H(y | x) = sum_x p(x) H(y | X = x).
+    let mut x_groups: HashMap<u32, HashMap<u32, f64>> = HashMap::new();
+    let mut x_counts: HashMap<u32, f64> = HashMap::new();
+    for (&a, &b) in x.iter().zip(y) {
+        *x_groups.entry(a).or_default().entry(b).or_insert(0.0) += 1.0;
+        *x_counts.entry(a).or_insert(0.0) += 1.0;
+    }
+    let mut h_y_given_x = 0.0;
+    for (a, group) in &x_groups {
+        let nx = x_counts[a];
+        h_y_given_x += (nx / n) * entropy(group, nx);
+    }
+    ((h_y - h_y_given_x) / h_y).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::Rng;
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let x: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 3.0 * v + 1.0).collect();
+        let z: Vec<f64> = x.iter().map(|v| -v).collect();
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        assert!((pearson(&x, &z) + 1.0).abs() < 1e-12);
+        assert_eq!(pearson(&x, &vec![5.0; 50]), 0.0); // constant column
+    }
+
+    #[test]
+    fn pearson_independent_near_zero() {
+        let mut rng = Rng::new(1);
+        let x: Vec<f64> = (0..20_000).map(|_| rng.next_f64()).collect();
+        let y: Vec<f64> = (0..20_000).map(|_| rng.next_f64()).collect();
+        assert!(pearson(&x, &y).abs() < 0.03);
+    }
+
+    #[test]
+    fn correlation_ratio_extremes() {
+        // Perfectly determined by category.
+        let cats = vec![0, 0, 1, 1, 2, 2];
+        let vals = vec![1.0, 1.0, 5.0, 5.0, 9.0, 9.0];
+        assert!((correlation_ratio(&cats, &vals) - 1.0).abs() < 1e-12);
+        // Independent of category.
+        let vals2 = vec![1.0, 9.0, 1.0, 9.0, 1.0, 9.0];
+        assert!(correlation_ratio(&cats, &vals2) < 1e-9);
+    }
+
+    #[test]
+    fn theils_u_extremes_and_asymmetry() {
+        // y fully determined by x.
+        let x = vec![0, 0, 1, 1, 2, 2];
+        let y = vec![5, 5, 6, 6, 7, 7];
+        assert!((theils_u(&x, &y) - 1.0).abs() < 1e-12);
+        // independent
+        let y2 = vec![0, 1, 0, 1, 0, 1];
+        assert!(theils_u(&x, &y2) < 0.35); // small sample, not exactly 0
+        // asymmetry: x (3 values) determines parity y2? no - but a finer x
+        // explains a coarser y better than vice versa.
+        let fine: Vec<u32> = (0..60).collect();
+        let coarse: Vec<u32> = (0..60).map(|i| i / 10).collect();
+        assert!((theils_u(&fine, &coarse) - 1.0).abs() < 1e-12);
+        assert!(theils_u(&coarse, &fine) < 1.0);
+    }
+
+    #[test]
+    fn theils_u_constant_target_is_zero() {
+        let x = vec![1, 2, 3, 4];
+        let y = vec![9, 9, 9, 9];
+        assert_eq!(theils_u(&x, &y), 0.0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Interruption-frequency analysis (paper §VII-F, Fig. 16): association
+//! measures for mixed-type data and the spot-advisor dataset.
+
+pub mod advisor;
+pub mod correlation;
+
+pub use advisor::{synth_dataset, AdvisorDataset, AdvisorRow};
+pub use correlation::{correlation_ratio, pearson, theils_u};

@@ -1,0 +1,218 @@
+//! Minimal benchmark harness (criterion is unavailable offline, DESIGN.md
+//! §7). Used by every file in `benches/` via `harness = false`.
+//!
+//! Methodology: warmup iterations, then timed iterations until both a
+//! minimum iteration count and a minimum measuring time are reached;
+//! reports median / mean / p95 / min over per-iteration wall times and
+//! derived throughput. Deterministic workloads (seeded PRNGs) keep runs
+//! comparable across code changes.
+
+use std::time::{Duration, Instant};
+
+use crate::stats::Summary;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iterations: u64,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / self.median.as_secs_f64())
+    }
+
+    pub fn render(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e6 => format!("  {:>10.2} Mitems/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:>10.2} Kitems/s", t / 1e3),
+            Some(t) => format!("  {t:>10.2} items/s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12} median  {:>12} mean  {:>12} p95  ({} iters){}",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            fmt_dur(self.p95),
+            self.iterations,
+            tp
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Bench configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    pub warmup_iters: u64,
+    pub min_iters: u64,
+    pub max_iters: u64,
+    pub min_time: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 10_000,
+            min_time: Duration::from_millis(300),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick preset for expensive end-to-end benches.
+    pub fn heavy() -> Self {
+        Bencher {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 20,
+            min_time: Duration::from_millis(500),
+            ..Default::default()
+        }
+    }
+
+    /// Time `f`, which must re-do the full work each call. Returns and
+    /// records the result. `items` is the per-iteration workload size for
+    /// throughput.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, items: Option<f64>, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut times = Summary::new();
+        let start = Instant::now();
+        let mut iters = 0u64;
+        while (iters < self.min_iters || start.elapsed() < self.min_time)
+            && iters < self.max_iters
+        {
+            let t0 = Instant::now();
+            f();
+            times.add(t0.elapsed().as_secs_f64());
+            iters += 1;
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            iterations: iters,
+            median: Duration::from_secs_f64(times.median()),
+            mean: Duration::from_secs_f64(times.mean()),
+            p95: Duration::from_secs_f64(times.percentile(95.0)),
+            min: Duration::from_secs_f64(times.min()),
+            items_per_iter: items,
+        };
+        println!("{}", result.render());
+        self.results.push(result.clone());
+        result
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Write all results as a JSON array (consumed by EXPERIMENTS.md
+    /// tooling / CI trend lines).
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use crate::util::json::{Json, JsonObj};
+        let arr: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut o = JsonObj::new();
+                o.set("name", Json::Str(r.name.clone()));
+                o.set("iterations", Json::Num(r.iterations as f64));
+                o.set("median_ns", Json::Num(r.median.as_nanos() as f64));
+                o.set("mean_ns", Json::Num(r.mean.as_nanos() as f64));
+                o.set("p95_ns", Json::Num(r.p95.as_nanos() as f64));
+                if let Some(t) = r.throughput() {
+                    o.set("throughput_per_s", Json::Num(t));
+                }
+                Json::Obj(o)
+            })
+            .collect();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, Json::Arr(arr).to_string_pretty())
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Standard bench banner.
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_and_records() {
+        let mut b = Bencher {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 50,
+            min_time: Duration::from_millis(1),
+            results: Vec::new(),
+        };
+        let r = b.bench("spin", Some(1000.0), || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            black_box(acc);
+        });
+        assert!(r.iterations >= 5);
+        assert!(r.median.as_nanos() > 0);
+        assert!(r.throughput().unwrap() > 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn json_export() {
+        let mut b = Bencher {
+            warmup_iters: 0,
+            min_iters: 2,
+            max_iters: 3,
+            min_time: Duration::ZERO,
+            results: Vec::new(),
+        };
+        b.bench("x", None, || {});
+        let path = std::env::temp_dir().join(format!("cm_bench_{}.json", std::process::id()));
+        b.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(crate::util::json::parse(&text).is_ok());
+        std::fs::remove_file(&path).ok();
+    }
+}

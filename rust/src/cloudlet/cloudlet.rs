@@ -1,0 +1,196 @@
+//! Cloudlet: an application task bound to a VM (paper §V-B(f)), plus the
+//! VM-level scheduling discipline that divides VM capacity among cloudlets.
+
+use super::utilization::UtilizationModel;
+use crate::vm::VmId;
+
+/// Execution state of a cloudlet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CloudletState {
+    /// Submitted, waiting for its VM to be placed (or for a PE slot under
+    /// space-shared scheduling).
+    Queued,
+    /// Actively consuming MIPS.
+    Running,
+    /// VM hibernated: progress frozen, remaining length retained.
+    Paused,
+    /// Completed all instructions.
+    Finished,
+    /// VM terminated before completion.
+    Canceled,
+}
+
+impl std::fmt::Display for CloudletState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            CloudletState::Queued => "QUEUED",
+            CloudletState::Running => "RUNNING",
+            CloudletState::Paused => "PAUSED",
+            CloudletState::Finished => "FINISHED",
+            CloudletState::Canceled => "CANCELED",
+        })
+    }
+}
+
+/// How a VM divides its MIPS among its cloudlets (paper §V-B(e):
+/// `CloudletScheduler`). Time-shared splits capacity equally among active
+/// cloudlets; space-shared runs them PE-exclusively in submission order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    TimeShared,
+    SpaceShared,
+}
+
+/// An application task (paper Listing 8: `new CloudletSimple(1, 20000, 2)`,
+/// file/output sizes, a utilization model, bound to a VM).
+#[derive(Debug, Clone)]
+pub struct Cloudlet {
+    pub id: super::CloudletId,
+    pub vm: VmId,
+    /// Total length in million instructions (MI).
+    pub length_mi: f64,
+    /// PEs the cloudlet uses on its VM.
+    pub pes: u32,
+    pub file_size: f64,
+    pub output_size: f64,
+    pub utilization: UtilizationModel,
+    pub state: CloudletState,
+    /// Outstanding instructions (MI).
+    pub remaining_mi: f64,
+    pub started_at: Option<f64>,
+    pub finished_at: Option<f64>,
+}
+
+impl Cloudlet {
+    pub fn new(id: super::CloudletId, length_mi: f64, pes: u32) -> Self {
+        assert!(length_mi > 0.0 && pes > 0);
+        Cloudlet {
+            id,
+            vm: usize::MAX,
+            length_mi,
+            pes,
+            file_size: 300.0,
+            output_size: 300.0,
+            utilization: UtilizationModel::Full,
+            state: CloudletState::Queued,
+            remaining_mi: length_mi,
+            started_at: None,
+            finished_at: None,
+        }
+    }
+
+    pub fn with_vm(mut self, vm: VmId) -> Self {
+        self.vm = vm;
+        self
+    }
+
+    pub fn with_utilization(mut self, u: UtilizationModel) -> Self {
+        self.utilization = u;
+        self
+    }
+
+    pub fn with_sizes(mut self, file_size: f64, output_size: f64) -> Self {
+        self.file_size = file_size;
+        self.output_size = output_size;
+        self
+    }
+
+    pub fn is_active(&self) -> bool {
+        matches!(self.state, CloudletState::Running)
+    }
+
+    pub fn is_done(&self) -> bool {
+        matches!(self.state, CloudletState::Finished | CloudletState::Canceled)
+    }
+
+    /// Progress fraction in [0, 1].
+    pub fn progress(&self) -> f64 {
+        1.0 - (self.remaining_mi / self.length_mi).clamp(0.0, 1.0)
+    }
+}
+
+/// Compute each cloudlet's allocated MIPS under `kind` for a VM with
+/// `vm_mips` total capacity, given the (id, requested_pes) of its active
+/// cloudlets. Returns (id, mips) pairs; cloudlets past the PE budget under
+/// space-shared get 0 (they queue).
+pub fn allocate_mips(
+    kind: SchedulerKind,
+    vm_mips: f64,
+    vm_pes: u32,
+    active: &[(super::CloudletId, u32)],
+) -> Vec<(super::CloudletId, f64)> {
+    if active.is_empty() {
+        return Vec::new();
+    }
+    match kind {
+        SchedulerKind::TimeShared => {
+            // Equal split of total VM capacity among all active cloudlets.
+            let share = vm_mips / active.len() as f64;
+            active.iter().map(|&(id, _)| (id, share)).collect()
+        }
+        SchedulerKind::SpaceShared => {
+            // PE-exclusive in submission order; MIPS proportional to PEs.
+            let per_pe = if vm_pes == 0 { 0.0 } else { vm_mips / vm_pes as f64 };
+            let mut free = vm_pes;
+            active
+                .iter()
+                .map(|&(id, pes)| {
+                    if free >= pes {
+                        free -= pes;
+                        (id, per_pe * pes as f64)
+                    } else {
+                        (id, 0.0)
+                    }
+                })
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_progress() {
+        let mut c = Cloudlet::new(1, 20_000.0, 2).with_vm(5);
+        assert_eq!(c.state, CloudletState::Queued);
+        assert_eq!(c.progress(), 0.0);
+        c.remaining_mi = 5_000.0;
+        assert!((c.progress() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_shared_splits_equally() {
+        let out = allocate_mips(SchedulerKind::TimeShared, 2000.0, 2, &[(0, 1), (1, 1), (2, 2)]);
+        for (_, mips) in &out {
+            assert!((mips - 2000.0 / 3.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn space_shared_queues_overflow() {
+        let out = allocate_mips(SchedulerKind::SpaceShared, 2000.0, 2, &[(0, 1), (1, 1), (2, 1)]);
+        assert_eq!(out[0].1, 1000.0);
+        assert_eq!(out[1].1, 1000.0);
+        assert_eq!(out[2].1, 0.0); // no PE left -> queued
+    }
+
+    #[test]
+    fn space_shared_multi_pe() {
+        let out = allocate_mips(SchedulerKind::SpaceShared, 4000.0, 4, &[(0, 2), (1, 2)]);
+        assert_eq!(out[0].1, 2000.0);
+        assert_eq!(out[1].1, 2000.0);
+    }
+
+    #[test]
+    fn empty_active_list() {
+        assert!(allocate_mips(SchedulerKind::TimeShared, 1000.0, 1, &[]).is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_length() {
+        Cloudlet::new(0, 0.0, 1);
+    }
+}

@@ -1,0 +1,10 @@
+//! Cloudlets (application tasks) and their execution model (paper §V-B(f)).
+
+pub mod cloudlet;
+pub mod utilization;
+
+pub use cloudlet::{allocate_mips, Cloudlet, CloudletState, SchedulerKind};
+pub use utilization::UtilizationModel;
+
+/// Index of a cloudlet in the world's cloudlet arena.
+pub type CloudletId = usize;

@@ -1,0 +1,74 @@
+//! Cloudlet resource-utilization models (paper §V-B(f): "resource usage
+//! models allow workloads to consume CPU ... in different ways";
+//! `UtilizationModelFull` appears in Listing 8).
+
+/// Fraction of the VM's allocated MIPS a cloudlet actually uses at time t.
+#[derive(Debug, Clone, PartialEq)]
+pub enum UtilizationModel {
+    /// Always 100% (the paper's `UtilizationModelFull`).
+    Full,
+    /// A constant fraction in [0, 1].
+    Constant(f64),
+    /// Linear ramp from `from` to `to` over `duration` seconds, then flat.
+    Ramp { from: f64, to: f64, duration: f64 },
+    /// Deterministic pseudo-random walk in [lo, hi] (hash of floor(t)):
+    /// stand-in for `UtilizationModelStochastic` without carrying rng state.
+    Stochastic { lo: f64, hi: f64, seed: u64 },
+}
+
+impl UtilizationModel {
+    /// Utilization fraction at absolute simulation time `t` (t >= 0).
+    pub fn at(&self, t: f64) -> f64 {
+        match *self {
+            UtilizationModel::Full => 1.0,
+            UtilizationModel::Constant(f) => f.clamp(0.0, 1.0),
+            UtilizationModel::Ramp { from, to, duration } => {
+                if duration <= 0.0 {
+                    return to.clamp(0.0, 1.0);
+                }
+                let x = (t / duration).clamp(0.0, 1.0);
+                (from + (to - from) * x).clamp(0.0, 1.0)
+            }
+            UtilizationModel::Stochastic { lo, hi, seed } => {
+                let step = t.max(0.0).floor() as u64;
+                let mut z = step.wrapping_add(seed).wrapping_mul(0x9e3779b97f4a7c15);
+                z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+                z ^= z >> 31;
+                let u = (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+                (lo + (hi - lo) * u).clamp(0.0, 1.0)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_and_constant() {
+        assert_eq!(UtilizationModel::Full.at(123.0), 1.0);
+        assert_eq!(UtilizationModel::Constant(0.25).at(0.0), 0.25);
+        assert_eq!(UtilizationModel::Constant(7.0).at(0.0), 1.0); // clamped
+    }
+
+    #[test]
+    fn ramp_interpolates_and_saturates() {
+        let m = UtilizationModel::Ramp { from: 0.2, to: 1.0, duration: 10.0 };
+        assert!((m.at(0.0) - 0.2).abs() < 1e-12);
+        assert!((m.at(5.0) - 0.6).abs() < 1e-12);
+        assert_eq!(m.at(100.0), 1.0);
+    }
+
+    #[test]
+    fn stochastic_is_deterministic_and_bounded() {
+        let m = UtilizationModel::Stochastic { lo: 0.3, hi: 0.9, seed: 42 };
+        for t in 0..100 {
+            let u = m.at(t as f64);
+            assert!((0.3..=0.9).contains(&u), "u={u}");
+            assert_eq!(u, m.at(t as f64)); // same t -> same value
+        }
+        // not constant across steps
+        assert_ne!(m.at(1.0), m.at(2.0));
+    }
+}

@@ -1,0 +1,145 @@
+//! Tables II and III of the paper, verbatim.
+
+use crate::infra::HostSpec;
+use crate::util::table::{Align, TextTable};
+use crate::vm::VmSpec;
+
+/// One Table II row: a host type plus its count in the simulation.
+#[derive(Debug, Clone, Copy)]
+pub struct HostType {
+    pub name: &'static str,
+    pub cpu: u32,
+    pub memory: f64,
+    pub bandwidth: f64,
+    pub storage: f64,
+    /// Instances of this type in the §VII-E setup.
+    pub count: usize,
+}
+
+impl HostType {
+    pub fn spec(&self, mips_per_pe: f64) -> HostSpec {
+        HostSpec::new(self.cpu, mips_per_pe, self.memory, self.bandwidth, self.storage)
+    }
+}
+
+/// Table II: small/medium/large/x-large hosts; counts 20/30/30/20.
+pub fn host_types() -> Vec<HostType> {
+    vec![
+        HostType { name: "Small", cpu: 8, memory: 16_384.0, bandwidth: 5_000.0, storage: 200_000.0, count: 20 },
+        HostType { name: "Medium", cpu: 16, memory: 32_768.0, bandwidth: 10_000.0, storage: 400_000.0, count: 30 },
+        HostType { name: "Large", cpu: 32, memory: 65_536.0, bandwidth: 20_000.0, storage: 800_000.0, count: 30 },
+        HostType { name: "X-Large", cpu: 64, memory: 131_072.0, bandwidth: 40_000.0, storage: 1_600_000.0, count: 20 },
+    ]
+}
+
+/// One Table III row: a VM profile plus its spot/on-demand counts.
+#[derive(Debug, Clone, Copy)]
+pub struct VmProfile {
+    pub cpu: u32,
+    pub memory: f64,
+    pub bandwidth: f64,
+    pub storage: f64,
+    pub spot_count: usize,
+    pub on_demand_count: usize,
+}
+
+impl VmProfile {
+    pub fn spec(&self, mips_per_pe: f64) -> VmSpec {
+        VmSpec::new(mips_per_pe, self.cpu)
+            .with_ram(self.memory)
+            .with_bw(self.bandwidth)
+            .with_storage(self.storage)
+    }
+}
+
+/// Table III: 10 profiles, 400 spot + 1600 on-demand VMs total.
+pub fn vm_profiles() -> Vec<VmProfile> {
+    vec![
+        VmProfile { cpu: 1, memory: 1_024.0, bandwidth: 100.0, storage: 10_000.0, spot_count: 31, on_demand_count: 160 },
+        VmProfile { cpu: 2, memory: 1_024.0, bandwidth: 100.0, storage: 10_000.0, spot_count: 42, on_demand_count: 175 },
+        VmProfile { cpu: 1, memory: 2_048.0, bandwidth: 200.0, storage: 20_000.0, spot_count: 36, on_demand_count: 168 },
+        VmProfile { cpu: 2, memory: 2_048.0, bandwidth: 200.0, storage: 20_000.0, spot_count: 44, on_demand_count: 146 },
+        VmProfile { cpu: 4, memory: 2_048.0, bandwidth: 200.0, storage: 20_000.0, spot_count: 40, on_demand_count: 158 },
+        VmProfile { cpu: 4, memory: 4_096.0, bandwidth: 500.0, storage: 50_000.0, spot_count: 40, on_demand_count: 145 },
+        VmProfile { cpu: 6, memory: 4_096.0, bandwidth: 500.0, storage: 50_000.0, spot_count: 36, on_demand_count: 170 },
+        VmProfile { cpu: 6, memory: 8_192.0, bandwidth: 1_000.0, storage: 80_000.0, spot_count: 51, on_demand_count: 155 },
+        VmProfile { cpu: 8, memory: 8_192.0, bandwidth: 1_000.0, storage: 80_000.0, spot_count: 33, on_demand_count: 162 },
+        VmProfile { cpu: 10, memory: 8_192.0, bandwidth: 1_000.0, storage: 80_000.0, spot_count: 47, on_demand_count: 168 },
+    ]
+}
+
+/// Render Table II.
+pub fn host_table() -> TextTable {
+    let mut t = TextTable::new("TABLE II - HOST TYPES")
+        .column("Size", Align::Left)
+        .column("CPU", Align::Right)
+        .column("Memory", Align::Right)
+        .column("Bandwidth", Align::Right)
+        .column("Storage", Align::Right)
+        .column("Count", Align::Right);
+    for h in host_types() {
+        t.push(vec![
+            h.name.to_string(),
+            h.cpu.to_string(),
+            format!("{}", h.memory as u64),
+            format!("{}", h.bandwidth as u64),
+            format!("{}", h.storage as u64),
+            h.count.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Render Table III.
+pub fn vm_table() -> TextTable {
+    let mut t = TextTable::new("TABLE III - VM PROFILES")
+        .column("CPU", Align::Right)
+        .column("Memory", Align::Right)
+        .column("Bandwidth", Align::Right)
+        .column("Storage", Align::Right)
+        .column("Spot #", Align::Right)
+        .column("On-Demand #", Align::Right);
+    for p in vm_profiles() {
+        t.push(vec![
+            p.cpu.to_string(),
+            format!("{}", p.memory as u64),
+            format!("{}", p.bandwidth as u64),
+            format!("{}", p.storage as u64),
+            p.spot_count.to_string(),
+            p.on_demand_count.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_totals() {
+        let hosts = host_types();
+        assert_eq!(hosts.len(), 4);
+        assert_eq!(hosts.iter().map(|h| h.count).sum::<usize>(), 100);
+        // Each successive type doubles CPU.
+        for w in hosts.windows(2) {
+            assert_eq!(w[1].cpu, w[0].cpu * 2);
+        }
+    }
+
+    #[test]
+    fn table3_totals_match_paper() {
+        let profiles = vm_profiles();
+        assert_eq!(profiles.len(), 10);
+        let spot: usize = profiles.iter().map(|p| p.spot_count).sum();
+        let od: usize = profiles.iter().map(|p| p.on_demand_count).sum();
+        assert_eq!(spot, 400); // paper: 400 spot VMs
+        assert_eq!(spot + od, 2_007); // paper: "a total of 2,000 VMs" (sums to 2,007 as printed)
+    }
+
+    #[test]
+    fn tables_render() {
+        assert!(host_table().render().contains("X-Large"));
+        assert_eq!(vm_table().row_count(), 10);
+    }
+}

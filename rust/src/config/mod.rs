@@ -1,0 +1,8 @@
+//! Experiment configuration: the host/VM catalogs of the paper's Tables
+//! II-III and the comparison-scenario builder of §VII-E.2.
+
+pub mod catalog;
+pub mod scenario;
+
+pub use catalog::{host_types, vm_profiles, HostType, VmProfile};
+pub use scenario::{build_comparison_workload, ComparisonConfig};

@@ -1,0 +1,164 @@
+//! The §VII-E.2 comparison scenario: Table II hosts + Table III VMs with
+//! randomized (but seed-reproducible) submission delays and execution
+//! durations. "The same randomized values were reused across all
+//! simulation runs to ensure consistency" - here enforced by seeding.
+
+use crate::cloudlet::Cloudlet;
+use crate::engine::Engine;
+use crate::stats::Rng;
+use crate::vm::{SpotConfig, Vm, VmSpec};
+
+use super::catalog::{host_types, vm_profiles};
+
+/// Scenario parameters (defaults follow §VII-E.2).
+#[derive(Debug, Clone)]
+pub struct ComparisonConfig {
+    pub seed: u64,
+    /// MIPS per PE for hosts and VMs.
+    pub mips_per_pe: f64,
+    /// Spot + on-demand VMs submitted immediately (400 + 600 in the paper);
+    /// the rest get a random delay in (0, max_delay].
+    pub immediate_on_demand: usize,
+    pub max_delay: f64,
+    /// Cloudlet execution time range (seconds) - "randomized values were
+    /// used for ... total execution times".
+    pub exec_time: (f64, f64),
+    /// Spot instance settings for the scenario.
+    pub spot: SpotConfig,
+    /// Persistent-request waiting time for all VMs.
+    pub waiting_time: f64,
+    /// Simulation hard stop.
+    pub terminate_at: f64,
+}
+
+impl Default for ComparisonConfig {
+    fn default() -> Self {
+        // Calibrated so that momentary demand oscillates around cluster
+        // capacity (2,880 PEs): enough contention for spot interruptions,
+        // without the permanent overload that would interrupt every spot
+        // many times (the paper observes <= 2 interruptions per VM).
+        ComparisonConfig {
+            seed: 20_250_710,
+            mips_per_pe: 1_000.0,
+            immediate_on_demand: 600,
+            max_delay: 2_400.0,
+            exec_time: (100.0, 400.0),
+            spot: SpotConfig::hibernate()
+                .with_min_running(60.0)
+                .with_warning(2.0)
+                .with_hibernation_timeout(900.0),
+            waiting_time: 1_200.0,
+            terminate_at: 4_800.0,
+        }
+    }
+}
+
+/// What was submitted.
+#[derive(Debug, Clone, Default)]
+pub struct ScenarioStats {
+    pub hosts: usize,
+    pub spot_vms: usize,
+    pub on_demand_vms: usize,
+    pub cloudlets: usize,
+}
+
+/// Build Table II hosts and Table III VMs into `engine`.
+///
+/// The RNG consumption sequence is a pure function of `cfg.seed`, so runs
+/// with different allocation policies see byte-identical workloads.
+pub fn build_comparison_workload(engine: &mut Engine, cfg: &ComparisonConfig) -> ScenarioStats {
+    let mut rng = Rng::new(cfg.seed);
+    let mut stats = ScenarioStats::default();
+
+    let dc = engine.add_datacenter("dc0", 1.0);
+    for ht in host_types() {
+        for _ in 0..ht.count {
+            engine.add_host(dc, ht.spec(cfg.mips_per_pe));
+            stats.hosts += 1;
+        }
+    }
+
+    // Expand Table III into individual (spec, is_spot) submissions.
+    let mut submissions: Vec<(VmSpec, bool)> = Vec::new();
+    for p in vm_profiles() {
+        for _ in 0..p.spot_count {
+            submissions.push((p.spec(cfg.mips_per_pe), true));
+        }
+        for _ in 0..p.on_demand_count {
+            submissions.push((p.spec(cfg.mips_per_pe), false));
+        }
+    }
+    // Deterministic shuffle so profiles interleave in submission order.
+    rng.shuffle(&mut submissions);
+
+    // Paper: all 400 spot + 600 on-demand submitted immediately; the
+    // remaining on-demand VMs get randomized delays.
+    let mut immediate_od_left = cfg.immediate_on_demand;
+    for (spec, is_spot) in submissions {
+        let delay = if is_spot {
+            0.0
+        } else if immediate_od_left > 0 {
+            immediate_od_left -= 1;
+            0.0
+        } else {
+            rng.uniform(0.0, cfg.max_delay)
+        };
+        let vm = if is_spot {
+            stats.spot_vms += 1;
+            Vm::spot(0, spec, cfg.spot).with_persistent(cfg.waiting_time).with_delay(delay)
+        } else {
+            stats.on_demand_vms += 1;
+            Vm::on_demand(0, spec).with_persistent(cfg.waiting_time).with_delay(delay)
+        };
+        let vm = engine.submit_vm(vm);
+
+        let exec = rng.uniform(cfg.exec_time.0, cfg.exec_time.1);
+        let length = exec * cfg.mips_per_pe * spec.pes as f64;
+        engine.submit_cloudlet(Cloudlet::new(0, length, spec.pes).with_vm(vm));
+        stats.cloudlets += 1;
+    }
+
+    engine.terminate_at(cfg.terminate_at);
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::FirstFit;
+    use crate::engine::EngineConfig;
+
+    #[test]
+    fn workload_matches_table_counts() {
+        let mut e = Engine::new(EngineConfig::default(), Box::new(FirstFit::new()));
+        let stats = build_comparison_workload(&mut e, &ComparisonConfig::default());
+        assert_eq!(stats.hosts, 100);
+        assert_eq!(stats.spot_vms, 400);
+        assert_eq!(stats.on_demand_vms, 1_607);
+        assert_eq!(stats.cloudlets, 2_007);
+    }
+
+    #[test]
+    fn workload_is_seed_deterministic() {
+        let build = || {
+            let mut e = Engine::new(EngineConfig::default(), Box::new(FirstFit::new()));
+            build_comparison_workload(&mut e, &ComparisonConfig::default());
+            e.world
+                .vms
+                .iter()
+                .map(|v| (v.spec.pes, v.is_spot(), (v.submission_delay * 1e6) as u64))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(build(), build());
+    }
+
+    #[test]
+    fn immediate_counts_match_paper() {
+        let mut e = Engine::new(EngineConfig::default(), Box::new(FirstFit::new()));
+        build_comparison_workload(&mut e, &ComparisonConfig::default());
+        let immediate =
+            e.world.vms.iter().filter(|v| v.submission_delay == 0.0).count();
+        // 400 spot + 600 on-demand submitted without delay.
+        assert_eq!(immediate, 1_000);
+    }
+}

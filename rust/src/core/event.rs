@@ -1,0 +1,35 @@
+//! Simulation events (paper §V-A(c): "SimEvent ... contains a type
+//! identifier, timestamp, source and destination entities, and an optional
+//! payload").
+
+/// Identifies a simulation entity, mirroring CloudSim Plus's `SimEntity`
+/// roles. Dispatch is central (the engine), but source/destination are kept
+//  on events for observability and log fidelity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EntityId {
+    /// The simulation kernel itself (clock ticks, termination).
+    Kernel,
+    /// A datacenter broker (user-side agent), by index.
+    Broker(usize),
+    /// A datacenter, by index.
+    Datacenter(usize),
+}
+
+/// An event scheduled on the future queue.
+#[derive(Debug, Clone)]
+pub struct SimEvent<T> {
+    /// Absolute simulation time at which the event fires.
+    pub time: f64,
+    /// FIFO tiebreaker assigned by the queue at scheduling time.
+    pub seq: u64,
+    pub src: EntityId,
+    pub dst: EntityId,
+    /// Event type + payload (the engine's `Tag`).
+    pub data: T,
+}
+
+impl<T> SimEvent<T> {
+    pub fn new(time: f64, src: EntityId, dst: EntityId, data: T) -> Self {
+        SimEvent { time, seq: 0, src, dst, data }
+    }
+}

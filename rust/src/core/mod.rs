@@ -1,0 +1,22 @@
+//! Discrete-event simulation kernel (the CloudSim/CloudSim Plus execution
+//! backbone re-implemented in Rust - paper §V-A).
+//!
+//! The kernel is deliberately generic over the event payload type `T` so it
+//! can be unit- and property-tested in isolation from the cloud model; the
+//! engine in [`crate::engine`] instantiates it with [`crate::engine::Tag`].
+//!
+//! Semantics mirrored from CloudSim Plus:
+//! - a *future event queue* ordered by timestamp (ties broken FIFO by
+//!   scheduling sequence, as CloudSim does via the deferred queue),
+//! - a monotone simulation clock advanced to each processed event,
+//! - `min_time_between_events` quantization (constructor argument of the
+//!   `CloudSim` class, Listing 2 of the paper),
+//! - `terminate_at` (the paper's `simulation.terminateAt(70)`).
+
+pub mod event;
+pub mod queue;
+pub mod sim;
+
+pub use event::{EntityId, SimEvent};
+pub use queue::EventQueue;
+pub use sim::Simulation;

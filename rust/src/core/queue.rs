@@ -1,0 +1,150 @@
+//! Future event queue: a binary min-heap on (time, seq).
+//!
+//! CloudSim Plus keeps a timestamp-sorted *future* queue and moves due
+//! events to a *deferred* queue for processing (paper Fig. 1 / §V-A(a)).
+//! A single heap with FIFO tiebreak gives identical processing order with
+//! one less copy; `pop_due` exposes the deferred-queue batch semantics
+//! where the engine needs them (all events at the same timestamp).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::event::SimEvent;
+
+struct HeapEntry<T> {
+    time: f64,
+    seq: u64,
+    ev: SimEvent<T>,
+}
+
+impl<T> PartialEq for HeapEntry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<T> Eq for HeapEntry<T> {}
+
+impl<T> Ord for HeapEntry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first and
+        // FIFO among equal timestamps.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl<T> PartialOrd for HeapEntry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Future event queue.
+pub struct EventQueue<T> {
+    heap: BinaryHeap<HeapEntry<T>>,
+    next_seq: u64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), next_seq: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule an event; assigns the FIFO sequence number. Panics on a
+    /// non-finite or NaN timestamp (always a simulation bug).
+    pub fn push(&mut self, mut ev: SimEvent<T>) {
+        assert!(ev.time.is_finite(), "event scheduled at non-finite time");
+        ev.seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(HeapEntry { time: ev.time, seq: ev.seq, ev });
+    }
+
+    /// Timestamp of the earliest pending event.
+    pub fn next_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    /// Pop the earliest event.
+    pub fn pop(&mut self) -> Option<SimEvent<T>> {
+        self.heap.pop().map(|e| e.ev)
+    }
+
+    /// Pop every event with `time <= t` (the deferred-queue batch),
+    /// in (time, seq) order.
+    pub fn pop_due(&mut self, t: f64) -> Vec<SimEvent<T>> {
+        let mut out = Vec::new();
+        while matches!(self.heap.peek(), Some(e) if e.time <= t) {
+            out.push(self.heap.pop().unwrap().ev);
+        }
+        out
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::event::EntityId;
+
+    fn ev(t: f64, data: u32) -> SimEvent<u32> {
+        SimEvent::new(t, EntityId::Kernel, EntityId::Kernel, data)
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        for (t, d) in [(5.0, 1), (1.0, 2), (3.0, 3)] {
+            q.push(ev(t, d));
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop()).map(|e| e.data).collect();
+        assert_eq!(order, vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn fifo_among_equal_timestamps() {
+        let mut q = EventQueue::new();
+        for d in 0..10 {
+            q.push(ev(2.0, d));
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop()).map(|e| e.data).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pop_due_batches() {
+        let mut q = EventQueue::new();
+        for (t, d) in [(1.0, 1), (2.0, 2), (2.0, 3), (5.0, 4)] {
+            q.push(ev(t, d));
+        }
+        let due: Vec<u32> = q.pop_due(2.0).into_iter().map(|e| e.data).collect();
+        assert_eq!(due, vec![1, 2, 3]);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.next_time(), Some(5.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn rejects_nan_time() {
+        let mut q = EventQueue::new();
+        q.push(ev(f64::NAN, 0));
+    }
+}

@@ -1,0 +1,167 @@
+//! The simulation clock + event loop driver (the `CloudSim` class role,
+//! paper §V-A(a)).
+
+use super::event::{EntityId, SimEvent};
+use super::queue::EventQueue;
+
+/// Simulation kernel: clock, future event queue, termination condition.
+///
+/// The processing loop itself lives in the engine (which owns the world
+/// state); `Simulation` provides the clock/queue mechanics so they can be
+/// tested and reused independently.
+pub struct Simulation<T> {
+    clock: f64,
+    queue: EventQueue<T>,
+    /// Events scheduled less than this far apart are quantized up
+    /// (CloudSim's "minimal time between events", Listing 2).
+    min_dt: f64,
+    /// Hard termination time (`terminateAt`); events beyond it are dropped
+    /// at processing time.
+    terminate_at: Option<f64>,
+    processed: u64,
+}
+
+impl<T> Simulation<T> {
+    /// `min_dt` mirrors `new CloudSim(0.5)`: a floor on how soon after the
+    /// current clock a new event may fire.
+    pub fn new(min_dt: f64) -> Self {
+        assert!(min_dt >= 0.0 && min_dt.is_finite());
+        Simulation { clock: 0.0, queue: EventQueue::new(), min_dt, terminate_at: None, processed: 0 }
+    }
+
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    pub fn min_dt(&self) -> f64 {
+        self.min_dt
+    }
+
+    pub fn processed_events(&self) -> u64 {
+        self.processed
+    }
+
+    pub fn pending_events(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Set the hard stop time (paper: `simulation.terminateAt(70)`).
+    pub fn terminate_at(&mut self, t: f64) {
+        assert!(t.is_finite());
+        self.terminate_at = Some(t);
+    }
+
+    pub fn termination_time(&self) -> Option<f64> {
+        self.terminate_at
+    }
+
+    /// Schedule `data` to fire `delay` seconds from now.
+    pub fn schedule(&mut self, delay: f64, src: EntityId, dst: EntityId, data: T) {
+        assert!(delay >= 0.0, "negative delay {delay}");
+        let t = self.quantize(self.clock + delay);
+        self.queue.push(SimEvent::new(t, src, dst, data));
+    }
+
+    /// Schedule at an absolute time (>= clock; quantized by `min_dt`).
+    pub fn schedule_at(&mut self, time: f64, src: EntityId, dst: EntityId, data: T) {
+        let t = self.quantize(time.max(self.clock));
+        self.queue.push(SimEvent::new(t, src, dst, data));
+    }
+
+    fn quantize(&self, t: f64) -> f64 {
+        // Enforce a floor of min_dt after the current clock for any event
+        // that is not immediate (t == clock is allowed: same-tick cascades).
+        if t > self.clock && t < self.clock + self.min_dt {
+            self.clock + self.min_dt
+        } else {
+            t
+        }
+    }
+
+    /// Pop the next event and advance the clock to it. Returns `None` when
+    /// the queue is empty or the next event lies beyond `terminate_at`
+    /// (in which case the clock advances to the termination time).
+    pub fn next_event(&mut self) -> Option<SimEvent<T>> {
+        let t = self.queue.next_time()?;
+        if let Some(end) = self.terminate_at {
+            if t > end {
+                self.clock = end;
+                self.queue.clear();
+                return None;
+            }
+        }
+        let ev = self.queue.pop()?;
+        debug_assert!(ev.time + 1e-9 >= self.clock, "time went backwards");
+        self.clock = ev.time.max(self.clock);
+        self.processed += 1;
+        Some(ev)
+    }
+
+    /// True when no further event can fire.
+    pub fn is_finished(&self) -> bool {
+        match (self.queue.next_time(), self.terminate_at) {
+            (None, _) => true,
+            (Some(t), Some(end)) => t > end,
+            (Some(_), None) => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::event::EntityId::Kernel;
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut sim: Simulation<u32> = Simulation::new(0.0);
+        sim.schedule(5.0, Kernel, Kernel, 1);
+        sim.schedule(2.0, Kernel, Kernel, 2);
+        let e = sim.next_event().unwrap();
+        assert_eq!((e.data, sim.clock()), (2, 2.0));
+        let e = sim.next_event().unwrap();
+        assert_eq!((e.data, sim.clock()), (1, 5.0));
+        assert!(sim.is_finished());
+        assert_eq!(sim.processed_events(), 2);
+    }
+
+    #[test]
+    fn min_dt_quantizes_near_events() {
+        let mut sim: Simulation<u32> = Simulation::new(0.5);
+        sim.schedule(0.1, Kernel, Kernel, 1); // bumped to 0.5
+        sim.schedule(0.0, Kernel, Kernel, 2); // immediate: allowed at t=0
+        let e = sim.next_event().unwrap();
+        assert_eq!((e.data, sim.clock()), (2, 0.0));
+        let e = sim.next_event().unwrap();
+        assert_eq!((e.data, sim.clock()), (1, 0.5));
+    }
+
+    #[test]
+    fn terminate_at_drops_late_events() {
+        let mut sim: Simulation<u32> = Simulation::new(0.0);
+        sim.terminate_at(10.0);
+        sim.schedule(5.0, Kernel, Kernel, 1);
+        sim.schedule(50.0, Kernel, Kernel, 2);
+        assert_eq!(sim.next_event().unwrap().data, 1);
+        assert!(sim.next_event().is_none());
+        assert_eq!(sim.clock(), 10.0); // clock parked at termination time
+        assert!(sim.is_finished());
+    }
+
+    #[test]
+    fn schedule_at_clamps_to_now() {
+        let mut sim: Simulation<u32> = Simulation::new(0.0);
+        sim.schedule(1.0, Kernel, Kernel, 1);
+        sim.next_event().unwrap();
+        sim.schedule_at(0.2, Kernel, Kernel, 2); // in the past -> now
+        let e = sim.next_event().unwrap();
+        assert_eq!(e.time, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "negative delay")]
+    fn rejects_negative_delay() {
+        let mut sim: Simulation<u32> = Simulation::new(0.0);
+        sim.schedule(-1.0, Kernel, Kernel, 1);
+    }
+}

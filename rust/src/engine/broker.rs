@@ -1,0 +1,99 @@
+//! Broker state: the `DatacenterBrokerDynamic` of the paper (§V-E(a)) -
+//! tracks waiting (persistent) requests and the *resubmittingList* of
+//! interrupted/hibernated VMs awaiting reallocation.
+
+use crate::vm::VmId;
+
+/// User-side agent bookkeeping. The allocation *mechanics* live in the
+/// engine; the broker holds the queues and retry ordering policy.
+#[derive(Debug, Default)]
+pub struct Broker {
+    /// Persistent requests not yet placed (first allocation pending).
+    /// Entries: (vm, deadline) - the request expires at `deadline`.
+    pub waiting: Vec<(VmId, f64)>,
+    /// Hibernated VMs awaiting reallocation (the paper's resubmittingList).
+    pub resubmitting: Vec<VmId>,
+    /// VMs that reached a final state, in completion order.
+    pub finished: Vec<VmId>,
+}
+
+impl Broker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn enqueue_waiting(&mut self, vm: VmId, deadline: f64) {
+        debug_assert!(!self.waiting.iter().any(|&(v, _)| v == vm));
+        self.waiting.push((vm, deadline));
+    }
+
+    pub fn remove_waiting(&mut self, vm: VmId) -> bool {
+        if let Some(i) = self.waiting.iter().position(|&(v, _)| v == vm) {
+            self.waiting.remove(i);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn enqueue_resubmitting(&mut self, vm: VmId) {
+        debug_assert!(!self.resubmitting.contains(&vm));
+        self.resubmitting.push(vm);
+    }
+
+    pub fn remove_resubmitting(&mut self, vm: VmId) -> bool {
+        if let Some(i) = self.resubmitting.iter().position(|&v| v == vm) {
+            self.resubmitting.remove(i);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Retry order after capacity frees up: waiting on-demand first (they
+    /// are the cause of interruptions and must not starve), then hibernated
+    /// spots (resubmittingList), then waiting spots - each FIFO.
+    ///
+    /// `is_spot(vm)` is supplied by the engine to keep the broker free of
+    /// world borrows.
+    pub fn retry_order(&self, is_spot: impl Fn(VmId) -> bool) -> Vec<VmId> {
+        let mut out = Vec::with_capacity(self.waiting.len() + self.resubmitting.len());
+        out.extend(self.waiting.iter().map(|&(v, _)| v).filter(|&v| !is_spot(v)));
+        out.extend(self.resubmitting.iter().copied());
+        out.extend(self.waiting.iter().map(|&(v, _)| v).filter(|&v| is_spot(v)));
+        out
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.waiting.len() + self.resubmitting.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_order_prioritizes_on_demand_then_hibernated() {
+        let mut b = Broker::new();
+        b.enqueue_waiting(1, 10.0); // spot
+        b.enqueue_waiting(2, 10.0); // od
+        b.enqueue_waiting(3, 10.0); // spot
+        b.enqueue_resubmitting(4);
+        b.enqueue_resubmitting(5);
+        let order = b.retry_order(|v| v != 2);
+        assert_eq!(order, vec![2, 4, 5, 1, 3]);
+    }
+
+    #[test]
+    fn remove_is_idempotent() {
+        let mut b = Broker::new();
+        b.enqueue_waiting(1, 5.0);
+        assert!(b.remove_waiting(1));
+        assert!(!b.remove_waiting(1));
+        b.enqueue_resubmitting(2);
+        assert!(b.remove_resubmitting(2));
+        assert!(!b.remove_resubmitting(2));
+        assert_eq!(b.queue_depth(), 0);
+    }
+}

@@ -1,0 +1,108 @@
+//! Engine configuration: the knobs the paper exposes on `CloudSim`,
+//! `Datacenter` and `DatacenterBrokerDynamic` (Listings 2, 4, 5), plus the
+//! victim-selection ablation flag (paper §IX future work).
+
+use crate::cloudlet::SchedulerKind;
+
+/// How interruption victims are chosen among a host's spot VMs.
+///
+/// The paper's implementation is "non-deterministic ... based solely on the
+/// VM list associated with a host" (§IX) = [`VictimPolicy::ListOrder`].
+/// The two alternatives implement the future-work suggestion of targeted
+/// deallocation and are ablated in `benches/ablation_victim.rs`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VictimPolicy {
+    /// Host VM-list order (allocation order) - the paper's behavior.
+    ListOrder,
+    /// Prefer the most recently started spot VMs (least sunk work lost).
+    Youngest,
+    /// Prefer the smallest VMs first (minimizes collateral interruptions
+    /// only if small VMs suffice).
+    SmallestFirst,
+}
+
+/// Engine-wide configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Minimal time between events (`new CloudSim(0.5)`).
+    pub min_dt: f64,
+    /// Cloudlet progress update period (`setSchedulingInterval(1)`).
+    pub scheduling_interval: f64,
+    /// Metrics sampling period (active-instance time series).
+    pub sample_interval: f64,
+    /// Delay between a VM going idle and its destruction
+    /// (`setVmDestructionDelay(1)`).
+    pub vm_destruction_delay: f64,
+    /// Cloudlet scheduling discipline on every VM.
+    pub scheduler: SchedulerKind,
+    /// Broker retry period for waiting/hibernated VMs, in addition to
+    /// deallocation-triggered retries (paper §VII-B(b): a clockTickListener
+    /// "could be used for periodic checks").
+    pub retry_interval: f64,
+    /// Minimum time a hibernated spot stays parked before resubmission
+    /// (paper §IV-B: "hibernated instances must be resubmitted
+    /// *periodically*" - immediate same-instant resumption would make the
+    /// interruption a no-op and ping-pong the same victim).
+    pub resubmit_cooldown: f64,
+    /// Cap on recorded per-VM lifecycle events (observability vs memory).
+    pub max_log_events: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            min_dt: 0.1,
+            scheduling_interval: 1.0,
+            sample_interval: 10.0,
+            vm_destruction_delay: 0.0,
+            scheduler: SchedulerKind::TimeShared,
+            retry_interval: 30.0,
+            resubmit_cooldown: 30.0,
+            max_log_events: 100_000,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.min_dt < 0.0 || !self.min_dt.is_finite() {
+            return Err("min_dt must be finite and >= 0".into());
+        }
+        if self.scheduling_interval <= 0.0 {
+            return Err("scheduling_interval must be > 0".into());
+        }
+        if self.sample_interval <= 0.0 {
+            return Err("sample_interval must be > 0".into());
+        }
+        if self.vm_destruction_delay < 0.0 {
+            return Err("vm_destruction_delay must be >= 0".into());
+        }
+        if self.retry_interval <= 0.0 {
+            return Err("retry_interval must be > 0".into());
+        }
+        if self.resubmit_cooldown < 0.0 {
+            return Err("resubmit_cooldown must be >= 0".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        assert!(EngineConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn rejects_bad_intervals() {
+        let mut c = EngineConfig::default();
+        c.scheduling_interval = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = EngineConfig::default();
+        c.min_dt = f64::NAN;
+        assert!(c.validate().is_err());
+    }
+}

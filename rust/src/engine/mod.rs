@@ -1,0 +1,1041 @@
+//! The simulation engine: ties the DES kernel, the world, the broker, the
+//! allocation policy and the progress backend together and implements the
+//! full spot-instance lifecycle of the paper (Figs. 2-4, §V).
+//!
+//! Event flow (one placement attempt):
+//!
+//! ```text
+//! SubmitVm ─► TryAllocate ─┬─ policy.select_host ──► place (Running)
+//!                          └─ none:
+//!                             ├─ on-demand? policy.select_preemption
+//!                             │    ─► warn victims ─► SpotInterrupt
+//!                             │        (warning_time later) ─► hibernate/
+//!                             │        terminate ─► retry_pending
+//!                             └─ persistent? wait (WaitingExpired armed)
+//!                                else Failed
+//! ```
+//!
+//! Cloudlet progress runs through a swappable [`progress::ProgressBackend`]
+//! over parallel arrays (the paper's measured bottleneck, see §Perf).
+
+pub mod broker;
+pub mod config;
+pub mod progress;
+pub mod report;
+pub mod tag;
+pub mod world;
+
+use crate::allocation::AllocationPolicy;
+use crate::cloudlet::{allocate_mips, Cloudlet, CloudletId, CloudletState};
+use crate::core::{EntityId, Simulation};
+use crate::infra::{DcId, HostId, HostSpec, HostState};
+use crate::metrics::{LifecycleKind, Recorder};
+use crate::vm::{InterruptionBehavior, Vm, VmId, VmState};
+
+pub use broker::Broker;
+pub use config::{EngineConfig, VictimPolicy};
+pub use report::{Report, SpotStats};
+pub use tag::Tag;
+pub use world::World;
+
+/// Window an on-demand VM evicted by a host removal stays requeued.
+const OD_REQUEUE_WINDOW: f64 = 3600.0;
+
+/// The simulation engine (leader object of a run).
+pub struct Engine {
+    pub sim: Simulation<Tag>,
+    pub world: World,
+    pub broker: Broker,
+    pub recorder: Recorder,
+    pub config: EngineConfig,
+    policy: Box<dyn AllocationPolicy>,
+    backend: Box<dyn progress::ProgressBackend>,
+
+    // ---- progress state (parallel arrays over running cloudlets) ----
+    run_list: Vec<CloudletId>,
+    remaining: Vec<f64>,
+    mips: Vec<f64>,
+    /// cloudlet id -> slot in run_list (usize::MAX = absent).
+    slot_of: Vec<usize>,
+    arrays_dirty: bool,
+    last_update: f64,
+    next_tick_time: f64,
+    /// VMs currently occupying hosts (placement order).
+    running_vms: Vec<VmId>,
+    next_sample: f64,
+    finished_scratch: Vec<usize>,
+}
+
+impl Engine {
+    pub fn new(config: EngineConfig, policy: Box<dyn AllocationPolicy>) -> Self {
+        config.validate().expect("invalid engine config");
+        let recorder = Recorder::new(config.max_log_events);
+        Engine {
+            sim: Simulation::new(config.min_dt),
+            world: World::new(),
+            broker: Broker::new(),
+            recorder,
+            config,
+            policy,
+            backend: Box::new(progress::BatchedBackend),
+            run_list: Vec::new(),
+            remaining: Vec::new(),
+            mips: Vec::new(),
+            slot_of: Vec::new(),
+            arrays_dirty: true,
+            last_update: 0.0,
+            next_tick_time: f64::INFINITY,
+            running_vms: Vec::new(),
+            next_sample: 0.0,
+            finished_scratch: Vec::new(),
+        }
+    }
+
+    /// Swap the cloudlet-progress backend (§Perf ablation).
+    pub fn set_backend(&mut self, backend: Box<dyn progress::ProgressBackend>) {
+        self.backend = backend;
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    pub fn policy(&self) -> &dyn AllocationPolicy {
+        self.policy.as_ref()
+    }
+
+    // ------------------------------------------------------------------
+    // setup API (mirrors the paper's Listings 1-9)
+    // ------------------------------------------------------------------
+
+    pub fn add_datacenter(&mut self, name: &str, scheduling_interval: f64) -> DcId {
+        self.world.add_datacenter(name, scheduling_interval)
+    }
+
+    /// Add a host that is active from time 0.
+    pub fn add_host(&mut self, dc: DcId, spec: HostSpec) -> HostId {
+        self.world.add_host(dc, spec, self.sim.clock())
+    }
+
+    /// Add a host that becomes active at absolute time `t` (trace machine
+    /// ADD event).
+    pub fn add_host_at(&mut self, dc: DcId, spec: HostSpec, t: f64) -> HostId {
+        let h = self.world.add_host(dc, spec, t);
+        if t > self.sim.clock() {
+            self.world.hosts[h].state = HostState::Removed; // dormant until HostAdd
+            self.sim.schedule_at(t, EntityId::Kernel, EntityId::Datacenter(dc), Tag::HostAdd(h));
+        }
+        h
+    }
+
+    /// Schedule removal of a host at absolute time `t` (trace REMOVE event).
+    pub fn remove_host_at(&mut self, host: HostId, t: f64) {
+        let dc = self.world.hosts[host].dc;
+        self.sim.schedule_at(t, EntityId::Kernel, EntityId::Datacenter(dc), Tag::HostRemove(host));
+    }
+
+    /// Submit a VM (fires at its submission delay). Mirrors
+    /// `broker0.submitVm(vm)` + `setSubmissionDelay`.
+    pub fn submit_vm(&mut self, vm: Vm) -> VmId {
+        let delay = vm.submission_delay;
+        let id = self.world.add_vm(vm);
+        self.sim.schedule(delay, EntityId::Broker(0), EntityId::Broker(0), Tag::SubmitVm(id));
+        id
+    }
+
+    /// Submit a cloudlet bound to an existing VM (`submitCloudlet`).
+    pub fn submit_cloudlet(&mut self, cl: Cloudlet) -> CloudletId {
+        let id = self.world.add_cloudlet(cl);
+        self.sim.schedule(0.0, EntityId::Broker(0), EntityId::Broker(0), Tag::SubmitCloudlet(id));
+        id
+    }
+
+    pub fn terminate_at(&mut self, t: f64) {
+        self.sim.terminate_at(t);
+    }
+
+    // ------------------------------------------------------------------
+    // run loop
+    // ------------------------------------------------------------------
+
+    /// Run to completion and build the report.
+    pub fn run(&mut self) -> Report {
+        let wall_start = std::time::Instant::now();
+        self.sample(); // t = 0 snapshot
+        while let Some(ev) = self.sim.next_event() {
+            self.handle(ev.data);
+        }
+        // Close the books at the final clock.
+        let end = self.sim.clock();
+        self.apply_progress(end);
+        report::build(self, wall_start.elapsed())
+    }
+
+    fn handle(&mut self, tag: Tag) {
+        match tag {
+            Tag::SubmitVm(v) => self.on_submit_vm(v),
+            Tag::TryAllocate(v) => {
+                self.world.vms[v].retry_armed = false;
+                self.try_allocate(v, false);
+            }
+            Tag::WaitingExpired(v) => self.on_waiting_expired(v),
+            Tag::SpotInterrupt(v) => self.on_spot_interrupt(v),
+            Tag::HibernationTimeout(v) => self.on_hibernation_timeout(v),
+            Tag::VmIdleCheck(v) => self.on_vm_idle_check(v),
+            Tag::SubmitCloudlet(c) => self.on_submit_cloudlet(c),
+            Tag::ProgressTick => self.on_progress_tick(),
+            Tag::Sample => self.on_sample(),
+            Tag::HostAdd(h) => self.on_host_add(h),
+            Tag::HostRemove(h) => self.on_host_remove(h),
+            Tag::End => {}
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // VM lifecycle
+    // ------------------------------------------------------------------
+
+    fn on_submit_vm(&mut self, v: VmId) {
+        let now = self.sim.clock();
+        self.world.vms[v].submitted_at = Some(now);
+        self.recorder.log(now, v, LifecycleKind::Submitted);
+        self.try_allocate(v, true);
+    }
+
+    /// Attempt to place `v`. `first` marks the initial submission attempt
+    /// (controls persistent-wait vs immediate failure semantics).
+    fn try_allocate(&mut self, v: VmId, first: bool) -> bool {
+        let now = self.sim.clock();
+        let state = self.world.vms[v].state;
+        if !matches!(state, VmState::Waiting | VmState::Hibernated) {
+            return false; // stale retry event
+        }
+        self.recorder.alloc_attempts += 1;
+
+        if let Some(host) = self.policy.select_host(&self.world, v, now) {
+            self.place(v, host);
+            return true;
+        }
+        self.recorder.alloc_failures += 1;
+        self.recorder.log(now, v, LifecycleKind::AllocationFailed);
+
+        // On-demand contention: interrupt spot instances to make room
+        // (paper §V-C). The VM then waits for the freed capacity.
+        // Preemption is *armed* per VM: while a previously-triggered victim
+        // set is still vacating (warning period), retries must not warn
+        // further spots - otherwise every deallocation event cascades into
+        // fresh interruptions (measured 20x over-interruption without this).
+        let is_od = !self.world.vms[v].is_spot();
+        let mut warned_any = false;
+        let mut max_warning = 0.0f64;
+        let can_arm = match self.world.vms[v].preempt_armed_at {
+            None => true,
+            Some(armed_at) => now >= armed_at + self.preempt_rearm_delay(),
+        };
+        if is_od && can_arm {
+            if let Some((_host, victims)) = self.policy.select_preemption(&self.world, v, now) {
+                for victim in victims {
+                    if let Some(w) = self.warn_spot(victim) {
+                        warned_any = true;
+                        max_warning = max_warning.max(w);
+                    }
+                }
+                if warned_any {
+                    self.world.vms[v].preempt_armed_at = Some(now);
+                }
+            }
+        }
+
+        match state {
+            VmState::Waiting => {
+                let vm = &self.world.vms[v];
+                let can_wait = vm.persistent && vm.waiting_time > 0.0;
+                if first && (can_wait || warned_any) {
+                    // Persistent request (or one whose capacity is being
+                    // cleared): park in the waiting queue.
+                    let base = if can_wait { vm.waiting_time } else { 0.0 };
+                    let deadline =
+                        now + base.max(max_warning + 2.0 * self.config.min_dt.max(1e-3));
+                    self.broker.enqueue_waiting(v, deadline);
+                    self.sim.schedule_at(
+                        deadline,
+                        EntityId::Broker(0),
+                        EntityId::Broker(0),
+                        Tag::WaitingExpired(v),
+                    );
+                } else if first {
+                    self.fail(v, LifecycleKind::Failed);
+                }
+                if warned_any {
+                    // Backstop retry shortly after the victims vacate.
+                    self.sim.schedule(
+                        max_warning + self.config.min_dt.max(1e-3),
+                        EntityId::Broker(0),
+                        EntityId::Broker(0),
+                        Tag::TryAllocate(v),
+                    );
+                }
+            }
+            VmState::Hibernated => {
+                // Stays on the resubmitting list; HibernationTimeout is
+                // armed, and one (deduplicated) periodic backstop retry
+                // keeps probing even if no deallocation event fires
+                // (paper §VII-B(b): periodic clock-tick checks).
+                if !self.world.vms[v].retry_armed {
+                    self.world.vms[v].retry_armed = true;
+                    self.sim.schedule(
+                        self.config.retry_interval,
+                        EntityId::Broker(0),
+                        EntityId::Broker(0),
+                        Tag::TryAllocate(v),
+                    );
+                }
+            }
+            _ => unreachable!(),
+        }
+        false
+    }
+
+    /// Place `v` on `host` and start/resume its cloudlets.
+    fn place(&mut self, v: VmId, host: HostId) {
+        let now = self.sim.clock();
+        self.apply_progress(now);
+
+        let spec = self.world.vms[v].spec;
+        self.world.hosts[host].commit(v, spec.pes, spec.ram, spec.bw, spec.storage);
+
+        let resumed = self.world.vms[v].state == VmState::Hibernated;
+        self.world.vms[v].transition(VmState::Running);
+        self.world.vms[v].preempt_armed_at = None;
+        self.world.vms[v].host = Some(host);
+        self.world.vms[v].history.record_start(host, now);
+        self.world.vms[v].hibernated_at = None;
+        self.running_vms.push(v);
+
+        if resumed {
+            self.broker.remove_resubmitting(v);
+            self.recorder.redeployments += 1;
+            self.recorder.log(now, v, LifecycleKind::Resumed);
+        } else {
+            self.broker.remove_waiting(v);
+            self.recorder.log(now, v, LifecycleKind::Allocated);
+        }
+
+        // Start queued cloudlets / resume paused ones.
+        let cls = self.world.vms[v].cloudlets.clone();
+        let mut any_active = false;
+        for c in cls {
+            let cl = &mut self.world.cloudlets[c];
+            match cl.state {
+                CloudletState::Queued | CloudletState::Paused => {
+                    cl.state = CloudletState::Running;
+                    if cl.started_at.is_none() {
+                        cl.started_at = Some(now);
+                    }
+                    any_active = true;
+                }
+                _ => {}
+            }
+        }
+        self.arrays_dirty = true;
+        if any_active {
+            self.arm_tick(now);
+        } else if self.world.vms[v].cloudlets.is_empty() {
+            // VM with no workload: subject to destruction delay directly.
+            self.sim.schedule(
+                self.config.vm_destruction_delay,
+                EntityId::Broker(0),
+                EntityId::Broker(0),
+                Tag::VmIdleCheck(v),
+            );
+        } else {
+            // All cloudlets already done (e.g. resubmitted after finish).
+            self.sim.schedule(
+                self.config.vm_destruction_delay,
+                EntityId::Broker(0),
+                EntityId::Broker(0),
+                Tag::VmIdleCheck(v),
+            );
+        }
+    }
+
+    /// How long a VM's triggered preemption stays armed before it may warn
+    /// additional spots (covers the longest plausible warning period).
+    fn preempt_rearm_delay(&self) -> f64 {
+        // One scheduling interval beyond the engine min_dt floor keeps
+        // retries from cascading while victims vacate.
+        self.config.scheduling_interval + 2.0 * self.config.min_dt.max(1e-3) + 120.0
+    }
+
+    /// Issue the interruption warning to a spot VM. Returns the warning
+    /// time when a warning was issued.
+    fn warn_spot(&mut self, v: VmId) -> Option<f64> {
+        let now = self.sim.clock();
+        let vm = &self.world.vms[v];
+        if vm.state != VmState::Running || !vm.is_spot() {
+            return None;
+        }
+        let cfg = vm.spot.expect("spot vm without config");
+        self.world.vms[v].transition(VmState::InterruptWarned);
+        self.recorder.log(now, v, LifecycleKind::InterruptWarned);
+        self.sim.schedule(
+            cfg.warning_time,
+            EntityId::Datacenter(0),
+            EntityId::Broker(0),
+            Tag::SpotInterrupt(v),
+        );
+        Some(cfg.warning_time)
+    }
+
+    /// The warning period elapsed: actually interrupt the spot VM.
+    fn on_spot_interrupt(&mut self, v: VmId) {
+        let now = self.sim.clock();
+        if self.world.vms[v].state != VmState::InterruptWarned {
+            return; // finished or destroyed during the grace period
+        }
+        self.apply_progress(now);
+        self.recorder.interruptions += 1;
+        self.world.vms[v].interruptions += 1;
+
+        let cfg = self.world.vms[v].spot.expect("spot vm without config");
+        self.remove_from_host(v);
+        match cfg.behavior {
+            InterruptionBehavior::Hibernate => {
+                self.world.vms[v].transition(VmState::Hibernated);
+                self.world.vms[v].hibernated_at = Some(now);
+                self.pause_cloudlets(v);
+                self.broker.enqueue_resubmitting(v);
+                self.recorder.hibernations += 1;
+                self.recorder.log(now, v, LifecycleKind::Hibernated);
+                self.sim.schedule(
+                    cfg.hibernation_timeout,
+                    EntityId::Broker(0),
+                    EntityId::Broker(0),
+                    Tag::HibernationTimeout(v),
+                );
+            }
+            InterruptionBehavior::Terminate => {
+                self.world.vms[v].transition(VmState::Terminated);
+                self.world.vms[v].stopped_at = Some(now);
+                self.cancel_cloudlets(v);
+                self.broker.finished.push(v);
+                self.recorder.spot_terminations += 1;
+                self.recorder.log(now, v, LifecycleKind::Terminated);
+            }
+        }
+        self.retry_pending();
+    }
+
+    fn on_hibernation_timeout(&mut self, v: VmId) {
+        let now = self.sim.clock();
+        let vm = &self.world.vms[v];
+        if vm.state != VmState::Hibernated {
+            return; // resumed (and possibly re-hibernated: new timeout armed)
+        }
+        let cfg = vm.spot.expect("spot vm without config");
+        let hib_at = vm.hibernated_at.expect("hibernated without timestamp");
+        if now + 1e-9 < hib_at + cfg.hibernation_timeout {
+            return; // stale timeout from an earlier hibernation
+        }
+        self.world.vms[v].transition(VmState::Terminated);
+        self.world.vms[v].stopped_at = Some(now);
+        self.cancel_cloudlets(v);
+        self.broker.remove_resubmitting(v);
+        self.broker.finished.push(v);
+        self.recorder.spot_terminations += 1;
+        self.recorder.log(now, v, LifecycleKind::HibernationTimedOut);
+    }
+
+    fn on_waiting_expired(&mut self, v: VmId) {
+        let now = self.sim.clock();
+        if self.world.vms[v].state != VmState::Waiting {
+            return;
+        }
+        // Only expire if the *current* deadline passed (it may have been
+        // extended by a preemption-wait).
+        let deadline = self
+            .broker
+            .waiting
+            .iter()
+            .find(|&&(vm, _)| vm == v)
+            .map(|&(_, d)| d);
+        match deadline {
+            Some(d) if now + 1e-9 >= d => {
+                self.broker.remove_waiting(v);
+                self.recorder.log(now, v, LifecycleKind::WaitingExpired);
+                self.fail(v, LifecycleKind::Failed);
+            }
+            _ => {}
+        }
+    }
+
+    fn fail(&mut self, v: VmId, kind: LifecycleKind) {
+        let now = self.sim.clock();
+        self.world.vms[v].transition(VmState::Failed);
+        self.world.vms[v].stopped_at = Some(now);
+        self.cancel_cloudlets(v);
+        self.broker.finished.push(v);
+        self.recorder.log(now, v, kind);
+    }
+
+    /// Destruction-delay check: destroy the VM if it is still idle.
+    fn on_vm_idle_check(&mut self, v: VmId) {
+        let now = self.sim.clock();
+        let vm = &self.world.vms[v];
+        if !vm.state.on_host() {
+            return;
+        }
+        let all_done = vm.cloudlets.iter().all(|&c| self.world.cloudlets[c].is_done());
+        if !all_done && !vm.cloudlets.is_empty() {
+            return; // new work arrived during the delay
+        }
+        self.apply_progress(now);
+        self.remove_from_host(v);
+        self.world.vms[v].transition(VmState::Finished);
+        self.world.vms[v].stopped_at = Some(now);
+        self.broker.finished.push(v);
+        self.recorder.log(now, v, LifecycleKind::Finished);
+        self.retry_pending();
+    }
+
+    /// Release host resources and close the current history interval.
+    fn remove_from_host(&mut self, v: VmId) {
+        let now = self.sim.clock();
+        let host = self.world.vms[v].host.take().expect("vm not on a host");
+        let spec = self.world.vms[v].spec;
+        self.world.hosts[host].release(v, spec.pes, spec.ram, spec.bw, spec.storage);
+        self.world.vms[v].history.record_stop(now);
+        if let Some(i) = self.running_vms.iter().position(|&x| x == v) {
+            self.running_vms.swap_remove(i);
+        }
+        self.arrays_dirty = true;
+    }
+
+    fn pause_cloudlets(&mut self, v: VmId) {
+        let cls = self.world.vms[v].cloudlets.clone();
+        for c in cls {
+            let cl = &mut self.world.cloudlets[c];
+            if cl.state == CloudletState::Running {
+                cl.state = CloudletState::Paused;
+            }
+        }
+        self.arrays_dirty = true;
+    }
+
+    fn cancel_cloudlets(&mut self, v: VmId) {
+        let now = self.sim.clock();
+        let cls = self.world.vms[v].cloudlets.clone();
+        for c in cls {
+            let cl = &mut self.world.cloudlets[c];
+            if !cl.is_done() {
+                cl.state = CloudletState::Canceled;
+                cl.finished_at = Some(now);
+            }
+        }
+        self.arrays_dirty = true;
+    }
+
+    /// Retry queued requests after capacity freed up. Order: waiting
+    /// on-demand, hibernated spots, waiting spots (see [`Broker`]).
+    /// Freshly hibernated spots are skipped until their resubmission
+    /// cooldown elapses (periodic resubmission, paper §IV-B) - their
+    /// backstop retry event picks them up.
+    fn retry_pending(&mut self) {
+        let now = self.sim.clock();
+        let cooldown = self.config.resubmit_cooldown;
+        let vms = &self.world.vms;
+        let order = self.broker.retry_order(|v| vms[v].is_spot());
+        for v in order {
+            if let (VmState::Hibernated, Some(h)) =
+                (self.world.vms[v].state, self.world.vms[v].hibernated_at)
+            {
+                if now < h + cooldown {
+                    // Ensure a retry fires once the cooldown elapses.
+                    if !self.world.vms[v].retry_armed {
+                        self.world.vms[v].retry_armed = true;
+                        self.sim.schedule(
+                            (h + cooldown - now).max(self.sim.min_dt()),
+                            EntityId::Broker(0),
+                            EntityId::Broker(0),
+                            Tag::TryAllocate(v),
+                        );
+                    }
+                    continue;
+                }
+            }
+            self.try_allocate(v, false);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // cloudlets & progress
+    // ------------------------------------------------------------------
+
+    fn on_submit_cloudlet(&mut self, c: CloudletId) {
+        let now = self.sim.clock();
+        let v = self.world.cloudlets[c].vm;
+        match self.world.vms[v].state {
+            VmState::Running | VmState::InterruptWarned => {
+                self.apply_progress(now);
+                let cl = &mut self.world.cloudlets[c];
+                cl.state = CloudletState::Running;
+                cl.started_at = Some(now);
+                self.arrays_dirty = true;
+                self.arm_tick(now);
+            }
+            VmState::Finished | VmState::Terminated | VmState::Failed => {
+                let cl = &mut self.world.cloudlets[c];
+                cl.state = CloudletState::Canceled;
+                cl.finished_at = Some(now);
+            }
+            _ => {} // stays Queued until the VM is placed
+        }
+    }
+
+    /// Rebuild the parallel progress arrays from current world state.
+    fn rebuild_arrays(&mut self) {
+        self.run_list.clear();
+        self.remaining.clear();
+        if self.slot_of.len() < self.world.cloudlets.len() {
+            self.slot_of.resize(self.world.cloudlets.len(), usize::MAX);
+        }
+        for s in self.slot_of.iter_mut() {
+            *s = usize::MAX;
+        }
+        for &v in &self.running_vms {
+            for &c in &self.world.vms[v].cloudlets {
+                let cl = &self.world.cloudlets[c];
+                if cl.state == CloudletState::Running {
+                    self.slot_of[c] = self.run_list.len();
+                    self.run_list.push(c);
+                    self.remaining.push(cl.remaining_mi);
+                }
+            }
+        }
+        self.mips.resize(self.run_list.len(), 0.0);
+        self.arrays_dirty = false;
+    }
+
+    /// Recompute per-cloudlet MIPS from each running VM's scheduler and the
+    /// cloudlets' utilization models at time `t`.
+    fn recompute_mips(&mut self, t: f64) {
+        for m in self.mips.iter_mut() {
+            *m = 0.0;
+        }
+        let kind = self.config.scheduler;
+        for &v in &self.running_vms {
+            let vm = &self.world.vms[v];
+            let active: Vec<(CloudletId, u32)> = vm
+                .cloudlets
+                .iter()
+                .filter(|&&c| self.world.cloudlets[c].state == CloudletState::Running)
+                .map(|&c| (c, self.world.cloudlets[c].pes))
+                .collect();
+            if active.is_empty() {
+                continue;
+            }
+            for (c, share) in allocate_mips(kind, vm.spec.total_mips(), vm.spec.pes, &active) {
+                let slot = self.slot_of[c];
+                if slot != usize::MAX {
+                    self.mips[slot] = share * self.world.cloudlets[c].utilization.at(t);
+                }
+            }
+        }
+    }
+
+    /// Advance all running cloudlets to `now`; handle completions.
+    fn apply_progress(&mut self, now: f64) {
+        if self.arrays_dirty {
+            // Write back current remaining before rebuilding (slots may be
+            // dropped).
+            for (i, &c) in self.run_list.iter().enumerate() {
+                if i < self.remaining.len() {
+                    self.world.cloudlets[c].remaining_mi = self.remaining[i];
+                }
+            }
+            self.rebuild_arrays();
+        }
+        let dt = now - self.last_update;
+        self.last_update = now;
+        if dt <= 0.0 || self.run_list.is_empty() {
+            return;
+        }
+        self.recompute_mips(now - dt);
+        self.finished_scratch.clear();
+        let mut finished = std::mem::take(&mut self.finished_scratch);
+        self.backend.step(&mut self.remaining, &self.mips, dt, &mut finished);
+
+        // Write back remaining MI (cheap; keeps structs authoritative).
+        for (i, &c) in self.run_list.iter().enumerate() {
+            self.world.cloudlets[c].remaining_mi = self.remaining[i];
+        }
+
+        for &slot in &finished {
+            let c = self.run_list[slot];
+            let cl = &mut self.world.cloudlets[c];
+            cl.state = CloudletState::Finished;
+            cl.finished_at = Some(now);
+            let v = cl.vm;
+            let all_done =
+                self.world.vms[v].cloudlets.iter().all(|&cc| self.world.cloudlets[cc].is_done());
+            if all_done {
+                self.sim.schedule(
+                    self.config.vm_destruction_delay,
+                    EntityId::Broker(0),
+                    EntityId::Broker(0),
+                    Tag::VmIdleCheck(v),
+                );
+            }
+        }
+        if !finished.is_empty() {
+            self.arrays_dirty = true;
+        }
+        finished.clear();
+        self.finished_scratch = finished;
+    }
+
+    /// Arm a progress tick no later than the earliest predicted completion
+    /// (clamped to the scheduling interval).
+    fn arm_tick(&mut self, now: f64) {
+        if self.arrays_dirty {
+            self.apply_progress(now); // rebuild + zero-dt bookkeeping
+        }
+        if self.run_list.is_empty() {
+            return;
+        }
+        self.recompute_mips(now);
+        let mut horizon = self.config.scheduling_interval;
+        for (r, m) in self.remaining.iter().zip(&self.mips) {
+            if *r > 0.0 && *m > 0.0 {
+                horizon = horizon.min(r / m);
+            }
+        }
+        let t = now + horizon.max(self.sim.min_dt().max(1e-6));
+        if t < self.next_tick_time - 1e-9 {
+            self.next_tick_time = t;
+            self.sim.schedule_at(t, EntityId::Kernel, EntityId::Kernel, Tag::ProgressTick);
+        }
+    }
+
+    fn on_progress_tick(&mut self) {
+        let now = self.sim.clock();
+        self.next_tick_time = f64::INFINITY;
+        self.apply_progress(now);
+        self.arm_tick(now);
+    }
+
+    // ------------------------------------------------------------------
+    // hosts (trace machine events)
+    // ------------------------------------------------------------------
+
+    fn on_host_add(&mut self, h: HostId) {
+        let now = self.sim.clock();
+        let host = &mut self.world.hosts[h];
+        host.state = HostState::Active;
+        host.created_at = now;
+        host.removed_at = None;
+        self.retry_pending();
+    }
+
+    fn on_host_remove(&mut self, h: HostId) {
+        let now = self.sim.clock();
+        if !self.world.hosts[h].is_active() {
+            return;
+        }
+        self.apply_progress(now);
+        let victims: Vec<VmId> = self.world.hosts[h].vms.clone();
+        for v in victims {
+            let state = self.world.vms[v].state;
+            if !state.on_host() {
+                continue;
+            }
+            self.remove_from_host(v);
+            let is_spot = self.world.vms[v].is_spot();
+            if is_spot {
+                // Machine loss = interruption without warning.
+                self.recorder.interruptions += 1;
+                self.world.vms[v].interruptions += 1;
+                let cfg = self.world.vms[v].spot.expect("spot vm without config");
+                match cfg.behavior {
+                    InterruptionBehavior::Hibernate => {
+                        self.world.vms[v].transition(VmState::Hibernated);
+                        self.world.vms[v].hibernated_at = Some(now);
+                        self.pause_cloudlets(v);
+                        self.broker.enqueue_resubmitting(v);
+                        self.recorder.hibernations += 1;
+                        self.recorder.log(now, v, LifecycleKind::Hibernated);
+                        self.sim.schedule(
+                            cfg.hibernation_timeout,
+                            EntityId::Broker(0),
+                            EntityId::Broker(0),
+                            Tag::HibernationTimeout(v),
+                        );
+                    }
+                    InterruptionBehavior::Terminate => {
+                        self.world.vms[v].transition(VmState::Terminated);
+                        self.world.vms[v].stopped_at = Some(now);
+                        self.cancel_cloudlets(v);
+                        self.broker.finished.push(v);
+                        self.recorder.spot_terminations += 1;
+                        self.recorder.log(now, v, LifecycleKind::Terminated);
+                    }
+                }
+            } else {
+                // On-demand: requeue and wait for capacity elsewhere.
+                self.world.vms[v].transition(VmState::Waiting);
+                self.pause_cloudlets(v);
+                let deadline = now + self.world.vms[v].waiting_time.max(OD_REQUEUE_WINDOW);
+                self.broker.enqueue_waiting(v, deadline);
+                self.sim.schedule_at(
+                    deadline,
+                    EntityId::Broker(0),
+                    EntityId::Broker(0),
+                    Tag::WaitingExpired(v),
+                );
+            }
+        }
+        self.world.hosts[h].state = HostState::Removed;
+        self.world.hosts[h].removed_at = Some(now);
+        self.retry_pending();
+    }
+
+    // ------------------------------------------------------------------
+    // metrics
+    // ------------------------------------------------------------------
+
+    fn sample(&mut self) {
+        let now = self.sim.clock();
+        let (od_run, spot_run) = self.world.count_by_state(VmState::Running);
+        let (od_warn, spot_warn) = self.world.count_by_state(VmState::InterruptWarned);
+        let (_, hib) = self.world.count_by_state(VmState::Hibernated);
+        let (od_wait, spot_wait) = self.world.count_by_state(VmState::Waiting);
+        let (used_pes, total_pes) = self.world.pe_usage();
+        let (used_ram, total_ram) = self.world.ram_usage();
+        self.recorder.series.push(
+            now,
+            vec![
+                (od_run + od_warn) as f64,
+                (spot_run + spot_warn) as f64,
+                hib as f64,
+                (od_wait + spot_wait) as f64,
+                used_pes as f64,
+                total_pes as f64,
+                if total_ram > 0.0 { used_ram / total_ram } else { 0.0 },
+                if total_pes > 0 { used_pes as f64 / total_pes as f64 } else { 0.0 },
+            ],
+        );
+        self.next_sample = now + self.config.sample_interval;
+        self.sim.schedule_at(
+            self.next_sample,
+            EntityId::Kernel,
+            EntityId::Kernel,
+            Tag::Sample,
+        );
+    }
+
+    fn on_sample(&mut self) {
+        // Only keep sampling while there is activity left; otherwise the
+        // self-rearming sample would keep the simulation alive forever.
+        let active = !self.running_vms.is_empty()
+            || self.broker.queue_depth() > 0
+            || self.sim.pending_events() > 0;
+        if active {
+            self.sample();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::FirstFit;
+    use crate::vm::{SpotConfig, VmSpec};
+
+    fn engine() -> Engine {
+        let mut cfg = EngineConfig::default();
+        cfg.min_dt = 0.1;
+        cfg.vm_destruction_delay = 0.0;
+        cfg.resubmit_cooldown = 1.0; // tight timing expectations in tests
+        let mut e = Engine::new(cfg, Box::new(FirstFit::new()));
+        let dc = e.add_datacenter("dc0", 1.0);
+        e.add_host(dc, HostSpec::new(8, 1000.0, 16_384.0, 10_000.0, 1_000_000.0));
+        e
+    }
+
+    /// One on-demand VM with one cloudlet runs to completion.
+    #[test]
+    fn simple_run_finishes_cloudlet() {
+        let mut e = engine();
+        let vm = e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 2)));
+        // 20_000 MI at 2000 MIPS -> 10 s.
+        e.submit_cloudlet(Cloudlet::new(0, 20_000.0, 2).with_vm(vm));
+        let report = e.run();
+        assert_eq!(e.world.vms[vm].state, VmState::Finished);
+        let cl = &e.world.cloudlets[0];
+        assert_eq!(cl.state, CloudletState::Finished);
+        assert!((cl.finished_at.unwrap() - 10.0).abs() < 0.2, "{:?}", cl.finished_at);
+        assert_eq!(report.spot.total_spot, 0);
+    }
+
+    /// Spot VM is preempted by an on-demand VM and terminated.
+    #[test]
+    fn on_demand_preempts_spot_terminate() {
+        let mut e = engine();
+        let cfg = SpotConfig::terminate().with_min_running(0.0).with_warning(1.0);
+        let spot = e.submit_vm(Vm::spot(0, VmSpec::new(1000.0, 8), cfg));
+        e.submit_cloudlet(Cloudlet::new(0, 1_000_000.0, 8).with_vm(spot));
+        // On-demand arrives at t=5 and needs the whole host.
+        let od = e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 8)).with_delay(5.0));
+        e.submit_cloudlet(Cloudlet::new(0, 8_000.0, 8).with_vm(od));
+        e.terminate_at(100.0);
+        let report = e.run();
+        assert_eq!(e.world.vms[spot].state, VmState::Terminated);
+        assert_eq!(e.world.vms[od].state, VmState::Finished);
+        assert_eq!(report.spot.interruptions, 1);
+        assert_eq!(e.world.vms[spot].interruptions, 1);
+        // OD placed right after the 1 s warning.
+        let od_start = e.world.vms[od].history.first_start().unwrap();
+        assert!(od_start >= 6.0 - 1e-6 && od_start < 8.0, "od_start {od_start}");
+    }
+
+    /// Hibernated spot resumes when the on-demand VM finishes.
+    #[test]
+    fn spot_hibernates_and_resumes() {
+        let mut e = engine();
+        let cfg = SpotConfig::hibernate()
+            .with_min_running(0.0)
+            .with_warning(0.0)
+            .with_hibernation_timeout(1_000.0);
+        let spot = e.submit_vm(Vm::spot(0, VmSpec::new(1000.0, 8), cfg).with_persistent(1_000.0));
+        // 80_000 MI at 8000 MIPS -> 10 s of work.
+        e.submit_cloudlet(Cloudlet::new(0, 80_000.0, 8).with_vm(spot));
+        // OD occupies the host from t=5 for 8 s (64_000 MI).
+        let od = e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 8)).with_delay(5.0));
+        e.submit_cloudlet(Cloudlet::new(0, 64_000.0, 8).with_vm(od));
+        e.terminate_at(200.0);
+        let report = e.run();
+
+        assert_eq!(e.world.vms[od].state, VmState::Finished);
+        assert_eq!(e.world.vms[spot].state, VmState::Finished, "spot resumed and finished");
+        assert_eq!(report.spot.interruptions, 1);
+        assert_eq!(report.spot.redeployments, 1);
+        // The spot executed ~5 s, hibernated ~8 s, then finished remaining ~5 s.
+        let gaps = e.world.vms[spot].history.interruption_durations();
+        assert_eq!(gaps.len(), 1);
+        assert!(gaps[0] >= 7.0 && gaps[0] <= 10.0, "gap {:?}", gaps);
+        let avg = e.world.vms[spot].history.average_interruption_time().unwrap();
+        assert!(avg > 0.0);
+    }
+
+    /// Hibernation timeout terminates a spot that never got capacity back.
+    #[test]
+    fn hibernation_timeout_terminates() {
+        let mut e = engine();
+        let cfg = SpotConfig::hibernate()
+            .with_min_running(0.0)
+            .with_warning(0.0)
+            .with_hibernation_timeout(20.0);
+        let spot = e.submit_vm(Vm::spot(0, VmSpec::new(1000.0, 8), cfg));
+        e.submit_cloudlet(Cloudlet::new(0, 1_000_000.0, 8).with_vm(spot));
+        // OD hogs the host for a very long time.
+        let od = e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 8)).with_delay(5.0));
+        e.submit_cloudlet(Cloudlet::new(0, 2_000_000.0, 8).with_vm(od));
+        e.terminate_at(100.0);
+        e.run();
+        assert_eq!(e.world.vms[spot].state, VmState::Terminated);
+        // Terminated at hibernation + timeout = 5 + 20 = 25.
+        let stopped = e.world.vms[spot].stopped_at.unwrap();
+        assert!((stopped - 25.0).abs() < 1.0, "stopped {stopped}");
+    }
+
+    /// Non-persistent VM fails immediately when nothing fits; persistent
+    /// VM waits and then expires.
+    #[test]
+    fn waiting_and_expiry() {
+        let mut e = engine();
+        // Occupy the host fully with on-demand work for 50 s.
+        let od = e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 8)));
+        e.submit_cloudlet(Cloudlet::new(0, 400_000.0, 8).with_vm(od));
+
+        let fail_fast = e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 4)).with_delay(1.0));
+        let waits = e
+            .submit_vm(Vm::spot(0, VmSpec::new(1000.0, 4), SpotConfig::hibernate())
+                .with_persistent(10.0)
+                .with_delay(1.0));
+        e.terminate_at(200.0);
+        e.run();
+        // No preemption possible (no spot victims; the od VM is not
+        // interruptible), so the od request fails fast.
+        assert_eq!(e.world.vms[fail_fast].state, VmState::Failed);
+        // The persistent spot waited 10 s (< 50) and expired.
+        assert_eq!(e.world.vms[waits].state, VmState::Failed);
+        let stopped = e.world.vms[waits].stopped_at.unwrap();
+        assert!((stopped - 11.0).abs() < 1.0, "stopped {stopped}");
+    }
+
+    /// Persistent request is fulfilled when capacity frees up in time.
+    #[test]
+    fn persistent_request_fulfilled_later() {
+        let mut e = engine();
+        let od = e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 8)));
+        // 10 s of work.
+        e.submit_cloudlet(Cloudlet::new(0, 80_000.0, 8).with_vm(od));
+        let late = e.submit_vm(
+            Vm::spot(0, VmSpec::new(1000.0, 4), SpotConfig::hibernate())
+                .with_persistent(60.0)
+                .with_delay(1.0),
+        );
+        e.submit_cloudlet(Cloudlet::new(0, 4_000.0, 4).with_vm(late));
+        e.terminate_at(100.0);
+        e.run();
+        assert_eq!(e.world.vms[late].state, VmState::Finished);
+        let start = e.world.vms[late].history.first_start().unwrap();
+        assert!(start >= 10.0 - 1e-6, "start {start}");
+    }
+
+    /// Host removal evicts VMs: spot per behavior, on-demand requeues.
+    #[test]
+    fn host_removal_evicts() {
+        let mut e = engine();
+        // Second host so the on-demand VM can land somewhere afterwards.
+        let dc = 0;
+        let h2 = e.add_host_at(dc, HostSpec::new(8, 1000.0, 16_384.0, 10_000.0, 1_000_000.0), 20.0);
+        let od = e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 4)));
+        e.submit_cloudlet(Cloudlet::new(0, 400_000.0, 4).with_vm(od));
+        let spot = e.submit_vm(Vm::spot(
+            0,
+            VmSpec::new(1000.0, 2),
+            SpotConfig::terminate().with_min_running(0.0),
+        ));
+        e.submit_cloudlet(Cloudlet::new(0, 400_000.0, 2).with_vm(spot));
+        e.remove_host_at(0, 10.0);
+        e.terminate_at(400.0);
+        let report = e.run();
+
+        assert_eq!(e.world.vms[spot].state, VmState::Terminated);
+        // OD requeued at t=10, resumed on host 2 when it appears at t=20.
+        assert_eq!(e.world.vms[od].state, VmState::Finished);
+        let intervals = e.world.vms[od].history.intervals();
+        assert_eq!(intervals.len(), 2);
+        assert_eq!(intervals[1].host, h2);
+        assert!(report.spot.interruptions >= 1);
+    }
+
+    /// Deterministic: identical seeds/config produce identical reports.
+    #[test]
+    fn deterministic_event_order() {
+        let run = || {
+            let mut e = engine();
+            for i in 0..10 {
+                let vm = e.submit_vm(
+                    Vm::on_demand(0, VmSpec::new(1000.0, 1)).with_delay(i as f64 * 0.3),
+                );
+                e.submit_cloudlet(Cloudlet::new(0, 10_000.0, 1).with_vm(vm));
+            }
+            e.terminate_at(500.0);
+            let r = e.run();
+            (r.clock_end, r.events_processed, e.sim.processed_events())
+        };
+        assert_eq!(run(), run());
+    }
+}

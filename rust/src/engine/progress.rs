@@ -1,0 +1,144 @@
+//! Cloudlet progress backends - the simulation's hot loop.
+//!
+//! The paper measured cloudlet execution updates as the dominant cost of
+//! trace-scale runs and named parallelization as future work (§VII-D.1).
+//! The engine therefore treats the per-tick progress update as a swappable
+//! backend and ships three implementations ablated in
+//! `benches/perf_progress.rs`:
+//!
+//! - [`NaiveBackend`]: per-object scalar walk (the CloudSim-style baseline),
+//! - [`BatchedBackend`]: tight chunked loop over parallel arrays
+//!   (autovectorizes; the pure-rust production default),
+//! - `runtime::PjrtStep` via [`PjrtBackend`]: executes the AOT-compiled
+//!   `cloudlet_step` artifact (the L1 pallas kernel) through PJRT.
+
+/// Advances `remaining -= mips * dt` (clamped at 0) over parallel arrays;
+/// pushes indices of slots that crossed to completion into `finished`.
+pub trait ProgressBackend {
+    fn name(&self) -> &'static str;
+    fn step(&mut self, remaining: &mut [f64], mips: &[f64], dt: f64, finished: &mut Vec<usize>);
+}
+
+/// Per-element scalar walk with per-slot branches - mirrors the per-object
+/// update loop of the Java original. Baseline for the §Perf ablation.
+pub struct NaiveBackend;
+
+impl ProgressBackend for NaiveBackend {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn step(&mut self, remaining: &mut [f64], mips: &[f64], dt: f64, finished: &mut Vec<usize>) {
+        for i in 0..remaining.len() {
+            if remaining[i] > 0.0 {
+                let done = mips[i] * dt;
+                if done >= remaining[i] {
+                    remaining[i] = 0.0;
+                    finished.push(i);
+                } else {
+                    remaining[i] -= done;
+                }
+            }
+        }
+    }
+}
+
+/// Branch-light two-pass update over parallel arrays: pass 1 is a pure
+/// mul-sub-max loop the compiler autovectorizes; pass 2 collects the (rare)
+/// completions. This is the paper's "parallelization" realized with SIMD
+/// instead of threads - same arithmetic as the pallas kernel.
+pub struct BatchedBackend;
+
+impl ProgressBackend for BatchedBackend {
+    fn name(&self) -> &'static str {
+        "batched"
+    }
+
+    fn step(&mut self, remaining: &mut [f64], mips: &[f64], dt: f64, finished: &mut Vec<usize>) {
+        debug_assert_eq!(remaining.len(), mips.len());
+        // Single fused pass over zipped slices: no bounds checks, no
+        // temporary allocation, branchless arithmetic with a (rare)
+        // completion push. ~2x the two-pass + scratch-Vec variant this
+        // replaced (see EXPERIMENTS.md §Perf iteration log).
+        for (i, (r, m)) in remaining.iter_mut().zip(mips.iter()).enumerate() {
+            let old = *r;
+            let nxt = (old - *m * dt).max(0.0);
+            *r = nxt;
+            if old > 0.0 && nxt <= 0.0 {
+                finished.push(i);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backends() -> Vec<Box<dyn ProgressBackend>> {
+        vec![Box::new(NaiveBackend), Box::new(BatchedBackend)]
+    }
+
+    #[test]
+    fn all_backends_agree() {
+        for mut b in backends() {
+            let mut rem = vec![1000.0, 500.0, 0.0, 50.0];
+            let mips = vec![100.0, 100.0, 100.0, 100.0];
+            let mut fin = Vec::new();
+            b.step(&mut rem, &mips, 1.0, &mut fin);
+            assert_eq!(rem, vec![900.0, 400.0, 0.0, 0.0], "{}", b.name());
+            assert_eq!(fin, vec![3], "{}", b.name());
+        }
+    }
+
+    #[test]
+    fn finished_slots_do_not_refire() {
+        for mut b in backends() {
+            let mut rem = vec![100.0];
+            let mips = vec![200.0];
+            let mut fin = Vec::new();
+            b.step(&mut rem, &mips, 1.0, &mut fin);
+            assert_eq!(fin, vec![0]);
+            fin.clear();
+            b.step(&mut rem, &mips, 1.0, &mut fin);
+            assert!(fin.is_empty(), "{}", b.name());
+        }
+    }
+
+    #[test]
+    fn zero_dt_is_noop() {
+        for mut b in backends() {
+            let mut rem = vec![10.0, 20.0];
+            let mips = vec![100.0, 100.0];
+            let mut fin = Vec::new();
+            b.step(&mut rem, &mips, 0.0, &mut fin);
+            assert_eq!(rem, vec![10.0, 20.0]);
+            assert!(fin.is_empty());
+        }
+    }
+
+    #[test]
+    fn backends_agree_on_random_input() {
+        use crate::stats::Rng;
+        let mut rng = Rng::new(99);
+        let n = 2048;
+        let rem0: Vec<f64> = (0..n)
+            .map(|_| if rng.chance(0.2) { 0.0 } else { rng.uniform(1.0, 1e6) })
+            .collect();
+        let mips: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 5e3)).collect();
+        let dt = 3.7;
+
+        let mut rem_a = rem0.clone();
+        let mut fin_a = Vec::new();
+        NaiveBackend.step(&mut rem_a, &mips, dt, &mut fin_a);
+
+        let mut rem_b = rem0.clone();
+        let mut fin_b = Vec::new();
+        BatchedBackend.step(&mut rem_b, &mips, dt, &mut fin_b);
+
+        assert_eq!(rem_a, rem_b);
+        fin_a.sort_unstable();
+        fin_b.sort_unstable();
+        assert_eq!(fin_a, fin_b);
+    }
+}

@@ -1,0 +1,197 @@
+//! Run report: the aggregate numbers the paper's evaluation section is
+//! built from (§VII-D.2 "Final Simulation & Results", Figs. 14-15).
+
+use crate::stats::Summary;
+use crate::vm::{VmState, VmType};
+
+use super::Engine;
+
+/// Spot-instance outcome statistics (paper §VII-D.2).
+#[derive(Debug, Clone, Default)]
+pub struct SpotStats {
+    pub total_spot: u64,
+    /// Capacity-driven interruption events (Fig. 14 metric).
+    pub interruptions: u64,
+    /// Spot VMs that experienced >= 1 interruption.
+    pub interrupted_vms: u64,
+    /// Spot VMs that completed without any interruption.
+    pub uninterrupted_completions: u64,
+    /// Successful redeployments after hibernation.
+    pub redeployments: u64,
+    /// Spot VMs that finished *after* being interrupted at least once.
+    pub completed_after_interruption: u64,
+    /// Spot VMs terminated (interruption-terminate or hibernation timeout).
+    pub terminated: u64,
+    /// Max interruptions experienced by any single VM.
+    pub max_interruptions_per_vm: u32,
+    /// Interruption-duration stats over history gaps (seconds).
+    pub avg_interruption_secs: f64,
+    pub max_interruption_secs: f64,
+    pub min_interruption_secs: f64,
+}
+
+/// Summary of one engine run.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub policy: &'static str,
+    pub clock_end: f64,
+    pub events_processed: u64,
+    pub wall: std::time::Duration,
+    /// VM counts by (type, final state).
+    pub finished: u64,
+    pub terminated: u64,
+    pub failed: u64,
+    pub still_active: u64,
+    pub cloudlets_finished: u64,
+    pub cloudlets_canceled: u64,
+    pub alloc_attempts: u64,
+    pub alloc_failures: u64,
+    pub spot: SpotStats,
+}
+
+/// Build the report from a finished engine.
+pub fn build(engine: &Engine, wall: std::time::Duration) -> Report {
+    let w = &engine.world;
+    let mut finished = 0;
+    let mut terminated = 0;
+    let mut failed = 0;
+    let mut still_active = 0;
+
+    let mut spot = SpotStats::default();
+    let mut gap_stats = Summary::new();
+
+    for vm in &w.vms {
+        match vm.state {
+            VmState::Finished => finished += 1,
+            VmState::Terminated => terminated += 1,
+            VmState::Failed => failed += 1,
+            _ => still_active += 1,
+        }
+        if vm.vm_type == VmType::Spot {
+            spot.total_spot += 1;
+            if vm.interruptions > 0 {
+                spot.interrupted_vms += 1;
+                spot.max_interruptions_per_vm =
+                    spot.max_interruptions_per_vm.max(vm.interruptions);
+                if vm.state == VmState::Finished {
+                    spot.completed_after_interruption += 1;
+                }
+            } else if vm.state == VmState::Finished {
+                spot.uninterrupted_completions += 1;
+            }
+            if vm.state == VmState::Terminated {
+                spot.terminated += 1;
+            }
+            for gap in vm.history.interruption_durations() {
+                gap_stats.add(gap);
+            }
+        }
+    }
+    spot.interruptions = engine.recorder.interruptions;
+    spot.redeployments = engine.recorder.redeployments;
+    spot.avg_interruption_secs = if gap_stats.is_empty() { 0.0 } else { gap_stats.mean() };
+    spot.max_interruption_secs = if gap_stats.is_empty() { 0.0 } else { gap_stats.max() };
+    spot.min_interruption_secs = if gap_stats.is_empty() { 0.0 } else { gap_stats.min() };
+
+    let mut cl_fin = 0;
+    let mut cl_can = 0;
+    for cl in &w.cloudlets {
+        match cl.state {
+            crate::cloudlet::CloudletState::Finished => cl_fin += 1,
+            crate::cloudlet::CloudletState::Canceled => cl_can += 1,
+            _ => {}
+        }
+    }
+
+    Report {
+        policy: engine.policy_name(),
+        clock_end: engine.sim.clock(),
+        events_processed: engine.sim.processed_events(),
+        wall,
+        finished,
+        terminated,
+        failed,
+        still_active,
+        cloudlets_finished: cl_fin,
+        cloudlets_canceled: cl_can,
+        alloc_attempts: engine.recorder.alloc_attempts,
+        alloc_failures: engine.recorder.alloc_failures,
+        spot,
+    }
+}
+
+impl Report {
+    /// One-paragraph text rendering (examples print this).
+    pub fn render(&self) -> String {
+        let s = &self.spot;
+        format!(
+            "policy={} clock_end={:.1}s events={} wall={:?}\n\
+             vms: finished={} terminated={} failed={} active={}\n\
+             cloudlets: finished={} canceled={}\n\
+             alloc: attempts={} failures={}\n\
+             spot: total={} interruptions={} interrupted_vms={} \
+             uninterrupted_completions={} redeployed={} completed_after_interruption={} \
+             terminated={} max_per_vm={}\n\
+             interruption_secs: avg={:.2} max={:.2} min={:.2}",
+            self.policy,
+            self.clock_end,
+            self.events_processed,
+            self.wall,
+            self.finished,
+            self.terminated,
+            self.failed,
+            self.still_active,
+            self.cloudlets_finished,
+            self.cloudlets_canceled,
+            self.alloc_attempts,
+            self.alloc_failures,
+            s.total_spot,
+            s.interruptions,
+            s.interrupted_vms,
+            s.uninterrupted_completions,
+            s.redeployments,
+            s.completed_after_interruption,
+            s.terminated,
+            s.max_interruptions_per_vm,
+            s.avg_interruption_secs,
+            s.max_interruption_secs,
+            s.min_interruption_secs,
+        )
+    }
+
+    /// JSON export of the report (paper §V-E(f)).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{Json, JsonObj};
+        let mut o = JsonObj::new();
+        o.set("policy", Json::Str(self.policy.to_string()));
+        o.set("clock_end", Json::Num(self.clock_end));
+        o.set("events_processed", Json::Num(self.events_processed as f64));
+        o.set("wall_ms", Json::Num(self.wall.as_secs_f64() * 1e3));
+        o.set("vms_finished", Json::Num(self.finished as f64));
+        o.set("vms_terminated", Json::Num(self.terminated as f64));
+        o.set("vms_failed", Json::Num(self.failed as f64));
+        o.set("vms_active", Json::Num(self.still_active as f64));
+        o.set("cloudlets_finished", Json::Num(self.cloudlets_finished as f64));
+        o.set("cloudlets_canceled", Json::Num(self.cloudlets_canceled as f64));
+        o.set("alloc_attempts", Json::Num(self.alloc_attempts as f64));
+        o.set("alloc_failures", Json::Num(self.alloc_failures as f64));
+        let s = &self.spot;
+        let mut sp = JsonObj::new();
+        sp.set("total", Json::Num(s.total_spot as f64));
+        sp.set("interruptions", Json::Num(s.interruptions as f64));
+        sp.set("interrupted_vms", Json::Num(s.interrupted_vms as f64));
+        sp.set("uninterrupted_completions", Json::Num(s.uninterrupted_completions as f64));
+        sp.set("redeployments", Json::Num(s.redeployments as f64));
+        sp.set(
+            "completed_after_interruption",
+            Json::Num(s.completed_after_interruption as f64),
+        );
+        sp.set("terminated", Json::Num(s.terminated as f64));
+        sp.set("max_interruptions_per_vm", Json::Num(s.max_interruptions_per_vm as f64));
+        sp.set("avg_interruption_secs", Json::Num(s.avg_interruption_secs));
+        sp.set("max_interruption_secs", Json::Num(s.max_interruption_secs));
+        sp.set("min_interruption_secs", Json::Num(s.min_interruption_secs));
+        o.set("spot", Json::Obj(sp));
+        Json::Obj(o)
+    }
+}

@@ -1,0 +1,35 @@
+//! Event tags (the `CloudSimTags` role, paper §V-A(d)): every event type
+//! the engine dispatches on, with its payload.
+
+use crate::cloudlet::CloudletId;
+use crate::infra::HostId;
+use crate::vm::VmId;
+
+/// Event type + payload processed by the engine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Tag {
+    /// Broker submits a VM (fires at its submission delay).
+    SubmitVm(VmId),
+    /// Attempt (or re-attempt) to place a VM.
+    TryAllocate(VmId),
+    /// A persistent request's waiting time elapsed.
+    WaitingExpired(VmId),
+    /// Warning period over: actually interrupt the spot VM.
+    SpotInterrupt(VmId),
+    /// A hibernated VM exceeded its hibernation timeout.
+    HibernationTimeout(VmId),
+    /// Destruction-delay check after a VM went idle.
+    VmIdleCheck(VmId),
+    /// Cloudlet submission (binds to its VM, may start immediately).
+    SubmitCloudlet(CloudletId),
+    /// Periodic cloudlet progress update (scheduling interval).
+    ProgressTick,
+    /// Periodic metrics sample.
+    Sample,
+    /// Trace machine event: host becomes active.
+    HostAdd(HostId),
+    /// Trace machine event: host removed (evicts its VMs).
+    HostRemove(HostId),
+    /// Hard stop marker.
+    End,
+}

@@ -1,0 +1,198 @@
+//! The world: arena storage for all simulation entities.
+//!
+//! CloudSim Plus wires entities together with object references; in Rust an
+//! arena (id-indexed vectors) gives the same topology without shared
+//! mutable ownership, and the allocation policies get a cheap immutable
+//! view (`&World`) while the engine mutates through it between policy
+//! calls.
+
+use crate::cloudlet::{Cloudlet, CloudletId};
+use crate::infra::{Datacenter, DcId, Host, HostId, HostSpec};
+use crate::vm::{Vm, VmId, VmState};
+
+/// Arena of datacenters, hosts, VMs and cloudlets.
+#[derive(Default)]
+pub struct World {
+    pub datacenters: Vec<Datacenter>,
+    pub hosts: Vec<Host>,
+    pub vms: Vec<Vm>,
+    pub cloudlets: Vec<Cloudlet>,
+}
+
+impl World {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_datacenter(&mut self, name: &str, scheduling_interval: f64) -> DcId {
+        let id = self.datacenters.len();
+        self.datacenters.push(Datacenter::new(id, name, scheduling_interval));
+        id
+    }
+
+    /// Register a host (active immediately at `now`).
+    pub fn add_host(&mut self, dc: DcId, spec: HostSpec, now: f64) -> HostId {
+        let id = self.hosts.len();
+        self.hosts.push(Host::new(id, dc, spec, now));
+        self.datacenters[dc].hosts.push(id);
+        id
+    }
+
+    /// Register a VM; the caller (engine/broker) schedules its submission.
+    pub fn add_vm(&mut self, mut vm: Vm) -> VmId {
+        let id = self.vms.len();
+        vm.id = id;
+        self.vms.push(vm);
+        id
+    }
+
+    /// Register a cloudlet bound to an existing VM.
+    pub fn add_cloudlet(&mut self, mut cl: Cloudlet) -> CloudletId {
+        assert!(cl.vm < self.vms.len(), "cloudlet bound to unknown vm {}", cl.vm);
+        let id = self.cloudlets.len();
+        cl.id = id;
+        self.vms[cl.vm].cloudlets.push(id);
+        self.cloudlets.push(cl);
+        id
+    }
+
+    /// Active (placeable) hosts.
+    pub fn active_hosts(&self) -> impl Iterator<Item = &Host> {
+        self.hosts.iter().filter(|h| h.is_active())
+    }
+
+    /// Resources on `host` currently held by spot VMs, in artifact
+    /// dimension order (CPU MIPS, RAM, BW, storage) - Eq. (10) numerator.
+    pub fn spot_used_vec(&self, host: &Host) -> [f64; 4] {
+        let mut acc = [0.0; 4];
+        for &vid in &host.vms {
+            let vm = &self.vms[vid];
+            if vm.is_spot() {
+                let r = vm.spec.request_vec();
+                for d in 0..4 {
+                    acc[d] += r[d];
+                }
+            }
+        }
+        acc
+    }
+
+    /// Spot VMs on `host` that may be interrupted at `now`
+    /// (running, past min runtime, not already warned).
+    pub fn interruptible_spots(&self, host: &Host, now: f64) -> Vec<VmId> {
+        host.vms.iter().copied().filter(|&v| self.vms[v].interruptible(now)).collect()
+    }
+
+    /// Whether `vm` would fit on `host` if the given spot VMs were removed.
+    pub fn fits_with_clearing(&self, host: &Host, vm: &Vm, cleared: &[VmId]) -> bool {
+        let mut pes = host.free_pes();
+        let mut ram = host.free_ram();
+        let mut bw = host.free_bw();
+        let mut st = host.free_storage();
+        for &v in cleared {
+            let s = &self.vms[v].spec;
+            pes += s.pes;
+            ram += s.ram;
+            bw += s.bw;
+            st += s.storage;
+        }
+        host.is_active()
+            && pes >= vm.spec.pes
+            && ram + 1e-9 >= vm.spec.ram
+            && bw + 1e-9 >= vm.spec.bw
+            && st + 1e-9 >= vm.spec.storage
+    }
+
+    /// Count of VMs in a given state, split (on-demand, spot).
+    pub fn count_by_state(&self, state: VmState) -> (usize, usize) {
+        let mut od = 0;
+        let mut spot = 0;
+        for vm in &self.vms {
+            if vm.state == state {
+                if vm.is_spot() {
+                    spot += 1;
+                } else {
+                    od += 1;
+                }
+            }
+        }
+        (od, spot)
+    }
+
+    /// Aggregate (used, total) PEs over active hosts.
+    pub fn pe_usage(&self) -> (u32, u32) {
+        let mut used = 0;
+        let mut total = 0;
+        for h in self.active_hosts() {
+            used += h.used_pes;
+            total += h.spec.pes;
+        }
+        (used, total)
+    }
+
+    /// Aggregate (used, total) RAM over active hosts.
+    pub fn ram_usage(&self) -> (f64, f64) {
+        let mut used = 0.0;
+        let mut total = 0.0;
+        for h in self.active_hosts() {
+            used += h.used_ram;
+            total += h.spec.ram;
+        }
+        (used, total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vm::{SpotConfig, VmSpec};
+
+    fn world_with_host() -> (World, HostId) {
+        let mut w = World::new();
+        let dc = w.add_datacenter("dc0", 1.0);
+        let h = w.add_host(dc, HostSpec::new(8, 1000.0, 16_384.0, 5_000.0, 200_000.0), 0.0);
+        (w, h)
+    }
+
+    #[test]
+    fn arena_ids_are_dense() {
+        let (mut w, h) = world_with_host();
+        assert_eq!(h, 0);
+        let v0 = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, 2)));
+        let v1 = w.add_vm(Vm::spot(0, VmSpec::new(1000.0, 1), SpotConfig::hibernate()));
+        assert_eq!((v0, v1), (0, 1));
+        let c = w.add_cloudlet(Cloudlet::new(0, 1000.0, 1).with_vm(v0));
+        assert_eq!(c, 0);
+        assert_eq!(w.vms[v0].cloudlets, vec![c]);
+    }
+
+    #[test]
+    fn spot_used_only_counts_spot() {
+        let (mut w, h) = world_with_host();
+        let od = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, 2)));
+        let sp = w.add_vm(Vm::spot(0, VmSpec::new(1000.0, 1), SpotConfig::terminate()));
+        let (od_spec, sp_spec) = (w.vms[od].spec, w.vms[sp].spec);
+        w.hosts[h].commit(od, od_spec.pes, od_spec.ram, od_spec.bw, od_spec.storage);
+        w.hosts[h].commit(sp, sp_spec.pes, sp_spec.ram, sp_spec.bw, sp_spec.storage);
+        let spot_used = w.spot_used_vec(&w.hosts[h]);
+        assert_eq!(spot_used, [1000.0, 512.0, 1000.0, 10_000.0]);
+    }
+
+    #[test]
+    fn fits_with_clearing_accounts_released_resources() {
+        let (mut w, h) = world_with_host();
+        let sp = w.add_vm(Vm::spot(0, VmSpec::new(1000.0, 6), SpotConfig::terminate()));
+        let sp_spec = w.vms[sp].spec;
+        w.hosts[h].commit(sp, sp_spec.pes, sp_spec.ram, sp_spec.bw, sp_spec.storage);
+        let big = Vm::on_demand(1, VmSpec::new(1000.0, 8));
+        assert!(!w.hosts[h].fits(big.spec.pes, big.spec.ram, big.spec.bw, big.spec.storage));
+        assert!(w.fits_with_clearing(&w.hosts[h], &big, &[sp]));
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown vm")]
+    fn cloudlet_requires_valid_vm() {
+        let (mut w, _) = world_with_host();
+        w.add_cloudlet(Cloudlet::new(0, 100.0, 1).with_vm(5));
+    }
+}

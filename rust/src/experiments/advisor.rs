@@ -1,0 +1,66 @@
+//! Fig. 16: spot-advisor feature correlation analysis (paper §VII-F).
+
+use crate::analysis::advisor::{synth_dataset, AdvisorDataset};
+use crate::util::csv::fmt_num;
+use crate::util::table::{Align, TextTable};
+
+/// Load the dataset: a real advisor JSON if provided, otherwise the
+/// synthetic 389-type dataset (DESIGN.md §6 substitution).
+pub fn dataset(advisor_json: Option<&std::path::Path>, seed: u64) -> AdvisorDataset {
+    if let Some(path) = advisor_json {
+        let text = std::fs::read_to_string(path).expect("reading advisor json");
+        let doc = crate::util::json::parse(&text).expect("parsing advisor json");
+        if let Some(ds) = AdvisorDataset::from_json(&doc, "us-east-1", "Linux") {
+            return ds;
+        }
+        eprintln!("advisor json unusable; falling back to synthetic dataset");
+    }
+    synth_dataset(seed)
+}
+
+/// Fig. 16 table: association of each feature with interruption frequency.
+pub fn fig16_table(ds: &AdvisorDataset) -> TextTable {
+    let mut t = TextTable::new("FIG 16 - FEATURE vs INTERRUPTION FREQUENCY")
+        .column("Feature", Align::Left)
+        .column("Measure", Align::Left)
+        .column("Association", Align::Right)
+        .column("Paper", Align::Right);
+    let paper: &[(&str, &str)] = &[
+        ("instance_type", "0.38"),
+        ("instance_family", "0.33"),
+        ("machine_category", "0.18"),
+        ("day", "~0"),
+        ("free_tier", "~0"),
+        ("dedicated_host", "~0"),
+    ];
+    for row in ds.fig16_associations() {
+        let paper_val = paper
+            .iter()
+            .find(|(f, _)| *f == row.feature)
+            .map(|(_, v)| v.to_string())
+            .unwrap_or_else(|| "-".into());
+        t.push(vec![
+            row.feature.to_string(),
+            row.measure.to_string(),
+            fmt_num(row.value),
+            paper_val,
+        ]);
+    }
+    t
+}
+
+/// Class distribution table (the advisor's five interruption ranges).
+pub fn class_distribution_table(ds: &AdvisorDataset) -> TextTable {
+    let labels = ["<5%", "5-10%", "10-15%", "15-20%", ">20%"];
+    let mut counts = [0usize; 5];
+    for r in &ds.rows {
+        counts[r.interruption_class.min(4) as usize] += 1;
+    }
+    let mut t = TextTable::new("INTERRUPTION FREQUENCY CLASS DISTRIBUTION")
+        .column("Class", Align::Left)
+        .column("Instance types", Align::Right);
+    for (label, count) in labels.iter().zip(counts) {
+        t.push(vec![label.to_string(), count.to_string()]);
+    }
+    t
+}

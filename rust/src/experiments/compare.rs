@@ -1,0 +1,210 @@
+//! Figs. 13-15: the allocation-algorithm comparison (paper §VII-E).
+//!
+//! Runs the identical Table II/III workload (same seed) under First-Fit,
+//! HLEM-VMP and adjusted HLEM-VMP, and renders:
+//!
+//! - Fig. 13: active spot/on-demand instances over time, per algorithm,
+//! - Fig. 14: total spot interruptions, per algorithm,
+//! - Fig. 15: avg/max/min interruption durations, per algorithm.
+
+use crate::allocation::{AllocationPolicy, FirstFit, HlemVmp};
+use crate::config::scenario::{build_comparison_workload, ComparisonConfig};
+use crate::engine::{Engine, EngineConfig, Report};
+use crate::metrics::TimeSeries;
+use crate::util::csv::{fmt_num, Csv};
+use crate::util::table::{Align, TextTable};
+
+/// Result of one policy run.
+pub struct Outcome {
+    pub policy: &'static str,
+    pub report: Report,
+    /// Sampled active-instance series (Fig. 13 raw data).
+    pub series: TimeSeries,
+}
+
+/// Policies compared in the paper (§VII-E.2): First-Fit baseline, plain
+/// HLEM-VMP, adjusted HLEM-VMP.
+pub fn paper_policies() -> Vec<(&'static str, fn() -> Box<dyn AllocationPolicy>)> {
+    vec![
+        ("first-fit", || Box::new(FirstFit::new()) as Box<dyn AllocationPolicy>),
+        ("hlem-vmp", || Box::new(HlemVmp::plain()) as Box<dyn AllocationPolicy>),
+        ("hlem-vmp-adjusted", || Box::new(HlemVmp::adjusted()) as Box<dyn AllocationPolicy>),
+    ]
+}
+
+/// Run one policy over the scenario.
+pub fn run_policy(
+    make_policy: impl FnOnce() -> Box<dyn AllocationPolicy>,
+    cfg: &ComparisonConfig,
+) -> Outcome {
+    let mut engine_cfg = EngineConfig::default();
+    engine_cfg.sample_interval = 5.0;
+    engine_cfg.vm_destruction_delay = 1.0;
+    let mut engine = Engine::new(engine_cfg, make_policy());
+    build_comparison_workload(&mut engine, cfg);
+    let report = engine.run();
+    let policy = report.policy;
+    Outcome { policy, report, series: engine.recorder.series.clone() }
+}
+
+/// Run the full paper comparison.
+pub fn run_all(cfg: &ComparisonConfig) -> Vec<Outcome> {
+    paper_policies().into_iter().map(|(_, make)| run_policy(make, cfg)).collect()
+}
+
+/// Fig. 14 table: total spot interruptions per algorithm.
+pub fn fig14_table(outcomes: &[Outcome]) -> TextTable {
+    let mut t = TextTable::new("FIG 14 - TOTAL SPOT INSTANCE INTERRUPTIONS")
+        .column("Algorithm", Align::Left)
+        .column("Interruptions", Align::Right)
+        .column("Interrupted VMs", Align::Right)
+        .column("Max per VM", Align::Right);
+    for o in outcomes {
+        t.push(vec![
+            o.policy.to_string(),
+            o.report.spot.interruptions.to_string(),
+            o.report.spot.interrupted_vms.to_string(),
+            o.report.spot.max_interruptions_per_vm.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Fig. 15 table: interruption durations per algorithm.
+pub fn fig15_table(outcomes: &[Outcome]) -> TextTable {
+    let mut t = TextTable::new("FIG 15 - SPOT INTERRUPTION DURATIONS (s)")
+        .column("Algorithm", Align::Left)
+        .column("Average", Align::Right)
+        .column("Maximum", Align::Right)
+        .column("Minimum", Align::Right);
+    for o in outcomes {
+        t.push(vec![
+            o.policy.to_string(),
+            fmt_num(o.report.spot.avg_interruption_secs),
+            fmt_num(o.report.spot.max_interruption_secs),
+            fmt_num(o.report.spot.min_interruption_secs),
+        ]);
+    }
+    t
+}
+
+/// Fig. 13 CSV: merged active-instance series
+/// (`time,<policy>_od,<policy>_spot,...`).
+pub fn fig13_csv(outcomes: &[Outcome]) -> Csv {
+    let mut header: Vec<String> = vec!["time".into()];
+    for o in outcomes {
+        header.push(format!("{}_od", o.policy));
+        header.push(format!("{}_spot", o.policy));
+    }
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut csv = Csv::new(&header_refs);
+
+    // Series share sampling config; align on the shortest.
+    let rows = outcomes.iter().map(|o| o.series.len()).min().unwrap_or(0);
+    let od_cols: Vec<Vec<f64>> =
+        outcomes.iter().map(|o| o.series.column("od_running").unwrap()).collect();
+    let spot_cols: Vec<Vec<f64>> =
+        outcomes.iter().map(|o| o.series.column("spot_running").unwrap()).collect();
+    for i in 0..rows {
+        let mut row = vec![fmt_num(outcomes[0].series.times()[i])];
+        for (od, spot) in od_cols.iter().zip(&spot_cols) {
+            row.push(fmt_num(od[i]));
+            row.push(fmt_num(spot[i]));
+        }
+        csv.push(row);
+    }
+    csv
+}
+
+/// Aggregate over several seeds (the paper ran one randomization; we
+/// report the mean across `runs` seeds to separate algorithm effect from
+/// workload noise).
+#[derive(Debug, Clone)]
+pub struct Aggregate {
+    pub policy: &'static str,
+    pub runs: usize,
+    pub mean_interruptions: f64,
+    pub mean_interrupted_vms: f64,
+    pub mean_avg_duration: f64,
+    pub mean_max_duration: f64,
+    pub max_per_vm: u32,
+}
+
+/// Run the comparison for seeds `base_seed..base_seed+runs`.
+pub fn run_multi(base_cfg: &ComparisonConfig, runs: usize) -> Vec<Aggregate> {
+    let mut aggs: Vec<Aggregate> = paper_policies()
+        .iter()
+        .map(|(name, _)| Aggregate {
+            policy: name,
+            runs,
+            mean_interruptions: 0.0,
+            mean_interrupted_vms: 0.0,
+            mean_avg_duration: 0.0,
+            mean_max_duration: 0.0,
+            max_per_vm: 0,
+        })
+        .collect();
+    for r in 0..runs {
+        let cfg = ComparisonConfig { seed: base_cfg.seed + r as u64, ..base_cfg.clone() };
+        for (i, (_, make)) in paper_policies().into_iter().enumerate() {
+            let o = run_policy(make, &cfg);
+            let a = &mut aggs[i];
+            a.mean_interruptions += o.report.spot.interruptions as f64 / runs as f64;
+            a.mean_interrupted_vms += o.report.spot.interrupted_vms as f64 / runs as f64;
+            a.mean_avg_duration += o.report.spot.avg_interruption_secs / runs as f64;
+            a.mean_max_duration += o.report.spot.max_interruption_secs / runs as f64;
+            a.max_per_vm = a.max_per_vm.max(o.report.spot.max_interruptions_per_vm);
+        }
+    }
+    aggs
+}
+
+/// Render the multi-seed aggregate (Figs. 14-15 combined).
+pub fn aggregate_table(aggs: &[Aggregate]) -> TextTable {
+    let mut t = TextTable::new("FIGS 14-15 AGGREGATE (mean over seeds)")
+        .column("Algorithm", Align::Left)
+        .column("Runs", Align::Right)
+        .column("Interruptions", Align::Right)
+        .column("Interrupted VMs", Align::Right)
+        .column("Avg dur (s)", Align::Right)
+        .column("Max dur (s)", Align::Right)
+        .column("Max per VM", Align::Right);
+    for a in aggs {
+        t.push(vec![
+            a.policy.to_string(),
+            a.runs.to_string(),
+            fmt_num(a.mean_interruptions),
+            fmt_num(a.mean_interrupted_vms),
+            fmt_num(a.mean_avg_duration),
+            fmt_num(a.mean_max_duration),
+            a.max_per_vm.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Shape check used by tests and EXPERIMENTS.md: the paper's ordering is
+/// FirstFit > HLEM > adjusted on interruption count, and adjusted has the
+/// smallest maximum interruption duration.
+pub fn shape_summary(outcomes: &[Outcome]) -> String {
+    let get = |name: &str| outcomes.iter().find(|o| o.policy == name);
+    let (Some(ff), Some(hl), Some(adj)) =
+        (get("first-fit"), get("hlem-vmp"), get("hlem-vmp-adjusted"))
+    else {
+        return "incomplete outcome set".into();
+    };
+    format!(
+        "interruptions: first-fit={} hlem={} adjusted={} (paper: 286/230/205)\n\
+         max-duration:  first-fit={:.2}s hlem={:.2}s adjusted={:.2}s (paper: 64.87/49.49/45.65)\n\
+         avg-duration:  first-fit={:.2}s hlem={:.2}s adjusted={:.2}s (paper: 22.81/21.12/25.20)",
+        ff.report.spot.interruptions,
+        hl.report.spot.interruptions,
+        adj.report.spot.interruptions,
+        ff.report.spot.max_interruption_secs,
+        hl.report.spot.max_interruption_secs,
+        adj.report.spot.max_interruption_secs,
+        ff.report.spot.avg_interruption_secs,
+        hl.report.spot.avg_interruption_secs,
+        adj.report.spot.avg_interruption_secs,
+    )
+}

@@ -1,0 +1,8 @@
+//! Experiment drivers: one module per paper table/figure family, shared by
+//! the CLI (`cargo run -- <cmd>`), the examples and the benches so every
+//! artifact is regenerated from a single code path (DESIGN.md §3).
+
+pub mod advisor;
+pub mod compare;
+pub mod trace_analysis;
+pub mod trace_sim;

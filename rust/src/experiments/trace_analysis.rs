@@ -1,0 +1,48 @@
+//! Figs. 7-9: trace concurrency analysis (paper §VII-C.1).
+
+use crate::trace::analysis::{
+    fig7_daily_task_concurrency, fig8_daily_cloudlet_concurrency, fig9_hour_of_day_peaks,
+};
+use crate::trace::synth::{SynthConfig, TraceGenerator};
+use crate::trace::Trace;
+use crate::util::table::{Align, TextTable};
+
+/// Generate the month-scale trace the figures are computed from.
+pub fn month_trace(seed: u64, machines: usize) -> Trace {
+    TraceGenerator::new(SynthConfig { seed, machines, ..SynthConfig::month_scale() }).generate()
+}
+
+/// Fig. 7 table: max/min concurrently active tasks per day.
+pub fn fig7_table(trace: &Trace) -> TextTable {
+    let mut t = TextTable::new("FIG 7 - CONCURRENT TASKS PER DAY")
+        .column("Day", Align::Right)
+        .column("Max", Align::Right)
+        .column("Min", Align::Right);
+    for (day, mx, mn) in fig7_daily_task_concurrency(trace) {
+        t.push(vec![day.to_string(), mx.to_string(), mn.to_string()]);
+    }
+    t
+}
+
+/// Fig. 8 table: daily max concurrently running cloudlets (hourly res.).
+pub fn fig8_table(trace: &Trace) -> TextTable {
+    let mut t = TextTable::new("FIG 8 - CONCURRENT CLOUDLETS PER DAY (hourly resolution)")
+        .column("Day", Align::Right)
+        .column("Max", Align::Right)
+        .column("Min", Align::Right);
+    for (day, mx, mn) in fig8_daily_cloudlet_concurrency(trace) {
+        t.push(vec![day.to_string(), mx.to_string(), mn.to_string()]);
+    }
+    t
+}
+
+/// Fig. 9 table: max concurrently running cloudlets by hour-of-day.
+pub fn fig9_table(trace: &Trace) -> TextTable {
+    let mut t = TextTable::new("FIG 9 - PEAK CONCURRENT CLOUDLETS BY HOUR OF DAY")
+        .column("Hour", Align::Right)
+        .column("Peak", Align::Right);
+    for (hour, peak) in fig9_hour_of_day_peaks(trace).iter().enumerate() {
+        t.push(vec![hour.to_string(), peak.to_string()]);
+    }
+    t
+}

@@ -1,0 +1,41 @@
+//! Datacenter: a named collection of hosts plus scheduling parameters
+//! (paper §V-B(a): `DatacenterSimple` = hosts + VM allocation policy;
+//! the policy itself lives in the engine, see DESIGN.md §2/S7).
+
+use super::HostId;
+
+/// A datacenter groups hosts and carries the scheduling interval
+/// (`datacenter0.setSchedulingInterval(1)` in the paper's Listing 4).
+#[derive(Debug, Clone)]
+pub struct Datacenter {
+    pub id: super::DcId,
+    pub name: String,
+    pub hosts: Vec<HostId>,
+    /// Period (seconds) of cloudlet progress updates.
+    pub scheduling_interval: f64,
+}
+
+impl Datacenter {
+    pub fn new(id: super::DcId, name: &str, scheduling_interval: f64) -> Self {
+        assert!(scheduling_interval > 0.0);
+        Datacenter { id, name: name.to_string(), hosts: Vec::new(), scheduling_interval }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction() {
+        let dc = Datacenter::new(0, "dc0", 1.0);
+        assert_eq!(dc.name, "dc0");
+        assert!(dc.hosts.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_interval() {
+        Datacenter::new(0, "dc0", 0.0);
+    }
+}

@@ -1,0 +1,212 @@
+//! Physical host: PEs (cores x MIPS), RAM, bandwidth, storage, and the
+//! resource accounting the allocation policies operate on.
+//!
+//! Four resource dimensions (CPU, RAM, BW, storage) matching the paper's
+//! host-filtering phase ("All resource types - CPU, memory, bandwidth, and
+//! storage - are considered", §VI-A) and the `DIMS = 4` artifact contract.
+
+use crate::vm::VmId;
+
+/// Static host configuration (paper Table II row).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HostSpec {
+    /// Number of processing elements (cores).
+    pub pes: u32,
+    /// MIPS capacity of each PE.
+    pub mips_per_pe: f64,
+    /// RAM in MB.
+    pub ram: f64,
+    /// Bandwidth in Mbps.
+    pub bw: f64,
+    /// Storage in MB.
+    pub storage: f64,
+}
+
+impl HostSpec {
+    pub fn new(pes: u32, mips_per_pe: f64, ram: f64, bw: f64, storage: f64) -> Self {
+        HostSpec { pes, mips_per_pe, ram, bw, storage }
+    }
+
+    /// Total CPU capacity in MIPS.
+    pub fn total_mips(&self) -> f64 {
+        self.pes as f64 * self.mips_per_pe
+    }
+}
+
+/// Host lifecycle (trace machine events can add/remove hosts mid-run).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostState {
+    /// Accepting and running VMs.
+    Active,
+    /// Removed (trace REMOVE event); holds no VMs.
+    Removed,
+}
+
+/// A physical server with live resource accounting.
+#[derive(Debug, Clone)]
+pub struct Host {
+    pub id: super::HostId,
+    pub dc: super::DcId,
+    pub spec: HostSpec,
+    pub state: HostState,
+    /// Allocated VMs in allocation order (the paper's victim-selection
+    /// order for spot interruption is exactly this list order, §IX).
+    pub vms: Vec<VmId>,
+    pub used_pes: u32,
+    pub used_ram: f64,
+    pub used_bw: f64,
+    pub used_storage: f64,
+    /// Simulation time the host became active.
+    pub created_at: f64,
+    pub removed_at: Option<f64>,
+}
+
+impl Host {
+    pub fn new(id: super::HostId, dc: super::DcId, spec: HostSpec, now: f64) -> Self {
+        Host {
+            id,
+            dc,
+            spec,
+            state: HostState::Active,
+            vms: Vec::new(),
+            used_pes: 0,
+            used_ram: 0.0,
+            used_bw: 0.0,
+            used_storage: 0.0,
+            created_at: now,
+            removed_at: None,
+        }
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.state == HostState::Active
+    }
+
+    pub fn free_pes(&self) -> u32 {
+        self.spec.pes.saturating_sub(self.used_pes)
+    }
+
+    pub fn free_ram(&self) -> f64 {
+        (self.spec.ram - self.used_ram).max(0.0)
+    }
+
+    pub fn free_bw(&self) -> f64 {
+        (self.spec.bw - self.used_bw).max(0.0)
+    }
+
+    pub fn free_storage(&self) -> f64 {
+        (self.spec.storage - self.used_storage).max(0.0)
+    }
+
+    /// Free CPU capacity in MIPS (PE-granular allocation).
+    pub fn free_mips(&self) -> f64 {
+        self.free_pes() as f64 * self.spec.mips_per_pe
+    }
+
+    /// CPU utilization fraction `U_i(t)` used by the RsDiff filter (Eq. 1).
+    pub fn cpu_utilization(&self) -> f64 {
+        if self.spec.pes == 0 {
+            return 0.0;
+        }
+        self.used_pes as f64 / self.spec.pes as f64
+    }
+
+    /// Whether a request of (pes, ram, bw, storage) fits right now.
+    pub fn fits(&self, pes: u32, ram: f64, bw: f64, storage: f64) -> bool {
+        self.is_active()
+            && self.free_pes() >= pes
+            && self.free_ram() + 1e-9 >= ram
+            && self.free_bw() + 1e-9 >= bw
+            && self.free_storage() + 1e-9 >= storage
+    }
+
+    /// Commit resources for a VM (engine-internal; panics on oversubscribe,
+    /// which would indicate a policy bug - policies must check `fits`).
+    pub fn commit(&mut self, vm: VmId, pes: u32, ram: f64, bw: f64, storage: f64) {
+        assert!(self.fits(pes, ram, bw, storage), "host {} oversubscribed by vm {}", self.id, vm);
+        self.used_pes += pes;
+        self.used_ram += ram;
+        self.used_bw += bw;
+        self.used_storage += storage;
+        self.vms.push(vm);
+    }
+
+    /// Release a VM's resources.
+    pub fn release(&mut self, vm: VmId, pes: u32, ram: f64, bw: f64, storage: f64) {
+        let idx = self
+            .vms
+            .iter()
+            .position(|&v| v == vm)
+            .unwrap_or_else(|| panic!("vm {vm} not on host {}", self.id));
+        self.vms.remove(idx);
+        self.used_pes = self.used_pes.checked_sub(pes).expect("pe accounting underflow");
+        self.used_ram = (self.used_ram - ram).max(0.0);
+        self.used_bw = (self.used_bw - bw).max(0.0);
+        self.used_storage = (self.used_storage - storage).max(0.0);
+    }
+
+    /// Capacity vector in the artifact's dimension order (CPU MIPS, RAM,
+    /// BW, storage) - DESIGN.md §5.
+    pub fn capacity_vec(&self) -> [f64; 4] {
+        [self.spec.total_mips(), self.spec.ram, self.spec.bw, self.spec.storage]
+    }
+
+    /// Free-capacity vector `C_i^d(t)` in artifact dimension order.
+    pub fn free_vec(&self) -> [f64; 4] {
+        [self.free_mips(), self.free_ram(), self.free_bw(), self.free_storage()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn host() -> Host {
+        Host::new(0, 0, HostSpec::new(8, 1000.0, 16_384.0, 5_000.0, 200_000.0), 0.0)
+    }
+
+    #[test]
+    fn fresh_host_is_empty() {
+        let h = host();
+        assert_eq!(h.free_pes(), 8);
+        assert_eq!(h.free_mips(), 8000.0);
+        assert_eq!(h.cpu_utilization(), 0.0);
+        assert!(h.fits(8, 16_384.0, 5_000.0, 200_000.0));
+        assert!(!h.fits(9, 0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn commit_and_release_roundtrip() {
+        let mut h = host();
+        h.commit(7, 4, 8192.0, 1000.0, 50_000.0);
+        assert_eq!(h.free_pes(), 4);
+        assert_eq!(h.cpu_utilization(), 0.5);
+        assert_eq!(h.vms, vec![7]);
+        h.release(7, 4, 8192.0, 1000.0, 50_000.0);
+        assert_eq!(h.free_pes(), 8);
+        assert!(h.vms.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "oversubscribed")]
+    fn commit_rejects_oversubscription() {
+        let mut h = host();
+        h.commit(1, 8, 0.0, 0.0, 0.0);
+        h.commit(2, 1, 0.0, 0.0, 0.0);
+    }
+
+    #[test]
+    fn vectors_in_artifact_order() {
+        let mut h = host();
+        h.commit(3, 2, 1024.0, 500.0, 10_000.0);
+        assert_eq!(h.capacity_vec(), [8000.0, 16_384.0, 5_000.0, 200_000.0]);
+        assert_eq!(h.free_vec(), [6000.0, 15_360.0, 4_500.0, 190_000.0]);
+    }
+
+    #[test]
+    fn removed_host_rejects_fits() {
+        let mut h = host();
+        h.state = HostState::Removed;
+        assert!(!h.fits(1, 0.0, 0.0, 0.0));
+    }
+}

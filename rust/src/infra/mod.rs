@@ -1,0 +1,13 @@
+//! Physical infrastructure model: processing elements, hosts, datacenters
+//! (paper §V-B: `HostSimple`, `DatacenterSimple`).
+
+pub mod datacenter;
+pub mod host;
+
+pub use datacenter::Datacenter;
+pub use host::{Host, HostSpec, HostState};
+
+/// Index of a host in the world's host arena.
+pub type HostId = usize;
+/// Index of a datacenter.
+pub type DcId = usize;

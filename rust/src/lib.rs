@@ -1,0 +1,41 @@
+//! # cloudmarket
+//!
+//! A Rust + JAX + Pallas reproduction of *"Simulating Dynamic Cloud
+//! Marketspaces: Modeling Spot Instance Behavior and Scheduling with
+//! CloudSim Plus"* (Goldgruber, Pittl, Schikuta; CS.DC 2025).
+//!
+//! The crate re-implements the paper's entire system as a three-layer
+//! stack (see DESIGN.md):
+//!
+//! - **L3 (this crate)**: a CloudSim-Plus-class discrete-event cloud
+//!   simulator with first-class spot-instance lifecycle support
+//!   (interruption, hibernation, resubmission), the HLEM-VMP allocation
+//!   algorithm and its spot-load-adjusted variant, baseline heuristics,
+//!   a Google-cluster-trace substrate, metrics/reporting, and the
+//!   spot-advisor correlation analysis.
+//! - **L2/L1 (python/, build-time only)**: the HLEM-VMP scoring pipeline
+//!   and the batched cloudlet-progress update as JAX functions over pallas
+//!   kernels, AOT-lowered to HLO text.
+//! - **Runtime**: [`runtime`] loads the HLO artifacts through PJRT (the
+//!   `xla` crate) and serves them to the L3 hot path; [`allocation::scorer`]
+//!   provides the bit-faithful pure-rust fallback.
+//!
+//! Quickstart: see `examples/quickstart.rs` or run
+//! `cargo run --release -- quickstart`.
+
+pub mod allocation;
+pub mod analysis;
+pub mod benchkit;
+pub mod cloudlet;
+pub mod config;
+pub mod core;
+pub mod engine;
+pub mod experiments;
+pub mod infra;
+pub mod metrics;
+pub mod runtime;
+pub mod testkit;
+pub mod stats;
+pub mod trace;
+pub mod util;
+pub mod vm;

@@ -1,0 +1,233 @@
+//! `cloudmarket` CLI - the leader entrypoint.
+//!
+//! Subcommands map 1:1 onto the paper's evaluation artifacts (DESIGN.md §3):
+//!
+//! ```text
+//! cloudmarket quickstart                     minimal spot lifecycle demo (SVII-A)
+//! cloudmarket compare [...]                  Figs. 13-15 algorithm comparison
+//! cloudmarket trace [...]                    Fig. 12 + SVII-D trace simulation
+//! cloudmarket trace-analysis [...]           Figs. 7-9 concurrency analysis
+//! cloudmarket advisor [...]                  Fig. 16 correlation analysis
+//! cloudmarket tables                         Tables II-III
+//! ```
+
+use std::path::PathBuf;
+
+use cloudmarket::allocation::{AllocationPolicy, FirstFit, HlemConfig, HlemVmp};
+use cloudmarket::config::scenario::ComparisonConfig;
+use cloudmarket::experiments::{advisor, compare, trace_analysis, trace_sim};
+use cloudmarket::util::cli::{render_help, Args, Spec};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn specs() -> Vec<Spec> {
+    vec![
+        Spec { name: "seed", takes_value: true, help: "rng seed (default 20250710)" },
+        Spec { name: "runs", takes_value: true, help: "compare: aggregate over N seeds (default 1)" },
+        Spec { name: "alpha", takes_value: true, help: "spot-load factor for adjusted HLEM (default -0.5)" },
+        Spec { name: "scorer", takes_value: true, help: "hlem scorer backend: rust | pjrt" },
+        Spec { name: "machines", takes_value: true, help: "trace machine count" },
+        Spec { name: "days", takes_value: true, help: "trace horizon in days" },
+        Spec { name: "spots", takes_value: true, help: "injected spot instances" },
+        Spec { name: "max-vms", takes_value: true, help: "cap on trace VMs (scale knob)" },
+        Spec { name: "no-profile", takes_value: false, help: "disable the /proc self-profiler" },
+        Spec { name: "out-dir", takes_value: true, help: "CSV/JSON output directory (default results/)" },
+        Spec { name: "advisor", takes_value: true, help: "real spot-advisor JSON (else synthetic)" },
+        Spec { name: "help", takes_value: false, help: "show help" },
+    ]
+}
+
+fn usage() -> String {
+    format!(
+        "usage: cloudmarket <quickstart|compare|trace|trace-analysis|advisor|tables> [flags]\n{}",
+        render_help(&specs())
+    )
+}
+
+fn run(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(argv, &specs())?;
+    if args.has("help") || args.positional.is_empty() {
+        println!("{}", usage());
+        return Ok(());
+    }
+    let out_dir = PathBuf::from(args.get_or("out-dir", "results"));
+    match args.positional[0].as_str() {
+        "quickstart" => cmd_quickstart(),
+        "compare" => cmd_compare(&args, &out_dir),
+        "trace" => cmd_trace(&args, &out_dir),
+        "trace-analysis" => cmd_trace_analysis(&args),
+        "advisor" => cmd_advisor(&args),
+        "tables" => {
+            println!("{}", cloudmarket::config::catalog::host_table().render());
+            println!("{}", cloudmarket::config::catalog::vm_table().render());
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n{}", usage())),
+    }
+}
+
+/// The §VII-A minimal example: one host, one spot + one delayed on-demand
+/// VM, hibernation and resumption.
+fn cmd_quickstart() -> Result<(), String> {
+    use cloudmarket::cloudlet::Cloudlet;
+    use cloudmarket::engine::{Engine, EngineConfig};
+    use cloudmarket::infra::HostSpec;
+    use cloudmarket::metrics::tables;
+    use cloudmarket::vm::{SpotConfig, Vm, VmSpec};
+
+    let mut cfg = EngineConfig::default();
+    cfg.min_dt = 0.5; // new CloudSim(0.5)
+    cfg.vm_destruction_delay = 1.0; // setVmDestructionDelay(1)
+    let mut engine = Engine::new(cfg, Box::new(HlemVmp::plain()));
+    let dc = engine.add_datacenter("dc0", 1.0);
+    engine.add_host(dc, HostSpec::new(2, 1000.0, 2_048.0, 10_000.0, 1_000_000.0));
+
+    let spot_cfg = SpotConfig::hibernate()
+        .with_min_running(0.0)
+        .with_warning(0.0)
+        .with_hibernation_timeout(100.0);
+    let spot = engine.submit_vm(
+        Vm::spot(0, VmSpec::new(1000.0, 2), spot_cfg).with_persistent(60.0),
+    );
+    engine.submit_cloudlet(Cloudlet::new(0, 20_000.0, 2).with_vm(spot));
+
+    let od = engine.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 2)).with_delay(10.0));
+    engine.submit_cloudlet(Cloudlet::new(0, 20_000.0, 2).with_vm(od));
+
+    engine.terminate_at(70.0); // simulation.terminateAt(70)
+    let report = engine.run();
+
+    let all: Vec<usize> = (0..engine.world.vms.len()).collect();
+    println!("{}", tables::dynamic_vm_table(&engine.world, &all).render());
+    println!("{}", tables::spot_vm_table(&engine.world, &all).render());
+    println!("{}", tables::execution_table(&engine.world, &all).render());
+    println!("{}", report.render());
+    Ok(())
+}
+
+fn make_hlem(args: &Args, adjusted: bool) -> Result<Box<dyn AllocationPolicy>, String> {
+    let alpha = args.get_f64("alpha", -0.5)?;
+    let cfg = if adjusted {
+        HlemConfig::adjusted().with_alpha(alpha)
+    } else {
+        HlemConfig::plain()
+    };
+    Ok(match args.get_or("scorer", "rust").as_str() {
+        "rust" => Box::new(HlemVmp::new(cfg)),
+        "pjrt" => {
+            let engine = std::rc::Rc::new(
+                cloudmarket::runtime::PjrtEngine::load_default()
+                    .map_err(|e| format!("loading artifacts: {e:#}"))?,
+            );
+            Box::new(HlemVmp::with_scorer(
+                cfg,
+                Box::new(cloudmarket::runtime::PjrtScorer::new(engine)),
+            ))
+        }
+        other => return Err(format!("unknown scorer '{other}'")),
+    })
+}
+
+fn cmd_compare(args: &Args, out_dir: &std::path::Path) -> Result<(), String> {
+    let seed = args.get_u64("seed", 20_250_710)?;
+    let cfg = ComparisonConfig { seed, ..Default::default() };
+
+    println!("{}", cloudmarket::config::catalog::host_table().render());
+    println!("{}", cloudmarket::config::catalog::vm_table().render());
+
+    let mut outcomes = Vec::new();
+    let policies: Vec<(&str, Box<dyn AllocationPolicy>)> = vec![
+        ("first-fit", Box::new(FirstFit::new())),
+        ("hlem-vmp", make_hlem(args, false)?),
+        ("hlem-vmp-adjusted", make_hlem(args, true)?),
+    ];
+    for (name, policy) in policies {
+        eprintln!("running {name} ...");
+        outcomes.push(compare::run_policy(move || policy, &cfg));
+    }
+
+    println!("{}", compare::fig14_table(&outcomes).render());
+    println!("{}", compare::fig15_table(&outcomes).render());
+    println!("{}", compare::shape_summary(&outcomes));
+    for o in &outcomes {
+        println!("\n[{}] {}", o.policy, o.report.render());
+    }
+    compare::fig13_csv(&outcomes)
+        .write_file(&out_dir.join("fig13_active_instances.csv"))
+        .map_err(|e| e.to_string())?;
+    println!("\nwrote {}", out_dir.join("fig13_active_instances.csv").display());
+
+    let runs = args.get_usize("runs", 1)?;
+    if runs > 1 {
+        eprintln!("aggregating over {runs} seeds ...");
+        let aggs = compare::run_multi(&cfg, runs);
+        println!("{}", compare::aggregate_table(&aggs).render());
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &Args, out_dir: &std::path::Path) -> Result<(), String> {
+    let mut cfg = trace_sim::TraceSimConfig::default();
+    cfg.synth.seed = args.get_u64("seed", 42)?;
+    cfg.synth.machines = args.get_usize("machines", cfg.synth.machines)?;
+    cfg.synth.days = args.get_f64("days", cfg.synth.days)?;
+    cfg.workload.spot_instances = args.get_usize("spots", cfg.workload.spot_instances)?;
+    cfg.workload.max_trace_vms = args.get_usize("max-vms", cfg.workload.max_trace_vms)?;
+    cfg.profile = !args.has("no-profile");
+
+    eprintln!(
+        "simulating {} machines x {:.1} days, {} spots ...",
+        cfg.synth.machines, cfg.synth.days, cfg.workload.spot_instances
+    );
+    let out = trace_sim::run(&cfg);
+    println!("{}", trace_sim::results_table(&out).render());
+    println!("{}", out.series.ascii_chart("spot_running", 100, 12));
+
+    trace_sim::fig12_csv(&out)
+        .write_file(&out_dir.join("fig12_active_instances.csv"))
+        .map_err(|e| e.to_string())?;
+    if let Some(prof) = &out.selfprof {
+        prof.to_csv()
+            .write_file(&out_dir.join("fig10_11_selfprofile.csv"))
+            .map_err(|e| e.to_string())?;
+        println!(
+            "self-profile: cpu peak {:.0}%  rss peak {:.0} MB ({} samples)",
+            prof.max_of("cpu_pct").unwrap_or(0.0),
+            prof.max_of("rss_mb").unwrap_or(0.0),
+            prof.len()
+        );
+    }
+    println!("wrote {}", out_dir.join("fig12_active_instances.csv").display());
+    Ok(())
+}
+
+fn cmd_trace_analysis(args: &Args) -> Result<(), String> {
+    let seed = args.get_u64("seed", 42)?;
+    let machines = args.get_usize("machines", 200)?;
+    eprintln!("generating 30-day trace ({machines} machines) ...");
+    let trace = trace_analysis::month_trace(seed, machines);
+    println!("{}", trace_analysis::fig7_table(&trace).render());
+    println!("{}", trace_analysis::fig8_table(&trace).render());
+    println!("{}", trace_analysis::fig9_table(&trace).render());
+    Ok(())
+}
+
+fn cmd_advisor(args: &Args) -> Result<(), String> {
+    let seed = args.get_u64("seed", 7)?;
+    let path = args.get("advisor").map(PathBuf::from);
+    let ds = advisor::dataset(path.as_deref(), seed);
+    println!("dataset: {} instance types, {} families", ds.rows.len(), ds.family_names.len());
+    println!("{}", advisor::class_distribution_table(&ds).render());
+    println!("{}", advisor::fig16_table(&ds).render());
+    Ok(())
+}

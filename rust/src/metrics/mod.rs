@@ -1,0 +1,11 @@
+//! Simulation output and monitoring (paper §IV-B "Simulation output and
+//! monitoring" + §V-E(e,f)): time series, lifecycle log, table builders,
+//! and a /proc-based self-profiler for the paper's Figs. 10-11.
+
+pub mod recorder;
+pub mod selfprof;
+pub mod series;
+pub mod tables;
+
+pub use recorder::{LifecycleEvent, LifecycleKind, Recorder};
+pub use series::TimeSeries;

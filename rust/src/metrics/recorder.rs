@@ -1,0 +1,138 @@
+//! Lifecycle event log + aggregate counters (paper §IV-B: "log execution
+//! history, interruption counts, and average interruption times").
+
+use super::series::TimeSeries;
+use crate::vm::VmId;
+
+/// Kind of lifecycle event recorded for observability.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LifecycleKind {
+    Submitted,
+    Allocated,
+    AllocationFailed,
+    InterruptWarned,
+    Hibernated,
+    Resumed,
+    Terminated,
+    Finished,
+    Failed,
+    WaitingExpired,
+    HibernationTimedOut,
+}
+
+impl std::fmt::Display for LifecycleKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            LifecycleKind::Submitted => "SUBMITTED",
+            LifecycleKind::Allocated => "ALLOCATED",
+            LifecycleKind::AllocationFailed => "ALLOCATION_FAILED",
+            LifecycleKind::InterruptWarned => "INTERRUPT_WARNED",
+            LifecycleKind::Hibernated => "HIBERNATED",
+            LifecycleKind::Resumed => "RESUMED",
+            LifecycleKind::Terminated => "TERMINATED",
+            LifecycleKind::Finished => "FINISHED",
+            LifecycleKind::Failed => "FAILED",
+            LifecycleKind::WaitingExpired => "WAITING_EXPIRED",
+            LifecycleKind::HibernationTimedOut => "HIBERNATION_TIMED_OUT",
+        };
+        f.write_str(s)
+    }
+}
+
+/// One recorded lifecycle transition.
+#[derive(Debug, Clone, Copy)]
+pub struct LifecycleEvent {
+    pub time: f64,
+    pub vm: VmId,
+    pub kind: LifecycleKind,
+}
+
+/// Collects everything the evaluation section needs from one run.
+pub struct Recorder {
+    /// Sampled state series: active counts + utilization (Figs. 12/13 +
+    /// cluster-view of Figs. 10/11).
+    pub series: TimeSeries,
+    /// Per-VM lifecycle log, capped at `max_events`.
+    pub events: Vec<LifecycleEvent>,
+    max_events: usize,
+    dropped_events: u64,
+    /// Total capacity-driven spot interruptions (Fig. 14 metric).
+    pub interruptions: u64,
+    /// Interruptions resolved by hibernation vs termination.
+    pub hibernations: u64,
+    pub spot_terminations: u64,
+    /// Successful redeployments of hibernated VMs.
+    pub redeployments: u64,
+    /// Allocation attempts / failures (engine health).
+    pub alloc_attempts: u64,
+    pub alloc_failures: u64,
+}
+
+impl Recorder {
+    pub fn new(max_events: usize) -> Self {
+        Recorder {
+            series: TimeSeries::new(&[
+                "od_running",
+                "spot_running",
+                "hibernated",
+                "waiting",
+                "used_pes",
+                "total_pes",
+                "ram_used_frac",
+                "cpu_used_frac",
+            ]),
+            events: Vec::new(),
+            max_events,
+            dropped_events: 0,
+            interruptions: 0,
+            hibernations: 0,
+            spot_terminations: 0,
+            redeployments: 0,
+            alloc_attempts: 0,
+            alloc_failures: 0,
+        }
+    }
+
+    pub fn log(&mut self, time: f64, vm: VmId, kind: LifecycleKind) {
+        if self.events.len() < self.max_events {
+            self.events.push(LifecycleEvent { time, vm, kind });
+        } else {
+            self.dropped_events += 1;
+        }
+    }
+
+    /// Events dropped due to the cap (observability: no silent truncation).
+    pub fn dropped_events(&self) -> u64 {
+        self.dropped_events
+    }
+
+    pub fn events_of(&self, vm: VmId) -> Vec<&LifecycleEvent> {
+        self.events.iter().filter(|e| e.vm == vm).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_and_query() {
+        let mut r = Recorder::new(10);
+        r.log(1.0, 3, LifecycleKind::Submitted);
+        r.log(2.0, 3, LifecycleKind::Allocated);
+        r.log(2.0, 4, LifecycleKind::Submitted);
+        assert_eq!(r.events_of(3).len(), 2);
+        assert_eq!(r.events_of(4).len(), 1);
+        assert_eq!(r.dropped_events(), 0);
+    }
+
+    #[test]
+    fn cap_drops_but_counts() {
+        let mut r = Recorder::new(2);
+        for i in 0..5 {
+            r.log(i as f64, 0, LifecycleKind::Submitted);
+        }
+        assert_eq!(r.events.len(), 2);
+        assert_eq!(r.dropped_events(), 3);
+    }
+}

@@ -1,0 +1,115 @@
+//! Self-profiler: samples this process's CPU and memory usage from /proc
+//! while a simulation runs - reproducing the paper's Figs. 10-11 ("CPU /
+//! memory utilization during one-day simulation"), which chart the
+//! *simulator process*, not the simulated cluster.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::series::TimeSeries;
+
+/// One /proc snapshot.
+#[derive(Debug, Clone, Copy)]
+struct Snapshot {
+    /// Process CPU time (user+sys) in clock ticks.
+    cpu_ticks: u64,
+    /// Resident set size in MB.
+    rss_mb: f64,
+}
+
+fn read_snapshot() -> Option<Snapshot> {
+    let stat = std::fs::read_to_string("/proc/self/stat").ok()?;
+    // Fields 14 (utime) and 15 (stime), 1-indexed, after the comm field
+    // which may contain spaces - find the closing paren first.
+    let rest = &stat[stat.rfind(')')? + 2..];
+    let fields: Vec<&str> = rest.split_whitespace().collect();
+    let utime: u64 = fields.get(11)?.parse().ok()?;
+    let stime: u64 = fields.get(12)?.parse().ok()?;
+    let statm = std::fs::read_to_string("/proc/self/statm").ok()?;
+    let rss_pages: u64 = statm.split_whitespace().nth(1)?.parse().ok()?;
+    let page_kb = 4; // x86-64/aarch64 default page size
+    Some(Snapshot { cpu_ticks: utime + stime, rss_mb: (rss_pages * page_kb) as f64 / 1024.0 })
+}
+
+/// Background sampler thread producing a (cpu_pct, rss_mb) time series.
+pub struct SelfProfiler {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<TimeSeries>>,
+}
+
+impl SelfProfiler {
+    /// Start sampling every `period`.
+    pub fn start(period: Duration) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            let mut series = TimeSeries::new(&["cpu_pct", "rss_mb"]);
+            let ticks_per_sec = 100.0; // CLK_TCK on linux
+            let t0 = Instant::now();
+            let mut prev = read_snapshot();
+            let mut prev_t = t0;
+            while !stop2.load(Ordering::Relaxed) {
+                std::thread::sleep(period);
+                let now = Instant::now();
+                if let (Some(p), Some(c)) = (prev, read_snapshot()) {
+                    let dt = now.duration_since(prev_t).as_secs_f64();
+                    let cpu_pct = if dt > 0.0 {
+                        100.0 * (c.cpu_ticks.saturating_sub(p.cpu_ticks)) as f64
+                            / ticks_per_sec
+                            / dt
+                    } else {
+                        0.0
+                    };
+                    series.push(now.duration_since(t0).as_secs_f64(), vec![cpu_pct, c.rss_mb]);
+                    prev = Some(c);
+                    prev_t = now;
+                }
+            }
+            series
+        });
+        SelfProfiler { stop, handle: Some(handle) }
+    }
+
+    /// Stop sampling and return the collected series.
+    pub fn stop(mut self) -> TimeSeries {
+        self.stop.store(true, Ordering::Relaxed);
+        self.handle.take().expect("profiler already stopped").join().expect("profiler panicked")
+    }
+}
+
+impl Drop for SelfProfiler {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reads_proc() {
+        let s = read_snapshot().expect("should read /proc on linux");
+        assert!(s.rss_mb > 0.0);
+    }
+
+    #[test]
+    fn profiler_collects_samples() {
+        let p = SelfProfiler::start(Duration::from_millis(20));
+        // burn some cpu so the percentage is nonzero at least once
+        let mut acc: u64 = 0;
+        let t0 = Instant::now();
+        while t0.elapsed() < Duration::from_millis(120) {
+            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1);
+        }
+        std::hint::black_box(acc);
+        let series = p.stop();
+        assert!(series.len() >= 2, "got {} samples", series.len());
+        assert!(series.max_of("rss_mb").unwrap() > 0.0);
+    }
+}

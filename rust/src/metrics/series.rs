@@ -1,0 +1,175 @@
+//! Named multi-column time series with CSV export - the raw material of
+//! the paper's Figs. 12 and 13 (active instances over time) and 10-11
+//! (utilization during simulation).
+
+use crate::util::csv::{fmt_num, Csv};
+
+/// A time series: one time column plus N named value columns.
+#[derive(Debug, Clone)]
+pub struct TimeSeries {
+    columns: Vec<String>,
+    times: Vec<f64>,
+    values: Vec<Vec<f64>>, // values[row][col]
+}
+
+impl TimeSeries {
+    pub fn new(columns: &[&str]) -> Self {
+        TimeSeries {
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            times: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    pub fn columns(&self) -> &[String] {
+        &self.columns
+    }
+
+    pub fn len(&self) -> usize {
+        self.times.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.times.is_empty()
+    }
+
+    /// Append a sample; `row` must match the column count and time must be
+    /// non-decreasing.
+    pub fn push(&mut self, t: f64, row: Vec<f64>) {
+        assert_eq!(row.len(), self.columns.len(), "series row width mismatch");
+        if let Some(&last) = self.times.last() {
+            assert!(t + 1e-9 >= last, "series time went backwards: {t} < {last}");
+        }
+        self.times.push(t);
+        self.values.push(row);
+    }
+
+    pub fn times(&self) -> &[f64] {
+        &self.times
+    }
+
+    /// Column values by name.
+    pub fn column(&self, name: &str) -> Option<Vec<f64>> {
+        let idx = self.columns.iter().position(|c| c == name)?;
+        Some(self.values.iter().map(|r| r[idx]).collect())
+    }
+
+    /// Peak value of a column.
+    pub fn max_of(&self, name: &str) -> Option<f64> {
+        self.column(name)?.into_iter().reduce(f64::max)
+    }
+
+    pub fn to_csv(&self) -> Csv {
+        let mut header = vec!["time"];
+        header.extend(self.columns.iter().map(|s| s.as_str()));
+        let mut csv = Csv::new(&header);
+        for (t, row) in self.times.iter().zip(&self.values) {
+            let mut r = vec![fmt_num(*t)];
+            r.extend(row.iter().map(|v| fmt_num(*v)));
+            csv.push(r);
+        }
+        csv
+    }
+
+    /// Downsample to at most `n` evenly-spaced rows (for terminal plots).
+    pub fn downsample(&self, n: usize) -> TimeSeries {
+        if self.len() <= n || n == 0 {
+            return self.clone();
+        }
+        let mut out = TimeSeries {
+            columns: self.columns.clone(),
+            times: Vec::with_capacity(n),
+            values: Vec::with_capacity(n),
+        };
+        for i in 0..n {
+            let idx = i * (self.len() - 1) / (n - 1).max(1);
+            out.times.push(self.times[idx]);
+            out.values.push(self.values[idx].clone());
+        }
+        out
+    }
+
+    /// Render an ASCII sparkline-style chart of one column (terminal
+    /// stand-in for the paper's line figures).
+    pub fn ascii_chart(&self, name: &str, width: usize, height: usize) -> String {
+        let Some(vals) = self.column(name) else {
+            return format!("(no column {name})");
+        };
+        if vals.is_empty() {
+            return "(empty series)".into();
+        }
+        let ds: Vec<f64> = if vals.len() > width {
+            (0..width).map(|i| vals[i * (vals.len() - 1) / (width - 1).max(1)]).collect()
+        } else {
+            vals.clone()
+        };
+        let lo = ds.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = ds.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let span = (hi - lo).max(1e-12);
+        let mut grid = vec![vec![b' '; ds.len()]; height];
+        for (x, v) in ds.iter().enumerate() {
+            let y = (((v - lo) / span) * (height as f64 - 1.0)).round() as usize;
+            grid[height - 1 - y][x] = b'*';
+        }
+        let mut out = format!("{name}  [{lo:.1} .. {hi:.1}]\n");
+        for row in grid {
+            out.push_str(std::str::from_utf8(&row).unwrap());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TimeSeries {
+        let mut s = TimeSeries::new(&["a", "b"]);
+        s.push(0.0, vec![1.0, 10.0]);
+        s.push(1.0, vec![2.0, 20.0]);
+        s.push(2.0, vec![3.0, 15.0]);
+        s
+    }
+
+    #[test]
+    fn push_and_column_access() {
+        let s = sample();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.column("a").unwrap(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(s.max_of("b"), Some(20.0));
+        assert!(s.column("zzz").is_none());
+    }
+
+    #[test]
+    fn csv_export() {
+        let csv = sample().to_csv();
+        assert!(csv.to_string().starts_with("time,a,b\n0,1,10\n"));
+    }
+
+    #[test]
+    fn downsample_keeps_endpoints() {
+        let mut s = TimeSeries::new(&["v"]);
+        for i in 0..100 {
+            s.push(i as f64, vec![i as f64]);
+        }
+        let d = s.downsample(10);
+        assert_eq!(d.len(), 10);
+        assert_eq!(d.times()[0], 0.0);
+        assert_eq!(*d.times().last().unwrap(), 99.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "backwards")]
+    fn rejects_time_regression() {
+        let mut s = TimeSeries::new(&["v"]);
+        s.push(5.0, vec![0.0]);
+        s.push(1.0, vec![0.0]);
+    }
+
+    #[test]
+    fn ascii_chart_renders() {
+        let c = sample().ascii_chart("a", 40, 5);
+        assert!(c.contains('*'));
+    }
+}

@@ -1,0 +1,169 @@
+//! Table builders mirroring the paper's reporting classes (§V-E(f)):
+//! `DynamicVmTableBuilder` (Fig. 5), `SpotVmTableBuilder` (Fig. 6) and
+//! `ExecutionTableBuilder`, each renderable as text and exportable as CSV.
+
+use crate::engine::world::World;
+use crate::util::csv::fmt_num;
+use crate::util::table::{Align, TextTable};
+use crate::vm::{Vm, VmId, VmType};
+
+/// Fig. 5: one row per VM with its lifecycle summary.
+pub fn dynamic_vm_table(world: &World, vms: &[VmId]) -> TextTable {
+    let mut t = TextTable::new("SIMULATION RESULTS")
+        .column("Broker", Align::Right)
+        .column("VM", Align::Right)
+        .column("DC", Align::Right)
+        .column("Host", Align::Right)
+        .column("Host PEs", Align::Right)
+        .column("VM PEs", Align::Right)
+        .column("Start Time", Align::Right)
+        .column("Stop Time", Align::Right)
+        .column("Delay", Align::Right)
+        .column("Type", Align::Left)
+        .column("State", Align::Left);
+    for &v in vms {
+        let vm = &world.vms[v];
+        let host = vm
+            .history
+            .intervals()
+            .last()
+            .map(|iv| iv.host)
+            .or(vm.host);
+        let host_pes = host.map(|h| world.hosts[h].spec.pes);
+        t.push(vec![
+            vm.broker.to_string(),
+            vm.id.to_string(),
+            host.map(|h| world.hosts[h].dc.to_string()).unwrap_or_else(|| "-".into()),
+            host.map(|h| h.to_string()).unwrap_or_else(|| "-".into()),
+            host_pes.map(|p| p.to_string()).unwrap_or_else(|| "-".into()),
+            vm.spec.pes.to_string(),
+            vm.history.first_start().map(fmt_num).unwrap_or_else(|| "-".into()),
+            vm.stopped_at.or(vm.history.last_stop()).map(fmt_num).unwrap_or_else(|| "-".into()),
+            fmt_num(vm.submission_delay),
+            vm.vm_type.to_string(),
+            vm.state.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Fig. 6: spot-only table including average interruption time.
+pub fn spot_vm_table(world: &World, vms: &[VmId]) -> TextTable {
+    let mut t = TextTable::new("SPOT INSTANCE RESULTS")
+        .column("Broker", Align::Right)
+        .column("VM", Align::Right)
+        .column("Host", Align::Right)
+        .column("VM PEs", Align::Right)
+        .column("Start", Align::Right)
+        .column("Stop", Align::Right)
+        .column("Interruptions", Align::Right)
+        .column("State", Align::Left)
+        .column("Avg Interruption s", Align::Right);
+    for &v in vms {
+        let vm = &world.vms[v];
+        if vm.vm_type != VmType::Spot {
+            continue;
+        }
+        t.push(vec![
+            vm.broker.to_string(),
+            vm.id.to_string(),
+            vm.history
+                .intervals()
+                .last()
+                .map(|iv| iv.host.to_string())
+                .unwrap_or_else(|| "-".into()),
+            vm.spec.pes.to_string(),
+            vm.history.first_start().map(fmt_num).unwrap_or_else(|| "-".into()),
+            vm.stopped_at.or(vm.history.last_stop()).map(fmt_num).unwrap_or_else(|| "-".into()),
+            vm.interruptions.to_string(),
+            vm.state.to_string(),
+            vm.history.average_interruption_time().map(fmt_num).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t
+}
+
+/// `ExecutionTableBuilder`: one row per execution interval of each VM.
+pub fn execution_table(world: &World, vms: &[VmId]) -> TextTable {
+    let mut t = TextTable::new("EXECUTION HISTORY")
+        .column("VM", Align::Right)
+        .column("Type", Align::Left)
+        .column("Interval", Align::Right)
+        .column("Host", Align::Right)
+        .column("Start", Align::Right)
+        .column("Stop", Align::Right)
+        .column("Duration", Align::Right);
+    for &v in vms {
+        let vm: &Vm = &world.vms[v];
+        for (i, iv) in vm.history.intervals().iter().enumerate() {
+            t.push(vec![
+                vm.id.to_string(),
+                vm.vm_type.to_string(),
+                i.to_string(),
+                iv.host.to_string(),
+                fmt_num(iv.start),
+                iv.stop.map(fmt_num).unwrap_or_else(|| "-".into()),
+                iv.stop.map(|s| fmt_num(s - iv.start)).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infra::HostSpec;
+    use crate::vm::{SpotConfig, VmSpec, VmState};
+
+    fn world() -> (World, VmId, VmId) {
+        let mut w = World::new();
+        let dc = w.add_datacenter("dc", 1.0);
+        let h = w.add_host(dc, HostSpec::new(8, 1000.0, 16_384.0, 5_000.0, 200_000.0), 0.0);
+        let od = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, 4)));
+        let sp = w.add_vm(Vm::spot(0, VmSpec::new(1000.0, 2), SpotConfig::hibernate()));
+        // Simulate lifecycles.
+        w.vms[od].transition(VmState::Running);
+        w.vms[od].history.record_start(h, 10.0);
+        w.vms[od].history.record_stop(32.0);
+        w.vms[od].state = VmState::Finished;
+        w.vms[od].stopped_at = Some(32.0);
+        w.vms[sp].transition(VmState::Running);
+        w.vms[sp].history.record_start(h, 0.0);
+        w.vms[sp].history.record_stop(10.0);
+        w.vms[sp].history.record_start(h, 32.0);
+        w.vms[sp].history.record_stop(43.0);
+        w.vms[sp].interruptions = 1;
+        w.vms[sp].state = VmState::Finished;
+        w.vms[sp].stopped_at = Some(43.0);
+        (w, od, sp)
+    }
+
+    #[test]
+    fn dynamic_table_has_both_vms() {
+        let (w, od, sp) = world();
+        let t = dynamic_vm_table(&w, &[od, sp]);
+        assert_eq!(t.row_count(), 2);
+        let rendered = t.render();
+        assert!(rendered.contains("On-Demand"));
+        assert!(rendered.contains("Spot"));
+        assert!(rendered.contains("FINISHED"));
+    }
+
+    #[test]
+    fn spot_table_filters_and_reports_interruption() {
+        let (w, od, sp) = world();
+        let t = spot_vm_table(&w, &[od, sp]);
+        assert_eq!(t.row_count(), 1); // only the spot VM
+        let rendered = t.render();
+        assert!(rendered.contains("22")); // 32 - 10 gap
+    }
+
+    #[test]
+    fn execution_table_lists_intervals() {
+        let (w, od, sp) = world();
+        let t = execution_table(&w, &[od, sp]);
+        assert_eq!(t.row_count(), 3); // 1 od interval + 2 spot intervals
+        assert!(t.to_csv().to_string().contains("Spot"));
+    }
+}

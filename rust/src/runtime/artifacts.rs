@@ -1,0 +1,91 @@
+//! Artifact manifest: shapes + provenance written by `python/compile/aot.py`
+//! (`artifacts/MANIFEST.json`), validated on load so a stale or mismatched
+//! artifact fails loudly instead of mis-scoring.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json;
+
+/// Parsed MANIFEST.json.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub source_hash: String,
+    pub jax_version: String,
+    pub hlem_file: String,
+    pub max_hosts: usize,
+    pub dims: usize,
+    pub step_file: String,
+    pub max_cloudlets: usize,
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("MANIFEST.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&text).map_err(|e| anyhow::anyhow!("parsing MANIFEST.json: {e}"))?;
+
+        let get_str = |keys: &[&str]| -> Result<String> {
+            Ok(v.path(keys)
+                .and_then(|x| x.as_str())
+                .with_context(|| format!("MANIFEST missing {keys:?}"))?
+                .to_string())
+        };
+        let get_num = |keys: &[&str]| -> Result<usize> {
+            Ok(v.path(keys)
+                .and_then(|x| x.as_f64())
+                .with_context(|| format!("MANIFEST missing {keys:?}"))? as usize)
+        };
+
+        let m = ArtifactManifest {
+            source_hash: get_str(&["source_hash"])?,
+            jax_version: get_str(&["jax_version"])?,
+            hlem_file: get_str(&["entry_points", "hlem_score", "file"])?,
+            max_hosts: get_num(&["entry_points", "hlem_score", "max_hosts"])?,
+            dims: get_num(&["entry_points", "hlem_score", "dims"])?,
+            step_file: get_str(&["entry_points", "cloudlet_step", "file"])?,
+            max_cloudlets: get_num(&["entry_points", "cloudlet_step", "max_cloudlets"])?,
+        };
+        anyhow::ensure!(m.dims == 4, "artifact dims {} != engine DIMS 4", m.dims);
+        anyhow::ensure!(m.max_hosts > 0 && m.max_cloudlets > 0, "degenerate artifact shapes");
+        Ok(m)
+    }
+}
+
+/// `artifacts/` next to the workspace root (env `CLOUDMARKET_ARTIFACTS`
+/// overrides; useful for tests and packaged installs).
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("CLOUDMARKET_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    // CARGO_MANIFEST_DIR points at the workspace root for this crate.
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True when the AOT artifacts are present (tests gate on this so the
+/// pure-rust suite still runs before `make artifacts`).
+pub fn artifacts_available() -> bool {
+    let dir = default_artifacts_dir();
+    dir.join("MANIFEST.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_when_artifacts_built() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = ArtifactManifest::load(&default_artifacts_dir()).unwrap();
+        assert_eq!(m.dims, 4);
+        assert!(m.max_hosts >= 1);
+        assert!(m.max_cloudlets >= 1);
+        assert!(default_artifacts_dir().join(&m.hlem_file).exists());
+        assert!(default_artifacts_dir().join(&m.step_file).exists());
+    }
+}

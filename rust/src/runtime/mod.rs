@@ -1,0 +1,119 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the L3 hot path.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
+//! protos with 64-bit instruction ids which xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md and
+//! DESIGN.md §5). Each artifact is compiled once at load time; executions
+//! are synchronous (the DES is single-threaded by design).
+
+pub mod artifacts;
+pub mod pjrt_scorer;
+pub mod pjrt_step;
+
+pub use artifacts::{default_artifacts_dir, ArtifactManifest};
+pub use pjrt_scorer::PjrtScorer;
+pub use pjrt_step::{PjrtBackend, PjrtStep};
+
+use anyhow::{Context, Result};
+
+/// A PJRT CPU client plus the compiled executables for both artifacts.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    hlem: xla::PjRtLoadedExecutable,
+    step: xla::PjRtLoadedExecutable,
+    pub manifest: ArtifactManifest,
+}
+
+impl PjrtEngine {
+    /// Load and compile both artifacts from `dir` (usually `artifacts/`).
+    pub fn load(dir: &std::path::Path) -> Result<Self> {
+        let manifest = ArtifactManifest::load(dir)
+            .with_context(|| format!("loading MANIFEST.json from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+
+        let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).with_context(|| format!("compiling {}", path.display()))
+        };
+
+        let hlem = compile(&manifest.hlem_file)?;
+        let step = compile(&manifest.step_file)?;
+        Ok(PjrtEngine { client, hlem, step, manifest })
+    }
+
+    /// Convenience: load from the default `artifacts/` directory.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&default_artifacts_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute the hlem_score artifact on padded f32 buffers.
+    ///
+    /// All matrices are row-major `[max_hosts][dims]` flattened; returns
+    /// `(hs, ahs)` of length `max_hosts`.
+    pub fn hlem_scores_f32(
+        &self,
+        caps: &[f32],
+        free: &[f32],
+        spot_used: &[f32],
+        mask: &[f32],
+        alpha: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let h = self.manifest.max_hosts;
+        let d = self.manifest.dims;
+        assert_eq!(caps.len(), h * d, "caps must be padded to [{h},{d}]");
+        assert_eq!(free.len(), h * d);
+        assert_eq!(spot_used.len(), h * d);
+        assert_eq!(mask.len(), h);
+
+        let mat = |data: &[f32]| -> Result<xla::Literal> {
+            Ok(xla::Literal::vec1(data).reshape(&[h as i64, d as i64])?)
+        };
+        let args = [
+            mat(caps)?,
+            mat(free)?,
+            mat(spot_used)?,
+            xla::Literal::vec1(mask),
+            xla::Literal::scalar(alpha),
+        ];
+        let result = self.hlem.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        anyhow::ensure!(outs.len() == 2, "hlem artifact returned {} outputs", outs.len());
+        let mut it = outs.into_iter();
+        let hs = it.next().unwrap().to_vec::<f32>()?;
+        let ahs = it.next().unwrap().to_vec::<f32>()?;
+        Ok((hs, ahs))
+    }
+
+    /// Execute the cloudlet_step artifact on padded f32 buffers; returns
+    /// `(remaining', finished)` of length `max_cloudlets`.
+    pub fn cloudlet_step_f32(
+        &self,
+        remaining: &[f32],
+        mips: &[f32],
+        dt: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let n = self.manifest.max_cloudlets;
+        assert_eq!(remaining.len(), n, "remaining must be padded to [{n}]");
+        assert_eq!(mips.len(), n);
+        let args = [
+            xla::Literal::vec1(remaining),
+            xla::Literal::vec1(mips),
+            xla::Literal::scalar(dt),
+        ];
+        let result = self.step.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        anyhow::ensure!(outs.len() == 2, "step artifact returned {} outputs", outs.len());
+        let mut it = outs.into_iter();
+        let rem = it.next().unwrap().to_vec::<f32>()?;
+        let fin = it.next().unwrap().to_vec::<f32>()?;
+        Ok((rem, fin))
+    }
+}

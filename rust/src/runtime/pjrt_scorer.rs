@@ -1,0 +1,90 @@
+//! [`HostScorer`] backed by the PJRT-compiled hlem_score artifact.
+//!
+//! Pads host batches to the artifact's `MAX_HOSTS` and masks the padding.
+//! Batches larger than the artifact shape fall back to the pure-rust
+//! scorer *for the whole batch* - chunking would change the semantics
+//! (Eq. 3's min-max and Eq. 4's proportions are batch-global), so partial
+//! PJRT scoring would silently disagree with the oracle. The fallback is
+//! counted for observability.
+
+use std::rc::Rc;
+
+use crate::allocation::scorer::{HostScorer, RustScorer, ScoreInput};
+
+use super::PjrtEngine;
+
+/// PJRT-backed scorer (shares one engine across policies via `Rc`).
+pub struct PjrtScorer {
+    engine: Rc<PjrtEngine>,
+    fallback: RustScorer,
+    /// Calls answered by the artifact.
+    pub pjrt_calls: u64,
+    /// Calls answered by the rust fallback (batch > MAX_HOSTS).
+    pub fallback_calls: u64,
+    // reusable buffers
+    caps: Vec<f32>,
+    free: Vec<f32>,
+    spot: Vec<f32>,
+    mask: Vec<f32>,
+}
+
+impl PjrtScorer {
+    pub fn new(engine: Rc<PjrtEngine>) -> Self {
+        let hd = engine.manifest.max_hosts * engine.manifest.dims;
+        let h = engine.manifest.max_hosts;
+        PjrtScorer {
+            engine,
+            fallback: RustScorer::new(),
+            pjrt_calls: 0,
+            fallback_calls: 0,
+            caps: vec![0.0; hd],
+            free: vec![0.0; hd],
+            spot: vec![0.0; hd],
+            mask: vec![0.0; h],
+        }
+    }
+
+    pub fn max_hosts(&self) -> usize {
+        self.engine.manifest.max_hosts
+    }
+}
+
+impl HostScorer for PjrtScorer {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn scores(&mut self, input: &ScoreInput) -> (Vec<f64>, Vec<f64>) {
+        input.validate();
+        let n = input.len();
+        let h = self.engine.manifest.max_hosts;
+        let d = self.engine.manifest.dims;
+        if n > h {
+            self.fallback_calls += 1;
+            return self.fallback.scores(input);
+        }
+        self.pjrt_calls += 1;
+
+        self.caps.iter_mut().for_each(|x| *x = 0.0);
+        self.free.iter_mut().for_each(|x| *x = 0.0);
+        self.spot.iter_mut().for_each(|x| *x = 0.0);
+        self.mask.iter_mut().for_each(|x| *x = 0.0);
+        for i in 0..n {
+            for k in 0..d {
+                self.caps[i * d + k] = input.caps[i][k] as f32;
+                self.free[i * d + k] = input.free[i][k] as f32;
+                self.spot[i * d + k] = input.spot_used[i][k] as f32;
+            }
+            self.mask[i] = if input.mask[i] { 1.0 } else { 0.0 };
+        }
+
+        let (hs, ahs) = self
+            .engine
+            .hlem_scores_f32(&self.caps, &self.free, &self.spot, &self.mask, input.alpha as f32)
+            .expect("PJRT hlem_score execution failed");
+        (
+            hs[..n].iter().map(|&x| x as f64).collect(),
+            ahs[..n].iter().map(|&x| x as f64).collect(),
+        )
+    }
+}

@@ -1,0 +1,82 @@
+//! Cloudlet-progress backend executing the AOT `cloudlet_step` artifact
+//! (the L1 pallas kernel) through PJRT.
+//!
+//! Batches larger than the artifact's `MAX_CLOUDLETS` are processed in
+//! chunks - unlike host scoring, the progress update is elementwise, so
+//! chunking is semantics-preserving.
+
+use std::rc::Rc;
+
+use crate::engine::progress::ProgressBackend;
+
+use super::PjrtEngine;
+
+/// Thin handle around the compiled step executable with reusable buffers.
+pub struct PjrtStep {
+    engine: Rc<PjrtEngine>,
+    rem_buf: Vec<f32>,
+    mips_buf: Vec<f32>,
+    pub calls: u64,
+}
+
+impl PjrtStep {
+    pub fn new(engine: Rc<PjrtEngine>) -> Self {
+        let n = engine.manifest.max_cloudlets;
+        PjrtStep { engine, rem_buf: vec![0.0; n], mips_buf: vec![0.0; n], calls: 0 }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.engine.manifest.max_cloudlets
+    }
+
+    /// One chunk (<= max_cloudlets) through the artifact.
+    fn step_chunk(
+        &mut self,
+        remaining: &mut [f64],
+        mips: &[f64],
+        dt: f64,
+        base: usize,
+        finished: &mut Vec<usize>,
+    ) {
+        let n = self.engine.manifest.max_cloudlets;
+        debug_assert!(remaining.len() <= n);
+        self.rem_buf.iter_mut().for_each(|x| *x = 0.0);
+        self.mips_buf.iter_mut().for_each(|x| *x = 0.0);
+        for (i, (&r, &m)) in remaining.iter().zip(mips.iter()).enumerate() {
+            self.rem_buf[i] = r as f32;
+            self.mips_buf[i] = m as f32;
+        }
+        let (rem, fin) = self
+            .engine
+            .cloudlet_step_f32(&self.rem_buf, &self.mips_buf, dt as f32)
+            .expect("PJRT cloudlet_step execution failed");
+        self.calls += 1;
+        for i in 0..remaining.len() {
+            remaining[i] = rem[i] as f64;
+            if fin[i] > 0.5 {
+                finished.push(base + i);
+            }
+        }
+    }
+}
+
+/// [`ProgressBackend`] adapter.
+pub struct PjrtBackend(pub PjrtStep);
+
+impl ProgressBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn step(&mut self, remaining: &mut [f64], mips: &[f64], dt: f64, finished: &mut Vec<usize>) {
+        let chunk = self.0.batch_size();
+        let mut base = 0;
+        let n = remaining.len();
+        while base < n {
+            let end = (base + chunk).min(n);
+            let (rem_chunk, mips_chunk) = (&mut remaining[base..end], &mips[base..end]);
+            self.0.step_chunk(rem_chunk, mips_chunk, dt, base, finished);
+            base = end;
+        }
+    }
+}

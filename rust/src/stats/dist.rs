@@ -1,0 +1,167 @@
+//! Samplable distributions for workload synthesis.
+//!
+//! The synthetic Google-trace generator (DESIGN.md §6) uses lognormal task
+//! durations, Zipf per-user task counts and exponential interarrivals -
+//! shapes reported for the 2011 Borg trace by Reiss et al. and Tirmazi et
+//! al. (paper refs [41], [42]).
+
+use super::rng::Rng;
+
+/// A samplable univariate distribution.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Dist {
+    /// Always `value`.
+    Constant(f64),
+    /// Uniform on [lo, hi).
+    Uniform { lo: f64, hi: f64 },
+    /// Exponential with rate lambda (mean 1/lambda).
+    Exp { lambda: f64 },
+    /// Normal(mu, sigma).
+    Normal { mu: f64, sigma: f64 },
+    /// Lognormal: exp(Normal(mu, sigma)).
+    LogNormal { mu: f64, sigma: f64 },
+    /// Zipf over ranks 1..=n with exponent s (returned as f64 rank).
+    Zipf { n: u64, s: f64 },
+}
+
+impl Dist {
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            Dist::Constant(v) => v,
+            Dist::Uniform { lo, hi } => rng.uniform(lo, hi),
+            Dist::Exp { lambda } => {
+                debug_assert!(lambda > 0.0);
+                // Inverse CDF; 1-u to avoid ln(0).
+                -(1.0 - rng.next_f64()).ln() / lambda
+            }
+            Dist::Normal { mu, sigma } => mu + sigma * sample_standard_normal(rng),
+            Dist::LogNormal { mu, sigma } => (mu + sigma * sample_standard_normal(rng)).exp(),
+            Dist::Zipf { n, s } => sample_zipf(rng, n, s) as f64,
+        }
+    }
+
+    /// Sample, clamped to [lo, hi].
+    pub fn sample_clamped(&self, rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+        self.sample(rng).clamp(lo, hi)
+    }
+
+    /// Theoretical mean where closed-form (panics for Zipf; use empirics).
+    pub fn mean(&self) -> f64 {
+        match *self {
+            Dist::Constant(v) => v,
+            Dist::Uniform { lo, hi } => 0.5 * (lo + hi),
+            Dist::Exp { lambda } => 1.0 / lambda,
+            Dist::Normal { mu, .. } => mu,
+            Dist::LogNormal { mu, sigma } => (mu + 0.5 * sigma * sigma).exp(),
+            Dist::Zipf { .. } => panic!("Zipf mean not supported"),
+        }
+    }
+}
+
+/// Marsaglia polar method.
+fn sample_standard_normal(rng: &mut Rng) -> f64 {
+    loop {
+        let u = 2.0 * rng.next_f64() - 1.0;
+        let v = 2.0 * rng.next_f64() - 1.0;
+        let s = u * u + v * v;
+        if s > 0.0 && s < 1.0 {
+            return u * (-2.0 * s.ln() / s).sqrt();
+        }
+    }
+}
+
+/// Zipf via rejection-inversion (Hörmann & Derflinger), valid for s > 0,
+/// s != 1 handled via the generalized harmonic inverse-CDF fallback for
+/// small n (n <= 1024) which is exact.
+fn sample_zipf(rng: &mut Rng, n: u64, s: f64) -> u64 {
+    debug_assert!(n >= 1);
+    if n == 1 {
+        return 1;
+    }
+    // Exact inverse-CDF for modest n (the generator uses n <= few thousand).
+    let mut weights = Vec::with_capacity(n as usize);
+    let mut total = 0.0;
+    for k in 1..=n {
+        let w = 1.0 / (k as f64).powf(s);
+        total += w;
+        weights.push(total);
+    }
+    let x = rng.next_f64() * total;
+    match weights.binary_search_by(|w| w.partial_cmp(&x).unwrap()) {
+        Ok(i) => i as u64 + 1,
+        Err(i) => (i as u64 + 1).min(n),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empirical_mean(d: &Dist, seed: u64, n: usize) -> f64 {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| d.sample(&mut rng)).sum::<f64>() / n as f64
+    }
+
+    #[test]
+    fn constant_and_uniform() {
+        let mut rng = Rng::new(1);
+        assert_eq!(Dist::Constant(4.2).sample(&mut rng), 4.2);
+        let d = Dist::Uniform { lo: 2.0, hi: 6.0 };
+        for _ in 0..1000 {
+            let x = d.sample(&mut rng);
+            assert!((2.0..6.0).contains(&x));
+        }
+        assert!((empirical_mean(&d, 2, 50_000) - 4.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn exponential_mean_matches() {
+        let d = Dist::Exp { lambda: 0.5 };
+        assert!((empirical_mean(&d, 3, 100_000) - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn normal_moments_match() {
+        let d = Dist::Normal { mu: 10.0, sigma: 3.0 };
+        let mut rng = Rng::new(4);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| d.sample(&mut rng)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - 10.0).abs() < 0.05, "mean {mean}");
+        assert!((var - 9.0).abs() < 0.2, "var {var}");
+    }
+
+    #[test]
+    fn lognormal_is_positive_and_heavy_tailed() {
+        let d = Dist::LogNormal { mu: 1.0, sigma: 1.0 };
+        let mut rng = Rng::new(5);
+        let xs: Vec<f64> = (0..50_000).map(|_| d.sample(&mut rng)).collect();
+        assert!(xs.iter().all(|&x| x > 0.0));
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((mean - d.mean()).abs() / d.mean() < 0.1, "mean {mean} vs {}", d.mean());
+    }
+
+    #[test]
+    fn zipf_rank_one_dominates() {
+        let d = Dist::Zipf { n: 100, s: 1.2 };
+        let mut rng = Rng::new(6);
+        let mut counts = vec![0u32; 101];
+        for _ in 0..20_000 {
+            counts[d.sample(&mut rng) as usize] += 1;
+        }
+        assert!(counts[1] > counts[2]);
+        assert!(counts[2] > counts[10]);
+        assert!(counts.iter().skip(2).all(|&c| c < counts[1]));
+    }
+
+    #[test]
+    fn clamped_sampling() {
+        let d = Dist::Normal { mu: 0.0, sigma: 100.0 };
+        let mut rng = Rng::new(7);
+        for _ in 0..1000 {
+            let x = d.sample_clamped(&mut rng, -1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&x));
+        }
+    }
+}

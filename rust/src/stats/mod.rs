@@ -1,0 +1,15 @@
+//! Deterministic randomness and statistics substrate.
+//!
+//! The `rand` crate family does not resolve in the offline crate set
+//! (DESIGN.md §7); simulation science additionally *wants* a fully
+//! deterministic, explicitly-seeded generator so that the paper's
+//! "same randomized values reused across all simulation runs" methodology
+//! (§VII-E.2) is enforced by construction.
+
+pub mod dist;
+pub mod rng;
+pub mod summary;
+
+pub use dist::Dist;
+pub use rng::Rng;
+pub use summary::Summary;

@@ -1,0 +1,179 @@
+//! Streaming summary statistics (count/mean/min/max/stddev/percentiles)
+//! used by the metrics recorder and the bench harness.
+
+/// Accumulates samples; percentiles require keeping values (kept by default,
+/// call [`Summary::reservoir`] for bounded memory on huge streams).
+#[derive(Debug, Clone)]
+pub struct Summary {
+    values: Vec<f64>,
+    count: u64,
+    sum: f64,
+    sum_sq: f64,
+    min: f64,
+    max: f64,
+    cap: Option<usize>,
+    seen_for_reservoir: u64,
+    rng_state: u64,
+}
+
+impl Default for Summary {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary {
+            values: Vec::new(),
+            count: 0,
+            sum: 0.0,
+            sum_sq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            cap: None,
+            seen_for_reservoir: 0,
+            rng_state: 0x853c49e6748fea9b,
+        }
+    }
+
+    /// Bound kept values to `cap` via reservoir sampling (Algorithm R);
+    /// moments stay exact, percentiles become approximate.
+    pub fn reservoir(cap: usize) -> Self {
+        let mut s = Self::new();
+        s.cap = Some(cap);
+        s
+    }
+
+    fn next_rand(&mut self) -> u64 {
+        // xorshift64*; only used for reservoir replacement decisions.
+        let mut x = self.rng_state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.rng_state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    pub fn add(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.sum_sq += v * v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        match self.cap {
+            None => self.values.push(v),
+            Some(cap) => {
+                self.seen_for_reservoir += 1;
+                if self.values.len() < cap {
+                    self.values.push(v);
+                } else {
+                    let j = self.next_rand() % self.seen_for_reservoir;
+                    if (j as usize) < cap {
+                        self.values[j as usize] = v;
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 { f64::NAN } else { self.sum / self.count as f64 }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 { f64::NAN } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 { f64::NAN } else { self.max }
+    }
+
+    /// Population standard deviation.
+    pub fn stddev(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let n = self.count as f64;
+        let var = (self.sum_sq / n) - (self.sum / n) * (self.sum / n);
+        var.max(0.0).sqrt()
+    }
+
+    /// Percentile in [0, 100], nearest-rank on the kept sample.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.values.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+        sorted[rank.min(sorted.len() - 1)]
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let mut s = Summary::new();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            s.add(v);
+        }
+        assert_eq!(s.count(), 4);
+        assert_eq!(s.mean(), 2.5);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert!((s.stddev() - 1.118033988749895).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Summary::new();
+        for v in 1..=100 {
+            s.add(v as f64);
+        }
+        assert!((s.median() - 50.5).abs() <= 0.5); // nearest-rank: 50 or 51
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert!((s.percentile(95.0) - 95.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let s = Summary::new();
+        assert!(s.mean().is_nan());
+        assert!(s.percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn reservoir_keeps_exact_moments_bounded_memory() {
+        let mut s = Summary::reservoir(100);
+        for v in 0..10_000 {
+            s.add(v as f64);
+        }
+        assert_eq!(s.count(), 10_000);
+        assert_eq!(s.mean(), 4999.5);
+        assert_eq!(s.max(), 9999.0);
+        // approximate median within 15% of true
+        let med = s.median();
+        assert!((med - 5000.0).abs() < 1500.0, "median {med}");
+    }
+}

@@ -1,0 +1,110 @@
+//! Mini property-testing harness (proptest is unavailable offline,
+//! DESIGN.md §7).
+//!
+//! `forall(cases, seed, |rng| ...)` runs a closure over `cases` derived
+//! RNGs; on panic it reports the failing case index and per-case seed so
+//! the exact input reproduces with `forall(1, <that seed>, ...)`. No
+//! shrinking - generators should keep inputs small and readable instead.
+
+use crate::stats::Rng;
+
+/// Run `property` for `cases` independent seeded cases; panics with the
+/// reproducing seed on failure.
+pub fn forall<F: FnMut(&mut Rng) + std::panic::UnwindSafe + Copy>(
+    cases: u64,
+    seed: u64,
+    property: F,
+) {
+    for case in 0..cases {
+        let case_seed = seed ^ case.wrapping_mul(0x9e3779b97f4a7c15);
+        let result = std::panic::catch_unwind(move || {
+            let mut rng = Rng::new(case_seed);
+            let mut p = property;
+            p(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {case}/{cases} (reproduce with seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Generators for common simulation inputs.
+pub mod gen {
+    use crate::infra::HostSpec;
+    use crate::stats::Rng;
+    use crate::vm::{SpotConfig, VmSpec};
+
+    /// A host spec with sensible bounds (1-64 PEs etc.).
+    pub fn host_spec(rng: &mut Rng) -> HostSpec {
+        HostSpec::new(
+            rng.range_u64(1, 64) as u32,
+            rng.uniform(500.0, 3_000.0),
+            rng.uniform(1_024.0, 262_144.0),
+            rng.uniform(1_000.0, 40_000.0),
+            rng.uniform(10_000.0, 2_000_000.0),
+        )
+    }
+
+    /// A VM spec that fits on at least some reasonable host.
+    pub fn vm_spec(rng: &mut Rng) -> VmSpec {
+        VmSpec::new(rng.uniform(500.0, 2_000.0), rng.range_u64(1, 8) as u32)
+            .with_ram(rng.uniform(256.0, 8_192.0))
+            .with_bw(rng.uniform(50.0, 2_000.0))
+            .with_storage(rng.uniform(1_000.0, 100_000.0))
+    }
+
+    /// Random spot configuration.
+    pub fn spot_config(rng: &mut Rng) -> SpotConfig {
+        let base =
+            if rng.chance(0.5) { SpotConfig::hibernate() } else { SpotConfig::terminate() };
+        base.with_min_running(rng.uniform(0.0, 60.0))
+            .with_warning(rng.uniform(0.0, 30.0))
+            .with_hibernation_timeout(rng.uniform(60.0, 1_200.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static COUNT: AtomicU64 = AtomicU64::new(0);
+        forall(25, 1, |_rng| {
+            COUNT.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(COUNT.load(Ordering::Relaxed), 25);
+    }
+
+    #[test]
+    fn forall_reports_failing_seed() {
+        let result = std::panic::catch_unwind(|| {
+            forall(50, 2, |rng| {
+                // fails for roughly half the cases
+                assert!(rng.next_f64() < 0.5, "too big");
+            });
+        });
+        let msg = format!("{:?}", result.unwrap_err().downcast_ref::<String>());
+        assert!(msg.contains("reproduce with seed"), "{msg}");
+    }
+
+    #[test]
+    fn generators_produce_valid_specs() {
+        forall(50, 3, |rng| {
+            let h = gen::host_spec(rng);
+            assert!(h.pes >= 1 && h.total_mips() > 0.0);
+            let v = gen::vm_spec(rng);
+            assert!(v.pes >= 1 && v.ram > 0.0);
+            let s = gen::spot_config(rng);
+            assert!(s.warning_time >= 0.0);
+        });
+    }
+}

@@ -1,0 +1,192 @@
+//! Trace analysis: the concurrency series behind the paper's Figs. 7-9.
+//!
+//! - Fig. 7: max/min concurrently active *tasks* per day,
+//! - Fig. 8: daily distribution of max concurrently running *cloudlets*
+//!   at hourly resolution,
+//! - Fig. 9: max concurrently running cloudlets by hour-of-day.
+//!
+//! "Task" concurrency counts SUBMIT..(FINISH|FAIL|KILL|EVICT) windows;
+//! "cloudlet" concurrency counts SCHEDULE..end windows (a task only
+//! consumes resources once scheduled), mirroring the paper's distinction
+//! between task activity and simulation cloudlets.
+
+use super::event::{TaskEventKind, Trace};
+
+/// Concurrency step function: (+1 at start, -1 at end) sorted sweep;
+/// samples the active count at `resolution`-second boundaries.
+fn concurrency_samples(starts: &[f64], ends: &[f64], horizon: f64, resolution: f64) -> Vec<u64> {
+    let mut deltas: Vec<(f64, i64)> = Vec::with_capacity(starts.len() + ends.len());
+    deltas.extend(starts.iter().map(|&t| (t, 1i64)));
+    deltas.extend(ends.iter().map(|&t| (t, -1i64)));
+    deltas.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(b.1.cmp(&a.1)));
+
+    let n_bins = (horizon / resolution).ceil() as usize;
+    let mut out = Vec::with_capacity(n_bins);
+    let mut active: i64 = 0;
+    let mut di = 0;
+    let mut peak_in_bin: i64 = 0;
+    for bin in 0..n_bins {
+        let bin_end = (bin as f64 + 1.0) * resolution;
+        while di < deltas.len() && deltas[di].0 <= bin_end {
+            active += deltas[di].1;
+            peak_in_bin = peak_in_bin.max(active);
+            di += 1;
+        }
+        out.push(peak_in_bin.max(active).max(0) as u64);
+        peak_in_bin = active;
+    }
+    out
+}
+
+/// Extract (start, end) pairs for tasks (SUBMIT -> terminal event).
+fn task_windows(trace: &Trace) -> (Vec<f64>, Vec<f64>) {
+    windows(trace, TaskEventKind::Submit)
+}
+
+/// Extract (start, end) pairs for cloudlets (SCHEDULE -> terminal event).
+fn cloudlet_windows(trace: &Trace) -> (Vec<f64>, Vec<f64>) {
+    windows(trace, TaskEventKind::Schedule)
+}
+
+fn windows(trace: &Trace, start_kind: TaskEventKind) -> (Vec<f64>, Vec<f64>) {
+    use std::collections::HashMap;
+    let mut open: HashMap<(u64, u32), f64> = HashMap::new();
+    let mut starts = Vec::new();
+    let mut ends = Vec::new();
+    for ev in &trace.tasks {
+        let key = (ev.job_id, ev.task_index);
+        match ev.kind {
+            k if k == start_kind => {
+                open.entry(key).or_insert(ev.time);
+            }
+            TaskEventKind::Finish | TaskEventKind::Fail | TaskEventKind::Kill
+            | TaskEventKind::Evict => {
+                if let Some(s) = open.remove(&key) {
+                    starts.push(s);
+                    ends.push(ev.time.max(s));
+                }
+            }
+            _ => {}
+        }
+    }
+    // Still-open windows run to the horizon.
+    for (_, s) in open {
+        starts.push(s);
+        ends.push(trace.horizon);
+    }
+    (starts, ends)
+}
+
+/// Fig. 7 row: per-day (day index, max, min) of concurrently active tasks.
+pub fn fig7_daily_task_concurrency(trace: &Trace) -> Vec<(usize, u64, u64)> {
+    let (starts, ends) = task_windows(trace);
+    let samples = concurrency_samples(&starts, &ends, trace.horizon, 3_600.0); // hourly
+    per_day_max_min(&samples, 24)
+}
+
+/// Fig. 8 row: per-day (day index, max, min) of concurrently *running*
+/// cloudlets at hourly resolution.
+pub fn fig8_daily_cloudlet_concurrency(trace: &Trace) -> Vec<(usize, u64, u64)> {
+    let (starts, ends) = cloudlet_windows(trace);
+    let samples = concurrency_samples(&starts, &ends, trace.horizon, 3_600.0);
+    per_day_max_min(&samples, 24)
+}
+
+/// Fig. 9 series: for each hour-of-day 0-23, the max concurrently running
+/// cloudlets observed in that hour across all days.
+pub fn fig9_hour_of_day_peaks(trace: &Trace) -> Vec<u64> {
+    let (starts, ends) = cloudlet_windows(trace);
+    let samples = concurrency_samples(&starts, &ends, trace.horizon, 3_600.0);
+    let mut peaks = vec![0u64; 24];
+    for (i, &s) in samples.iter().enumerate() {
+        let hour = i % 24;
+        peaks[hour] = peaks[hour].max(s);
+    }
+    peaks
+}
+
+fn per_day_max_min(samples: &[u64], per_day: usize) -> Vec<(usize, u64, u64)> {
+    samples
+        .chunks(per_day)
+        .enumerate()
+        .map(|(day, chunk)| {
+            let mx = chunk.iter().copied().max().unwrap_or(0);
+            let mn = chunk.iter().copied().min().unwrap_or(0);
+            (day, mx, mn)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::event::TaskEvent;
+    use crate::trace::synth::{SynthConfig, TraceGenerator};
+
+    fn ev(time: f64, job: u64, kind: TaskEventKind) -> TaskEvent {
+        TaskEvent {
+            time,
+            job_id: job,
+            task_index: 0,
+            machine_id: Some(0),
+            kind,
+            user: 0,
+            priority: 0,
+            cpu_req: 0.1,
+            ram_req: 0.1,
+        }
+    }
+
+    #[test]
+    fn concurrency_counts_overlap() {
+        // Two overlapping tasks in hour 0, one lone task in hour 2.
+        let trace = Trace {
+            machines: vec![],
+            tasks: vec![
+                ev(100.0, 1, TaskEventKind::Submit),
+                ev(200.0, 2, TaskEventKind::Submit),
+                ev(1_000.0, 1, TaskEventKind::Finish),
+                ev(1_100.0, 2, TaskEventKind::Finish),
+                ev(8_000.0, 3, TaskEventKind::Submit),
+                ev(9_000.0, 3, TaskEventKind::Finish),
+            ],
+            horizon: 86_400.0,
+        };
+        let daily = fig7_daily_task_concurrency(&trace);
+        assert_eq!(daily.len(), 1);
+        assert_eq!(daily[0].1, 2); // max concurrency
+        assert_eq!(daily[0].2, 0); // min concurrency
+    }
+
+    #[test]
+    fn fig9_has_24_hours_and_peaks_near_peak_hour() {
+        let cfg = SynthConfig {
+            machines: 20,
+            days: 3.0,
+            tasks_per_hour: 600.0,
+            diurnal_amplitude: 0.6,
+            ..Default::default()
+        };
+        let trace = TraceGenerator::new(cfg.clone()).generate();
+        let peaks = fig9_hour_of_day_peaks(&trace);
+        assert_eq!(peaks.len(), 24);
+        let peak_hour = peaks.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0 as f64;
+        // within +-5h of the configured peak (durations smear the peak)
+        let dist = (peak_hour - cfg.peak_hour).abs().min(24.0 - (peak_hour - cfg.peak_hour).abs());
+        assert!(dist <= 5.0, "peak at hour {peak_hour}, expected near {}", cfg.peak_hour);
+    }
+
+    #[test]
+    fn fig7_and_fig8_cover_all_days() {
+        let cfg = SynthConfig { machines: 10, days: 2.0, tasks_per_hour: 120.0, ..Default::default() };
+        let trace = TraceGenerator::new(cfg).generate();
+        assert_eq!(fig7_daily_task_concurrency(&trace).len(), 2);
+        assert_eq!(fig8_daily_cloudlet_concurrency(&trace).len(), 2);
+        // Task concurrency >= cloudlet concurrency (submit precedes schedule).
+        let f7 = fig7_daily_task_concurrency(&trace);
+        let f8 = fig8_daily_cloudlet_concurrency(&trace);
+        for (a, b) in f7.iter().zip(&f8) {
+            assert!(a.1 >= b.1, "day {}: task max {} < cloudlet max {}", a.0, a.1, b.1);
+        }
+    }
+}

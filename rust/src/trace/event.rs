@@ -1,0 +1,148 @@
+//! Trace data model, mirroring the Google cluster trace 2011 schema
+//! semantics (Reiss et al., paper ref [41]): MACHINE EVENTS and TASK
+//! EVENTS tables.
+
+/// Machine event types (ADD/REMOVE/UPDATE in the published schema).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MachineEventKind {
+    Add,
+    Remove,
+    Update,
+}
+
+/// One machine-events row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MachineEvent {
+    /// Seconds since trace start (the real trace uses microseconds; the
+    /// reader converts).
+    pub time: f64,
+    pub machine_id: u64,
+    pub kind: MachineEventKind,
+    /// Normalized CPU capacity in (0, 1] (trace convention). 0 = missing.
+    pub cpu: f64,
+    /// Normalized memory capacity in (0, 1]. 0 = missing.
+    pub ram: f64,
+}
+
+/// Task event types (subset of the schema's 0-8 event codes that the
+/// simulation consumes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskEventKind {
+    Submit,
+    Schedule,
+    Evict,
+    Fail,
+    Finish,
+    Kill,
+}
+
+/// One task-events row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TaskEvent {
+    pub time: f64,
+    pub job_id: u64,
+    pub task_index: u32,
+    /// Machine the task was bound to; `None` in SUBMIT rows (the paper's
+    /// reader revision binds tasks at submission when possible, §VII-C.2a).
+    pub machine_id: Option<u64>,
+    pub kind: TaskEventKind,
+    /// Anonymized user id.
+    pub user: u32,
+    /// Priority (0-11 in the trace; >= 9 is "production" tier).
+    pub priority: u8,
+    /// Normalized resource requests in (0, 1].
+    pub cpu_req: f64,
+    pub ram_req: f64,
+}
+
+impl TaskEvent {
+    /// Production-tier tasks are the non-preemptible services (Borg);
+    /// lower priorities are preemptible batch (paper §VII-C.1a).
+    pub fn is_production(&self) -> bool {
+        self.priority >= 9
+    }
+}
+
+/// A full trace: both tables, time-sorted.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub machines: Vec<MachineEvent>,
+    pub tasks: Vec<TaskEvent>,
+    /// Trace horizon in seconds.
+    pub horizon: f64,
+}
+
+impl Trace {
+    /// Number of distinct machines seen in machine events.
+    pub fn machine_count(&self) -> usize {
+        let mut ids: Vec<u64> = self.machines.iter().map(|m| m.machine_id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids.len()
+    }
+
+    /// Number of distinct (job, task) pairs submitted.
+    pub fn task_count(&self) -> usize {
+        self.tasks.iter().filter(|t| t.kind == TaskEventKind::Submit).count()
+    }
+
+    /// Validate orderings and referential sanity; returns issue list.
+    pub fn validate(&self) -> Vec<String> {
+        let mut issues = Vec::new();
+        for w in self.machines.windows(2) {
+            if w[1].time < w[0].time {
+                issues.push(format!("machine events out of order at t={}", w[1].time));
+                break;
+            }
+        }
+        for w in self.tasks.windows(2) {
+            if w[1].time < w[0].time {
+                issues.push(format!("task events out of order at t={}", w[1].time));
+                break;
+            }
+        }
+        let submit_count = self.task_count();
+        let finish_count =
+            self.tasks.iter().filter(|t| t.kind == TaskEventKind::Finish).count();
+        if finish_count > submit_count {
+            issues.push(format!("{finish_count} finishes > {submit_count} submissions"));
+        }
+        issues
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn production_tier_threshold() {
+        let mut t = TaskEvent {
+            time: 0.0,
+            job_id: 1,
+            task_index: 0,
+            machine_id: None,
+            kind: TaskEventKind::Submit,
+            user: 0,
+            priority: 9,
+            cpu_req: 0.1,
+            ram_req: 0.1,
+        };
+        assert!(t.is_production());
+        t.priority = 2;
+        assert!(!t.is_production());
+    }
+
+    #[test]
+    fn validate_catches_disorder() {
+        let mk = |time| MachineEvent {
+            time,
+            machine_id: 1,
+            kind: MachineEventKind::Add,
+            cpu: 0.5,
+            ram: 0.5,
+        };
+        let trace = Trace { machines: vec![mk(5.0), mk(1.0)], tasks: vec![], horizon: 10.0 };
+        assert!(!trace.validate().is_empty());
+    }
+}

@@ -1,0 +1,26 @@
+//! Google-cluster-trace substrate (paper §VII-C).
+//!
+//! The real 2011 trace is a multi-GB download unavailable offline, so the
+//! substrate has three parts (substitution documented in DESIGN.md §6):
+//!
+//! - [`event`]: the trace data model (machine events + task events in the
+//!   published schema's semantics),
+//! - [`synth`]: a Borg-like synthetic generator reproducing the trace's
+//!   load *shape* (diurnal arrivals, heavy-tailed durations, Zipf users,
+//!   priority tiers, machine churn) at configurable scale,
+//! - [`reader`]/CSV round-trip: the extended trace reader of §VII-C.2(a)
+//!   (task-machine binding, hash-map lookups, EVICT/FAIL handling,
+//!   missing-attribute backfill) operating on the same CSV layout as the
+//!   real trace tables, so a downloaded trace drops in unchanged.
+//!
+//! [`analysis`] computes the paper's Figs. 7-9 series; [`workload`] turns
+//! a trace into engine VMs/cloudlets (task->VM grouping by user, §VII-C.1b).
+
+pub mod analysis;
+pub mod event;
+pub mod reader;
+pub mod synth;
+pub mod workload;
+
+pub use event::{MachineEvent, MachineEventKind, TaskEvent, TaskEventKind, Trace};
+pub use synth::{SynthConfig, TraceGenerator};

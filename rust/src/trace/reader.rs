@@ -1,0 +1,330 @@
+//! Trace CSV reader/writer in the Google cluster trace table layout
+//! (§VII-C.2a of the paper: the extended CloudSim Plus trace reader).
+//!
+//! Machine events CSV columns (published schema order):
+//! `time,machine_id,event_type,platform_id,cpus,memory`
+//! Task events CSV columns (subset):
+//! `time,missing_info,job_id,task_index,machine_id,event_type,user,
+//!  scheduling_class,priority,cpu_request,memory_request,disk_request,
+//!  different_machines_restriction`
+//!
+//! Times are microseconds in the real trace; `TIME_SCALE` converts to
+//! simulation seconds. The reader implements the paper's revisions:
+//! missing machine capacities are backfilled by replication from other
+//! machines, missing task->machine bindings are resolved from later events
+//! of the same (job, task) pair, and malformed rows are counted rather
+//! than silently dropped.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::event::{MachineEvent, MachineEventKind, TaskEvent, TaskEventKind, Trace};
+
+/// Microseconds -> seconds.
+const TIME_SCALE: f64 = 1e-6;
+
+/// Read statistics (observability - the paper excluded ~1.7% of tasks for
+/// missing mappings and reports it; so do we).
+#[derive(Debug, Default, Clone)]
+pub struct ReadStats {
+    pub machine_rows: usize,
+    pub task_rows: usize,
+    pub malformed_rows: usize,
+    pub backfilled_capacities: usize,
+    pub resolved_bindings: usize,
+    pub unresolved_bindings: usize,
+}
+
+/// Parse the machine-events table.
+pub fn read_machine_events(path: &Path, stats: &mut ReadStats) -> Result<Vec<MachineEvent>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.is_empty() || (lineno == 0 && line.starts_with("time")) {
+            continue;
+        }
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() < 6 {
+            stats.malformed_rows += 1;
+            continue;
+        }
+        let kind = match f[2] {
+            "0" => MachineEventKind::Add,
+            "1" => MachineEventKind::Remove,
+            "2" => MachineEventKind::Update,
+            _ => {
+                stats.malformed_rows += 1;
+                continue;
+            }
+        };
+        let (Ok(time), Ok(mid)) = (f[0].parse::<f64>(), f[1].parse::<u64>()) else {
+            stats.malformed_rows += 1;
+            continue;
+        };
+        out.push(MachineEvent {
+            time: time * TIME_SCALE,
+            machine_id: mid,
+            kind,
+            cpu: f[4].parse().unwrap_or(0.0),
+            ram: f[5].parse().unwrap_or(0.0),
+        });
+        stats.machine_rows += 1;
+    }
+    // Paper: "missing machine attributes were filled by replication".
+    let mean_cpu = mean_nonzero(out.iter().map(|m| m.cpu));
+    let mean_ram = mean_nonzero(out.iter().map(|m| m.ram));
+    for m in out.iter_mut() {
+        if m.cpu == 0.0 {
+            m.cpu = mean_cpu;
+            stats.backfilled_capacities += 1;
+        }
+        if m.ram == 0.0 {
+            m.ram = mean_ram;
+            stats.backfilled_capacities += 1;
+        }
+    }
+    out.sort_by(|a, b| a.time.partial_cmp(&b.time).unwrap());
+    Ok(out)
+}
+
+fn mean_nonzero(values: impl Iterator<Item = f64>) -> f64 {
+    let (mut sum, mut n) = (0.0, 0usize);
+    for v in values {
+        if v > 0.0 {
+            sum += v;
+            n += 1;
+        }
+    }
+    if n == 0 { 0.5 } else { sum / n as f64 }
+}
+
+/// Parse the task-events table with binding resolution.
+pub fn read_task_events(path: &Path, stats: &mut ReadStats) -> Result<Vec<TaskEvent>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut out: Vec<TaskEvent> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.is_empty() || (lineno == 0 && line.starts_with("time")) {
+            continue;
+        }
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() < 11 {
+            stats.malformed_rows += 1;
+            continue;
+        }
+        let kind = match f[5] {
+            "0" => TaskEventKind::Submit,
+            "1" => TaskEventKind::Schedule,
+            "2" => TaskEventKind::Evict,
+            "3" => TaskEventKind::Fail,
+            "4" => TaskEventKind::Finish,
+            "5" => TaskEventKind::Kill,
+            _ => {
+                stats.malformed_rows += 1;
+                continue;
+            }
+        };
+        let (Ok(time), Ok(job_id), Ok(task_index)) =
+            (f[0].parse::<f64>(), f[2].parse::<u64>(), f[3].parse::<u32>())
+        else {
+            stats.malformed_rows += 1;
+            continue;
+        };
+        out.push(TaskEvent {
+            time: time * TIME_SCALE,
+            job_id,
+            task_index,
+            machine_id: f[4].parse().ok(),
+            kind,
+            user: hash_user(f[6]),
+            priority: f[8].parse().unwrap_or(0),
+            cpu_req: f[9].parse().unwrap_or(0.0),
+            ram_req: f[10].parse().unwrap_or(0.0),
+        });
+        stats.task_rows += 1;
+    }
+    out.sort_by(|a, b| a.time.partial_cmp(&b.time).unwrap());
+
+    // Paper: "task events missing machine IDs were reconciled by checking
+    // subsequent events" - propagate bindings backwards per (job, task)
+    // using a hash map for O(1) lookups (§VII-C.2a item ii).
+    let mut binding: HashMap<(u64, u32), u64> = HashMap::new();
+    for ev in out.iter() {
+        if let Some(mid) = ev.machine_id {
+            binding.entry((ev.job_id, ev.task_index)).or_insert(mid);
+        }
+    }
+    for ev in out.iter_mut() {
+        if ev.machine_id.is_none() {
+            match binding.get(&(ev.job_id, ev.task_index)) {
+                Some(&mid) => {
+                    ev.machine_id = Some(mid);
+                    stats.resolved_bindings += 1;
+                }
+                None => stats.unresolved_bindings += 1,
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Read both tables from a directory holding `machine_events.csv` and
+/// `task_events.csv`.
+pub fn read_trace_dir(dir: &Path) -> Result<(Trace, ReadStats)> {
+    let mut stats = ReadStats::default();
+    let machines = read_machine_events(&dir.join("machine_events.csv"), &mut stats)?;
+    let tasks = read_task_events(&dir.join("task_events.csv"), &mut stats)?;
+    let horizon = machines
+        .iter()
+        .map(|m| m.time)
+        .chain(tasks.iter().map(|t| t.time))
+        .fold(0.0_f64, f64::max);
+    Ok((Trace { machines, tasks, horizon }, stats))
+}
+
+/// Write a trace back out in the same CSV layout (round-trip tests + lets
+/// users inspect the synthetic workload with standard tooling).
+pub fn write_trace_dir(trace: &Trace, dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut m = String::from("time,machine_id,event_type,platform_id,cpus,memory\n");
+    for ev in &trace.machines {
+        let code = match ev.kind {
+            MachineEventKind::Add => 0,
+            MachineEventKind::Remove => 1,
+            MachineEventKind::Update => 2,
+        };
+        m.push_str(&format!(
+            "{:.0},{},{},p0,{},{}\n",
+            ev.time / TIME_SCALE,
+            ev.machine_id,
+            code,
+            ev.cpu,
+            ev.ram
+        ));
+    }
+    std::fs::write(dir.join("machine_events.csv"), m)?;
+
+    let mut t = String::from(
+        "time,missing_info,job_id,task_index,machine_id,event_type,user,scheduling_class,\
+         priority,cpu_request,memory_request,disk_request,different_machines_restriction\n",
+    );
+    for ev in &trace.tasks {
+        let code = match ev.kind {
+            TaskEventKind::Submit => 0,
+            TaskEventKind::Schedule => 1,
+            TaskEventKind::Evict => 2,
+            TaskEventKind::Fail => 3,
+            TaskEventKind::Finish => 4,
+            TaskEventKind::Kill => 5,
+        };
+        t.push_str(&format!(
+            "{:.0},,{},{},{},{},u{},0,{},{},{},0,0\n",
+            ev.time / TIME_SCALE,
+            ev.job_id,
+            ev.task_index,
+            ev.machine_id.map(|m| m.to_string()).unwrap_or_default(),
+            code,
+            ev.user,
+            ev.priority,
+            ev.cpu_req,
+            ev.ram_req,
+        ));
+    }
+    std::fs::write(dir.join("task_events.csv"), t)?;
+    Ok(())
+}
+
+fn hash_user(s: &str) -> u32 {
+    // Users are opaque hashes in the trace; we only need a stable small id.
+    let mut h: u32 = 2166136261;
+    for b in s.bytes() {
+        h ^= b as u32;
+        h = h.wrapping_mul(16777619);
+    }
+    h % 100_000
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::synth::{SynthConfig, TraceGenerator};
+
+    #[test]
+    fn roundtrip_through_csv() {
+        let cfg = SynthConfig { machines: 10, days: 0.1, tasks_per_hour: 100.0, ..Default::default() };
+        let trace = TraceGenerator::new(cfg).generate();
+        let dir = std::env::temp_dir().join(format!("cm_trace_rt_{}", std::process::id()));
+        write_trace_dir(&trace, &dir).unwrap();
+        let (back, stats) = read_trace_dir(&dir).unwrap();
+        assert_eq!(back.machines.len(), trace.machines.len());
+        assert_eq!(back.tasks.len(), trace.tasks.len());
+        assert_eq!(stats.malformed_rows, 0);
+        // Times round-trip at microsecond resolution.
+        for (a, b) in trace.tasks.iter().zip(&back.tasks) {
+            assert!((a.time - b.time).abs() < 1e-3);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.job_id, b.job_id);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn malformed_rows_are_counted_not_fatal() {
+        let dir = std::env::temp_dir().join(format!("cm_trace_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("machine_events.csv"),
+            "time,machine_id,event_type,platform_id,cpus,memory\n\
+             0,1,0,p0,0.5,0.5\nnot-a-row\n100,2,9,p0,0.5,0.5\n",
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("task_events.csv"),
+            "time,missing_info,job_id,task_index,machine_id,event_type,user,scheduling_class,priority,cpu_request,memory_request,disk_request,different_machines_restriction\n\
+             0,,5,0,1,0,alice,0,2,0.1,0.1,0,0\nbroken\n",
+        )
+        .unwrap();
+        let (trace, stats) = read_trace_dir(&dir).unwrap();
+        assert_eq!(trace.machines.len(), 1);
+        assert_eq!(trace.tasks.len(), 1);
+        // "not-a-row", the event_type-9 machine row, and "broken".
+        assert_eq!(stats.malformed_rows, 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn binding_resolution_from_later_events() {
+        let dir = std::env::temp_dir().join(format!("cm_trace_bind_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("machine_events.csv"), "0,7,0,p0,0.5,0.5\n").unwrap();
+        // SUBMIT has no machine; SCHEDULE binds to machine 7.
+        std::fs::write(
+            dir.join("task_events.csv"),
+            "0,,5,0,,0,bob,0,2,0.1,0.1,0,0\n1000000,,5,0,7,1,bob,0,2,0.1,0.1,0,0\n",
+        )
+        .unwrap();
+        let (trace, stats) = read_trace_dir(&dir).unwrap();
+        assert_eq!(stats.resolved_bindings, 1);
+        assert_eq!(trace.tasks[0].machine_id, Some(7));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn capacity_backfill() {
+        let dir = std::env::temp_dir().join(format!("cm_trace_fill_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("machine_events.csv"),
+            "0,1,0,p0,0.5,0.5\n0,2,0,p0,0,0\n",
+        )
+        .unwrap();
+        std::fs::write(dir.join("task_events.csv"), "").unwrap();
+        let (trace, stats) = read_trace_dir(&dir).unwrap();
+        assert_eq!(stats.backfilled_capacities, 2);
+        assert!(trace.machines.iter().all(|m| m.cpu > 0.0 && m.ram > 0.0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,290 @@
+//! Synthetic Borg-like trace generator.
+//!
+//! Reproduces the *statistical shape* the paper reports for the 2011
+//! Google trace (§VII-C.1, Figs. 7-9) at configurable scale:
+//!
+//! - machines of a few capacity classes, ~1% churn (REMOVE + later re-ADD),
+//! - Poisson task arrivals with a diurnal sinusoid + noise rate,
+//! - lognormal task durations (heavy tail),
+//! - per-user task counts ~ Zipf (a few users dominate),
+//! - 30% production / 70% preemptible batch priority mix (Borg),
+//! - a fraction of batch tasks EVICT or FAIL mid-run and resubmit.
+//!
+//! Deterministic per seed; identical seeds yield identical traces.
+
+use crate::stats::{Dist, Rng};
+
+use super::event::{MachineEvent, MachineEventKind, TaskEvent, TaskEventKind, Trace};
+
+/// Generator configuration (defaults give a laptop-scale 2-day trace).
+#[derive(Debug, Clone)]
+pub struct SynthConfig {
+    pub seed: u64,
+    pub machines: usize,
+    pub days: f64,
+    /// Mean task arrivals per hour at the diurnal baseline.
+    pub tasks_per_hour: f64,
+    /// Diurnal amplitude in [0, 1) (peak = base * (1 + amplitude)).
+    pub diurnal_amplitude: f64,
+    /// Hour-of-day of the arrival peak.
+    pub peak_hour: f64,
+    /// Number of distinct users (task counts Zipf-distributed over them).
+    pub users: usize,
+    /// Fraction of machines that churn (remove + re-add) during the trace.
+    pub machine_churn: f64,
+    /// Probability a batch task gets EVICTed mid-run (then resubmits once).
+    pub evict_prob: f64,
+    /// Probability a task FAILs mid-run.
+    pub fail_prob: f64,
+    /// Median task duration in seconds (lognormal).
+    pub median_duration: f64,
+    /// Lognormal sigma for durations (tail heaviness).
+    pub duration_sigma: f64,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        SynthConfig {
+            seed: 42,
+            machines: 200,
+            days: 2.0,
+            tasks_per_hour: 2_000.0,
+            diurnal_amplitude: 0.35,
+            peak_hour: 14.0,
+            users: 120,
+            machine_churn: 0.05,
+            evict_prob: 0.04,
+            fail_prob: 0.01,
+            median_duration: 900.0, // 15 minutes
+            duration_sigma: 1.3,
+        }
+    }
+}
+
+impl SynthConfig {
+    /// The paper's Figs. 7-9 analysis scale: a 30-day window.
+    pub fn month_scale() -> Self {
+        SynthConfig { days: 30.0, ..Default::default() }
+    }
+
+    pub fn horizon_secs(&self) -> f64 {
+        self.days * 86_400.0
+    }
+}
+
+/// The generator.
+pub struct TraceGenerator {
+    cfg: SynthConfig,
+}
+
+impl TraceGenerator {
+    pub fn new(cfg: SynthConfig) -> Self {
+        assert!(cfg.machines > 0 && cfg.days > 0.0 && cfg.tasks_per_hour > 0.0);
+        TraceGenerator { cfg }
+    }
+
+    /// Arrival rate (tasks/sec) at absolute time `t` - diurnal sinusoid.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let base = self.cfg.tasks_per_hour / 3_600.0;
+        let hour = (t / 3_600.0) % 24.0;
+        let phase = (hour - self.cfg.peak_hour) / 24.0 * std::f64::consts::TAU;
+        base * (1.0 + self.cfg.diurnal_amplitude * phase.cos())
+    }
+
+    /// Generate the full trace.
+    pub fn generate(&self) -> Trace {
+        let mut rng = Rng::new(self.cfg.seed);
+        let mut machine_rng = rng.fork(1);
+        let mut task_rng = rng.fork(2);
+        let horizon = self.cfg.horizon_secs();
+
+        // ---- machine events -------------------------------------------
+        let mut machines = Vec::new();
+        for mid in 0..self.cfg.machines as u64 {
+            // Three capacity classes like the trace (0.25 / 0.5 / 1.0).
+            let class = [0.25, 0.5, 1.0][machine_rng.below(3) as usize];
+            machines.push(MachineEvent {
+                time: 0.0,
+                machine_id: mid,
+                kind: MachineEventKind::Add,
+                cpu: class,
+                ram: class,
+            });
+            if machine_rng.chance(self.cfg.machine_churn) {
+                // Remove somewhere in the middle, re-add ~2h later.
+                let t_rm = machine_rng.uniform(0.2, 0.7) * horizon;
+                let t_re = (t_rm + machine_rng.uniform(1_800.0, 14_400.0)).min(horizon * 0.95);
+                machines.push(MachineEvent {
+                    time: t_rm,
+                    machine_id: mid,
+                    kind: MachineEventKind::Remove,
+                    cpu: class,
+                    ram: class,
+                });
+                machines.push(MachineEvent {
+                    time: t_re,
+                    machine_id: mid,
+                    kind: MachineEventKind::Add,
+                    cpu: class,
+                    ram: class,
+                });
+            }
+        }
+        machines.sort_by(|a, b| a.time.partial_cmp(&b.time).unwrap());
+
+        // ---- task events ----------------------------------------------
+        let duration_dist = Dist::LogNormal {
+            mu: self.cfg.median_duration.ln(),
+            sigma: self.cfg.duration_sigma,
+        };
+        let user_dist = Dist::Zipf { n: self.cfg.users as u64, s: 1.1 };
+
+        let mut tasks = Vec::new();
+        let mut t = 0.0;
+        let mut job_id: u64 = 1000;
+        while t < horizon {
+            // Thinning-free approximation: sample interarrival at current
+            // rate (rate varies slowly vs interarrival times).
+            let rate = self.rate_at(t).max(1e-9);
+            t += Dist::Exp { lambda: rate }.sample(&mut task_rng);
+            if t >= horizon {
+                break;
+            }
+            job_id += 1;
+            let user = user_dist.sample(&mut task_rng) as u32 - 1;
+            let production = task_rng.chance(0.3);
+            let priority = if production {
+                9 + task_rng.below(3) as u8
+            } else {
+                task_rng.below(9) as u8
+            };
+            let cpu_req = task_rng.uniform(0.01, 0.25);
+            let ram_req = task_rng.uniform(0.01, 0.25);
+            let machine = task_rng.below(self.cfg.machines as u64);
+            let dur = duration_dist.sample_clamped(&mut task_rng, 30.0, 6.0 * 3_600.0);
+
+            let submit = TaskEvent {
+                time: t,
+                job_id,
+                task_index: 0,
+                machine_id: Some(machine),
+                kind: TaskEventKind::Submit,
+                user,
+                priority,
+                cpu_req,
+                ram_req,
+            };
+            tasks.push(submit);
+            let sched_delay = task_rng.uniform(1.0, 8.0); // paper: 80-90% < 4 s
+            tasks.push(TaskEvent {
+                time: t + sched_delay,
+                kind: TaskEventKind::Schedule,
+                ..submit
+            });
+
+            let end_kind = if !production && task_rng.chance(self.cfg.evict_prob) {
+                TaskEventKind::Evict
+            } else if task_rng.chance(self.cfg.fail_prob) {
+                TaskEventKind::Fail
+            } else {
+                TaskEventKind::Finish
+            };
+            let end_frac = if end_kind == TaskEventKind::Finish {
+                1.0
+            } else {
+                task_rng.uniform(0.1, 0.9)
+            };
+            let t_end = (t + sched_delay + dur * end_frac).min(horizon);
+            tasks.push(TaskEvent { time: t_end, kind: end_kind, ..submit });
+
+            // Evicted tasks resubmit once (the trace reader's EVICT
+            // handling path).
+            if end_kind == TaskEventKind::Evict {
+                let t_re = t_end + task_rng.uniform(5.0, 60.0);
+                if t_re < horizon {
+                    tasks.push(TaskEvent {
+                        time: t_re,
+                        task_index: 1,
+                        kind: TaskEventKind::Submit,
+                        ..submit
+                    });
+                    let t_fin = (t_re + dur * (1.0 - end_frac)).min(horizon);
+                    tasks.push(TaskEvent {
+                        time: t_fin,
+                        task_index: 1,
+                        kind: TaskEventKind::Finish,
+                        ..submit
+                    });
+                }
+            }
+        }
+        tasks.sort_by(|a, b| a.time.partial_cmp(&b.time).unwrap());
+
+        Trace { machines, tasks, horizon }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> SynthConfig {
+        SynthConfig { machines: 20, days: 0.5, tasks_per_hour: 200.0, ..Default::default() }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = TraceGenerator::new(small()).generate();
+        let b = TraceGenerator::new(small()).generate();
+        assert_eq!(a.tasks.len(), b.tasks.len());
+        assert_eq!(a.machines.len(), b.machines.len());
+        assert_eq!(a.tasks.first().map(|t| t.time), b.tasks.first().map(|t| t.time));
+        let c = TraceGenerator::new(SynthConfig { seed: 7, ..small() }).generate();
+        assert_ne!(a.tasks.len(), c.tasks.len());
+    }
+
+    #[test]
+    fn trace_is_valid_and_scaled() {
+        let trace = TraceGenerator::new(small()).generate();
+        assert!(trace.validate().is_empty(), "{:?}", trace.validate());
+        assert_eq!(trace.machine_count(), 20);
+        // ~200 tasks/hour * 12 h = ~2400 submissions (within 25%).
+        let n = trace.task_count() as f64;
+        assert!((1_800.0..3_000.0).contains(&n), "task_count {n}");
+    }
+
+    #[test]
+    fn diurnal_rate_peaks_at_peak_hour() {
+        let g = TraceGenerator::new(SynthConfig::default());
+        let peak = g.rate_at(14.0 * 3_600.0);
+        let trough = g.rate_at(2.0 * 3_600.0);
+        assert!(peak > trough * 1.4, "peak {peak} trough {trough}");
+    }
+
+    #[test]
+    fn production_share_near_30pct() {
+        let trace = TraceGenerator::new(small()).generate();
+        let submits: Vec<_> = trace
+            .tasks
+            .iter()
+            .filter(|t| t.kind == TaskEventKind::Submit && t.task_index == 0)
+            .collect();
+        let prod = submits.iter().filter(|t| t.is_production()).count() as f64;
+        let share = prod / submits.len() as f64;
+        assert!((0.2..0.4).contains(&share), "production share {share}");
+    }
+
+    #[test]
+    fn evictions_exist_and_resubmit() {
+        let cfg = SynthConfig { evict_prob: 0.3, ..small() };
+        let trace = TraceGenerator::new(cfg).generate();
+        let evicts = trace.tasks.iter().filter(|t| t.kind == TaskEventKind::Evict).count();
+        assert!(evicts > 0);
+        let resubmits = trace
+            .tasks
+            .iter()
+            .filter(|t| t.kind == TaskEventKind::Submit && t.task_index == 1)
+            .count();
+        assert!(resubmits > 0 && resubmits <= evicts);
+    }
+}

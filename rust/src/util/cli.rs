@@ -1,0 +1,156 @@
+//! Tiny CLI flag parser (`clap` is unavailable offline, DESIGN.md §7).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Unknown flags are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    known: Vec<String>,
+}
+
+/// A flag specification: name and whether it takes a value.
+#[derive(Debug, Clone)]
+pub struct Spec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+impl Args {
+    /// Parse `argv` (without the program name) against `specs`.
+    pub fn parse(argv: &[String], specs: &[Spec]) -> Result<Args, String> {
+        let mut out = Args::default();
+        out.known = specs.iter().map(|s| s.name.to_string()).collect();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}"))?;
+                let value = if spec.takes_value {
+                    match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} requires a value"))?
+                        }
+                    }
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("--{name} takes no value"));
+                    }
+                    String::from("true")
+                };
+                out.flags.insert(name, value);
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        debug_assert!(self.known.iter().any(|k| k == name), "flag --{name} not declared");
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        debug_assert!(self.known.iter().any(|k| k == name), "flag --{name} not declared");
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+}
+
+/// Render a help block for `specs`.
+pub fn render_help(specs: &[Spec]) -> String {
+    let mut out = String::new();
+    for s in specs {
+        let arg = if s.takes_value { format!("--{} <v>", s.name) } else { format!("--{}", s.name) };
+        out.push_str(&format!("  {arg:<24} {}\n", s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<Spec> {
+        vec![
+            Spec { name: "seed", takes_value: true, help: "rng seed" },
+            Spec { name: "verbose", takes_value: false, help: "chatty" },
+        ]
+    }
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_value_flags_both_styles() {
+        let a = Args::parse(&argv(&["--seed", "7"]), &specs()).unwrap();
+        assert_eq!(a.get("seed"), Some("7"));
+        let a = Args::parse(&argv(&["--seed=9"]), &specs()).unwrap();
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 9);
+    }
+
+    #[test]
+    fn parses_bool_and_positional() {
+        let a = Args::parse(&argv(&["run", "--verbose", "x"]), &specs()).unwrap();
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["run", "x"]);
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_value() {
+        assert!(Args::parse(&argv(&["--nope"]), &specs()).is_err());
+        assert!(Args::parse(&argv(&["--seed"]), &specs()).is_err());
+        assert!(Args::parse(&argv(&["--verbose=1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn defaults_and_type_errors() {
+        let a = Args::parse(&argv(&[]), &specs()).unwrap();
+        assert_eq!(a.get_f64("seed", 1.5).unwrap(), 1.5);
+        let a = Args::parse(&argv(&["--seed", "abc"]), &specs()).unwrap();
+        assert!(a.get_u64("seed", 0).is_err());
+    }
+}

@@ -1,0 +1,128 @@
+//! CSV writer (RFC-4180 quoting) used by the table builders' export path
+//! (paper §V-E(f): "support export to CSV/JSON for external analysis").
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// In-memory CSV document with a fixed header row.
+#[derive(Debug, Clone)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn columns(&self) -> usize {
+        self.header.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Append a row; panics if the width does not match the header
+    /// (catching reporting bugs early is preferable to silent misalignment).
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "CSV row width {} != header width {}",
+            row.len(),
+            self.header.len()
+        );
+        self.rows.push(row);
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        write_row(&mut out, &self.header);
+        for row in &self.rows {
+            write_row(&mut out, row);
+        }
+        out
+    }
+
+    pub fn write_file(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(self.to_string().as_bytes())
+    }
+}
+
+fn write_row(out: &mut String, row: &[String]) {
+    for (i, field) in row.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if field.contains([',', '"', '\n', '\r']) {
+            out.push('"');
+            out.push_str(&field.replace('"', "\"\""));
+            out.push('"');
+        } else {
+            out.push_str(field);
+        }
+    }
+    out.push('\n');
+}
+
+/// Format an f64 for CSV/table output: integers without decimals, otherwise
+/// two decimal places (matching the paper's table style).
+pub fn fmt_num(v: f64) -> String {
+    if !v.is_finite() {
+        return String::from("");
+    }
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.push(vec!["1".into(), "x".into()]);
+        c.push(vec!["2".into(), "y".into()]);
+        assert_eq!(c.to_string(), "a,b\n1,x\n2,y\n");
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn quotes_special_fields() {
+        let mut c = Csv::new(&["a"]);
+        c.push(vec!["has,comma".into()]);
+        c.push(vec!["has\"quote".into()]);
+        c.push(vec!["has\nnewline".into()]);
+        assert_eq!(c.to_string(), "a\n\"has,comma\"\n\"has\"\"quote\"\n\"has\nnewline\"\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "CSV row width")]
+    fn rejects_misaligned_rows() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.push(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn num_formatting() {
+        assert_eq!(fmt_num(3.0), "3");
+        assert_eq!(fmt_num(3.14159), "3.14");
+        assert_eq!(fmt_num(-0.5), "-0.50");
+        assert_eq!(fmt_num(f64::NAN), "");
+    }
+}

@@ -1,0 +1,8 @@
+//! Small self-contained utilities (substrates forced by the offline crate
+//! set, see DESIGN.md §7): JSON writer/parser, CSV writer, text tables and
+//! a tiny CLI flag parser.
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod table;

@@ -1,0 +1,134 @@
+//! Plain-text table rendering in the style of CloudSim Plus table builders
+//! (the paper's Figs. 5-6 show this output format).
+
+use super::csv::Csv;
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A rendered text table; also convertible to [`Csv`].
+#[derive(Debug, Clone)]
+pub struct TextTable {
+    title: String,
+    columns: Vec<(String, Align)>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    pub fn new(title: &str) -> Self {
+        Self { title: title.to_string(), columns: Vec::new(), rows: Vec::new() }
+    }
+
+    pub fn column(mut self, name: &str, align: Align) -> Self {
+        self.columns.push((name.to_string(), align));
+        self
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.columns.len(), "table row width mismatch");
+        self.rows.push(row);
+    }
+
+    pub fn row_count(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render the table with a centered title bar, aligned columns and a
+    /// separator rule - the CloudSim Plus "SIMULATION RESULTS" style.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.columns.iter().map(|(n, _)| n.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let total: usize = widths.iter().sum::<usize>() + 3 * widths.len().saturating_sub(1);
+
+        let mut out = String::new();
+        let title = format!(" {} ", self.title);
+        let pad = total.saturating_sub(title.chars().count());
+        out.push_str(&"=".repeat(pad / 2));
+        out.push_str(&title);
+        out.push_str(&"=".repeat(pad - pad / 2));
+        out.push('\n');
+
+        for (i, ((name, _), w)) in self.columns.iter().zip(&widths).enumerate() {
+            if i > 0 {
+                out.push_str(" | ");
+            }
+            out.push_str(&format!("{name:<w$}"));
+        }
+        out.push('\n');
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+
+        for row in &self.rows {
+            for (i, (cell, ((_, align), w))) in
+                row.iter().zip(self.columns.iter().zip(&widths)).enumerate()
+            {
+                if i > 0 {
+                    out.push_str(" | ");
+                }
+                match align {
+                    Align::Left => out.push_str(&format!("{cell:<w$}")),
+                    Align::Right => out.push_str(&format!("{cell:>w$}")),
+                }
+            }
+            out.push('\n');
+        }
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        out
+    }
+
+    /// Export the same data as CSV (paper §V-F: TableBuilderAbstract was
+    /// extended with CSV export).
+    pub fn to_csv(&self) -> Csv {
+        let names: Vec<&str> = self.columns.iter().map(|(n, _)| n.as_str()).collect();
+        let mut csv = Csv::new(&names);
+        for row in &self.rows {
+            csv.push(row.clone());
+        }
+        csv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TextTable {
+        let mut t = TextTable::new("SIMULATION RESULTS")
+            .column("ID", Align::Right)
+            .column("State", Align::Left);
+        t.push(vec!["1".into(), "FINISHED".into()]);
+        t.push(vec!["12".into(), "TERMINATED".into()]);
+        t
+    }
+
+    #[test]
+    fn renders_aligned_columns() {
+        let r = sample().render();
+        assert!(r.contains("SIMULATION RESULTS"));
+        assert!(r.contains(" 1 | FINISHED"));
+        assert!(r.contains("12 | TERMINATED"));
+    }
+
+    #[test]
+    fn csv_matches_rows() {
+        let csv = sample().to_csv();
+        assert_eq!(csv.to_string(), "ID,State\n1,FINISHED\n12,TERMINATED\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn rejects_bad_rows() {
+        let mut t = TextTable::new("t").column("a", Align::Left);
+        t.push(vec!["1".into(), "2".into()]);
+    }
+}

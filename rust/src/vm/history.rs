@@ -1,0 +1,157 @@
+//! Execution history of a VM (paper §V-E(e): `ExecutionHistory` "records
+//! execution intervals of spot instances, including host, start, and stop
+//! times", enabling average-interruption-time computation).
+
+use crate::infra::HostId;
+
+/// One contiguous period of execution on a host.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Interval {
+    pub host: HostId,
+    pub start: f64,
+    /// `None` while the VM is still running this interval.
+    pub stop: Option<f64>,
+}
+
+/// Append-only record of a VM's execution intervals.
+#[derive(Debug, Clone, Default)]
+pub struct ExecutionHistory {
+    intervals: Vec<Interval>,
+}
+
+impl ExecutionHistory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn intervals(&self) -> &[Interval] {
+        &self.intervals
+    }
+
+    pub fn is_running(&self) -> bool {
+        matches!(self.intervals.last(), Some(iv) if iv.stop.is_none())
+    }
+
+    /// Record placement on a host at `t`.
+    pub fn record_start(&mut self, host: HostId, t: f64) {
+        assert!(!self.is_running(), "record_start while an interval is open");
+        if let Some(last) = self.intervals.last() {
+            assert!(t + 1e-9 >= last.stop.unwrap(), "intervals must be ordered");
+        }
+        self.intervals.push(Interval { host, start: t, stop: None });
+    }
+
+    /// Record removal from the current host at `t`.
+    pub fn record_stop(&mut self, t: f64) {
+        let iv = self.intervals.last_mut().expect("record_stop without start");
+        assert!(iv.stop.is_none(), "interval already closed");
+        assert!(t + 1e-9 >= iv.start, "stop before start");
+        iv.stop = Some(t);
+    }
+
+    /// Total time spent executing (closed intervals only, plus an open
+    /// interval up to `now` if provided).
+    pub fn total_runtime(&self, now: Option<f64>) -> f64 {
+        self.intervals
+            .iter()
+            .map(|iv| match (iv.stop, now) {
+                (Some(s), _) => s - iv.start,
+                (None, Some(n)) => (n - iv.start).max(0.0),
+                (None, None) => 0.0,
+            })
+            .sum()
+    }
+
+    /// Gaps between consecutive intervals = interruption durations
+    /// (hibernation / waiting periods between execution bursts).
+    pub fn interruption_durations(&self) -> Vec<f64> {
+        self.intervals
+            .windows(2)
+            .filter_map(|w| w[0].stop.map(|s| (w[1].start - s).max(0.0)))
+            .collect()
+    }
+
+    /// The paper's `calculateAverageInterruptionTime` (Fig. 6 column).
+    /// `None` when the VM was never resumed after a stop.
+    pub fn average_interruption_time(&self) -> Option<f64> {
+        let gaps = self.interruption_durations();
+        if gaps.is_empty() {
+            None
+        } else {
+            Some(gaps.iter().sum::<f64>() / gaps.len() as f64)
+        }
+    }
+
+    /// Number of resumptions (= completed interruption->redeploy cycles).
+    pub fn resumptions(&self) -> usize {
+        self.intervals.len().saturating_sub(1)
+    }
+
+    /// First start / last stop (for table output).
+    pub fn first_start(&self) -> Option<f64> {
+        self.intervals.first().map(|iv| iv.start)
+    }
+
+    pub fn last_stop(&self) -> Option<f64> {
+        self.intervals.last().and_then(|iv| iv.stop)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_ordered_intervals() {
+        let mut h = ExecutionHistory::new();
+        h.record_start(1, 10.0);
+        h.record_stop(32.0);
+        h.record_start(2, 54.0);
+        h.record_stop(60.0);
+        assert_eq!(h.intervals().len(), 2);
+        assert_eq!(h.total_runtime(None), 28.0);
+        assert_eq!(h.interruption_durations(), vec![22.0]);
+        assert_eq!(h.average_interruption_time(), Some(22.0));
+        assert_eq!(h.resumptions(), 1);
+        assert_eq!(h.first_start(), Some(10.0));
+        assert_eq!(h.last_stop(), Some(60.0));
+    }
+
+    #[test]
+    fn open_interval_runtime_uses_now() {
+        let mut h = ExecutionHistory::new();
+        h.record_start(0, 5.0);
+        assert!(h.is_running());
+        assert_eq!(h.total_runtime(Some(9.0)), 4.0);
+        assert_eq!(h.total_runtime(None), 0.0);
+        assert_eq!(h.average_interruption_time(), None);
+    }
+
+    #[test]
+    fn multiple_gaps_average() {
+        let mut h = ExecutionHistory::new();
+        h.record_start(0, 0.0);
+        h.record_stop(10.0);
+        h.record_start(0, 20.0); // gap 10
+        h.record_stop(30.0);
+        h.record_start(1, 60.0); // gap 30
+        h.record_stop(70.0);
+        assert_eq!(h.average_interruption_time(), Some(20.0));
+        assert_eq!(h.resumptions(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "interval is open")]
+    fn rejects_double_start() {
+        let mut h = ExecutionHistory::new();
+        h.record_start(0, 0.0);
+        h.record_start(1, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "without start")]
+    fn rejects_stop_without_start() {
+        let mut h = ExecutionHistory::new();
+        h.record_stop(1.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Virtual machine model: dynamic VMs with spot/on-demand differentiation,
+//! lifecycle states and execution histories (paper §V-C/D/E).
+
+pub mod history;
+pub mod spot;
+pub mod state;
+pub mod vm;
+
+pub use history::ExecutionHistory;
+pub use spot::{InterruptionBehavior, SpotConfig};
+pub use state::VmState;
+pub use vm::{Vm, VmSpec, VmType};
+
+/// Index of a VM in the world's VM arena.
+pub type VmId = usize;

@@ -1,0 +1,96 @@
+//! Spot-instance configuration (paper §V-C/D: interruption behavior,
+//! minimum running time, hibernation timeout, warning time).
+
+/// What happens when a spot instance is interrupted (paper §V-D:
+//  "interruption behavior (termination or hibernation) ... can be
+//  configured individually for each spot instance").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InterruptionBehavior {
+    /// The instance is destroyed; its cloudlets are canceled.
+    Terminate,
+    /// The instance is removed from the host with cloudlets paused and is
+    /// resubmitted when capacity returns.
+    Hibernate,
+}
+
+/// Per-spot-instance timing parameters (paper §V-C list):
+///
+/// - `min_running_time`: spot instances cannot be interrupted due to
+///   capacity contention before running this long.
+/// - `warning_time`: grace period between the interruption signal and the
+///   actual removal (EC2's two-minute warning).
+/// - `hibernation_timeout`: maximum duration in hibernation before the
+///   instance is terminated.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpotConfig {
+    pub behavior: InterruptionBehavior,
+    pub min_running_time: f64,
+    pub warning_time: f64,
+    pub hibernation_timeout: f64,
+}
+
+impl Default for SpotConfig {
+    /// Paper-inspired defaults: EC2-style 120 s warning, 5-minute minimum
+    /// runtime, 1-hour hibernation window, terminate behavior (the AWS
+    /// default when hibernation is not requested).
+    fn default() -> Self {
+        SpotConfig {
+            behavior: InterruptionBehavior::Terminate,
+            min_running_time: 300.0,
+            warning_time: 120.0,
+            hibernation_timeout: 3600.0,
+        }
+    }
+}
+
+impl SpotConfig {
+    pub fn hibernate() -> Self {
+        SpotConfig { behavior: InterruptionBehavior::Hibernate, ..Default::default() }
+    }
+
+    pub fn terminate() -> Self {
+        SpotConfig { behavior: InterruptionBehavior::Terminate, ..Default::default() }
+    }
+
+    pub fn with_warning(mut self, secs: f64) -> Self {
+        assert!(secs >= 0.0);
+        self.warning_time = secs;
+        self
+    }
+
+    pub fn with_min_running(mut self, secs: f64) -> Self {
+        assert!(secs >= 0.0);
+        self.min_running_time = secs;
+        self
+    }
+
+    pub fn with_hibernation_timeout(mut self, secs: f64) -> Self {
+        assert!(secs >= 0.0);
+        self.hibernation_timeout = secs;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chain() {
+        let c = SpotConfig::hibernate()
+            .with_warning(30.0)
+            .with_min_running(0.0)
+            .with_hibernation_timeout(600.0);
+        assert_eq!(c.behavior, InterruptionBehavior::Hibernate);
+        assert_eq!(c.warning_time, 30.0);
+        assert_eq!(c.min_running_time, 0.0);
+        assert_eq!(c.hibernation_timeout, 600.0);
+    }
+
+    #[test]
+    fn default_is_ec2_like() {
+        let c = SpotConfig::default();
+        assert_eq!(c.behavior, InterruptionBehavior::Terminate);
+        assert_eq!(c.warning_time, 120.0);
+    }
+}

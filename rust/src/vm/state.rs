@@ -1,0 +1,123 @@
+//! VM lifecycle states (paper Fig. 4: spot instance lifecycle state
+//! transitions; `DynamicVm` "explicit VM states (e.g., WAITING,
+//! INTERRUPTED, TERMINATED)", §V-E(c)).
+
+use std::fmt;
+
+/// Lifecycle state of a dynamic VM.
+///
+/// Transition diagram (paper Fig. 4; engine-enforced, asserted in tests):
+///
+/// ```text
+///  Waiting ──allocate──► Running ──cloudlets done──► Finished
+///    │  ▲                  │ │
+///    │  └──── resubmit ────┘ │ (hibernate)            (terminate)
+///    │                       ├──warn──► InterruptWarned ──► Terminated
+///  timeout                   │                    │
+///    ▼                       ▼                    ▼ (hibernate)
+///  Failed ◄──timeout── Hibernated ◄───────────────┘
+///                          │
+///                          └──resume──► Running
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VmState {
+    /// Submitted but not (or no longer) placed; persistent requests wait
+    /// here up to their waiting time.
+    Waiting,
+    /// Placed on a host and executing cloudlets.
+    Running,
+    /// Interruption signal received; grace period (warning time) running.
+    InterruptWarned,
+    /// Removed from its host with cloudlets paused; awaiting resubmission.
+    Hibernated,
+    /// All cloudlets completed and the VM was destroyed normally.
+    Finished,
+    /// Interrupted with terminate behavior, or hibernation timed out.
+    Terminated,
+    /// Never placed within its waiting time (request expired / rejected).
+    Failed,
+}
+
+impl VmState {
+    /// Whether the VM currently occupies host resources.
+    pub fn on_host(self) -> bool {
+        matches!(self, VmState::Running | VmState::InterruptWarned)
+    }
+
+    /// Whether this is a terminal state.
+    pub fn is_final(self) -> bool {
+        matches!(self, VmState::Finished | VmState::Terminated | VmState::Failed)
+    }
+
+    /// Legal state transitions (engine invariant).
+    pub fn can_transition_to(self, next: VmState) -> bool {
+        use VmState::*;
+        matches!(
+            (self, next),
+            (Waiting, Running)
+                | (Waiting, Failed)
+                | (Running, Finished)
+                | (Running, InterruptWarned)
+                | (Running, Hibernated)   // zero warning time shortcut
+                | (Running, Terminated)   // zero warning time shortcut / host removal
+                | (Running, Waiting)      // host removed: on-demand requeue
+                | (InterruptWarned, Hibernated)
+                | (InterruptWarned, Terminated)
+                | (InterruptWarned, Finished) // finished during grace period
+                | (Hibernated, Running)
+                | (Hibernated, Terminated)
+        )
+    }
+}
+
+impl fmt::Display for VmState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            VmState::Waiting => "WAITING",
+            VmState::Running => "RUNNING",
+            VmState::InterruptWarned => "INTERRUPT_WARNED",
+            VmState::Hibernated => "HIBERNATED",
+            VmState::Finished => "FINISHED",
+            VmState::Terminated => "TERMINATED",
+            VmState::Failed => "FAILED",
+        };
+        f.write_str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::VmState::*;
+
+    #[test]
+    fn lifecycle_happy_path() {
+        assert!(Waiting.can_transition_to(Running));
+        assert!(Running.can_transition_to(Finished));
+        assert!(Finished.is_final());
+    }
+
+    #[test]
+    fn interruption_paths() {
+        assert!(Running.can_transition_to(InterruptWarned));
+        assert!(InterruptWarned.can_transition_to(Hibernated));
+        assert!(InterruptWarned.can_transition_to(Terminated));
+        assert!(Hibernated.can_transition_to(Running));
+        assert!(Hibernated.can_transition_to(Terminated));
+    }
+
+    #[test]
+    fn illegal_transitions_rejected() {
+        assert!(!Finished.can_transition_to(Running));
+        assert!(!Failed.can_transition_to(Waiting));
+        assert!(!Terminated.can_transition_to(Running));
+        assert!(!Waiting.can_transition_to(Hibernated));
+    }
+
+    #[test]
+    fn on_host_only_when_placed() {
+        assert!(Running.on_host());
+        assert!(InterruptWarned.on_host());
+        assert!(!Hibernated.on_host());
+        assert!(!Waiting.on_host());
+    }
+}

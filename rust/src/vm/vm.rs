@@ -1,0 +1,232 @@
+//! The dynamic VM (paper §V-E(c,d): `DynamicVm` with its two concrete
+//! subclasses `OnDemandInstance` and `SpotInstance`).
+
+use super::history::ExecutionHistory;
+use super::spot::SpotConfig;
+use super::state::VmState;
+use crate::cloudlet::CloudletId;
+use crate::infra::HostId;
+
+/// Resource request of a VM (paper Table III row).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VmSpec {
+    /// Requested processing elements.
+    pub pes: u32,
+    /// Requested MIPS per PE.
+    pub mips: f64,
+    /// RAM in MB.
+    pub ram: f64,
+    /// Bandwidth in Mbps.
+    pub bw: f64,
+    /// Storage in MB.
+    pub storage: f64,
+}
+
+impl VmSpec {
+    pub fn new(mips: f64, pes: u32) -> Self {
+        // Mirrors `new SpotInstance(1000, 2, ...)`: mips + pes first,
+        // remaining resources via with_* builders (paper Listing 6).
+        VmSpec { pes, mips, ram: 512.0, bw: 1000.0, storage: 10_000.0 }
+    }
+
+    pub fn with_ram(mut self, ram: f64) -> Self {
+        self.ram = ram;
+        self
+    }
+
+    pub fn with_bw(mut self, bw: f64) -> Self {
+        self.bw = bw;
+        self
+    }
+
+    pub fn with_storage(mut self, storage: f64) -> Self {
+        self.storage = storage;
+        self
+    }
+
+    /// Total requested CPU capacity in MIPS.
+    pub fn total_mips(&self) -> f64 {
+        self.pes as f64 * self.mips
+    }
+
+    /// Request vector in artifact dimension order (CPU, RAM, BW, storage).
+    pub fn request_vec(&self) -> [f64; 4] {
+        [self.total_mips(), self.ram, self.bw, self.storage]
+    }
+}
+
+/// Purchase model of an instance (paper §II-B / §V-D: "differentiation of
+/// virtual machine types").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VmType {
+    OnDemand,
+    Spot,
+}
+
+impl std::fmt::Display for VmType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            VmType::OnDemand => "On-Demand",
+            VmType::Spot => "Spot",
+        })
+    }
+}
+
+/// A dynamic VM instance.
+#[derive(Debug, Clone)]
+pub struct Vm {
+    pub id: super::VmId,
+    pub broker: usize,
+    pub spec: VmSpec,
+    pub vm_type: VmType,
+    /// Spot-specific parameters; `None` for on-demand instances.
+    pub spot: Option<SpotConfig>,
+    /// Persistent requests survive failed allocation and wait (paper §V-D:
+    /// "persistent allocation requests").
+    pub persistent: bool,
+    /// Maximum time a persistent request stays in the waiting queue.
+    pub waiting_time: f64,
+    /// Broker submission delay (`setSubmissionDelay`).
+    pub submission_delay: f64,
+    pub state: VmState,
+    pub host: Option<HostId>,
+    /// Cloudlets bound to this VM.
+    pub cloudlets: Vec<CloudletId>,
+    pub history: ExecutionHistory,
+    /// Count of interruption events (warn->removal completions).
+    pub interruptions: u32,
+    pub submitted_at: Option<f64>,
+    pub hibernated_at: Option<f64>,
+    /// Set when the VM reached a final state.
+    pub stopped_at: Option<f64>,
+    /// Last time this (on-demand) VM triggered spot preemption; throttles
+    /// re-preemption while the freed capacity is still materializing.
+    pub preempt_armed_at: Option<f64>,
+    /// Whether a periodic backstop retry event is already scheduled
+    /// (dedupes the engine's hibernation retry stream).
+    pub retry_armed: bool,
+}
+
+impl Vm {
+    pub fn on_demand(id: super::VmId, spec: VmSpec) -> Self {
+        Vm {
+            id,
+            broker: 0,
+            spec,
+            vm_type: VmType::OnDemand,
+            spot: None,
+            persistent: false,
+            waiting_time: 0.0,
+            submission_delay: 0.0,
+            state: VmState::Waiting,
+            host: None,
+            cloudlets: Vec::new(),
+            history: ExecutionHistory::new(),
+            interruptions: 0,
+            submitted_at: None,
+            hibernated_at: None,
+            stopped_at: None,
+            preempt_armed_at: None,
+            retry_armed: false,
+        }
+    }
+
+    pub fn spot(id: super::VmId, spec: VmSpec, config: SpotConfig) -> Self {
+        let mut vm = Vm::on_demand(id, spec);
+        vm.vm_type = VmType::Spot;
+        vm.spot = Some(config);
+        vm
+    }
+
+    pub fn with_persistent(mut self, waiting_time: f64) -> Self {
+        self.persistent = true;
+        self.waiting_time = waiting_time;
+        self
+    }
+
+    pub fn with_delay(mut self, delay: f64) -> Self {
+        assert!(delay >= 0.0);
+        self.submission_delay = delay;
+        self
+    }
+
+    pub fn is_spot(&self) -> bool {
+        self.vm_type == VmType::Spot
+    }
+
+    /// State transition with legality check (engine invariant).
+    pub fn transition(&mut self, next: VmState) {
+        assert!(
+            self.state.can_transition_to(next),
+            "vm {}: illegal transition {:?} -> {:?}",
+            self.id,
+            self.state,
+            next
+        );
+        self.state = next;
+    }
+
+    /// How long the VM has been running in its current interval.
+    pub fn current_runtime(&self, now: f64) -> f64 {
+        match self.history.intervals().last() {
+            Some(iv) if iv.stop.is_none() => (now - iv.start).max(0.0),
+            _ => 0.0,
+        }
+    }
+
+    /// Whether a capacity-driven interruption is currently allowed
+    /// (spot + placed + past its minimum running time + not already warned).
+    pub fn interruptible(&self, now: f64) -> bool {
+        match (&self.spot, self.state) {
+            (Some(cfg), VmState::Running) => self.current_runtime(now) + 1e-9 >= cfg.min_running_time,
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vm::InterruptionBehavior;
+
+    #[test]
+    fn spec_builder_mirrors_paper_listing() {
+        // new SpotInstance(1000, 2, true); setRam(512); setBw(1000); setSize(10000)
+        let spec = VmSpec::new(1000.0, 2).with_ram(512.0).with_bw(1000.0).with_storage(10_000.0);
+        assert_eq!(spec.total_mips(), 2000.0);
+        assert_eq!(spec.request_vec(), [2000.0, 512.0, 1000.0, 10_000.0]);
+    }
+
+    #[test]
+    fn spot_construction() {
+        let vm = Vm::spot(3, VmSpec::new(1000.0, 2), SpotConfig::hibernate());
+        assert!(vm.is_spot());
+        assert_eq!(vm.spot.unwrap().behavior, InterruptionBehavior::Hibernate);
+        assert_eq!(vm.state, VmState::Waiting);
+    }
+
+    #[test]
+    fn interruptible_requires_min_runtime() {
+        let cfg = SpotConfig::terminate().with_min_running(10.0);
+        let mut vm = Vm::spot(0, VmSpec::new(1000.0, 1), cfg);
+        vm.transition(VmState::Running);
+        vm.history.record_start(0, 100.0);
+        assert!(!vm.interruptible(105.0));
+        assert!(vm.interruptible(110.0));
+    }
+
+    #[test]
+    fn on_demand_never_interruptible() {
+        let mut vm = Vm::on_demand(0, VmSpec::new(1000.0, 1));
+        vm.transition(VmState::Running);
+        vm.history.record_start(0, 0.0);
+        assert!(!vm.interruptible(1e9));
+    }
+
+    #[test]
+    #[should_panic(expected = "illegal transition")]
+    fn transition_guard() {
+        let mut vm = Vm::on_demand(0, VmSpec::new(1000.0, 1));
+        vm.transition(VmState::Hibernated); // Waiting -> Hibernated is illegal
+    }
+}

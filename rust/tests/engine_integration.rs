@@ -1,0 +1,287 @@
+//! Integration tests: multi-module scenarios over the full engine -
+//! the spot lifecycle of paper Figs. 2-4 driven end to end under every
+//! allocation policy, plus experiment-level shape checks.
+
+use cloudmarket::allocation::{AllocationPolicy, BestFit, FirstFit, HlemVmp, RoundRobin, WorstFit};
+use cloudmarket::cloudlet::{Cloudlet, CloudletState};
+use cloudmarket::config::scenario::{build_comparison_workload, ComparisonConfig};
+use cloudmarket::engine::{Engine, EngineConfig};
+use cloudmarket::infra::HostSpec;
+use cloudmarket::metrics::LifecycleKind;
+use cloudmarket::vm::{SpotConfig, Vm, VmSpec, VmState, VmType};
+
+fn all_policies() -> Vec<Box<dyn AllocationPolicy>> {
+    vec![
+        Box::new(FirstFit::new()),
+        Box::new(BestFit::new()),
+        Box::new(WorstFit::new()),
+        Box::new(RoundRobin::new()),
+        Box::new(HlemVmp::plain()),
+        Box::new(HlemVmp::adjusted()),
+    ]
+}
+
+/// The canonical hibernate/resume scenario must work under every policy.
+#[test]
+fn spot_lifecycle_under_every_policy() {
+    for policy in all_policies() {
+        let name = policy.name();
+        let mut cfg = EngineConfig::default();
+        cfg.vm_destruction_delay = 0.0;
+        let mut e = Engine::new(cfg, policy);
+        let dc = e.add_datacenter("dc", 1.0);
+        e.add_host(dc, HostSpec::new(4, 1000.0, 8_192.0, 10_000.0, 500_000.0));
+
+        let spot_cfg = SpotConfig::hibernate()
+            .with_min_running(0.0)
+            .with_warning(0.0)
+            .with_hibernation_timeout(500.0);
+        let spot =
+            e.submit_vm(Vm::spot(0, VmSpec::new(1000.0, 4), spot_cfg).with_persistent(500.0));
+        e.submit_cloudlet(Cloudlet::new(0, 40_000.0, 4).with_vm(spot)); // 10 s
+        let od = e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 4)).with_delay(5.0));
+        e.submit_cloudlet(Cloudlet::new(0, 20_000.0, 4).with_vm(od)); // 5 s
+        e.terminate_at(300.0);
+        let report = e.run();
+
+        assert_eq!(e.world.vms[od].state, VmState::Finished, "[{name}] od");
+        assert_eq!(e.world.vms[spot].state, VmState::Finished, "[{name}] spot");
+        assert_eq!(report.spot.interruptions, 1, "[{name}]");
+        assert_eq!(report.spot.redeployments, 1, "[{name}]");
+        assert_eq!(e.world.vms[spot].history.intervals().len(), 2, "[{name}]");
+    }
+}
+
+/// Terminate-behavior spots die and release capacity for the on-demand VM.
+#[test]
+fn terminate_behavior_under_every_policy() {
+    for policy in all_policies() {
+        let name = policy.name();
+        let mut e = Engine::new(EngineConfig::default(), policy);
+        let dc = e.add_datacenter("dc", 1.0);
+        e.add_host(dc, HostSpec::new(2, 1000.0, 4_096.0, 10_000.0, 500_000.0));
+        let spot_cfg = SpotConfig::terminate().with_min_running(0.0).with_warning(1.0);
+        let spot = e.submit_vm(Vm::spot(0, VmSpec::new(1000.0, 2), spot_cfg));
+        e.submit_cloudlet(Cloudlet::new(0, 1_000_000.0, 2).with_vm(spot));
+        let od = e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 2)).with_delay(3.0));
+        e.submit_cloudlet(Cloudlet::new(0, 2_000.0, 2).with_vm(od));
+        e.terminate_at(100.0);
+        e.run();
+        assert_eq!(e.world.vms[spot].state, VmState::Terminated, "[{name}]");
+        assert_eq!(e.world.vms[od].state, VmState::Finished, "[{name}]");
+        // The spot's cloudlet was canceled, not finished.
+        let spot_cl = e.world.vms[spot].cloudlets[0];
+        assert_eq!(e.world.cloudlets[spot_cl].state, CloudletState::Canceled, "[{name}]");
+    }
+}
+
+/// Post-run conservation invariants on the full comparison scenario.
+#[test]
+fn comparison_scenario_conservation() {
+    let cfg = ComparisonConfig { terminate_at: 1_200.0, ..Default::default() };
+    let mut e = Engine::new(EngineConfig::default(), Box::new(FirstFit::new()));
+    build_comparison_workload(&mut e, &cfg);
+    let report = e.run();
+
+    // VM states partition the population.
+    let w = &e.world;
+    let total = w.vms.len() as u64;
+    assert_eq!(
+        report.finished + report.terminated + report.failed + report.still_active,
+        total
+    );
+
+    // Host accounting: used resources equal the sum of resident VM specs.
+    for host in &w.hosts {
+        let mut pes = 0u32;
+        let mut ram = 0.0;
+        for &v in &host.vms {
+            assert!(w.vms[v].state.on_host(), "vm {v} on host but state {:?}", w.vms[v].state);
+            pes += w.vms[v].spec.pes;
+            ram += w.vms[v].spec.ram;
+        }
+        assert_eq!(host.used_pes, pes, "host {} PE accounting", host.id);
+        assert!((host.used_ram - ram).abs() < 1e-6, "host {} RAM accounting", host.id);
+        assert!(host.used_pes <= host.spec.pes, "host {} oversubscribed", host.id);
+    }
+
+    // Interruption bookkeeping is consistent.
+    let vm_interruptions: u64 = w.vms.iter().map(|v| v.interruptions as u64).sum();
+    assert_eq!(vm_interruptions, report.spot.interruptions);
+
+    // Histories are well-formed.
+    for vm in &w.vms {
+        let ivs = vm.history.intervals();
+        for pair in ivs.windows(2) {
+            let stop = pair[0].stop.expect("non-final interval must be closed");
+            assert!(pair[1].start + 1e-9 >= stop, "vm {} intervals overlap", vm.id);
+        }
+        for iv in ivs {
+            if let Some(stop) = iv.stop {
+                assert!(stop + 1e-9 >= iv.start);
+            }
+        }
+    }
+
+    // Cloudlet states partition the population.
+    let mut by_state = std::collections::HashMap::new();
+    for cl in &w.cloudlets {
+        *by_state.entry(cl.state).or_insert(0usize) += 1;
+    }
+    let sum: usize = by_state.values().sum();
+    assert_eq!(sum, w.cloudlets.len());
+}
+
+/// The same workload under two different policies differs only in
+/// placement, never in workload composition.
+#[test]
+fn workload_identical_across_policies() {
+    let cfg = ComparisonConfig::default();
+    let snapshot = |policy: Box<dyn AllocationPolicy>| {
+        let mut e = Engine::new(EngineConfig::default(), policy);
+        build_comparison_workload(&mut e, &cfg);
+        e.world
+            .vms
+            .iter()
+            .map(|v| (v.spec.pes, v.spec.ram as u64, v.is_spot(), (v.submission_delay * 1e6) as u64))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(snapshot(Box::new(FirstFit::new())), snapshot(Box::new(HlemVmp::adjusted())));
+}
+
+/// Lifecycle log is ordered and consistent with terminal states.
+#[test]
+fn lifecycle_log_consistency() {
+    let mut e = Engine::new(EngineConfig::default(), Box::new(FirstFit::new()));
+    let dc = e.add_datacenter("dc", 1.0);
+    e.add_host(dc, HostSpec::new(4, 1000.0, 8_192.0, 10_000.0, 500_000.0));
+    let spot_cfg = SpotConfig::hibernate().with_min_running(0.0).with_warning(2.0);
+    let spot = e.submit_vm(Vm::spot(0, VmSpec::new(1000.0, 4), spot_cfg).with_persistent(400.0));
+    e.submit_cloudlet(Cloudlet::new(0, 60_000.0, 4).with_vm(spot));
+    let od = e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 4)).with_delay(4.0));
+    e.submit_cloudlet(Cloudlet::new(0, 16_000.0, 4).with_vm(od));
+    e.terminate_at(200.0);
+    e.run();
+
+    let events = e.recorder.events_of(spot);
+    let kinds: Vec<LifecycleKind> = events.iter().map(|ev| ev.kind).collect();
+    // Submitted -> Allocated -> InterruptWarned -> Hibernated -> Resumed -> Finished
+    assert_eq!(kinds[0], LifecycleKind::Submitted);
+    assert!(kinds.contains(&LifecycleKind::InterruptWarned));
+    let warn_pos = kinds.iter().position(|k| *k == LifecycleKind::InterruptWarned).unwrap();
+    let hib_pos = kinds.iter().position(|k| *k == LifecycleKind::Hibernated).unwrap();
+    let res_pos = kinds.iter().position(|k| *k == LifecycleKind::Resumed).unwrap();
+    assert!(warn_pos < hib_pos && hib_pos < res_pos);
+    // Warning time respected: >= 2 s between warn and hibernate.
+    let warn_t = events[warn_pos].time;
+    let hib_t = events[hib_pos].time;
+    assert!(hib_t - warn_t >= 2.0 - 1e-6, "warning period violated: {warn_t} -> {hib_t}");
+    // Times are non-decreasing.
+    for pair in events.windows(2) {
+        assert!(pair[1].time + 1e-9 >= pair[0].time);
+    }
+}
+
+/// min_running_time blocks preemption until satisfied.
+#[test]
+fn min_running_time_delays_interruption() {
+    let mut e = Engine::new(EngineConfig::default(), Box::new(FirstFit::new()));
+    let dc = e.add_datacenter("dc", 1.0);
+    e.add_host(dc, HostSpec::new(2, 1000.0, 4_096.0, 10_000.0, 500_000.0));
+    let spot_cfg = SpotConfig::hibernate()
+        .with_min_running(20.0)
+        .with_warning(0.0)
+        .with_hibernation_timeout(500.0);
+    let spot = e.submit_vm(Vm::spot(0, VmSpec::new(1000.0, 2), spot_cfg).with_persistent(500.0));
+    e.submit_cloudlet(Cloudlet::new(0, 200_000.0, 2).with_vm(spot));
+    // OD arrives at t=5 but the spot is protected until t=20.
+    let od = e.submit_vm(
+        Vm::on_demand(0, VmSpec::new(1000.0, 2)).with_persistent(500.0).with_delay(5.0),
+    );
+    e.submit_cloudlet(Cloudlet::new(0, 10_000.0, 2).with_vm(od));
+    e.terminate_at(300.0);
+    e.run();
+
+    let first_iv = e.world.vms[spot].history.intervals()[0];
+    let stop = first_iv.stop.expect("spot must eventually be interrupted");
+    assert!(stop >= 20.0 - 1e-6, "interrupted at {stop} before min running time");
+    assert_eq!(e.world.vms[od].state, VmState::Finished);
+}
+
+/// Spot VMs never trigger preemption of other spots.
+#[test]
+fn spots_do_not_preempt_spots() {
+    let mut e = Engine::new(EngineConfig::default(), Box::new(FirstFit::new()));
+    let dc = e.add_datacenter("dc", 1.0);
+    e.add_host(dc, HostSpec::new(2, 1000.0, 4_096.0, 10_000.0, 500_000.0));
+    let cfg0 = SpotConfig::hibernate().with_min_running(0.0).with_warning(0.0);
+    let s1 = e.submit_vm(Vm::spot(0, VmSpec::new(1000.0, 2), cfg0));
+    e.submit_cloudlet(Cloudlet::new(0, 50_000.0, 2).with_vm(s1));
+    let s2 = e.submit_vm(Vm::spot(0, VmSpec::new(1000.0, 2), cfg0).with_delay(2.0));
+    e.submit_cloudlet(Cloudlet::new(0, 50_000.0, 2).with_vm(s2));
+    e.terminate_at(100.0);
+    let report = e.run();
+    assert_eq!(report.spot.interruptions, 0, "a spot arrival must never interrupt a spot");
+    assert_eq!(e.world.vms[s1].state, VmState::Finished);
+    // s2 was not persistent -> failed fast.
+    assert_eq!(e.world.vms[s2].state, VmState::Failed);
+}
+
+/// The multi-seed comparison keeps the paper's headline shape: adjusted
+/// HLEM averages fewer interruptions than First-Fit.
+#[test]
+fn comparison_shape_adjusted_beats_first_fit() {
+    use cloudmarket::experiments::compare;
+    let cfg = ComparisonConfig { terminate_at: 2_400.0, ..Default::default() };
+    let aggs = compare::run_multi(&cfg, 3);
+    let get = |n: &str| aggs.iter().find(|a| a.policy == n).unwrap();
+    let ff = get("first-fit").mean_interruptions;
+    let adj = get("hlem-vmp-adjusted").mean_interruptions;
+    assert!(
+        adj < ff * 1.02,
+        "adjusted ({adj:.1}) should not exceed first-fit ({ff:.1}) interruptions"
+    );
+}
+
+/// Report JSON export round-trips through the JSON parser.
+#[test]
+fn report_json_roundtrip() {
+    let mut e = Engine::new(EngineConfig::default(), Box::new(FirstFit::new()));
+    let dc = e.add_datacenter("dc", 1.0);
+    e.add_host(dc, HostSpec::new(4, 1000.0, 8_192.0, 10_000.0, 500_000.0));
+    let vm = e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 2)));
+    e.submit_cloudlet(Cloudlet::new(0, 5_000.0, 2).with_vm(vm));
+    let report = e.run();
+    let json = report.to_json().to_string_pretty();
+    let parsed = cloudmarket::util::json::parse(&json).unwrap();
+    assert_eq!(
+        parsed.path(&["vms_finished"]).unwrap().as_f64(),
+        Some(report.finished as f64)
+    );
+    assert_eq!(parsed.path(&["spot", "total"]).unwrap().as_f64(), Some(0.0));
+}
+
+/// VmType / dispatch sanity for the table builders on a finished world.
+#[test]
+fn tables_render_on_finished_world() {
+    let mut e = Engine::new(EngineConfig::default(), Box::new(FirstFit::new()));
+    let dc = e.add_datacenter("dc", 1.0);
+    e.add_host(dc, HostSpec::new(8, 1000.0, 16_384.0, 10_000.0, 500_000.0));
+    for i in 0..4 {
+        let spec = VmSpec::new(1000.0, 2);
+        let vm = if i % 2 == 0 {
+            e.submit_vm(Vm::spot(0, spec, SpotConfig::hibernate()))
+        } else {
+            e.submit_vm(Vm::on_demand(0, spec))
+        };
+        e.submit_cloudlet(Cloudlet::new(0, 4_000.0, 2).with_vm(vm));
+    }
+    e.run();
+    let all: Vec<usize> = (0..e.world.vms.len()).collect();
+    let dyn_table = cloudmarket::metrics::tables::dynamic_vm_table(&e.world, &all);
+    assert_eq!(dyn_table.row_count(), 4);
+    let spot_table = cloudmarket::metrics::tables::spot_vm_table(&e.world, &all);
+    assert_eq!(spot_table.row_count(), 2);
+    let spot_count = e.world.vms.iter().filter(|v| v.vm_type == VmType::Spot).count();
+    assert_eq!(spot_count, 2);
+}

@@ -1,0 +1,147 @@
+//! Integration: the PJRT-executed AOT artifacts agree with the pure-rust
+//! implementations (the cross-implementation correctness contract of
+//! DESIGN.md §5). Skips (with a notice) when `make artifacts` has not run.
+
+use std::rc::Rc;
+
+use cloudmarket::allocation::scorer::{HostScorer, RustScorer, ScoreInput};
+use cloudmarket::engine::progress::{BatchedBackend, ProgressBackend};
+use cloudmarket::runtime::{artifacts, PjrtBackend, PjrtEngine, PjrtScorer, PjrtStep};
+use cloudmarket::stats::Rng;
+
+fn engine_or_skip() -> Option<Rc<PjrtEngine>> {
+    if !artifacts::artifacts_available() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Rc::new(PjrtEngine::load_default().expect("loading artifacts")))
+}
+
+fn random_hosts(rng: &mut Rng, n: usize) -> (Vec<[f64; 4]>, Vec<[f64; 4]>, Vec<[f64; 4]>, Vec<bool>) {
+    let mut caps = Vec::new();
+    let mut free = Vec::new();
+    let mut spot = Vec::new();
+    let mut mask = Vec::new();
+    for _ in 0..n {
+        let mut c = [0.0; 4];
+        let mut f = [0.0; 4];
+        let mut s = [0.0; 4];
+        for d in 0..4 {
+            c[d] = rng.uniform(1.0, 1e5);
+            f[d] = c[d] * rng.next_f64();
+            s[d] = f[d] * rng.next_f64();
+        }
+        caps.push(c);
+        free.push(f);
+        spot.push(s);
+        mask.push(rng.chance(0.85));
+    }
+    if !mask.iter().any(|&m| m) {
+        mask[0] = true;
+    }
+    (caps, free, spot, mask)
+}
+
+#[test]
+fn pjrt_engine_loads_and_reports_platform() {
+    let Some(engine) = engine_or_skip() else { return };
+    assert!(engine.platform().to_lowercase().contains("cpu"));
+    assert_eq!(engine.manifest.dims, 4);
+}
+
+#[test]
+fn pjrt_scorer_matches_rust_scorer() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut pjrt = PjrtScorer::new(engine.clone());
+    let mut rust = RustScorer::new();
+    let mut rng = Rng::new(2024);
+    for case in 0..20 {
+        let n = 1 + (rng.below(engine.manifest.max_hosts as u64) as usize);
+        let (caps, free, spot, mask) = random_hosts(&mut rng, n);
+        let alpha = rng.uniform(-1.0, 1.0);
+        let input =
+            ScoreInput { caps: &caps, free: &free, spot_used: &spot, mask: &mask, alpha };
+        let (hs_p, ahs_p) = pjrt.scores(&input);
+        let (hs_r, ahs_r) = rust.scores(&input);
+        for i in 0..n {
+            if !mask[i] {
+                assert!(hs_p[i] < -1e29 && hs_r[i] < -1e29);
+                continue;
+            }
+            // f32 artifact vs f64 oracle: 1e-4 absolute on [0,1]-scaled scores.
+            assert!(
+                (hs_p[i] - hs_r[i]).abs() < 1e-4,
+                "case {case} host {i}: hs {} vs {}",
+                hs_p[i],
+                hs_r[i]
+            );
+            assert!(
+                (ahs_p[i] - ahs_r[i]).abs() < 1e-3,
+                "case {case} host {i}: ahs {} vs {}",
+                ahs_p[i],
+                ahs_r[i]
+            );
+        }
+    }
+    assert!(pjrt.pjrt_calls >= 20);
+    assert_eq!(pjrt.fallback_calls, 0);
+}
+
+#[test]
+fn pjrt_scorer_falls_back_beyond_max_hosts() {
+    let Some(engine) = engine_or_skip() else { return };
+    let n = engine.manifest.max_hosts + 7;
+    let mut pjrt = PjrtScorer::new(engine);
+    let mut rng = Rng::new(7);
+    let (caps, free, spot, mask) = random_hosts(&mut rng, n);
+    let input =
+        ScoreInput { caps: &caps, free: &free, spot_used: &spot, mask: &mask, alpha: -0.5 };
+    let (hs, _) = pjrt.scores(&input);
+    assert_eq!(hs.len(), n);
+    assert_eq!(pjrt.fallback_calls, 1);
+    assert_eq!(pjrt.pjrt_calls, 0);
+}
+
+#[test]
+fn pjrt_progress_backend_matches_batched() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut pjrt = PjrtBackend(PjrtStep::new(engine.clone()));
+    let mut rng = Rng::new(11);
+    // Larger than one artifact batch to exercise chunking.
+    let n = engine.manifest.max_cloudlets + 123;
+    let rem0: Vec<f64> = (0..n)
+        .map(|_| if rng.chance(0.2) { 0.0 } else { rng.uniform(1.0, 1e6) })
+        .collect();
+    let mips: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 5e3)).collect();
+    let dt = 2.5;
+
+    let mut rem_p = rem0.clone();
+    let mut fin_p = Vec::new();
+    pjrt.step(&mut rem_p, &mips, dt, &mut fin_p);
+
+    let mut rem_b = rem0.clone();
+    let mut fin_b = Vec::new();
+    BatchedBackend.step(&mut rem_b, &mips, dt, &mut fin_b);
+
+    let scale = 1e6_f64;
+    let mut boundary = 0;
+    for i in 0..n {
+        assert!(
+            (rem_p[i] - rem_b[i]).abs() < 1e-6 * scale + 1e-3,
+            "slot {i}: {} vs {}",
+            rem_p[i],
+            rem_b[i]
+        );
+    }
+    // finished sets may differ only on float-boundary slots
+    fin_p.sort_unstable();
+    fin_b.sort_unstable();
+    let set_p: std::collections::HashSet<_> = fin_p.iter().collect();
+    let set_b: std::collections::HashSet<_> = fin_b.iter().collect();
+    for i in set_p.symmetric_difference(&set_b) {
+        boundary += 1;
+        assert!(rem_b[**i] < 1e-6 * scale + 1e-3, "non-boundary finished mismatch at {i}");
+    }
+    assert!(boundary <= 3, "too many boundary mismatches: {boundary}");
+    assert!(pjrt.0.calls >= 2, "expected chunked execution");
+}

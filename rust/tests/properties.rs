@@ -1,0 +1,313 @@
+//! Property tests over randomized workloads (testkit harness; proptest is
+//! unavailable offline - see DESIGN.md §7).
+//!
+//! Each property builds a random cluster + random spot/on-demand workload
+//! and checks engine invariants that must hold for *every* input:
+//! capacity accounting, state partitioning, history well-formedness,
+//! interruption bookkeeping and scorer semantics.
+
+use cloudmarket::allocation::scorer::{HostScorer, RustScorer, ScoreInput, NEG};
+use cloudmarket::allocation::{AllocationPolicy, BestFit, FirstFit, HlemVmp, RoundRobin, WorstFit};
+use cloudmarket::cloudlet::Cloudlet;
+use cloudmarket::engine::{Engine, EngineConfig};
+use cloudmarket::stats::Rng;
+use cloudmarket::testkit::{forall, gen};
+use cloudmarket::vm::{Vm, VmState};
+
+/// Random engine with hosts, spot + on-demand VMs, and cloudlets.
+fn random_engine(rng: &mut Rng) -> Engine {
+    let policy: Box<dyn AllocationPolicy> = match rng.below(5) {
+        0 => Box::new(FirstFit::new()),
+        1 => Box::new(BestFit::new()),
+        2 => Box::new(WorstFit::new()),
+        3 => Box::new(RoundRobin::new()),
+        _ => {
+            if rng.chance(0.5) {
+                Box::new(HlemVmp::plain())
+            } else {
+                Box::new(HlemVmp::adjusted())
+            }
+        }
+    };
+    let mut cfg = EngineConfig::default();
+    cfg.vm_destruction_delay = rng.uniform(0.0, 2.0);
+    cfg.scheduling_interval = rng.uniform(0.5, 5.0);
+    let mut e = Engine::new(cfg, policy);
+    let dc = e.add_datacenter("dc", 1.0);
+    for _ in 0..rng.range_u64(1, 8) {
+        e.add_host(dc, gen::host_spec(rng));
+    }
+    let n_vms = rng.range_u64(2, 30);
+    for _ in 0..n_vms {
+        let spec = gen::vm_spec(rng);
+        let delay = rng.uniform(0.0, 60.0);
+        let vm = if rng.chance(0.4) {
+            let mut v = Vm::spot(0, spec, gen::spot_config(rng)).with_delay(delay);
+            if rng.chance(0.7) {
+                v = v.with_persistent(rng.uniform(10.0, 200.0));
+            }
+            e.submit_vm(v)
+        } else {
+            let mut v = Vm::on_demand(0, spec).with_delay(delay);
+            if rng.chance(0.5) {
+                v = v.with_persistent(rng.uniform(10.0, 200.0));
+            }
+            e.submit_vm(v)
+        };
+        for _ in 0..rng.range_u64(0, 3) {
+            let pes = rng.range_u64(1, spec.pes as u64) as u32;
+            let length = rng.uniform(1_000.0, 200_000.0);
+            e.submit_cloudlet(Cloudlet::new(0, length, pes).with_vm(vm));
+        }
+    }
+    e.terminate_at(rng.uniform(100.0, 400.0));
+    e
+}
+
+#[test]
+fn prop_host_accounting_never_violated() {
+    forall(60, 0xACC0, |rng| {
+        let mut e = random_engine(rng);
+        e.run();
+        for host in &e.world.hosts {
+            assert!(host.used_pes <= host.spec.pes, "host {} PEs oversubscribed", host.id);
+            assert!(host.used_ram <= host.spec.ram + 1e-6, "host {} RAM", host.id);
+            assert!(host.used_bw <= host.spec.bw + 1e-6, "host {} BW", host.id);
+            assert!(host.used_storage <= host.spec.storage + 1e-6, "host {} storage", host.id);
+            let mut pes = 0;
+            for &v in &host.vms {
+                assert!(e.world.vms[v].state.on_host());
+                assert_eq!(e.world.vms[v].host, Some(host.id));
+                pes += e.world.vms[v].spec.pes;
+            }
+            assert_eq!(pes, host.used_pes);
+        }
+    });
+}
+
+#[test]
+fn prop_vm_states_and_hosts_consistent() {
+    forall(60, 0x57A7E, |rng| {
+        let mut e = random_engine(rng);
+        let report = e.run();
+        let mut on_host = 0u64;
+        for vm in &e.world.vms {
+            match vm.state {
+                VmState::Running | VmState::InterruptWarned => {
+                    assert!(vm.host.is_some(), "vm {} running without host", vm.id);
+                    assert!(vm.history.is_running(), "vm {} open interval missing", vm.id);
+                    on_host += 1;
+                }
+                VmState::Hibernated | VmState::Waiting => {
+                    assert!(vm.host.is_none(), "vm {} parked but on host", vm.id);
+                }
+                VmState::Finished | VmState::Terminated | VmState::Failed => {
+                    assert!(vm.host.is_none());
+                    assert!(vm.stopped_at.is_some(), "vm {} final without stop time", vm.id);
+                    assert!(!vm.history.is_running(), "vm {} final with open interval", vm.id);
+                }
+            }
+        }
+        assert_eq!(report.still_active + report.finished + report.terminated + report.failed,
+            e.world.vms.len() as u64);
+        let _ = on_host;
+    });
+}
+
+#[test]
+fn prop_histories_well_formed() {
+    forall(60, 0x415709, |rng| {
+        let mut e = random_engine(rng);
+        e.run();
+        let end = e.sim.clock();
+        for vm in &e.world.vms {
+            let ivs = vm.history.intervals();
+            for iv in ivs {
+                assert!(iv.start >= -1e-9 && iv.start <= end + 1e-6);
+                if let Some(stop) = iv.stop {
+                    assert!(stop + 1e-9 >= iv.start, "vm {} negative interval", vm.id);
+                    assert!(stop <= end + 1e-6);
+                }
+            }
+            for pair in ivs.windows(2) {
+                assert!(pair[0].stop.is_some(), "vm {} non-final open interval", vm.id);
+                assert!(pair[1].start + 1e-9 >= pair[0].stop.unwrap());
+            }
+            for gap in vm.history.interruption_durations() {
+                assert!(gap >= -1e-9);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_interruption_bookkeeping_consistent() {
+    forall(60, 0x1717, |rng| {
+        let mut e = random_engine(rng);
+        let report = e.run();
+        let per_vm: u64 = e.world.vms.iter().map(|v| v.interruptions as u64).sum();
+        assert_eq!(per_vm, report.spot.interruptions);
+        // Every interruption resolves to hibernation or termination;
+        // spot_terminations additionally counts hibernation timeouts, so:
+        assert!(e.recorder.hibernations <= report.spot.interruptions);
+        assert!(
+            report.spot.interruptions <= e.recorder.hibernations + e.recorder.spot_terminations,
+            "interruptions {} > hibernations {} + terminations {}",
+            report.spot.interruptions,
+            e.recorder.hibernations,
+            e.recorder.spot_terminations
+        );
+        // Redeployments never exceed hibernations.
+        assert!(report.spot.redeployments <= e.recorder.hibernations);
+        // On-demand VMs never count interruptions.
+        for vm in &e.world.vms {
+            if !vm.is_spot() {
+                assert_eq!(vm.interruptions, 0, "od vm {} interrupted", vm.id);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_cloudlet_progress_monotone_and_bounded() {
+    forall(60, 0xC10D, |rng| {
+        let mut e = random_engine(rng);
+        e.run();
+        for cl in &e.world.cloudlets {
+            assert!(cl.remaining_mi >= -1e-6, "negative remaining");
+            assert!(cl.remaining_mi <= cl.length_mi + 1e-6, "remaining grew");
+            if cl.state == cloudmarket::cloudlet::CloudletState::Finished {
+                assert!(cl.remaining_mi <= 1e-6);
+                assert!(cl.finished_at.is_some());
+                if let (Some(s), Some(f)) = (cl.started_at, cl.finished_at) {
+                    assert!(f + 1e-9 >= s);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_simulation_is_deterministic() {
+    forall(20, 0xDE7E, |rng| {
+        let seed = rng.next_u64();
+        let run = |seed: u64| {
+            let mut r = Rng::new(seed);
+            let mut e = random_engine(&mut r);
+            let report = e.run();
+            (
+                report.events_processed,
+                report.finished,
+                report.spot.interruptions,
+                (report.clock_end * 1e6) as u64,
+            )
+        };
+        assert_eq!(run(seed), run(seed));
+    });
+}
+
+// ---------------------------------------------------------------------
+// scorer properties
+// ---------------------------------------------------------------------
+
+fn random_score_input(rng: &mut Rng, n: usize) -> (Vec<[f64; 4]>, Vec<[f64; 4]>, Vec<[f64; 4]>, Vec<bool>) {
+    let mut caps = Vec::new();
+    let mut free = Vec::new();
+    let mut spot = Vec::new();
+    let mut mask = Vec::new();
+    for _ in 0..n {
+        let mut c = [0.0; 4];
+        let mut f = [0.0; 4];
+        let mut s = [0.0; 4];
+        for d in 0..4 {
+            c[d] = rng.uniform(1.0, 1e4);
+            f[d] = c[d] * rng.next_f64();
+            s[d] = f[d] * rng.next_f64();
+        }
+        caps.push(c);
+        free.push(f);
+        spot.push(s);
+        mask.push(rng.chance(0.8));
+    }
+    if !mask.iter().any(|&m| m) {
+        mask[0] = true;
+    }
+    (caps, free, spot, mask)
+}
+
+#[test]
+fn prop_scorer_permutation_equivariant() {
+    forall(40, 0x5C03E, |rng| {
+        let n = 2 + rng.below(20) as usize;
+        let (caps, free, spot, mask) = random_score_input(rng, n);
+        let mut scorer = RustScorer::new();
+        let (hs, ahs) = scorer.scores(&ScoreInput {
+            caps: &caps, free: &free, spot_used: &spot, mask: &mask, alpha: -0.5,
+        });
+        // Apply a random permutation.
+        let mut perm: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut perm);
+        let pc: Vec<_> = perm.iter().map(|&i| caps[i]).collect();
+        let pf: Vec<_> = perm.iter().map(|&i| free[i]).collect();
+        let ps: Vec<_> = perm.iter().map(|&i| spot[i]).collect();
+        let pm: Vec<_> = perm.iter().map(|&i| mask[i]).collect();
+        let (hs_p, ahs_p) = scorer.scores(&ScoreInput {
+            caps: &pc, free: &pf, spot_used: &ps, mask: &pm, alpha: -0.5,
+        });
+        for (j, &i) in perm.iter().enumerate() {
+            assert!((hs_p[j] - hs[i]).abs() < 1e-9, "hs not equivariant");
+            assert!((ahs_p[j] - ahs[i]).abs() < 1e-9, "ahs not equivariant");
+        }
+    });
+}
+
+#[test]
+fn prop_scorer_masked_rows_inert() {
+    forall(40, 0x111A5, |rng| {
+        let n = 3 + rng.below(16) as usize;
+        let (caps, free, spot, mut mask) = random_score_input(rng, n);
+        mask[0] = false;
+        let mut scorer = RustScorer::new();
+        let base = scorer.scores(&ScoreInput {
+            caps: &caps, free: &free, spot_used: &spot, mask: &mask, alpha: -0.3,
+        });
+        // Garbage in the masked row must not change anything.
+        let mut caps2 = caps.clone();
+        let mut free2 = free.clone();
+        let mut spot2 = spot.clone();
+        caps2[0] = [9e9; 4];
+        free2[0] = [8e9; 4];
+        spot2[0] = [7e9; 4];
+        let alt = scorer.scores(&ScoreInput {
+            caps: &caps2, free: &free2, spot_used: &spot2, mask: &mask, alpha: -0.3,
+        });
+        for i in 1..n {
+            assert!((base.0[i] - alt.0[i]).abs() < 1e-9);
+            assert!((base.1[i] - alt.1[i]).abs() < 1e-9);
+        }
+        assert_eq!(base.0[0], NEG);
+    });
+}
+
+#[test]
+fn prop_scorer_scores_bounded() {
+    forall(40, 0xB0B, |rng| {
+        let n = 1 + rng.below(32) as usize;
+        let (caps, free, spot, mask) = random_score_input(rng, n);
+        let alpha = rng.uniform(-1.0, 1.0);
+        let (hs, ahs) = RustScorer::new().scores(&ScoreInput {
+            caps: &caps, free: &free, spot_used: &spot, mask: &mask, alpha,
+        });
+        for i in 0..n {
+            if mask[i] {
+                assert!((-1e-9..=1.0 + 1e-9).contains(&hs[i]), "hs[{i}]={}", hs[i]);
+                assert!(ahs[i].is_finite());
+                // |AHS| <= |HS| * (1 + |alpha|) since SL in [0,1].
+                assert!(ahs[i].abs() <= hs[i].abs() * (1.0 + alpha.abs()) + 1e-9);
+            } else {
+                assert_eq!(hs[i], NEG);
+                assert_eq!(ahs[i], NEG);
+            }
+        }
+    });
+}
