@@ -1,19 +1,76 @@
 //! §Perf L3: DES kernel and end-to-end simulation throughput.
 //!
 //! - event queue push/pop throughput (the kernel's fundamental cost),
+//!   including the allocation-free `pop_due_into` batch drain,
+//! - allocation decision latency per policy at 100 / 1 000 / 10 000
+//!   hosts, indexed hot path vs. the pre-index linear scan (the scan
+//!   baseline is the exact pre-index implementation, kept in `World` as
+//!   the `_scan` oracles; parity is asserted before timing),
 //! - end-to-end events/sec on the comparison scenario (the headline
-//!   "simulator speed" number vs the paper's 1.5 days per simulated day),
-//! - allocation decision latency per policy at 100 hosts.
+//!   "simulator speed" number vs the paper's 1.5 days per simulated day).
+//!
+//! All results land in `BENCH_engine.json` at the repo root (the
+//! decision-latency trajectory CI validates). Set `BENCH_FAST=1` to skip
+//! the 10 000-host tier (CI smoke).
+//!
+//! The decision world is first-fit-shaped: the head of the cluster is
+//! packed solid (free_pes = 0) and only the tail keeps headroom, which is
+//! what a loaded cluster looks like and is exactly the case where the
+//! pre-index scans waste their time walking infeasible hosts.
 
 use cloudmarket::allocation::{AllocationPolicy, BestFit, FirstFit, HlemVmp, RoundRobin, WorstFit};
 use cloudmarket::benchkit::{banner, black_box, Bencher};
 use cloudmarket::config::scenario::{build_comparison_workload, ComparisonConfig};
 use cloudmarket::core::{EntityId, EventQueue, SimEvent};
-use cloudmarket::engine::{Engine, EngineConfig};
+use cloudmarket::engine::{Engine, EngineConfig, World};
+use cloudmarket::infra::HostSpec;
 use cloudmarket::stats::Rng;
+use cloudmarket::vm::{SpotConfig, Vm, VmId, VmSpec};
+
+/// A cluster of `n_hosts` with the head packed solid, spot VMs sprinkled
+/// through the packed region, and ~8% tail headroom; plus a small probe
+/// VM whose placement decision every policy must answer.
+fn decision_world(n_hosts: usize) -> (World, VmId) {
+    let mut w = World::new();
+    let dc = w.add_datacenter("dc", 1.0);
+    for i in 0..n_hosts {
+        let pes = [16u32, 32, 64][i % 3];
+        w.add_host(dc, HostSpec::new(pes, 1000.0, 262_144.0, 40_000.0, 4_000_000.0), 0.0);
+    }
+    // Pack the head of the cluster completely (first-fit-shaped load):
+    // the decision hot path must skip all of it.
+    let full = n_hosts * 92 / 100;
+    for h in 0..full {
+        let pes = w.hosts[h].spec.pes;
+        if h % 3 == 0 {
+            // Half spot, half on-demand: keeps the spot-usage vectors and
+            // the spot-host set populated (the HLEM adjusted-score path).
+            let sp = w.add_vm(Vm::spot(0, VmSpec::new(1000.0, pes / 2), SpotConfig::hibernate()));
+            w.commit_vm(h, sp);
+            let od = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, pes - pes / 2)));
+            w.commit_vm(h, od);
+        } else {
+            let od = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, pes)));
+            w.commit_vm(h, od);
+        }
+    }
+    // Tail hosts keep half their PEs free (the feasible candidate set).
+    for h in full..n_hosts {
+        let pes = w.hosts[h].spec.pes;
+        let od = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, pes / 2)));
+        w.commit_vm(h, od);
+    }
+    w.check_index().expect("index consistent after workload build");
+    let probe = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, 2)));
+    (w, probe)
+}
 
 fn main() {
     banner("PERF: DES kernel + end-to-end engine");
+    let fast = matches!(
+        std::env::var("BENCH_FAST").ok().as_deref(),
+        Some(v) if !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false")
+    );
     let mut b = Bencher::new();
 
     // --- event queue ----------------------------------------------------
@@ -31,60 +88,72 @@ fn main() {
         }
         black_box(count);
     });
+    let mut batch: Vec<SimEvent<u32>> = Vec::new();
+    b.bench("event queue pop_due_into batch drain 100k", Some(n_events as f64), || {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        for (i, &t) in times.iter().enumerate() {
+            q.push(SimEvent::new(t, EntityId::Kernel, EntityId::Kernel, i as u32));
+        }
+        let mut count = 0;
+        while let Some(t) = q.next_time() {
+            batch.clear();
+            q.pop_due_into(t, &mut batch);
+            count += batch.len();
+        }
+        black_box(count);
+    });
 
-    // --- allocation decision latency ------------------------------------
-    let mut engine = Engine::new(EngineConfig::default(), Box::new(FirstFit::new()));
-    build_comparison_workload(&mut engine, &ComparisonConfig::default());
-    // Commit ~40% load so policies see a realistic mixed cluster while
-    // every host keeps some headroom (a feasible candidate set forces the
-    // HLEM scoring pipeline to actually run each decision).
-    let world = &mut engine.world;
-    let vm_ids: Vec<usize> = (0..world.vms.len()).collect();
-    let mut placed = 0;
-    for &v in &vm_ids {
-        if placed >= 350 {
-            break;
-        }
-        let spec = world.vms[v].spec;
-        if let Some(h) = (0..world.hosts.len()).find(|&h| {
-            let host = &world.hosts[h];
-            host.free_pes() > spec.pes + 2 && host.fits(spec.pes, spec.ram, spec.bw, spec.storage)
-        }) {
-            world.hosts[h].commit(v, spec.pes, spec.ram, spec.bw, spec.storage);
-            placed += 1;
-        }
-    }
-    // Probe with a small VM so every policy sees many candidates.
-    let probe = vm_ids
-        .iter()
-        .copied()
-        .find(|&v| world.vms[v].spec.pes <= 2 && world.vms[v].host.is_none())
-        .expect("small probe vm");
-    let world = &engine.world;
-    {
-        // Sanity: the probe must have a large candidate set.
-        let feasible = world
-            .active_hosts()
-            .filter(|h| {
-                let s = world.vms[probe].spec;
-                h.fits(s.pes, s.ram, s.bw, s.storage)
-            })
-            .count();
-        println!("(probe candidate hosts: {feasible})");
-        assert!(feasible > 50);
-    }
-    let mut policies: Vec<Box<dyn AllocationPolicy>> = vec![
-        Box::new(FirstFit::new()),
-        Box::new(BestFit::new()),
-        Box::new(WorstFit::new()),
-        Box::new(RoundRobin::new()),
-        Box::new(HlemVmp::plain()),
-        Box::new(HlemVmp::adjusted()),
+    // --- allocation decision latency: indexed vs pre-index scan ---------
+    banner("decision latency (indexed placement index vs linear scan)");
+    let factories: Vec<(&'static str, fn(bool) -> Box<dyn AllocationPolicy>)> = vec![
+        ("first-fit", |scan| Box::new(FirstFit::new().with_scan_mode(scan))),
+        ("best-fit", |scan| Box::new(BestFit::new().with_scan_mode(scan))),
+        ("worst-fit", |scan| Box::new(WorstFit::new().with_scan_mode(scan))),
+        ("hlem-vmp", |scan| Box::new(HlemVmp::plain().with_scan_mode(scan))),
+        ("hlem-vmp-adjusted", |scan| Box::new(HlemVmp::adjusted().with_scan_mode(scan))),
     ];
-    for p in policies.iter_mut() {
-        let name = p.name();
-        b.bench(&format!("select_host [{name}] 100 hosts"), Some(1.0), || {
-            black_box(p.select_host(world, probe, 100.0));
+    let sizes: &[usize] = if fast { &[100, 1_000] } else { &[100, 1_000, 10_000] };
+    const CALLS: usize = 64;
+    for &n in sizes {
+        let (world, probe) = decision_world(n);
+        for (name, make) in &factories {
+            let mut indexed = make(false);
+            let mut scanned = make(true);
+            // Placement parity before timing: both modes must agree.
+            assert_eq!(
+                indexed.select_host(&world, probe, 100.0),
+                scanned.select_host(&world, probe, 100.0),
+                "index/scan decision parity violated for {name} at {n} hosts"
+            );
+            let ri = b.bench(
+                &format!("select_host[{name}][indexed] {n} hosts"),
+                Some(CALLS as f64),
+                || {
+                    for _ in 0..CALLS {
+                        black_box(indexed.select_host(&world, probe, 100.0));
+                    }
+                },
+            );
+            let rs = b.bench(
+                &format!("select_host[{name}][scan] {n} hosts"),
+                Some(CALLS as f64),
+                || {
+                    for _ in 0..CALLS {
+                        black_box(scanned.select_host(&world, probe, 100.0));
+                    }
+                },
+            );
+            let speedup =
+                rs.median.as_secs_f64() / ri.median.as_secs_f64().max(1e-12);
+            println!("    -> {name} @ {n} hosts: index speedup {speedup:.1}x over scan");
+        }
+        // RoundRobin has no indexed variant (positional cursor); timed for
+        // the record.
+        let mut rr = RoundRobin::new();
+        b.bench(&format!("select_host[round-robin][cursor] {n} hosts"), Some(CALLS as f64), || {
+            for _ in 0..CALLS {
+                black_box(rr.select_host(&world, probe, 100.0));
+            }
         });
     }
 
@@ -103,6 +172,13 @@ fn main() {
         black_box(engine.run());
     });
     println!("(events per e2e run: {events})");
-    b.write_json(std::path::Path::new("results/bench_engine.json")).ok();
-    hb.write_json(std::path::Path::new("results/bench_engine_e2e.json")).ok();
+
+    // --- trajectory file --------------------------------------------------
+    b.merge(&hb);
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+        .join("BENCH_engine.json");
+    b.write_json(&out).expect("writing BENCH_engine.json");
+    println!("wrote {}", out.display());
 }

@@ -2,11 +2,16 @@
 //! Fit; First-Fit is the CloudSim Plus policy the evaluation compares
 //! against, §VII-E).
 //!
-//! All baselines share [`preempt::select_victims`] for the spot-preemption
-//! path, scanning hosts in their own characteristic order.
+//! All baselines share [`preempt::select_victims_with`] for the
+//! spot-preemption path. Since the placement index landed they run on
+//! [`World`]'s indexed queries (free-PE buckets + spot-host set) instead
+//! of scanning `active_hosts()` end to end; every policy keeps a
+//! `scan_mode` switch that restores the pre-index linear scan - the
+//! parity tests pin both modes to identical decisions and the decision
+//! benches use scan mode as the baseline.
 
 use super::policy::AllocationPolicy;
-use super::preempt;
+use super::preempt::{self, VictimScratch};
 use crate::engine::config::VictimPolicy;
 use crate::engine::world::World;
 use crate::infra::{Host, HostId};
@@ -17,178 +22,164 @@ fn fits(host: &Host, vm: &Vm) -> bool {
 }
 
 /// Generic preemption scan: first host (in id order) where clearing
-/// interruptible spots makes room.
+/// interruptible spots makes room. The indexed path enumerates only
+/// hosts that actually carry spot VMs - hosts without spots can never
+/// yield victims, so the result is identical to the full scan.
 fn scan_preemption(
     world: &World,
     vm: VmId,
     now: f64,
     victim_policy: VictimPolicy,
+    scan_mode: bool,
+    scratch: &mut VictimScratch,
 ) -> Option<(HostId, Vec<VmId>)> {
     // Never preempt spots to place another spot (paper §V-C: spot VMs are
     // interrupted when *on-demand* requests cannot be fulfilled).
     if world.vms[vm].is_spot() {
         return None;
     }
-    for host in world.active_hosts() {
-        if let Some(victims) = preempt::select_victims(world, host, vm, now, victim_policy) {
-            return Some((host.id, victims));
+    if scan_mode {
+        for host in world.active_hosts() {
+            if let Some(victims) =
+                preempt::select_victims_with(world, host, vm, now, victim_policy, scratch)
+            {
+                return Some((host.id, victims));
+            }
+        }
+    } else {
+        for id in world.spot_host_ids() {
+            let host = &world.hosts[id];
+            if let Some(victims) =
+                preempt::select_victims_with(world, host, vm, now, victim_policy, scratch)
+            {
+                return Some((id, victims));
+            }
         }
     }
     None
 }
 
-/// First-Fit: first active host (id order) with room.
-pub struct FirstFit {
-    victim_policy: VictimPolicy,
-    decisions: u64,
+macro_rules! baseline_policy {
+    ($(#[$doc:meta])* $name:ident, $label:literal, $indexed:ident, $scanned:ident) => {
+        $(#[$doc])*
+        pub struct $name {
+            victim_policy: VictimPolicy,
+            decisions: u64,
+            scan_mode: bool,
+            scratch: VictimScratch,
+        }
+
+        impl $name {
+            pub fn new() -> Self {
+                $name {
+                    victim_policy: VictimPolicy::ListOrder,
+                    decisions: 0,
+                    scan_mode: false,
+                    scratch: VictimScratch::default(),
+                }
+            }
+
+            pub fn with_victim_policy(mut self, p: VictimPolicy) -> Self {
+                self.victim_policy = p;
+                self
+            }
+
+            /// Use the pre-index linear scan instead of the placement
+            /// index (parity oracle / bench baseline; decisions are
+            /// identical by construction and pinned by tests).
+            #[doc(hidden)]
+            pub fn with_scan_mode(mut self, scan: bool) -> Self {
+                self.scan_mode = scan;
+                self
+            }
+        }
+
+        impl Default for $name {
+            fn default() -> Self {
+                Self::new()
+            }
+        }
+
+        impl AllocationPolicy for $name {
+            fn name(&self) -> &'static str {
+                $label
+            }
+
+            fn select_host(&mut self, world: &World, vm: VmId, _now: f64) -> Option<HostId> {
+                self.decisions += 1;
+                let v = &world.vms[vm];
+                if self.scan_mode {
+                    world.$scanned(v)
+                } else {
+                    world.$indexed(v)
+                }
+            }
+
+            fn select_preemption(
+                &mut self,
+                world: &World,
+                vm: VmId,
+                now: f64,
+            ) -> Option<(HostId, Vec<VmId>)> {
+                scan_preemption(
+                    world,
+                    vm,
+                    now,
+                    self.victim_policy,
+                    self.scan_mode,
+                    &mut self.scratch,
+                )
+            }
+
+            fn decisions(&self) -> u64 {
+                self.decisions
+            }
+        }
+    };
 }
 
-impl FirstFit {
-    pub fn new() -> Self {
-        FirstFit { victim_policy: VictimPolicy::ListOrder, decisions: 0 }
-    }
+baseline_policy!(
+    /// First-Fit: first active host (id order) with room.
+    FirstFit,
+    "first-fit",
+    first_fit_host,
+    first_fit_host_scan
+);
 
-    pub fn with_victim_policy(mut self, p: VictimPolicy) -> Self {
-        self.victim_policy = p;
-        self
-    }
-}
+baseline_policy!(
+    /// Best-Fit: feasible host with the *fewest* free PEs (tightest pack).
+    BestFit,
+    "best-fit",
+    best_fit_host,
+    best_fit_host_scan
+);
 
-impl Default for FirstFit {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl AllocationPolicy for FirstFit {
-    fn name(&self) -> &'static str {
-        "first-fit"
-    }
-
-    fn select_host(&mut self, world: &World, vm: VmId, _now: f64) -> Option<HostId> {
-        self.decisions += 1;
-        let v = &world.vms[vm];
-        world.active_hosts().find(|h| fits(h, v)).map(|h| h.id)
-    }
-
-    fn select_preemption(
-        &mut self,
-        world: &World,
-        vm: VmId,
-        now: f64,
-    ) -> Option<(HostId, Vec<VmId>)> {
-        scan_preemption(world, vm, now, self.victim_policy)
-    }
-
-    fn decisions(&self) -> u64 {
-        self.decisions
-    }
-}
-
-/// Best-Fit: feasible host with the *fewest* free PEs (tightest pack).
-pub struct BestFit {
-    victim_policy: VictimPolicy,
-    decisions: u64,
-}
-
-impl BestFit {
-    pub fn new() -> Self {
-        BestFit { victim_policy: VictimPolicy::ListOrder, decisions: 0 }
-    }
-}
-
-impl Default for BestFit {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl AllocationPolicy for BestFit {
-    fn name(&self) -> &'static str {
-        "best-fit"
-    }
-
-    fn select_host(&mut self, world: &World, vm: VmId, _now: f64) -> Option<HostId> {
-        self.decisions += 1;
-        let v = &world.vms[vm];
-        world
-            .active_hosts()
-            .filter(|h| fits(h, v))
-            .min_by_key(|h| h.free_pes())
-            .map(|h| h.id)
-    }
-
-    fn select_preemption(
-        &mut self,
-        world: &World,
-        vm: VmId,
-        now: f64,
-    ) -> Option<(HostId, Vec<VmId>)> {
-        scan_preemption(world, vm, now, self.victim_policy)
-    }
-
-    fn decisions(&self) -> u64 {
-        self.decisions
-    }
-}
-
-/// Worst-Fit: feasible host with the *most* free PEs (load spreading).
-pub struct WorstFit {
-    victim_policy: VictimPolicy,
-    decisions: u64,
-}
-
-impl WorstFit {
-    pub fn new() -> Self {
-        WorstFit { victim_policy: VictimPolicy::ListOrder, decisions: 0 }
-    }
-}
-
-impl Default for WorstFit {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl AllocationPolicy for WorstFit {
-    fn name(&self) -> &'static str {
-        "worst-fit"
-    }
-
-    fn select_host(&mut self, world: &World, vm: VmId, _now: f64) -> Option<HostId> {
-        self.decisions += 1;
-        let v = &world.vms[vm];
-        world
-            .active_hosts()
-            .filter(|h| fits(h, v))
-            .max_by_key(|h| h.free_pes())
-            .map(|h| h.id)
-    }
-
-    fn select_preemption(
-        &mut self,
-        world: &World,
-        vm: VmId,
-        now: f64,
-    ) -> Option<(HostId, Vec<VmId>)> {
-        scan_preemption(world, vm, now, self.victim_policy)
-    }
-
-    fn decisions(&self) -> u64 {
-        self.decisions
-    }
-}
+baseline_policy!(
+    /// Worst-Fit: feasible host with the *most* free PEs (load spreading).
+    WorstFit,
+    "worst-fit",
+    worst_fit_host,
+    worst_fit_host_scan
+);
 
 /// Round-Robin: rotate a cursor over hosts, take the first feasible one.
+/// (Cursor semantics are inherently positional, so it keeps the linear
+/// probe; only its preemption path uses the spot-host index.)
 pub struct RoundRobin {
     cursor: usize,
     victim_policy: VictimPolicy,
     decisions: u64,
+    scratch: VictimScratch,
 }
 
 impl RoundRobin {
     pub fn new() -> Self {
-        RoundRobin { cursor: 0, victim_policy: VictimPolicy::ListOrder, decisions: 0 }
+        RoundRobin {
+            cursor: 0,
+            victim_policy: VictimPolicy::ListOrder,
+            decisions: 0,
+            scratch: VictimScratch::default(),
+        }
     }
 }
 
@@ -227,7 +218,7 @@ impl AllocationPolicy for RoundRobin {
         vm: VmId,
         now: f64,
     ) -> Option<(HostId, Vec<VmId>)> {
-        scan_preemption(world, vm, now, self.victim_policy)
+        scan_preemption(world, vm, now, self.victim_policy, false, &mut self.scratch)
     }
 
     fn decisions(&self) -> u64 {
@@ -256,18 +247,21 @@ mod tests {
     fn first_fit_takes_lowest_id() {
         let (w, vm) = setup();
         assert_eq!(FirstFit::new().select_host(&w, vm, 0.0), Some(0));
+        assert_eq!(FirstFit::new().with_scan_mode(true).select_host(&w, vm, 0.0), Some(0));
     }
 
     #[test]
     fn best_fit_takes_tightest() {
         let (w, vm) = setup();
         assert_eq!(BestFit::new().select_host(&w, vm, 0.0), Some(0)); // 2 free PEs
+        assert_eq!(BestFit::new().with_scan_mode(true).select_host(&w, vm, 0.0), Some(0));
     }
 
     #[test]
     fn worst_fit_takes_emptiest() {
         let (w, vm) = setup();
         assert_eq!(WorstFit::new().select_host(&w, vm, 0.0), Some(2)); // 8 free PEs
+        assert_eq!(WorstFit::new().with_scan_mode(true).select_host(&w, vm, 0.0), Some(2));
     }
 
     #[test]
@@ -276,8 +270,7 @@ mod tests {
         let mut rr = RoundRobin::new();
         assert_eq!(rr.select_host(&w, vm, 0.0), Some(0));
         // Simulate the placement so host 0 fills up.
-        let spec = w.vms[vm].spec;
-        w.hosts[0].commit(vm, spec.pes, spec.ram, spec.bw, spec.storage);
+        w.commit_vm(0, vm);
         let vm2 = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, 2)));
         assert_eq!(rr.select_host(&w, vm2, 0.0), Some(1));
     }
@@ -298,16 +291,14 @@ mod tests {
         // Fill host 0 with an interruptible spot.
         let cfg = SpotConfig::terminate().with_min_running(0.0);
         let sp = w.add_vm(Vm::spot(0, VmSpec::new(1000.0, 2), cfg));
-        let spec = w.vms[sp].spec;
-        w.hosts[0].commit(sp, spec.pes, spec.ram, spec.bw, spec.storage);
+        w.commit_vm(0, sp);
         w.vms[sp].transition(VmState::Running);
         w.vms[sp].history.record_start(0, 0.0);
         // Fill hosts 1 and 2 completely with on-demand.
         for h in [1usize, 2] {
             let pes = w.hosts[h].spec.pes;
             let od = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, pes)));
-            let spec = w.vms[od].spec;
-            w.hosts[h].commit(od, spec.pes, spec.ram, spec.bw, spec.storage);
+            w.commit_vm(h, od);
             w.vms[od].transition(VmState::Running);
         }
         let od_new = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, 2)));
@@ -316,6 +307,9 @@ mod tests {
         // On-demand may preempt the spot on host 0.
         let (h, victims) = ff.select_preemption(&w, od_new, 10.0).unwrap();
         assert_eq!((h, victims), (0, vec![sp]));
+        // The indexed and scanned preemption scans agree.
+        let mut ff_scan = FirstFit::new().with_scan_mode(true);
+        assert_eq!(ff_scan.select_preemption(&w, od_new, 10.0), Some((0, vec![sp])));
         // A spot VM must never preempt.
         assert!(ff.select_preemption(&w, spot_new, 10.0).is_none());
     }

@@ -14,6 +14,13 @@
 //! 3. **Host selection**: highest score wins. The paper omits the original
 //!    algorithm's energy check and so do we (§VI-A).
 //!
+//! Since the placement index landed, phase 1 enumerates candidates from
+//! the world's free-PE buckets (id-ascending, so the entropy-weight float
+//! summation order - and therefore every score - is bit-identical to the
+//! old full scan), and the per-host spot-usage vectors are O(1) reads
+//! instead of per-candidate VM-list walks. `scan_mode` restores the
+//! pre-index scans for the parity tests and the decision benches.
+//!
 //! Documented deviations (DESIGN.md §4): when the RsDiff filter empties an
 //! otherwise-feasible candidate list we fall back to the unfiltered list
 //! (otherwise small VMs become unplaceable on loaded clusters); the sign
@@ -21,7 +28,7 @@
 //! penalty factor but writes a score-increasing product).
 
 use super::policy::AllocationPolicy;
-use super::preempt;
+use super::preempt::{self, VictimScratch};
 use super::scorer::{HostScorer, RustScorer, ScoreInput, NEG};
 use crate::engine::config::VictimPolicy;
 use crate::engine::world::World;
@@ -83,6 +90,9 @@ pub struct HlemVmp {
     decisions: u64,
     /// Placements that needed the RsDiff fallback (observability).
     pub rsdiff_fallbacks: u64,
+    /// Pre-index linear scans instead of the placement index (parity
+    /// oracle / bench baseline).
+    scan_mode: bool,
     // Scratch buffers reused across decisions (the scoring path runs on
     // every placement; per-call Vec allocation measured ~25% of decision
     // latency - EXPERIMENTS.md SPerf iteration log).
@@ -90,6 +100,10 @@ pub struct HlemVmp {
     scratch_free: Vec<[f64; 4]>,
     scratch_spot: Vec<[f64; 4]>,
     scratch_mask: Vec<bool>,
+    scratch_feasible: Vec<HostId>,
+    scratch_ids: Vec<HostId>,
+    scratch_vms: Vec<VmId>,
+    victim_scratch: VictimScratch,
 }
 
 impl HlemVmp {
@@ -112,11 +126,23 @@ impl HlemVmp {
             scorer,
             decisions: 0,
             rsdiff_fallbacks: 0,
+            scan_mode: false,
             scratch_caps: Vec::new(),
             scratch_free: Vec::new(),
             scratch_spot: Vec::new(),
             scratch_mask: Vec::new(),
+            scratch_feasible: Vec::new(),
+            scratch_ids: Vec::new(),
+            scratch_vms: Vec::new(),
+            victim_scratch: VictimScratch::default(),
         }
+    }
+
+    /// Use the pre-index linear scans (parity oracle / bench baseline).
+    #[doc(hidden)]
+    pub fn with_scan_mode(mut self, scan: bool) -> Self {
+        self.scan_mode = scan;
+        self
     }
 
     pub fn scorer_name(&self) -> &'static str {
@@ -136,25 +162,29 @@ impl HlemVmp {
         r_j - u_i * self.config.resource_carrying_factor > self.config.threshold
     }
 
-    /// Phase 1: candidate list (feasible now, RsDiff-filtered with
-    /// fallback). Returns host references.
-    fn filter_hosts<'w>(&mut self, world: &'w World, vm: &Vm) -> Vec<&'w Host> {
-        let feasible: Vec<&Host> = world
-            .active_hosts()
-            .filter(|h| h.fits(vm.spec.pes, vm.spec.ram, vm.spec.bw, vm.spec.storage))
-            .collect();
-        let filtered: Vec<&Host> =
-            feasible.iter().copied().filter(|h| self.rsdiff_ok(h, vm)).collect();
-        if filtered.is_empty() && !feasible.is_empty() && !self.config.strict_rsdiff {
-            self.rsdiff_fallbacks += 1;
-            feasible
+    /// Phase 1: fill `self.scratch_ids` with the candidate list (feasible
+    /// now, RsDiff-filtered with fallback), ascending by host id.
+    fn filter_hosts(&mut self, world: &World, vm: &Vm) {
+        let mut feasible = std::mem::take(&mut self.scratch_feasible);
+        if self.scan_mode {
+            world.feasible_host_ids_scan(vm, &mut feasible);
         } else {
-            filtered
+            world.feasible_host_ids(vm, &mut feasible);
         }
+        let mut ids = std::mem::take(&mut self.scratch_ids);
+        ids.clear();
+        ids.extend(feasible.iter().copied().filter(|&id| self.rsdiff_ok(&world.hosts[id], vm)));
+        if ids.is_empty() && !feasible.is_empty() && !self.config.strict_rsdiff {
+            self.rsdiff_fallbacks += 1;
+            ids.extend(feasible.iter().copied());
+        }
+        self.scratch_feasible = feasible;
+        self.scratch_ids = ids;
     }
 
-    /// Phases 2-3 over an explicit candidate list: score and pick the best.
-    fn best_of(&mut self, world: &World, candidates: &[&Host]) -> Option<HostId> {
+    /// Phases 2-3 over an explicit candidate list (host ids in the scan
+    /// order): score and pick the best.
+    fn best_of(&mut self, world: &World, candidates: &[HostId]) -> Option<HostId> {
         if candidates.is_empty() {
             return None;
         }
@@ -162,10 +192,15 @@ impl HlemVmp {
         self.scratch_free.clear();
         self.scratch_spot.clear();
         self.scratch_mask.clear();
-        for h in candidates {
+        for &id in candidates {
+            let h = &world.hosts[id];
             self.scratch_caps.push(h.capacity_vec());
             self.scratch_free.push(h.free_vec());
-            self.scratch_spot.push(world.spot_used_vec(h));
+            self.scratch_spot.push(if self.scan_mode {
+                world.spot_used_vec_scan(h)
+            } else {
+                world.spot_used_vec(h)
+            });
             self.scratch_mask.push(true);
         }
         let (hs, ahs) = self.scorer.scores(&ScoreInput {
@@ -184,10 +219,10 @@ impl HlemVmp {
             // Deterministic tie-break on host id.
             let better = match best {
                 None => true,
-                Some((bs, bid)) => s > bs || (s == bs && candidates[i].id < bid),
+                Some((bs, bid)) => s > bs || (s == bs && candidates[i] < bid),
             };
             if better {
-                best = Some((s, candidates[i].id));
+                best = Some((s, candidates[i]));
             }
         }
         best.map(|(_, id)| id)
@@ -206,8 +241,11 @@ impl AllocationPolicy for HlemVmp {
     fn select_host(&mut self, world: &World, vm: VmId, _now: f64) -> Option<HostId> {
         self.decisions += 1;
         let v = &world.vms[vm];
-        let candidates = self.filter_hosts(world, v);
-        self.best_of(world, &candidates)
+        self.filter_hosts(world, v);
+        let ids = std::mem::take(&mut self.scratch_ids);
+        let best = self.best_of(world, &ids);
+        self.scratch_ids = ids;
+        best
     }
 
     fn select_preemption(
@@ -221,28 +259,53 @@ impl AllocationPolicy for HlemVmp {
             return None; // spots never preempt (paper §V-C)
         }
         // Algorithm 1 line 4: PHCandidateListClrSpot - hosts feasible if
-        // their interruptible spot load were cleared.
-        let clr_candidates: Vec<&Host> = world
-            .active_hosts()
-            .filter(|h| {
-                let spots = world.interruptible_spots(h, now);
-                !spots.is_empty() && world.fits_with_clearing(h, v, &spots)
-            })
-            .collect();
+        // their interruptible spot load were cleared. Only hosts carrying
+        // spot VMs can qualify, so the indexed path enumerates the
+        // spot-host set instead of every active host.
+        let mut spots = std::mem::take(&mut self.scratch_vms);
+        let mut cand = std::mem::take(&mut self.scratch_feasible);
+        cand.clear();
+        if self.scan_mode {
+            for h in world.active_hosts() {
+                world.interruptible_spots_into(h, now, &mut spots);
+                if !spots.is_empty() && world.fits_with_clearing(h, v, &spots) {
+                    cand.push(h.id);
+                }
+            }
+        } else {
+            for id in world.spot_host_ids() {
+                let h = &world.hosts[id];
+                world.interruptible_spots_into(h, now, &mut spots);
+                if !spots.is_empty() && world.fits_with_clearing(h, v, &spots) {
+                    cand.push(id);
+                }
+            }
+        }
+        spots.clear();
+        self.scratch_vms = spots;
         // Rank the clearable hosts by the same score and take the best one
         // for which a minimal victim set exists.
-        let mut remaining: Vec<&Host> = clr_candidates;
-        while !remaining.is_empty() {
-            let best = self.best_of(world, &remaining)?;
+        let mut result = None;
+        while !cand.is_empty() {
+            let Some(best) = self.best_of(world, &cand) else {
+                break;
+            };
             let host = &world.hosts[best];
-            if let Some(victims) =
-                preempt::select_victims(world, host, vm, now, self.config.victim_policy)
-            {
-                return Some((best, victims));
+            if let Some(victims) = preempt::select_victims_with(
+                world,
+                host,
+                vm,
+                now,
+                self.config.victim_policy,
+                &mut self.victim_scratch,
+            ) {
+                result = Some((best, victims));
+                break;
             }
-            remaining.retain(|h| h.id != best);
+            cand.retain(|&h| h != best);
         }
-        None
+        self.scratch_feasible = cand;
+        result
     }
 
     fn decisions(&self) -> u64 {
@@ -261,8 +324,7 @@ mod tests {
     }
 
     fn commit_running(w: &mut World, host: HostId, vm: VmId, start: f64) {
-        let spec = w.vms[vm].spec;
-        w.hosts[host].commit(vm, spec.pes, spec.ram, spec.bw, spec.storage);
+        w.commit_vm(host, vm);
         w.vms[vm].transition(VmState::Running);
         w.vms[vm].host = Some(host);
         w.vms[vm].history.record_start(host, start);
@@ -284,6 +346,8 @@ mod tests {
         let vm = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, 2)));
         let got = HlemVmp::plain().select_host(&w, vm, 1.0);
         assert_eq!(got, Some(2)); // untouched host has max free capacity
+        let scanned = HlemVmp::plain().with_scan_mode(true).select_host(&w, vm, 1.0);
+        assert_eq!(got, scanned);
     }
 
     #[test]
@@ -306,6 +370,7 @@ mod tests {
         assert_eq!(HlemVmp::plain().select_host(&w, vm, 1.0), Some(0));
         // Adjusted penalizes host 0 for its spot load.
         assert_eq!(HlemVmp::adjusted().select_host(&w, vm, 1.0), Some(1));
+        assert_eq!(HlemVmp::adjusted().with_scan_mode(true).select_host(&w, vm, 1.0), Some(1));
     }
 
     #[test]
@@ -352,6 +417,9 @@ mod tests {
         let (host2, victims2) = HlemVmp::plain().select_preemption(&w, vm2, 10.0).unwrap();
         assert_eq!(host2, 1);
         assert_eq!(victims2, vec![s1]);
+        // Scan mode agrees.
+        let scanned = HlemVmp::plain().with_scan_mode(true).select_preemption(&w, vm2, 10.0);
+        assert_eq!(scanned, Some((1, vec![s1])));
     }
 
     #[test]

@@ -12,6 +12,14 @@ use crate::vm::VmId;
 /// called in any particular order; the engine owns all mutation. `&mut
 /// self` allows stateful policies (Round-Robin cursor, scorer scratch
 /// buffers, decision counters).
+///
+/// The world view includes the incremental placement index (free-PE
+/// buckets, spot-host set, O(1) per-host spot-usage vectors - see
+/// [`crate::engine::index`]): policies should query
+/// `World::{first,best,worst}_fit_host`, `World::feasible_host_ids` and
+/// `World::spot_host_ids` rather than scanning `active_hosts()` per
+/// decision. The index is kept consistent by the engine, which routes
+/// every commit/release/host-lifecycle change through `World`.
 pub trait AllocationPolicy {
     /// Human-readable name used in reports and benches.
     fn name(&self) -> &'static str;

@@ -7,12 +7,40 @@ use crate::engine::world::World;
 use crate::infra::Host;
 use crate::vm::VmId;
 
+/// Reusable buffers for the preemption scan (one per policy instance).
+/// The pre-scratch code allocated an `interruptible_spots` Vec per
+/// candidate host per decision; these keep the scan allocation-free -
+/// the only allocation left is the returned victim set on success.
+#[derive(Debug, Default)]
+pub struct VictimScratch {
+    order: Vec<VmId>,
+    chosen: Vec<VmId>,
+}
+
+/// Fill `out` with the interruptible spot VMs of `host` ordered according
+/// to `policy` (allocation-free twin of [`victim_order`]).
+pub fn victim_order_into(
+    world: &World,
+    host: &Host,
+    now: f64,
+    policy: VictimPolicy,
+    out: &mut Vec<VmId>,
+) {
+    world.interruptible_spots_into(host, now, out);
+    order_victims(world, policy, out);
+}
+
 /// Order the interruptible spot VMs of `host` according to `policy`.
 ///
 /// [`VictimPolicy::ListOrder`] is the paper's behavior (host VM-list =
 /// allocation order, §IX); the others are the future-work ablations.
 pub fn victim_order(world: &World, host: &Host, now: f64, policy: VictimPolicy) -> Vec<VmId> {
-    let mut victims = world.interruptible_spots(host, now);
+    let mut victims = Vec::new();
+    victim_order_into(world, host, now, policy, &mut victims);
+    victims
+}
+
+fn order_victims(world: &World, policy: VictimPolicy, victims: &mut Vec<VmId>) {
     match policy {
         VictimPolicy::ListOrder => {}
         VictimPolicy::Youngest => {
@@ -31,11 +59,38 @@ pub fn victim_order(world: &World, host: &Host, now: f64, policy: VictimPolicy) 
             });
         }
     }
-    victims
 }
 
 /// Minimal prefix of `victim_order` whose removal makes `vm` fit on
 /// `host`; `None` if even clearing all interruptible spots is not enough.
+/// Allocation-free except for the returned victim set on success; the
+/// caller supplies reusable [`VictimScratch`] buffers.
+pub fn select_victims_with(
+    world: &World,
+    host: &Host,
+    vm: VmId,
+    now: f64,
+    policy: VictimPolicy,
+    scratch: &mut VictimScratch,
+) -> Option<Vec<VmId>> {
+    let vm_ref = &world.vms[vm];
+    let VictimScratch { order, chosen } = scratch;
+    victim_order_into(world, host, now, policy, order);
+    if order.is_empty() {
+        return None;
+    }
+    chosen.clear();
+    for &v in order.iter() {
+        chosen.push(v);
+        if world.fits_with_clearing(host, vm_ref, chosen) {
+            return Some(chosen.clone());
+        }
+    }
+    None
+}
+
+/// Convenience wrapper around [`select_victims_with`] with throwaway
+/// scratch buffers.
 pub fn select_victims(
     world: &World,
     host: &Host,
@@ -43,19 +98,7 @@ pub fn select_victims(
     now: f64,
     policy: VictimPolicy,
 ) -> Option<Vec<VmId>> {
-    let vm_ref = &world.vms[vm];
-    let ordered = victim_order(world, host, now, policy);
-    if ordered.is_empty() {
-        return None;
-    }
-    let mut chosen: Vec<VmId> = Vec::new();
-    for v in ordered {
-        chosen.push(v);
-        if world.fits_with_clearing(host, vm_ref, &chosen) {
-            return Some(chosen);
-        }
-    }
-    None
+    select_victims_with(world, host, vm, now, policy, &mut VictimScratch::default())
 }
 
 #[cfg(test)]
@@ -73,8 +116,7 @@ mod tests {
         for i in 0..n {
             let cfg = SpotConfig::terminate().with_min_running(0.0);
             let id = w.add_vm(Vm::spot(0, VmSpec::new(1000.0, 2), cfg));
-            let spec = w.vms[id].spec;
-            w.hosts[h].commit(id, spec.pes, spec.ram, spec.bw, spec.storage);
+            w.commit_vm(h, id);
             w.vms[id].transition(VmState::Running);
             w.vms[id].host = Some(h);
             w.vms[id].history.record_start(h, i as f64 * 10.0);
@@ -117,8 +159,7 @@ mod tests {
         let (mut w, h) = setup(0);
         let cfg = SpotConfig::terminate().with_min_running(1_000.0);
         let sp = w.add_vm(Vm::spot(0, VmSpec::new(1000.0, 8), cfg));
-        let spec = w.vms[sp].spec;
-        w.hosts[h].commit(sp, spec.pes, spec.ram, spec.bw, spec.storage);
+        w.commit_vm(h, sp);
         w.vms[sp].transition(VmState::Running);
         w.vms[sp].history.record_start(h, 0.0);
         let vm = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, 4)));

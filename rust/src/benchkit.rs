@@ -135,6 +135,13 @@ impl Bencher {
         &self.results
     }
 
+    /// Append another bencher's recorded results (lets differently-tuned
+    /// benchers - e.g. a `heavy()` end-to-end pass - share one JSON
+    /// trajectory file).
+    pub fn merge(&mut self, other: &Bencher) {
+        self.results.extend(other.results.iter().cloned());
+    }
+
     /// Write all results as a JSON array (consumed by EXPERIMENTS.md
     /// tooling / CI trend lines).
     pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {

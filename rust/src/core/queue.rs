@@ -85,13 +85,22 @@ impl<T> EventQueue<T> {
         self.heap.pop().map(|e| e.ev)
     }
 
-    /// Pop every event with `time <= t` (the deferred-queue batch),
-    /// in (time, seq) order.
-    pub fn pop_due(&mut self, t: f64) -> Vec<SimEvent<T>> {
-        let mut out = Vec::new();
+    /// Append every event with `time <= t` (the deferred-queue batch) to
+    /// `out`, in (time, seq) order. Allocation-free when `out` has
+    /// capacity - the engine loop reuses one buffer across all ticks.
+    /// `out` is *not* cleared (appends after existing contents).
+    pub fn pop_due_into(&mut self, t: f64, out: &mut Vec<SimEvent<T>>) {
         while matches!(self.heap.peek(), Some(e) if e.time <= t) {
             out.push(self.heap.pop().unwrap().ev);
         }
+    }
+
+    /// Pop every event with `time <= t` (the deferred-queue batch),
+    /// in (time, seq) order. Thin allocating wrapper around
+    /// [`Self::pop_due_into`].
+    pub fn pop_due(&mut self, t: f64) -> Vec<SimEvent<T>> {
+        let mut out = Vec::new();
+        self.pop_due_into(t, &mut out);
         out
     }
 
@@ -139,6 +148,27 @@ mod tests {
         assert_eq!(due, vec![1, 2, 3]);
         assert_eq!(q.len(), 1);
         assert_eq!(q.next_time(), Some(5.0));
+    }
+
+    #[test]
+    fn pop_due_into_reuses_buffer_and_appends() {
+        let mut q = EventQueue::new();
+        for (t, d) in [(1.0, 1), (2.0, 2), (2.0, 3), (5.0, 4)] {
+            q.push(ev(t, d));
+        }
+        let mut buf: Vec<SimEvent<u32>> = Vec::with_capacity(8);
+        q.pop_due_into(1.0, &mut buf);
+        assert_eq!(buf.iter().map(|e| e.data).collect::<Vec<_>>(), vec![1]);
+        // Appends after existing contents, preserving (time, seq) order.
+        q.pop_due_into(2.0, &mut buf);
+        assert_eq!(buf.iter().map(|e| e.data).collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert_eq!(q.len(), 1);
+        // Reuse without reallocation.
+        let cap = buf.capacity();
+        buf.clear();
+        q.pop_due_into(10.0, &mut buf);
+        assert_eq!(buf.iter().map(|e| e.data).collect::<Vec<_>>(), vec![4]);
+        assert_eq!(buf.capacity(), cap);
     }
 
     #[test]

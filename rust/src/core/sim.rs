@@ -97,6 +97,35 @@ impl<T> Simulation<T> {
         Some(ev)
     }
 
+    /// Pop the whole batch of events sharing the next pending timestamp,
+    /// appending them to `out` in (time, seq) order, and advance the
+    /// clock once. Returns `false` (leaving `out` untouched) when the
+    /// queue is empty or the next event lies beyond `terminate_at` (in
+    /// which case the clock parks at the termination time, exactly like
+    /// [`Self::next_event`]).
+    ///
+    /// Equivalent to calling [`Self::next_event`] until the timestamp
+    /// changes, minus the per-tick `Vec` allocation: the engine loop
+    /// reuses one buffer across all batches.
+    pub fn next_batch_into(&mut self, out: &mut Vec<SimEvent<T>>) -> bool {
+        let Some(t) = self.queue.next_time() else {
+            return false;
+        };
+        if let Some(end) = self.terminate_at {
+            if t > end {
+                self.clock = end;
+                self.queue.clear();
+                return false;
+            }
+        }
+        debug_assert!(t + 1e-9 >= self.clock, "time went backwards");
+        self.clock = t.max(self.clock);
+        let before = out.len();
+        self.queue.pop_due_into(t, out);
+        self.processed += (out.len() - before) as u64;
+        true
+    }
+
     /// True when no further event can fire.
     pub fn is_finished(&self) -> bool {
         match (self.queue.next_time(), self.terminate_at) {
@@ -156,6 +185,30 @@ mod tests {
         sim.schedule_at(0.2, Kernel, Kernel, 2); // in the past -> now
         let e = sim.next_event().unwrap();
         assert_eq!(e.time, 1.0);
+    }
+
+    #[test]
+    fn next_batch_matches_single_pop_semantics() {
+        let mut sim: Simulation<u32> = Simulation::new(0.0);
+        sim.terminate_at(10.0);
+        for (t, d) in [(1.0, 1), (2.0, 2), (2.0, 3), (50.0, 4)] {
+            sim.schedule_at(t, Kernel, Kernel, d);
+        }
+        let mut batch = Vec::new();
+        assert!(sim.next_batch_into(&mut batch));
+        assert_eq!(batch.iter().map(|e| e.data).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(sim.clock(), 1.0);
+        batch.clear();
+        assert!(sim.next_batch_into(&mut batch));
+        assert_eq!(batch.iter().map(|e| e.data).collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(sim.clock(), 2.0);
+        assert_eq!(sim.processed_events(), 3);
+        batch.clear();
+        // Next event beyond terminate_at: clock parks at the stop time.
+        assert!(!sim.next_batch_into(&mut batch));
+        assert!(batch.is_empty());
+        assert_eq!(sim.clock(), 10.0);
+        assert!(sim.is_finished());
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! Incremental placement index: the world-level candidate structures the
+//! allocation hot path runs on.
+//!
+//! Before this index every placement decision re-derived cluster state
+//! from scratch: `FirstFit`/`BestFit`/`WorstFit` walked every active host
+//! and HLEM-VMP additionally rebuilt per-host spot-usage vectors by
+//! walking every VM on every candidate - O(hosts x vms-per-host) per
+//! decision (the paper's measured simulator overhead, SVII-D). The index
+//! turns the per-decision cost into a function of the *feasible* candidate
+//! set only:
+//!
+//! - **Free-PE buckets**: `buckets[p]` holds the ids of active hosts with
+//!   exactly `p` free PEs, ordered by id (`BTreeSet`). A placement query
+//!   for a `k`-PE request touches only buckets `p >= k`. Updated O(log H)
+//!   on every commit/release/host add/remove.
+//! - **Spot-host set**: the ids of active hosts currently carrying at
+//!   least one spot VM, ordered by id. The preemption scan enumerates
+//!   only these (a host without spot VMs can never yield victims).
+//!
+//! Query order is chosen to reproduce the pre-index linear scans
+//! *bit-identically* (deterministic tie-breaks on host id):
+//!
+//! - `first_fit`: lowest id over all feasible buckets = first hit of an
+//!   id-ascending scan.
+//! - `best_fit`: lowest bucket, id-ascending within = `min_by_key`
+//!   (which keeps the **first** minimal element).
+//! - `worst_fit`: highest bucket, id-**descending** within =
+//!   `max_by_key` (which keeps the **last** maximal element).
+//! - `feasible_into`: the union of feasible buckets sorted ascending =
+//!   the id-ascending feasible list HLEM's phase-1 filter used to build
+//!   by scanning; identical ordering keeps the entropy-weight float
+//!   summation bit-identical.
+//!
+//! The per-host spot-usage vectors live on [`crate::infra::Host`]
+//! (`spot_used` / `spot_vms`), refreshed by [`super::world::World`] on
+//! every spot commit/release/interrupt by re-walking that host's VM list
+//! in allocation order. The walk is bounded by VMs-per-host (itself
+//! bounded by the host's PE count) and reproduces the old
+//! `spot_used_vec` summation order exactly, so incremental reads are
+//! bitwise equal to a recompute-from-scratch oracle - no floating-point
+//! drift, which a running +=/-= accumulator could not guarantee.
+
+use std::collections::BTreeSet;
+use std::ops::Bound;
+
+use crate::infra::HostId;
+
+/// World-level incremental candidate index (see module docs).
+#[derive(Debug, Default, Clone)]
+pub struct PlacementIndex {
+    /// `buckets[p]` = active hosts with exactly `p` free PEs, id-ordered.
+    buckets: Vec<BTreeSet<HostId>>,
+    /// Active hosts carrying at least one spot VM, id-ordered.
+    spot_hosts: BTreeSet<HostId>,
+    /// Bucket each indexed host currently sits in (`None` = not indexed,
+    /// i.e. the host is inactive/removed).
+    free_of: Vec<Option<u32>>,
+}
+
+impl PlacementIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure_host_slot(&mut self, h: HostId) {
+        if self.free_of.len() <= h {
+            self.free_of.resize(h + 1, None);
+        }
+    }
+
+    fn ensure_bucket(&mut self, p: u32) {
+        if self.buckets.len() <= p as usize {
+            self.buckets.resize(p as usize + 1, BTreeSet::new());
+        }
+    }
+
+    /// Whether `h` is currently indexed (= active).
+    pub fn contains(&self, h: HostId) -> bool {
+        self.free_of.get(h).copied().flatten().is_some()
+    }
+
+    /// Tracked free-PE count of `h`, if indexed.
+    pub fn free_pes_of(&self, h: HostId) -> Option<u32> {
+        self.free_of.get(h).copied().flatten()
+    }
+
+    /// Index an (active) host with the given free-PE count. Idempotent:
+    /// re-inserting moves the host to the right bucket.
+    pub fn insert(&mut self, h: HostId, free_pes: u32) {
+        self.ensure_host_slot(h);
+        if let Some(old) = self.free_of[h] {
+            if old == free_pes {
+                return;
+            }
+            self.buckets[old as usize].remove(&h);
+        }
+        self.ensure_bucket(free_pes);
+        self.buckets[free_pes as usize].insert(h);
+        self.free_of[h] = Some(free_pes);
+    }
+
+    /// Drop a host from the index (host removal / deactivation). Also
+    /// clears its spot-host membership. No-op if not indexed.
+    pub fn remove(&mut self, h: HostId) {
+        self.ensure_host_slot(h);
+        if let Some(old) = self.free_of[h].take() {
+            self.buckets[old as usize].remove(&h);
+        }
+        self.spot_hosts.remove(&h);
+    }
+
+    /// Move an indexed host to the bucket matching its new free-PE count.
+    pub fn update_free(&mut self, h: HostId, free_pes: u32) {
+        debug_assert!(self.contains(h), "update_free on unindexed host {h}");
+        self.insert(h, free_pes);
+    }
+
+    /// Record whether `h` currently carries spot VMs. Only meaningful for
+    /// indexed (active) hosts; removal clears membership regardless.
+    pub fn set_spot(&mut self, h: HostId, has_spot: bool) {
+        if has_spot && self.contains(h) {
+            self.spot_hosts.insert(h);
+        } else {
+            self.spot_hosts.remove(&h);
+        }
+    }
+
+    /// Active hosts with at least one spot VM, ascending by id.
+    pub fn spot_host_ids(&self) -> impl Iterator<Item = HostId> + '_ {
+        self.spot_hosts.iter().copied()
+    }
+
+    /// Number of indexed hosts (active cluster size).
+    pub fn len(&self) -> usize {
+        self.buckets.iter().map(|b| b.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.iter().all(|b| b.is_empty())
+    }
+
+    /// Lowest host id strictly greater than `after` (any id when `None`)
+    /// with `free_pes >= min_pes`. Pure index query, one O(log H) probe
+    /// per feasible bucket; the caller applies the full four-dimension
+    /// fitness check and re-probes on rejection.
+    pub fn first_feasible_after(&self, min_pes: u32, after: Option<HostId>) -> Option<HostId> {
+        let lo = min_pes as usize;
+        if lo >= self.buckets.len() {
+            return None;
+        }
+        let mut best: Option<HostId> = None;
+        for bucket in &self.buckets[lo..] {
+            let next = match after {
+                None => bucket.iter().next(),
+                Some(a) => bucket.range((Bound::Excluded(a), Bound::Unbounded)).next(),
+            };
+            if let Some(&id) = next {
+                if best.map_or(true, |b| id < b) {
+                    best = Some(id);
+                }
+            }
+        }
+        best
+    }
+
+    /// Lowest host id with `free_pes >= min_pes` passing `ok` (the full
+    /// four-dimension fitness check). Reproduces an id-ascending linear
+    /// scan's first hit. Callers on the hot path should prefer the
+    /// bounded-probe hybrid (`World::first_fit_host`), which caps the
+    /// re-probe cost when `ok` rejects many PE-feasible hosts.
+    pub fn first_fit(&self, min_pes: u32, mut ok: impl FnMut(HostId) -> bool) -> Option<HostId> {
+        let mut after: Option<HostId> = None;
+        loop {
+            match self.first_feasible_after(min_pes, after) {
+                None => return None,
+                Some(id) if ok(id) => return Some(id),
+                Some(id) => after = Some(id),
+            }
+        }
+    }
+
+    /// Feasible host with the fewest free PEs; ties to the lowest id
+    /// (matches `min_by_key` over an id-ascending scan).
+    pub fn best_fit(&self, min_pes: u32, mut ok: impl FnMut(HostId) -> bool) -> Option<HostId> {
+        for p in (min_pes as usize)..self.buckets.len() {
+            for &id in &self.buckets[p] {
+                if ok(id) {
+                    return Some(id);
+                }
+            }
+        }
+        None
+    }
+
+    /// Feasible host with the most free PEs; ties to the **highest** id
+    /// (matches `max_by_key`, which keeps the last maximal element of an
+    /// id-ascending scan).
+    pub fn worst_fit(&self, min_pes: u32, mut ok: impl FnMut(HostId) -> bool) -> Option<HostId> {
+        let lo = min_pes as usize;
+        if lo >= self.buckets.len() {
+            return None;
+        }
+        for p in (lo..self.buckets.len()).rev() {
+            for &id in self.buckets[p].iter().rev() {
+                if ok(id) {
+                    return Some(id);
+                }
+            }
+        }
+        None
+    }
+
+    /// Append every host with `free_pes >= min_pes` passing `ok` to `out`
+    /// in ascending id order (the pre-index scan order). `out` is cleared
+    /// first.
+    pub fn feasible_into(
+        &self,
+        min_pes: u32,
+        mut ok: impl FnMut(HostId) -> bool,
+        out: &mut Vec<HostId>,
+    ) {
+        out.clear();
+        let lo = min_pes as usize;
+        if lo >= self.buckets.len() {
+            return;
+        }
+        for bucket in &self.buckets[lo..] {
+            out.extend(bucket.iter().copied());
+        }
+        out.sort_unstable();
+        out.retain(|&id| ok(id));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn index_with(frees: &[u32]) -> PlacementIndex {
+        let mut ix = PlacementIndex::new();
+        for (h, &f) in frees.iter().enumerate() {
+            ix.insert(h, f);
+        }
+        ix
+    }
+
+    #[test]
+    fn first_fit_lowest_id_across_buckets() {
+        let ix = index_with(&[2, 8, 4, 8]);
+        assert_eq!(ix.first_fit(1, |_| true), Some(0));
+        assert_eq!(ix.first_fit(3, |_| true), Some(1));
+        assert_eq!(ix.first_fit(3, |h| h != 1), Some(2));
+        assert_eq!(ix.first_fit(9, |_| true), None);
+    }
+
+    #[test]
+    fn best_fit_tightest_then_lowest_id() {
+        let ix = index_with(&[8, 4, 4, 2]);
+        assert_eq!(ix.best_fit(1, |_| true), Some(3));
+        assert_eq!(ix.best_fit(3, |_| true), Some(1)); // first of the 4-free pair
+        assert_eq!(ix.best_fit(3, |h| h != 1), Some(2));
+    }
+
+    #[test]
+    fn worst_fit_emptiest_then_highest_id() {
+        let ix = index_with(&[8, 4, 8, 2]);
+        assert_eq!(ix.worst_fit(1, |_| true), Some(2)); // last of the 8-free pair
+        assert_eq!(ix.worst_fit(1, |h| h != 2), Some(0));
+        assert_eq!(ix.worst_fit(16, |_| true), None);
+    }
+
+    #[test]
+    fn feasible_into_is_id_sorted() {
+        let ix = index_with(&[8, 2, 4, 8, 1]);
+        let mut out = Vec::new();
+        ix.feasible_into(2, |_| true, &mut out);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+        ix.feasible_into(5, |_| true, &mut out);
+        assert_eq!(out, vec![0, 3]);
+    }
+
+    #[test]
+    fn updates_move_between_buckets() {
+        let mut ix = index_with(&[4, 4]);
+        ix.update_free(0, 1);
+        assert_eq!(ix.best_fit(1, |_| true), Some(0));
+        ix.update_free(0, 6);
+        assert_eq!(ix.worst_fit(1, |_| true), Some(0));
+        assert_eq!(ix.free_pes_of(0), Some(6));
+        assert_eq!(ix.len(), 2);
+    }
+
+    #[test]
+    fn remove_clears_membership_and_spot() {
+        let mut ix = index_with(&[4, 4]);
+        ix.set_spot(0, true);
+        assert_eq!(ix.spot_host_ids().collect::<Vec<_>>(), vec![0]);
+        ix.remove(0);
+        assert!(!ix.contains(0));
+        assert_eq!(ix.spot_host_ids().count(), 0);
+        assert_eq!(ix.first_fit(1, |_| true), Some(1));
+        // Re-activation re-indexes.
+        ix.insert(0, 2);
+        assert!(ix.contains(0));
+    }
+
+    #[test]
+    fn set_spot_ignores_unindexed_hosts() {
+        let mut ix = index_with(&[4]);
+        ix.remove(0);
+        ix.set_spot(0, true);
+        assert_eq!(ix.spot_host_ids().count(), 0);
+    }
+}

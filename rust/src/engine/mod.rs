@@ -17,9 +17,42 @@
 //!
 //! Cloudlet progress runs through a swappable [`progress::ProgressBackend`]
 //! over parallel arrays (the paper's measured bottleneck, see §Perf).
+//!
+//! # The placement index (§Perf: decision hot path)
+//!
+//! Allocation decisions run on the world-level incremental index
+//! ([`index::PlacementIndex`], maintained by [`World::commit_vm`] /
+//! [`World::release_vm`] / host activate/deactivate) instead of
+//! re-deriving cluster state per decision:
+//!
+//! - free-PE buckets answer First/Best/Worst-Fit and HLEM's phase-1
+//!   feasibility filter by probing only PE-feasible hosts
+//!   (O(log H) maintenance per commit/release);
+//! - each host carries an O(1) spot-usage vector (`Host::spot_used`),
+//!   refreshed on spot commit/release/interrupt by re-walking that one
+//!   host's VM list - previously `World::spot_used_vec` walked every VM
+//!   of every candidate on every HLEM decision;
+//! - the preemption scan enumerates only hosts that actually carry spot
+//!   VMs (`World::spot_host_ids`), with reusable victim-scratch buffers
+//!   replacing the per-host `interruptible_spots` allocation.
+//!
+//! Query order reproduces the pre-index linear scans bit-identically
+//! (deterministic tie-breaks on host id); the `_scan` oracles stay in
+//! [`World`] and `tests/placement_parity.rs` + `tests/properties.rs` pin
+//! indexed and scanned decisions together. Decision latency at
+//! 100/1 000/10 000 hosts, scan vs. index, is measured by
+//! `benches/perf_engine.rs`, which writes the trajectory to
+//! `BENCH_engine.json` at the repo root (regenerate with
+//! `cargo bench --bench perf_engine`; CI refreshes and validates it).
+//!
+//! The event loop itself drains the future queue in same-timestamp
+//! batches through a reusable buffer (`EventQueue::pop_due_into`),
+//! eliminating the per-tick `Vec` allocation of the deferred-queue
+//! pattern while preserving (time, seq) processing order.
 
 pub mod broker;
 pub mod config;
+pub mod index;
 pub mod progress;
 pub mod report;
 pub mod tag;
@@ -27,8 +60,8 @@ pub mod world;
 
 use crate::allocation::AllocationPolicy;
 use crate::cloudlet::{allocate_mips, Cloudlet, CloudletId, CloudletState};
-use crate::core::{EntityId, Simulation};
-use crate::infra::{DcId, HostId, HostSpec, HostState};
+use crate::core::{EntityId, SimEvent, Simulation};
+use crate::infra::{DcId, HostId, HostSpec};
 use crate::metrics::{LifecycleKind, Recorder};
 use crate::vm::{InterruptionBehavior, Vm, VmId, VmState};
 
@@ -64,6 +97,11 @@ pub struct Engine {
     running_vms: Vec<VmId>,
     next_sample: f64,
     finished_scratch: Vec<usize>,
+    /// Reusable buffer for same-timestamp event batches (run loop).
+    event_batch: Vec<SimEvent<Tag>>,
+    /// Events of the in-flight batch still awaiting dispatch (counts as
+    /// pending activity for the sampling keep-alive check).
+    batch_pending: usize,
 }
 
 impl Engine {
@@ -88,6 +126,8 @@ impl Engine {
             running_vms: Vec::new(),
             next_sample: 0.0,
             finished_scratch: Vec::new(),
+            event_batch: Vec::new(),
+            batch_pending: 0,
         }
     }
 
@@ -122,7 +162,7 @@ impl Engine {
     pub fn add_host_at(&mut self, dc: DcId, spec: HostSpec, t: f64) -> HostId {
         let h = self.world.add_host(dc, spec, t);
         if t > self.sim.clock() {
-            self.world.hosts[h].state = HostState::Removed; // dormant until HostAdd
+            self.world.deactivate_host(h, None); // dormant until HostAdd
             self.sim.schedule_at(t, EntityId::Kernel, EntityId::Datacenter(dc), Tag::HostAdd(h));
         }
         h
@@ -159,12 +199,29 @@ impl Engine {
     // ------------------------------------------------------------------
 
     /// Run to completion and build the report.
+    ///
+    /// Events are drained in same-timestamp batches through a reusable
+    /// buffer (no per-tick allocation); dispatch order stays the exact
+    /// (time, seq) order of the one-at-a-time loop because events a
+    /// handler schedules at the current timestamp always carry a larger
+    /// sequence number than the whole in-flight batch.
     pub fn run(&mut self) -> Report {
         let wall_start = std::time::Instant::now();
         self.sample(); // t = 0 snapshot
-        while let Some(ev) = self.sim.next_event() {
-            self.handle(ev.data);
+        let mut batch = std::mem::take(&mut self.event_batch);
+        loop {
+            batch.clear();
+            if !self.sim.next_batch_into(&mut batch) {
+                break;
+            }
+            let n = batch.len();
+            for (i, ev) in batch.drain(..).enumerate() {
+                self.batch_pending = n - 1 - i;
+                self.handle(ev.data);
+            }
         }
+        self.batch_pending = 0;
+        self.event_batch = batch;
         // Close the books at the final clock.
         let end = self.sim.clock();
         self.apply_progress(end);
@@ -301,8 +358,7 @@ impl Engine {
         let now = self.sim.clock();
         self.apply_progress(now);
 
-        let spec = self.world.vms[v].spec;
-        self.world.hosts[host].commit(v, spec.pes, spec.ram, spec.bw, spec.storage);
+        self.world.commit_vm(host, v);
 
         let resumed = self.world.vms[v].state == VmState::Hibernated;
         self.world.vms[v].transition(VmState::Running);
@@ -502,8 +558,7 @@ impl Engine {
     fn remove_from_host(&mut self, v: VmId) {
         let now = self.sim.clock();
         let host = self.world.vms[v].host.take().expect("vm not on a host");
-        let spec = self.world.vms[v].spec;
-        self.world.hosts[host].release(v, spec.pes, spec.ram, spec.bw, spec.storage);
+        self.world.release_vm(host, v);
         self.world.vms[v].history.record_stop(now);
         if let Some(i) = self.running_vms.iter().position(|&x| x == v) {
             self.running_vms.swap_remove(i);
@@ -730,10 +785,7 @@ impl Engine {
 
     fn on_host_add(&mut self, h: HostId) {
         let now = self.sim.clock();
-        let host = &mut self.world.hosts[h];
-        host.state = HostState::Active;
-        host.created_at = now;
-        host.removed_at = None;
+        self.world.activate_host(h, now);
         self.retry_pending();
     }
 
@@ -794,8 +846,7 @@ impl Engine {
                 );
             }
         }
-        self.world.hosts[h].state = HostState::Removed;
-        self.world.hosts[h].removed_at = Some(now);
+        self.world.deactivate_host(h, Some(now));
         self.retry_pending();
     }
 
@@ -838,7 +889,8 @@ impl Engine {
         // self-rearming sample would keep the simulation alive forever.
         let active = !self.running_vms.is_empty()
             || self.broker.queue_depth() > 0
-            || self.sim.pending_events() > 0;
+            || self.sim.pending_events() > 0
+            || self.batch_pending > 0;
         if active {
             self.sample();
         }

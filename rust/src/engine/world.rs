@@ -1,14 +1,29 @@
-//! The world: arena storage for all simulation entities.
+//! The world: arena storage for all simulation entities, plus the
+//! incremental placement index the allocation hot path queries.
 //!
 //! CloudSim Plus wires entities together with object references; in Rust an
 //! arena (id-indexed vectors) gives the same topology without shared
 //! mutable ownership, and the allocation policies get a cheap immutable
 //! view (`&World`) while the engine mutates through it between policy
 //! calls.
+//!
+//! All placement-relevant mutation goes through [`World::commit_vm`],
+//! [`World::release_vm`], [`World::activate_host`] and
+//! [`World::deactivate_host`]: these keep the [`PlacementIndex`]
+//! (free-PE buckets, spot-host set) and each host's O(1) spot-usage
+//! vector consistent with the arena. The raw [`Host::commit`] /
+//! [`Host::release`] accounting primitives are still public for
+//! host-local unit tests but bypass the index - production code and
+//! policies must use the `World` methods. Every indexed query has a
+//! `_scan` twin that recomputes the answer with the pre-index linear
+//! scan; the property/parity tests pin the two together, and the decision
+//! benches use the scans as the baseline.
 
 use crate::cloudlet::{Cloudlet, CloudletId};
-use crate::infra::{Datacenter, DcId, Host, HostId, HostSpec};
+use crate::infra::{Datacenter, DcId, Host, HostId, HostSpec, HostState};
 use crate::vm::{Vm, VmId, VmState};
+
+use super::index::PlacementIndex;
 
 /// Arena of datacenters, hosts, VMs and cloudlets.
 #[derive(Default)]
@@ -17,6 +32,7 @@ pub struct World {
     pub hosts: Vec<Host>,
     pub vms: Vec<Vm>,
     pub cloudlets: Vec<Cloudlet>,
+    index: PlacementIndex,
 }
 
 impl World {
@@ -35,6 +51,7 @@ impl World {
         let id = self.hosts.len();
         self.hosts.push(Host::new(id, dc, spec, now));
         self.datacenters[dc].hosts.push(id);
+        self.index.insert(id, spec.pes);
         id
     }
 
@@ -56,6 +73,178 @@ impl World {
         id
     }
 
+    // ------------------------------------------------------------------
+    // index-maintaining mutation API
+    // ------------------------------------------------------------------
+
+    /// Commit `vm`'s requested resources on `host`, keeping the placement
+    /// index and the host's spot-usage vector in sync.
+    pub fn commit_vm(&mut self, host: HostId, vm: VmId) {
+        let spec = self.vms[vm].spec;
+        let is_spot = self.vms[vm].is_spot();
+        self.hosts[host].commit(vm, spec.pes, spec.ram, spec.bw, spec.storage);
+        if self.hosts[host].is_active() {
+            self.index.update_free(host, self.hosts[host].free_pes());
+        }
+        if is_spot {
+            self.refresh_spot(host);
+        }
+    }
+
+    /// Release `vm`'s resources from `host` (deallocation, interruption,
+    /// eviction), keeping the index and spot vector in sync.
+    pub fn release_vm(&mut self, host: HostId, vm: VmId) {
+        let spec = self.vms[vm].spec;
+        let is_spot = self.vms[vm].is_spot();
+        self.hosts[host].release(vm, spec.pes, spec.ram, spec.bw, spec.storage);
+        if self.hosts[host].is_active() {
+            self.index.update_free(host, self.hosts[host].free_pes());
+        }
+        if is_spot {
+            self.refresh_spot(host);
+        }
+    }
+
+    /// Mark a host active (host add / trace ADD event) and index it.
+    pub fn activate_host(&mut self, h: HostId, now: f64) {
+        let host = &mut self.hosts[h];
+        host.state = HostState::Active;
+        host.created_at = now;
+        host.removed_at = None;
+        let free = host.free_pes();
+        let has_spot = host.spot_vms > 0;
+        self.index.insert(h, free);
+        self.index.set_spot(h, has_spot);
+    }
+
+    /// Mark a host removed/dormant and drop it from the index.
+    /// `removed_at` is `None` for hosts that were never active (dormant
+    /// trace machines awaiting their ADD event).
+    pub fn deactivate_host(&mut self, h: HostId, removed_at: Option<f64>) {
+        let host = &mut self.hosts[h];
+        host.state = HostState::Removed;
+        if removed_at.is_some() {
+            host.removed_at = removed_at;
+        }
+        self.index.remove(h);
+    }
+
+    /// Rebuild `host`'s spot-usage vector by walking its VM list in
+    /// allocation order - the exact summation order of the scan oracle,
+    /// so O(1) reads stay bitwise equal to a from-scratch recompute.
+    fn refresh_spot(&mut self, host: HostId) {
+        let mut acc = [0.0f64; 4];
+        let mut n = 0u32;
+        for &vid in &self.hosts[host].vms {
+            let vm = &self.vms[vid];
+            if vm.is_spot() {
+                let r = vm.spec.request_vec();
+                for d in 0..4 {
+                    acc[d] += r[d];
+                }
+                n += 1;
+            }
+        }
+        let h = &mut self.hosts[host];
+        h.spot_used = acc;
+        h.spot_vms = n;
+        self.index.set_spot(host, n > 0);
+    }
+
+    // ------------------------------------------------------------------
+    // indexed placement queries (with `_scan` oracles)
+    // ------------------------------------------------------------------
+
+    /// First-Fit: lowest-id active host where `vm` fits.
+    ///
+    /// Hybrid strategy: a few O(buckets x log H) index probes (the common
+    /// case hits on the first one), then - if many PE-feasible hosts keep
+    /// failing the RAM/BW/storage dimensions - a plain ordered walk over
+    /// the remaining id range, so the degenerate case is never
+    /// asymptotically worse than the pre-index linear scan.
+    pub fn first_fit_host(&self, vm: &Vm) -> Option<HostId> {
+        let s = vm.spec;
+        const PROBE_LIMIT: usize = 8;
+        let mut after: Option<HostId> = None;
+        for _ in 0..PROBE_LIMIT {
+            match self.index.first_feasible_after(s.pes, after) {
+                None => return None,
+                Some(id) if self.hosts[id].fits(s.pes, s.ram, s.bw, s.storage) => {
+                    return Some(id)
+                }
+                Some(id) => after = Some(id),
+            }
+        }
+        let start = after.map_or(0, |a| a + 1);
+        self.hosts[start..]
+            .iter()
+            .find(|h| h.fits(s.pes, s.ram, s.bw, s.storage))
+            .map(|h| h.id)
+    }
+
+    /// Pre-index First-Fit linear scan (oracle / bench baseline).
+    pub fn first_fit_host_scan(&self, vm: &Vm) -> Option<HostId> {
+        let s = vm.spec;
+        self.active_hosts().find(|h| h.fits(s.pes, s.ram, s.bw, s.storage)).map(|h| h.id)
+    }
+
+    /// Best-Fit: feasible host with the fewest free PEs (ties: lowest id).
+    pub fn best_fit_host(&self, vm: &Vm) -> Option<HostId> {
+        let s = vm.spec;
+        self.index.best_fit(s.pes, |id| self.hosts[id].fits(s.pes, s.ram, s.bw, s.storage))
+    }
+
+    /// Pre-index Best-Fit linear scan (oracle / bench baseline).
+    pub fn best_fit_host_scan(&self, vm: &Vm) -> Option<HostId> {
+        let s = vm.spec;
+        self.active_hosts()
+            .filter(|h| h.fits(s.pes, s.ram, s.bw, s.storage))
+            .min_by_key(|h| h.free_pes())
+            .map(|h| h.id)
+    }
+
+    /// Worst-Fit: feasible host with the most free PEs (ties: highest id,
+    /// matching `max_by_key` over the id-ascending scan).
+    pub fn worst_fit_host(&self, vm: &Vm) -> Option<HostId> {
+        let s = vm.spec;
+        self.index.worst_fit(s.pes, |id| self.hosts[id].fits(s.pes, s.ram, s.bw, s.storage))
+    }
+
+    /// Pre-index Worst-Fit linear scan (oracle / bench baseline).
+    pub fn worst_fit_host_scan(&self, vm: &Vm) -> Option<HostId> {
+        let s = vm.spec;
+        self.active_hosts()
+            .filter(|h| h.fits(s.pes, s.ram, s.bw, s.storage))
+            .max_by_key(|h| h.free_pes())
+            .map(|h| h.id)
+    }
+
+    /// All hosts where `vm` fits, ascending by id (HLEM phase-1 feasible
+    /// list). Clears and fills `out`; only PE-feasible buckets are probed.
+    pub fn feasible_host_ids(&self, vm: &Vm, out: &mut Vec<HostId>) {
+        let s = vm.spec;
+        self.index.feasible_into(
+            s.pes,
+            |id| self.hosts[id].fits(s.pes, s.ram, s.bw, s.storage),
+            out,
+        );
+    }
+
+    /// Pre-index feasible-list linear scan (oracle / bench baseline).
+    pub fn feasible_host_ids_scan(&self, vm: &Vm, out: &mut Vec<HostId>) {
+        let s = vm.spec;
+        out.clear();
+        out.extend(
+            self.active_hosts().filter(|h| h.fits(s.pes, s.ram, s.bw, s.storage)).map(|h| h.id),
+        );
+    }
+
+    /// Active hosts carrying at least one spot VM, ascending by id - the
+    /// only hosts the preemption scan can ever pick victims from.
+    pub fn spot_host_ids(&self) -> impl Iterator<Item = HostId> + '_ {
+        self.index.spot_host_ids()
+    }
+
     /// Active (placeable) hosts.
     pub fn active_hosts(&self) -> impl Iterator<Item = &Host> {
         self.hosts.iter().filter(|h| h.is_active())
@@ -63,7 +252,13 @@ impl World {
 
     /// Resources on `host` currently held by spot VMs, in artifact
     /// dimension order (CPU MIPS, RAM, BW, storage) - Eq. (10) numerator.
+    /// O(1): reads the incrementally maintained host vector.
     pub fn spot_used_vec(&self, host: &Host) -> [f64; 4] {
+        host.spot_used
+    }
+
+    /// Pre-index spot-usage walk (oracle for [`Self::spot_used_vec`]).
+    pub fn spot_used_vec_scan(&self, host: &Host) -> [f64; 4] {
         let mut acc = [0.0; 4];
         for &vid in &host.vms {
             let vm = &self.vms[vid];
@@ -78,9 +273,19 @@ impl World {
     }
 
     /// Spot VMs on `host` that may be interrupted at `now`
-    /// (running, past min runtime, not already warned).
+    /// (running, past min runtime, not already warned). Clears and fills
+    /// `out` - the allocation-free twin of [`Self::interruptible_spots`].
+    pub fn interruptible_spots_into(&self, host: &Host, now: f64, out: &mut Vec<VmId>) {
+        out.clear();
+        out.extend(host.vms.iter().copied().filter(|&v| self.vms[v].interruptible(now)));
+    }
+
+    /// Allocating convenience wrapper around
+    /// [`Self::interruptible_spots_into`].
     pub fn interruptible_spots(&self, host: &Host, now: f64) -> Vec<VmId> {
-        host.vms.iter().copied().filter(|&v| self.vms[v].interruptible(now)).collect()
+        let mut out = Vec::new();
+        self.interruptible_spots_into(host, now, &mut out);
+        out
     }
 
     /// Whether `vm` would fit on `host` if the given spot VMs were removed.
@@ -101,6 +306,55 @@ impl World {
             && ram + 1e-9 >= vm.spec.ram
             && bw + 1e-9 >= vm.spec.bw
             && st + 1e-9 >= vm.spec.storage
+    }
+
+    /// Verify the incremental index against a recompute-from-scratch
+    /// oracle (test/debug support; O(hosts x vms)). Checks bucket
+    /// membership, spot-host membership and bitwise equality of every
+    /// spot-usage vector.
+    pub fn check_index(&self) -> Result<(), String> {
+        let mut indexed = 0usize;
+        for host in &self.hosts {
+            let h = host.id;
+            if host.is_active() {
+                indexed += 1;
+                match self.index.free_pes_of(h) {
+                    Some(f) if f == host.free_pes() => {}
+                    got => {
+                        return Err(format!(
+                            "host {h}: bucket {got:?} != free_pes {}",
+                            host.free_pes()
+                        ))
+                    }
+                }
+            } else if self.index.contains(h) {
+                return Err(format!("host {h}: inactive but indexed"));
+            }
+            let oracle = self.spot_used_vec_scan(host);
+            if oracle != host.spot_used {
+                return Err(format!(
+                    "host {h}: spot vector {:?} != oracle {oracle:?}",
+                    host.spot_used
+                ));
+            }
+            let n_spot =
+                host.vms.iter().filter(|&&v| self.vms[v].is_spot()).count() as u32;
+            if n_spot != host.spot_vms {
+                return Err(format!("host {h}: spot_vms {} != oracle {n_spot}", host.spot_vms));
+            }
+            let in_spot_set = self.index.spot_host_ids().any(|id| id == h);
+            let should = host.is_active() && n_spot > 0;
+            if in_spot_set != should {
+                return Err(format!("host {h}: spot-set membership {in_spot_set} != {should}"));
+            }
+        }
+        if indexed != self.index.len() {
+            return Err(format!(
+                "index size {} != active host count {indexed}",
+                self.index.len()
+            ));
+        }
+        Ok(())
     }
 
     /// Count of VMs in a given state, split (on-demand, spot).
@@ -171,22 +425,72 @@ mod tests {
         let (mut w, h) = world_with_host();
         let od = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, 2)));
         let sp = w.add_vm(Vm::spot(0, VmSpec::new(1000.0, 1), SpotConfig::terminate()));
-        let (od_spec, sp_spec) = (w.vms[od].spec, w.vms[sp].spec);
-        w.hosts[h].commit(od, od_spec.pes, od_spec.ram, od_spec.bw, od_spec.storage);
-        w.hosts[h].commit(sp, sp_spec.pes, sp_spec.ram, sp_spec.bw, sp_spec.storage);
+        w.commit_vm(h, od);
+        w.commit_vm(h, sp);
         let spot_used = w.spot_used_vec(&w.hosts[h]);
         assert_eq!(spot_used, [1000.0, 512.0, 1000.0, 10_000.0]);
+        assert_eq!(spot_used, w.spot_used_vec_scan(&w.hosts[h]));
+        assert_eq!(w.spot_host_ids().collect::<Vec<_>>(), vec![h]);
+        w.check_index().unwrap();
+    }
+
+    #[test]
+    fn release_restores_index_state() {
+        let (mut w, h) = world_with_host();
+        let sp = w.add_vm(Vm::spot(0, VmSpec::new(1000.0, 3), SpotConfig::terminate()));
+        w.commit_vm(h, sp);
+        assert_eq!(w.hosts[h].free_pes(), 5);
+        w.release_vm(h, sp);
+        assert_eq!(w.hosts[h].free_pes(), 8);
+        assert_eq!(w.spot_used_vec(&w.hosts[h]), [0.0; 4]);
+        assert_eq!(w.spot_host_ids().count(), 0);
+        w.check_index().unwrap();
     }
 
     #[test]
     fn fits_with_clearing_accounts_released_resources() {
         let (mut w, h) = world_with_host();
         let sp = w.add_vm(Vm::spot(0, VmSpec::new(1000.0, 6), SpotConfig::terminate()));
-        let sp_spec = w.vms[sp].spec;
-        w.hosts[h].commit(sp, sp_spec.pes, sp_spec.ram, sp_spec.bw, sp_spec.storage);
+        w.commit_vm(h, sp);
         let big = Vm::on_demand(1, VmSpec::new(1000.0, 8));
         assert!(!w.hosts[h].fits(big.spec.pes, big.spec.ram, big.spec.bw, big.spec.storage));
         assert!(w.fits_with_clearing(&w.hosts[h], &big, &[sp]));
+    }
+
+    #[test]
+    fn indexed_queries_match_scans() {
+        let mut w = World::new();
+        let dc = w.add_datacenter("dc", 1.0);
+        for pes in [2u32, 8, 4, 8, 1] {
+            w.add_host(dc, HostSpec::new(pes, 1000.0, 65_536.0, 40_000.0, 1_600_000.0), 0.0);
+        }
+        // Partially load host 1 so free-PE buckets shift.
+        let filler = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, 5)));
+        w.commit_vm(1, filler);
+        let probe = Vm::on_demand(0, VmSpec::new(1000.0, 2));
+        assert_eq!(w.first_fit_host(&probe), w.first_fit_host_scan(&probe));
+        assert_eq!(w.best_fit_host(&probe), w.best_fit_host_scan(&probe));
+        assert_eq!(w.worst_fit_host(&probe), w.worst_fit_host_scan(&probe));
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        w.feasible_host_ids(&probe, &mut a);
+        w.feasible_host_ids_scan(&probe, &mut b);
+        assert_eq!(a, b);
+        w.check_index().unwrap();
+    }
+
+    #[test]
+    fn host_lifecycle_updates_index() {
+        let (mut w, h) = world_with_host();
+        let probe = Vm::on_demand(0, VmSpec::new(1000.0, 1));
+        assert_eq!(w.first_fit_host(&probe), Some(h));
+        w.deactivate_host(h, Some(5.0));
+        assert_eq!(w.first_fit_host(&probe), None);
+        assert_eq!(w.hosts[h].removed_at, Some(5.0));
+        w.check_index().unwrap();
+        w.activate_host(h, 9.0);
+        assert_eq!(w.first_fit_host(&probe), Some(h));
+        assert_eq!(w.hosts[h].created_at, 9.0);
+        w.check_index().unwrap();
     }
 
     #[test]

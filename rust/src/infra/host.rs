@@ -56,6 +56,16 @@ pub struct Host {
     pub used_ram: f64,
     pub used_bw: f64,
     pub used_storage: f64,
+    /// Resources currently held by spot VMs, in artifact dimension order
+    /// (CPU MIPS, RAM, BW, storage) - Eq. (10) numerator. Maintained by
+    /// [`crate::engine::World::commit_vm`] / `release_vm` (refreshed from
+    /// the VM list on every spot mutation, so reads are O(1) and bitwise
+    /// equal to a from-scratch recompute); raw `commit`/`release` calls do
+    /// not see VM types and leave it untouched.
+    pub spot_used: [f64; 4],
+    /// Number of spot VMs currently resident (same maintenance contract
+    /// as `spot_used`).
+    pub spot_vms: u32,
     /// Simulation time the host became active.
     pub created_at: f64,
     pub removed_at: Option<f64>,
@@ -73,6 +83,8 @@ impl Host {
             used_ram: 0.0,
             used_bw: 0.0,
             used_storage: 0.0,
+            spot_used: [0.0; 4],
+            spot_vms: 0,
             created_at: now,
             removed_at: None,
         }

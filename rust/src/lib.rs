@@ -16,9 +16,11 @@
 //! - **L2/L1 (python/, build-time only)**: the HLEM-VMP scoring pipeline
 //!   and the batched cloudlet-progress update as JAX functions over pallas
 //!   kernels, AOT-lowered to HLO text.
-//! - **Runtime**: [`runtime`] loads the HLO artifacts through PJRT (the
-//!   `xla` crate) and serves them to the L3 hot path; [`allocation::scorer`]
-//!   provides the bit-faithful pure-rust fallback.
+//! - **Runtime**: `runtime` (behind the off-by-default `pjrt` cargo
+//!   feature) loads the HLO artifacts through PJRT (the `xla` crate) and
+//!   serves them to the L3 hot path; [`allocation::scorer`] provides the
+//!   bit-faithful pure-rust fallback. The default build is std-only so
+//!   the simulator builds offline without the PJRT toolchain.
 //!
 //! Quickstart: see `examples/quickstart.rs` or run
 //! `cargo run --release -- quickstart`.
@@ -33,6 +35,7 @@ pub mod engine;
 pub mod experiments;
 pub mod infra;
 pub mod metrics;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod testkit;
 pub mod stats;

@@ -115,6 +115,27 @@ fn cmd_quickstart() -> Result<(), String> {
     Ok(())
 }
 
+/// Build the PJRT-backed HLEM policy (requires `--features pjrt`).
+#[cfg(feature = "pjrt")]
+fn pjrt_hlem(cfg: HlemConfig) -> Result<Box<dyn AllocationPolicy>, String> {
+    let engine = std::rc::Rc::new(
+        cloudmarket::runtime::PjrtEngine::load_default()
+            .map_err(|e| format!("loading artifacts: {e:#}"))?,
+    );
+    Ok(Box::new(HlemVmp::with_scorer(
+        cfg,
+        Box::new(cloudmarket::runtime::PjrtScorer::new(engine)),
+    )))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_hlem(_cfg: HlemConfig) -> Result<Box<dyn AllocationPolicy>, String> {
+    Err("scorer 'pjrt' needs the PJRT runtime: add the `xla` and `anyhow` dependencies \
+         from your toolchain checkout to rust/Cargo.toml (see the notes on the `pjrt` \
+         feature there), then rebuild with `--features pjrt`"
+        .into())
+}
+
 fn make_hlem(args: &Args, adjusted: bool) -> Result<Box<dyn AllocationPolicy>, String> {
     let alpha = args.get_f64("alpha", -0.5)?;
     let cfg = if adjusted {
@@ -124,16 +145,7 @@ fn make_hlem(args: &Args, adjusted: bool) -> Result<Box<dyn AllocationPolicy>, S
     };
     Ok(match args.get_or("scorer", "rust").as_str() {
         "rust" => Box::new(HlemVmp::new(cfg)),
-        "pjrt" => {
-            let engine = std::rc::Rc::new(
-                cloudmarket::runtime::PjrtEngine::load_default()
-                    .map_err(|e| format!("loading artifacts: {e:#}"))?,
-            );
-            Box::new(HlemVmp::with_scorer(
-                cfg,
-                Box::new(cloudmarket::runtime::PjrtScorer::new(engine)),
-            ))
-        }
+        "pjrt" => pjrt_hlem(cfg)?,
         other => return Err(format!("unknown scorer '{other}'")),
     })
 }

@@ -18,9 +18,11 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{Context, Result};
-
 use super::event::{MachineEvent, MachineEventKind, TaskEvent, TaskEventKind, Trace};
+
+/// Reader result type. Errors are rendered messages (std-only: the
+/// default build carries no external error-handling dependency).
+pub type Result<T> = std::result::Result<T, String>;
 
 /// Microseconds -> seconds.
 const TIME_SCALE: f64 = 1e-6;
@@ -40,7 +42,7 @@ pub struct ReadStats {
 /// Parse the machine-events table.
 pub fn read_machine_events(path: &Path, stats: &mut ReadStats) -> Result<Vec<MachineEvent>> {
     let text = std::fs::read_to_string(path)
-        .with_context(|| format!("reading {}", path.display()))?;
+        .map_err(|e| format!("reading {}: {e}", path.display()))?;
     let mut out = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
         if line.is_empty() || (lineno == 0 && line.starts_with("time")) {
@@ -104,7 +106,7 @@ fn mean_nonzero(values: impl Iterator<Item = f64>) -> f64 {
 /// Parse the task-events table with binding resolution.
 pub fn read_task_events(path: &Path, stats: &mut ReadStats) -> Result<Vec<TaskEvent>> {
     let text = std::fs::read_to_string(path)
-        .with_context(|| format!("reading {}", path.display()))?;
+        .map_err(|e| format!("reading {}: {e}", path.display()))?;
     let mut out: Vec<TaskEvent> = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
         if line.is_empty() || (lineno == 0 && line.starts_with("time")) {
@@ -188,7 +190,7 @@ pub fn read_trace_dir(dir: &Path) -> Result<(Trace, ReadStats)> {
 /// Write a trace back out in the same CSV layout (round-trip tests + lets
 /// users inspect the synthetic workload with standard tooling).
 pub fn write_trace_dir(trace: &Trace, dir: &Path) -> Result<()> {
-    std::fs::create_dir_all(dir)?;
+    std::fs::create_dir_all(dir).map_err(|e| format!("creating {}: {e}", dir.display()))?;
     let mut m = String::from("time,machine_id,event_type,platform_id,cpus,memory\n");
     for ev in &trace.machines {
         let code = match ev.kind {
@@ -205,7 +207,8 @@ pub fn write_trace_dir(trace: &Trace, dir: &Path) -> Result<()> {
             ev.ram
         ));
     }
-    std::fs::write(dir.join("machine_events.csv"), m)?;
+    std::fs::write(dir.join("machine_events.csv"), m)
+        .map_err(|e| format!("writing machine_events.csv: {e}"))?;
 
     let mut t = String::from(
         "time,missing_info,job_id,task_index,machine_id,event_type,user,scheduling_class,\
@@ -233,7 +236,8 @@ pub fn write_trace_dir(trace: &Trace, dir: &Path) -> Result<()> {
             ev.ram_req,
         ));
     }
-    std::fs::write(dir.join("task_events.csv"), t)?;
+    std::fs::write(dir.join("task_events.csv"), t)
+        .map_err(|e| format!("writing task_events.csv: {e}"))?;
     Ok(())
 }
 

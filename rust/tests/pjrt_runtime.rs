@@ -1,6 +1,9 @@
 //! Integration: the PJRT-executed AOT artifacts agree with the pure-rust
 //! implementations (the cross-implementation correctness contract of
 //! DESIGN.md §5). Skips (with a notice) when `make artifacts` has not run.
+//! Compiled only with `--features pjrt` (the default build is std-only
+//! and carries no PJRT runtime).
+#![cfg(feature = "pjrt")]
 
 use std::rc::Rc;
 

@@ -1,0 +1,134 @@
+//! Placement parity: for every policy, the indexed decision hot path and
+//! the pre-index linear scan must produce the *identical* sequence of
+//! `select_host` / `select_preemption` decisions - verified end to end by
+//! running the same randomized workload (hosts joining/leaving, spot
+//! interruptions, hibernation/resubmission) under both modes and
+//! comparing bit-exact per-VM outcomes.
+//!
+//! Together with the per-query oracles in `tests/properties.rs` this pins
+//! the acceptance contract of the placement index: identical decisions
+//! with deterministic tie-breaks on host id.
+
+use cloudmarket::allocation::{AllocationPolicy, BestFit, FirstFit, HlemVmp, WorstFit};
+use cloudmarket::cloudlet::Cloudlet;
+use cloudmarket::engine::{Engine, EngineConfig};
+use cloudmarket::stats::Rng;
+use cloudmarket::testkit::{forall, gen};
+use cloudmarket::vm::Vm;
+
+/// Random contended scenario: small cluster, mixed spot/on-demand VMs,
+/// optional mid-run host add/remove. Deterministic in `rng`.
+fn build_engine(rng: &mut Rng, policy: Box<dyn AllocationPolicy>) -> Engine {
+    let mut cfg = EngineConfig::default();
+    cfg.vm_destruction_delay = rng.uniform(0.0, 2.0);
+    cfg.scheduling_interval = rng.uniform(0.5, 5.0);
+    let mut e = Engine::new(cfg, policy);
+    let dc = e.add_datacenter("dc", 1.0);
+    for _ in 0..rng.range_u64(1, 8) {
+        e.add_host(dc, gen::host_spec(rng));
+    }
+    if rng.chance(0.5) {
+        // A machine that joins mid-run (trace ADD path).
+        let spec = gen::host_spec(rng);
+        let t = rng.uniform(20.0, 80.0);
+        e.add_host_at(dc, spec, t);
+    }
+    if rng.chance(0.3) {
+        // A machine that leaves mid-run (trace REMOVE path).
+        let t = rng.uniform(30.0, 120.0);
+        e.remove_host_at(0, t);
+    }
+    for _ in 0..rng.range_u64(4, 30) {
+        let spec = gen::vm_spec(rng);
+        let delay = rng.uniform(0.0, 60.0);
+        let vm = if rng.chance(0.5) {
+            let mut v = Vm::spot(0, spec, gen::spot_config(rng)).with_delay(delay);
+            if rng.chance(0.7) {
+                v = v.with_persistent(rng.uniform(10.0, 200.0));
+            }
+            e.submit_vm(v)
+        } else {
+            let mut v = Vm::on_demand(0, spec).with_delay(delay);
+            if rng.chance(0.5) {
+                v = v.with_persistent(rng.uniform(10.0, 200.0));
+            }
+            e.submit_vm(v)
+        };
+        for _ in 0..rng.range_u64(0, 3) {
+            let pes = rng.range_u64(1, spec.pes as u64) as u32;
+            let length = rng.uniform(1_000.0, 200_000.0);
+            e.submit_cloudlet(Cloudlet::new(0, length, pes).with_vm(vm));
+        }
+    }
+    e.terminate_at(rng.uniform(100.0, 400.0));
+    e
+}
+
+/// Bit-exact per-VM outcome: every placement, interruption and timing
+/// difference between two runs shows up here.
+fn fingerprint(e: &Engine) -> Vec<(String, u32, Option<usize>, Vec<(usize, u64, u64)>)> {
+    e.world
+        .vms
+        .iter()
+        .map(|v| {
+            (
+                format!("{:?}", v.state),
+                v.interruptions,
+                v.host,
+                v.history
+                    .intervals()
+                    .iter()
+                    .map(|iv| {
+                        (iv.host, iv.start.to_bits(), iv.stop.map(f64::to_bits).unwrap_or(u64::MAX))
+                    })
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+fn parity_for(make: fn(bool) -> Box<dyn AllocationPolicy>, cases: u64, seed: u64) {
+    forall(cases, seed, move |rng| {
+        let wl_seed = rng.next_u64();
+        let mut scan = build_engine(&mut Rng::new(wl_seed), make(true));
+        let mut indexed = build_engine(&mut Rng::new(wl_seed), make(false));
+        let r_scan = scan.run();
+        let r_indexed = indexed.run();
+        assert_eq!(
+            r_scan.events_processed, r_indexed.events_processed,
+            "event streams diverged"
+        );
+        assert_eq!(
+            scan.policy().decisions(),
+            indexed.policy().decisions(),
+            "decision counts diverged"
+        );
+        assert_eq!(fingerprint(&scan), fingerprint(&indexed), "per-VM outcomes diverged");
+        indexed.world.check_index().expect("index consistent after parity run");
+    });
+}
+
+#[test]
+fn first_fit_index_matches_scan() {
+    parity_for(|scan| Box::new(FirstFit::new().with_scan_mode(scan)), 12, 0xFF01);
+}
+
+#[test]
+fn best_fit_index_matches_scan() {
+    parity_for(|scan| Box::new(BestFit::new().with_scan_mode(scan)), 12, 0xBF02);
+}
+
+#[test]
+fn worst_fit_index_matches_scan() {
+    parity_for(|scan| Box::new(WorstFit::new().with_scan_mode(scan)), 12, 0x3F03);
+}
+
+#[test]
+fn hlem_plain_index_matches_scan() {
+    parity_for(|scan| Box::new(HlemVmp::plain().with_scan_mode(scan)), 12, 0x41EA);
+}
+
+#[test]
+fn hlem_adjusted_index_matches_scan() {
+    parity_for(|scan| Box::new(HlemVmp::adjusted().with_scan_mode(scan)), 12, 0xAD05);
+}

@@ -9,7 +9,7 @@
 use cloudmarket::allocation::scorer::{HostScorer, RustScorer, ScoreInput, NEG};
 use cloudmarket::allocation::{AllocationPolicy, BestFit, FirstFit, HlemVmp, RoundRobin, WorstFit};
 use cloudmarket::cloudlet::Cloudlet;
-use cloudmarket::engine::{Engine, EngineConfig};
+use cloudmarket::engine::{Engine, EngineConfig, World};
 use cloudmarket::stats::Rng;
 use cloudmarket::testkit::{forall, gen};
 use cloudmarket::vm::{Vm, VmState};
@@ -69,6 +69,8 @@ fn prop_host_accounting_never_violated() {
     forall(60, 0xACC0, |rng| {
         let mut e = random_engine(rng);
         e.run();
+        // The incremental placement index survived the whole run.
+        e.world.check_index().expect("index matches recompute oracle after run");
         for host in &e.world.hosts {
             assert!(host.used_pes <= host.spec.pes, "host {} PEs oversubscribed", host.id);
             assert!(host.used_ram <= host.spec.ram + 1e-6, "host {} RAM", host.id);
@@ -203,6 +205,118 @@ fn prop_simulation_is_deterministic() {
             )
         };
         assert_eq!(run(seed), run(seed));
+    });
+}
+
+// ---------------------------------------------------------------------
+// placement-index properties
+// ---------------------------------------------------------------------
+
+/// Drive a randomized sequence of commit / release / host-add /
+/// host-remove / host-reactivate operations directly against the world.
+/// When `check_each_step` is set, the incremental index is compared to
+/// the recompute-from-scratch oracle after *every* mutation.
+fn random_index_workout(rng: &mut Rng, check_each_step: bool) -> World {
+    let mut w = World::new();
+    let dc = w.add_datacenter("dc", 1.0);
+    for _ in 0..rng.range_u64(1, 10) {
+        w.add_host(dc, gen::host_spec(rng), 0.0);
+    }
+    let mut placed: Vec<(usize, usize)> = Vec::new(); // (vm, host)
+    let steps = rng.range_u64(20, 120);
+    for step in 0..steps {
+        match rng.below(100) {
+            0..=44 => {
+                // Commit a fresh VM on the first host where it fits.
+                let spec = gen::vm_spec(rng);
+                let vm = if rng.chance(0.5) {
+                    w.add_vm(Vm::spot(0, spec, gen::spot_config(rng)))
+                } else {
+                    w.add_vm(Vm::on_demand(0, spec))
+                };
+                if let Some(h) = w.first_fit_host_scan(&w.vms[vm]) {
+                    w.commit_vm(h, vm);
+                    placed.push((vm, h));
+                }
+            }
+            45..=74 => {
+                // Release a random placed VM (deallocation / interrupt).
+                if !placed.is_empty() {
+                    let i = rng.below(placed.len() as u64) as usize;
+                    let (vm, h) = placed.swap_remove(i);
+                    w.release_vm(h, vm);
+                }
+            }
+            75..=84 => {
+                // Trace ADD: a new host joins mid-run.
+                w.add_host(dc, gen::host_spec(rng), step as f64);
+            }
+            85..=92 => {
+                // Trace REMOVE: evict a random active host.
+                let active: Vec<usize> = w.active_hosts().map(|h| h.id).collect();
+                if !active.is_empty() {
+                    let h = active[rng.below(active.len() as u64) as usize];
+                    let vms: Vec<usize> = w.hosts[h].vms.clone();
+                    for vm in vms {
+                        w.release_vm(h, vm);
+                        placed.retain(|&(v, _)| v != vm);
+                    }
+                    w.deactivate_host(h, Some(step as f64));
+                }
+            }
+            _ => {
+                // Reactivate a previously removed host.
+                let removed: Vec<usize> =
+                    w.hosts.iter().filter(|h| !h.is_active()).map(|h| h.id).collect();
+                if !removed.is_empty() {
+                    let h = removed[rng.below(removed.len() as u64) as usize];
+                    w.activate_host(h, step as f64);
+                }
+            }
+        }
+        if check_each_step {
+            w.check_index().expect("index matches recompute oracle after mutation");
+        }
+    }
+    w
+}
+
+#[test]
+fn prop_placement_index_matches_recompute_oracle() {
+    forall(40, 0x1D3C5, |rng| {
+        let w = random_index_workout(rng, true);
+        w.check_index().unwrap();
+    });
+}
+
+#[test]
+fn prop_indexed_queries_match_scan_oracles() {
+    forall(40, 0x5CA9D, |rng| {
+        let w = random_index_workout(rng, false);
+        w.check_index().unwrap();
+        // Placement decisions: the indexed queries must reproduce the
+        // pre-index linear scans exactly for arbitrary probe requests.
+        for _ in 0..8 {
+            let probe = Vm::on_demand(0, gen::vm_spec(rng));
+            assert_eq!(w.first_fit_host(&probe), w.first_fit_host_scan(&probe), "first-fit");
+            assert_eq!(w.best_fit_host(&probe), w.best_fit_host_scan(&probe), "best-fit");
+            assert_eq!(w.worst_fit_host(&probe), w.worst_fit_host_scan(&probe), "worst-fit");
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            w.feasible_host_ids(&probe, &mut a);
+            w.feasible_host_ids_scan(&probe, &mut b);
+            assert_eq!(a, b, "feasible candidate list (order-sensitive)");
+        }
+        // Spot-usage vectors: O(1) reads bitwise equal to the walk.
+        for h in w.active_hosts() {
+            assert_eq!(w.spot_used_vec(h), w.spot_used_vec_scan(h), "host {}", h.id);
+        }
+        // Spot-host set == recompute.
+        let oracle: Vec<usize> = w
+            .active_hosts()
+            .filter(|h| h.vms.iter().any(|&v| w.vms[v].is_spot()))
+            .map(|h| h.id)
+            .collect();
+        assert_eq!(w.spot_host_ids().collect::<Vec<_>>(), oracle);
     });
 }
 
