@@ -19,7 +19,7 @@
 //! pre-index scans waste their time walking infeasible hosts.
 
 use cloudmarket::allocation::{AllocationPolicy, BestFit, FirstFit, HlemVmp, RoundRobin, WorstFit};
-use cloudmarket::benchkit::{banner, black_box, Bencher};
+use cloudmarket::benchkit::{banner, black_box, fast_mode, Bencher};
 use cloudmarket::config::scenario::{build_comparison_workload, ComparisonConfig};
 use cloudmarket::core::{EntityId, EventQueue, SimEvent};
 use cloudmarket::engine::{Engine, EngineConfig, World};
@@ -67,10 +67,7 @@ fn decision_world(n_hosts: usize) -> (World, VmId) {
 
 fn main() {
     banner("PERF: DES kernel + end-to-end engine");
-    let fast = matches!(
-        std::env::var("BENCH_FAST").ok().as_deref(),
-        Some(v) if !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false")
-    );
+    let fast = fast_mode();
     let mut b = Bencher::new();
 
     // --- event queue ----------------------------------------------------

@@ -1,0 +1,70 @@
+//! §Perf sweep: multi-scenario fan-out throughput.
+//!
+//! Measures sweep cells/sec on the §VII-E comparison grid at 1 thread vs
+//! all available CPUs (the engine is single-threaded by design; the sweep
+//! driver's job is to scale *across* runs). Before timing, asserts the
+//! headline determinism property: 1-thread and N-thread sweeps serialize
+//! to byte-identical artifacts.
+//!
+//! Results land in `BENCH_sweep.json` at the repo root (regenerate with
+//! `cargo bench --bench perf_sweep`; CI refreshes and validates it next
+//! to `BENCH_engine.json`). Set `BENCH_FAST=1` for the CI smoke (fewer
+//! seeds, shorter horizon).
+
+use cloudmarket::benchkit::{banner, black_box, fast_mode, Bencher};
+use cloudmarket::config::scenario::ComparisonConfig;
+use cloudmarket::sweep::{self, PolicySpec, SweepSpec};
+
+fn main() {
+    banner("PERF: sweep driver fan-out (cells/sec)");
+    let fast = fast_mode();
+    let seeds = if fast { 2 } else { 4 };
+    let horizon = if fast { 600.0 } else { 1_200.0 };
+    let scenario = ComparisonConfig { terminate_at: horizon, ..Default::default() };
+    let spec = SweepSpec::new(scenario)
+        .with_seed_range(20_250_710, seeds)
+        .with_policies(PolicySpec::paper());
+    let cells = spec.cell_count();
+    // Floor of 2 so the 1-vs-N comparison (and the CI row-name check)
+    // stays meaningful even on a single-CPU runner.
+    let n_threads = sweep::default_threads().max(2);
+
+    // Determinism smoke before timing: the merged output must not depend
+    // on the thread count.
+    let single = sweep::run(&spec, 1);
+    assert_eq!(single.failed(), 0, "sweep cells failed");
+    let multi = sweep::run(&spec, n_threads);
+    assert_eq!(
+        single.cells_csv().to_string(),
+        multi.cells_csv().to_string(),
+        "sweep cell rows differ between 1 and {n_threads} threads"
+    );
+    assert_eq!(
+        single.aggregate_json().to_string_pretty(),
+        multi.aggregate_json().to_string_pretty(),
+        "sweep aggregates differ between 1 and {n_threads} threads"
+    );
+    println!("determinism: 1-thread == {n_threads}-thread output over {cells} cells");
+
+    let mut b = Bencher::heavy();
+    b.bench(&format!("sweep {cells} cells [threads=1]"), Some(cells as f64), || {
+        black_box(sweep::run(&spec, 1));
+    });
+    b.bench(
+        &format!("sweep {cells} cells [threads={n_threads}]"),
+        Some(cells as f64),
+        || {
+            black_box(sweep::run(&spec, n_threads));
+        },
+    );
+    let rows = b.results();
+    let speedup = rows[0].median.as_secs_f64() / rows[1].median.as_secs_f64().max(1e-12);
+    println!("    -> fan-out speedup {speedup:.1}x at {n_threads} threads");
+
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+        .join("BENCH_sweep.json");
+    b.write_json(&out).expect("writing BENCH_sweep.json");
+    println!("wrote {}", out.display());
+}

@@ -175,6 +175,16 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// `BENCH_FAST=1` (or any non-empty value other than `0`/`false`): benches
+/// should skip their most expensive tiers (CI smoke mode). One definition
+/// so every bench accepts the same value set.
+pub fn fast_mode() -> bool {
+    matches!(
+        std::env::var("BENCH_FAST").ok().as_deref(),
+        Some(v) if !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false")
+    )
+}
+
 /// Standard bench banner.
 pub fn banner(title: &str) {
     println!("\n=== {title} ===");

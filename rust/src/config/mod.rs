@@ -5,4 +5,7 @@ pub mod catalog;
 pub mod scenario;
 
 pub use catalog::{host_types, vm_profiles, HostType, VmProfile};
-pub use scenario::{build_comparison_workload, ComparisonConfig};
+pub use scenario::{
+    build_comparison_workload, comparison_engine_config, plan_comparison_workload,
+    ComparisonConfig, PlannedVm, WorkloadPlan,
+};

@@ -4,14 +4,14 @@
 //! simulation runs to ensure consistency" - here enforced by seeding.
 
 use crate::cloudlet::Cloudlet;
-use crate::engine::Engine;
+use crate::engine::{Engine, EngineConfig};
 use crate::stats::Rng;
 use crate::vm::{SpotConfig, Vm, VmSpec};
 
 use super::catalog::{host_types, vm_profiles};
 
 /// Scenario parameters (defaults follow §VII-E.2).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ComparisonConfig {
     pub seed: u64,
     /// MIPS per PE for hosts and VMs.
@@ -53,6 +53,17 @@ impl Default for ComparisonConfig {
     }
 }
 
+/// Engine knobs of the §VII-E comparison experiment. Single source of
+/// truth shared by `compare::run_policy` and `sweep::SweepSpec::new` -
+/// the `run_multi` bit-parity guarantee depends on both using the same
+/// settings.
+pub fn comparison_engine_config() -> EngineConfig {
+    let mut cfg = EngineConfig::default();
+    cfg.sample_interval = 5.0;
+    cfg.vm_destruction_delay = 1.0;
+    cfg
+}
+
 /// What was submitted.
 #[derive(Debug, Clone, Default)]
 pub struct ScenarioStats {
@@ -62,21 +73,38 @@ pub struct ScenarioStats {
     pub cloudlets: usize,
 }
 
-/// Build Table II hosts and Table III VMs into `engine`.
-///
-/// The RNG consumption sequence is a pure function of `cfg.seed`, so runs
-/// with different allocation policies see byte-identical workloads.
-pub fn build_comparison_workload(engine: &mut Engine, cfg: &ComparisonConfig) -> ScenarioStats {
-    let mut rng = Rng::new(cfg.seed);
-    let mut stats = ScenarioStats::default();
+/// One VM submission with every random draw already resolved.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlannedVm {
+    pub spec: VmSpec,
+    pub is_spot: bool,
+    pub delay: f64,
+    /// Length of the VM's single cloudlet, in MI.
+    pub cloudlet_mi: f64,
+}
 
-    let dc = engine.add_datacenter("dc0", 1.0);
-    for ht in host_types() {
-        for _ in 0..ht.count {
-            engine.add_host(dc, ht.spec(cfg.mips_per_pe));
-            stats.hosts += 1;
-        }
-    }
+/// A fully-materialized comparison workload: the RNG consumption of
+/// [`build_comparison_workload`] resolved into plain data, so the plan can
+/// be built once per seed and shared read-only (via `Arc`) across the
+/// many engines of a parameter sweep (`sweep::prebuild`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadPlan {
+    pub seed: u64,
+    pub mips_per_pe: f64,
+    pub spot: SpotConfig,
+    pub waiting_time: f64,
+    pub terminate_at: f64,
+    pub vms: Vec<PlannedVm>,
+}
+
+/// Resolve `cfg` into a [`WorkloadPlan`] (pure: no engine interaction).
+///
+/// The RNG draw sequence is exactly the pre-split
+/// `build_comparison_workload` order - shuffle, then per submission an
+/// optional delay draw followed by the execution-time draw - so
+/// plan-then-apply is byte-identical to the original single pass.
+pub fn plan_comparison_workload(cfg: &ComparisonConfig) -> WorkloadPlan {
+    let mut rng = Rng::new(cfg.seed);
 
     // Expand Table III into individual (spec, is_spot) submissions.
     let mut submissions: Vec<(VmSpec, bool)> = Vec::new();
@@ -94,6 +122,7 @@ pub fn build_comparison_workload(engine: &mut Engine, cfg: &ComparisonConfig) ->
     // Paper: all 400 spot + 600 on-demand submitted immediately; the
     // remaining on-demand VMs get randomized delays.
     let mut immediate_od_left = cfg.immediate_on_demand;
+    let mut vms = Vec::with_capacity(submissions.len());
     for (spec, is_spot) in submissions {
         let delay = if is_spot {
             0.0
@@ -103,23 +132,67 @@ pub fn build_comparison_workload(engine: &mut Engine, cfg: &ComparisonConfig) ->
         } else {
             rng.uniform(0.0, cfg.max_delay)
         };
-        let vm = if is_spot {
-            stats.spot_vms += 1;
-            Vm::spot(0, spec, cfg.spot).with_persistent(cfg.waiting_time).with_delay(delay)
-        } else {
-            stats.on_demand_vms += 1;
-            Vm::on_demand(0, spec).with_persistent(cfg.waiting_time).with_delay(delay)
-        };
-        let vm = engine.submit_vm(vm);
-
         let exec = rng.uniform(cfg.exec_time.0, cfg.exec_time.1);
-        let length = exec * cfg.mips_per_pe * spec.pes as f64;
-        engine.submit_cloudlet(Cloudlet::new(0, length, spec.pes).with_vm(vm));
-        stats.cloudlets += 1;
+        vms.push(PlannedVm {
+            spec,
+            is_spot,
+            delay,
+            cloudlet_mi: exec * cfg.mips_per_pe * spec.pes as f64,
+        });
     }
 
-    engine.terminate_at(cfg.terminate_at);
-    stats
+    WorkloadPlan {
+        seed: cfg.seed,
+        mips_per_pe: cfg.mips_per_pe,
+        spot: cfg.spot,
+        waiting_time: cfg.waiting_time,
+        terminate_at: cfg.terminate_at,
+        vms,
+    }
+}
+
+impl WorkloadPlan {
+    /// Submit the planned hosts, VMs and cloudlets into `engine`.
+    pub fn apply(&self, engine: &mut Engine) -> ScenarioStats {
+        let mut stats = ScenarioStats::default();
+
+        let dc = engine.add_datacenter("dc0", 1.0);
+        for ht in host_types() {
+            for _ in 0..ht.count {
+                engine.add_host(dc, ht.spec(self.mips_per_pe));
+                stats.hosts += 1;
+            }
+        }
+
+        for p in &self.vms {
+            let vm = if p.is_spot {
+                stats.spot_vms += 1;
+                Vm::spot(0, p.spec, self.spot)
+                    .with_persistent(self.waiting_time)
+                    .with_delay(p.delay)
+            } else {
+                stats.on_demand_vms += 1;
+                Vm::on_demand(0, p.spec)
+                    .with_persistent(self.waiting_time)
+                    .with_delay(p.delay)
+            };
+            let vm = engine.submit_vm(vm);
+            engine.submit_cloudlet(Cloudlet::new(0, p.cloudlet_mi, p.spec.pes).with_vm(vm));
+            stats.cloudlets += 1;
+        }
+
+        engine.terminate_at(self.terminate_at);
+        stats
+    }
+}
+
+/// Build Table II hosts and Table III VMs into `engine`.
+///
+/// The RNG consumption sequence is a pure function of `cfg.seed`, so runs
+/// with different allocation policies see byte-identical workloads.
+/// (Implemented as plan + apply; sweeps reuse one plan across cells.)
+pub fn build_comparison_workload(engine: &mut Engine, cfg: &ComparisonConfig) -> ScenarioStats {
+    plan_comparison_workload(cfg).apply(engine)
 }
 
 #[cfg(test)]
@@ -150,6 +223,36 @@ mod tests {
                 .collect::<Vec<_>>()
         };
         assert_eq!(build(), build());
+    }
+
+    #[test]
+    fn plan_is_pure_and_seed_deterministic() {
+        let cfg = ComparisonConfig::default();
+        assert_eq!(plan_comparison_workload(&cfg), plan_comparison_workload(&cfg));
+        let other = ComparisonConfig { seed: cfg.seed + 1, ..cfg.clone() };
+        assert_ne!(plan_comparison_workload(&cfg), plan_comparison_workload(&other));
+    }
+
+    #[test]
+    fn plan_apply_matches_direct_build() {
+        // Two engines: one via the public wrapper, one via an explicitly
+        // pre-built (shareable) plan - identical worlds.
+        let cfg = ComparisonConfig::default();
+        let mut direct = Engine::new(EngineConfig::default(), Box::new(FirstFit::new()));
+        let s1 = build_comparison_workload(&mut direct, &cfg);
+        let plan = plan_comparison_workload(&cfg);
+        let mut planned = Engine::new(EngineConfig::default(), Box::new(FirstFit::new()));
+        let s2 = plan.apply(&mut planned);
+        assert_eq!(s1.hosts, s2.hosts);
+        assert_eq!(s1.cloudlets, s2.cloudlets);
+        let snap = |e: &Engine| {
+            e.world
+                .vms
+                .iter()
+                .map(|v| (v.spec.pes, v.is_spot(), v.submission_delay.to_bits()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(snap(&direct), snap(&planned));
     }
 
     #[test]

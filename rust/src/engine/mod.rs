@@ -49,6 +49,11 @@
 //! batches through a reusable buffer (`EventQueue::pop_due_into`),
 //! eliminating the per-tick `Vec` allocation of the deferred-queue
 //! pattern while preserving (time, seq) processing order.
+//!
+//! The engine deliberately stays single-threaded (DES determinism);
+//! multi-run parallelism lives one layer up in [`crate::sweep`], which
+//! fans self-contained `Engine`/`World` instances out over a worker pool
+//! with a deterministic merge.
 
 pub mod broker;
 pub mod config;

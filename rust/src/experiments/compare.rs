@@ -8,9 +8,12 @@
 //! - Fig. 15: avg/max/min interruption durations, per algorithm.
 
 use crate::allocation::{AllocationPolicy, FirstFit, HlemVmp};
-use crate::config::scenario::{build_comparison_workload, ComparisonConfig};
-use crate::engine::{Engine, EngineConfig, Report};
+use crate::config::scenario::{
+    build_comparison_workload, comparison_engine_config, ComparisonConfig,
+};
+use crate::engine::{Engine, Report};
 use crate::metrics::TimeSeries;
+use crate::sweep::{self, PolicySpec, SweepSpec};
 use crate::util::csv::{fmt_num, Csv};
 use crate::util::table::{Align, TextTable};
 
@@ -37,14 +40,14 @@ pub fn run_policy(
     make_policy: impl FnOnce() -> Box<dyn AllocationPolicy>,
     cfg: &ComparisonConfig,
 ) -> Outcome {
-    let mut engine_cfg = EngineConfig::default();
-    engine_cfg.sample_interval = 5.0;
-    engine_cfg.vm_destruction_delay = 1.0;
-    let mut engine = Engine::new(engine_cfg, make_policy());
+    let mut engine = Engine::new(comparison_engine_config(), make_policy());
     build_comparison_workload(&mut engine, cfg);
     let report = engine.run();
     let policy = report.policy;
-    Outcome { policy, report, series: engine.recorder.series.clone() }
+    // Move the sampled series out of the recorder (the engine is dropped
+    // here anyway; cloning the full per-run time series was pure waste).
+    let series = engine.recorder.take_series();
+    Outcome { policy, report, series }
 }
 
 /// Run the full paper comparison.
@@ -130,12 +133,35 @@ pub struct Aggregate {
     pub max_per_vm: u32,
 }
 
-/// Run the comparison for seeds `base_seed..base_seed+runs`.
+/// Run the comparison for seeds `base_seed..base_seed+runs`, fanned out
+/// over all available CPUs via the sweep driver.
 pub fn run_multi(base_cfg: &ComparisonConfig, runs: usize) -> Vec<Aggregate> {
-    let mut aggs: Vec<Aggregate> = paper_policies()
+    run_multi_threaded(base_cfg, runs, sweep::default_threads())
+}
+
+/// [`run_multi`] with an explicit worker-thread count.
+///
+/// Implemented on the sweep driver: one cell per (seed, policy), the
+/// policy list built once (not reconstructed per seed), workload plans
+/// shared per seed across the three policies. The merge accumulates per
+/// policy over seeds in ascending order - the exact float-summation order
+/// of the pre-sweep sequential loop - so the aggregates are bit-identical
+/// to the old implementation at any thread count.
+pub fn run_multi_threaded(
+    base_cfg: &ComparisonConfig,
+    runs: usize,
+    threads: usize,
+) -> Vec<Aggregate> {
+    let policies = PolicySpec::paper();
+    let spec = SweepSpec::new(base_cfg.clone())
+        .with_seed_range(base_cfg.seed, runs)
+        .with_policies(policies.clone());
+    let sweep_report = sweep::run(&spec, threads);
+
+    let mut aggs: Vec<Aggregate> = policies
         .iter()
-        .map(|(name, _)| Aggregate {
-            policy: name,
+        .map(|p| Aggregate {
+            policy: p.name(),
             runs,
             mean_interruptions: 0.0,
             mean_interrupted_vms: 0.0,
@@ -144,17 +170,28 @@ pub fn run_multi(base_cfg: &ComparisonConfig, runs: usize) -> Vec<Aggregate> {
             max_per_vm: 0,
         })
         .collect();
-    for r in 0..runs {
-        let cfg = ComparisonConfig { seed: base_cfg.seed + r as u64, ..base_cfg.clone() };
-        for (i, (_, make)) in paper_policies().into_iter().enumerate() {
-            let o = run_policy(make, &cfg);
-            let a = &mut aggs[i];
-            a.mean_interruptions += o.report.spot.interruptions as f64 / runs as f64;
-            a.mean_interrupted_vms += o.report.spot.interrupted_vms as f64 / runs as f64;
-            a.mean_avg_duration += o.report.spot.avg_interruption_secs / runs as f64;
-            a.mean_max_duration += o.report.spot.max_interruption_secs / runs as f64;
-            a.max_per_vm = a.max_per_vm.max(o.report.spot.max_interruptions_per_vm);
-        }
+    // Cells are seed-major in cell-id order, so this accumulates each
+    // policy's seeds in ascending order.
+    for cell in &sweep_report.cells {
+        let i = policies
+            .iter()
+            .position(|p| *p == cell.cell.policy)
+            .expect("sweep returned a policy outside the requested grid");
+        let report = match &cell.outcome {
+            Ok(r) => r,
+            Err(e) => panic!(
+                "sweep cell {} ({} seed {}) failed: {e}",
+                cell.cell.id,
+                cell.cell.policy.name(),
+                cell.cell.seed
+            ),
+        };
+        let a = &mut aggs[i];
+        a.mean_interruptions += report.spot.interruptions as f64 / runs as f64;
+        a.mean_interrupted_vms += report.spot.interrupted_vms as f64 / runs as f64;
+        a.mean_avg_duration += report.spot.avg_interruption_secs / runs as f64;
+        a.mean_max_duration += report.spot.max_interruption_secs / runs as f64;
+        a.max_per_vm = a.max_per_vm.max(report.spot.max_interruptions_per_vm);
     }
     aggs
 }

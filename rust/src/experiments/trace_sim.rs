@@ -87,7 +87,7 @@ pub fn run(cfg: &TraceSimConfig) -> TraceSimOutcome {
         trace_tasks: trace.task_count(),
         workload: wl,
         report,
-        series: engine.recorder.series.clone(),
+        series: engine.recorder.take_series(),
         selfprof,
     }
 }

@@ -39,6 +39,7 @@ pub mod metrics;
 pub mod runtime;
 pub mod testkit;
 pub mod stats;
+pub mod sweep;
 pub mod trace;
 pub mod util;
 pub mod vm;

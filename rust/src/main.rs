@@ -5,11 +5,18 @@
 //! ```text
 //! cloudmarket quickstart                     minimal spot lifecycle demo (SVII-A)
 //! cloudmarket compare [...]                  Figs. 13-15 algorithm comparison
+//! cloudmarket sweep [...]                    parallel multi-seed/policy sweep grid
 //! cloudmarket trace [...]                    Fig. 12 + SVII-D trace simulation
 //! cloudmarket trace-analysis [...]           Figs. 7-9 concurrency analysis
 //! cloudmarket advisor [...]                  Fig. 16 correlation analysis
 //! cloudmarket tables                         Tables II-III
 //! ```
+//!
+//! `sweep` fans the SVII-E comparison scenario out over worker threads
+//! (`--threads`), one cell per (seed, policy): `--seeds N` runs seeds
+//! `--seed .. --seed+N-1` under every `--policies` entry, writing
+//! `sweep_cells.csv` and `sweep_aggregate.json` to `--out-dir`. The
+//! merged output is bit-identical at any thread count.
 
 use std::path::PathBuf;
 
@@ -34,6 +41,9 @@ fn specs() -> Vec<Spec> {
     vec![
         Spec { name: "seed", takes_value: true, help: "rng seed (default 20250710)" },
         Spec { name: "runs", takes_value: true, help: "compare: aggregate over N seeds (default 1)" },
+        Spec { name: "seeds", takes_value: true, help: "sweep: number of seeds (default 8)" },
+        Spec { name: "threads", takes_value: true, help: "sweep: worker threads (default: all CPUs)" },
+        Spec { name: "policies", takes_value: true, help: "sweep: comma-separated policy list" },
         Spec { name: "alpha", takes_value: true, help: "spot-load factor for adjusted HLEM (default -0.5)" },
         Spec { name: "scorer", takes_value: true, help: "hlem scorer backend: rust | pjrt" },
         Spec { name: "machines", takes_value: true, help: "trace machine count" },
@@ -49,7 +59,7 @@ fn specs() -> Vec<Spec> {
 
 fn usage() -> String {
     format!(
-        "usage: cloudmarket <quickstart|compare|trace|trace-analysis|advisor|tables> [flags]\n{}",
+        "usage: cloudmarket <quickstart|compare|sweep|trace|trace-analysis|advisor|tables> [flags]\n{}",
         render_help(&specs())
     )
 }
@@ -64,6 +74,7 @@ fn run(argv: &[String]) -> Result<(), String> {
     match args.positional[0].as_str() {
         "quickstart" => cmd_quickstart(),
         "compare" => cmd_compare(&args, &out_dir),
+        "sweep" => cmd_sweep(&args, &out_dir),
         "trace" => cmd_trace(&args, &out_dir),
         "trace-analysis" => cmd_trace_analysis(&args),
         "advisor" => cmd_advisor(&args),
@@ -188,6 +199,67 @@ fn cmd_compare(args: &Args, out_dir: &std::path::Path) -> Result<(), String> {
     Ok(())
 }
 
+/// `cloudmarket sweep`: fan the §VII-E comparison grid out over a worker
+/// pool. One cell per (seed, policy); merged output is deterministic
+/// regardless of `--threads`.
+fn cmd_sweep(args: &Args, out_dir: &std::path::Path) -> Result<(), String> {
+    use cloudmarket::sweep::{self, CellResult, PolicySpec, SweepSpec};
+
+    let seed = args.get_u64("seed", 20_250_710)?;
+    let seeds = args.get_positive_usize("seeds", 8)?;
+    let threads = args.get_positive_usize("threads", sweep::default_threads())?;
+    let alpha = args.get_f64("alpha", -0.5)?;
+    let policies = match args.get("policies") {
+        None => PolicySpec::paper_with_alpha(alpha),
+        Some(list) => PolicySpec::parse_list(list, alpha)?,
+    };
+    if args.get_or("scorer", "rust") != "rust" {
+        return Err("sweep cells build policies per worker thread; only the in-process \
+                    'rust' scorer is supported (pjrt handles are not Send)"
+            .into());
+    }
+
+    let scenario = ComparisonConfig { seed, ..Default::default() };
+    let n_policies = policies.len();
+    let spec = SweepSpec::new(scenario).with_seed_range(seed, seeds).with_policies(policies);
+    let total = spec.cell_count();
+    eprintln!("sweep: {total} cells ({seeds} seeds x {n_policies} policies) on {threads} threads ...");
+
+    fn progress(done: usize, total: usize, r: &CellResult) {
+        let status = if r.outcome.is_ok() { "ok" } else { "FAILED" };
+        eprintln!(
+            "  [{done:>3}/{total}] cell {:<3} {:<18} seed={} {status}",
+            r.cell.id,
+            r.cell.policy.name(),
+            r.cell.seed
+        );
+    }
+    let report = sweep::run_with_progress(&spec, threads, Some(&progress));
+
+    println!("{}", report.aggregate_table().render());
+
+    std::fs::create_dir_all(out_dir).map_err(|e| e.to_string())?;
+    let cells_path = out_dir.join("sweep_cells.csv");
+    report.cells_csv().write_file(&cells_path).map_err(|e| e.to_string())?;
+    let agg_path = out_dir.join("sweep_aggregate.json");
+    std::fs::write(&agg_path, report.aggregate_json().to_string_pretty())
+        .map_err(|e| e.to_string())?;
+    println!("wrote {} and {}", cells_path.display(), agg_path.display());
+
+    // Partial sweeps must not look like clean successes to callers
+    // gating on the exit status; the artifacts above still record the
+    // completed cells and each failure's message.
+    if report.failed() > 0 {
+        return Err(format!(
+            "{}/{} sweep cells failed (per-cell errors in {})",
+            report.failed(),
+            total,
+            cells_path.display()
+        ));
+    }
+    Ok(())
+}
+
 fn cmd_trace(args: &Args, out_dir: &std::path::Path) -> Result<(), String> {
     let mut cfg = trace_sim::TraceSimConfig::default();
     cfg.synth.seed = args.get_u64("seed", 42)?;
@@ -242,4 +314,48 @@ fn cmd_advisor(args: &Args) -> Result<(), String> {
     println!("{}", advisor::class_distribution_table(&ds).render());
     println!("{}", advisor::fig16_table(&ds).render());
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    /// `sweep` help/usage smoke test: the subcommand is advertised and
+    /// `--help` short-circuits before any cell runs.
+    #[test]
+    fn usage_mentions_sweep_and_its_flags() {
+        let u = usage();
+        assert!(u.contains("sweep"), "{u}");
+        for flag in ["--threads", "--seeds", "--policies", "--out-dir"] {
+            assert!(u.contains(flag), "usage missing {flag}:\n{u}");
+        }
+    }
+
+    #[test]
+    fn sweep_help_smoke() {
+        assert!(run(&argv(&["sweep", "--help"])).is_ok());
+    }
+
+    /// Bad sweep flags fail fast (before the grid fans out).
+    #[test]
+    fn sweep_rejects_bad_counts_and_policies() {
+        let err = run(&argv(&["sweep", "--threads", "0"])).unwrap_err();
+        assert!(err.contains("must be >= 1"), "{err}");
+        let err = run(&argv(&["sweep", "--seeds", "0"])).unwrap_err();
+        assert!(err.contains("must be >= 1"), "{err}");
+        let err = run(&argv(&["sweep", "--threads", "abc"])).unwrap_err();
+        assert!(err.contains("expects an integer"), "{err}");
+        let err = run(&argv(&["sweep", "--policies", "bogus"])).unwrap_err();
+        assert!(err.contains("unknown policy"), "{err}");
+        assert!(run(&argv(&["sweep", "--scorer", "pjrt"])).is_err());
+    }
+
+    #[test]
+    fn unknown_subcommand_is_an_error() {
+        assert!(run(&argv(&["frobnicate"])).is_err());
+    }
 }

@@ -106,6 +106,15 @@ impl Recorder {
         self.dropped_events
     }
 
+    /// Move the sampled series out of the recorder (leaving an empty series
+    /// with the same columns). Callers that outlive the engine take the
+    /// data instead of cloning the full per-run time series.
+    pub fn take_series(&mut self) -> TimeSeries {
+        let cols: Vec<String> = self.series.columns().to_vec();
+        let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+        std::mem::replace(&mut self.series, TimeSeries::new(&col_refs))
+    }
+
     pub fn events_of(&self, vm: VmId) -> Vec<&LifecycleEvent> {
         self.events.iter().filter(|e| e.vm == vm).collect()
     }
@@ -124,6 +133,20 @@ mod tests {
         assert_eq!(r.events_of(3).len(), 2);
         assert_eq!(r.events_of(4).len(), 1);
         assert_eq!(r.dropped_events(), 0);
+    }
+
+    #[test]
+    fn take_series_moves_data_and_keeps_columns() {
+        let mut r = Recorder::new(10);
+        let width = r.series.columns().len();
+        r.series.push(0.0, vec![0.0; width]);
+        let taken = r.take_series();
+        assert_eq!(taken.len(), 1);
+        assert!(r.series.is_empty());
+        assert_eq!(r.series.columns().len(), width);
+        // The recorder stays usable after the move.
+        r.series.push(1.0, vec![0.0; width]);
+        assert_eq!(r.series.len(), 1);
     }
 
     #[test]

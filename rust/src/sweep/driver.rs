@@ -1,0 +1,165 @@
+//! The sweep driver: fans cells out over a fixed-size worker pool and
+//! merges results deterministically.
+//!
+//! Work distribution is a shared atomic cursor over the cell list
+//! (self-balancing: fast workers simply claim more cells), so no
+//! work-queue allocation or channel is needed. Each worker builds its own
+//! `Engine` per cell (policies and engines are thread-local; only the
+//! `Arc`-shared workload prebuilds cross threads), runs it to completion
+//! inside `catch_unwind`, and reports a [`CellResult`]. A panicking cell
+//! therefore fails alone - the rest of the grid still completes.
+//!
+//! The merge is by cell id, so the assembled [`SweepReport`] - and every
+//! artifact serialized from it - is bit-identical regardless of thread
+//! count (including `threads == 1`).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::config::scenario::WorkloadPlan;
+use crate::engine::Engine;
+
+use super::grid::{Cell, SweepSpec};
+use super::prebuild::PrebuildCache;
+use super::report::{CellResult, SweepReport};
+
+/// Worker threads to use when the caller does not care: one per available
+/// CPU (the engine itself stays single-threaded by design - DES
+/// determinism - so the win is across cells).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Progress callback: `(cells_done, cells_total, just_finished_cell)`.
+/// Invoked from worker threads (must be `Sync`).
+pub type ProgressFn<'a> = &'a (dyn Fn(usize, usize, &CellResult) + Sync);
+
+/// Run the sweep on `threads` workers (clamped to `1..=cells`).
+pub fn run(spec: &SweepSpec, threads: usize) -> SweepReport {
+    run_with_progress(spec, threads, None)
+}
+
+/// [`run`], reporting each finished cell to `on_cell`.
+pub fn run_with_progress(
+    spec: &SweepSpec,
+    threads: usize,
+    on_cell: Option<ProgressFn<'_>>,
+) -> SweepReport {
+    let cells = spec.cells();
+    let total = cells.len();
+
+    // Shared read-only prebuilds: resolve each distinct seed's workload
+    // once, up front, and hand every cell an Arc to its seed's plan.
+    let mut cache = PrebuildCache::new();
+    let plans: Vec<Arc<WorkloadPlan>> =
+        cells.iter().map(|c| cache.get_or_build(&spec.scenario, c.seed)).collect();
+
+    let threads = threads.max(1).min(total.max(1));
+    let next = AtomicUsize::new(0);
+    let done = AtomicUsize::new(0);
+
+    let mut slots: Vec<Option<CellResult>> = Vec::with_capacity(total);
+    slots.resize_with(total, || None);
+
+    std::thread::scope(|scope| {
+        let cells = &cells;
+        let plans = &plans;
+        let next = &next;
+        let done = &done;
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut out: Vec<(usize, CellResult)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= total {
+                            break;
+                        }
+                        let result = run_cell(spec, &cells[i], &plans[i]);
+                        let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
+                        if let Some(cb) = on_cell {
+                            cb(finished, total, &result);
+                        }
+                        out.push((i, result));
+                    }
+                    out
+                })
+            })
+            .collect();
+        for handle in handles {
+            let worker_results =
+                handle.join().expect("sweep worker died outside cell isolation");
+            for (i, result) in worker_results {
+                debug_assert!(slots[i].is_none(), "cell {i} ran twice");
+                slots[i] = Some(result);
+            }
+        }
+    });
+
+    let merged: Vec<CellResult> = slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| r.unwrap_or_else(|| panic!("cell {i} produced no result")))
+        .collect();
+    SweepReport { cells: merged, threads }
+}
+
+/// Run one cell to completion; panics inside the cell become `Err` rows.
+fn run_cell(spec: &SweepSpec, cell: &Cell, plan: &WorkloadPlan) -> CellResult {
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        let mut engine = Engine::new(spec.engine.clone(), cell.policy.build());
+        plan.apply(&mut engine);
+        engine.run()
+    }));
+    match outcome {
+        Ok(report) => CellResult { cell: *cell, outcome: Ok(report) },
+        Err(payload) => CellResult { cell: *cell, outcome: Err(panic_message(payload)) },
+    }
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "cell panicked (non-string payload)".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::scenario::ComparisonConfig;
+    use crate::sweep::grid::PolicySpec;
+
+    #[test]
+    fn panicking_cells_fail_alone() {
+        // An invalid engine config makes Engine::new panic inside every
+        // cell; the driver must survive and report each failure.
+        let mut spec = SweepSpec::new(ComparisonConfig::default())
+            .with_seeds(vec![1])
+            .with_policies(vec![PolicySpec::FirstFit, PolicySpec::BestFit]);
+        spec.engine.scheduling_interval = 0.0;
+        let report = run(&spec, 2);
+        assert_eq!(report.total(), 2);
+        assert_eq!(report.failed(), 2);
+        for cell in &report.cells {
+            let err = cell.outcome.as_ref().err().expect("cell must have failed");
+            assert!(err.contains("invalid engine config"), "unexpected error: {err}");
+        }
+    }
+
+    #[test]
+    fn thread_count_is_clamped_and_recorded() {
+        let mut spec = SweepSpec::new(ComparisonConfig::default())
+            .with_seeds(vec![1])
+            .with_policies(vec![PolicySpec::FirstFit]);
+        // Keep the single cell cheap: it still fails fast on purpose.
+        spec.engine.sample_interval = -1.0;
+        let report = run(&spec, 64);
+        assert_eq!(report.threads, 1, "threads are clamped to the cell count");
+        assert_eq!(report.total(), 1);
+    }
+}

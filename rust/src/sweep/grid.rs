@@ -1,0 +1,261 @@
+//! Sweep grids: declarative cell enumeration over scenario × seed ×
+//! policy, with cartesian-product and explicit-list construction.
+//!
+//! A [`SweepSpec`] is plain data (`Clone + Send + Sync`), so the driver
+//! can share one spec across its worker threads; policies are described by
+//! [`PolicySpec`] values and only instantiated (as `Box<dyn
+//! AllocationPolicy>`) inside the worker that runs the cell.
+
+use crate::allocation::{
+    AllocationPolicy, BestFit, FirstFit, HlemConfig, HlemVmp, RoundRobin, WorstFit,
+};
+use crate::config::scenario::{comparison_engine_config, ComparisonConfig};
+use crate::engine::EngineConfig;
+
+/// A policy described as data: buildable on any thread, comparable, and
+/// cheap to store per cell.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PolicySpec {
+    FirstFit,
+    BestFit,
+    WorstFit,
+    RoundRobin,
+    /// HLEM-VMP; `adjusted` selects the spot-load-adjusted score (Eqs.
+    /// 10-11) and `alpha` is its spot-load factor (ignored when plain).
+    Hlem { adjusted: bool, alpha: f64 },
+}
+
+impl PolicySpec {
+    /// The three policies of the paper's §VII-E comparison (default
+    /// adjusted-HLEM alpha, -0.5).
+    pub fn paper() -> Vec<PolicySpec> {
+        Self::paper_with_alpha(-0.5)
+    }
+
+    /// [`PolicySpec::paper`] with an explicit adjusted-HLEM alpha
+    /// (`--alpha` applies to the default policy list too).
+    pub fn paper_with_alpha(alpha: f64) -> Vec<PolicySpec> {
+        vec![
+            PolicySpec::FirstFit,
+            PolicySpec::Hlem { adjusted: false, alpha: 0.0 },
+            PolicySpec::Hlem { adjusted: true, alpha },
+        ]
+    }
+
+    /// Parse one policy name (the `name()` vocabulary of the policies);
+    /// `alpha` applies to `hlem-vmp-adjusted`.
+    pub fn parse(name: &str, alpha: f64) -> Result<PolicySpec, String> {
+        match name.trim() {
+            "first-fit" => Ok(PolicySpec::FirstFit),
+            "best-fit" => Ok(PolicySpec::BestFit),
+            "worst-fit" => Ok(PolicySpec::WorstFit),
+            "round-robin" => Ok(PolicySpec::RoundRobin),
+            "hlem-vmp" => Ok(PolicySpec::Hlem { adjusted: false, alpha: 0.0 }),
+            "hlem-vmp-adjusted" => Ok(PolicySpec::Hlem { adjusted: true, alpha }),
+            other => Err(format!(
+                "unknown policy '{other}' (expected first-fit | best-fit | worst-fit | \
+                 round-robin | hlem-vmp | hlem-vmp-adjusted)"
+            )),
+        }
+    }
+
+    /// Parse a comma-separated policy list (`--policies` flag syntax).
+    pub fn parse_list(list: &str, alpha: f64) -> Result<Vec<PolicySpec>, String> {
+        let specs: Vec<PolicySpec> = list
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| PolicySpec::parse(s, alpha))
+            .collect::<Result<_, _>>()?;
+        if specs.is_empty() {
+            return Err("empty policy list".into());
+        }
+        Ok(specs)
+    }
+
+    /// The name the built policy reports (`AllocationPolicy::name`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicySpec::FirstFit => "first-fit",
+            PolicySpec::BestFit => "best-fit",
+            PolicySpec::WorstFit => "worst-fit",
+            PolicySpec::RoundRobin => "round-robin",
+            PolicySpec::Hlem { adjusted: false, .. } => "hlem-vmp",
+            PolicySpec::Hlem { adjusted: true, .. } => "hlem-vmp-adjusted",
+        }
+    }
+
+    /// The HLEM alpha knob, when this spec has one.
+    pub fn alpha(&self) -> Option<f64> {
+        match self {
+            PolicySpec::Hlem { adjusted: true, alpha } => Some(*alpha),
+            _ => None,
+        }
+    }
+
+    /// Instantiate the policy (called inside the worker that runs the cell).
+    pub fn build(&self) -> Box<dyn AllocationPolicy> {
+        match self {
+            PolicySpec::FirstFit => Box::new(FirstFit::new()),
+            PolicySpec::BestFit => Box::new(BestFit::new()),
+            PolicySpec::WorstFit => Box::new(WorstFit::new()),
+            PolicySpec::RoundRobin => Box::new(RoundRobin::new()),
+            PolicySpec::Hlem { adjusted: false, .. } => Box::new(HlemVmp::plain()),
+            PolicySpec::Hlem { adjusted: true, alpha } => {
+                Box::new(HlemVmp::new(HlemConfig::adjusted().with_alpha(*alpha)))
+            }
+        }
+    }
+}
+
+/// One unit of sweep work: a (scenario seed, policy) pair with a dense id
+/// that fixes its position in the merged output.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Cell {
+    pub id: usize,
+    pub seed: u64,
+    pub policy: PolicySpec,
+}
+
+/// Declarative description of a sweep: the §VII-E scenario template, the
+/// engine knobs every cell runs under, and the grid axes.
+///
+/// Cells are the cartesian product `seeds × policies` (seed-major, the
+/// order of the pre-sweep `run_multi` loop) plus any explicitly listed
+/// extra cells.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// Scenario template; each cell overrides `seed`.
+    pub scenario: ComparisonConfig,
+    /// Engine configuration shared by all cells (defaults to the §VII-E
+    /// comparison-experiment settings of `compare::run_policy`).
+    pub engine: EngineConfig,
+    pub seeds: Vec<u64>,
+    pub policies: Vec<PolicySpec>,
+    /// Extra cells appended after the cartesian grid.
+    pub explicit: Vec<(u64, PolicySpec)>,
+}
+
+impl SweepSpec {
+    pub fn new(scenario: ComparisonConfig) -> Self {
+        SweepSpec {
+            scenario,
+            engine: comparison_engine_config(),
+            seeds: Vec::new(),
+            policies: Vec::new(),
+            explicit: Vec::new(),
+        }
+    }
+
+    /// Grid axis: seeds `base..base + count`.
+    pub fn with_seed_range(mut self, base: u64, count: usize) -> Self {
+        self.seeds = (0..count).map(|r| base + r as u64).collect();
+        self
+    }
+
+    /// Grid axis: an explicit seed list.
+    pub fn with_seeds(mut self, seeds: Vec<u64>) -> Self {
+        self.seeds = seeds;
+        self
+    }
+
+    /// Grid axis: the policy list.
+    pub fn with_policies(mut self, policies: Vec<PolicySpec>) -> Self {
+        self.policies = policies;
+        self
+    }
+
+    /// Explicit-list construction: append one extra cell outside the grid.
+    pub fn with_cell(mut self, seed: u64, policy: PolicySpec) -> Self {
+        self.explicit.push((seed, policy));
+        self
+    }
+
+    /// Number of cells the spec enumerates.
+    pub fn cell_count(&self) -> usize {
+        self.seeds.len() * self.policies.len() + self.explicit.len()
+    }
+
+    /// Enumerate the cells in their deterministic merge order: cartesian
+    /// product seed-major, then the explicit extras, with dense ids.
+    pub fn cells(&self) -> Vec<Cell> {
+        let mut cells = Vec::with_capacity(self.cell_count());
+        for &seed in &self.seeds {
+            for &policy in &self.policies {
+                cells.push(Cell { id: cells.len(), seed, policy });
+            }
+        }
+        for &(seed, policy) in &self.explicit {
+            cells.push(Cell { id: cells.len(), seed, policy });
+        }
+        cells
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cartesian_cells_are_seed_major_with_dense_ids() {
+        let spec = SweepSpec::new(ComparisonConfig::default())
+            .with_seed_range(10, 2)
+            .with_policies(PolicySpec::paper());
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 6);
+        assert_eq!(spec.cell_count(), 6);
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.id, i);
+        }
+        assert_eq!(cells[0].seed, 10);
+        assert_eq!(cells[2].seed, 10);
+        assert_eq!(cells[3].seed, 11);
+        assert_eq!(cells[0].policy.name(), "first-fit");
+        assert_eq!(cells[1].policy.name(), "hlem-vmp");
+        assert_eq!(cells[2].policy.name(), "hlem-vmp-adjusted");
+    }
+
+    #[test]
+    fn explicit_cells_append_after_grid() {
+        let spec = SweepSpec::new(ComparisonConfig::default())
+            .with_seeds(vec![1])
+            .with_policies(vec![PolicySpec::FirstFit])
+            .with_cell(99, PolicySpec::BestFit);
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[1].seed, 99);
+        assert_eq!(cells[1].policy, PolicySpec::BestFit);
+    }
+
+    #[test]
+    fn policy_spec_parses_names_and_alpha() {
+        assert_eq!(PolicySpec::parse("first-fit", -0.5).unwrap(), PolicySpec::FirstFit);
+        assert_eq!(
+            PolicySpec::parse("hlem-vmp-adjusted", -0.7).unwrap().alpha(),
+            Some(-0.7)
+        );
+        assert_eq!(PolicySpec::parse("hlem-vmp", -0.7).unwrap().alpha(), None);
+        assert!(PolicySpec::parse("nope", 0.0).is_err());
+    }
+
+    #[test]
+    fn policy_list_parses_and_rejects_empty() {
+        let specs = PolicySpec::parse_list("first-fit, hlem-vmp,hlem-vmp-adjusted", -0.5).unwrap();
+        assert_eq!(specs.len(), 3);
+        assert!(PolicySpec::parse_list("", -0.5).is_err());
+        assert!(PolicySpec::parse_list("first-fit,bogus", -0.5).is_err());
+    }
+
+    #[test]
+    fn built_policies_report_spec_names() {
+        for spec in [
+            PolicySpec::FirstFit,
+            PolicySpec::BestFit,
+            PolicySpec::WorstFit,
+            PolicySpec::RoundRobin,
+            PolicySpec::Hlem { adjusted: false, alpha: 0.0 },
+            PolicySpec::Hlem { adjusted: true, alpha: -0.5 },
+        ] {
+            assert_eq!(spec.build().name(), spec.name());
+        }
+    }
+}

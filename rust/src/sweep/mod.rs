@@ -1,0 +1,54 @@
+//! Parallel multi-scenario sweeps: deterministic fan-out of a declarative
+//! cell grid (scenario × seed × policy/HLEM-knob) over a worker pool.
+//!
+//! The paper's §VII-E claims (fewer spot interruptions, shorter maximum
+//! interruption duration under HLEM-VMP) are statistical - they only hold
+//! across many seeds and configurations. The engine itself is
+//! single-threaded by design (DES determinism), so the scaling win is
+//! *across* runs: every `Engine`/`World` is self-contained, which makes
+//! cells embarrassingly parallel.
+//!
+//! # Module index
+//!
+//! - [`grid`]: [`SweepSpec`] → [`Cell`] enumeration. Cartesian product
+//!   `seeds × policies` (seed-major) plus explicit extra cells; policies
+//!   are plain-data [`PolicySpec`] values built only inside the worker
+//!   that runs the cell.
+//! - [`prebuild`]: shared read-only workload prebuilds. The randomized
+//!   Table II/III workload is resolved once per seed
+//!   (`config::scenario::WorkloadPlan`) and shared across that seed's
+//!   cells via `Arc` instead of being regenerated per cell.
+//! - [`driver`]: the worker pool. A shared atomic cursor over the cell
+//!   list distributes work (self-balancing, allocation-free); each cell
+//!   runs inside `catch_unwind` so a panicking cell fails alone; an
+//!   optional progress callback reports completed cells. Per-cell engines
+//!   run the standard [`crate::engine::progress`] backend untouched.
+//! - [`report`]: per-cell `Report` rows plus grid-level aggregates
+//!   (reusing [`crate::stats::Summary`]), exported as CSV/JSON through
+//!   `util::csv` / `util::json`.
+//!
+//! # Determinism (§Perf: sweep fan-out)
+//!
+//! Results are merged by cell id, and the serialized artifacts exclude
+//! everything nondeterministic (wall times, thread counts), so a sweep's
+//! aggregate output is **bit-identical regardless of thread count**,
+//! including `--threads 1`. `tests/sweep_determinism.rs` pins this, and
+//! `experiments::compare::run_multi` is implemented on top of this driver
+//! with the exact float-accumulation order of its pre-sweep sequential
+//! loop. Sweep throughput (cells/sec) at 1 vs N threads is measured by
+//! `benches/perf_sweep.rs`, which writes `BENCH_sweep.json` at the repo
+//! root (CI regenerates and validates it next to `BENCH_engine.json`).
+//!
+//! Entry points: `cloudmarket sweep --threads N --seeds K --policies ...`
+//! on the CLI, or [`driver::run`] / [`driver::run_with_progress`] from
+//! code.
+
+pub mod driver;
+pub mod grid;
+pub mod prebuild;
+pub mod report;
+
+pub use driver::{default_threads, run, run_with_progress};
+pub use grid::{Cell, PolicySpec, SweepSpec};
+pub use prebuild::PrebuildCache;
+pub use report::{CellResult, PolicyAggregate, SweepReport};

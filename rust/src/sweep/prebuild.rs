@@ -1,0 +1,113 @@
+//! Shared read-only workload prebuilds.
+//!
+//! Every cell of a sweep re-runs the same scenario under a different
+//! policy/seed; the expensive part that is identical across all cells of
+//! one seed - resolving the randomized Table II/III workload into concrete
+//! submissions - is done once per seed here and shared across cells via
+//! `Arc<WorkloadPlan>` (the plan is plain data, `Send + Sync`).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::config::scenario::{plan_comparison_workload, ComparisonConfig, WorkloadPlan};
+
+/// Seed-keyed cache of comparison-workload plans.
+///
+/// Plans are keyed by seed alone, so one cache serves exactly one
+/// scenario template; mixing templates is a bug the cache catches by
+/// asserting template identity (seed aside) on every lookup.
+#[derive(Debug, Default)]
+pub struct PrebuildCache {
+    plans: BTreeMap<u64, Arc<WorkloadPlan>>,
+    /// First template seen, seed normalized to 0 for comparison.
+    template: Option<ComparisonConfig>,
+}
+
+impl PrebuildCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Plan the workload for `seed` (with `template` supplying every other
+    /// scenario knob), or return the already-built shared plan.
+    ///
+    /// Panics if called with a different template than earlier lookups:
+    /// a seed-keyed hit for another scenario would be a silently wrong
+    /// workload. Use one cache per sweep.
+    pub fn get_or_build(&mut self, template: &ComparisonConfig, seed: u64) -> Arc<WorkloadPlan> {
+        let normalized = ComparisonConfig { seed: 0, ..template.clone() };
+        match &self.template {
+            None => self.template = Some(normalized),
+            Some(first) => assert_eq!(
+                *first, normalized,
+                "PrebuildCache reused across different scenario templates"
+            ),
+        }
+        self.plans
+            .entry(seed)
+            .or_insert_with(|| {
+                let cfg = ComparisonConfig { seed, ..template.clone() };
+                Arc::new(plan_comparison_workload(&cfg))
+            })
+            .clone()
+    }
+
+    /// Distinct seeds planned so far.
+    pub fn len(&self) -> usize {
+        self.plans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.plans.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_shares_one_plan_per_seed() {
+        let template = ComparisonConfig::default();
+        let mut cache = PrebuildCache::new();
+        let a = cache.get_or_build(&template, 7);
+        let b = cache.get_or_build(&template, 7);
+        let c = cache.get_or_build(&template, 8);
+        assert!(Arc::ptr_eq(&a, &b), "same seed must share one prebuild");
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.len(), 2);
+        assert_eq!(a.seed, 7);
+        assert_eq!(c.seed, 8);
+    }
+
+    #[test]
+    fn cached_plan_matches_fresh_plan() {
+        let template = ComparisonConfig::default();
+        let mut cache = PrebuildCache::new();
+        let cached = cache.get_or_build(&template, template.seed);
+        let fresh = plan_comparison_workload(&template);
+        assert_eq!(*cached, fresh);
+    }
+
+    #[test]
+    #[should_panic(expected = "different scenario templates")]
+    fn cache_rejects_template_mixing() {
+        let a = ComparisonConfig::default();
+        let b = ComparisonConfig { terminate_at: a.terminate_at + 1.0, ..a.clone() };
+        let mut cache = PrebuildCache::new();
+        cache.get_or_build(&a, 1);
+        cache.get_or_build(&b, 2);
+    }
+
+    #[test]
+    fn cache_accepts_same_template_with_different_base_seed() {
+        // Only the seed differs between lookups: that is the normal
+        // per-cell pattern, not template mixing.
+        let a = ComparisonConfig::default();
+        let b = ComparisonConfig { seed: a.seed + 10, ..a.clone() };
+        let mut cache = PrebuildCache::new();
+        cache.get_or_build(&a, 1);
+        cache.get_or_build(&b, 2);
+        assert_eq!(cache.len(), 2);
+    }
+}

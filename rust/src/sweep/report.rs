@@ -1,0 +1,325 @@
+//! Sweep results: per-cell report rows plus grid-level aggregates, with
+//! CSV/JSON export through `util::csv` / `util::json`.
+//!
+//! Everything serialized here is a pure function of the cell results in
+//! cell-id order. Nondeterministic per-run data (wall time, thread count)
+//! is deliberately excluded so a sweep's exported artifacts are
+//! byte-identical regardless of how many worker threads produced them
+//! (pinned by `tests/sweep_determinism.rs`).
+
+use crate::engine::Report;
+use crate::stats::Summary;
+use crate::util::csv::{fmt_num, Csv};
+use crate::util::json::{Json, JsonObj};
+use crate::util::table::{Align, TextTable};
+
+use super::grid::{Cell, PolicySpec};
+
+/// Outcome of one sweep cell: the run's [`Report`], or the panic/error
+/// message of an isolated failure.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub cell: Cell,
+    pub outcome: Result<Report, String>,
+}
+
+impl CellResult {
+    pub fn report(&self) -> Option<&Report> {
+        self.outcome.as_ref().ok()
+    }
+}
+
+/// Merged output of a sweep, cells in id order.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub cells: Vec<CellResult>,
+    /// Worker threads used (observability only; never serialized).
+    pub threads: usize,
+}
+
+/// Grid-level aggregate for one policy spec, over its succeeded cells.
+#[derive(Debug, Clone)]
+pub struct PolicyAggregate {
+    pub policy: PolicySpec,
+    pub runs: usize,
+    pub interruptions: Summary,
+    pub interrupted_vms: Summary,
+    pub avg_interruption_secs: Summary,
+    pub max_interruption_secs: Summary,
+    pub max_interruptions_per_vm: u32,
+}
+
+impl SweepReport {
+    pub fn total(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Cells whose run failed (panicked or errored).
+    pub fn failed(&self) -> usize {
+        self.cells.iter().filter(|c| c.outcome.is_err()).count()
+    }
+
+    /// Per-policy aggregates in first-appearance (cell-id) order.
+    pub fn aggregates(&self) -> Vec<PolicyAggregate> {
+        let mut aggs: Vec<PolicyAggregate> = Vec::new();
+        for cell in &self.cells {
+            let idx = match aggs.iter().position(|a| a.policy == cell.cell.policy) {
+                Some(i) => i,
+                None => {
+                    aggs.push(PolicyAggregate {
+                        policy: cell.cell.policy,
+                        runs: 0,
+                        interruptions: Summary::new(),
+                        interrupted_vms: Summary::new(),
+                        avg_interruption_secs: Summary::new(),
+                        max_interruption_secs: Summary::new(),
+                        max_interruptions_per_vm: 0,
+                    });
+                    aggs.len() - 1
+                }
+            };
+            let Some(report) = cell.report() else { continue };
+            let a = &mut aggs[idx];
+            a.runs += 1;
+            a.interruptions.add(report.spot.interruptions as f64);
+            a.interrupted_vms.add(report.spot.interrupted_vms as f64);
+            a.avg_interruption_secs.add(report.spot.avg_interruption_secs);
+            a.max_interruption_secs.add(report.spot.max_interruption_secs);
+            a.max_interruptions_per_vm =
+                a.max_interruptions_per_vm.max(report.spot.max_interruptions_per_vm);
+        }
+        aggs
+    }
+
+    /// Per-cell rows (one line per cell, id order). Deterministic: no wall
+    /// times, no thread counts.
+    pub fn cells_csv(&self) -> Csv {
+        let mut csv = Csv::new(&[
+            "cell",
+            "policy",
+            "alpha",
+            "seed",
+            "status",
+            "error",
+            "clock_end",
+            "events",
+            "vms_finished",
+            "vms_terminated",
+            "vms_failed",
+            "spot_total",
+            "interruptions",
+            "interrupted_vms",
+            "max_per_vm",
+            "avg_interruption_s",
+            "max_interruption_s",
+            "min_interruption_s",
+        ]);
+        for c in &self.cells {
+            let alpha = c.cell.policy.alpha().map(fmt_num).unwrap_or_default();
+            match &c.outcome {
+                Ok(r) => csv.push(vec![
+                    c.cell.id.to_string(),
+                    c.cell.policy.name().to_string(),
+                    alpha,
+                    c.cell.seed.to_string(),
+                    "ok".into(),
+                    String::new(),
+                    fmt_num(r.clock_end),
+                    r.events_processed.to_string(),
+                    r.finished.to_string(),
+                    r.terminated.to_string(),
+                    r.failed.to_string(),
+                    r.spot.total_spot.to_string(),
+                    r.spot.interruptions.to_string(),
+                    r.spot.interrupted_vms.to_string(),
+                    r.spot.max_interruptions_per_vm.to_string(),
+                    fmt_num(r.spot.avg_interruption_secs),
+                    fmt_num(r.spot.max_interruption_secs),
+                    fmt_num(r.spot.min_interruption_secs),
+                ]),
+                Err(e) => {
+                    let mut row = vec![
+                        c.cell.id.to_string(),
+                        c.cell.policy.name().to_string(),
+                        alpha,
+                        c.cell.seed.to_string(),
+                        "failed".into(),
+                        e.clone(),
+                    ];
+                    row.extend(std::iter::repeat(String::new()).take(12));
+                    csv.push(row);
+                }
+            }
+        }
+        csv
+    }
+
+    /// Grid-level aggregate document (per-policy `stats::Summary` moments).
+    pub fn aggregate_json(&self) -> Json {
+        let stat_obj = |s: &Summary| {
+            let mut o = JsonObj::new();
+            o.set("mean", Json::Num(s.mean()));
+            o.set("min", Json::Num(s.min()));
+            o.set("max", Json::Num(s.max()));
+            o.set("stddev", Json::Num(s.stddev()));
+            Json::Obj(o)
+        };
+        let mut root = JsonObj::new();
+        root.set("cells", Json::Num(self.total() as f64));
+        root.set("failed", Json::Num(self.failed() as f64));
+        let mut policies = Vec::new();
+        for a in self.aggregates() {
+            let mut o = JsonObj::new();
+            o.set("policy", Json::Str(a.policy.name().to_string()));
+            match a.policy.alpha() {
+                Some(alpha) => o.set("alpha", Json::Num(alpha)),
+                None => o.set("alpha", Json::Null),
+            };
+            o.set("runs", Json::Num(a.runs as f64));
+            o.set("interruptions", stat_obj(&a.interruptions));
+            o.set("interrupted_vms", stat_obj(&a.interrupted_vms));
+            o.set("avg_interruption_secs", stat_obj(&a.avg_interruption_secs));
+            o.set("max_interruption_secs", stat_obj(&a.max_interruption_secs));
+            o.set(
+                "max_interruptions_per_vm",
+                Json::Num(a.max_interruptions_per_vm as f64),
+            );
+            policies.push(Json::Obj(o));
+        }
+        root.set("policies", Json::Arr(policies));
+        Json::Obj(root)
+    }
+
+    /// Terminal rendering of the grid-level aggregates.
+    pub fn aggregate_table(&self) -> TextTable {
+        let mut t = TextTable::new("SWEEP AGGREGATE (per policy, over seeds)")
+            .column("Policy", Align::Left)
+            .column("Runs", Align::Right)
+            .column("Interruptions", Align::Right)
+            .column("+/- sd", Align::Right)
+            .column("Avg dur (s)", Align::Right)
+            .column("Max dur (s)", Align::Right)
+            .column("Max per VM", Align::Right);
+        for a in self.aggregates() {
+            t.push(vec![
+                a.policy.name().to_string(),
+                a.runs.to_string(),
+                fmt_num(a.interruptions.mean()),
+                fmt_num(a.interruptions.stddev()),
+                fmt_num(a.avg_interruption_secs.mean()),
+                fmt_num(a.max_interruption_secs.mean()),
+                a.max_interruptions_per_vm.to_string(),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::SpotStats;
+
+    fn fake_report(policy: &'static str, interruptions: u64) -> Report {
+        Report {
+            policy,
+            clock_end: 100.0,
+            events_processed: 42,
+            wall: std::time::Duration::from_millis(5),
+            finished: 10,
+            terminated: 1,
+            failed: 0,
+            still_active: 0,
+            cloudlets_finished: 10,
+            cloudlets_canceled: 1,
+            alloc_attempts: 12,
+            alloc_failures: 2,
+            spot: SpotStats {
+                total_spot: 4,
+                interruptions,
+                interrupted_vms: interruptions.min(4),
+                avg_interruption_secs: 10.0 + interruptions as f64,
+                max_interruption_secs: 20.0 + interruptions as f64,
+                min_interruption_secs: 1.0,
+                max_interruptions_per_vm: interruptions as u32,
+                ..Default::default()
+            },
+        }
+    }
+
+    fn sample_report() -> SweepReport {
+        let p = PolicySpec::FirstFit;
+        let q = PolicySpec::Hlem { adjusted: true, alpha: -0.5 };
+        SweepReport {
+            cells: vec![
+                CellResult {
+                    cell: Cell { id: 0, seed: 1, policy: p },
+                    outcome: Ok(fake_report("first-fit", 3)),
+                },
+                CellResult {
+                    cell: Cell { id: 1, seed: 1, policy: q },
+                    outcome: Ok(fake_report("hlem-vmp-adjusted", 1)),
+                },
+                CellResult {
+                    cell: Cell { id: 2, seed: 2, policy: p },
+                    outcome: Ok(fake_report("first-fit", 5)),
+                },
+                CellResult {
+                    cell: Cell { id: 3, seed: 2, policy: q },
+                    outcome: Err("boom".into()),
+                },
+            ],
+            threads: 2,
+        }
+    }
+
+    #[test]
+    fn csv_has_one_row_per_cell_and_counts_failures() {
+        let rep = sample_report();
+        assert_eq!(rep.total(), 4);
+        assert_eq!(rep.failed(), 1);
+        let csv = rep.cells_csv();
+        assert_eq!(csv.len(), 4);
+        let text = csv.to_string();
+        assert!(text.contains("failed,boom"));
+        assert!(text.starts_with("cell,policy,alpha,seed,status"));
+    }
+
+    #[test]
+    fn aggregates_group_by_policy_and_skip_failures() {
+        let rep = sample_report();
+        let aggs = rep.aggregates();
+        assert_eq!(aggs.len(), 2);
+        assert_eq!(aggs[0].policy, PolicySpec::FirstFit);
+        assert_eq!(aggs[0].runs, 2);
+        assert_eq!(aggs[0].interruptions.mean(), 4.0);
+        assert_eq!(aggs[0].max_interruptions_per_vm, 5);
+        // The failed hlem cell is excluded from moments but keeps the group.
+        assert_eq!(aggs[1].runs, 1);
+        assert_eq!(aggs[1].interruptions.mean(), 1.0);
+    }
+
+    #[test]
+    fn aggregate_json_parses_and_excludes_wall() {
+        let rep = sample_report();
+        let text = rep.aggregate_json().to_string_pretty();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(parsed.path(&["cells"]).unwrap().as_f64(), Some(4.0));
+        assert_eq!(parsed.path(&["failed"]).unwrap().as_f64(), Some(1.0));
+        assert!(!text.contains("wall"), "wall time must not leak into sweep artifacts");
+        assert!(!text.contains("thread"));
+        let policies = parsed.path(&["policies"]).unwrap().as_arr().unwrap();
+        assert_eq!(policies.len(), 2);
+        assert_eq!(
+            policies[0].path(&["interruptions", "mean"]).unwrap().as_f64(),
+            Some(4.0)
+        );
+    }
+
+    #[test]
+    fn aggregate_table_renders() {
+        let t = sample_report().aggregate_table().render();
+        assert!(t.contains("first-fit"));
+        assert!(t.contains("hlem-vmp-adjusted"));
+    }
+}

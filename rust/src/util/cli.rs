@@ -97,6 +97,17 @@ impl Args {
             Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got '{v}'")),
         }
     }
+
+    /// Like [`Args::get_usize`] but rejects `0` (counts like `--threads`
+    /// and `--seeds` are meaningless at zero; fail loudly instead of
+    /// silently running nothing).
+    pub fn get_positive_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        let v = self.get_usize(name, default)?;
+        if v == 0 {
+            return Err(format!("--{name} must be >= 1"));
+        }
+        Ok(v)
+    }
 }
 
 /// Render a help block for `specs`.
@@ -117,6 +128,8 @@ mod tests {
         vec![
             Spec { name: "seed", takes_value: true, help: "rng seed" },
             Spec { name: "verbose", takes_value: false, help: "chatty" },
+            Spec { name: "threads", takes_value: true, help: "worker threads" },
+            Spec { name: "seeds", takes_value: true, help: "seed count" },
         ]
     }
 
@@ -152,5 +165,32 @@ mod tests {
         assert_eq!(a.get_f64("seed", 1.5).unwrap(), 1.5);
         let a = Args::parse(&argv(&["--seed", "abc"]), &specs()).unwrap();
         assert!(a.get_u64("seed", 0).is_err());
+    }
+
+    /// `--threads` / `--seeds` sweep flags: positive integers only.
+    #[test]
+    fn positive_counts_reject_zero_and_non_numeric() {
+        let a = Args::parse(&argv(&["--threads", "4", "--seeds", "8"]), &specs()).unwrap();
+        assert_eq!(a.get_positive_usize("threads", 1).unwrap(), 4);
+        assert_eq!(a.get_positive_usize("seeds", 1).unwrap(), 8);
+
+        let a = Args::parse(&argv(&["--threads", "0"]), &specs()).unwrap();
+        let err = a.get_positive_usize("threads", 1).unwrap_err();
+        assert!(err.contains("must be >= 1"), "{err}");
+
+        let a = Args::parse(&argv(&["--seeds", "0"]), &specs()).unwrap();
+        assert!(a.get_positive_usize("seeds", 1).is_err());
+
+        let a = Args::parse(&argv(&["--threads", "four"]), &specs()).unwrap();
+        let err = a.get_positive_usize("threads", 1).unwrap_err();
+        assert!(err.contains("expects an integer"), "{err}");
+
+        let a = Args::parse(&argv(&["--threads", "-2"]), &specs()).unwrap();
+        assert!(a.get_positive_usize("threads", 1).is_err());
+
+        // Absent flag falls back to the (validated) default.
+        let a = Args::parse(&argv(&[]), &specs()).unwrap();
+        assert_eq!(a.get_positive_usize("threads", 3).unwrap(), 3);
+        assert!(a.get_positive_usize("threads", 0).is_err());
     }
 }

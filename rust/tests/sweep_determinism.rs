@@ -1,0 +1,119 @@
+//! Determinism parity for the sweep subsystem: the same `SweepSpec` run
+//! with 1, 2 and 8 threads must produce byte-identical serialized sweep
+//! reports, and `compare::run_multi` (now implemented on the sweep
+//! driver) must match the pre-sweep sequential loop bit-for-bit.
+
+use std::sync::Arc;
+
+use cloudmarket::config::scenario::ComparisonConfig;
+use cloudmarket::experiments::compare;
+use cloudmarket::sweep::{self, PolicySpec, PrebuildCache, SweepSpec};
+
+/// The §VII-E scenario with a shortened horizon so the grid stays cheap
+/// in debug-mode test runs (interruptions still occur well before 600 s).
+fn small_cfg() -> ComparisonConfig {
+    ComparisonConfig { terminate_at: 600.0, ..Default::default() }
+}
+
+fn small_spec() -> SweepSpec {
+    SweepSpec::new(small_cfg())
+        .with_seed_range(20_250_710, 2)
+        .with_policies(PolicySpec::paper())
+}
+
+#[test]
+fn sweep_artifacts_byte_identical_across_thread_counts() {
+    let render = |threads: usize| {
+        let report = sweep::run(&small_spec(), threads);
+        assert_eq!(report.total(), 6);
+        assert_eq!(report.failed(), 0, "no cell may fail");
+        (report.cells_csv().to_string(), report.aggregate_json().to_string_pretty())
+    };
+    let single = render(1);
+    assert_eq!(single, render(2), "2-thread sweep output differs from single-threaded");
+    assert_eq!(single, render(8), "8-thread sweep output differs from single-threaded");
+}
+
+/// `run_multi` on the sweep driver reproduces the pre-sweep sequential
+/// behavior exactly (same float-accumulation order, so `==` on f64s).
+#[test]
+fn run_multi_matches_presweep_sequential_loop() {
+    let base_cfg = small_cfg();
+    let runs = 2;
+
+    // The pre-sweep implementation, verbatim: seed-major loop, policies
+    // rebuilt per seed, aggregates accumulated with `+= x / runs`.
+    let mut expected: Vec<compare::Aggregate> = compare::paper_policies()
+        .iter()
+        .map(|(name, _)| compare::Aggregate {
+            policy: name,
+            runs,
+            mean_interruptions: 0.0,
+            mean_interrupted_vms: 0.0,
+            mean_avg_duration: 0.0,
+            mean_max_duration: 0.0,
+            max_per_vm: 0,
+        })
+        .collect();
+    for r in 0..runs {
+        let cfg = ComparisonConfig { seed: base_cfg.seed + r as u64, ..base_cfg.clone() };
+        for (i, (_, make)) in compare::paper_policies().into_iter().enumerate() {
+            let o = compare::run_policy(make, &cfg);
+            let a = &mut expected[i];
+            a.mean_interruptions += o.report.spot.interruptions as f64 / runs as f64;
+            a.mean_interrupted_vms += o.report.spot.interrupted_vms as f64 / runs as f64;
+            a.mean_avg_duration += o.report.spot.avg_interruption_secs / runs as f64;
+            a.mean_max_duration += o.report.spot.max_interruption_secs / runs as f64;
+            a.max_per_vm = a.max_per_vm.max(o.report.spot.max_interruptions_per_vm);
+        }
+    }
+
+    let actual = compare::run_multi_threaded(&base_cfg, runs, 4);
+    assert_eq!(actual.len(), expected.len());
+    for (a, e) in actual.iter().zip(&expected) {
+        assert_eq!(a.policy, e.policy);
+        assert_eq!(a.runs, e.runs);
+        assert_eq!(a.mean_interruptions.to_bits(), e.mean_interruptions.to_bits(), "{}", a.policy);
+        assert_eq!(
+            a.mean_interrupted_vms.to_bits(),
+            e.mean_interrupted_vms.to_bits(),
+            "{}",
+            a.policy
+        );
+        assert_eq!(a.mean_avg_duration.to_bits(), e.mean_avg_duration.to_bits(), "{}", a.policy);
+        assert_eq!(a.mean_max_duration.to_bits(), e.mean_max_duration.to_bits(), "{}", a.policy);
+        assert_eq!(a.max_per_vm, e.max_per_vm, "{}", a.policy);
+    }
+}
+
+/// Cells of the same seed share one workload prebuild (built once, not
+/// per cell).
+#[test]
+fn prebuilds_are_shared_per_seed() {
+    let template = small_cfg();
+    let mut cache = PrebuildCache::new();
+    let spec = small_spec();
+    let plans: Vec<_> =
+        spec.cells().iter().map(|c| cache.get_or_build(&template, c.seed)).collect();
+    assert_eq!(plans.len(), 6);
+    assert_eq!(cache.len(), 2, "two distinct seeds -> two prebuilds");
+    // Seed-major cells: the first three cells share seed 20250710's plan.
+    assert!(Arc::ptr_eq(&plans[0], &plans[1]));
+    assert!(Arc::ptr_eq(&plans[0], &plans[2]));
+    assert!(!Arc::ptr_eq(&plans[0], &plans[3]));
+    assert!(Arc::ptr_eq(&plans[3], &plans[5]));
+}
+
+/// Explicit-list cells run too and land after the grid in id order.
+#[test]
+fn explicit_cells_run_after_grid() {
+    let spec = SweepSpec::new(small_cfg())
+        .with_seeds(vec![20_250_710])
+        .with_policies(vec![PolicySpec::FirstFit])
+        .with_cell(20_250_711, PolicySpec::Hlem { adjusted: true, alpha: -0.5 });
+    let report = sweep::run(&spec, 2);
+    assert_eq!(report.total(), 2);
+    assert_eq!(report.failed(), 0);
+    assert_eq!(report.cells[1].cell.seed, 20_250_711);
+    assert_eq!(report.cells[1].cell.policy.name(), "hlem-vmp-adjusted");
+}
