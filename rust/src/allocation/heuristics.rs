@@ -181,6 +181,11 @@ impl RoundRobin {
             scratch: VictimScratch::default(),
         }
     }
+
+    pub fn with_victim_policy(mut self, p: VictimPolicy) -> Self {
+        self.victim_policy = p;
+        self
+    }
 }
 
 impl Default for RoundRobin {

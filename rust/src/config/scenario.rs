@@ -154,6 +154,16 @@ pub fn plan_comparison_workload(cfg: &ComparisonConfig) -> WorkloadPlan {
 impl WorkloadPlan {
     /// Submit the planned hosts, VMs and cloudlets into `engine`.
     pub fn apply(&self, engine: &mut Engine) -> ScenarioStats {
+        self.apply_with_spot(engine, self.spot)
+    }
+
+    /// [`WorkloadPlan::apply`] with the spot-instance settings overridden.
+    ///
+    /// The spot config only affects interruption handling at run time, not
+    /// the planned RNG draws, so a sweep's spot-config axis can share one
+    /// plan per seed across all its spot variants (`sweep::prebuild`) and
+    /// substitute the variant's config here.
+    pub fn apply_with_spot(&self, engine: &mut Engine, spot: SpotConfig) -> ScenarioStats {
         let mut stats = ScenarioStats::default();
 
         let dc = engine.add_datacenter("dc0", 1.0);
@@ -167,7 +177,7 @@ impl WorkloadPlan {
         for p in &self.vms {
             let vm = if p.is_spot {
                 stats.spot_vms += 1;
-                Vm::spot(0, p.spec, self.spot)
+                Vm::spot(0, p.spec, spot)
                     .with_persistent(self.waiting_time)
                     .with_delay(p.delay)
             } else {
@@ -253,6 +263,21 @@ mod tests {
                 .collect::<Vec<_>>()
         };
         assert_eq!(snap(&direct), snap(&planned));
+    }
+
+    #[test]
+    fn apply_with_spot_overrides_only_spot_config() {
+        let cfg = ComparisonConfig::default();
+        let plan = plan_comparison_workload(&cfg);
+        let spot = cfg.spot.with_warning(60.0);
+        let mut e = Engine::new(EngineConfig::default(), Box::new(FirstFit::new()));
+        let stats = plan.apply_with_spot(&mut e, spot);
+        assert_eq!(stats.spot_vms, 400);
+        // Every spot VM carries the override; submission order and delays
+        // are untouched (same planned draws).
+        for v in e.world.vms.iter().filter(|v| v.is_spot()) {
+            assert_eq!(v.spot.expect("spot vm has a config").warning_time, 60.0);
+        }
     }
 
     #[test]

@@ -21,6 +21,31 @@ pub enum VictimPolicy {
     SmallestFirst,
 }
 
+impl VictimPolicy {
+    /// Stable kebab-case name (CLI vocabulary, sweep-axis values and
+    /// artifact columns).
+    pub fn name(&self) -> &'static str {
+        match self {
+            VictimPolicy::ListOrder => "list-order",
+            VictimPolicy::Youngest => "youngest",
+            VictimPolicy::SmallestFirst => "smallest-first",
+        }
+    }
+
+    /// Parse one victim-policy name (`--axis victim=...` vocabulary).
+    pub fn parse(s: &str) -> Result<VictimPolicy, String> {
+        match s.trim() {
+            "list-order" => Ok(VictimPolicy::ListOrder),
+            "youngest" => Ok(VictimPolicy::Youngest),
+            "smallest-first" => Ok(VictimPolicy::SmallestFirst),
+            other => Err(format!(
+                "unknown victim policy '{other}' (expected list-order | youngest | \
+                 smallest-first)"
+            )),
+        }
+    }
+}
+
 /// Engine-wide configuration.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -94,6 +119,14 @@ mod tests {
     #[test]
     fn default_is_valid() {
         assert!(EngineConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn victim_policy_names_round_trip() {
+        for p in [VictimPolicy::ListOrder, VictimPolicy::Youngest, VictimPolicy::SmallestFirst] {
+            assert_eq!(VictimPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(VictimPolicy::parse("oldest").is_err());
     }
 
     #[test]

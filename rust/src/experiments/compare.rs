@@ -175,14 +175,14 @@ pub fn run_multi_threaded(
     for cell in &sweep_report.cells {
         let i = policies
             .iter()
-            .position(|p| *p == cell.cell.policy)
+            .position(|p| *p == cell.cell.policy())
             .expect("sweep returned a policy outside the requested grid");
         let report = match &cell.outcome {
             Ok(r) => r,
             Err(e) => panic!(
                 "sweep cell {} ({} seed {}) failed: {e}",
                 cell.cell.id,
-                cell.cell.policy.name(),
+                cell.cell.policy().name(),
                 cell.cell.seed
             ),
         };

@@ -5,11 +5,11 @@
 use std::time::Duration;
 
 use crate::allocation::FirstFit;
-use crate::engine::{Engine, EngineConfig, Report};
+use crate::engine::{Engine, Report};
 use crate::metrics::selfprof::SelfProfiler;
 use crate::metrics::TimeSeries;
 use crate::trace::synth::{SynthConfig, TraceGenerator};
-use crate::trace::workload::{self, WorkloadConfig, WorkloadStats};
+use crate::trace::workload::{self, trace_engine_config, WorkloadConfig, WorkloadStats};
 use crate::trace::Trace;
 use crate::util::csv::fmt_num;
 use crate::util::table::{Align, TextTable};
@@ -63,17 +63,8 @@ pub fn run(cfg: &TraceSimConfig) -> TraceSimOutcome {
     let issues = trace.validate();
     assert!(issues.is_empty(), "synthetic trace invalid: {issues:?}");
 
-    let mut engine_cfg = EngineConfig::default();
-    engine_cfg.sample_interval = cfg.sample_interval;
-    engine_cfg.scheduling_interval = 60.0; // trace scale: minute ticks
-    engine_cfg.vm_destruction_delay = 1.0;
-    // Trace scale: hibernated spots are re-probed every ~10 minutes, the
-    // source of the paper's ~32-minute average interruption durations.
-    engine_cfg.resubmit_cooldown = 600.0;
-    engine_cfg.retry_interval = 600.0;
-    engine_cfg.max_log_events = 200_000;
-
-    let mut engine = Engine::new(engine_cfg, Box::new(FirstFit::new()));
+    let mut engine =
+        Engine::new(trace_engine_config(cfg.sample_interval), Box::new(FirstFit::new()));
     let wl = workload::build(&mut engine, &trace, &cfg.workload);
     engine.terminate_at(trace.horizon);
 

@@ -12,11 +12,17 @@
 //! cloudmarket tables                         Tables II-III
 //! ```
 //!
-//! `sweep` fans the SVII-E comparison scenario out over worker threads
-//! (`--threads`), one cell per (seed, policy): `--seeds N` runs seeds
-//! `--seed .. --seed+N-1` under every `--policies` entry, writing
-//! `sweep_cells.csv` and `sweep_aggregate.json` to `--out-dir`. The
-//! merged output is bit-identical at any thread count.
+//! `sweep` fans a multi-axis scenario grid out over worker threads
+//! (`--threads`), one cell per (seed, scenario variant): `--seeds N` runs
+//! seeds `--seed .. --seed+N-1` under every `--policies` entry, multiplied
+//! by any `--axis <name>=<v1,v2,...>` dimensions (spot.warning,
+//! spot.hibernation-timeout, spot.behavior, hlem.alpha, victim, substrate)
+//! and the `--substrate` list (comparison | trace). Artifacts go to
+//! `--out-dir`: `sweep_cells.csv`, `sweep_aggregate.json`, and - for cells
+//! matching `--retain-series` - per-cell `sweep_series_cell*.csv` time
+//! series. The merged output is bit-identical at any thread count. See
+//! `docs/sweep-cookbook.md` for recipes and `docs/cli.md` for the full
+//! flag reference.
 
 use std::path::PathBuf;
 
@@ -44,6 +50,9 @@ fn specs() -> Vec<Spec> {
         Spec { name: "seeds", takes_value: true, help: "sweep: number of seeds (default 8)" },
         Spec { name: "threads", takes_value: true, help: "sweep: worker threads (default: all CPUs)" },
         Spec { name: "policies", takes_value: true, help: "sweep: comma-separated policy list" },
+        Spec { name: "axis", takes_value: true, help: "sweep: scenario axis <name>=<v1,v2,...>, repeatable (spot.warning | spot.hibernation-timeout | spot.behavior | hlem.alpha | victim | substrate)" },
+        Spec { name: "substrate", takes_value: true, help: "sweep: workload substrate list: comparison | trace (default comparison)" },
+        Spec { name: "retain-series", takes_value: true, help: "sweep: keep per-cell time series: all | none | policy=<p>,seed=<s>,id=<n>,substrate=<s> (OR; default none)" },
         Spec { name: "alpha", takes_value: true, help: "spot-load factor for adjusted HLEM (default -0.5)" },
         Spec { name: "scorer", takes_value: true, help: "hlem scorer backend: rust | pjrt" },
         Spec { name: "machines", takes_value: true, help: "trace machine count" },
@@ -199,11 +208,11 @@ fn cmd_compare(args: &Args, out_dir: &std::path::Path) -> Result<(), String> {
     Ok(())
 }
 
-/// `cloudmarket sweep`: fan the §VII-E comparison grid out over a worker
-/// pool. One cell per (seed, policy); merged output is deterministic
-/// regardless of `--threads`.
+/// `cloudmarket sweep`: fan a multi-axis scenario grid out over a worker
+/// pool. One cell per (seed, scenario variant); merged output is
+/// deterministic regardless of `--threads`.
 fn cmd_sweep(args: &Args, out_dir: &std::path::Path) -> Result<(), String> {
-    use cloudmarket::sweep::{self, CellResult, PolicySpec, SweepSpec};
+    use cloudmarket::sweep::{self, CellResult, PolicySpec, ScenarioAxis, SeriesFilter, Substrate, SweepSpec};
 
     let seed = args.get_u64("seed", 20_250_710)?;
     let seeds = args.get_positive_usize("seeds", 8)?;
@@ -218,20 +227,75 @@ fn cmd_sweep(args: &Args, out_dir: &std::path::Path) -> Result<(), String> {
                     'rust' scorer is supported (pjrt handles are not Send)"
             .into());
     }
+    let mut axes: Vec<ScenarioAxis> = args
+        .get_all("axis")
+        .into_iter()
+        .map(ScenarioAxis::parse)
+        .collect::<Result<_, _>>()?;
+    if let Some(subs) = args.get("substrate") {
+        // Silently stacking a second substrate axis would duplicate every
+        // variant (each cell would run once per copy).
+        if axes.iter().any(|a| matches!(a, ScenarioAxis::Substrate(_))) {
+            return Err("--substrate and --axis substrate=... declare the same axis; \
+                        pass only one"
+                .into());
+        }
+        axes.push(ScenarioAxis::Substrate(Substrate::parse_list(subs)?));
+    }
+    // A repeated axis name would silently overwrite the earlier values
+    // (last expansion wins per field) or duplicate every variant.
+    for (i, a) in axes.iter().enumerate() {
+        if axes[..i].iter().any(|b| b.name() == a.name()) {
+            return Err(format!(
+                "axis '{}' declared more than once; merge its values into one --axis flag",
+                a.name()
+            ));
+        }
+    }
+    // An alpha axis multiplies only alpha-sensitive policies; with none in
+    // the list it would expand nothing and silently run a no-op "sweep".
+    if axes.iter().any(|a| matches!(a, ScenarioAxis::HlemAlpha(_)))
+        && !policies.iter().any(|p| p.alpha_sensitive())
+    {
+        return Err("--axis hlem.alpha requires an alpha-sensitive policy \
+                    (hlem-vmp-adjusted) in --policies"
+            .into());
+    }
+    let retain = match args.get("retain-series") {
+        None => SeriesFilter::none(),
+        Some(f) => SeriesFilter::parse(f)?,
+    };
 
     let scenario = ComparisonConfig { seed, ..Default::default() };
     let n_policies = policies.len();
-    let spec = SweepSpec::new(scenario).with_seed_range(seed, seeds).with_policies(policies);
+    let mut spec = SweepSpec::new(scenario)
+        .with_seed_range(seed, seeds)
+        .with_policies(policies)
+        .with_axes(axes)
+        .with_series_retention(retain);
+    // Trace-substrate scale knobs shared with `cloudmarket trace`.
+    spec.trace.synth.machines = args.get_usize("machines", spec.trace.synth.machines)?;
+    spec.trace.synth.days = args.get_f64("days", spec.trace.synth.days)?;
+    spec.trace.workload.spot_instances =
+        args.get_usize("spots", spec.trace.workload.spot_instances)?;
+    spec.trace.workload.max_trace_vms =
+        args.get_usize("max-vms", spec.trace.workload.max_trace_vms)?;
+
+    let n_variants = spec.variants().len();
     let total = spec.cell_count();
-    eprintln!("sweep: {total} cells ({seeds} seeds x {n_policies} policies) on {threads} threads ...");
+    eprintln!(
+        "sweep: {total} cells ({seeds} seeds x {n_variants} variants over {n_policies} \
+         policies) on {threads} threads ..."
+    );
 
     fn progress(done: usize, total: usize, r: &CellResult) {
         let status = if r.outcome.is_ok() { "ok" } else { "FAILED" };
         eprintln!(
-            "  [{done:>3}/{total}] cell {:<3} {:<18} seed={} {status}",
+            "  [{done:>3}/{total}] cell {:<3} {:<18} seed={} {:<12} {status}",
             r.cell.id,
-            r.cell.policy.name(),
-            r.cell.seed
+            r.cell.policy().name(),
+            r.cell.seed,
+            r.cell.spec.variant_label(),
         );
     }
     let report = sweep::run_with_progress(&spec, threads, Some(&progress));
@@ -245,6 +309,30 @@ fn cmd_sweep(args: &Args, out_dir: &std::path::Path) -> Result<(), String> {
     std::fs::write(&agg_path, report.aggregate_json().to_string_pretty())
         .map_err(|e| e.to_string())?;
     println!("wrote {} and {}", cells_path.display(), agg_path.display());
+    // Series filenames depend on the grid and filter, so stale files from
+    // a previous run into the same directory would otherwise survive and
+    // masquerade as this run's output.
+    if let Ok(entries) = std::fs::read_dir(out_dir) {
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if name.starts_with("sweep_series_cell") && name.ends_with(".csv") {
+                std::fs::remove_file(entry.path()).map_err(|e| e.to_string())?;
+            }
+        }
+    }
+    let retained = report.retained_series_csvs();
+    if !retained.is_empty() {
+        for (id, csv) in &retained {
+            csv.write_file(&out_dir.join(format!("sweep_series_cell{id:04}.csv")))
+                .map_err(|e| e.to_string())?;
+        }
+        println!(
+            "wrote {} retained series ({})",
+            retained.len(),
+            out_dir.join("sweep_series_cell*.csv").display()
+        );
+    }
 
     // Partial sweeps must not look like clean successes to callers
     // gating on the exit status; the artifacts above still record the
@@ -330,7 +418,15 @@ mod tests {
     fn usage_mentions_sweep_and_its_flags() {
         let u = usage();
         assert!(u.contains("sweep"), "{u}");
-        for flag in ["--threads", "--seeds", "--policies", "--out-dir"] {
+        for flag in [
+            "--threads",
+            "--seeds",
+            "--policies",
+            "--out-dir",
+            "--axis",
+            "--substrate",
+            "--retain-series",
+        ] {
             assert!(u.contains(flag), "usage missing {flag}:\n{u}");
         }
     }
@@ -354,8 +450,90 @@ mod tests {
         assert!(run(&argv(&["sweep", "--scorer", "pjrt"])).is_err());
     }
 
+    /// Bad axis/substrate/retention flags fail fast too.
+    #[test]
+    fn sweep_rejects_bad_axes_and_filters() {
+        let err = run(&argv(&["sweep", "--axis", "spot.warning"])).unwrap_err();
+        assert!(err.contains("must be <name>=<v1,v2,...>"), "{err}");
+        let err = run(&argv(&["sweep", "--axis", "frobnicate=1"])).unwrap_err();
+        assert!(err.contains("unknown axis"), "{err}");
+        let err = run(&argv(&["sweep", "--axis", "spot.warning=-5"])).unwrap_err();
+        assert!(err.contains("negative"), "{err}");
+        let err = run(&argv(&["sweep", "--substrate", "cloud"])).unwrap_err();
+        assert!(err.contains("unknown substrate"), "{err}");
+        let err = run(&argv(&[
+            "sweep", "--axis", "substrate=trace", "--substrate", "comparison",
+        ]))
+        .unwrap_err();
+        assert!(err.contains("same axis"), "{err}");
+        let err = run(&argv(&[
+            "sweep", "--axis", "spot.warning=60", "--axis", "spot.warning=120",
+        ]))
+        .unwrap_err();
+        assert!(err.contains("declared more than once"), "{err}");
+        let err = run(&argv(&[
+            "sweep", "--policies", "first-fit,hlem-vmp", "--axis", "hlem.alpha=-0.2,-0.8",
+        ]))
+        .unwrap_err();
+        assert!(err.contains("alpha-sensitive"), "{err}");
+        let err = run(&argv(&["sweep", "--retain-series", "bogus=1"])).unwrap_err();
+        assert!(err.contains("unknown retain key"), "{err}");
+    }
+
     #[test]
     fn unknown_subcommand_is_an_error() {
         assert!(run(&argv(&["frobnicate"])).is_err());
+    }
+
+    /// Anti-drift check for `docs/cli.md`: every flag the CLI reference
+    /// documents must appear in the live `--help` output, and every
+    /// declared flag must be documented. Flags belonging to external
+    /// tools (cargo, rustup) that the docs mention in passing are
+    /// allowlisted.
+    #[test]
+    fn cli_docs_match_help_output() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("crate dir has a parent")
+            .join("docs/cli.md");
+        let docs = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+        let external = [
+            "release", "features", "bench", "no-deps", "workspace", "bin", "quiet",
+        ];
+        // Collect `--flag` tokens from the docs.
+        let mut documented: Vec<String> = Vec::new();
+        for (i, _) in docs.match_indices("--") {
+            let name: String = docs[i + 2..]
+                .chars()
+                .take_while(|c| c.is_ascii_lowercase() || *c == '-')
+                .collect();
+            let name = name.trim_end_matches('-').to_string();
+            if !name.is_empty() && !documented.contains(&name) {
+                documented.push(name);
+            }
+        }
+        documented.retain(|n| !external.contains(&n.as_str()));
+        assert!(!documented.is_empty(), "no flags found in {}", path.display());
+        let u = usage();
+        for flag in &documented {
+            assert!(
+                u.contains(&format!("--{flag}")),
+                "docs/cli.md documents --{flag} but --help does not mention it"
+            );
+        }
+        // The reverse: every declared flag is documented.
+        for spec in specs() {
+            assert!(
+                documented.iter().any(|d| d == spec.name),
+                "--{} is declared in specs() but missing from docs/cli.md",
+                spec.name
+            );
+        }
+        // And every subcommand is documented.
+        for cmd in ["quickstart", "compare", "sweep", "trace", "trace-analysis", "advisor", "tables"]
+        {
+            assert!(docs.contains(cmd), "docs/cli.md missing subcommand {cmd}");
+        }
     }
 }

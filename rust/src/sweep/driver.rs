@@ -9,19 +9,25 @@
 //! inside `catch_unwind`, and reports a [`CellResult`]. A panicking cell
 //! therefore fails alone - the rest of the grid still completes.
 //!
+//! A cell's [`CellSpec`](super::grid::CellSpec) selects the substrate
+//! (§VII-E comparison plan vs §VII-D trace simulation), the policy (with
+//! per-cell victim-policy and adjusted-alpha values), and the spot-config
+//! overrides applied on top of the substrate's base `SpotConfig`. Cells
+//! matching the spec's retention filter additionally keep their sampled
+//! time series (Fig-13-style curves) in the result.
+//!
 //! The merge is by cell id, so the assembled [`SweepReport`] - and every
 //! artifact serialized from it - is bit-identical regardless of thread
 //! count (including `threads == 1`).
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
 
-use crate::config::scenario::WorkloadPlan;
 use crate::engine::Engine;
+use crate::trace::workload::{self, trace_engine_config};
 
-use super::grid::{Cell, SweepSpec};
-use super::prebuild::PrebuildCache;
+use super::grid::{Cell, Substrate, SweepSpec};
+use super::prebuild::{Prebuilt, PrebuildCache};
 use super::report::{CellResult, SweepReport};
 
 /// Worker threads to use when the caller does not care: one per available
@@ -49,11 +55,19 @@ pub fn run_with_progress(
     let cells = spec.cells();
     let total = cells.len();
 
-    // Shared read-only prebuilds: resolve each distinct seed's workload
-    // once, up front, and hand every cell an Arc to its seed's plan.
+    // Shared read-only prebuilds: resolve each distinct (substrate, seed)
+    // pair's workload once, up front, and hand every cell an Arc to it.
+    // Prebuild panics (e.g. an invalid trace template) are caught per cell
+    // so they surface as that cell's error row instead of aborting the
+    // sweep - the same isolation contract the workers give running cells.
     let mut cache = PrebuildCache::new();
-    let plans: Vec<Arc<WorkloadPlan>> =
-        cells.iter().map(|c| cache.get_or_build(&spec.scenario, c.seed)).collect();
+    let plans: Vec<Result<Prebuilt, String>> = cells
+        .iter()
+        .map(|c| {
+            catch_unwind(AssertUnwindSafe(|| cache.get_or_build_cell(spec, c)))
+                .map_err(|p| format!("workload prebuild failed: {}", panic_message(p)))
+        })
+        .collect();
 
     let threads = threads.max(1).min(total.max(1));
     let next = AtomicUsize::new(0);
@@ -76,7 +90,14 @@ pub fn run_with_progress(
                         if i >= total {
                             break;
                         }
-                        let result = run_cell(spec, &cells[i], &plans[i]);
+                        let result = match &plans[i] {
+                            Ok(prebuilt) => run_cell(spec, &cells[i], prebuilt),
+                            Err(e) => CellResult {
+                                cell: cells[i],
+                                outcome: Err(e.clone()),
+                                series: None,
+                            },
+                        };
                         let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
                         if let Some(cb) = on_cell {
                             cb(finished, total, &result);
@@ -106,15 +127,39 @@ pub fn run_with_progress(
 }
 
 /// Run one cell to completion; panics inside the cell become `Err` rows.
-fn run_cell(spec: &SweepSpec, cell: &Cell, plan: &WorkloadPlan) -> CellResult {
+fn run_cell(spec: &SweepSpec, cell: &Cell, prebuilt: &Prebuilt) -> CellResult {
+    let retain = spec.retain.matches(cell);
     let outcome = catch_unwind(AssertUnwindSafe(|| {
-        let mut engine = Engine::new(spec.engine.clone(), cell.policy.build());
-        plan.apply(&mut engine);
-        engine.run()
+        let policy = cell.spec.policy.build_with_victim(cell.spec.victim);
+        let mut engine = match (cell.spec.substrate, prebuilt) {
+            (Substrate::Comparison, Prebuilt::Comparison(plan)) => {
+                let mut engine = Engine::new(spec.engine.clone(), policy);
+                plan.apply_with_spot(&mut engine, cell.spec.spot.apply_to(plan.spot));
+                engine
+            }
+            (Substrate::Trace, Prebuilt::Trace(trace)) => {
+                let mut engine =
+                    Engine::new(trace_engine_config(spec.trace.sample_interval), policy);
+                let mut wl = spec.trace.workload.clone();
+                wl.seed = cell.seed;
+                wl.spot = cell.spec.spot.apply_to(wl.spot);
+                workload::build(&mut engine, trace, &wl);
+                engine.terminate_at(trace.horizon);
+                engine
+            }
+            (substrate, _) => unreachable!(
+                "prebuilt kind does not match cell substrate {substrate:?} (driver bug)"
+            ),
+        };
+        let report = engine.run();
+        let series = if retain { Some(engine.recorder.take_series()) } else { None };
+        (report, series)
     }));
     match outcome {
-        Ok(report) => CellResult { cell: *cell, outcome: Ok(report) },
-        Err(payload) => CellResult { cell: *cell, outcome: Err(panic_message(payload)) },
+        Ok((report, series)) => CellResult { cell: *cell, outcome: Ok(report), series },
+        Err(payload) => {
+            CellResult { cell: *cell, outcome: Err(panic_message(payload)), series: None }
+        }
     }
 }
 
@@ -132,7 +177,7 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
 mod tests {
     use super::*;
     use crate::config::scenario::ComparisonConfig;
-    use crate::sweep::grid::PolicySpec;
+    use crate::sweep::grid::{PolicySpec, ScenarioAxis, SeriesFilter};
 
     #[test]
     fn panicking_cells_fail_alone() {
@@ -161,5 +206,62 @@ mod tests {
         let report = run(&spec, 64);
         assert_eq!(report.threads, 1, "threads are clamped to the cell count");
         assert_eq!(report.total(), 1);
+    }
+
+    /// Retention keeps series only for matching cells; failed cells never
+    /// carry one.
+    #[test]
+    fn series_are_retained_per_filter() {
+        let scenario = ComparisonConfig { terminate_at: 300.0, ..Default::default() };
+        let spec = SweepSpec::new(scenario)
+            .with_seeds(vec![20_250_710])
+            .with_policies(vec![PolicySpec::FirstFit, PolicySpec::BestFit])
+            .with_series_retention(SeriesFilter::parse("policy=first-fit").unwrap());
+        let report = run(&spec, 2);
+        assert_eq!(report.failed(), 0);
+        let ff = &report.cells[0];
+        assert_eq!(ff.cell.policy(), PolicySpec::FirstFit);
+        let series = ff.series.as_ref().expect("first-fit cell retains its series");
+        assert!(!series.is_empty(), "retained series has samples");
+        assert!(report.cells[1].series.is_none(), "non-matching cell retains nothing");
+    }
+
+    /// A broken prebuild template (trace generator rejects 0 machines)
+    /// becomes per-cell error rows, not a sweep-wide abort.
+    #[test]
+    fn prebuild_panics_become_cell_errors() {
+        let mut spec = SweepSpec::new(ComparisonConfig::default())
+            .with_seeds(vec![1, 2])
+            .with_policies(vec![PolicySpec::FirstFit])
+            .with_axis(ScenarioAxis::Substrate(vec![crate::sweep::Substrate::Trace]));
+        spec.trace.synth.machines = 0; // TraceGenerator::new asserts machines > 0
+        let report = run(&spec, 2);
+        assert_eq!(report.total(), 2);
+        assert_eq!(report.failed(), 2);
+        for cell in &report.cells {
+            let err = cell.outcome.as_ref().err().expect("cell must have failed");
+            assert!(err.contains("workload prebuild failed"), "unexpected error: {err}");
+        }
+    }
+
+    /// A one-cell trace-substrate grid runs end to end on the driver.
+    #[test]
+    fn trace_substrate_cells_run() {
+        let mut spec = SweepSpec::new(ComparisonConfig::default())
+            .with_seeds(vec![42])
+            .with_policies(vec![PolicySpec::FirstFit])
+            .with_axis(ScenarioAxis::Substrate(vec![crate::sweep::Substrate::Trace]));
+        spec.trace.synth.machines = 10;
+        spec.trace.synth.days = 0.05;
+        spec.trace.synth.tasks_per_hour = 120.0;
+        spec.trace.workload.spot_instances = 20;
+        spec.trace.workload.spot_durations = vec![300.0, 600.0];
+        spec.trace.workload.max_trace_vms = 50;
+        let report = run(&spec, 1);
+        assert_eq!(report.total(), 1);
+        assert_eq!(report.failed(), 0, "trace cell failed: {:?}", report.cells[0].outcome);
+        let r = report.cells[0].report().unwrap();
+        assert_eq!(r.spot.total_spot, 20);
+        assert!(r.events_processed > 0);
     }
 }

@@ -1,16 +1,38 @@
 //! Sweep grids: declarative cell enumeration over scenario × seed ×
-//! policy, with cartesian-product and explicit-list construction.
+//! policy × axis values, with cartesian-product and explicit-list
+//! construction.
 //!
 //! A [`SweepSpec`] is plain data (`Clone + Send + Sync`), so the driver
 //! can share one spec across its worker threads; policies are described by
 //! [`PolicySpec`] values and only instantiated (as `Box<dyn
 //! AllocationPolicy>`) inside the worker that runs the cell.
+//!
+//! # Scenario axes
+//!
+//! Beyond the seeds × policies grid, a spec can carry [`ScenarioAxis`]
+//! values that multiply the policy list into [`CellSpec`] *variants*:
+//! spot lifecycle settings (warning time, hibernation timeout,
+//! terminate-vs-hibernate behavior), adjusted-HLEM alpha ranges,
+//! victim-policy ablations, and the workload [`Substrate`] itself
+//! (the §VII-E comparison template or the §VII-D cluster-trace
+//! simulation). Expansion is deterministic: variants are expanded axis by
+//! axis in declaration order, with the last-declared axis varying fastest;
+//! cells are then the cartesian product `seeds × variants` (seed-major)
+//! plus any explicitly listed extra cells. With no axes declared the
+//! variants are exactly the policy list, so axis-free sweeps enumerate the
+//! same grid as before the axis layer existed (the
+//! `compare::run_multi` bit-parity guarantee rests on this).
+//!
+//! See `docs/sweep-cookbook.md` for runnable recipes per axis.
 
 use crate::allocation::{
     AllocationPolicy, BestFit, FirstFit, HlemConfig, HlemVmp, RoundRobin, WorstFit,
 };
 use crate::config::scenario::{comparison_engine_config, ComparisonConfig};
-use crate::engine::EngineConfig;
+use crate::engine::{EngineConfig, VictimPolicy};
+use crate::trace::synth::SynthConfig;
+use crate::trace::workload::WorkloadConfig;
+use crate::vm::{InterruptionBehavior, SpotConfig};
 
 /// A policy described as data: buildable on any thread, comparable, and
 /// cheap to store per cell.
@@ -92,45 +114,505 @@ impl PolicySpec {
         }
     }
 
+    /// Whether an alpha axis applies to this spec (adjusted HLEM only; the
+    /// other policies ignore alpha, so multiplying them by an alpha range
+    /// would just duplicate identical runs).
+    pub fn alpha_sensitive(&self) -> bool {
+        matches!(self, PolicySpec::Hlem { adjusted: true, .. })
+    }
+
+    /// This spec with its alpha substituted (no-op for alpha-insensitive
+    /// policies).
+    pub fn with_alpha(self, alpha: f64) -> PolicySpec {
+        match self {
+            PolicySpec::Hlem { adjusted: true, .. } => {
+                PolicySpec::Hlem { adjusted: true, alpha }
+            }
+            other => other,
+        }
+    }
+
     /// Instantiate the policy (called inside the worker that runs the cell).
     pub fn build(&self) -> Box<dyn AllocationPolicy> {
+        self.build_with_victim(None)
+    }
+
+    /// [`PolicySpec::build`] with an optional victim-policy override
+    /// (`None` keeps each policy's default, the paper's list-order).
+    pub fn build_with_victim(&self, victim: Option<VictimPolicy>) -> Box<dyn AllocationPolicy> {
+        let v = victim.unwrap_or(VictimPolicy::ListOrder);
         match self {
-            PolicySpec::FirstFit => Box::new(FirstFit::new()),
-            PolicySpec::BestFit => Box::new(BestFit::new()),
-            PolicySpec::WorstFit => Box::new(WorstFit::new()),
-            PolicySpec::RoundRobin => Box::new(RoundRobin::new()),
-            PolicySpec::Hlem { adjusted: false, .. } => Box::new(HlemVmp::plain()),
-            PolicySpec::Hlem { adjusted: true, alpha } => {
-                Box::new(HlemVmp::new(HlemConfig::adjusted().with_alpha(*alpha)))
+            PolicySpec::FirstFit => Box::new(FirstFit::new().with_victim_policy(v)),
+            PolicySpec::BestFit => Box::new(BestFit::new().with_victim_policy(v)),
+            PolicySpec::WorstFit => Box::new(WorstFit::new().with_victim_policy(v)),
+            PolicySpec::RoundRobin => Box::new(RoundRobin::new().with_victim_policy(v)),
+            PolicySpec::Hlem { adjusted: false, .. } => {
+                Box::new(HlemVmp::new(HlemConfig::plain().with_victim_policy(v)))
             }
+            PolicySpec::Hlem { adjusted: true, alpha } => Box::new(HlemVmp::new(
+                HlemConfig::adjusted().with_alpha(*alpha).with_victim_policy(v),
+            )),
         }
     }
 }
 
-/// One unit of sweep work: a (scenario seed, policy) pair with a dense id
+/// Which workload substrate a cell runs: the §VII-E randomized comparison
+/// template or the §VII-D cluster-trace simulation (`trace_sim`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Substrate {
+    Comparison,
+    Trace,
+}
+
+impl Substrate {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Substrate::Comparison => "comparison",
+            Substrate::Trace => "trace",
+        }
+    }
+
+    /// Parse one substrate name (`--substrate` vocabulary).
+    pub fn parse(s: &str) -> Result<Substrate, String> {
+        match s.trim() {
+            "comparison" => Ok(Substrate::Comparison),
+            "trace" => Ok(Substrate::Trace),
+            other => Err(format!(
+                "unknown substrate '{other}' (expected comparison | trace)"
+            )),
+        }
+    }
+
+    /// Parse a comma-separated substrate list.
+    pub fn parse_list(list: &str) -> Result<Vec<Substrate>, String> {
+        let subs: Vec<Substrate> = list
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(Substrate::parse)
+            .collect::<Result<_, _>>()?;
+        if subs.is_empty() {
+            return Err("empty substrate list".into());
+        }
+        Ok(subs)
+    }
+}
+
+/// Spot-lifecycle overrides a cell applies on top of its substrate's base
+/// [`SpotConfig`]. Unset fields keep the base value, so an override is
+/// exactly one axis value, not a full config.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SpotOverride {
+    pub warning_time: Option<f64>,
+    pub hibernation_timeout: Option<f64>,
+    pub behavior: Option<InterruptionBehavior>,
+}
+
+impl SpotOverride {
+    pub const NONE: SpotOverride =
+        SpotOverride { warning_time: None, hibernation_timeout: None, behavior: None };
+
+    pub fn is_none(&self) -> bool {
+        *self == Self::NONE
+    }
+
+    /// `base` with the set fields substituted.
+    pub fn apply_to(&self, base: SpotConfig) -> SpotConfig {
+        let mut cfg = base;
+        if let Some(w) = self.warning_time {
+            cfg = cfg.with_warning(w);
+        }
+        if let Some(t) = self.hibernation_timeout {
+            cfg = cfg.with_hibernation_timeout(t);
+        }
+        if let Some(b) = self.behavior {
+            cfg = cfg.with_behavior(b);
+        }
+        cfg
+    }
+}
+
+/// Full description of one cell's scenario variant - everything that
+/// distinguishes cells of the same seed. Plain data (`Copy + PartialEq`),
+/// so reports can group aggregates by variant equality.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CellSpec {
+    pub substrate: Substrate,
+    pub policy: PolicySpec,
+    pub spot: SpotOverride,
+    /// Victim-selection override; `None` keeps the policy default
+    /// (list-order, the paper's behavior).
+    pub victim: Option<VictimPolicy>,
+}
+
+impl CellSpec {
+    /// The default variant: comparison substrate, no overrides.
+    pub fn comparison(policy: PolicySpec) -> CellSpec {
+        CellSpec {
+            substrate: Substrate::Comparison,
+            policy,
+            spot: SpotOverride::NONE,
+            victim: None,
+        }
+    }
+
+    /// Compact human-readable label of the non-default axis values
+    /// (terminal tables); `"-"` when this is the plain comparison variant
+    /// of an alpha-insensitive policy. The adjusted-HLEM alpha is always
+    /// shown so `hlem.alpha` axis rows stay distinguishable.
+    pub fn variant_label(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        if self.substrate != Substrate::Comparison {
+            parts.push(self.substrate.name().to_string());
+        }
+        if let Some(a) = self.policy.alpha() {
+            parts.push(format!("alpha={}", crate::util::csv::fmt_num(a)));
+        }
+        if let Some(w) = self.spot.warning_time {
+            parts.push(format!("warn={}", crate::util::csv::fmt_num(w)));
+        }
+        if let Some(t) = self.spot.hibernation_timeout {
+            parts.push(format!("hib={}", crate::util::csv::fmt_num(t)));
+        }
+        if let Some(b) = self.spot.behavior {
+            parts.push(b.name().to_string());
+        }
+        if let Some(v) = self.victim {
+            parts.push(format!("victim={}", v.name()));
+        }
+        if parts.is_empty() {
+            "-".to_string()
+        } else {
+            parts.join(" ")
+        }
+    }
+}
+
+/// One scenario axis: a named grid dimension with its enumerated values.
+///
+/// Each axis multiplies the current variant list (value order preserved);
+/// [`ScenarioAxis::HlemAlpha`] is the exception - it only multiplies
+/// alpha-sensitive policies (adjusted HLEM) and passes every other variant
+/// through once, so `first-fit` is not duplicated per alpha.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScenarioAxis {
+    /// `SpotConfig::warning_time` values, seconds (`spot.warning`).
+    SpotWarning(Vec<f64>),
+    /// `SpotConfig::hibernation_timeout` values, seconds
+    /// (`spot.hibernation-timeout`).
+    SpotHibernationTimeout(Vec<f64>),
+    /// Terminate-vs-hibernate interruption behavior (`spot.behavior`).
+    SpotBehavior(Vec<InterruptionBehavior>),
+    /// Adjusted-HLEM alpha values (`hlem.alpha`).
+    HlemAlpha(Vec<f64>),
+    /// Victim-selection ablation (`victim`).
+    Victim(Vec<VictimPolicy>),
+    /// Workload substrate (`substrate`).
+    Substrate(Vec<Substrate>),
+}
+
+impl ScenarioAxis {
+    /// Parse one `--axis` argument: `<name>=<v1,v2,...>` with names
+    /// `spot.warning`, `spot.hibernation-timeout`, `spot.behavior`,
+    /// `hlem.alpha`, `victim`, `substrate`.
+    pub fn parse(s: &str) -> Result<ScenarioAxis, String> {
+        let (name, vals) = s
+            .split_once('=')
+            .ok_or_else(|| format!("axis '{s}' must be <name>=<v1,v2,...>"))?;
+        match name.trim() {
+            "spot.warning" => Ok(ScenarioAxis::SpotWarning(parse_secs_list(vals, "spot.warning")?)),
+            "spot.hibernation-timeout" => Ok(ScenarioAxis::SpotHibernationTimeout(
+                parse_secs_list(vals, "spot.hibernation-timeout")?,
+            )),
+            "spot.behavior" => {
+                Ok(ScenarioAxis::SpotBehavior(parse_each(vals, InterruptionBehavior::parse)?))
+            }
+            "hlem.alpha" => Ok(ScenarioAxis::HlemAlpha(parse_f64_list(vals, "hlem.alpha")?)),
+            "victim" => Ok(ScenarioAxis::Victim(parse_each(vals, VictimPolicy::parse)?)),
+            "substrate" => Ok(ScenarioAxis::Substrate(Substrate::parse_list(vals)?)),
+            other => Err(format!(
+                "unknown axis '{other}' (expected spot.warning | spot.hibernation-timeout | \
+                 spot.behavior | hlem.alpha | victim | substrate)"
+            )),
+        }
+    }
+
+    /// The axis's flag-vocabulary name (the `--axis <name>=...` key).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScenarioAxis::SpotWarning(_) => "spot.warning",
+            ScenarioAxis::SpotHibernationTimeout(_) => "spot.hibernation-timeout",
+            ScenarioAxis::SpotBehavior(_) => "spot.behavior",
+            ScenarioAxis::HlemAlpha(_) => "hlem.alpha",
+            ScenarioAxis::Victim(_) => "victim",
+            ScenarioAxis::Substrate(_) => "substrate",
+        }
+    }
+
+    /// Number of values on this axis.
+    pub fn len(&self) -> usize {
+        match self {
+            ScenarioAxis::SpotWarning(v) | ScenarioAxis::SpotHibernationTimeout(v) => v.len(),
+            ScenarioAxis::SpotBehavior(v) => v.len(),
+            ScenarioAxis::HlemAlpha(v) => v.len(),
+            ScenarioAxis::Victim(v) => v.len(),
+            ScenarioAxis::Substrate(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Multiply `variants` by this axis (variant-major, value-minor: the
+    /// existing variant order is preserved and this axis varies fastest).
+    fn expand(&self, variants: Vec<CellSpec>) -> Vec<CellSpec> {
+        let mut out = Vec::with_capacity(variants.len() * self.len().max(1));
+        for v in variants {
+            match self {
+                ScenarioAxis::SpotWarning(vals) => {
+                    for &x in vals {
+                        let mut s = v;
+                        s.spot.warning_time = Some(x);
+                        out.push(s);
+                    }
+                }
+                ScenarioAxis::SpotHibernationTimeout(vals) => {
+                    for &x in vals {
+                        let mut s = v;
+                        s.spot.hibernation_timeout = Some(x);
+                        out.push(s);
+                    }
+                }
+                ScenarioAxis::SpotBehavior(vals) => {
+                    for &b in vals {
+                        let mut s = v;
+                        s.spot.behavior = Some(b);
+                        out.push(s);
+                    }
+                }
+                ScenarioAxis::HlemAlpha(vals) => {
+                    if v.policy.alpha_sensitive() {
+                        for &a in vals {
+                            out.push(CellSpec { policy: v.policy.with_alpha(a), ..v });
+                        }
+                    } else {
+                        out.push(v);
+                    }
+                }
+                ScenarioAxis::Victim(vals) => {
+                    for &p in vals {
+                        out.push(CellSpec { victim: Some(p), ..v });
+                    }
+                }
+                ScenarioAxis::Substrate(vals) => {
+                    for &sub in vals {
+                        out.push(CellSpec { substrate: sub, ..v });
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+fn parse_each<T>(list: &str, parse: impl Fn(&str) -> Result<T, String>) -> Result<Vec<T>, String> {
+    let items: Vec<T> = list
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| parse(s))
+        .collect::<Result<_, _>>()?;
+    if items.is_empty() {
+        return Err("empty axis value list".into());
+    }
+    Ok(items)
+}
+
+fn parse_f64_list(list: &str, axis: &str) -> Result<Vec<f64>, String> {
+    parse_each(list, |s| {
+        let v: f64 = s
+            .trim()
+            .parse()
+            .map_err(|_| format!("axis {axis}: '{s}' is not a number"))?;
+        if !v.is_finite() {
+            return Err(format!("axis {axis}: '{s}' is not finite"));
+        }
+        Ok(v)
+    })
+}
+
+fn parse_secs_list(list: &str, axis: &str) -> Result<Vec<f64>, String> {
+    let vals = parse_f64_list(list, axis)?;
+    if let Some(bad) = vals.iter().find(|v| **v < 0.0) {
+        return Err(format!("axis {axis}: {bad} is negative (seconds must be >= 0)"));
+    }
+    Ok(vals)
+}
+
+/// Trace-substrate template for [`Substrate::Trace`] cells: the synthetic
+/// trace generator plus the trace-to-workload conversion, at a scale small
+/// enough that multi-cell grids stay runnable (the full Fig-12 scale lives
+/// in `cloudmarket trace`). The per-cell seed overrides both the generator
+/// seed and the workload seed; one generated trace is shared per seed
+/// across that seed's cells (`sweep::prebuild`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSubstrate {
+    pub synth: SynthConfig,
+    pub workload: WorkloadConfig,
+    /// Metrics sampling period for trace cells, seconds.
+    pub sample_interval: f64,
+}
+
+impl Default for TraceSubstrate {
+    fn default() -> Self {
+        TraceSubstrate {
+            synth: SynthConfig {
+                machines: 40,
+                days: 0.25,
+                tasks_per_hour: 400.0,
+                ..Default::default()
+            },
+            workload: WorkloadConfig {
+                spot_instances: 200,
+                spot_durations: vec![1_800.0, 3_600.0],
+                max_trace_vms: 2_000,
+                ..Default::default()
+            },
+            sample_interval: 120.0,
+        }
+    }
+}
+
+/// Which cells keep their sampled [`crate::metrics::TimeSeries`]
+/// (Fig-13-style active-instance curves). Retaining every cell's series
+/// multiplies artifact size by the sample count, so the default is none;
+/// clauses are OR-ed, each matching on policy name, seed, cell id or
+/// substrate.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SeriesFilter {
+    clauses: Vec<RetainClause>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum RetainClause {
+    All,
+    Policy(String),
+    Seed(u64),
+    Id(usize),
+    Substrate(Substrate),
+}
+
+impl SeriesFilter {
+    /// Retain nothing (the default).
+    pub fn none() -> SeriesFilter {
+        SeriesFilter::default()
+    }
+
+    /// Retain every cell's series.
+    pub fn all() -> SeriesFilter {
+        SeriesFilter { clauses: vec![RetainClause::All] }
+    }
+
+    /// Parse a `--retain-series` filter: `none`, `all`, or a
+    /// comma-separated OR of `policy=<name>`, `seed=<n>`, `id=<n>`,
+    /// `substrate=<comparison|trace>` clauses.
+    pub fn parse(s: &str) -> Result<SeriesFilter, String> {
+        match s.trim() {
+            "none" | "" => return Ok(SeriesFilter::none()),
+            "all" => return Ok(SeriesFilter::all()),
+            _ => {}
+        }
+        let clauses: Vec<RetainClause> = s
+            .split(',')
+            .filter(|c| !c.trim().is_empty())
+            .map(|clause| {
+                let (key, val) = clause
+                    .split_once('=')
+                    .ok_or_else(|| format!("retain clause '{clause}' must be <key>=<value>"))?;
+                let val = val.trim();
+                match key.trim() {
+                    // Validate against the policy vocabulary so a typo
+                    // fails loudly instead of silently retaining nothing.
+                    "policy" => PolicySpec::parse(val, 0.0)
+                        .map(|p| RetainClause::Policy(p.name().to_string())),
+                    "seed" => val
+                        .parse()
+                        .map(RetainClause::Seed)
+                        .map_err(|_| format!("retain seed '{val}' is not an integer")),
+                    "id" => val
+                        .parse()
+                        .map(RetainClause::Id)
+                        .map_err(|_| format!("retain id '{val}' is not an integer")),
+                    "substrate" => Substrate::parse(val).map(RetainClause::Substrate),
+                    other => Err(format!(
+                        "unknown retain key '{other}' (expected policy | seed | id | substrate, \
+                         or the literals all | none)"
+                    )),
+                }
+            })
+            .collect::<Result<_, _>>()?;
+        if clauses.is_empty() {
+            return Err("empty retain filter (use 'none' explicitly)".into());
+        }
+        Ok(SeriesFilter { clauses })
+    }
+
+    /// Whether nothing is retained.
+    pub fn is_none(&self) -> bool {
+        self.clauses.is_empty()
+    }
+
+    /// Whether `cell`'s series should be kept.
+    pub fn matches(&self, cell: &Cell) -> bool {
+        self.clauses.iter().any(|c| match c {
+            RetainClause::All => true,
+            RetainClause::Policy(name) => cell.spec.policy.name() == name,
+            RetainClause::Seed(s) => cell.seed == *s,
+            RetainClause::Id(i) => cell.id == *i,
+            RetainClause::Substrate(sub) => cell.spec.substrate == *sub,
+        })
+    }
+}
+
+/// One unit of sweep work: a (seed, scenario variant) pair with a dense id
 /// that fixes its position in the merged output.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Cell {
     pub id: usize,
     pub seed: u64,
-    pub policy: PolicySpec,
+    pub spec: CellSpec,
 }
 
-/// Declarative description of a sweep: the §VII-E scenario template, the
-/// engine knobs every cell runs under, and the grid axes.
+impl Cell {
+    /// The cell's policy (shorthand for `self.spec.policy`).
+    pub fn policy(&self) -> PolicySpec {
+        self.spec.policy
+    }
+}
+
+/// Declarative description of a sweep: the scenario templates, the engine
+/// knobs every comparison cell runs under, and the grid axes.
 ///
-/// Cells are the cartesian product `seeds × policies` (seed-major, the
+/// Cells are the cartesian product `seeds × variants` (seed-major, the
 /// order of the pre-sweep `run_multi` loop) plus any explicitly listed
-/// extra cells.
+/// extra cells, where the variants are the policy list multiplied by each
+/// declared [`ScenarioAxis`] in order.
 #[derive(Debug, Clone)]
 pub struct SweepSpec {
-    /// Scenario template; each cell overrides `seed`.
+    /// Comparison-substrate scenario template; each cell overrides `seed`
+    /// (and its spot config, when a spot axis says so).
     pub scenario: ComparisonConfig,
-    /// Engine configuration shared by all cells (defaults to the §VII-E
-    /// comparison-experiment settings of `compare::run_policy`).
+    /// Engine configuration shared by all comparison cells (defaults to
+    /// the §VII-E comparison-experiment settings of `compare::run_policy`;
+    /// trace cells run `trace::workload::trace_engine_config` instead).
     pub engine: EngineConfig,
     pub seeds: Vec<u64>,
     pub policies: Vec<PolicySpec>,
+    /// Scenario axes multiplied onto the policy list, in order.
+    pub axes: Vec<ScenarioAxis>,
+    /// Template for [`Substrate::Trace`] cells.
+    pub trace: TraceSubstrate,
+    /// Which cells keep their sampled time series.
+    pub retain: SeriesFilter,
     /// Extra cells appended after the cartesian grid.
     pub explicit: Vec<(u64, PolicySpec)>,
 }
@@ -142,6 +624,9 @@ impl SweepSpec {
             engine: comparison_engine_config(),
             seeds: Vec::new(),
             policies: Vec::new(),
+            axes: Vec::new(),
+            trace: TraceSubstrate::default(),
+            retain: SeriesFilter::none(),
             explicit: Vec::new(),
         }
     }
@@ -164,28 +649,77 @@ impl SweepSpec {
         self
     }
 
-    /// Explicit-list construction: append one extra cell outside the grid.
+    /// Append one scenario axis (last-added varies fastest).
+    ///
+    /// Panics on an axis with no values: expanding by it would silently
+    /// collapse the whole grid to zero cells (the CLI parsers reject
+    /// empty value lists before getting here).
+    pub fn with_axis(mut self, axis: ScenarioAxis) -> Self {
+        assert!(
+            !axis.is_empty(),
+            "scenario axis '{}' has no values (would empty the grid)",
+            axis.name()
+        );
+        self.axes.push(axis);
+        self
+    }
+
+    /// Append several scenario axes in order.
+    pub fn with_axes(mut self, axes: Vec<ScenarioAxis>) -> Self {
+        for axis in axes {
+            self = self.with_axis(axis);
+        }
+        self
+    }
+
+    /// Replace the trace-substrate template.
+    pub fn with_trace_substrate(mut self, trace: TraceSubstrate) -> Self {
+        self.trace = trace;
+        self
+    }
+
+    /// Set the per-cell time-series retention filter.
+    pub fn with_series_retention(mut self, retain: SeriesFilter) -> Self {
+        self.retain = retain;
+        self
+    }
+
+    /// Explicit-list construction: append one extra cell outside the grid
+    /// (plain comparison variant).
     pub fn with_cell(mut self, seed: u64, policy: PolicySpec) -> Self {
         self.explicit.push((seed, policy));
         self
     }
 
+    /// The scenario variants: policies multiplied by each axis in
+    /// declaration order (the last-declared axis varies fastest).
+    pub fn variants(&self) -> Vec<CellSpec> {
+        let mut variants: Vec<CellSpec> =
+            self.policies.iter().map(|&p| CellSpec::comparison(p)).collect();
+        for axis in &self.axes {
+            variants = axis.expand(variants);
+        }
+        variants
+    }
+
     /// Number of cells the spec enumerates.
     pub fn cell_count(&self) -> usize {
-        self.seeds.len() * self.policies.len() + self.explicit.len()
+        self.seeds.len() * self.variants().len() + self.explicit.len()
     }
 
     /// Enumerate the cells in their deterministic merge order: cartesian
-    /// product seed-major, then the explicit extras, with dense ids.
+    /// product `seeds × variants` seed-major, then the explicit extras,
+    /// with dense ids.
     pub fn cells(&self) -> Vec<Cell> {
-        let mut cells = Vec::with_capacity(self.cell_count());
+        let variants = self.variants();
+        let mut cells = Vec::with_capacity(self.seeds.len() * variants.len());
         for &seed in &self.seeds {
-            for &policy in &self.policies {
-                cells.push(Cell { id: cells.len(), seed, policy });
+            for &spec in &variants {
+                cells.push(Cell { id: cells.len(), seed, spec });
             }
         }
         for &(seed, policy) in &self.explicit {
-            cells.push(Cell { id: cells.len(), seed, policy });
+            cells.push(Cell { id: cells.len(), seed, spec: CellSpec::comparison(policy) });
         }
         cells
     }
@@ -209,9 +743,11 @@ mod tests {
         assert_eq!(cells[0].seed, 10);
         assert_eq!(cells[2].seed, 10);
         assert_eq!(cells[3].seed, 11);
-        assert_eq!(cells[0].policy.name(), "first-fit");
-        assert_eq!(cells[1].policy.name(), "hlem-vmp");
-        assert_eq!(cells[2].policy.name(), "hlem-vmp-adjusted");
+        assert_eq!(cells[0].policy().name(), "first-fit");
+        assert_eq!(cells[1].policy().name(), "hlem-vmp");
+        assert_eq!(cells[2].policy().name(), "hlem-vmp-adjusted");
+        // Axis-free grids produce plain comparison variants.
+        assert!(cells.iter().all(|c| c.spec == CellSpec::comparison(c.spec.policy)));
     }
 
     #[test]
@@ -223,7 +759,7 @@ mod tests {
         let cells = spec.cells();
         assert_eq!(cells.len(), 2);
         assert_eq!(cells[1].seed, 99);
-        assert_eq!(cells[1].policy, PolicySpec::BestFit);
+        assert_eq!(cells[1].policy(), PolicySpec::BestFit);
     }
 
     #[test]
@@ -256,6 +792,186 @@ mod tests {
             PolicySpec::Hlem { adjusted: true, alpha: -0.5 },
         ] {
             assert_eq!(spec.build().name(), spec.name());
+            assert_eq!(
+                spec.build_with_victim(Some(VictimPolicy::Youngest)).name(),
+                spec.name()
+            );
         }
+    }
+
+    /// Pins the axis-expansion cell ordering: axes expand in declaration
+    /// order with the last-declared axis varying fastest, and the alpha
+    /// axis multiplies only alpha-sensitive policies.
+    #[test]
+    fn axis_expansion_order_is_pinned() {
+        let spec = SweepSpec::new(ComparisonConfig::default())
+            .with_seeds(vec![7])
+            .with_policies(vec![
+                PolicySpec::FirstFit,
+                PolicySpec::Hlem { adjusted: true, alpha: -0.5 },
+            ])
+            .with_axis(ScenarioAxis::HlemAlpha(vec![-0.3, -0.7]))
+            .with_axis(ScenarioAxis::SpotWarning(vec![60.0, 120.0]));
+        // Variants: [ff, adj(-0.3), adj(-0.7)] x warning [60, 120].
+        let variants = spec.variants();
+        let expected: Vec<(&str, Option<f64>, Option<f64>)> = vec![
+            ("first-fit", None, Some(60.0)),
+            ("first-fit", None, Some(120.0)),
+            ("hlem-vmp-adjusted", Some(-0.3), Some(60.0)),
+            ("hlem-vmp-adjusted", Some(-0.3), Some(120.0)),
+            ("hlem-vmp-adjusted", Some(-0.7), Some(60.0)),
+            ("hlem-vmp-adjusted", Some(-0.7), Some(120.0)),
+        ];
+        assert_eq!(variants.len(), expected.len());
+        for (v, (name, alpha, warn)) in variants.iter().zip(&expected) {
+            assert_eq!(v.policy.name(), *name);
+            assert_eq!(v.policy.alpha(), *alpha);
+            assert_eq!(v.spot.warning_time, *warn);
+        }
+        // Cells are seed-major over those variants with dense ids.
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 6);
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.id, i);
+            assert_eq!(c.seed, 7);
+            assert_eq!(c.spec, variants[i]);
+        }
+    }
+
+    #[test]
+    fn substrate_and_victim_axes_expand() {
+        let spec = SweepSpec::new(ComparisonConfig::default())
+            .with_seeds(vec![1])
+            .with_policies(vec![PolicySpec::FirstFit])
+            .with_axis(ScenarioAxis::Victim(vec![
+                VictimPolicy::ListOrder,
+                VictimPolicy::Youngest,
+            ]))
+            .with_axis(ScenarioAxis::Substrate(vec![
+                Substrate::Comparison,
+                Substrate::Trace,
+            ]));
+        let variants = spec.variants();
+        assert_eq!(variants.len(), 4);
+        assert_eq!(variants[0].victim, Some(VictimPolicy::ListOrder));
+        assert_eq!(variants[0].substrate, Substrate::Comparison);
+        assert_eq!(variants[1].substrate, Substrate::Trace);
+        assert_eq!(variants[2].victim, Some(VictimPolicy::Youngest));
+        assert_eq!(variants[3].substrate, Substrate::Trace);
+        assert_eq!(spec.cell_count(), 4);
+    }
+
+    #[test]
+    fn axis_parse_round_trips() {
+        assert_eq!(
+            ScenarioAxis::parse("spot.warning=60,120,300").unwrap(),
+            ScenarioAxis::SpotWarning(vec![60.0, 120.0, 300.0])
+        );
+        assert_eq!(
+            ScenarioAxis::parse("spot.hibernation-timeout=900").unwrap(),
+            ScenarioAxis::SpotHibernationTimeout(vec![900.0])
+        );
+        assert_eq!(
+            ScenarioAxis::parse("spot.behavior=terminate,hibernate").unwrap(),
+            ScenarioAxis::SpotBehavior(vec![
+                InterruptionBehavior::Terminate,
+                InterruptionBehavior::Hibernate,
+            ])
+        );
+        assert_eq!(
+            ScenarioAxis::parse("hlem.alpha=-0.3,-0.7").unwrap(),
+            ScenarioAxis::HlemAlpha(vec![-0.3, -0.7])
+        );
+        assert_eq!(
+            ScenarioAxis::parse("victim=youngest").unwrap(),
+            ScenarioAxis::Victim(vec![VictimPolicy::Youngest])
+        );
+        assert_eq!(
+            ScenarioAxis::parse("substrate=comparison,trace").unwrap(),
+            ScenarioAxis::Substrate(vec![Substrate::Comparison, Substrate::Trace])
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "has no values")]
+    fn empty_axis_is_rejected() {
+        let _ = SweepSpec::new(ComparisonConfig::default())
+            .with_seeds(vec![1])
+            .with_policies(vec![PolicySpec::FirstFit])
+            .with_axis(ScenarioAxis::SpotWarning(vec![]));
+    }
+
+    #[test]
+    fn axis_parse_rejects_bad_input() {
+        assert!(ScenarioAxis::parse("spot.warning").is_err(), "missing =");
+        assert!(ScenarioAxis::parse("spot.warning=").is_err(), "empty values");
+        assert!(ScenarioAxis::parse("spot.warning=-5").is_err(), "negative seconds");
+        assert!(ScenarioAxis::parse("spot.warning=abc").is_err(), "non-numeric");
+        assert!(ScenarioAxis::parse("hlem.alpha=nan").is_err(), "non-finite");
+        assert!(ScenarioAxis::parse("victim=oldest").is_err(), "unknown victim");
+        assert!(ScenarioAxis::parse("substrate=cloud").is_err(), "unknown substrate");
+        assert!(ScenarioAxis::parse("frobnicate=1").is_err(), "unknown axis");
+    }
+
+    #[test]
+    fn spot_override_applies_set_fields_only() {
+        let base = SpotConfig::hibernate().with_warning(2.0).with_hibernation_timeout(900.0);
+        let over = SpotOverride {
+            warning_time: Some(60.0),
+            hibernation_timeout: None,
+            behavior: Some(InterruptionBehavior::Terminate),
+        };
+        let cfg = over.apply_to(base);
+        assert_eq!(cfg.warning_time, 60.0);
+        assert_eq!(cfg.hibernation_timeout, 900.0);
+        assert_eq!(cfg.behavior, InterruptionBehavior::Terminate);
+        assert!(SpotOverride::NONE.is_none());
+        assert!(!over.is_none());
+        assert_eq!(SpotOverride::NONE.apply_to(base), base);
+    }
+
+    #[test]
+    fn series_filter_parses_and_matches() {
+        let cell = Cell {
+            id: 3,
+            seed: 11,
+            spec: CellSpec::comparison(PolicySpec::Hlem { adjusted: true, alpha: -0.5 }),
+        };
+        assert!(SeriesFilter::all().matches(&cell));
+        assert!(!SeriesFilter::none().matches(&cell));
+        assert!(SeriesFilter::none().is_none());
+        let f = SeriesFilter::parse("policy=hlem-vmp-adjusted,seed=99").unwrap();
+        assert!(f.matches(&cell), "policy clause matches");
+        let f = SeriesFilter::parse("seed=11").unwrap();
+        assert!(f.matches(&cell));
+        let f = SeriesFilter::parse("id=4").unwrap();
+        assert!(!f.matches(&cell));
+        let f = SeriesFilter::parse("substrate=trace").unwrap();
+        assert!(!f.matches(&cell));
+        assert_eq!(SeriesFilter::parse("none").unwrap(), SeriesFilter::none());
+        assert_eq!(SeriesFilter::parse("all").unwrap(), SeriesFilter::all());
+        assert!(SeriesFilter::parse("bogus=1").is_err());
+        assert!(SeriesFilter::parse("seed=abc").is_err());
+        assert!(SeriesFilter::parse("policy").is_err(), "clause without =");
+        assert!(
+            SeriesFilter::parse("policy=hlem-adjusted").is_err(),
+            "policy typos must fail at parse time, not retain nothing"
+        );
+    }
+
+    #[test]
+    fn variant_labels_are_compact() {
+        assert_eq!(CellSpec::comparison(PolicySpec::FirstFit).variant_label(), "-");
+        let spec = CellSpec {
+            substrate: Substrate::Trace,
+            policy: PolicySpec::FirstFit,
+            spot: SpotOverride { warning_time: Some(60.0), ..SpotOverride::NONE },
+            victim: Some(VictimPolicy::Youngest),
+        };
+        assert_eq!(spec.variant_label(), "trace warn=60 victim=youngest");
+        // Adjusted-HLEM rows always carry their alpha, so an hlem.alpha
+        // axis stays readable in the aggregate table and progress lines.
+        let adj = CellSpec::comparison(PolicySpec::Hlem { adjusted: true, alpha: -0.3 });
+        assert_eq!(adj.variant_label(), "alpha=-0.30");
     }
 }

@@ -1,47 +1,65 @@
 //! Parallel multi-scenario sweeps: deterministic fan-out of a declarative
-//! cell grid (scenario × seed × policy/HLEM-knob) over a worker pool.
+//! multi-axis cell grid (substrate × spot config × policy/HLEM-alpha ×
+//! victim policy × seed) over a worker pool.
 //!
 //! The paper's §VII-E claims (fewer spot interruptions, shorter maximum
 //! interruption duration under HLEM-VMP) are statistical - they only hold
-//! across many seeds and configurations. The engine itself is
-//! single-threaded by design (DES determinism), so the scaling win is
-//! *across* runs: every `Engine`/`World` is self-contained, which makes
-//! cells embarrassingly parallel.
+//! across many seeds and configurations, and its sensitivity arguments
+//! live in scenario variations (spot lifecycle settings, workload
+//! substrates, alpha tuning). The engine itself is single-threaded by
+//! design (DES determinism), so the scaling win is *across* runs: every
+//! `Engine`/`World` is self-contained, which makes cells embarrassingly
+//! parallel.
 //!
 //! # Module index
 //!
-//! - [`grid`]: [`SweepSpec`] → [`Cell`] enumeration. Cartesian product
-//!   `seeds × policies` (seed-major) plus explicit extra cells; policies
-//!   are plain-data [`PolicySpec`] values built only inside the worker
-//!   that runs the cell.
-//! - [`prebuild`]: shared read-only workload prebuilds. The randomized
-//!   Table II/III workload is resolved once per seed
-//!   (`config::scenario::WorkloadPlan`) and shared across that seed's
-//!   cells via `Arc` instead of being regenerated per cell.
+//! - [`grid`]: [`SweepSpec`] → [`Cell`] enumeration. The policy list
+//!   ([`PolicySpec`] values, built only inside the worker that runs the
+//!   cell) is multiplied by declared [`ScenarioAxis`] values into
+//!   [`CellSpec`] variants - spot warning/hibernation-timeout/behavior
+//!   grids, adjusted-HLEM alpha ranges, victim-policy ablations, and the
+//!   workload [`Substrate`] (§VII-E comparison template or §VII-D trace
+//!   simulation) - then crossed with seeds (seed-major) plus explicit
+//!   extra cells. A [`SeriesFilter`] says which cells keep their sampled
+//!   time series.
+//! - [`prebuild`]: shared read-only workload prebuilds keyed per
+//!   (substrate, seed): the randomized Table II/III workload resolved once
+//!   per seed (`config::scenario::WorkloadPlan`, shared across spot/alpha
+//!   variants via `apply_with_spot`), and the generated synthetic
+//!   cluster trace for `trace_sim` cells.
 //! - [`driver`]: the worker pool. A shared atomic cursor over the cell
 //!   list distributes work (self-balancing, allocation-free); each cell
 //!   runs inside `catch_unwind` so a panicking cell fails alone; an
 //!   optional progress callback reports completed cells. Per-cell engines
 //!   run the standard [`crate::engine::progress`] backend untouched.
-//! - [`report`]: per-cell `Report` rows plus grid-level aggregates
-//!   (reusing [`crate::stats::Summary`]), exported as CSV/JSON through
-//!   `util::csv` / `util::json`.
+//! - [`report`]: per-cell `Report` rows plus grid-level aggregates grouped
+//!   by scenario variant (reusing [`crate::stats::Summary`]), with axis
+//!   values as dedicated CSV columns / JSON fields, exported through
+//!   `util::csv` / `util::json`; retained per-cell series export for
+//!   Fig-13-style curves across the grid.
 //!
 //! # Determinism (§Perf: sweep fan-out)
 //!
 //! Results are merged by cell id, and the serialized artifacts exclude
 //! everything nondeterministic (wall times, thread counts), so a sweep's
 //! aggregate output is **bit-identical regardless of thread count**,
-//! including `--threads 1`. `tests/sweep_determinism.rs` pins this, and
+//! including `--threads 1` - and this holds for mixed-axis grids spanning
+//! both substrates. `tests/sweep_determinism.rs` pins this, and
 //! `experiments::compare::run_multi` is implemented on top of this driver
 //! with the exact float-accumulation order of its pre-sweep sequential
-//! loop. Sweep throughput (cells/sec) at 1 vs N threads is measured by
+//! loop (axis-free grids enumerate exactly the pre-axis seeds × policies
+//! cells). Sweep throughput (cells/sec) at 1 vs N threads is measured by
 //! `benches/perf_sweep.rs`, which writes `BENCH_sweep.json` at the repo
 //! root (CI regenerates and validates it next to `BENCH_engine.json`).
 //!
-//! Entry points: `cloudmarket sweep --threads N --seeds K --policies ...`
-//! on the CLI, or [`driver::run`] / [`driver::run_with_progress`] from
-//! code.
+//! Entry points: `cloudmarket sweep --threads N --seeds K --policies ...
+//! --axis spot.warning=60,120 --substrate comparison,trace
+//! --retain-series policy=hlem-vmp-adjusted` on the CLI, or
+//! [`driver::run`] / [`driver::run_with_progress`] from code.
+//!
+//! Runnable recipes for every axis - and which paper figure each
+//! reproduces - live in `docs/sweep-cookbook.md`; the full flag reference
+//! is `docs/cli.md`.
 
 pub mod driver;
 pub mod grid;
@@ -49,6 +67,9 @@ pub mod prebuild;
 pub mod report;
 
 pub use driver::{default_threads, run, run_with_progress};
-pub use grid::{Cell, PolicySpec, SweepSpec};
-pub use prebuild::PrebuildCache;
-pub use report::{CellResult, PolicyAggregate, SweepReport};
+pub use grid::{
+    Cell, CellSpec, PolicySpec, ScenarioAxis, SeriesFilter, SpotOverride, Substrate, SweepSpec,
+    TraceSubstrate,
+};
+pub use prebuild::{Prebuilt, PrebuildCache};
+pub use report::{CellResult, SweepReport, VariantAggregate};

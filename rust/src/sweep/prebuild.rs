@@ -1,26 +1,50 @@
-//! Shared read-only workload prebuilds.
+//! Shared read-only workload prebuilds, keyed per (substrate, seed).
 //!
 //! Every cell of a sweep re-runs the same scenario under a different
-//! policy/seed; the expensive part that is identical across all cells of
-//! one seed - resolving the randomized Table II/III workload into concrete
-//! submissions - is done once per seed here and shared across cells via
-//! `Arc<WorkloadPlan>` (the plan is plain data, `Send + Sync`).
+//! policy/seed/axis value; the expensive part that is identical across all
+//! cells of one (substrate, seed) pair is done once here and shared via
+//! `Arc`:
+//!
+//! - **Comparison substrate**: resolving the randomized Table II/III
+//!   workload into concrete submissions (`config::scenario::WorkloadPlan`).
+//!   Spot-config axis values do not consume RNG draws, so one plan per
+//!   seed serves every spot variant of that seed
+//!   (`WorkloadPlan::apply_with_spot`).
+//! - **Trace substrate**: generating (and validating) the synthetic
+//!   cluster [`Trace`]. The trace-to-workload conversion is cheap and
+//!   depends on per-cell knobs, so it stays in the worker.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::config::scenario::{plan_comparison_workload, ComparisonConfig, WorkloadPlan};
+use crate::trace::synth::{SynthConfig, TraceGenerator};
+use crate::trace::Trace;
 
-/// Seed-keyed cache of comparison-workload plans.
+use super::grid::{Cell, Substrate, SweepSpec};
+
+/// One shared prebuild: the comparison plan or the generated trace of the
+/// cell's (substrate, seed) pair.
+#[derive(Debug, Clone)]
+pub enum Prebuilt {
+    Comparison(Arc<WorkloadPlan>),
+    Trace(Arc<Trace>),
+}
+
+/// (Substrate, seed)-keyed cache of workload prebuilds.
 ///
-/// Plans are keyed by seed alone, so one cache serves exactly one
-/// scenario template; mixing templates is a bug the cache catches by
-/// asserting template identity (seed aside) on every lookup.
+/// Within each substrate, prebuilds are keyed by seed alone, so one cache
+/// serves exactly one scenario template per substrate; mixing templates is
+/// a bug the cache catches by asserting template identity (seed aside) on
+/// every lookup.
 #[derive(Debug, Default)]
 pub struct PrebuildCache {
     plans: BTreeMap<u64, Arc<WorkloadPlan>>,
-    /// First template seen, seed normalized to 0 for comparison.
+    /// First comparison template seen, seed normalized to 0.
     template: Option<ComparisonConfig>,
+    traces: BTreeMap<u64, Arc<Trace>>,
+    /// First trace-generator template seen, seed normalized to 0.
+    trace_template: Option<SynthConfig>,
 }
 
 impl PrebuildCache {
@@ -28,8 +52,8 @@ impl PrebuildCache {
         Self::default()
     }
 
-    /// Plan the workload for `seed` (with `template` supplying every other
-    /// scenario knob), or return the already-built shared plan.
+    /// Plan the comparison workload for `seed` (with `template` supplying
+    /// every other scenario knob), or return the already-built shared plan.
     ///
     /// Panics if called with a different template than earlier lookups:
     /// a seed-keyed hit for another scenario would be a silently wrong
@@ -52,19 +76,57 @@ impl PrebuildCache {
             .clone()
     }
 
-    /// Distinct seeds planned so far.
+    /// Generate (and validate) the synthetic trace for `seed`, or return
+    /// the already-built shared trace. Same template-identity contract as
+    /// [`PrebuildCache::get_or_build`].
+    pub fn get_or_build_trace(&mut self, template: &SynthConfig, seed: u64) -> Arc<Trace> {
+        let normalized = SynthConfig { seed: 0, ..template.clone() };
+        match &self.trace_template {
+            None => self.trace_template = Some(normalized),
+            Some(first) => assert_eq!(
+                *first, normalized,
+                "PrebuildCache reused across different trace templates"
+            ),
+        }
+        self.traces
+            .entry(seed)
+            .or_insert_with(|| {
+                let cfg = SynthConfig { seed, ..template.clone() };
+                let trace = TraceGenerator::new(cfg).generate();
+                let issues = trace.validate();
+                assert!(issues.is_empty(), "synthetic trace invalid: {issues:?}");
+                Arc::new(trace)
+            })
+            .clone()
+    }
+
+    /// The prebuild for `cell` under `spec`'s templates, built on first
+    /// request for its (substrate, seed) pair.
+    pub fn get_or_build_cell(&mut self, spec: &SweepSpec, cell: &Cell) -> Prebuilt {
+        match cell.spec.substrate {
+            Substrate::Comparison => {
+                Prebuilt::Comparison(self.get_or_build(&spec.scenario, cell.seed))
+            }
+            Substrate::Trace => {
+                Prebuilt::Trace(self.get_or_build_trace(&spec.trace.synth, cell.seed))
+            }
+        }
+    }
+
+    /// Distinct (substrate, seed) prebuilds so far.
     pub fn len(&self) -> usize {
-        self.plans.len()
+        self.plans.len() + self.traces.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.plans.is_empty()
+        self.plans.is_empty() && self.traces.is_empty()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sweep::grid::{CellSpec, PolicySpec};
 
     #[test]
     fn cache_shares_one_plan_per_seed() {
@@ -108,6 +170,51 @@ mod tests {
         let mut cache = PrebuildCache::new();
         cache.get_or_build(&a, 1);
         cache.get_or_build(&b, 2);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn trace_cache_shares_one_trace_per_seed() {
+        let template =
+            SynthConfig { machines: 10, days: 0.05, tasks_per_hour: 120.0, ..Default::default() };
+        let mut cache = PrebuildCache::new();
+        let a = cache.get_or_build_trace(&template, 1);
+        let b = cache.get_or_build_trace(&template, 1);
+        let c = cache.get_or_build_trace(&template, 2);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.len(), 2);
+        assert_eq!(a.machine_count(), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "different trace templates")]
+    fn trace_cache_rejects_template_mixing() {
+        let a = SynthConfig { machines: 10, days: 0.05, ..Default::default() };
+        let b = SynthConfig { machines: 12, ..a.clone() };
+        let mut cache = PrebuildCache::new();
+        cache.get_or_build_trace(&a, 1);
+        cache.get_or_build_trace(&b, 2);
+    }
+
+    #[test]
+    fn cell_lookup_dispatches_on_substrate() {
+        let mut spec = crate::sweep::SweepSpec::new(ComparisonConfig::default())
+            .with_seeds(vec![5])
+            .with_policies(vec![PolicySpec::FirstFit]);
+        spec.trace.synth =
+            SynthConfig { machines: 10, days: 0.05, tasks_per_hour: 120.0, ..Default::default() };
+        let mut cache = PrebuildCache::new();
+        let comp_cell = Cell { id: 0, seed: 5, spec: CellSpec::comparison(PolicySpec::FirstFit) };
+        let mut trace_spec = CellSpec::comparison(PolicySpec::FirstFit);
+        trace_spec.substrate = Substrate::Trace;
+        let trace_cell = Cell { id: 1, seed: 5, spec: trace_spec };
+        assert!(matches!(
+            cache.get_or_build_cell(&spec, &comp_cell),
+            Prebuilt::Comparison(_)
+        ));
+        assert!(matches!(cache.get_or_build_cell(&spec, &trace_cell), Prebuilt::Trace(_)));
+        // Same seed on different substrates -> two distinct prebuilds.
         assert_eq!(cache.len(), 2);
     }
 }

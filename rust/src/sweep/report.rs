@@ -1,26 +1,33 @@
-//! Sweep results: per-cell report rows plus grid-level aggregates, with
-//! CSV/JSON export through `util::csv` / `util::json`.
+//! Sweep results: per-cell report rows plus grid-level aggregates grouped
+//! by scenario variant, with CSV/JSON export through `util::csv` /
+//! `util::json`.
 //!
 //! Everything serialized here is a pure function of the cell results in
 //! cell-id order. Nondeterministic per-run data (wall time, thread count)
 //! is deliberately excluded so a sweep's exported artifacts are
 //! byte-identical regardless of how many worker threads produced them
-//! (pinned by `tests/sweep_determinism.rs`).
+//! (pinned by `tests/sweep_determinism.rs`). Axis values (substrate,
+//! victim policy, spot overrides) appear as dedicated CSV columns and JSON
+//! fields so downstream tooling can group by them directly.
 
 use crate::engine::Report;
+use crate::metrics::TimeSeries;
 use crate::stats::Summary;
 use crate::util::csv::{fmt_num, Csv};
 use crate::util::json::{Json, JsonObj};
 use crate::util::table::{Align, TextTable};
 
-use super::grid::{Cell, PolicySpec};
+use super::grid::{Cell, CellSpec};
 
 /// Outcome of one sweep cell: the run's [`Report`], or the panic/error
-/// message of an isolated failure.
+/// message of an isolated failure, plus the cell's sampled time series
+/// when the sweep's retention filter matched it.
 #[derive(Debug, Clone)]
 pub struct CellResult {
     pub cell: Cell,
     pub outcome: Result<Report, String>,
+    /// Fig-13-style active-instance series; `None` unless retained.
+    pub series: Option<TimeSeries>,
 }
 
 impl CellResult {
@@ -37,10 +44,11 @@ pub struct SweepReport {
     pub threads: usize,
 }
 
-/// Grid-level aggregate for one policy spec, over its succeeded cells.
+/// Grid-level aggregate for one scenario variant (policy × axis values),
+/// over its succeeded cells.
 #[derive(Debug, Clone)]
-pub struct PolicyAggregate {
-    pub policy: PolicySpec,
+pub struct VariantAggregate {
+    pub spec: CellSpec,
     pub runs: usize,
     pub interruptions: Summary,
     pub interrupted_vms: Summary,
@@ -59,15 +67,17 @@ impl SweepReport {
         self.cells.iter().filter(|c| c.outcome.is_err()).count()
     }
 
-    /// Per-policy aggregates in first-appearance (cell-id) order.
-    pub fn aggregates(&self) -> Vec<PolicyAggregate> {
-        let mut aggs: Vec<PolicyAggregate> = Vec::new();
+    /// Per-variant aggregates in first-appearance (cell-id) order. With no
+    /// axes declared every variant is one policy, so this degenerates to
+    /// the per-policy grouping of the pre-axis sweep.
+    pub fn aggregates(&self) -> Vec<VariantAggregate> {
+        let mut aggs: Vec<VariantAggregate> = Vec::new();
         for cell in &self.cells {
-            let idx = match aggs.iter().position(|a| a.policy == cell.cell.policy) {
+            let idx = match aggs.iter().position(|a| a.spec == cell.cell.spec) {
                 Some(i) => i,
                 None => {
-                    aggs.push(PolicyAggregate {
-                        policy: cell.cell.policy,
+                    aggs.push(VariantAggregate {
+                        spec: cell.cell.spec,
                         runs: 0,
                         interruptions: Summary::new(),
                         interrupted_vms: Summary::new(),
@@ -92,13 +102,19 @@ impl SweepReport {
     }
 
     /// Per-cell rows (one line per cell, id order). Deterministic: no wall
-    /// times, no thread counts.
+    /// times, no thread counts. Axis values get their own columns
+    /// (empty when the cell runs the substrate default).
     pub fn cells_csv(&self) -> Csv {
         let mut csv = Csv::new(&[
             "cell",
             "policy",
             "alpha",
             "seed",
+            "substrate",
+            "victim",
+            "spot_warning",
+            "spot_hib_timeout",
+            "spot_behavior",
             "status",
             "error",
             "clock_end",
@@ -115,13 +131,20 @@ impl SweepReport {
             "min_interruption_s",
         ]);
         for c in &self.cells {
-            let alpha = c.cell.policy.alpha().map(fmt_num).unwrap_or_default();
+            let spec = &c.cell.spec;
+            let mut row = vec![
+                c.cell.id.to_string(),
+                spec.policy.name().to_string(),
+                spec.policy.alpha().map(fmt_num).unwrap_or_default(),
+                c.cell.seed.to_string(),
+                spec.substrate.name().to_string(),
+                spec.victim.map(|v| v.name().to_string()).unwrap_or_default(),
+                spec.spot.warning_time.map(fmt_num).unwrap_or_default(),
+                spec.spot.hibernation_timeout.map(fmt_num).unwrap_or_default(),
+                spec.spot.behavior.map(|b| b.name().to_string()).unwrap_or_default(),
+            ];
             match &c.outcome {
-                Ok(r) => csv.push(vec![
-                    c.cell.id.to_string(),
-                    c.cell.policy.name().to_string(),
-                    alpha,
-                    c.cell.seed.to_string(),
+                Ok(r) => row.extend(vec![
                     "ok".into(),
                     String::new(),
                     fmt_num(r.clock_end),
@@ -138,23 +161,18 @@ impl SweepReport {
                     fmt_num(r.spot.min_interruption_secs),
                 ]),
                 Err(e) => {
-                    let mut row = vec![
-                        c.cell.id.to_string(),
-                        c.cell.policy.name().to_string(),
-                        alpha,
-                        c.cell.seed.to_string(),
-                        "failed".into(),
-                        e.clone(),
-                    ];
+                    row.push("failed".into());
+                    row.push(e.clone());
                     row.extend(std::iter::repeat(String::new()).take(12));
-                    csv.push(row);
                 }
             }
+            csv.push(row);
         }
         csv
     }
 
-    /// Grid-level aggregate document (per-policy `stats::Summary` moments).
+    /// Grid-level aggregate document: per-variant `stats::Summary` moments
+    /// keyed by policy plus every axis value.
     pub fn aggregate_json(&self) -> Json {
         let stat_obj = |s: &Summary| {
             let mut o = JsonObj::new();
@@ -164,17 +182,32 @@ impl SweepReport {
             o.set("stddev", Json::Num(s.stddev()));
             Json::Obj(o)
         };
+        let opt_num = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
         let mut root = JsonObj::new();
         root.set("cells", Json::Num(self.total() as f64));
         root.set("failed", Json::Num(self.failed() as f64));
-        let mut policies = Vec::new();
+        let mut variants = Vec::new();
         for a in self.aggregates() {
+            let spec = &a.spec;
             let mut o = JsonObj::new();
-            o.set("policy", Json::Str(a.policy.name().to_string()));
-            match a.policy.alpha() {
-                Some(alpha) => o.set("alpha", Json::Num(alpha)),
-                None => o.set("alpha", Json::Null),
-            };
+            o.set("policy", Json::Str(spec.policy.name().to_string()));
+            o.set("alpha", opt_num(spec.policy.alpha()));
+            o.set("substrate", Json::Str(spec.substrate.name().to_string()));
+            o.set(
+                "victim",
+                spec.victim
+                    .map(|v| Json::Str(v.name().to_string()))
+                    .unwrap_or(Json::Null),
+            );
+            o.set("spot_warning", opt_num(spec.spot.warning_time));
+            o.set("spot_hibernation_timeout", opt_num(spec.spot.hibernation_timeout));
+            o.set(
+                "spot_behavior",
+                spec.spot
+                    .behavior
+                    .map(|b| Json::Str(b.name().to_string()))
+                    .unwrap_or(Json::Null),
+            );
             o.set("runs", Json::Num(a.runs as f64));
             o.set("interruptions", stat_obj(&a.interruptions));
             o.set("interrupted_vms", stat_obj(&a.interrupted_vms));
@@ -184,16 +217,17 @@ impl SweepReport {
                 "max_interruptions_per_vm",
                 Json::Num(a.max_interruptions_per_vm as f64),
             );
-            policies.push(Json::Obj(o));
+            variants.push(Json::Obj(o));
         }
-        root.set("policies", Json::Arr(policies));
+        root.set("policies", Json::Arr(variants));
         Json::Obj(root)
     }
 
     /// Terminal rendering of the grid-level aggregates.
     pub fn aggregate_table(&self) -> TextTable {
-        let mut t = TextTable::new("SWEEP AGGREGATE (per policy, over seeds)")
+        let mut t = TextTable::new("SWEEP AGGREGATE (per variant, over seeds)")
             .column("Policy", Align::Left)
+            .column("Variant", Align::Left)
             .column("Runs", Align::Right)
             .column("Interruptions", Align::Right)
             .column("+/- sd", Align::Right)
@@ -202,7 +236,8 @@ impl SweepReport {
             .column("Max per VM", Align::Right);
         for a in self.aggregates() {
             t.push(vec![
-                a.policy.name().to_string(),
+                a.spec.policy.name().to_string(),
+                a.spec.variant_label(),
                 a.runs.to_string(),
                 fmt_num(a.interruptions.mean()),
                 fmt_num(a.interruptions.stddev()),
@@ -213,12 +248,22 @@ impl SweepReport {
         }
         t
     }
+
+    /// Retained per-cell time series as `(cell_id, csv)` pairs in id
+    /// order (cells that matched the sweep's retention filter).
+    pub fn retained_series_csvs(&self) -> Vec<(usize, Csv)> {
+        self.cells
+            .iter()
+            .filter_map(|c| c.series.as_ref().map(|s| (c.cell.id, s.to_csv())))
+            .collect()
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::SpotStats;
+    use crate::engine::{SpotStats, VictimPolicy};
+    use crate::sweep::grid::{PolicySpec, SpotOverride, Substrate};
 
     fn fake_report(policy: &'static str, interruptions: u64) -> Report {
         Report {
@@ -248,25 +293,29 @@ mod tests {
     }
 
     fn sample_report() -> SweepReport {
-        let p = PolicySpec::FirstFit;
-        let q = PolicySpec::Hlem { adjusted: true, alpha: -0.5 };
+        let p = CellSpec::comparison(PolicySpec::FirstFit);
+        let q = CellSpec::comparison(PolicySpec::Hlem { adjusted: true, alpha: -0.5 });
         SweepReport {
             cells: vec![
                 CellResult {
-                    cell: Cell { id: 0, seed: 1, policy: p },
+                    cell: Cell { id: 0, seed: 1, spec: p },
                     outcome: Ok(fake_report("first-fit", 3)),
+                    series: None,
                 },
                 CellResult {
-                    cell: Cell { id: 1, seed: 1, policy: q },
+                    cell: Cell { id: 1, seed: 1, spec: q },
                     outcome: Ok(fake_report("hlem-vmp-adjusted", 1)),
+                    series: None,
                 },
                 CellResult {
-                    cell: Cell { id: 2, seed: 2, policy: p },
+                    cell: Cell { id: 2, seed: 2, spec: p },
                     outcome: Ok(fake_report("first-fit", 5)),
+                    series: None,
                 },
                 CellResult {
-                    cell: Cell { id: 3, seed: 2, policy: q },
+                    cell: Cell { id: 3, seed: 2, spec: q },
                     outcome: Err("boom".into()),
+                    series: None,
                 },
             ],
             threads: 2,
@@ -282,21 +331,60 @@ mod tests {
         assert_eq!(csv.len(), 4);
         let text = csv.to_string();
         assert!(text.contains("failed,boom"));
-        assert!(text.starts_with("cell,policy,alpha,seed,status"));
+        assert!(text.starts_with(
+            "cell,policy,alpha,seed,substrate,victim,spot_warning,spot_hib_timeout,\
+             spot_behavior,status"
+        ));
+        // Default variants leave the axis columns empty but name the
+        // substrate.
+        assert!(text.contains(",comparison,,,,,ok,"));
     }
 
     #[test]
-    fn aggregates_group_by_policy_and_skip_failures() {
+    fn csv_axis_columns_carry_values() {
+        let mut rep = sample_report();
+        rep.cells[0].cell.spec = CellSpec {
+            substrate: Substrate::Trace,
+            policy: PolicySpec::FirstFit,
+            spot: SpotOverride {
+                warning_time: Some(60.0),
+                hibernation_timeout: Some(900.0),
+                behavior: Some(crate::vm::InterruptionBehavior::Terminate),
+            },
+            victim: Some(VictimPolicy::Youngest),
+        };
+        let text = rep.cells_csv().to_string();
+        assert!(
+            text.contains(",trace,youngest,60,900,terminate,ok,"),
+            "axis columns missing: {text}"
+        );
+    }
+
+    #[test]
+    fn aggregates_group_by_variant_and_skip_failures() {
         let rep = sample_report();
         let aggs = rep.aggregates();
         assert_eq!(aggs.len(), 2);
-        assert_eq!(aggs[0].policy, PolicySpec::FirstFit);
+        assert_eq!(aggs[0].spec.policy, PolicySpec::FirstFit);
         assert_eq!(aggs[0].runs, 2);
         assert_eq!(aggs[0].interruptions.mean(), 4.0);
         assert_eq!(aggs[0].max_interruptions_per_vm, 5);
         // The failed hlem cell is excluded from moments but keeps the group.
         assert_eq!(aggs[1].runs, 1);
         assert_eq!(aggs[1].interruptions.mean(), 1.0);
+    }
+
+    #[test]
+    fn same_policy_different_axis_values_stay_separate_groups() {
+        let mut rep = sample_report();
+        // Cell 2 shares cell 0's policy but runs a different spot warning:
+        // a distinct variant, so a distinct aggregate group.
+        rep.cells[2].cell.spec.spot.warning_time = Some(60.0);
+        let aggs = rep.aggregates();
+        assert_eq!(aggs.len(), 3);
+        assert_eq!(aggs[0].runs, 1);
+        assert_eq!(aggs[2].runs, 1);
+        assert_eq!(aggs[2].spec.spot.warning_time, Some(60.0));
     }
 
     #[test]
@@ -314,6 +402,12 @@ mod tests {
             policies[0].path(&["interruptions", "mean"]).unwrap().as_f64(),
             Some(4.0)
         );
+        assert_eq!(
+            policies[0].path(&["substrate"]).unwrap().as_str(),
+            Some("comparison")
+        );
+        assert!(policies[0].path(&["victim"]).is_some());
+        assert!(policies[0].path(&["spot_warning"]).is_some());
     }
 
     #[test]
@@ -321,5 +415,20 @@ mod tests {
         let t = sample_report().aggregate_table().render();
         assert!(t.contains("first-fit"));
         assert!(t.contains("hlem-vmp-adjusted"));
+    }
+
+    #[test]
+    fn retained_series_export_in_id_order() {
+        let mut rep = sample_report();
+        let mut s = TimeSeries::new(&["spot_running"]);
+        s.push(0.0, vec![1.0]);
+        s.push(10.0, vec![2.0]);
+        rep.cells[2].series = Some(s.clone());
+        rep.cells[0].series = Some(s);
+        let out = rep.retained_series_csvs();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].0, 0);
+        assert_eq!(out[1].0, 2);
+        assert!(out[0].1.to_string().starts_with("time,spot_running"));
     }
 }

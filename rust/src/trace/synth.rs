@@ -17,7 +17,7 @@ use crate::stats::{Dist, Rng};
 use super::event::{MachineEvent, MachineEventKind, TaskEvent, TaskEventKind, Trace};
 
 /// Generator configuration (defaults give a laptop-scale 2-day trace).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SynthConfig {
     pub seed: u64,
     pub machines: usize,

@@ -6,7 +6,7 @@
 //! injected on top.
 
 use crate::cloudlet::Cloudlet;
-use crate::engine::Engine;
+use crate::engine::{Engine, EngineConfig};
 use crate::infra::HostSpec;
 use crate::stats::Rng;
 use crate::vm::{SpotConfig, Vm, VmSpec};
@@ -14,7 +14,7 @@ use crate::vm::{SpotConfig, Vm, VmSpec};
 use super::event::{MachineEventKind, TaskEventKind, Trace};
 
 /// Conversion parameters.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct WorkloadConfig {
     pub seed: u64,
     /// PEs of a machine with normalized capacity 1.0.
@@ -29,8 +29,9 @@ pub struct WorkloadConfig {
     pub spot_instances: usize,
     /// Fixed spot workload durations in seconds (paper: 20 h / 40 h).
     pub spot_durations: Vec<f64>,
-    /// Spot hibernation timeout.
-    pub spot_hibernation_timeout: f64,
+    /// Spot-instance lifecycle settings for the injected spots (paper
+    /// §VII-D: hibernation behavior, EC2-style warning, 6 h timeout).
+    pub spot: SpotConfig,
     /// Waiting time for persistent trace VMs.
     pub waiting_time: f64,
     /// Cap on trace VMs created (0 = unlimited) - scale knob.
@@ -51,11 +52,29 @@ impl Default for WorkloadConfig {
             group_size: 6,
             spot_instances: 2_000,
             spot_durations: vec![20.0 * 3_600.0, 40.0 * 3_600.0],
-            spot_hibernation_timeout: 6.0 * 3_600.0,
+            spot: SpotConfig::hibernate()
+                .with_min_running(300.0)
+                .with_warning(120.0)
+                .with_hibernation_timeout(6.0 * 3_600.0),
             waiting_time: 1_800.0,
             max_trace_vms: 0,
         }
     }
+}
+
+/// Engine knobs of the trace substrate (minute scheduling ticks, ~10 min
+/// hibernation re-probes - the source of the paper's ~32-minute average
+/// interruption durations). Single source of truth shared by
+/// `experiments::trace_sim::run` and the sweep driver's `trace_sim` cells.
+pub fn trace_engine_config(sample_interval: f64) -> EngineConfig {
+    let mut cfg = EngineConfig::default();
+    cfg.sample_interval = sample_interval;
+    cfg.scheduling_interval = 60.0;
+    cfg.vm_destruction_delay = 1.0;
+    cfg.resubmit_cooldown = 600.0;
+    cfg.retry_interval = 600.0;
+    cfg.max_log_events = 200_000;
+    cfg
 }
 
 /// What was built (reported alongside the run).
@@ -170,12 +189,8 @@ pub fn build(engine: &mut Engine, trace: &Trace, cfg: &WorkloadConfig) -> Worklo
             .with_ram(1024.0 * pes as f64)
             .with_bw(100.0 * pes as f64)
             .with_storage(10_000.0);
-        let spot_cfg = SpotConfig::hibernate()
-            .with_min_running(300.0)
-            .with_warning(120.0)
-            .with_hibernation_timeout(cfg.spot_hibernation_timeout);
         let vm = engine.submit_vm(
-            Vm::spot(0, spec, spot_cfg)
+            Vm::spot(0, spec, cfg.spot)
                 .with_persistent(cfg.waiting_time)
                 .with_delay(submit_at),
         );

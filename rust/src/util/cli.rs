@@ -1,7 +1,10 @@
 //! Tiny CLI flag parser (`clap` is unavailable offline, DESIGN.md §7).
 //!
 //! Supports `--flag`, `--key value`, `--key=value` and positional args.
-//! Unknown flags are an error so typos fail loudly.
+//! Unknown flags are an error so typos fail loudly. Flags may repeat:
+//! [`Args::get`] returns the last occurrence (usual CLI override
+//! semantics) and [`Args::get_all`] returns every occurrence in order
+//! (for accumulating flags like `--axis`).
 
 use std::collections::BTreeMap;
 
@@ -9,7 +12,7 @@ use std::collections::BTreeMap;
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub positional: Vec<String>,
-    flags: BTreeMap<String, String>,
+    flags: BTreeMap<String, Vec<String>>,
     known: Vec<String>,
 }
 
@@ -54,7 +57,7 @@ impl Args {
                     }
                     String::from("true")
                 };
-                out.flags.insert(name, value);
+                out.flags.entry(name).or_default().push(value);
             } else {
                 out.positional.push(a.clone());
             }
@@ -70,7 +73,17 @@ impl Args {
 
     pub fn get(&self, name: &str) -> Option<&str> {
         debug_assert!(self.known.iter().any(|k| k == name), "flag --{name} not declared");
-        self.flags.get(name).map(|s| s.as_str())
+        self.flags.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// Every occurrence of a repeatable flag, in command-line order
+    /// (empty when absent).
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        debug_assert!(self.known.iter().any(|k| k == name), "flag --{name} not declared");
+        self.flags
+            .get(name)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
     }
 
     pub fn get_or(&self, name: &str, default: &str) -> String {
@@ -165,6 +178,17 @@ mod tests {
         assert_eq!(a.get_f64("seed", 1.5).unwrap(), 1.5);
         let a = Args::parse(&argv(&["--seed", "abc"]), &specs()).unwrap();
         assert!(a.get_u64("seed", 0).is_err());
+    }
+
+    /// Repeated flags accumulate: `get` takes the last, `get_all` keeps
+    /// every occurrence in order (`--axis` semantics).
+    #[test]
+    fn repeated_flags_accumulate() {
+        let a = Args::parse(&argv(&["--seed", "1", "--seed", "2", "--seed=3"]), &specs()).unwrap();
+        assert_eq!(a.get("seed"), Some("3"), "get() returns the last occurrence");
+        assert_eq!(a.get_all("seed"), vec!["1", "2", "3"]);
+        let a = Args::parse(&argv(&[]), &specs()).unwrap();
+        assert!(a.get_all("seed").is_empty());
     }
 
     /// `--threads` / `--seeds` sweep flags: positive integers only.

@@ -13,6 +13,28 @@ pub enum InterruptionBehavior {
     Hibernate,
 }
 
+impl InterruptionBehavior {
+    /// Stable lowercase name (CLI vocabulary, sweep-axis values and
+    /// artifact columns).
+    pub fn name(&self) -> &'static str {
+        match self {
+            InterruptionBehavior::Terminate => "terminate",
+            InterruptionBehavior::Hibernate => "hibernate",
+        }
+    }
+
+    /// Parse one behavior name (`--axis spot.behavior=...` vocabulary).
+    pub fn parse(s: &str) -> Result<InterruptionBehavior, String> {
+        match s.trim() {
+            "terminate" => Ok(InterruptionBehavior::Terminate),
+            "hibernate" => Ok(InterruptionBehavior::Hibernate),
+            other => Err(format!(
+                "unknown interruption behavior '{other}' (expected terminate | hibernate)"
+            )),
+        }
+    }
+}
+
 /// Per-spot-instance timing parameters (paper §V-C list):
 ///
 /// - `min_running_time`: spot instances cannot be interrupted due to
@@ -50,6 +72,11 @@ impl SpotConfig {
 
     pub fn terminate() -> Self {
         SpotConfig { behavior: InterruptionBehavior::Terminate, ..Default::default() }
+    }
+
+    pub fn with_behavior(mut self, behavior: InterruptionBehavior) -> Self {
+        self.behavior = behavior;
+        self
     }
 
     pub fn with_warning(mut self, secs: f64) -> Self {
@@ -92,5 +119,15 @@ mod tests {
         let c = SpotConfig::default();
         assert_eq!(c.behavior, InterruptionBehavior::Terminate);
         assert_eq!(c.warning_time, 120.0);
+    }
+
+    #[test]
+    fn behavior_names_round_trip() {
+        for b in [InterruptionBehavior::Terminate, InterruptionBehavior::Hibernate] {
+            assert_eq!(InterruptionBehavior::parse(b.name()).unwrap(), b);
+        }
+        assert!(InterruptionBehavior::parse("evaporate").is_err());
+        let c = SpotConfig::hibernate().with_behavior(InterruptionBehavior::Terminate);
+        assert_eq!(c.behavior, InterruptionBehavior::Terminate);
     }
 }

@@ -1,13 +1,16 @@
 //! Determinism parity for the sweep subsystem: the same `SweepSpec` run
 //! with 1, 2 and 8 threads must produce byte-identical serialized sweep
-//! reports, and `compare::run_multi` (now implemented on the sweep
-//! driver) must match the pre-sweep sequential loop bit-for-bit.
+//! reports - including mixed-axis grids spanning both substrates - and
+//! `compare::run_multi` (now implemented on the sweep driver) must match
+//! the pre-sweep sequential loop bit-for-bit.
 
 use std::sync::Arc;
 
 use cloudmarket::config::scenario::ComparisonConfig;
 use cloudmarket::experiments::compare;
-use cloudmarket::sweep::{self, PolicySpec, PrebuildCache, SweepSpec};
+use cloudmarket::sweep::{
+    self, PolicySpec, PrebuildCache, ScenarioAxis, SeriesFilter, Substrate, SweepSpec,
+};
 
 /// The §VII-E scenario with a shortened horizon so the grid stays cheap
 /// in debug-mode test runs (interruptions still occur well before 600 s).
@@ -104,6 +107,60 @@ fn prebuilds_are_shared_per_seed() {
     assert!(Arc::ptr_eq(&plans[3], &plans[5]));
 }
 
+/// A mixed-axis grid (spot-config × alpha × substrate) with per-cell
+/// series retention: 1/2/8-thread runs serialize byte-identically, cell
+/// enumeration covers the full cartesian product, and retained series are
+/// themselves thread-count-independent.
+#[test]
+fn mixed_axis_grid_byte_identical_across_thread_counts() {
+    let spec = || {
+        let mut spec = SweepSpec::new(small_cfg())
+            .with_seeds(vec![20_250_710])
+            .with_policies(vec![
+                PolicySpec::FirstFit,
+                PolicySpec::Hlem { adjusted: true, alpha: -0.5 },
+            ])
+            .with_axis(ScenarioAxis::HlemAlpha(vec![-0.5, -0.2]))
+            .with_axis(ScenarioAxis::SpotWarning(vec![2.0, 120.0]))
+            .with_axis(ScenarioAxis::Substrate(vec![
+                Substrate::Comparison,
+                Substrate::Trace,
+            ]))
+            .with_series_retention(SeriesFilter::parse("policy=first-fit").unwrap());
+        // Tiny trace substrate so the grid stays cheap in debug runs.
+        spec.trace.synth.machines = 10;
+        spec.trace.synth.days = 0.05;
+        spec.trace.synth.tasks_per_hour = 120.0;
+        spec.trace.workload.spot_instances = 20;
+        spec.trace.workload.spot_durations = vec![300.0, 600.0];
+        spec.trace.workload.max_trace_vms = 50;
+        spec
+    };
+    // Variants: [ff, adj(-0.5), adj(-0.2)] x 2 warnings x 2 substrates.
+    assert_eq!(spec().cell_count(), 12);
+
+    let render = |threads: usize| {
+        let report = sweep::run(&spec(), threads);
+        assert_eq!(report.total(), 12);
+        assert_eq!(report.failed(), 0, "no cell may fail");
+        let series: Vec<(usize, String)> = report
+            .retained_series_csvs()
+            .into_iter()
+            .map(|(id, csv)| (id, csv.to_string()))
+            .collect();
+        assert_eq!(series.len(), 4, "first-fit cells across substrates retain series");
+        (report.cells_csv().to_string(), report.aggregate_json().to_string_pretty(), series)
+    };
+    let single = render(1);
+    // Axis values reach the artifacts: both substrates and both warning
+    // values appear as their own CSV columns.
+    assert!(single.0.contains(",trace,"), "trace substrate rows missing:\n{}", single.0);
+    assert!(single.0.contains(",comparison,"), "comparison rows missing");
+    assert!(single.0.contains(",120,"), "warning axis value missing");
+    assert_eq!(single, render(2), "2-thread sweep output differs from single-threaded");
+    assert_eq!(single, render(8), "8-thread sweep output differs from single-threaded");
+}
+
 /// Explicit-list cells run too and land after the grid in id order.
 #[test]
 fn explicit_cells_run_after_grid() {
@@ -115,5 +172,5 @@ fn explicit_cells_run_after_grid() {
     assert_eq!(report.total(), 2);
     assert_eq!(report.failed(), 0);
     assert_eq!(report.cells[1].cell.seed, 20_250_711);
-    assert_eq!(report.cells[1].cell.policy.name(), "hlem-vmp-adjusted");
+    assert_eq!(report.cells[1].cell.policy().name(), "hlem-vmp-adjusted");
 }
