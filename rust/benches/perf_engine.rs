@@ -21,7 +21,7 @@
 use cloudmarket::allocation::{AllocationPolicy, BestFit, FirstFit, HlemVmp, RoundRobin, WorstFit};
 use cloudmarket::benchkit::{banner, black_box, fast_mode, Bencher};
 use cloudmarket::config::scenario::{build_comparison_workload, ComparisonConfig};
-use cloudmarket::core::{EntityId, EventQueue, SimEvent};
+use cloudmarket::core::{EntityId, EventQueue, HeapEventQueue, SimEvent};
 use cloudmarket::engine::{Engine, EngineConfig, World};
 use cloudmarket::infra::HostSpec;
 use cloudmarket::stats::Rng;
@@ -70,14 +70,42 @@ fn main() {
     let fast = fast_mode();
     let mut b = Bencher::new();
 
-    // --- event queue ----------------------------------------------------
+    // --- event queue: slab store vs BinaryHeap oracle -------------------
+    // A realistic payload size (Tag-shaped, ~48 bytes): the slab queue's
+    // win is not moving payloads through heap sifts, so a u32 payload
+    // would understate it.
+    type FatPayload = [u64; 6];
     let n_events = 100_000usize;
     let mut rng = Rng::new(3);
     let times: Vec<f64> = (0..n_events).map(|_| rng.uniform(0.0, 1e6)).collect();
-    b.bench("event queue push+pop 100k", Some(n_events as f64), || {
+
+    // Ordering parity before timing: slab and oracle must agree on the
+    // full (time, seq) pop order over the random schedule.
+    {
         let mut q: EventQueue<u32> = EventQueue::new();
+        let mut oracle: HeapEventQueue<u32> = HeapEventQueue::new();
         for (i, &t) in times.iter().enumerate() {
             q.push(SimEvent::new(t, EntityId::Kernel, EntityId::Kernel, i as u32));
+            oracle.push(SimEvent::new(t, EntityId::Kernel, EntityId::Kernel, i as u32));
+        }
+        loop {
+            match (q.pop(), oracle.pop()) {
+                (None, None) => break,
+                (Some(a), Some(b)) => assert_eq!(
+                    (a.time, a.seq, a.data),
+                    (b.time, b.seq, b.data),
+                    "slab/oracle pop-order parity violated"
+                ),
+                (a, b) => panic!("queue lengths diverged: {:?} vs {:?}", a.is_some(), b.is_some()),
+            }
+        }
+        println!("parity: slab queue == BinaryHeap oracle over {n_events} random events");
+    }
+
+    let slab_row = b.bench("event queue push+pop 100k [slab]", Some(n_events as f64), || {
+        let mut q: EventQueue<FatPayload> = EventQueue::new();
+        for (i, &t) in times.iter().enumerate() {
+            q.push(SimEvent::new(t, EntityId::Kernel, EntityId::Kernel, [i as u64; 6]));
         }
         let mut count = 0;
         while q.pop().is_some() {
@@ -85,6 +113,22 @@ fn main() {
         }
         black_box(count);
     });
+    let oracle_row =
+        b.bench("event queue push+pop 100k [heap-oracle]", Some(n_events as f64), || {
+            let mut q: HeapEventQueue<FatPayload> = HeapEventQueue::new();
+            for (i, &t) in times.iter().enumerate() {
+                q.push(SimEvent::new(t, EntityId::Kernel, EntityId::Kernel, [i as u64; 6]));
+            }
+            let mut count = 0;
+            while q.pop().is_some() {
+                count += 1;
+            }
+            black_box(count);
+        });
+    println!(
+        "    -> slab queue {:.2}x over BinaryHeap oracle",
+        oracle_row.median.as_secs_f64() / slab_row.median.as_secs_f64().max(1e-12)
+    );
     let mut batch: Vec<SimEvent<u32>> = Vec::new();
     b.bench("event queue pop_due_into batch drain 100k", Some(n_events as f64), || {
         let mut q: EventQueue<u32> = EventQueue::new();

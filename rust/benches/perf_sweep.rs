@@ -6,14 +6,27 @@
 //! headline determinism property: 1-thread and N-thread sweeps serialize
 //! to byte-identical artifacts.
 //!
+//! On top of the timed throughput rows, one instrumented run of a large
+//! (>= 512 cells) mixed-substrate grid records the driver's **phase
+//! breakdown** - prebuild-busy vs cell-exec-busy vs merge wall time, plus
+//! `first-cell-done` (the effective serial prefix). With lazy worker-side
+//! prebuilds the first cell completes after roughly one prebuild + one
+//! cell, even though the grid spans dozens of (substrate, seed) prebuild
+//! pairs; CI gates on `first-cell-done` staying a small fraction of the
+//! wall time.
+//!
 //! Results land in `BENCH_sweep.json` at the repo root (regenerate with
 //! `cargo bench --bench perf_sweep`; CI refreshes and validates it next
-//! to `BENCH_engine.json`). Set `BENCH_FAST=1` for the CI smoke (fewer
-//! seeds, shorter horizon).
+//! to `BENCH_engine.json`, and gates cells/sec against the committed
+//! baseline - see docs/perf.md). Set `BENCH_FAST=1` for the CI smoke
+//! (fewer seeds, shorter horizon).
 
-use cloudmarket::benchkit::{banner, black_box, fast_mode, Bencher};
+use std::time::Duration;
+
+use cloudmarket::benchkit::{banner, black_box, fast_mode, BenchResult, Bencher};
 use cloudmarket::config::scenario::ComparisonConfig;
-use cloudmarket::sweep::{self, PolicySpec, SweepSpec};
+use cloudmarket::sweep::{self, PolicySpec, ScenarioAxis, Substrate, SweepSpec};
+use cloudmarket::vm::InterruptionBehavior;
 
 fn main() {
     banner("PERF: sweep driver fan-out (cells/sec)");
@@ -30,7 +43,8 @@ fn main() {
     let n_threads = sweep::default_threads().max(2);
 
     // Determinism smoke before timing: the merged output must not depend
-    // on the thread count.
+    // on the thread count (with lazy prebuilds: nor on which worker wins
+    // a prebuild race).
     let single = sweep::run(&spec, 1);
     assert_eq!(single.failed(), 0, "sweep cells failed");
     let multi = sweep::run(&spec, n_threads);
@@ -60,6 +74,63 @@ fn main() {
     let rows = b.results();
     let speedup = rows[0].median.as_secs_f64() / rows[1].median.as_secs_f64().max(1e-12);
     println!("    -> fan-out speedup {speedup:.1}x at {n_threads} threads");
+
+    // --- large mixed-substrate grid: lazy-prebuild phase breakdown ------
+    banner("PERF: lazy prebuilds on a large mixed-substrate grid");
+    let big_horizon = if fast { 240.0 } else { 420.0 };
+    let big_scenario = ComparisonConfig { terminate_at: big_horizon, ..Default::default() };
+    // 22 seeds x 3 policies x 2 warnings x 2 behaviors x 2 substrates
+    // = 528 cells over 44 distinct (substrate, seed) prebuild pairs.
+    let mut big = SweepSpec::new(big_scenario)
+        .with_seed_range(20_250_710, 22)
+        .with_policies(PolicySpec::paper())
+        .with_axis(ScenarioAxis::SpotWarning(vec![2.0, 120.0]))
+        .with_axis(ScenarioAxis::SpotBehavior(vec![
+            InterruptionBehavior::Hibernate,
+            InterruptionBehavior::Terminate,
+        ]))
+        .with_axis(ScenarioAxis::Substrate(vec![Substrate::Comparison, Substrate::Trace]));
+    // Tiny trace substrate so per-seed trace generation stays measurable
+    // without dominating the bench.
+    big.trace.synth.machines = 10;
+    big.trace.synth.days = 0.05;
+    big.trace.synth.tasks_per_hour = 120.0;
+    big.trace.workload.spot_instances = 20;
+    big.trace.workload.spot_durations = vec![300.0, 600.0];
+    big.trace.workload.max_trace_vms = 50;
+    let big_cells = big.cell_count();
+    assert!(big_cells >= 512, "large-grid case must cover >= 512 cells (got {big_cells})");
+
+    let (report, timing) = sweep::run_with_timing(&big, n_threads);
+    assert_eq!(report.total(), big_cells);
+    assert_eq!(report.failed(), 0, "large-grid sweep cells failed");
+    let phase = |name: &str, took: Duration, items: Option<f64>| {
+        // Clamp to 1ns so the JSON validator's median_ns > 0 invariant
+        // holds even for near-instant phases.
+        let took = took.max(Duration::from_nanos(1));
+        BenchResult {
+            name: format!("sweep {big_cells} cells mixed phase[{name}]"),
+            iterations: 1,
+            median: took,
+            mean: took,
+            p95: took,
+            min: took,
+            items_per_iter: items,
+        }
+    };
+    b.record(phase("wall", timing.wall, Some(big_cells as f64)));
+    b.record(phase("prebuild-busy", timing.prebuild_busy, None));
+    b.record(phase("cell-exec-busy", timing.cell_busy, None));
+    b.record(phase("merge", timing.merge, None));
+    b.record(phase("first-cell-done", timing.first_cell_done, None));
+    println!(
+        "    -> {} prebuilds built lazily on {n_threads} threads; first cell done at {:.1}% \
+         of wall ({:?} of {:?})",
+        timing.prebuilds_built,
+        100.0 * timing.first_cell_done.as_secs_f64() / timing.wall.as_secs_f64().max(1e-12),
+        timing.first_cell_done,
+        timing.wall,
+    );
 
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()

@@ -135,6 +135,14 @@ impl Bencher {
         &self.results
     }
 
+    /// Record an externally measured result (e.g. one phase of a single
+    /// instrumented run, where re-running the workload per iteration would
+    /// be prohibitive) alongside the timed benches.
+    pub fn record(&mut self, result: BenchResult) {
+        println!("{}", result.render());
+        self.results.push(result);
+    }
+
     /// Append another bencher's recorded results (lets differently-tuned
     /// benchers - e.g. a `heavy()` end-to-end pass - share one JSON
     /// trajectory file).

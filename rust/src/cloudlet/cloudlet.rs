@@ -119,30 +119,43 @@ pub fn allocate_mips(
     vm_pes: u32,
     active: &[(super::CloudletId, u32)],
 ) -> Vec<(super::CloudletId, f64)> {
+    let mut out = Vec::new();
+    allocate_mips_into(kind, vm_mips, vm_pes, active, &mut out);
+    out
+}
+
+/// [`allocate_mips`] writing into a reusable buffer (cleared first) - the
+/// engine's per-tick MIPS recompute calls this once per running VM, so
+/// the allocating variant would pay one heap allocation per VM per tick.
+pub fn allocate_mips_into(
+    kind: SchedulerKind,
+    vm_mips: f64,
+    vm_pes: u32,
+    active: &[(super::CloudletId, u32)],
+    out: &mut Vec<(super::CloudletId, f64)>,
+) {
+    out.clear();
     if active.is_empty() {
-        return Vec::new();
+        return;
     }
     match kind {
         SchedulerKind::TimeShared => {
             // Equal split of total VM capacity among all active cloudlets.
             let share = vm_mips / active.len() as f64;
-            active.iter().map(|&(id, _)| (id, share)).collect()
+            out.extend(active.iter().map(|&(id, _)| (id, share)));
         }
         SchedulerKind::SpaceShared => {
             // PE-exclusive in submission order; MIPS proportional to PEs.
             let per_pe = if vm_pes == 0 { 0.0 } else { vm_mips / vm_pes as f64 };
             let mut free = vm_pes;
-            active
-                .iter()
-                .map(|&(id, pes)| {
-                    if free >= pes {
-                        free -= pes;
-                        (id, per_pe * pes as f64)
-                    } else {
-                        (id, 0.0)
-                    }
-                })
-                .collect()
+            out.extend(active.iter().map(|&(id, pes)| {
+                if free >= pes {
+                    free -= pes;
+                    (id, per_pe * pes as f64)
+                } else {
+                    (id, 0.0)
+                }
+            }));
         }
     }
 }

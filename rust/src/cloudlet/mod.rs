@@ -3,7 +3,7 @@
 pub mod cloudlet;
 pub mod utilization;
 
-pub use cloudlet::{allocate_mips, Cloudlet, CloudletState, SchedulerKind};
+pub use cloudlet::{allocate_mips, allocate_mips_into, Cloudlet, CloudletState, SchedulerKind};
 pub use utilization::UtilizationModel;
 
 /// Index of a cloudlet in the world's cloudlet arena.

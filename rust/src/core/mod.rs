@@ -18,5 +18,5 @@ pub mod queue;
 pub mod sim;
 
 pub use event::{EntityId, SimEvent};
-pub use queue::EventQueue;
+pub use queue::{EventQueue, HeapEventQueue};
 pub use sim::Simulation;

@@ -1,15 +1,196 @@
-//! Future event queue: a binary min-heap on (time, seq).
+//! Future event queue: a slab-backed event store driven by an index
+//! min-heap on (time, seq).
 //!
 //! CloudSim Plus keeps a timestamp-sorted *future* queue and moves due
 //! events to a *deferred* queue for processing (paper Fig. 1 / §V-A(a)).
-//! A single heap with FIFO tiebreak gives identical processing order with
-//! one less copy; `pop_due` exposes the deferred-queue batch semantics
-//! where the engine needs them (all events at the same timestamp).
+//! A single priority queue with FIFO tiebreak gives identical processing
+//! order with one less copy; `pop_due` exposes the deferred-queue batch
+//! semantics where the engine needs them (all events at the same
+//! timestamp).
+//!
+//! # Storage layout (§Perf: kernel hot path)
+//!
+//! Events are stored **once** in a slab (`Vec<Option<SimEvent<T>>>` with a
+//! free list); the heap orders 24-byte `(time, seq, slot)` keys. Heap
+//! sift operations therefore move fixed-size keys instead of whole event
+//! payloads (`SimEvent<Tag>` is several times larger), and a popped slot
+//! is recycled by the next push, so a steady-state simulation stops
+//! growing the slab after its high-water mark. [`HeapEventQueue`] retains
+//! the pre-slab `BinaryHeap`-of-payloads implementation as the `_scan`
+//! -style oracle: `tests/properties.rs` pins the two to the same
+//! (time, seq) pop order over randomized op sequences, and
+//! `benches/perf_engine.rs` times slab vs. oracle.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 use super::event::SimEvent;
+
+/// Heap key: everything the ordering needs, payload left in the slab.
+#[derive(Debug, Clone, Copy)]
+struct HeapKey {
+    time: f64,
+    seq: u64,
+    slot: u32,
+}
+
+/// Strict "fires before" on (time, seq). Times are asserted finite at
+/// scheduling time, so `<` is a total order here.
+#[inline]
+fn before(a: &HeapKey, b: &HeapKey) -> bool {
+    a.time < b.time || (a.time == b.time && a.seq < b.seq)
+}
+
+/// Future event queue (slab store + index min-heap).
+pub struct EventQueue<T> {
+    /// Event storage; `None` marks a free slot awaiting reuse.
+    slab: Vec<Option<SimEvent<T>>>,
+    /// Free slot indices (LIFO: reuse the hottest slot first).
+    free: Vec<u32>,
+    /// Min-heap of keys into `slab`, ordered by `before` (time, seq).
+    heap: Vec<HeapKey>,
+    next_seq: u64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        EventQueue { slab: Vec::new(), free: Vec::new(), heap: Vec::new(), next_seq: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Slab high-water mark (diagnostics: slots allocated, free or live).
+    pub fn slab_len(&self) -> usize {
+        self.slab.len()
+    }
+
+    /// Schedule an event; assigns the FIFO sequence number. Panics on a
+    /// non-finite or NaN timestamp (always a simulation bug).
+    pub fn push(&mut self, mut ev: SimEvent<T>) {
+        assert!(ev.time.is_finite(), "event scheduled at non-finite time");
+        ev.seq = self.next_seq;
+        self.next_seq += 1;
+        let key = HeapKey { time: ev.time, seq: ev.seq, slot: 0 };
+        let slot = match self.free.pop() {
+            Some(s) => {
+                debug_assert!(self.slab[s as usize].is_none(), "free slot occupied");
+                self.slab[s as usize] = Some(ev);
+                s
+            }
+            None => {
+                let s = self.slab.len();
+                assert!(s < u32::MAX as usize, "event slab overflow");
+                self.slab.push(Some(ev));
+                s as u32
+            }
+        };
+        self.heap.push(HeapKey { slot, ..key });
+        self.sift_up(self.heap.len() - 1);
+    }
+
+    /// Timestamp of the earliest pending event.
+    pub fn next_time(&self) -> Option<f64> {
+        self.heap.first().map(|k| k.time)
+    }
+
+    /// Pop the earliest event.
+    pub fn pop(&mut self) -> Option<SimEvent<T>> {
+        if self.heap.is_empty() {
+            return None;
+        }
+        let key = self.heap.swap_remove(0);
+        if !self.heap.is_empty() {
+            self.sift_down(0);
+        }
+        let ev = self.slab[key.slot as usize].take().expect("event slab slot empty (queue bug)");
+        self.free.push(key.slot);
+        Some(ev)
+    }
+
+    /// Append every event with `time <= t` (the deferred-queue batch) to
+    /// `out`, in (time, seq) order. Allocation-free when `out` has
+    /// capacity - the engine loop reuses one buffer across all ticks.
+    /// `out` is *not* cleared (appends after existing contents).
+    pub fn pop_due_into(&mut self, t: f64, out: &mut Vec<SimEvent<T>>) {
+        while matches!(self.heap.first(), Some(k) if k.time <= t) {
+            out.push(self.pop().expect("non-empty heap must pop"));
+        }
+    }
+
+    /// Pop every event with `time <= t` (the deferred-queue batch),
+    /// in (time, seq) order. Thin allocating wrapper around
+    /// [`Self::pop_due_into`].
+    pub fn pop_due(&mut self, t: f64) -> Vec<SimEvent<T>> {
+        let mut out = Vec::new();
+        self.pop_due_into(t, &mut out);
+        out
+    }
+
+    /// Drop all pending events (sequence numbering continues; buffers keep
+    /// their capacity).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.slab.clear();
+        self.free.clear();
+    }
+
+    /// [`Self::clear`] plus a sequence restart: a recycled queue behaves
+    /// exactly like a fresh one while keeping its slab/heap allocations
+    /// (sweep workers reuse one queue across consecutive cells).
+    pub fn reset(&mut self) {
+        self.clear();
+        self.next_seq = 0;
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if before(&self.heap[i], &self.heap[parent]) {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let left = 2 * i + 1;
+            if left >= n {
+                break;
+            }
+            let right = left + 1;
+            let mut smallest = left;
+            if right < n && before(&self.heap[right], &self.heap[left]) {
+                smallest = right;
+            }
+            if before(&self.heap[smallest], &self.heap[i]) {
+                self.heap.swap(i, smallest);
+                i = smallest;
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// oracle
+// ---------------------------------------------------------------------
 
 struct HeapEntry<T> {
     time: f64,
@@ -41,21 +222,25 @@ impl<T> PartialOrd for HeapEntry<T> {
     }
 }
 
-/// Future event queue.
-pub struct EventQueue<T> {
+/// The pre-slab future event queue: a `BinaryHeap` carrying whole event
+/// payloads. Kept as the ordering oracle for [`EventQueue`] (the PR-1
+/// `_scan` pattern): same API, same (time, seq) pop order, used by the
+/// randomized property test and as the bench baseline. Not used on the
+/// production hot path.
+pub struct HeapEventQueue<T> {
     heap: BinaryHeap<HeapEntry<T>>,
     next_seq: u64,
 }
 
-impl<T> Default for EventQueue<T> {
+impl<T> Default for HeapEventQueue<T> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl<T> EventQueue<T> {
+impl<T> HeapEventQueue<T> {
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), next_seq: 0 }
+        HeapEventQueue { heap: BinaryHeap::new(), next_seq: 0 }
     }
 
     pub fn len(&self) -> usize {
@@ -66,8 +251,7 @@ impl<T> EventQueue<T> {
         self.heap.is_empty()
     }
 
-    /// Schedule an event; assigns the FIFO sequence number. Panics on a
-    /// non-finite or NaN timestamp (always a simulation bug).
+    /// Schedule an event (same contract as [`EventQueue::push`]).
     pub fn push(&mut self, mut ev: SimEvent<T>) {
         assert!(ev.time.is_finite(), "event scheduled at non-finite time");
         ev.seq = self.next_seq;
@@ -75,29 +259,21 @@ impl<T> EventQueue<T> {
         self.heap.push(HeapEntry { time: ev.time, seq: ev.seq, ev });
     }
 
-    /// Timestamp of the earliest pending event.
     pub fn next_time(&self) -> Option<f64> {
         self.heap.peek().map(|e| e.time)
     }
 
-    /// Pop the earliest event.
     pub fn pop(&mut self) -> Option<SimEvent<T>> {
         self.heap.pop().map(|e| e.ev)
     }
 
-    /// Append every event with `time <= t` (the deferred-queue batch) to
-    /// `out`, in (time, seq) order. Allocation-free when `out` has
-    /// capacity - the engine loop reuses one buffer across all ticks.
-    /// `out` is *not* cleared (appends after existing contents).
+    /// Same batch semantics as [`EventQueue::pop_due_into`].
     pub fn pop_due_into(&mut self, t: f64, out: &mut Vec<SimEvent<T>>) {
         while matches!(self.heap.peek(), Some(e) if e.time <= t) {
-            out.push(self.heap.pop().unwrap().ev);
+            out.push(self.heap.pop().expect("non-empty heap must pop").ev);
         }
     }
 
-    /// Pop every event with `time <= t` (the deferred-queue batch),
-    /// in (time, seq) order. Thin allocating wrapper around
-    /// [`Self::pop_due_into`].
     pub fn pop_due(&mut self, t: f64) -> Vec<SimEvent<T>> {
         let mut out = Vec::new();
         self.pop_due_into(t, &mut out);
@@ -176,5 +352,56 @@ mod tests {
     fn rejects_nan_time() {
         let mut q = EventQueue::new();
         q.push(ev(f64::NAN, 0));
+    }
+
+    /// Steady-state push/pop cycles recycle slab slots instead of growing
+    /// the store.
+    #[test]
+    fn slab_slots_are_recycled() {
+        let mut q = EventQueue::new();
+        for round in 0..100 {
+            for d in 0..4 {
+                q.push(ev(round as f64 + d as f64 * 0.1, d));
+            }
+            while q.pop().is_some() {}
+        }
+        assert!(q.slab_len() <= 4, "slab grew past its high-water mark: {}", q.slab_len());
+    }
+
+    /// `reset` restarts sequence numbering; `clear` does not.
+    #[test]
+    fn reset_restarts_sequences() {
+        let mut q = EventQueue::new();
+        q.push(ev(1.0, 0));
+        q.clear();
+        q.push(ev(1.0, 1));
+        assert_eq!(q.pop().unwrap().seq, 1);
+        q.reset();
+        q.push(ev(1.0, 2));
+        assert_eq!(q.pop().unwrap().seq, 0);
+    }
+
+    /// Smoke parity with the retained `BinaryHeap` oracle (the full
+    /// randomized pinning lives in `tests/properties.rs`).
+    #[test]
+    fn matches_heap_oracle_on_interleaved_ops() {
+        let mut q = EventQueue::new();
+        let mut oracle = HeapEventQueue::new();
+        let times = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0, 5.0, 3.0];
+        for (i, &t) in times.iter().enumerate() {
+            q.push(ev(t, i as u32));
+            oracle.push(ev(t, i as u32));
+        }
+        for _ in 0..4 {
+            let (a, b) = (q.pop().unwrap(), oracle.pop().unwrap());
+            assert_eq!((a.time, a.seq, a.data), (b.time, b.seq, b.data));
+        }
+        let (a, b) = (q.pop_due(5.0), oracle.pop_due(5.0));
+        assert_eq!(
+            a.iter().map(|e| (e.seq, e.data)).collect::<Vec<_>>(),
+            b.iter().map(|e| (e.seq, e.data)).collect::<Vec<_>>()
+        );
+        assert_eq!(q.next_time(), oracle.next_time());
+        assert_eq!(q.len(), oracle.len());
     }
 }

@@ -25,8 +25,23 @@ impl<T> Simulation<T> {
     /// `min_dt` mirrors `new CloudSim(0.5)`: a floor on how soon after the
     /// current clock a new event may fire.
     pub fn new(min_dt: f64) -> Self {
+        Self::with_queue(min_dt, EventQueue::new())
+    }
+
+    /// [`Self::new`] with a recycled event queue: the queue is reset to a
+    /// pristine state but keeps its slab/heap allocations, so a sweep
+    /// worker running consecutive cells pays the queue's high-water
+    /// allocation once instead of per cell.
+    pub fn with_queue(min_dt: f64, mut queue: EventQueue<T>) -> Self {
         assert!(min_dt >= 0.0 && min_dt.is_finite());
-        Simulation { clock: 0.0, queue: EventQueue::new(), min_dt, terminate_at: None, processed: 0 }
+        queue.reset();
+        Simulation { clock: 0.0, queue, min_dt, terminate_at: None, processed: 0 }
+    }
+
+    /// Tear the simulation down, handing the event queue back for reuse
+    /// (see [`Self::with_queue`]).
+    pub fn into_queue(self) -> EventQueue<T> {
+        self.queue
     }
 
     pub fn clock(&self) -> f64 {
@@ -209,6 +224,22 @@ mod tests {
         assert!(batch.is_empty());
         assert_eq!(sim.clock(), 10.0);
         assert!(sim.is_finished());
+    }
+
+    /// A recycled queue starts a new simulation from a pristine state
+    /// (fresh sequence numbers, empty heap), keeping only its capacity.
+    #[test]
+    fn recycled_queue_behaves_like_fresh() {
+        let mut sim: Simulation<u32> = Simulation::new(0.0);
+        sim.schedule(1.0, Kernel, Kernel, 1);
+        sim.next_event().unwrap();
+        let q = sim.into_queue();
+        let mut sim2: Simulation<u32> = Simulation::with_queue(0.0, q);
+        assert_eq!(sim2.clock(), 0.0);
+        sim2.schedule(2.0, Kernel, Kernel, 7);
+        let e = sim2.next_event().unwrap();
+        assert_eq!((e.data, e.seq, sim2.clock()), (7, 0, 2.0));
+        assert!(sim2.is_finished());
     }
 
     #[test]

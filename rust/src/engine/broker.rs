@@ -52,15 +52,23 @@ impl Broker {
 
     /// Retry order after capacity frees up: waiting on-demand first (they
     /// are the cause of interruptions and must not starve), then hibernated
-    /// spots (resubmittingList), then waiting spots - each FIFO.
+    /// spots (resubmittingList), then waiting spots - each FIFO. Clears
+    /// and fills `out` - the engine reuses one buffer across all
+    /// `retry_pending` invocations (every deallocation fires one).
     ///
     /// `is_spot(vm)` is supplied by the engine to keep the broker free of
     /// world borrows.
-    pub fn retry_order(&self, is_spot: impl Fn(VmId) -> bool) -> Vec<VmId> {
-        let mut out = Vec::with_capacity(self.waiting.len() + self.resubmitting.len());
+    pub fn retry_order_into(&self, is_spot: impl Fn(VmId) -> bool, out: &mut Vec<VmId>) {
+        out.clear();
         out.extend(self.waiting.iter().map(|&(v, _)| v).filter(|&v| !is_spot(v)));
         out.extend(self.resubmitting.iter().copied());
         out.extend(self.waiting.iter().map(|&(v, _)| v).filter(|&v| is_spot(v)));
+    }
+
+    /// Allocating convenience wrapper around [`Self::retry_order_into`].
+    pub fn retry_order(&self, is_spot: impl Fn(VmId) -> bool) -> Vec<VmId> {
+        let mut out = Vec::with_capacity(self.waiting.len() + self.resubmitting.len());
+        self.retry_order_into(is_spot, &mut out);
         out
     }
 

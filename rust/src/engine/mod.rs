@@ -45,10 +45,21 @@
 //! `BENCH_engine.json` at the repo root (regenerate with
 //! `cargo bench --bench perf_engine`; CI refreshes and validates it).
 //!
-//! The event loop itself drains the future queue in same-timestamp
-//! batches through a reusable buffer (`EventQueue::pop_due_into`),
-//! eliminating the per-tick `Vec` allocation of the deferred-queue
-//! pattern while preserving (time, seq) processing order.
+//! # The zero-allocation hot loop (§Perf: kernel + recorder)
+//!
+//! The event loop drains the future queue in same-timestamp batches
+//! through a reusable buffer (`EventQueue::pop_due_into`), and the queue
+//! itself stores events once in a slab while its min-heap orders compact
+//! `(time, seq, slot)` keys ([`crate::core::queue`]); (time, seq)
+//! processing order is pinned against the retained `BinaryHeap` oracle.
+//! Steady-state per-event work allocates nothing: the MIPS recompute, the
+//! retry ordering, cloudlet state sweeps and the metrics sample all run
+//! on engine-held scratch buffers, and the recorder appends samples into
+//! a flat column-major [`crate::metrics::TimeSeries`]. Workers that run
+//! many engines back to back (the sweep driver) recycle all of those
+//! buffers across cells via [`EngineScratch`] /
+//! [`Engine::with_scratch`] / [`Engine::into_scratch`]. The full hot-path
+//! walk-through lives in `docs/perf.md`.
 //!
 //! The engine deliberately stays single-threaded (DES determinism);
 //! multi-run parallelism lives one layer up in [`crate::sweep`], which
@@ -64,8 +75,8 @@ pub mod tag;
 pub mod world;
 
 use crate::allocation::AllocationPolicy;
-use crate::cloudlet::{allocate_mips, Cloudlet, CloudletId, CloudletState};
-use crate::core::{EntityId, SimEvent, Simulation};
+use crate::cloudlet::{allocate_mips_into, Cloudlet, CloudletId, CloudletState};
+use crate::core::{EntityId, EventQueue, SimEvent, Simulation};
 use crate::infra::{DcId, HostId, HostSpec};
 use crate::metrics::{LifecycleKind, Recorder};
 use crate::vm::{InterruptionBehavior, Vm, VmId, VmState};
@@ -78,6 +89,37 @@ pub use world::World;
 
 /// Window an on-demand VM evicted by a host removal stays requeued.
 const OD_REQUEUE_WINDOW: f64 = 3600.0;
+
+/// Reusable engine buffers, threaded through consecutive engines by a
+/// long-lived worker (§Perf: sweep workers reset these between cells
+/// instead of reallocating them per cell).
+///
+/// [`Engine::with_scratch`] adopts the buffers (cleared; the recorder and
+/// event queue are reset to their pristine state, keeping capacity) and
+/// [`Engine::into_scratch`] hands them back after the run. A default
+/// `EngineScratch` makes `with_scratch` equivalent to [`Engine::new`].
+#[derive(Default)]
+pub struct EngineScratch {
+    recorder: Option<Recorder>,
+    queue: Option<EventQueue<Tag>>,
+    run_list: Vec<CloudletId>,
+    remaining: Vec<f64>,
+    mips: Vec<f64>,
+    slot_of: Vec<usize>,
+    running_vms: Vec<VmId>,
+    finished: Vec<usize>,
+    event_batch: Vec<SimEvent<Tag>>,
+    active: Vec<(CloudletId, u32)>,
+    shares: Vec<(CloudletId, f64)>,
+    retry: Vec<VmId>,
+    cloudlets: Vec<CloudletId>,
+}
+
+impl EngineScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
 
 /// The simulation engine (leader object of a run).
 pub struct Engine {
@@ -107,32 +149,111 @@ pub struct Engine {
     /// Events of the in-flight batch still awaiting dispatch (counts as
     /// pending activity for the sampling keep-alive check).
     batch_pending: usize,
+    /// Reusable (cloudlet, pes) buffer for the per-VM MIPS recompute.
+    active_scratch: Vec<(CloudletId, u32)>,
+    /// Reusable (cloudlet, mips) buffer for `allocate_mips_into` results.
+    share_scratch: Vec<(CloudletId, f64)>,
+    /// Reusable retry-order buffer (`retry_pending`).
+    retry_scratch: Vec<VmId>,
+    /// Reusable VM-cloudlet-list buffer (place/pause/cancel).
+    cloudlet_scratch: Vec<CloudletId>,
 }
 
 impl Engine {
     pub fn new(config: EngineConfig, policy: Box<dyn AllocationPolicy>) -> Self {
+        Self::with_scratch(config, policy, EngineScratch::new())
+    }
+
+    /// [`Engine::new`] adopting recycled buffers from a previous engine
+    /// (see [`EngineScratch`]). Behavior is identical to a fresh engine -
+    /// the buffers only carry capacity, never data.
+    pub fn with_scratch(
+        config: EngineConfig,
+        policy: Box<dyn AllocationPolicy>,
+        scratch: EngineScratch,
+    ) -> Self {
         config.validate().expect("invalid engine config");
-        let recorder = Recorder::new(config.max_log_events);
+        let EngineScratch {
+            recorder,
+            queue,
+            mut run_list,
+            mut remaining,
+            mut mips,
+            mut slot_of,
+            mut running_vms,
+            mut finished,
+            mut event_batch,
+            mut active,
+            mut shares,
+            mut retry,
+            mut cloudlets,
+        } = scratch;
+        let recorder = match recorder {
+            Some(mut r) => {
+                r.reset(config.max_log_events);
+                r
+            }
+            None => Recorder::new(config.max_log_events),
+        };
+        let sim = match queue {
+            Some(q) => Simulation::with_queue(config.min_dt, q),
+            None => Simulation::new(config.min_dt),
+        };
+        run_list.clear();
+        remaining.clear();
+        mips.clear();
+        slot_of.clear();
+        running_vms.clear();
+        finished.clear();
+        event_batch.clear();
+        active.clear();
+        shares.clear();
+        retry.clear();
+        cloudlets.clear();
         Engine {
-            sim: Simulation::new(config.min_dt),
+            sim,
             world: World::new(),
             broker: Broker::new(),
             recorder,
             config,
             policy,
             backend: Box::new(progress::BatchedBackend),
-            run_list: Vec::new(),
-            remaining: Vec::new(),
-            mips: Vec::new(),
-            slot_of: Vec::new(),
+            run_list,
+            remaining,
+            mips,
+            slot_of,
             arrays_dirty: true,
             last_update: 0.0,
             next_tick_time: f64::INFINITY,
-            running_vms: Vec::new(),
+            running_vms,
             next_sample: 0.0,
-            finished_scratch: Vec::new(),
-            event_batch: Vec::new(),
+            finished_scratch: finished,
+            event_batch,
             batch_pending: 0,
+            active_scratch: active,
+            share_scratch: shares,
+            retry_scratch: retry,
+            cloudlet_scratch: cloudlets,
+        }
+    }
+
+    /// Tear the engine down, handing its reusable buffers back for the
+    /// next [`Engine::with_scratch`].
+    pub fn into_scratch(self) -> EngineScratch {
+        EngineScratch {
+            recorder: Some(self.recorder),
+            queue: Some(self.sim.into_queue()),
+            run_list: self.run_list,
+            remaining: self.remaining,
+            mips: self.mips,
+            slot_of: self.slot_of,
+            running_vms: self.running_vms,
+            finished: self.finished_scratch,
+            event_batch: self.event_batch,
+            active: self.active_scratch,
+            shares: self.share_scratch,
+            retry: self.retry_scratch,
+            cloudlets: self.cloudlet_scratch,
         }
     }
 
@@ -382,10 +503,13 @@ impl Engine {
             self.recorder.log(now, v, LifecycleKind::Allocated);
         }
 
-        // Start queued cloudlets / resume paused ones.
-        let cls = self.world.vms[v].cloudlets.clone();
+        // Start queued cloudlets / resume paused ones (the VM's cloudlet
+        // list is copied into reusable scratch, not cloned per placement).
+        let mut cls = std::mem::take(&mut self.cloudlet_scratch);
+        cls.clear();
+        cls.extend_from_slice(&self.world.vms[v].cloudlets);
         let mut any_active = false;
-        for c in cls {
+        for &c in &cls {
             let cl = &mut self.world.cloudlets[c];
             match cl.state {
                 CloudletState::Queued | CloudletState::Paused => {
@@ -398,6 +522,7 @@ impl Engine {
                 _ => {}
             }
         }
+        self.cloudlet_scratch = cls;
         self.arrays_dirty = true;
         if any_active {
             self.arm_tick(now);
@@ -572,26 +697,32 @@ impl Engine {
     }
 
     fn pause_cloudlets(&mut self, v: VmId) {
-        let cls = self.world.vms[v].cloudlets.clone();
-        for c in cls {
+        let mut cls = std::mem::take(&mut self.cloudlet_scratch);
+        cls.clear();
+        cls.extend_from_slice(&self.world.vms[v].cloudlets);
+        for &c in &cls {
             let cl = &mut self.world.cloudlets[c];
             if cl.state == CloudletState::Running {
                 cl.state = CloudletState::Paused;
             }
         }
+        self.cloudlet_scratch = cls;
         self.arrays_dirty = true;
     }
 
     fn cancel_cloudlets(&mut self, v: VmId) {
         let now = self.sim.clock();
-        let cls = self.world.vms[v].cloudlets.clone();
-        for c in cls {
+        let mut cls = std::mem::take(&mut self.cloudlet_scratch);
+        cls.clear();
+        cls.extend_from_slice(&self.world.vms[v].cloudlets);
+        for &c in &cls {
             let cl = &mut self.world.cloudlets[c];
             if !cl.is_done() {
                 cl.state = CloudletState::Canceled;
                 cl.finished_at = Some(now);
             }
         }
+        self.cloudlet_scratch = cls;
         self.arrays_dirty = true;
     }
 
@@ -603,9 +734,12 @@ impl Engine {
     fn retry_pending(&mut self) {
         let now = self.sim.clock();
         let cooldown = self.config.resubmit_cooldown;
-        let vms = &self.world.vms;
-        let order = self.broker.retry_order(|v| vms[v].is_spot());
-        for v in order {
+        let mut order = std::mem::take(&mut self.retry_scratch);
+        {
+            let vms = &self.world.vms;
+            self.broker.retry_order_into(|v| vms[v].is_spot(), &mut order);
+        }
+        for &v in &order {
             if let (VmState::Hibernated, Some(h)) =
                 (self.world.vms[v].state, self.world.vms[v].hibernated_at)
             {
@@ -625,6 +759,7 @@ impl Engine {
             }
             self.try_allocate(v, false);
         }
+        self.retry_scratch = order;
     }
 
     // ------------------------------------------------------------------
@@ -677,30 +812,38 @@ impl Engine {
     }
 
     /// Recompute per-cloudlet MIPS from each running VM's scheduler and the
-    /// cloudlets' utilization models at time `t`.
+    /// cloudlets' utilization models at time `t`. Runs on reusable scratch
+    /// buffers - the pre-overhaul implementation allocated two `Vec`s per
+    /// running VM on every progress tick.
     fn recompute_mips(&mut self, t: f64) {
         for m in self.mips.iter_mut() {
             *m = 0.0;
         }
         let kind = self.config.scheduler;
+        let mut active = std::mem::take(&mut self.active_scratch);
+        let mut shares = std::mem::take(&mut self.share_scratch);
         for &v in &self.running_vms {
             let vm = &self.world.vms[v];
-            let active: Vec<(CloudletId, u32)> = vm
-                .cloudlets
-                .iter()
-                .filter(|&&c| self.world.cloudlets[c].state == CloudletState::Running)
-                .map(|&c| (c, self.world.cloudlets[c].pes))
-                .collect();
+            active.clear();
+            active.extend(
+                vm.cloudlets
+                    .iter()
+                    .filter(|&&c| self.world.cloudlets[c].state == CloudletState::Running)
+                    .map(|&c| (c, self.world.cloudlets[c].pes)),
+            );
             if active.is_empty() {
                 continue;
             }
-            for (c, share) in allocate_mips(kind, vm.spec.total_mips(), vm.spec.pes, &active) {
+            allocate_mips_into(kind, vm.spec.total_mips(), vm.spec.pes, &active, &mut shares);
+            for &(c, share) in &shares {
                 let slot = self.slot_of[c];
                 if slot != usize::MAX {
                     self.mips[slot] = share * self.world.cloudlets[c].utilization.at(t);
                 }
             }
         }
+        self.active_scratch = active;
+        self.share_scratch = shares;
     }
 
     /// Advance all running cloudlets to `now`; handle completions.
@@ -861,25 +1004,20 @@ impl Engine {
 
     fn sample(&mut self) {
         let now = self.sim.clock();
-        let (od_run, spot_run) = self.world.count_by_state(VmState::Running);
-        let (od_warn, spot_warn) = self.world.count_by_state(VmState::InterruptWarned);
-        let (_, hib) = self.world.count_by_state(VmState::Hibernated);
-        let (od_wait, spot_wait) = self.world.count_by_state(VmState::Waiting);
-        let (used_pes, total_pes) = self.world.pe_usage();
-        let (used_ram, total_ram) = self.world.ram_usage();
-        self.recorder.series.push(
-            now,
-            vec![
-                (od_run + od_warn) as f64,
-                (spot_run + spot_warn) as f64,
-                hib as f64,
-                (od_wait + spot_wait) as f64,
-                used_pes as f64,
-                total_pes as f64,
-                if total_ram > 0.0 { used_ram / total_ram } else { 0.0 },
-                if total_pes > 0 { used_pes as f64 / total_pes as f64 } else { 0.0 },
-            ],
-        );
+        // One VM walk + one host walk (`World::state_sample`), one stack
+        // row into the column-major series: a sample allocates nothing.
+        let s = self.world.state_sample();
+        let row = [
+            (s.od_running + s.od_warned) as f64,
+            (s.spot_running + s.spot_warned) as f64,
+            s.hibernated as f64,
+            (s.od_waiting + s.spot_waiting) as f64,
+            s.used_pes as f64,
+            s.total_pes as f64,
+            if s.total_ram > 0.0 { s.used_ram / s.total_ram } else { 0.0 },
+            if s.total_pes > 0 { s.used_pes as f64 / s.total_pes as f64 } else { 0.0 },
+        ];
+        self.recorder.series.push(now, &row);
         self.next_sample = now + self.config.sample_interval;
         self.sim.schedule_at(
             self.next_sample,
@@ -1076,6 +1214,43 @@ mod tests {
         assert_eq!(intervals.len(), 2);
         assert_eq!(intervals[1].host, h2);
         assert!(report.spot.interruptions >= 1);
+    }
+
+    /// An engine built on recycled scratch behaves exactly like a fresh
+    /// one - even when the previous run left data in every buffer.
+    #[test]
+    fn scratch_reuse_is_behavior_neutral() {
+        let run = |scratch: EngineScratch| {
+            let mut cfg = EngineConfig::default();
+            cfg.min_dt = 0.1;
+            cfg.vm_destruction_delay = 0.0;
+            cfg.resubmit_cooldown = 1.0;
+            let mut e = Engine::with_scratch(cfg, Box::new(FirstFit::new()), scratch);
+            let dc = e.add_datacenter("dc0", 1.0);
+            e.add_host(dc, HostSpec::new(8, 1000.0, 16_384.0, 10_000.0, 1_000_000.0));
+            let spot_cfg = SpotConfig::hibernate()
+                .with_min_running(0.0)
+                .with_warning(0.0)
+                .with_hibernation_timeout(1_000.0);
+            let spot = e
+                .submit_vm(Vm::spot(0, VmSpec::new(1000.0, 8), spot_cfg).with_persistent(1_000.0));
+            e.submit_cloudlet(Cloudlet::new(0, 80_000.0, 8).with_vm(spot));
+            let od = e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 8)).with_delay(5.0));
+            e.submit_cloudlet(Cloudlet::new(0, 64_000.0, 8).with_vm(od));
+            e.terminate_at(200.0);
+            let report = e.run();
+            let series_csv = e.recorder.series.to_csv().to_string();
+            let events = e.recorder.events.len();
+            (report, series_csv, events, e.into_scratch())
+        };
+        let (r1, s1, ev1, scratch) = run(EngineScratch::new());
+        let (r2, s2, ev2, _) = run(scratch);
+        assert_eq!(r1.events_processed, r2.events_processed);
+        assert_eq!(r1.clock_end, r2.clock_end);
+        assert_eq!(r1.spot.interruptions, r2.spot.interruptions);
+        assert_eq!(r1.spot.redeployments, r2.spot.redeployments);
+        assert_eq!(s1, s2, "sampled series must be identical on recycled scratch");
+        assert_eq!(ev1, ev2);
     }
 
     /// Deterministic: identical seeds/config produce identical reports.

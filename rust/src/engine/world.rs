@@ -25,6 +25,23 @@ use crate::vm::{Vm, VmId, VmState};
 
 use super::index::PlacementIndex;
 
+/// One-pass sampling snapshot (see [`World::state_sample`]).
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct StateSample {
+    pub od_running: usize,
+    pub spot_running: usize,
+    pub od_warned: usize,
+    pub spot_warned: usize,
+    /// Spot VMs currently hibernated (on-demand VMs never hibernate).
+    pub hibernated: usize,
+    pub od_waiting: usize,
+    pub spot_waiting: usize,
+    pub used_pes: u32,
+    pub total_pes: u32,
+    pub used_ram: f64,
+    pub total_ram: f64,
+}
+
 /// Arena of datacenters, hosts, VMs and cloudlets.
 #[derive(Default)]
 pub struct World {
@@ -357,6 +374,57 @@ impl World {
         Ok(())
     }
 
+    /// One-pass sampling snapshot for the engine's `Sample` tick: all the
+    /// per-state VM counts plus aggregate host utilization in a single VM
+    /// walk and a single host walk. Replaces four [`Self::count_by_state`]
+    /// walks + [`Self::pe_usage`] + [`Self::ram_usage`] per sample; the
+    /// accumulation order per counter is identical to the individual
+    /// queries, so sampled series stay bit-identical.
+    pub fn state_sample(&self) -> StateSample {
+        let mut s = StateSample::default();
+        for vm in &self.vms {
+            let spot = vm.is_spot();
+            match vm.state {
+                VmState::Running => {
+                    if spot {
+                        s.spot_running += 1;
+                    } else {
+                        s.od_running += 1;
+                    }
+                }
+                VmState::InterruptWarned => {
+                    if spot {
+                        s.spot_warned += 1;
+                    } else {
+                        s.od_warned += 1;
+                    }
+                }
+                // The sampled series only charts spot hibernations (the
+                // on-demand count of the old query was discarded).
+                VmState::Hibernated => {
+                    if spot {
+                        s.hibernated += 1;
+                    }
+                }
+                VmState::Waiting => {
+                    if spot {
+                        s.spot_waiting += 1;
+                    } else {
+                        s.od_waiting += 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+        for h in self.active_hosts() {
+            s.used_pes += h.used_pes;
+            s.total_pes += h.spec.pes;
+            s.used_ram += h.used_ram;
+            s.total_ram += h.spec.ram;
+        }
+        s
+    }
+
     /// Count of VMs in a given state, split (on-demand, spot).
     pub fn count_by_state(&self, state: VmState) -> (usize, usize) {
         let mut od = 0;
@@ -491,6 +559,44 @@ mod tests {
         assert_eq!(w.first_fit_host(&probe), Some(h));
         assert_eq!(w.hosts[h].created_at, 9.0);
         w.check_index().unwrap();
+    }
+
+    /// The one-pass sampling snapshot agrees with the individual queries
+    /// it replaces.
+    #[test]
+    fn state_sample_matches_individual_queries() {
+        let mut w = World::new();
+        let dc = w.add_datacenter("dc", 1.0);
+        for pes in [8u32, 4, 16] {
+            w.add_host(dc, HostSpec::new(pes, 1000.0, 16_384.0, 5_000.0, 200_000.0), 0.0);
+        }
+        let od = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, 2)));
+        let sp = w.add_vm(Vm::spot(0, VmSpec::new(1000.0, 1), SpotConfig::hibernate()));
+        let hib = w.add_vm(Vm::spot(0, VmSpec::new(1000.0, 1), SpotConfig::hibernate()));
+        w.commit_vm(0, od);
+        w.commit_vm(1, sp);
+        w.vms[od].transition(VmState::Running);
+        w.vms[sp].transition(VmState::Running);
+        w.vms[sp].transition(VmState::InterruptWarned);
+        w.vms[hib].transition(VmState::Running);
+        w.vms[hib].transition(VmState::InterruptWarned);
+        w.vms[hib].transition(VmState::Hibernated);
+        w.deactivate_host(2, Some(1.0));
+
+        let s = w.state_sample();
+        let (od_run, spot_run) = w.count_by_state(VmState::Running);
+        let (od_warn, spot_warn) = w.count_by_state(VmState::InterruptWarned);
+        let (_, spot_hib) = w.count_by_state(VmState::Hibernated);
+        let (od_wait, spot_wait) = w.count_by_state(VmState::Waiting);
+        let (used_pes, total_pes) = w.pe_usage();
+        let (used_ram, total_ram) = w.ram_usage();
+        assert_eq!(
+            (s.od_running, s.spot_running, s.od_warned, s.spot_warned),
+            (od_run, spot_run, od_warn, spot_warn)
+        );
+        assert_eq!((s.hibernated, s.od_waiting, s.spot_waiting), (spot_hib, od_wait, spot_wait));
+        assert_eq!((s.used_pes, s.total_pes), (used_pes, total_pes));
+        assert_eq!((s.used_ram.to_bits(), s.total_ram.to_bits()), (used_ram.to_bits(), total_ram.to_bits()));
     }
 
     #[test]

@@ -104,9 +104,11 @@ pub fn fig13_csv(outcomes: &[Outcome]) -> Csv {
 
     // Series share sampling config; align on the shortest.
     let rows = outcomes.iter().map(|o| o.series.len()).min().unwrap_or(0);
-    let od_cols: Vec<Vec<f64>> =
+    // Columns are contiguous borrows into each outcome's series (the
+    // column-major layout): no per-policy gather allocation.
+    let od_cols: Vec<&[f64]> =
         outcomes.iter().map(|o| o.series.column("od_running").unwrap()).collect();
-    let spot_cols: Vec<Vec<f64>> =
+    let spot_cols: Vec<&[f64]> =
         outcomes.iter().map(|o| o.series.column("spot_running").unwrap()).collect();
     for i in 0..rows {
         let mut row = vec![fmt_num(outcomes[0].series.times()[i])];

@@ -68,19 +68,24 @@ pub struct Recorder {
     pub alloc_failures: u64,
 }
 
+/// Column schema of the sampled state series - static, so a recorder's
+/// schema is interned once and shared (via `Arc`) by every series taken
+/// from it.
+pub const SERIES_COLUMNS: [&str; 8] = [
+    "od_running",
+    "spot_running",
+    "hibernated",
+    "waiting",
+    "used_pes",
+    "total_pes",
+    "ram_used_frac",
+    "cpu_used_frac",
+];
+
 impl Recorder {
     pub fn new(max_events: usize) -> Self {
         Recorder {
-            series: TimeSeries::new(&[
-                "od_running",
-                "spot_running",
-                "hibernated",
-                "waiting",
-                "used_pes",
-                "total_pes",
-                "ram_used_frac",
-                "cpu_used_frac",
-            ]),
+            series: TimeSeries::new(&SERIES_COLUMNS),
             events: Vec::new(),
             max_events,
             dropped_events: 0,
@@ -91,6 +96,39 @@ impl Recorder {
             alloc_attempts: 0,
             alloc_failures: 0,
         }
+    }
+
+    /// Wipe all recorded data back to the `new` state while keeping the
+    /// series/event buffers allocated - sweep workers reuse one recorder
+    /// across consecutive cells instead of reallocating it per cell.
+    ///
+    /// Destructures `Recorder` exhaustively so a field added later fails
+    /// to compile here instead of silently escaping the reset (which
+    /// would leak state across recycled cells and break the sweep's
+    /// byte-identical-artifacts contract).
+    pub fn reset(&mut self, max_events: usize) {
+        let Recorder {
+            series,
+            events,
+            max_events: cap,
+            dropped_events,
+            interruptions,
+            hibernations,
+            spot_terminations,
+            redeployments,
+            alloc_attempts,
+            alloc_failures,
+        } = self;
+        series.clear();
+        events.clear();
+        *cap = max_events;
+        *dropped_events = 0;
+        *interruptions = 0;
+        *hibernations = 0;
+        *spot_terminations = 0;
+        *redeployments = 0;
+        *alloc_attempts = 0;
+        *alloc_failures = 0;
     }
 
     pub fn log(&mut self, time: f64, vm: VmId, kind: LifecycleKind) {
@@ -107,12 +145,12 @@ impl Recorder {
     }
 
     /// Move the sampled series out of the recorder (leaving an empty series
-    /// with the same columns). Callers that outlive the engine take the
-    /// data instead of cloning the full per-run time series.
+    /// sharing the same interned column schema). Callers that outlive the
+    /// engine take the data instead of cloning the full per-run time
+    /// series; the replacement allocates no strings.
     pub fn take_series(&mut self) -> TimeSeries {
-        let cols: Vec<String> = self.series.columns().to_vec();
-        let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
-        std::mem::replace(&mut self.series, TimeSeries::new(&col_refs))
+        let empty = TimeSeries::with_columns(self.series.columns_arc());
+        std::mem::replace(&mut self.series, empty)
     }
 
     pub fn events_of(&self, vm: VmId) -> Vec<&LifecycleEvent> {
@@ -139,14 +177,38 @@ mod tests {
     fn take_series_moves_data_and_keeps_columns() {
         let mut r = Recorder::new(10);
         let width = r.series.columns().len();
-        r.series.push(0.0, vec![0.0; width]);
+        r.series.push(0.0, &vec![0.0; width]);
         let taken = r.take_series();
         assert_eq!(taken.len(), 1);
         assert!(r.series.is_empty());
         assert_eq!(r.series.columns().len(), width);
         // The recorder stays usable after the move.
-        r.series.push(1.0, vec![0.0; width]);
+        r.series.push(1.0, &vec![0.0; width]);
         assert_eq!(r.series.len(), 1);
+    }
+
+    /// `reset` returns the recorder to its pristine state (new cap
+    /// included) without touching the column schema.
+    #[test]
+    fn reset_wipes_counters_and_series() {
+        let mut r = Recorder::new(1);
+        let width = r.series.columns().len();
+        r.series.push(0.0, &vec![0.0; width]);
+        r.log(0.0, 1, LifecycleKind::Submitted);
+        r.log(0.5, 1, LifecycleKind::Allocated); // over cap -> dropped
+        r.interruptions = 7;
+        r.alloc_attempts = 9;
+        r.reset(5);
+        assert!(r.series.is_empty());
+        assert!(r.events.is_empty());
+        assert_eq!(r.dropped_events(), 0);
+        assert_eq!(r.interruptions, 0);
+        assert_eq!(r.alloc_attempts, 0);
+        assert_eq!(r.series.columns().len(), width);
+        for i in 0..5 {
+            r.log(i as f64, 0, LifecycleKind::Submitted);
+        }
+        assert_eq!(r.events.len(), 5, "reset adopted the new event cap");
     }
 
     #[test]

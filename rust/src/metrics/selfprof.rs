@@ -62,7 +62,7 @@ impl SelfProfiler {
                     } else {
                         0.0
                     };
-                    series.push(now.duration_since(t0).as_secs_f64(), vec![cpu_pct, c.rss_mb]);
+                    series.push(now.duration_since(t0).as_secs_f64(), &[cpu_pct, c.rss_mb]);
                     prev = Some(c);
                     prev_t = now;
                 }

@@ -1,28 +1,53 @@
 //! Named multi-column time series with CSV export - the raw material of
 //! the paper's Figs. 12 and 13 (active instances over time) and 10-11
 //! (utilization during simulation).
+//!
+//! # Storage layout (§Perf: recorder hot path)
+//!
+//! Samples live in one flat **column-major** buffer: column `c` occupies
+//! `values[c * cap .. c * cap + len]`. Appending a sample writes `width`
+//! floats in place (no per-row `Vec` allocation, the pre-overhaul
+//! row-of-`Vec<f64>` layout paid one heap allocation per sample), and
+//! [`TimeSeries::column`] hands back a contiguous `&[f64]` borrow instead
+//! of gathering a fresh `Vec`. Column names are interned in an
+//! `Arc<[String]>`, so cloning the schema (recorder resets, `take_series`)
+//! never re-allocates strings.
+
+use std::borrow::Cow;
+use std::sync::Arc;
 
 use crate::util::csv::{fmt_num, Csv};
 
 /// A time series: one time column plus N named value columns.
 #[derive(Debug, Clone)]
 pub struct TimeSeries {
-    columns: Vec<String>,
+    columns: Arc<[String]>,
     times: Vec<f64>,
-    values: Vec<Vec<f64>>, // values[row][col]
+    /// Flat column-major sample storage (see module docs).
+    values: Vec<f64>,
+    /// Row capacity per column in `values`.
+    cap: usize,
 }
 
 impl TimeSeries {
     pub fn new(columns: &[&str]) -> Self {
-        TimeSeries {
-            columns: columns.iter().map(|s| s.to_string()).collect(),
-            times: Vec::new(),
-            values: Vec::new(),
-        }
+        Self::with_columns(columns.iter().map(|s| s.to_string()).collect())
+    }
+
+    /// Construct from an already-interned column schema (cheap: recorder
+    /// resets and `take_series` share one `Arc` instead of rebuilding the
+    /// strings).
+    pub fn with_columns(columns: Arc<[String]>) -> Self {
+        TimeSeries { columns, times: Vec::new(), values: Vec::new(), cap: 0 }
     }
 
     pub fn columns(&self) -> &[String] {
         &self.columns
+    }
+
+    /// The interned column schema (shareable via [`Self::with_columns`]).
+    pub fn columns_arc(&self) -> Arc<[String]> {
+        self.columns.clone()
     }
 
     pub fn len(&self) -> usize {
@@ -33,60 +58,98 @@ impl TimeSeries {
         self.times.is_empty()
     }
 
+    /// Drop all samples, keeping the column schema and the allocated
+    /// buffers (a reused recorder clears its series between runs).
+    pub fn clear(&mut self) {
+        self.times.clear();
+    }
+
     /// Append a sample; `row` must match the column count and time must be
     /// non-decreasing.
-    pub fn push(&mut self, t: f64, row: Vec<f64>) {
+    pub fn push(&mut self, t: f64, row: &[f64]) {
         assert_eq!(row.len(), self.columns.len(), "series row width mismatch");
         if let Some(&last) = self.times.last() {
             assert!(t + 1e-9 >= last, "series time went backwards: {t} < {last}");
         }
+        let len = self.times.len();
+        if len == self.cap {
+            self.grow();
+        }
+        for (c, &v) in row.iter().enumerate() {
+            self.values[c * self.cap + len] = v;
+        }
         self.times.push(t);
-        self.values.push(row);
+    }
+
+    /// Double the per-column row capacity, re-laying the columns out in
+    /// the new buffer.
+    fn grow(&mut self) {
+        let width = self.columns.len();
+        let len = self.times.len();
+        let new_cap = (self.cap * 2).max(16);
+        let mut new_values = vec![0.0; width * new_cap];
+        for c in 0..width {
+            new_values[c * new_cap..c * new_cap + len]
+                .copy_from_slice(&self.values[c * self.cap..c * self.cap + len]);
+        }
+        self.values = new_values;
+        self.cap = new_cap;
     }
 
     pub fn times(&self) -> &[f64] {
         &self.times
     }
 
-    /// Column values by name.
-    pub fn column(&self, name: &str) -> Option<Vec<f64>> {
+    /// Column values by index (contiguous borrow, no copy).
+    fn col(&self, idx: usize) -> &[f64] {
+        let len = self.times.len();
+        &self.values[idx * self.cap..idx * self.cap + len]
+    }
+
+    /// Column values by name (contiguous borrow, no copy).
+    pub fn column(&self, name: &str) -> Option<&[f64]> {
         let idx = self.columns.iter().position(|c| c == name)?;
-        Some(self.values.iter().map(|r| r[idx]).collect())
+        Some(self.col(idx))
     }
 
     /// Peak value of a column.
     pub fn max_of(&self, name: &str) -> Option<f64> {
-        self.column(name)?.into_iter().reduce(f64::max)
+        self.column(name)?.iter().copied().reduce(f64::max)
     }
 
     pub fn to_csv(&self) -> Csv {
         let mut header = vec!["time"];
         header.extend(self.columns.iter().map(|s| s.as_str()));
         let mut csv = Csv::new(&header);
-        for (t, row) in self.times.iter().zip(&self.values) {
+        let width = self.columns.len();
+        for (i, t) in self.times.iter().enumerate() {
             let mut r = vec![fmt_num(*t)];
-            r.extend(row.iter().map(|v| fmt_num(*v)));
+            for c in 0..width {
+                r.push(fmt_num(self.values[c * self.cap + i]));
+            }
             csv.push(r);
         }
         csv
     }
 
     /// Downsample to at most `n` evenly-spaced rows (for terminal plots).
-    pub fn downsample(&self, n: usize) -> TimeSeries {
+    /// The identity path (already small enough) borrows `self` instead of
+    /// deep-copying the series.
+    pub fn downsample(&self, n: usize) -> Cow<'_, TimeSeries> {
         if self.len() <= n || n == 0 {
-            return self.clone();
+            return Cow::Borrowed(self);
         }
-        let mut out = TimeSeries {
-            columns: self.columns.clone(),
-            times: Vec::with_capacity(n),
-            values: Vec::with_capacity(n),
-        };
+        let width = self.columns.len();
+        let mut out = TimeSeries::with_columns(self.columns_arc());
+        let mut row = vec![0.0; width];
         for i in 0..n {
             let idx = i * (self.len() - 1) / (n - 1).max(1);
-            out.times.push(self.times[idx]);
-            out.values.push(self.values[idx].clone());
+            for (c, slot) in row.iter_mut().enumerate() {
+                *slot = self.values[c * self.cap + idx];
+            }
+            out.push(self.times[idx], &row);
         }
-        out
+        Cow::Owned(out)
     }
 
     /// Render an ASCII sparkline-style chart of one column (terminal
@@ -101,7 +164,7 @@ impl TimeSeries {
         let ds: Vec<f64> = if vals.len() > width {
             (0..width).map(|i| vals[i * (vals.len() - 1) / (width - 1).max(1)]).collect()
         } else {
-            vals.clone()
+            vals.to_vec()
         };
         let lo = ds.iter().cloned().fold(f64::INFINITY, f64::min);
         let hi = ds.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
@@ -126,9 +189,9 @@ mod tests {
 
     fn sample() -> TimeSeries {
         let mut s = TimeSeries::new(&["a", "b"]);
-        s.push(0.0, vec![1.0, 10.0]);
-        s.push(1.0, vec![2.0, 20.0]);
-        s.push(2.0, vec![3.0, 15.0]);
+        s.push(0.0, &[1.0, 10.0]);
+        s.push(1.0, &[2.0, 20.0]);
+        s.push(2.0, &[3.0, 15.0]);
         s
     }
 
@@ -136,7 +199,7 @@ mod tests {
     fn push_and_column_access() {
         let s = sample();
         assert_eq!(s.len(), 3);
-        assert_eq!(s.column("a").unwrap(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(s.column("a").unwrap(), &[1.0, 2.0, 3.0][..]);
         assert_eq!(s.max_of("b"), Some(20.0));
         assert!(s.column("zzz").is_none());
     }
@@ -147,11 +210,36 @@ mod tests {
         assert!(csv.to_string().starts_with("time,a,b\n0,1,10\n"));
     }
 
+    /// Growth across several capacity doublings keeps every column intact.
+    #[test]
+    fn columns_survive_growth() {
+        let mut s = TimeSeries::new(&["x", "y"]);
+        for i in 0..1000 {
+            s.push(i as f64, &[i as f64, 2.0 * i as f64]);
+        }
+        let x = s.column("x").unwrap();
+        let y = s.column("y").unwrap();
+        for i in 0..1000 {
+            assert_eq!(x[i], i as f64);
+            assert_eq!(y[i], 2.0 * i as f64);
+        }
+    }
+
+    #[test]
+    fn clear_keeps_schema_and_capacity() {
+        let mut s = sample();
+        s.clear();
+        assert!(s.is_empty());
+        assert_eq!(s.columns().len(), 2);
+        s.push(5.0, &[7.0, 8.0]);
+        assert_eq!(s.column("a").unwrap(), &[7.0][..]);
+    }
+
     #[test]
     fn downsample_keeps_endpoints() {
         let mut s = TimeSeries::new(&["v"]);
         for i in 0..100 {
-            s.push(i as f64, vec![i as f64]);
+            s.push(i as f64, &[i as f64]);
         }
         let d = s.downsample(10);
         assert_eq!(d.len(), 10);
@@ -159,12 +247,21 @@ mod tests {
         assert_eq!(*d.times().last().unwrap(), 99.0);
     }
 
+    /// The identity path borrows instead of deep-copying.
+    #[test]
+    fn downsample_identity_path_borrows() {
+        let s = sample();
+        assert!(matches!(s.downsample(100), Cow::Borrowed(_)));
+        assert!(matches!(s.downsample(0), Cow::Borrowed(_)));
+        assert!(matches!(s.downsample(2), Cow::Owned(_)));
+    }
+
     #[test]
     #[should_panic(expected = "backwards")]
     fn rejects_time_regression() {
         let mut s = TimeSeries::new(&["v"]);
-        s.push(5.0, vec![0.0]);
-        s.push(1.0, vec![0.0]);
+        s.push(5.0, &[0.0]);
+        s.push(1.0, &[0.0]);
     }
 
     #[test]

@@ -9,6 +9,26 @@
 //! inside `catch_unwind`, and reports a [`CellResult`]. A panicking cell
 //! therefore fails alone - the rest of the grid still completes.
 //!
+//! # Lazy worker-side prebuilds (§Perf)
+//!
+//! Workload prebuilds are **not** resolved up front: a
+//! [`PrebuildSlots`](super::prebuild::PrebuildSlots) table (one `OnceLock`
+//! slot per distinct (substrate, seed) pair, sized from the grid before
+//! the pool starts) lets the first worker that needs a pair build it
+//! while the other workers keep executing cells. The pre-overhaul driver
+//! paid the whole prebuild cost as a serial prefix on the caller thread -
+//! for trace-substrate grids, per-seed trace generation dominated the
+//! run's start-up. Prebuilds are deterministic in (substrate, seed), so
+//! which worker wins a race never shows in the artifacts.
+//!
+//! # Per-worker scratch (§Perf)
+//!
+//! Each worker threads one [`EngineScratch`] through its cells: recorder,
+//! event queue, progress arrays and the engine's scratch buffers are
+//! reset between cells instead of reallocated. A panicking cell forfeits
+//! its scratch (it unwinds with the engine); the worker just starts a
+//! fresh one.
+//!
 //! A cell's [`CellSpec`](super::grid::CellSpec) selects the substrate
 //! (§VII-E comparison plan vs §VII-D trace simulation), the policy (with
 //! per-cell victim-policy and adjusted-alpha values), and the spot-config
@@ -18,16 +38,20 @@
 //!
 //! The merge is by cell id, so the assembled [`SweepReport`] - and every
 //! artifact serialized from it - is bit-identical regardless of thread
-//! count (including `threads == 1`).
+//! count (including `threads == 1`). [`run_with_timing`] additionally
+//! returns a [`SweepTiming`] phase breakdown (wall, prebuild-busy,
+//! cell-busy, merge, first-cell-done) for the benches; timing never
+//! enters the serialized artifacts.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
 
-use crate::engine::Engine;
+use crate::engine::{Engine, EngineScratch};
 use crate::trace::workload::{self, trace_engine_config};
 
 use super::grid::{Cell, Substrate, SweepSpec};
-use super::prebuild::{Prebuilt, PrebuildCache};
+use super::prebuild::{panic_message, Prebuilt, PrebuildSlots};
 use super::report::{CellResult, SweepReport};
 
 /// Worker threads to use when the caller does not care: one per available
@@ -41,9 +65,33 @@ pub fn default_threads() -> usize {
 /// Invoked from worker threads (must be `Sync`).
 pub type ProgressFn<'a> = &'a (dyn Fn(usize, usize, &CellResult) + Sync);
 
+/// Wall-clock phase breakdown of one driver run. Observability only -
+/// never serialized into sweep artifacts, which must stay byte-identical
+/// across thread counts and machines.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepTiming {
+    /// End-to-end wall time of the whole run.
+    pub wall: Duration,
+    /// Summed worker time spent building lazy prebuilds (overlaps with
+    /// cell execution on other workers, so this can exceed any serial
+    /// prefix visible in `wall`).
+    pub prebuild_busy: Duration,
+    /// Summed worker time spent executing cells.
+    pub cell_busy: Duration,
+    /// Deterministic cell-id merge time (after the pool joins).
+    pub merge: Duration,
+    /// Wall time from run start until the first cell finished - the
+    /// effective serial prefix. With lazy prebuilds this is roughly one
+    /// prebuild plus one cell even on grids with hundreds of
+    /// (substrate, seed) pairs.
+    pub first_cell_done: Duration,
+    /// Distinct (substrate, seed) prebuilds actually built.
+    pub prebuilds_built: usize,
+}
+
 /// Run the sweep on `threads` workers (clamped to `1..=cells`).
 pub fn run(spec: &SweepSpec, threads: usize) -> SweepReport {
-    run_with_progress(spec, threads, None)
+    run_instrumented(spec, threads, None).0
 }
 
 /// [`run`], reporting each finished cell to `on_cell`.
@@ -52,52 +100,82 @@ pub fn run_with_progress(
     threads: usize,
     on_cell: Option<ProgressFn<'_>>,
 ) -> SweepReport {
+    run_instrumented(spec, threads, on_cell).0
+}
+
+/// [`run`], also returning the phase-timing breakdown (bench support).
+pub fn run_with_timing(spec: &SweepSpec, threads: usize) -> (SweepReport, SweepTiming) {
+    run_instrumented(spec, threads, None)
+}
+
+fn run_instrumented(
+    spec: &SweepSpec,
+    threads: usize,
+    on_cell: Option<ProgressFn<'_>>,
+) -> (SweepReport, SweepTiming) {
+    let start = Instant::now();
     let cells = spec.cells();
     let total = cells.len();
 
-    // Shared read-only prebuilds: resolve each distinct (substrate, seed)
-    // pair's workload once, up front, and hand every cell an Arc to it.
-    // Prebuild panics (e.g. an invalid trace template) are caught per cell
-    // so they surface as that cell's error row instead of aborting the
-    // sweep - the same isolation contract the workers give running cells.
-    let mut cache = PrebuildCache::new();
-    let plans: Vec<Result<Prebuilt, String>> = cells
-        .iter()
-        .map(|c| {
-            catch_unwind(AssertUnwindSafe(|| cache.get_or_build_cell(spec, c)))
-                .map_err(|p| format!("workload prebuild failed: {}", panic_message(p)))
-        })
-        .collect();
+    // Lazy shared prebuilds: the slot table is sized from the grid here;
+    // the builds themselves happen worker-side, overlapped with cell
+    // execution. Build panics are caught per slot and surface as each
+    // affected cell's error row instead of aborting the sweep - the same
+    // isolation contract the workers give running cells.
+    let slots = PrebuildSlots::for_cells(&cells);
 
     let threads = threads.max(1).min(total.max(1));
     let next = AtomicUsize::new(0);
     let done = AtomicUsize::new(0);
+    let prebuild_ns = AtomicU64::new(0);
+    let cell_ns = AtomicU64::new(0);
+    let first_done_ns = AtomicU64::new(u64::MAX);
 
-    let mut slots: Vec<Option<CellResult>> = Vec::with_capacity(total);
-    slots.resize_with(total, || None);
+    let mut result_slots: Vec<Option<CellResult>> = Vec::with_capacity(total);
+    result_slots.resize_with(total, || None);
 
     std::thread::scope(|scope| {
         let cells = &cells;
-        let plans = &plans;
+        let slots = &slots;
         let next = &next;
         let done = &done;
+        let prebuild_ns = &prebuild_ns;
+        let cell_ns = &cell_ns;
+        let first_done_ns = &first_done_ns;
         let handles: Vec<_> = (0..threads)
             .map(|_| {
                 scope.spawn(move || {
                     let mut out: Vec<(usize, CellResult)> = Vec::new();
+                    let mut scratch = EngineScratch::new();
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
                         if i >= total {
                             break;
                         }
-                        let result = match &plans[i] {
-                            Ok(prebuilt) => run_cell(spec, &cells[i], prebuilt),
+                        let prebuilt = slots.get_with(spec, i, &cells[i], |took| {
+                            prebuild_ns
+                                .fetch_add(took.as_nanos() as u64, Ordering::Relaxed);
+                        });
+                        let result = match prebuilt {
+                            Ok(prebuilt) => {
+                                let t0 = Instant::now();
+                                let (result, returned) =
+                                    run_cell(spec, &cells[i], prebuilt, scratch);
+                                scratch = returned;
+                                cell_ns.fetch_add(
+                                    t0.elapsed().as_nanos() as u64,
+                                    Ordering::Relaxed,
+                                );
+                                result
+                            }
                             Err(e) => CellResult {
                                 cell: cells[i],
                                 outcome: Err(e.clone()),
                                 series: None,
                             },
                         };
+                        first_done_ns
+                            .fetch_min(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
                         let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
                         if let Some(cb) = on_cell {
                             cb(finished, total, &result);
@@ -112,34 +190,56 @@ pub fn run_with_progress(
             let worker_results =
                 handle.join().expect("sweep worker died outside cell isolation");
             for (i, result) in worker_results {
-                debug_assert!(slots[i].is_none(), "cell {i} ran twice");
-                slots[i] = Some(result);
+                debug_assert!(result_slots[i].is_none(), "cell {i} ran twice");
+                result_slots[i] = Some(result);
             }
         }
     });
 
-    let merged: Vec<CellResult> = slots
+    let merge_start = Instant::now();
+    let merged: Vec<CellResult> = result_slots
         .into_iter()
         .enumerate()
         .map(|(i, r)| r.unwrap_or_else(|| panic!("cell {i} produced no result")))
         .collect();
-    SweepReport { cells: merged, threads }
+    let report = SweepReport { cells: merged, threads };
+    let merge = merge_start.elapsed();
+    let first = first_done_ns.load(Ordering::Relaxed);
+    let timing = SweepTiming {
+        wall: start.elapsed(),
+        prebuild_busy: Duration::from_nanos(prebuild_ns.load(Ordering::Relaxed)),
+        cell_busy: Duration::from_nanos(cell_ns.load(Ordering::Relaxed)),
+        merge,
+        first_cell_done: if first == u64::MAX { Duration::ZERO } else { Duration::from_nanos(first) },
+        prebuilds_built: slots.built(),
+    };
+    (report, timing)
 }
 
-/// Run one cell to completion; panics inside the cell become `Err` rows.
-fn run_cell(spec: &SweepSpec, cell: &Cell, prebuilt: &Prebuilt) -> CellResult {
+/// Run one cell to completion on the worker's recycled scratch; panics
+/// inside the cell become `Err` rows (and forfeit the scratch, which
+/// unwinds with the engine - the caller gets a fresh one back).
+fn run_cell(
+    spec: &SweepSpec,
+    cell: &Cell,
+    prebuilt: &Prebuilt,
+    scratch: EngineScratch,
+) -> (CellResult, EngineScratch) {
     let retain = spec.retain.matches(cell);
-    let outcome = catch_unwind(AssertUnwindSafe(|| {
+    let outcome = catch_unwind(AssertUnwindSafe(move || {
         let policy = cell.spec.policy.build_with_victim(cell.spec.victim);
         let mut engine = match (cell.spec.substrate, prebuilt) {
             (Substrate::Comparison, Prebuilt::Comparison(plan)) => {
-                let mut engine = Engine::new(spec.engine.clone(), policy);
+                let mut engine = Engine::with_scratch(spec.engine.clone(), policy, scratch);
                 plan.apply_with_spot(&mut engine, cell.spec.spot.apply_to(plan.spot));
                 engine
             }
             (Substrate::Trace, Prebuilt::Trace(trace)) => {
-                let mut engine =
-                    Engine::new(trace_engine_config(spec.trace.sample_interval), policy);
+                let mut engine = Engine::with_scratch(
+                    trace_engine_config(spec.trace.sample_interval),
+                    policy,
+                    scratch,
+                );
                 let mut wl = spec.trace.workload.clone();
                 wl.seed = cell.seed;
                 wl.spot = cell.spec.spot.apply_to(wl.spot);
@@ -153,23 +253,16 @@ fn run_cell(spec: &SweepSpec, cell: &Cell, prebuilt: &Prebuilt) -> CellResult {
         };
         let report = engine.run();
         let series = if retain { Some(engine.recorder.take_series()) } else { None };
-        (report, series)
+        (report, series, engine.into_scratch())
     }));
     match outcome {
-        Ok((report, series)) => CellResult { cell: *cell, outcome: Ok(report), series },
-        Err(payload) => {
-            CellResult { cell: *cell, outcome: Err(panic_message(payload)), series: None }
+        Ok((report, series, scratch)) => {
+            (CellResult { cell: *cell, outcome: Ok(report), series }, scratch)
         }
-    }
-}
-
-fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
-    if let Some(s) = payload.downcast_ref::<&str>() {
-        (*s).to_string()
-    } else if let Some(s) = payload.downcast_ref::<String>() {
-        s.clone()
-    } else {
-        "cell panicked (non-string payload)".to_string()
+        Err(payload) => (
+            CellResult { cell: *cell, outcome: Err(panic_message(payload)), series: None },
+            EngineScratch::new(),
+        ),
     }
 }
 
@@ -227,7 +320,8 @@ mod tests {
     }
 
     /// A broken prebuild template (trace generator rejects 0 machines)
-    /// becomes per-cell error rows, not a sweep-wide abort.
+    /// becomes per-cell error rows, not a sweep-wide abort - including
+    /// with lazy worker-side prebuilds.
     #[test]
     fn prebuild_panics_become_cell_errors() {
         let mut spec = SweepSpec::new(ComparisonConfig::default())
@@ -263,5 +357,24 @@ mod tests {
         let r = report.cells[0].report().unwrap();
         assert_eq!(r.spot.total_spot, 20);
         assert!(r.events_processed > 0);
+    }
+
+    /// The timing breakdown reports lazily-built prebuilds and a sane
+    /// phase decomposition (no timing field leaks into the artifacts -
+    /// that contract is pinned by `tests/sweep_determinism.rs`).
+    #[test]
+    fn run_with_timing_reports_lazy_prebuilds() {
+        let scenario = ComparisonConfig { terminate_at: 300.0, ..Default::default() };
+        let spec = SweepSpec::new(scenario)
+            .with_seeds(vec![20_250_710, 20_250_711])
+            .with_policies(vec![PolicySpec::FirstFit]);
+        let (report, timing) = run_with_timing(&spec, 2);
+        assert_eq!(report.total(), 2);
+        assert_eq!(report.failed(), 0);
+        assert_eq!(timing.prebuilds_built, 2, "both seeds' prebuilds were built");
+        assert!(timing.prebuild_busy > Duration::ZERO);
+        assert!(timing.cell_busy > Duration::ZERO);
+        assert!(timing.first_cell_done <= timing.wall);
+        assert!(timing.wall > Duration::ZERO);
     }
 }

@@ -26,12 +26,20 @@
 //!   (substrate, seed): the randomized Table II/III workload resolved once
 //!   per seed (`config::scenario::WorkloadPlan`, shared across spot/alpha
 //!   variants via `apply_with_spot`), and the generated synthetic
-//!   cluster trace for `trace_sim` cells.
+//!   cluster trace for `trace_sim` cells. Prebuilds are **lazy**: a
+//!   [`PrebuildSlots`] table (one `OnceLock` per pair, sized from the
+//!   grid up front) lets the first worker that needs a pair build it
+//!   while the rest of the pool keeps running cells - no serial prebuild
+//!   prefix.
 //! - [`driver`]: the worker pool. A shared atomic cursor over the cell
 //!   list distributes work (self-balancing, allocation-free); each cell
 //!   runs inside `catch_unwind` so a panicking cell fails alone; an
 //!   optional progress callback reports completed cells. Per-cell engines
-//!   run the standard [`crate::engine::progress`] backend untouched.
+//!   run the standard [`crate::engine::progress`] backend untouched, but
+//!   recycle each worker's [`crate::engine::EngineScratch`] (recorder,
+//!   event queue, progress arrays) across cells. [`run_with_timing`]
+//!   exposes the phase breakdown (prebuild/cell/merge wall time) the perf
+//!   benches record; see `docs/perf.md` for the full hot-path guide.
 //! - [`report`]: per-cell `Report` rows plus grid-level aggregates grouped
 //!   by scenario variant (reusing [`crate::stats::Summary`]), with axis
 //!   values as dedicated CSV columns / JSON fields, exported through
@@ -66,10 +74,10 @@ pub mod grid;
 pub mod prebuild;
 pub mod report;
 
-pub use driver::{default_threads, run, run_with_progress};
+pub use driver::{default_threads, run, run_with_progress, run_with_timing, SweepTiming};
 pub use grid::{
     Cell, CellSpec, PolicySpec, ScenarioAxis, SeriesFilter, SpotOverride, Substrate, SweepSpec,
     TraceSubstrate,
 };
-pub use prebuild::{Prebuilt, PrebuildCache};
+pub use prebuild::{build_prebuilt, Prebuilt, PrebuildCache, PrebuildSlots};
 pub use report::{CellResult, SweepReport, VariantAggregate};

@@ -13,9 +13,20 @@
 //! - **Trace substrate**: generating (and validating) the synthetic
 //!   cluster [`Trace`]. The trace-to-workload conversion is cheap and
 //!   depends on per-cell knobs, so it stays in the worker.
+//!
+//! Two sharing mechanisms live here:
+//!
+//! - [`PrebuildCache`]: the eager, single-threaded `&mut self` cache
+//!   (tests, ad-hoc tooling).
+//! - [`PrebuildSlots`]: the driver's lazy worker-side table - one
+//!   `OnceLock` slot per distinct (substrate, seed) pair, sized from the
+//!   grid up front, so the **first worker that needs a pair builds it
+//!   while other workers keep running cells** instead of the whole pool
+//!   waiting behind a serial prebuild prefix.
 
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, OnceLock};
 
 use crate::config::scenario::{plan_comparison_workload, ComparisonConfig, WorkloadPlan};
 use crate::trace::synth::{SynthConfig, TraceGenerator};
@@ -29,6 +40,131 @@ use super::grid::{Cell, Substrate, SweepSpec};
 pub enum Prebuilt {
     Comparison(Arc<WorkloadPlan>),
     Trace(Arc<Trace>),
+}
+
+/// Plan the comparison workload for (`template`, `seed`). The single
+/// builder both the eager cache and the lazy slots call - one copy, so
+/// the two prebuild paths cannot diverge.
+fn build_plan(template: &ComparisonConfig, seed: u64) -> Arc<WorkloadPlan> {
+    let cfg = ComparisonConfig { seed, ..template.clone() };
+    Arc::new(plan_comparison_workload(&cfg))
+}
+
+/// Generate and validate the synthetic trace for (`template`, `seed`).
+/// Shared by the eager cache and the lazy slots (see [`build_plan`]).
+fn build_trace(template: &SynthConfig, seed: u64) -> Arc<Trace> {
+    let cfg = SynthConfig { seed, ..template.clone() };
+    let trace = TraceGenerator::new(cfg).generate();
+    let issues = trace.validate();
+    assert!(issues.is_empty(), "synthetic trace invalid: {issues:?}");
+    Arc::new(trace)
+}
+
+/// Build the prebuild for `cell` under `spec`'s templates from scratch
+/// (no cache). Deterministic in (substrate, seed): racing builders
+/// produce identical values, which is what keeps lazily-prebuilt sweeps
+/// byte-identical at any thread count.
+pub fn build_prebuilt(spec: &SweepSpec, cell: &Cell) -> Prebuilt {
+    match cell.spec.substrate {
+        Substrate::Comparison => Prebuilt::Comparison(build_plan(&spec.scenario, cell.seed)),
+        Substrate::Trace => Prebuilt::Trace(build_trace(&spec.trace.synth, cell.seed)),
+    }
+}
+
+/// Render a `catch_unwind` payload as the failure message stored in cell
+/// error rows.
+pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "cell panicked (non-string payload)".to_string()
+    }
+}
+
+/// Lazy worker-side prebuild table: one `OnceLock` slot per distinct
+/// (substrate, seed) pair of a cell list, sized up front so workers share
+/// `&self` with no locking beyond each slot's one-time initialization.
+///
+/// The first worker that needs a pair builds it; workers racing on the
+/// *same* pair block only on that slot (other pairs keep executing).
+/// Build panics are caught and stored as the slot's `Err`, so every cell
+/// of a broken pair reports the same per-cell error row instead of
+/// aborting the sweep. Because [`build_prebuilt`] is deterministic in
+/// (substrate, seed), the winning worker's identity never leaks into the
+/// merged artifacts.
+pub struct PrebuildSlots {
+    /// Slot index -> (substrate discriminant, seed) key (diagnostics).
+    keys: Vec<(u8, u64)>,
+    slots: Vec<OnceLock<Result<Prebuilt, String>>>,
+    /// Cell index (enumeration order) -> slot index.
+    cell_slot: Vec<usize>,
+}
+
+fn slot_key(cell: &Cell) -> (u8, u64) {
+    let sub = match cell.spec.substrate {
+        Substrate::Comparison => 0u8,
+        Substrate::Trace => 1u8,
+    };
+    (sub, cell.seed)
+}
+
+impl PrebuildSlots {
+    /// Size the slot table for `cells` (one slot per distinct pair; no
+    /// prebuild is built yet).
+    pub fn for_cells(cells: &[Cell]) -> Self {
+        let mut index: BTreeMap<(u8, u64), usize> = BTreeMap::new();
+        let mut keys: Vec<(u8, u64)> = Vec::new();
+        let mut cell_slot = Vec::with_capacity(cells.len());
+        for cell in cells {
+            let key = slot_key(cell);
+            let slot = *index.entry(key).or_insert_with(|| {
+                keys.push(key);
+                keys.len() - 1
+            });
+            cell_slot.push(slot);
+        }
+        let mut slots = Vec::new();
+        slots.resize_with(keys.len(), OnceLock::new);
+        PrebuildSlots { keys, slots, cell_slot }
+    }
+
+    /// Distinct (substrate, seed) pairs the table covers.
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Prebuilds actually built so far.
+    pub fn built(&self) -> usize {
+        self.slots.iter().filter(|s| s.get().is_some()).count()
+    }
+
+    /// The prebuild for the cell at `cell_index` of the enumeration this
+    /// table was sized for, building it on first use.
+    pub fn get(&self, spec: &SweepSpec, cell_index: usize, cell: &Cell) -> &Result<Prebuilt, String> {
+        self.get_with(spec, cell_index, cell, |_| {})
+    }
+
+    /// [`Self::get`], reporting the build duration to `on_build` when
+    /// *this* call performed the build (driver phase instrumentation).
+    pub fn get_with(
+        &self,
+        spec: &SweepSpec,
+        cell_index: usize,
+        cell: &Cell,
+        on_build: impl FnOnce(std::time::Duration),
+    ) -> &Result<Prebuilt, String> {
+        let slot = self.cell_slot[cell_index];
+        debug_assert_eq!(self.keys[slot], slot_key(cell), "cell/slot table mismatch");
+        self.slots[slot].get_or_init(|| {
+            let t0 = std::time::Instant::now();
+            let built = catch_unwind(AssertUnwindSafe(|| build_prebuilt(spec, cell)))
+                .map_err(|p| format!("workload prebuild failed: {}", panic_message(p)));
+            on_build(t0.elapsed());
+            built
+        })
+    }
 }
 
 /// (Substrate, seed)-keyed cache of workload prebuilds.
@@ -67,13 +203,7 @@ impl PrebuildCache {
                 "PrebuildCache reused across different scenario templates"
             ),
         }
-        self.plans
-            .entry(seed)
-            .or_insert_with(|| {
-                let cfg = ComparisonConfig { seed, ..template.clone() };
-                Arc::new(plan_comparison_workload(&cfg))
-            })
-            .clone()
+        self.plans.entry(seed).or_insert_with(|| build_plan(template, seed)).clone()
     }
 
     /// Generate (and validate) the synthetic trace for `seed`, or return
@@ -88,16 +218,7 @@ impl PrebuildCache {
                 "PrebuildCache reused across different trace templates"
             ),
         }
-        self.traces
-            .entry(seed)
-            .or_insert_with(|| {
-                let cfg = SynthConfig { seed, ..template.clone() };
-                let trace = TraceGenerator::new(cfg).generate();
-                let issues = trace.validate();
-                assert!(issues.is_empty(), "synthetic trace invalid: {issues:?}");
-                Arc::new(trace)
-            })
-            .clone()
+        self.traces.entry(seed).or_insert_with(|| build_trace(template, seed)).clone()
     }
 
     /// The prebuild for `cell` under `spec`'s templates, built on first
@@ -195,6 +316,57 @@ mod tests {
         let mut cache = PrebuildCache::new();
         cache.get_or_build_trace(&a, 1);
         cache.get_or_build_trace(&b, 2);
+    }
+
+    /// The lazy slot table builds each (substrate, seed) pair exactly once
+    /// and shares it across that pair's cells.
+    #[test]
+    fn lazy_slots_build_once_per_pair() {
+        let spec = crate::sweep::SweepSpec::new(ComparisonConfig::default())
+            .with_seeds(vec![1, 2])
+            .with_policies(vec![PolicySpec::FirstFit, PolicySpec::BestFit]);
+        let cells = spec.cells();
+        let slots = PrebuildSlots::for_cells(&cells);
+        assert_eq!(slots.slot_count(), 2, "two seeds, one substrate -> two slots");
+        assert_eq!(slots.built(), 0, "slots are lazy: nothing built up front");
+        let mut builds = 0usize;
+        let a = slots.get_with(&spec, 0, &cells[0], |_| builds += 1).as_ref().unwrap().clone();
+        assert_eq!((slots.built(), builds), (1, 1));
+        let b = slots.get_with(&spec, 1, &cells[1], |_| builds += 1).as_ref().unwrap().clone();
+        assert_eq!((slots.built(), builds), (1, 1), "second cell of the pair reuses the build");
+        match (&a, &b) {
+            (Prebuilt::Comparison(x), Prebuilt::Comparison(y)) => {
+                assert!(Arc::ptr_eq(x, y), "same pair must share one Arc")
+            }
+            other => panic!("unexpected prebuilds: {other:?}"),
+        }
+        let c = slots.get(&spec, 2, &cells[2]).as_ref().unwrap().clone();
+        assert_eq!(slots.built(), 2);
+        match (&a, &c) {
+            (Prebuilt::Comparison(x), Prebuilt::Comparison(y)) => assert!(!Arc::ptr_eq(x, y)),
+            other => panic!("unexpected prebuilds: {other:?}"),
+        }
+    }
+
+    /// A panicking build is stored once as the slot's `Err`; later cells
+    /// of the pair see the same message without re-running the build.
+    #[test]
+    fn lazy_slot_stores_build_panic_as_err() {
+        let mut spec = crate::sweep::SweepSpec::new(ComparisonConfig::default())
+            .with_seeds(vec![1])
+            .with_policies(vec![PolicySpec::FirstFit, PolicySpec::BestFit])
+            .with_axis(crate::sweep::grid::ScenarioAxis::Substrate(vec![Substrate::Trace]));
+        spec.trace.synth.machines = 0; // TraceGenerator::new asserts machines > 0
+        let cells = spec.cells();
+        let slots = PrebuildSlots::for_cells(&cells);
+        assert_eq!(slots.slot_count(), 1);
+        let e1 = slots.get(&spec, 0, &cells[0]).as_ref().unwrap_err().clone();
+        assert!(e1.contains("workload prebuild failed"), "unexpected error: {e1}");
+        assert_eq!(slots.built(), 1);
+        let mut builds = 0usize;
+        let e2 = slots.get_with(&spec, 1, &cells[1], |_| builds += 1).as_ref().unwrap_err().clone();
+        assert_eq!(builds, 0, "cached Err must not re-run the build");
+        assert_eq!(e1, e2);
     }
 
     #[test]

@@ -421,8 +421,8 @@ mod tests {
     fn retained_series_export_in_id_order() {
         let mut rep = sample_report();
         let mut s = TimeSeries::new(&["spot_running"]);
-        s.push(0.0, vec![1.0]);
-        s.push(10.0, vec![2.0]);
+        s.push(0.0, &[1.0]);
+        s.push(10.0, &[2.0]);
         rep.cells[2].series = Some(s.clone());
         rep.cells[0].series = Some(s);
         let out = rep.retained_series_csvs();

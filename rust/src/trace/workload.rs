@@ -141,10 +141,11 @@ pub fn build(engine: &mut Engine, trace: &Trace, cfg: &WorkloadConfig) -> Worklo
     let mut groups: HashMap<u32, Vec<&super::event::TaskEvent>> = HashMap::new();
     let mut order: Vec<u32> = Vec::new();
     for ev in trace.tasks.iter().filter(|t| t.kind == TaskEventKind::Submit) {
-        if !groups.contains_key(&ev.user) {
+        let group = groups.entry(ev.user).or_default();
+        if group.is_empty() {
             order.push(ev.user);
         }
-        groups.entry(ev.user).or_default().push(ev);
+        group.push(ev);
     }
 
     'outer: for user in order {

@@ -40,10 +40,9 @@ impl JsonObj {
     /// Insert (or overwrite) a key. Insertion order of first occurrence is
     /// preserved on output.
     pub fn set(&mut self, key: &str, value: Json) -> &mut Self {
-        if !self.map.contains_key(key) {
+        if self.map.insert(key.to_string(), value).is_none() {
             self.keys.push(key.to_string());
         }
-        self.map.insert(key.to_string(), value);
         self
     }
 

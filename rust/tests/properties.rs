@@ -9,10 +9,93 @@
 use cloudmarket::allocation::scorer::{HostScorer, RustScorer, ScoreInput, NEG};
 use cloudmarket::allocation::{AllocationPolicy, BestFit, FirstFit, HlemVmp, RoundRobin, WorstFit};
 use cloudmarket::cloudlet::Cloudlet;
+use cloudmarket::core::{EntityId, EventQueue, HeapEventQueue, SimEvent};
 use cloudmarket::engine::{Engine, EngineConfig, World};
 use cloudmarket::stats::Rng;
 use cloudmarket::testkit::{forall, gen};
 use cloudmarket::vm::{Vm, VmState};
+
+/// The slab/index-heap event queue pops the exact (time, seq) order of
+/// the retained `BinaryHeap` oracle over randomized op sequences -
+/// schedules, single pops, batch drains and terminate-style clears
+/// (~10k ops across the cases).
+#[test]
+fn prop_slab_event_queue_matches_heap_oracle() {
+    forall(8, 0x51AB, |rng| {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        let mut oracle: HeapEventQueue<u32> = HeapEventQueue::new();
+        let mut payload: u32 = 0;
+        let mut horizon: f64 = 0.0;
+        for _ in 0..1_250 {
+            match rng.below(10) {
+                // Schedule a burst (duplicate timestamps on purpose: the
+                // FIFO tiebreak is the subtle part).
+                0..=4 => {
+                    let t = if rng.chance(0.3) {
+                        horizon // exact duplicate of an earlier time
+                    } else {
+                        rng.uniform(0.0, 1e6)
+                    };
+                    horizon = t;
+                    let burst = rng.range_u64(1, 4);
+                    for _ in 0..burst {
+                        let ev = SimEvent::new(t, EntityId::Kernel, EntityId::Kernel, payload);
+                        q.push(ev.clone());
+                        oracle.push(ev);
+                        payload += 1;
+                    }
+                }
+                // Pop one event from both; everything must agree.
+                5..=7 => {
+                    match (q.pop(), oracle.pop()) {
+                        (None, None) => {}
+                        (Some(a), Some(b)) => {
+                            assert_eq!((a.time, a.seq, a.data), (b.time, b.seq, b.data));
+                        }
+                        (a, b) => panic!(
+                            "queue lengths diverged: slab={:?} oracle={:?}",
+                            a.is_some(),
+                            b.is_some()
+                        ),
+                    }
+                    assert_eq!(q.next_time(), oracle.next_time());
+                    assert_eq!(q.len(), oracle.len());
+                }
+                // Batch-drain everything due by a random deadline.
+                8 => {
+                    let t = rng.uniform(0.0, 1.2e6);
+                    let (mut a, mut b) = (Vec::new(), Vec::new());
+                    q.pop_due_into(t, &mut a);
+                    oracle.pop_due_into(t, &mut b);
+                    assert_eq!(
+                        a.iter().map(|e| (e.time.to_bits(), e.seq, e.data)).collect::<Vec<_>>(),
+                        b.iter().map(|e| (e.time.to_bits(), e.seq, e.data)).collect::<Vec<_>>()
+                    );
+                }
+                // Terminate-style clear (sequence numbering continues).
+                _ => {
+                    q.clear();
+                    oracle.clear();
+                    assert!(q.is_empty() && oracle.is_empty());
+                }
+            }
+        }
+        // Drain the remainder in lockstep.
+        loop {
+            match (q.pop(), oracle.pop()) {
+                (None, None) => break,
+                (Some(a), Some(b)) => {
+                    assert_eq!((a.time, a.seq, a.data), (b.time, b.seq, b.data));
+                }
+                (a, b) => panic!(
+                    "queue lengths diverged at drain: slab={:?} oracle={:?}",
+                    a.is_some(),
+                    b.is_some()
+                ),
+            }
+        }
+    });
+}
 
 /// Random engine with hosts, spot + on-demand VMs, and cloudlets.
 fn random_engine(rng: &mut Rng) -> Engine {

@@ -9,7 +9,8 @@ use std::sync::Arc;
 use cloudmarket::config::scenario::ComparisonConfig;
 use cloudmarket::experiments::compare;
 use cloudmarket::sweep::{
-    self, PolicySpec, PrebuildCache, ScenarioAxis, SeriesFilter, Substrate, SweepSpec,
+    self, PolicySpec, Prebuilt, PrebuildCache, PrebuildSlots, ScenarioAxis, SeriesFilter,
+    Substrate, SweepSpec,
 };
 
 /// The §VII-E scenario with a shortened horizon so the grid stays cheap
@@ -105,6 +106,49 @@ fn prebuilds_are_shared_per_seed() {
     assert!(Arc::ptr_eq(&plans[0], &plans[2]));
     assert!(!Arc::ptr_eq(&plans[0], &plans[3]));
     assert!(Arc::ptr_eq(&plans[3], &plans[5]));
+}
+
+/// Eight workers racing to lazily prebuild the *same* (substrate, seed)
+/// pair share exactly one build - and a single-seed grid (every cell
+/// contends on one slot) stays byte-identical across thread counts.
+#[test]
+fn racing_workers_share_one_lazy_prebuild() {
+    let spec = SweepSpec::new(small_cfg())
+        .with_seeds(vec![20_250_710])
+        .with_policies(PolicySpec::paper());
+    let cells = spec.cells();
+    let slots = PrebuildSlots::for_cells(&cells);
+    assert_eq!(slots.slot_count(), 1, "one (substrate, seed) pair -> one slot");
+    assert_eq!(slots.built(), 0, "nothing is built before a worker asks");
+
+    let ptrs: Vec<usize> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..8)
+            .map(|w| {
+                let (slots, spec, cells) = (&slots, &spec, &cells);
+                scope.spawn(move || {
+                    let i = w % cells.len();
+                    match slots.get(spec, i, &cells[i]) {
+                        Ok(Prebuilt::Comparison(plan)) => Arc::as_ptr(plan) as usize,
+                        other => panic!("unexpected prebuild: {other:?}"),
+                    }
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("racer panicked")).collect()
+    });
+    assert!(
+        ptrs.windows(2).all(|w| w[0] == w[1]),
+        "racing workers must share one prebuild Arc"
+    );
+    assert_eq!(slots.built(), 1, "the contended pair was built exactly once");
+
+    // Full-driver determinism while 8 workers contend on the single slot.
+    let render = |threads: usize| {
+        let report = sweep::run(&spec, threads);
+        assert_eq!(report.failed(), 0, "no cell may fail");
+        (report.cells_csv().to_string(), report.aggregate_json().to_string_pretty())
+    };
+    assert_eq!(render(1), render(8), "racing lazy prebuilds changed the artifacts");
 }
 
 /// A mixed-axis grid (spot-config × alpha × substrate) with per-cell
