@@ -47,7 +47,7 @@ impl VictimPolicy {
 }
 
 /// Engine-wide configuration.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct EngineConfig {
     /// Minimal time between events (`new CloudSim(0.5)`).
     pub min_dt: f64,

@@ -23,6 +23,13 @@
 //! series. The merged output is bit-identical at any thread count. See
 //! `docs/sweep-cookbook.md` for recipes and `docs/cli.md` for the full
 //! flag reference.
+//!
+//! `sweep --workers N` runs the same grid as worker **subprocesses**
+//! instead of threads (cost-weighted shards, crashed workers'
+//! shards reassigned; identical artifact bytes), and `sweep worker
+//! --shard <file> --out <file>` / `sweep merge <partial>...` expose the
+//! shard protocol directly for cluster fan-out - see the "Cluster-scale
+//! sweeps" section of the cookbook.
 
 use std::path::PathBuf;
 
@@ -48,7 +55,10 @@ fn specs() -> Vec<Spec> {
         Spec { name: "seed", takes_value: true, help: "rng seed (default 20250710)" },
         Spec { name: "runs", takes_value: true, help: "compare: aggregate over N seeds (default 1)" },
         Spec { name: "seeds", takes_value: true, help: "sweep: number of seeds (default 8)" },
-        Spec { name: "threads", takes_value: true, help: "sweep: worker threads (default: all CPUs)" },
+        Spec { name: "threads", takes_value: true, help: "sweep: worker threads (default: all CPUs; with --workers: threads per worker process, default 1)" },
+        Spec { name: "workers", takes_value: true, help: "sweep: process-level fan-out - spawn N worker subprocesses instead of threads" },
+        Spec { name: "shard", takes_value: true, help: "sweep worker: shard job file to run" },
+        Spec { name: "out", takes_value: true, help: "sweep worker: partial artifact output path" },
         Spec { name: "policies", takes_value: true, help: "sweep: comma-separated policy list" },
         Spec { name: "axis", takes_value: true, help: "sweep: scenario axis <name>=<v1,v2,...>, repeatable (spot.warning | spot.hibernation-timeout | spot.behavior | hlem.alpha | victim | substrate)" },
         Spec { name: "substrate", takes_value: true, help: "sweep: workload substrate list: comparison | trace (default comparison)" },
@@ -68,7 +78,7 @@ fn specs() -> Vec<Spec> {
 
 fn usage() -> String {
     format!(
-        "usage: cloudmarket <quickstart|compare|sweep|trace|trace-analysis|advisor|tables> [flags]\n{}",
+        "usage: cloudmarket <quickstart|compare|sweep|trace|trace-analysis|advisor|tables> [flags]\n       cloudmarket sweep worker --shard <file> --out <file>\n       cloudmarket sweep merge <partial.json>... [--out-dir <dir>]\n{}",
         render_help(&specs())
     )
 }
@@ -83,7 +93,14 @@ fn run(argv: &[String]) -> Result<(), String> {
     match args.positional[0].as_str() {
         "quickstart" => cmd_quickstart(),
         "compare" => cmd_compare(&args, &out_dir),
-        "sweep" => cmd_sweep(&args, &out_dir),
+        "sweep" => match args.positional.get(1).map(String::as_str) {
+            None => cmd_sweep(&args, &out_dir),
+            Some("worker") => cmd_sweep_worker(&args),
+            Some("merge") => cmd_sweep_merge(&args, &out_dir),
+            Some(other) => Err(format!(
+                "unknown sweep subcommand '{other}' (expected worker | merge, or flags only)"
+            )),
+        },
         "trace" => cmd_trace(&args, &out_dir),
         "trace-analysis" => cmd_trace_analysis(&args),
         "advisor" => cmd_advisor(&args),
@@ -283,9 +300,17 @@ fn cmd_sweep(args: &Args, out_dir: &std::path::Path) -> Result<(), String> {
 
     let n_variants = spec.variants().len();
     let total = spec.cell_count();
+    let workers = match args.get("workers") {
+        None => None,
+        Some(_) => Some(args.get_positive_usize("workers", 1)?),
+    };
+    let mode = match workers {
+        Some(w) => format!("{w} worker processes"),
+        None => format!("{threads} threads"),
+    };
     eprintln!(
         "sweep: {total} cells ({seeds} seeds x {n_variants} variants over {n_policies} \
-         policies) on {threads} threads ..."
+         policies) on {mode} ..."
     );
 
     fn progress(done: usize, total: usize, r: &CellResult) {
@@ -298,10 +323,61 @@ fn cmd_sweep(args: &Args, out_dir: &std::path::Path) -> Result<(), String> {
             r.cell.spec.variant_label(),
         );
     }
-    let report = sweep::run_with_progress(&spec, threads, Some(&progress));
+    let report = match workers {
+        Some(w) => {
+            // Process-level fan-out: shard files + worker subprocesses in
+            // out_dir, crashed workers' shards reassigned, merged by cell
+            // id - byte-identical artifacts to the thread path below.
+            let exe = std::env::current_exe()
+                .map_err(|e| format!("locating the cloudmarket binary: {e}"))?;
+            let mut opts = sweep::CoordinateOptions::new(w, out_dir, exe);
+            opts.worker_threads = args.get_positive_usize("threads", 1)?;
+            opts.verbose = true;
+            let outcome = sweep::coordinate(&spec, &opts)?;
+            eprintln!(
+                "sweep: {} shard(s) done on {} worker process(es) spawned ({} reassigned)",
+                outcome.shards, outcome.workers_spawned, outcome.shards_reassigned
+            );
+            outcome.report
+        }
+        None => sweep::run_with_progress(&spec, threads, Some(&progress)),
+    };
 
+    finish_sweep(&report, out_dir)
+}
+
+/// Shared epilogue of `sweep`, `sweep --workers` and `sweep merge`:
+/// render the aggregate table, write the artifacts, and turn cell
+/// failures into a non-zero exit. Partial sweeps must not look like
+/// clean successes to callers gating on the exit status; the artifacts
+/// still record the completed cells and each failure's message.
+fn finish_sweep(
+    report: &cloudmarket::sweep::SweepReport,
+    out_dir: &std::path::Path,
+) -> Result<(), String> {
     println!("{}", report.aggregate_table().render());
+    let cells_path = write_sweep_artifacts(report, out_dir)?;
+    if report.failed() > 0 {
+        return Err(format!(
+            "{}/{} sweep cells failed (per-cell errors in {})",
+            report.failed(),
+            report.total(),
+            cells_path.display()
+        ));
+    }
+    Ok(())
+}
 
+/// Serialize a sweep report into `out_dir` (`sweep_cells.csv`,
+/// `sweep_aggregate.json`, retained `sweep_series_cell*.csv`), removing
+/// stale series files from a previous run into the same directory first.
+/// Shared by the thread, `--workers` and `sweep merge` paths so every
+/// mode writes identical bytes for identical reports. Returns the cells
+/// CSV path (named in failure messages).
+fn write_sweep_artifacts(
+    report: &cloudmarket::sweep::SweepReport,
+    out_dir: &std::path::Path,
+) -> Result<PathBuf, String> {
     std::fs::create_dir_all(out_dir).map_err(|e| e.to_string())?;
     let cells_path = out_dir.join("sweep_cells.csv");
     report.cells_csv().write_file(&cells_path).map_err(|e| e.to_string())?;
@@ -333,19 +409,119 @@ fn cmd_sweep(args: &Args, out_dir: &std::path::Path) -> Result<(), String> {
             out_dir.join("sweep_series_cell*.csv").display()
         );
     }
+    Ok(cells_path)
+}
 
-    // Partial sweeps must not look like clean successes to callers
-    // gating on the exit status; the artifacts above still record the
-    // completed cells and each failure's message.
-    if report.failed() > 0 {
-        return Err(format!(
-            "{}/{} sweep cells failed (per-cell errors in {})",
-            report.failed(),
-            total,
-            cells_path.display()
-        ));
-    }
+/// `cloudmarket sweep worker --shard <file> --out <file>`: run one shard
+/// of a sweep in this process (via the shard file's embedded spec) and
+/// write a self-contained partial artifact for `sweep merge` or the
+/// `--workers` coordinator. Cell failures become error rows, not a
+/// non-zero exit - the merge step decides what a failed cell means.
+fn cmd_sweep_worker(args: &Args) -> Result<(), String> {
+    use cloudmarket::sweep::{self, shard};
+
+    let shard_path = PathBuf::from(
+        args.get("shard").ok_or("sweep worker requires --shard <file>")?,
+    );
+    let out_path =
+        PathBuf::from(args.get("out").ok_or("sweep worker requires --out <file>")?);
+    let threads = args.get_positive_usize("threads", 1)?;
+    let (spec, job) = shard::read_shard_file(&shard_path)?;
+    let cells = spec.cells();
+    let selected: Vec<sweep::Cell> = job.cell_ids.iter().map(|&id| cells[id]).collect();
+
+    // A stale partial from a crashed earlier run must not outlive this
+    // attempt: if we die mid-run, the caller sees a missing file, never
+    // an old one (writes below are atomic tmp+rename).
+    let _ = std::fs::remove_file(&out_path);
+
+    // Test-only fault injection (tests/sweep_process.rs): with
+    // CLOUDMARKET_SWEEP_FAULT=<shard_index>:<marker_path> targeting this
+    // shard and the marker not yet present, the marker is created and the
+    // worker aborts right after its first completed cell - a real
+    // mid-shard death for the coordinator's reassignment path. The
+    // marker makes the fault one-shot: the reassigned attempt runs clean.
+    let armed = match std::env::var("CLOUDMARKET_SWEEP_FAULT") {
+        Ok(fault) => match fault.split_once(':') {
+            Some((idx, marker)) if idx.parse::<usize>().ok() == Some(job.index) => {
+                let marker = PathBuf::from(marker);
+                !marker.exists() && std::fs::write(&marker, b"fault fired\n").is_ok()
+            }
+            _ => false,
+        },
+        Err(_) => false,
+    };
+    // Same-host workers die with their coordinator: `--workers` sets
+    // CLOUDMARKET_SWEEP_PARENT to the coordinator's PID, and between
+    // cells the worker checks it is still alive (via /proc on Linux; the
+    // watchdog stays disarmed where that probe is unavailable, and for
+    // manually-launched cluster workers, which have no such env). This
+    // covers the abort paths no coordinator-side cleanup can - Ctrl-C or
+    // SIGKILL of the coordinator - so orphans never run their full shard
+    // or rename partials into a later run's work dir.
+    let parent_probe: Option<PathBuf> = std::env::var("CLOUDMARKET_SWEEP_PARENT")
+        .ok()
+        .and_then(|pid| pid.parse::<u32>().ok())
+        .map(|pid| PathBuf::from(format!("/proc/{pid}")))
+        .filter(|probe| probe.exists());
+    let watch_parent = parent_probe.is_some();
+    let per_cell = move |done: usize, _total: usize, _r: &sweep::CellResult| {
+        if armed && done >= 1 {
+            eprintln!("sweep worker: injected fault firing (aborting mid-shard)");
+            std::process::abort();
+        }
+        if let Some(probe) = &parent_probe {
+            if !probe.exists() {
+                eprintln!("sweep worker: coordinator is gone; exiting mid-shard");
+                std::process::exit(3);
+            }
+        }
+    };
+
+    eprintln!(
+        "sweep worker: shard {}/{} ({} cells) on {threads} thread(s) ...",
+        job.index,
+        job.of,
+        selected.len()
+    );
+    let results = sweep::run_cells(
+        &spec,
+        &selected,
+        threads,
+        if armed || watch_parent { Some(&per_cell) } else { None },
+    );
+    let failed = results.iter().filter(|r| r.outcome.is_err()).count();
+    shard::write_partial(&out_path, &spec, job.index, &results)?;
+    eprintln!(
+        "sweep worker: shard {} done ({} cells, {failed} failed) -> {}",
+        job.index,
+        results.len(),
+        out_path.display()
+    );
     Ok(())
+}
+
+/// `cloudmarket sweep merge <partial.json>...`: recombine worker partials
+/// (same host or copied in from a cluster) into the standard sweep
+/// artifacts. Refuses partials from different specs and overlapping or
+/// incomplete cell coverage; the merged bytes equal a single-process run.
+fn cmd_sweep_merge(args: &Args, out_dir: &std::path::Path) -> Result<(), String> {
+    use cloudmarket::sweep::shard;
+
+    let inputs = &args.positional[2..];
+    if inputs.is_empty() {
+        return Err(
+            "sweep merge requires partial files: cloudmarket sweep merge <partial.json>... \
+             [--out-dir <dir>]"
+                .into(),
+        );
+    }
+    let partials = inputs
+        .iter()
+        .map(|p| shard::read_partial(std::path::Path::new(p)))
+        .collect::<Result<Vec<_>, _>>()?;
+    let (_spec, report) = shard::merge_partials(partials)?;
+    finish_sweep(&report, out_dir)
 }
 
 fn cmd_trace(args: &Args, out_dir: &std::path::Path) -> Result<(), String> {
@@ -418,6 +594,8 @@ mod tests {
     fn usage_mentions_sweep_and_its_flags() {
         let u = usage();
         assert!(u.contains("sweep"), "{u}");
+        assert!(u.contains("sweep worker"), "{u}");
+        assert!(u.contains("sweep merge"), "{u}");
         for flag in [
             "--threads",
             "--seeds",
@@ -426,6 +604,9 @@ mod tests {
             "--axis",
             "--substrate",
             "--retain-series",
+            "--workers",
+            "--shard",
+            "--out",
         ] {
             assert!(u.contains(flag), "usage missing {flag}:\n{u}");
         }
@@ -483,6 +664,156 @@ mod tests {
     #[test]
     fn unknown_subcommand_is_an_error() {
         assert!(run(&argv(&["frobnicate"])).is_err());
+        let err = run(&argv(&["sweep", "frobnicate"])).unwrap_err();
+        assert!(err.contains("unknown sweep subcommand"), "{err}");
+    }
+
+    fn test_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("cloudmarket_cli_{}_{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// `--workers 0` and malformed worker invocations exit non-zero with
+    /// clear messages, before any process spawns.
+    #[test]
+    fn sweep_workers_and_worker_reject_bad_input() {
+        let err = run(&argv(&["sweep", "--workers", "0"])).unwrap_err();
+        assert!(err.contains("--workers must be >= 1"), "{err}");
+        let err = run(&argv(&["sweep", "--workers", "abc"])).unwrap_err();
+        assert!(err.contains("expects an integer"), "{err}");
+
+        let err = run(&argv(&["sweep", "worker"])).unwrap_err();
+        assert!(err.contains("--shard"), "{err}");
+        let err = run(&argv(&["sweep", "worker", "--shard", "x.json"])).unwrap_err();
+        assert!(err.contains("--out"), "{err}");
+
+        // Missing shard file.
+        let dir = test_dir("worker_errs");
+        let missing = dir.join("nope.json");
+        let out = dir.join("out.json");
+        let err = run(&argv(&[
+            "sweep",
+            "worker",
+            "--shard",
+            missing.to_str().unwrap(),
+            "--out",
+            out.to_str().unwrap(),
+        ]))
+        .unwrap_err();
+        assert!(err.contains("reading shard file"), "{err}");
+
+        // Corrupt shard file.
+        let corrupt = dir.join("corrupt.json");
+        std::fs::write(&corrupt, "{ this is not json").unwrap();
+        let err = run(&argv(&[
+            "sweep",
+            "worker",
+            "--shard",
+            corrupt.to_str().unwrap(),
+            "--out",
+            out.to_str().unwrap(),
+        ]))
+        .unwrap_err();
+        assert!(err.contains("shard file"), "{err}");
+        assert!(!out.exists(), "no partial may be written on a bad shard file");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn fake_cell_result(cell: cloudmarket::sweep::Cell) -> cloudmarket::sweep::CellResult {
+        use cloudmarket::engine::{Report, SpotStats};
+        cloudmarket::sweep::CellResult {
+            cell,
+            outcome: Ok(Report {
+                policy: "first-fit",
+                clock_end: 1.0,
+                events_processed: 1,
+                wall: std::time::Duration::ZERO,
+                finished: 0,
+                terminated: 0,
+                failed: 0,
+                still_active: 0,
+                cloudlets_finished: 0,
+                cloudlets_canceled: 0,
+                alloc_attempts: 0,
+                alloc_failures: 0,
+                spot: SpotStats::default(),
+            }),
+            series: None,
+        }
+    }
+
+    /// `sweep merge` error paths: no inputs, unreadable input, partials
+    /// with overlapping cell ids, and partials missing a shard.
+    #[test]
+    fn sweep_merge_rejects_bad_partial_sets() {
+        use cloudmarket::sweep::{shard, PolicySpec, SweepSpec};
+
+        let err = run(&argv(&["sweep", "merge"])).unwrap_err();
+        assert!(err.contains("requires partial files"), "{err}");
+        let err = run(&argv(&["sweep", "merge", "/nonexistent/partial.json"])).unwrap_err();
+        assert!(err.contains("reading partial"), "{err}");
+
+        let dir = test_dir("merge_errs");
+        let spec = SweepSpec::new(ComparisonConfig::default())
+            .with_seeds(vec![1, 2])
+            .with_policies(vec![PolicySpec::FirstFit, PolicySpec::BestFit]);
+        let cells = spec.cells();
+        let shards = shard::partition(&spec, 2);
+        for s in &shards {
+            let results: Vec<_> =
+                s.cell_ids.iter().map(|&id| fake_cell_result(cells[id])).collect();
+            shard::write_partial(
+                &dir.join(format!("sweep_partial{:04}.json", s.index)),
+                &spec,
+                s.index,
+                &results,
+            )
+            .unwrap();
+        }
+        let p0 = dir.join("sweep_partial0000.json");
+        let p1 = dir.join("sweep_partial0001.json");
+        let out = dir.join("merged");
+
+        // Overlap: shard 0 fed in twice alongside shard 1.
+        let err = run(&argv(&[
+            "sweep",
+            "merge",
+            p0.to_str().unwrap(),
+            p0.to_str().unwrap(),
+            p1.to_str().unwrap(),
+            "--out-dir",
+            out.to_str().unwrap(),
+        ]))
+        .unwrap_err();
+        assert!(err.contains("overlapping cell id"), "{err}");
+
+        // Missing: shard 1 absent.
+        let err = run(&argv(&[
+            "sweep",
+            "merge",
+            p0.to_str().unwrap(),
+            "--out-dir",
+            out.to_str().unwrap(),
+        ]))
+        .unwrap_err();
+        assert!(err.contains("missing"), "{err}");
+
+        // The full set merges and writes artifacts.
+        run(&argv(&[
+            "sweep",
+            "merge",
+            p0.to_str().unwrap(),
+            p1.to_str().unwrap(),
+            "--out-dir",
+            out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert!(out.join("sweep_cells.csv").exists());
+        assert!(out.join("sweep_aggregate.json").exists());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     /// Anti-drift check for `docs/cli.md`: every flag the CLI reference

@@ -108,13 +108,38 @@ pub fn run_with_timing(spec: &SweepSpec, threads: usize) -> (SweepReport, SweepT
     run_instrumented(spec, threads, None)
 }
 
+/// Run exactly `cells` (a subset of `spec`'s enumeration, e.g. one
+/// process shard from [`super::shard::partition`]) on `threads` workers,
+/// returning one [`CellResult`] per input cell **in input order**. The
+/// same pool, lazy-prebuild and panic-isolation machinery as [`run`];
+/// `sweep worker` subprocesses are built on this.
+pub fn run_cells(
+    spec: &SweepSpec,
+    cells: &[Cell],
+    threads: usize,
+    on_cell: Option<ProgressFn<'_>>,
+) -> Vec<CellResult> {
+    run_cells_instrumented(spec, cells, threads, on_cell).0
+}
+
 fn run_instrumented(
     spec: &SweepSpec,
     threads: usize,
     on_cell: Option<ProgressFn<'_>>,
 ) -> (SweepReport, SweepTiming) {
-    let start = Instant::now();
     let cells = spec.cells();
+    let threads = threads.max(1).min(cells.len().max(1));
+    let (results, timing) = run_cells_instrumented(spec, &cells, threads, on_cell);
+    (SweepReport { cells: results, threads }, timing)
+}
+
+fn run_cells_instrumented(
+    spec: &SweepSpec,
+    cells: &[Cell],
+    threads: usize,
+    on_cell: Option<ProgressFn<'_>>,
+) -> (Vec<CellResult>, SweepTiming) {
+    let start = Instant::now();
     let total = cells.len();
 
     // Lazy shared prebuilds: the slot table is sized from the grid here;
@@ -122,7 +147,7 @@ fn run_instrumented(
     // execution. Build panics are caught per slot and surface as each
     // affected cell's error row instead of aborting the sweep - the same
     // isolation contract the workers give running cells.
-    let slots = PrebuildSlots::for_cells(&cells);
+    let slots = PrebuildSlots::for_cells(cells);
 
     let threads = threads.max(1).min(total.max(1));
     let next = AtomicUsize::new(0);
@@ -135,7 +160,6 @@ fn run_instrumented(
     result_slots.resize_with(total, || None);
 
     std::thread::scope(|scope| {
-        let cells = &cells;
         let slots = &slots;
         let next = &next;
         let done = &done;
@@ -202,7 +226,6 @@ fn run_instrumented(
         .enumerate()
         .map(|(i, r)| r.unwrap_or_else(|| panic!("cell {i} produced no result")))
         .collect();
-    let report = SweepReport { cells: merged, threads };
     let merge = merge_start.elapsed();
     let first = first_done_ns.load(Ordering::Relaxed);
     let timing = SweepTiming {
@@ -213,7 +236,7 @@ fn run_instrumented(
         first_cell_done: if first == u64::MAX { Duration::ZERO } else { Duration::from_nanos(first) },
         prebuilds_built: slots.built(),
     };
-    (report, timing)
+    (merged, timing)
 }
 
 /// Run one cell to completion on the worker's recycled scratch; panics
@@ -357,6 +380,31 @@ mod tests {
         let r = report.cells[0].report().unwrap();
         assert_eq!(r.spot.total_spot, 20);
         assert!(r.events_processed > 0);
+    }
+
+    /// `run_cells` runs exactly the given subset, returns results in
+    /// input order, and each result bit-matches the same cell out of a
+    /// full-grid `run` (the process-shard contract).
+    #[test]
+    fn run_cells_subset_matches_full_run() {
+        let scenario = ComparisonConfig { terminate_at: 300.0, ..Default::default() };
+        let spec = SweepSpec::new(scenario)
+            .with_seeds(vec![20_250_710, 20_250_711])
+            .with_policies(vec![PolicySpec::FirstFit, PolicySpec::BestFit]);
+        let full = run(&spec, 2);
+        let cells = spec.cells();
+        let subset = [cells[3], cells[0]]; // deliberately out of id order
+        let results = run_cells(&spec, &subset, 2, None);
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].cell.id, 3, "results come back in input order");
+        assert_eq!(results[1].cell.id, 0);
+        for r in &results {
+            let want = full.cells[r.cell.id].report().unwrap();
+            let got = r.report().unwrap();
+            assert_eq!(got.spot.interruptions, want.spot.interruptions);
+            assert_eq!(got.clock_end.to_bits(), want.clock_end.to_bits());
+            assert_eq!(got.events_processed, want.events_processed);
+        }
     }
 
     /// The timing breakdown reports lazily-built prebuilds and a sane

@@ -561,6 +561,32 @@ impl SeriesFilter {
         self.clauses.is_empty()
     }
 
+    /// The filter in [`SeriesFilter::parse`] syntax, such that
+    /// `parse(f.spec_string()) == f` (the shard-file serialization of a
+    /// sweep spec stores this string). Every publicly-constructible
+    /// filter is expressible: `parse` admits `all`/`none` only as whole
+    /// inputs, so an `All` clause can never coexist with keyed clauses.
+    pub fn spec_string(&self) -> String {
+        if self.clauses.is_empty() {
+            return "none".to_string();
+        }
+        if self.clauses.contains(&RetainClause::All) {
+            debug_assert_eq!(self.clauses.len(), 1, "All never mixes with keyed clauses");
+            return "all".to_string();
+        }
+        self.clauses
+            .iter()
+            .map(|c| match c {
+                RetainClause::All => unreachable!("handled above"),
+                RetainClause::Policy(name) => format!("policy={name}"),
+                RetainClause::Seed(s) => format!("seed={s}"),
+                RetainClause::Id(i) => format!("id={i}"),
+                RetainClause::Substrate(sub) => format!("substrate={}", sub.name()),
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
     /// Whether `cell`'s series should be kept.
     pub fn matches(&self, cell: &Cell) -> bool {
         self.clauses.iter().any(|c| match c {
@@ -596,7 +622,11 @@ impl Cell {
 /// order of the pre-sweep `run_multi` loop) plus any explicitly listed
 /// extra cells, where the variants are the policy list multiplied by each
 /// declared [`ScenarioAxis`] in order.
-#[derive(Debug, Clone)]
+///
+/// Equality is field-wise (`PartialEq`); `sweep::shard` relies on it to
+/// pin that a spec survives the shard-file serialization round trip
+/// unchanged.
+#[derive(Debug, Clone, PartialEq)]
 pub struct SweepSpec {
     /// Comparison-substrate scenario template; each cell overrides `seed`
     /// (and its spot config, when a spot axis says so).
@@ -957,6 +987,25 @@ mod tests {
             SeriesFilter::parse("policy=hlem-adjusted").is_err(),
             "policy typos must fail at parse time, not retain nothing"
         );
+    }
+
+    /// Every publicly-constructible filter round-trips through its
+    /// `spec_string` (the shard-file wire form).
+    #[test]
+    fn series_filter_spec_string_round_trips() {
+        for src in [
+            "none",
+            "all",
+            "policy=first-fit",
+            "policy=hlem-vmp-adjusted,seed=99",
+            "seed=11,id=4,substrate=trace",
+            "substrate=comparison",
+        ] {
+            let f = SeriesFilter::parse(src).unwrap();
+            assert_eq!(SeriesFilter::parse(&f.spec_string()).unwrap(), f, "via {src}");
+        }
+        assert_eq!(SeriesFilter::none().spec_string(), "none");
+        assert_eq!(SeriesFilter::all().spec_string(), "all");
     }
 
     #[test]

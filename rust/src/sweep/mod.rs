@@ -45,6 +45,16 @@
 //!   values as dedicated CSV columns / JSON fields, exported through
 //!   `util::csv` / `util::json`; retained per-cell series export for
 //!   Fig-13-style curves across the grid.
+//! - [`shard`]: process-level fan-out on top of the same Cell/merge
+//!   contract - cost-weighted shard job files, a `cloudmarket sweep
+//!   worker` subcommand emitting self-contained partial artifacts, a
+//!   validating merge ([`merge_partials`], also `cloudmarket sweep
+//!   merge` for cluster use), and a same-host [`coordinate`] that spawns
+//!   worker subprocesses and reassigns shards from crashed workers
+//!   (`cloudmarket sweep --workers N`). Merged artifacts stay
+//!   byte-identical to the single-process run; `tests/sweep_process.rs`
+//!   pins this across real subprocesses, including after a worker is
+//!   killed mid-shard.
 //!
 //! # Determinism (§Perf: sweep fan-out)
 //!
@@ -73,11 +83,17 @@ pub mod driver;
 pub mod grid;
 pub mod prebuild;
 pub mod report;
+pub mod shard;
 
-pub use driver::{default_threads, run, run_with_progress, run_with_timing, SweepTiming};
+pub use driver::{
+    default_threads, run, run_cells, run_with_progress, run_with_timing, SweepTiming,
+};
 pub use grid::{
     Cell, CellSpec, PolicySpec, ScenarioAxis, SeriesFilter, SpotOverride, Substrate, SweepSpec,
     TraceSubstrate,
 };
 pub use prebuild::{build_prebuilt, Prebuilt, PrebuildCache, PrebuildSlots};
 pub use report::{CellResult, SweepReport, VariantAggregate};
+pub use shard::{
+    coordinate, merge_partials, partition, CoordinateOptions, CoordinateOutcome, Partial, Shard,
+};

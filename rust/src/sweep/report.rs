@@ -58,6 +58,33 @@ pub struct VariantAggregate {
 }
 
 impl SweepReport {
+    /// Assemble a report from unordered cell results (e.g. process-shard
+    /// partials): sorts by cell id and verifies the ids are exactly
+    /// `0..n` with no duplicates or holes, so a merge of partial
+    /// artifacts can never silently drop or double-count a cell.
+    /// `threads` is observability-only, like the field it fills.
+    pub fn merged_from_cells(
+        mut cells: Vec<CellResult>,
+        threads: usize,
+    ) -> Result<SweepReport, String> {
+        cells.sort_by_key(|c| c.cell.id);
+        for (i, pair) in cells.windows(2).enumerate() {
+            if pair[0].cell.id == pair[1].cell.id {
+                return Err(format!(
+                    "overlapping cell id {} (cells {i} and {})",
+                    pair[0].cell.id,
+                    i + 1
+                ));
+            }
+        }
+        for (i, c) in cells.iter().enumerate() {
+            if c.cell.id != i {
+                return Err(format!("missing cell id {i} (next present id is {})", c.cell.id));
+            }
+        }
+        Ok(SweepReport { cells, threads })
+    }
+
     pub fn total(&self) -> usize {
         self.cells.len()
     }
@@ -320,6 +347,31 @@ mod tests {
             ],
             threads: 2,
         }
+    }
+
+    /// `merged_from_cells` restores id order and rejects overlapping or
+    /// missing ids (the partial-merge safety contract).
+    #[test]
+    fn merged_from_cells_sorts_and_validates() {
+        let rep = sample_report();
+        let mut shuffled = rep.cells.clone();
+        shuffled.swap(0, 3);
+        shuffled.swap(1, 2);
+        let merged = SweepReport::merged_from_cells(shuffled, 3).unwrap();
+        assert_eq!(merged.threads, 3);
+        for (i, c) in merged.cells.iter().enumerate() {
+            assert_eq!(c.cell.id, i);
+        }
+
+        let mut dup = rep.cells.clone();
+        dup[1].cell.id = 2;
+        let err = SweepReport::merged_from_cells(dup, 1).unwrap_err();
+        assert!(err.contains("overlapping cell id 2"), "{err}");
+
+        let mut hole = rep.cells.clone();
+        hole.remove(1);
+        let err = SweepReport::merged_from_cells(hole, 1).unwrap_err();
+        assert!(err.contains("missing cell id 1"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,1571 @@
+//! Process-level sweep fan-out: shard job files, self-contained partial
+//! artifacts, a deterministic merge, and a subprocess coordinator.
+//!
+//! The thread-pool driver saturates one machine; 10k+ cell grids mixing
+//! expensive trace-substrate cells with cheap comparison cells want
+//! process pools (and, across hosts, a job-file protocol). This module is
+//! that layer:
+//!
+//! - [`partition`] splits a [`SweepSpec`]'s enumerated cells into
+//!   [`Shard`]s, **cost-weighted** so trace-substrate cells (which
+//!   dominate runtime via per-seed trace generation + bigger event
+//!   counts) spread across shards instead of clumping into one straggler.
+//! - [`write_shard_file`] / [`read_shard_file`] serialize a shard job:
+//!   the **full spec** plus the shard's cell ids, so a worker process -
+//!   on this host or another - needs nothing but the file.
+//! - `cloudmarket sweep worker --shard <file> --out <file>` (in
+//!   `main.rs`, on [`super::driver::run_cells`]) runs one shard
+//!   in-process and writes a **self-contained partial artifact**: the
+//!   spec, the shard's cell rows and retained series - and, like every
+//!   sweep artifact, no wall-clock or thread/process data.
+//! - [`merge_partials`] recombines partials by cell id and rejects
+//!   overlapping, missing, out-of-range or foreign (different-spec)
+//!   cells, yielding a [`SweepReport`] whose serialized artifacts are
+//!   **byte-identical to the single-process [`super::run`] output** -
+//!   `tests/sweep_process.rs` pins this across real worker subprocesses
+//!   at 1/2/4 workers, including after a worker is killed mid-shard.
+//! - [`coordinate`] is the same-host orchestration (`cloudmarket sweep
+//!   --workers N`): it spawns one worker subprocess per shard, monitors
+//!   them, **reassigns the shard of a crashed/killed worker** to a fresh
+//!   subprocess (bounded retries), and merges. For cluster use, run the
+//!   shard/worker/merge steps by hand instead (`docs/sweep-cookbook.md`,
+//!   "Cluster-scale sweeps").
+//!
+//! # Wire format
+//!
+//! Plain JSON through `util::json`. Exactness rules: `f64` values are
+//! written with Rust's shortest-round-trip `Display` (and re-parsed with
+//! `str::parse::<f64>`), so every finite float survives the process
+//! boundary bit-for-bit; unbounded `u64` counters (seeds, event counts)
+//! are written as decimal **strings** because JSON numbers are doubles
+//! and would corrupt values above 2^53; small indices (cell ids, shard
+//! indices) stay plain numbers. Both file kinds embed a format name,
+//! version, and an FNV-1a [`spec_digest`] of the spec so partials from a
+//! different sweep (or an edited/corrupt file) fail loudly at merge time
+//! instead of blending into the artifacts.
+
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::time::Duration;
+
+use crate::config::scenario::ComparisonConfig;
+use crate::engine::{EngineConfig, Report, SpotStats, VictimPolicy};
+use crate::cloudlet::SchedulerKind;
+use crate::metrics::TimeSeries;
+use crate::trace::synth::SynthConfig;
+use crate::trace::workload::WorkloadConfig;
+use crate::util::json::{parse, Json, JsonObj};
+use crate::vm::{InterruptionBehavior, SpotConfig};
+
+use super::grid::{
+    Cell, CellSpec, PolicySpec, ScenarioAxis, SeriesFilter, SpotOverride, Substrate, SweepSpec,
+    TraceSubstrate,
+};
+use super::report::{CellResult, SweepReport};
+
+/// Wire-format version shared by shard and partial files; bump on any
+/// incompatible schema change.
+pub const WIRE_VERSION: u64 = 1;
+const SHARD_FORMAT: &str = "cloudmarket-sweep-shard";
+const PARTIAL_FORMAT: &str = "cloudmarket-sweep-partial";
+
+/// Relative cost of one trace-substrate cell vs one comparison cell for
+/// partitioning. Trace cells pay per-seed trace generation plus a larger
+/// event volume; the exact ratio only affects balance, never results.
+pub const TRACE_CELL_WEIGHT: u64 = 8;
+/// Relative cost of one comparison-substrate cell (the unit).
+pub const COMPARISON_CELL_WEIGHT: u64 = 1;
+
+/// Partitioning cost of one cell (see the weight constants).
+pub fn cell_weight(cell: &Cell) -> u64 {
+    match cell.spec.substrate {
+        Substrate::Comparison => COMPARISON_CELL_WEIGHT,
+        Substrate::Trace => TRACE_CELL_WEIGHT,
+    }
+}
+
+/// One shard of a sweep: a subset of the spec's enumerated cell ids.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Shard {
+    /// Position in the partition (`0..of`).
+    pub index: usize,
+    /// Total shards in the partition.
+    pub of: usize,
+    /// Assigned cell ids, ascending.
+    pub cell_ids: Vec<usize>,
+    /// Summed [`cell_weight`] of the assigned cells (diagnostics and the
+    /// balance property in `tests/properties.rs`; not serialized -
+    /// recomputed from the spec on read).
+    pub weight: u64,
+}
+
+/// Split `spec`'s cells into at most `shards` shards (clamped to the cell
+/// count, so no shard is empty unless the grid itself is) using greedy
+/// LPT: cells are taken heaviest-first (stable id tiebreak) and each goes
+/// to the currently lightest shard. Deterministic, and balanced to within
+/// one cell: `max_weight <= min_weight + max(cell_weight)`.
+///
+/// The partition never affects results - the merge is by cell id - so the
+/// shard count is free to differ from the worker count that runs them.
+pub fn partition(spec: &SweepSpec, shards: usize) -> Vec<Shard> {
+    let cells = spec.cells();
+    let n = shards.max(1).min(cells.len().max(1));
+    let mut order: Vec<usize> = (0..cells.len()).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(cell_weight(&cells[i])), i));
+    let mut bins: Vec<(u64, Vec<usize>)> = vec![(0, Vec::new()); n];
+    for i in order {
+        // First minimum = lowest shard index on ties: deterministic.
+        let lightest = (0..n).min_by_key(|&b| bins[b].0).unwrap();
+        bins[lightest].0 += cell_weight(&cells[i]);
+        bins[lightest].1.push(cells[i].id);
+    }
+    bins.into_iter()
+        .enumerate()
+        .map(|(index, (weight, mut cell_ids))| {
+            cell_ids.sort_unstable();
+            Shard { index, of: n, cell_ids, weight }
+        })
+        .collect()
+}
+
+/// FNV-1a 64 over the spec's compact serialization, hex-encoded. Embedded
+/// in shard and partial files so a merge can refuse inputs produced from
+/// a different sweep.
+pub fn spec_digest(spec: &SweepSpec) -> String {
+    let text = spec_to_json(spec).to_string_compact();
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in text.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+// ---------------------------------------------------------------------
+// Encoding helpers. u64 counters go through strings (exact beyond 2^53);
+// finite f64 through JSON numbers (shortest-round-trip Display, exact);
+// small indices through JSON numbers.
+// ---------------------------------------------------------------------
+
+fn enc_u64(v: u64) -> Json {
+    Json::Str(v.to_string())
+}
+
+fn enc_usize(v: usize) -> Json {
+    debug_assert!(v < (1usize << 53), "index too large for a JSON number");
+    Json::Num(v as f64)
+}
+
+fn enc_f64(v: f64) -> Json {
+    debug_assert!(v.is_finite(), "non-finite f64 in sweep wire format");
+    Json::Num(v)
+}
+
+fn as_obj<'a>(v: &'a Json, what: &str) -> Result<&'a JsonObj, String> {
+    v.as_obj().ok_or_else(|| format!("{what}: expected an object"))
+}
+
+fn field<'a>(o: &'a JsonObj, key: &str) -> Result<&'a Json, String> {
+    o.get(key).ok_or_else(|| format!("missing field '{key}'"))
+}
+
+fn str_field<'a>(o: &'a JsonObj, key: &str) -> Result<&'a str, String> {
+    field(o, key)?.as_str().ok_or_else(|| format!("field '{key}' is not a string"))
+}
+
+fn f64_field(o: &JsonObj, key: &str) -> Result<f64, String> {
+    field(o, key)?.as_f64().ok_or_else(|| format!("field '{key}' is not a number"))
+}
+
+fn u64_field(o: &JsonObj, key: &str) -> Result<u64, String> {
+    str_field(o, key)?
+        .parse()
+        .map_err(|_| format!("field '{key}' is not a u64 decimal string"))
+}
+
+fn usize_field(o: &JsonObj, key: &str) -> Result<usize, String> {
+    let v = f64_field(o, key)?;
+    if v < 0.0 || v.fract() != 0.0 || v >= (1u64 << 53) as f64 {
+        return Err(format!("field '{key}' is not a non-negative integer"));
+    }
+    Ok(v as usize)
+}
+
+fn arr_field<'a>(o: &'a JsonObj, key: &str) -> Result<&'a [Json], String> {
+    field(o, key)?.as_arr().ok_or_else(|| format!("field '{key}' is not an array"))
+}
+
+fn opt_json(v: &Json) -> Option<&Json> {
+    match v {
+        Json::Null => None,
+        other => Some(other),
+    }
+}
+
+fn num_of(v: &Json, what: &str) -> Result<f64, String> {
+    v.as_f64().ok_or_else(|| format!("{what}: expected a number"))
+}
+
+fn str_of<'a>(v: &'a Json, what: &str) -> Result<&'a str, String> {
+    v.as_str().ok_or_else(|| format!("{what}: expected a string"))
+}
+
+// ---------------------------------------------------------------------
+// SweepSpec <-> JSON
+// ---------------------------------------------------------------------
+
+fn spot_config_to_json(s: &SpotConfig) -> Json {
+    let mut o = JsonObj::new();
+    o.set("behavior", Json::Str(s.behavior.name().to_string()));
+    o.set("min_running_time", enc_f64(s.min_running_time));
+    o.set("warning_time", enc_f64(s.warning_time));
+    o.set("hibernation_timeout", enc_f64(s.hibernation_timeout));
+    Json::Obj(o)
+}
+
+fn spot_config_from_json(v: &Json) -> Result<SpotConfig, String> {
+    let o = as_obj(v, "spot config")?;
+    Ok(SpotConfig {
+        behavior: InterruptionBehavior::parse(str_field(o, "behavior")?)?,
+        min_running_time: f64_field(o, "min_running_time")?,
+        warning_time: f64_field(o, "warning_time")?,
+        hibernation_timeout: f64_field(o, "hibernation_timeout")?,
+    })
+}
+
+fn comparison_to_json(c: &ComparisonConfig) -> Json {
+    let mut o = JsonObj::new();
+    o.set("seed", enc_u64(c.seed));
+    o.set("mips_per_pe", enc_f64(c.mips_per_pe));
+    o.set("immediate_on_demand", enc_usize(c.immediate_on_demand));
+    o.set("max_delay", enc_f64(c.max_delay));
+    o.set("exec_time", Json::Arr(vec![enc_f64(c.exec_time.0), enc_f64(c.exec_time.1)]));
+    o.set("spot", spot_config_to_json(&c.spot));
+    o.set("waiting_time", enc_f64(c.waiting_time));
+    o.set("terminate_at", enc_f64(c.terminate_at));
+    Json::Obj(o)
+}
+
+fn comparison_from_json(v: &Json) -> Result<ComparisonConfig, String> {
+    let o = as_obj(v, "comparison scenario")?;
+    let exec = arr_field(o, "exec_time")?;
+    if exec.len() != 2 {
+        return Err("field 'exec_time' must be a [lo, hi] pair".into());
+    }
+    Ok(ComparisonConfig {
+        seed: u64_field(o, "seed")?,
+        mips_per_pe: f64_field(o, "mips_per_pe")?,
+        immediate_on_demand: usize_field(o, "immediate_on_demand")?,
+        max_delay: f64_field(o, "max_delay")?,
+        exec_time: (num_of(&exec[0], "exec_time[0]")?, num_of(&exec[1], "exec_time[1]")?),
+        spot: spot_config_from_json(field(o, "spot")?)?,
+        waiting_time: f64_field(o, "waiting_time")?,
+        terminate_at: f64_field(o, "terminate_at")?,
+    })
+}
+
+fn scheduler_name(k: SchedulerKind) -> &'static str {
+    match k {
+        SchedulerKind::TimeShared => "time-shared",
+        SchedulerKind::SpaceShared => "space-shared",
+    }
+}
+
+fn scheduler_parse(s: &str) -> Result<SchedulerKind, String> {
+    match s {
+        "time-shared" => Ok(SchedulerKind::TimeShared),
+        "space-shared" => Ok(SchedulerKind::SpaceShared),
+        other => Err(format!("unknown scheduler '{other}'")),
+    }
+}
+
+fn engine_to_json(e: &EngineConfig) -> Json {
+    let mut o = JsonObj::new();
+    o.set("min_dt", enc_f64(e.min_dt));
+    o.set("scheduling_interval", enc_f64(e.scheduling_interval));
+    o.set("sample_interval", enc_f64(e.sample_interval));
+    o.set("vm_destruction_delay", enc_f64(e.vm_destruction_delay));
+    o.set("scheduler", Json::Str(scheduler_name(e.scheduler).to_string()));
+    o.set("retry_interval", enc_f64(e.retry_interval));
+    o.set("resubmit_cooldown", enc_f64(e.resubmit_cooldown));
+    o.set("max_log_events", enc_usize(e.max_log_events));
+    Json::Obj(o)
+}
+
+fn engine_from_json(v: &Json) -> Result<EngineConfig, String> {
+    let o = as_obj(v, "engine config")?;
+    Ok(EngineConfig {
+        min_dt: f64_field(o, "min_dt")?,
+        scheduling_interval: f64_field(o, "scheduling_interval")?,
+        sample_interval: f64_field(o, "sample_interval")?,
+        vm_destruction_delay: f64_field(o, "vm_destruction_delay")?,
+        scheduler: scheduler_parse(str_field(o, "scheduler")?)?,
+        retry_interval: f64_field(o, "retry_interval")?,
+        resubmit_cooldown: f64_field(o, "resubmit_cooldown")?,
+        max_log_events: usize_field(o, "max_log_events")?,
+    })
+}
+
+fn synth_to_json(s: &SynthConfig) -> Json {
+    let mut o = JsonObj::new();
+    o.set("seed", enc_u64(s.seed));
+    o.set("machines", enc_usize(s.machines));
+    o.set("days", enc_f64(s.days));
+    o.set("tasks_per_hour", enc_f64(s.tasks_per_hour));
+    o.set("diurnal_amplitude", enc_f64(s.diurnal_amplitude));
+    o.set("peak_hour", enc_f64(s.peak_hour));
+    o.set("users", enc_usize(s.users));
+    o.set("machine_churn", enc_f64(s.machine_churn));
+    o.set("evict_prob", enc_f64(s.evict_prob));
+    o.set("fail_prob", enc_f64(s.fail_prob));
+    o.set("median_duration", enc_f64(s.median_duration));
+    o.set("duration_sigma", enc_f64(s.duration_sigma));
+    Json::Obj(o)
+}
+
+fn synth_from_json(v: &Json) -> Result<SynthConfig, String> {
+    let o = as_obj(v, "synth config")?;
+    Ok(SynthConfig {
+        seed: u64_field(o, "seed")?,
+        machines: usize_field(o, "machines")?,
+        days: f64_field(o, "days")?,
+        tasks_per_hour: f64_field(o, "tasks_per_hour")?,
+        diurnal_amplitude: f64_field(o, "diurnal_amplitude")?,
+        peak_hour: f64_field(o, "peak_hour")?,
+        users: usize_field(o, "users")?,
+        machine_churn: f64_field(o, "machine_churn")?,
+        evict_prob: f64_field(o, "evict_prob")?,
+        fail_prob: f64_field(o, "fail_prob")?,
+        median_duration: f64_field(o, "median_duration")?,
+        duration_sigma: f64_field(o, "duration_sigma")?,
+    })
+}
+
+fn workload_to_json(w: &WorkloadConfig) -> Json {
+    let mut o = JsonObj::new();
+    o.set("seed", enc_u64(w.seed));
+    o.set("pes_per_unit", enc_usize(w.pes_per_unit as usize));
+    o.set("mips_per_pe", enc_f64(w.mips_per_pe));
+    o.set("ram_per_unit", enc_f64(w.ram_per_unit));
+    o.set("group_size", enc_usize(w.group_size));
+    o.set("spot_instances", enc_usize(w.spot_instances));
+    o.set(
+        "spot_durations",
+        Json::Arr(w.spot_durations.iter().map(|&d| enc_f64(d)).collect()),
+    );
+    o.set("spot", spot_config_to_json(&w.spot));
+    o.set("waiting_time", enc_f64(w.waiting_time));
+    o.set("max_trace_vms", enc_usize(w.max_trace_vms));
+    Json::Obj(o)
+}
+
+fn workload_from_json(v: &Json) -> Result<WorkloadConfig, String> {
+    let o = as_obj(v, "workload config")?;
+    let pes = usize_field(o, "pes_per_unit")?;
+    let durations = arr_field(o, "spot_durations")?
+        .iter()
+        .map(|d| num_of(d, "spot_durations entry"))
+        .collect::<Result<Vec<f64>, _>>()?;
+    Ok(WorkloadConfig {
+        seed: u64_field(o, "seed")?,
+        pes_per_unit: u32::try_from(pes).map_err(|_| "pes_per_unit too large".to_string())?,
+        mips_per_pe: f64_field(o, "mips_per_pe")?,
+        ram_per_unit: f64_field(o, "ram_per_unit")?,
+        group_size: usize_field(o, "group_size")?,
+        spot_instances: usize_field(o, "spot_instances")?,
+        spot_durations: durations,
+        spot: spot_config_from_json(field(o, "spot")?)?,
+        waiting_time: f64_field(o, "waiting_time")?,
+        max_trace_vms: usize_field(o, "max_trace_vms")?,
+    })
+}
+
+fn trace_substrate_to_json(t: &TraceSubstrate) -> Json {
+    let mut o = JsonObj::new();
+    o.set("synth", synth_to_json(&t.synth));
+    o.set("workload", workload_to_json(&t.workload));
+    o.set("sample_interval", enc_f64(t.sample_interval));
+    Json::Obj(o)
+}
+
+fn trace_substrate_from_json(v: &Json) -> Result<TraceSubstrate, String> {
+    let o = as_obj(v, "trace substrate")?;
+    Ok(TraceSubstrate {
+        synth: synth_from_json(field(o, "synth")?)?,
+        workload: workload_from_json(field(o, "workload")?)?,
+        sample_interval: f64_field(o, "sample_interval")?,
+    })
+}
+
+fn policy_to_json(p: &PolicySpec) -> Json {
+    let mut o = JsonObj::new();
+    o.set("name", Json::Str(p.name().to_string()));
+    if let PolicySpec::Hlem { alpha, .. } = p {
+        o.set("alpha", enc_f64(*alpha));
+    }
+    Json::Obj(o)
+}
+
+fn policy_from_json(v: &Json) -> Result<PolicySpec, String> {
+    let o = as_obj(v, "policy")?;
+    // The name vocabulary lives in `PolicySpec::parse` (one source of
+    // truth); the stored alpha is then restored exactly, since `parse`
+    // zeroes it for plain HLEM and round-tripping must preserve it
+    // bit-for-bit for both variants.
+    match PolicySpec::parse(str_field(o, "name")?, 0.0)? {
+        PolicySpec::Hlem { adjusted, .. } => {
+            Ok(PolicySpec::Hlem { adjusted, alpha: f64_field(o, "alpha")? })
+        }
+        other => Ok(other),
+    }
+}
+
+/// The `Report::policy` static-str vocabulary: resolve through
+/// [`PolicySpec::parse`] (the single name registry) back to the interned
+/// `&'static str` the engine would have reported.
+fn static_policy_name(name: &str) -> Result<&'static str, String> {
+    Ok(PolicySpec::parse(name, 0.0)?.name())
+}
+
+fn axis_to_json(a: &ScenarioAxis) -> Json {
+    let mut o = JsonObj::new();
+    o.set("name", Json::Str(a.name().to_string()));
+    let values = match a {
+        ScenarioAxis::SpotWarning(v) | ScenarioAxis::SpotHibernationTimeout(v) => {
+            v.iter().map(|&x| enc_f64(x)).collect()
+        }
+        ScenarioAxis::HlemAlpha(v) => v.iter().map(|&x| enc_f64(x)).collect(),
+        ScenarioAxis::SpotBehavior(v) => {
+            v.iter().map(|b| Json::Str(b.name().to_string())).collect()
+        }
+        ScenarioAxis::Victim(v) => v.iter().map(|p| Json::Str(p.name().to_string())).collect(),
+        ScenarioAxis::Substrate(v) => {
+            v.iter().map(|s| Json::Str(s.name().to_string())).collect()
+        }
+    };
+    o.set("values", Json::Arr(values));
+    Json::Obj(o)
+}
+
+fn axis_from_json(v: &Json) -> Result<ScenarioAxis, String> {
+    let o = as_obj(v, "axis")?;
+    let name = str_field(o, "name")?;
+    let values = arr_field(o, "values")?;
+    let nums = || -> Result<Vec<f64>, String> {
+        values.iter().map(|x| num_of(x, "axis value")).collect()
+    };
+    match name {
+        "spot.warning" => Ok(ScenarioAxis::SpotWarning(nums()?)),
+        "spot.hibernation-timeout" => Ok(ScenarioAxis::SpotHibernationTimeout(nums()?)),
+        "hlem.alpha" => Ok(ScenarioAxis::HlemAlpha(nums()?)),
+        "spot.behavior" => Ok(ScenarioAxis::SpotBehavior(
+            values
+                .iter()
+                .map(|x| InterruptionBehavior::parse(str_of(x, "axis value")?))
+                .collect::<Result<_, _>>()?,
+        )),
+        "victim" => Ok(ScenarioAxis::Victim(
+            values
+                .iter()
+                .map(|x| VictimPolicy::parse(str_of(x, "axis value")?))
+                .collect::<Result<_, _>>()?,
+        )),
+        "substrate" => Ok(ScenarioAxis::Substrate(
+            values
+                .iter()
+                .map(|x| Substrate::parse(str_of(x, "axis value")?))
+                .collect::<Result<_, _>>()?,
+        )),
+        other => Err(format!("unknown axis '{other}'")),
+    }
+}
+
+/// Serialize a full [`SweepSpec`] (every field - the decoded spec
+/// enumerates the exact same cells and produces bit-identical runs).
+pub fn spec_to_json(spec: &SweepSpec) -> Json {
+    let mut o = JsonObj::new();
+    o.set("scenario", comparison_to_json(&spec.scenario));
+    o.set("engine", engine_to_json(&spec.engine));
+    o.set("seeds", Json::Arr(spec.seeds.iter().map(|&s| enc_u64(s)).collect()));
+    o.set("policies", Json::Arr(spec.policies.iter().map(policy_to_json).collect()));
+    o.set("axes", Json::Arr(spec.axes.iter().map(axis_to_json).collect()));
+    o.set("trace", trace_substrate_to_json(&spec.trace));
+    o.set("retain", Json::Str(spec.retain.spec_string()));
+    o.set(
+        "explicit",
+        Json::Arr(
+            spec.explicit
+                .iter()
+                .map(|(seed, policy)| {
+                    let mut e = JsonObj::new();
+                    e.set("seed", enc_u64(*seed));
+                    e.set("policy", policy_to_json(policy));
+                    Json::Obj(e)
+                })
+                .collect(),
+        ),
+    );
+    Json::Obj(o)
+}
+
+/// Inverse of [`spec_to_json`]; `spec_from_json(&spec_to_json(s)) == s`.
+pub fn spec_from_json(v: &Json) -> Result<SweepSpec, String> {
+    let o = as_obj(v, "sweep spec")?;
+    let seeds = arr_field(o, "seeds")?
+        .iter()
+        .map(|s| {
+            str_of(s, "seed")?
+                .parse::<u64>()
+                .map_err(|_| "seed is not a u64 decimal string".to_string())
+        })
+        .collect::<Result<Vec<u64>, _>>()?;
+    let policies = arr_field(o, "policies")?
+        .iter()
+        .map(policy_from_json)
+        .collect::<Result<Vec<_>, _>>()?;
+    let axes = arr_field(o, "axes")?
+        .iter()
+        .map(axis_from_json)
+        .collect::<Result<Vec<_>, _>>()?;
+    let explicit = arr_field(o, "explicit")?
+        .iter()
+        .map(|e| {
+            let eo = as_obj(e, "explicit cell")?;
+            Ok((u64_field(eo, "seed")?, policy_from_json(field(eo, "policy")?)?))
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+    Ok(SweepSpec {
+        scenario: comparison_from_json(field(o, "scenario")?)?,
+        engine: engine_from_json(field(o, "engine")?)?,
+        seeds,
+        policies,
+        axes,
+        trace: trace_substrate_from_json(field(o, "trace")?)?,
+        retain: SeriesFilter::parse(str_field(o, "retain")?)?,
+        explicit,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Cell results <-> JSON
+// ---------------------------------------------------------------------
+
+fn spot_override_to_json(s: &SpotOverride) -> Json {
+    let opt_num = |v: Option<f64>| v.map(enc_f64).unwrap_or(Json::Null);
+    let mut o = JsonObj::new();
+    o.set("warning", opt_num(s.warning_time));
+    o.set("hibernation_timeout", opt_num(s.hibernation_timeout));
+    o.set(
+        "behavior",
+        s.behavior.map(|b| Json::Str(b.name().to_string())).unwrap_or(Json::Null),
+    );
+    Json::Obj(o)
+}
+
+fn spot_override_from_json(v: &Json) -> Result<SpotOverride, String> {
+    let o = as_obj(v, "spot override")?;
+    let opt_num = |key: &str| -> Result<Option<f64>, String> {
+        opt_json(field(o, key)?).map(|x| num_of(x, key)).transpose()
+    };
+    Ok(SpotOverride {
+        warning_time: opt_num("warning")?,
+        hibernation_timeout: opt_num("hibernation_timeout")?,
+        behavior: opt_json(field(o, "behavior")?)
+            .map(|x| InterruptionBehavior::parse(str_of(x, "behavior")?))
+            .transpose()?,
+    })
+}
+
+fn cell_to_json(c: &Cell) -> Json {
+    let mut spec = JsonObj::new();
+    spec.set("substrate", Json::Str(c.spec.substrate.name().to_string()));
+    spec.set("policy", policy_to_json(&c.spec.policy));
+    spec.set("spot", spot_override_to_json(&c.spec.spot));
+    spec.set(
+        "victim",
+        c.spec.victim.map(|v| Json::Str(v.name().to_string())).unwrap_or(Json::Null),
+    );
+    let mut o = JsonObj::new();
+    o.set("id", enc_usize(c.id));
+    o.set("seed", enc_u64(c.seed));
+    o.set("spec", Json::Obj(spec));
+    Json::Obj(o)
+}
+
+fn cell_from_json(v: &Json) -> Result<Cell, String> {
+    let o = as_obj(v, "cell")?;
+    let so = as_obj(field(o, "spec")?, "cell spec")?;
+    let spec = CellSpec {
+        substrate: Substrate::parse(str_field(so, "substrate")?)?,
+        policy: policy_from_json(field(so, "policy")?)?,
+        spot: spot_override_from_json(field(so, "spot")?)?,
+        victim: opt_json(field(so, "victim")?)
+            .map(|x| VictimPolicy::parse(str_of(x, "victim")?))
+            .transpose()?,
+    };
+    Ok(Cell { id: usize_field(o, "id")?, seed: u64_field(o, "seed")?, spec })
+}
+
+fn report_to_json(r: &Report) -> Json {
+    let mut o = JsonObj::new();
+    o.set("policy", Json::Str(r.policy.to_string()));
+    o.set("clock_end", enc_f64(r.clock_end));
+    o.set("events_processed", enc_u64(r.events_processed));
+    // `wall` is deliberately not serialized: partials carry no wall/
+    // thread/process data (the byte-identity contract).
+    o.set("finished", enc_u64(r.finished));
+    o.set("terminated", enc_u64(r.terminated));
+    o.set("failed", enc_u64(r.failed));
+    o.set("still_active", enc_u64(r.still_active));
+    o.set("cloudlets_finished", enc_u64(r.cloudlets_finished));
+    o.set("cloudlets_canceled", enc_u64(r.cloudlets_canceled));
+    o.set("alloc_attempts", enc_u64(r.alloc_attempts));
+    o.set("alloc_failures", enc_u64(r.alloc_failures));
+    let s = &r.spot;
+    let mut sp = JsonObj::new();
+    sp.set("total_spot", enc_u64(s.total_spot));
+    sp.set("interruptions", enc_u64(s.interruptions));
+    sp.set("interrupted_vms", enc_u64(s.interrupted_vms));
+    sp.set("uninterrupted_completions", enc_u64(s.uninterrupted_completions));
+    sp.set("redeployments", enc_u64(s.redeployments));
+    sp.set("completed_after_interruption", enc_u64(s.completed_after_interruption));
+    sp.set("terminated", enc_u64(s.terminated));
+    sp.set("max_interruptions_per_vm", enc_u64(u64::from(s.max_interruptions_per_vm)));
+    sp.set("avg_interruption_secs", enc_f64(s.avg_interruption_secs));
+    sp.set("max_interruption_secs", enc_f64(s.max_interruption_secs));
+    sp.set("min_interruption_secs", enc_f64(s.min_interruption_secs));
+    o.set("spot", Json::Obj(sp));
+    Json::Obj(o)
+}
+
+fn report_from_json(v: &Json) -> Result<Report, String> {
+    let o = as_obj(v, "report")?;
+    let sp = as_obj(field(o, "spot")?, "spot stats")?;
+    let max_per_vm = u64_field(sp, "max_interruptions_per_vm")?;
+    Ok(Report {
+        policy: static_policy_name(str_field(o, "policy")?)?,
+        clock_end: f64_field(o, "clock_end")?,
+        events_processed: u64_field(o, "events_processed")?,
+        // Wall time never crosses the wire; zero keeps the field honest
+        // ("no per-process timing survives the merge").
+        wall: Duration::ZERO,
+        finished: u64_field(o, "finished")?,
+        terminated: u64_field(o, "terminated")?,
+        failed: u64_field(o, "failed")?,
+        still_active: u64_field(o, "still_active")?,
+        cloudlets_finished: u64_field(o, "cloudlets_finished")?,
+        cloudlets_canceled: u64_field(o, "cloudlets_canceled")?,
+        alloc_attempts: u64_field(o, "alloc_attempts")?,
+        alloc_failures: u64_field(o, "alloc_failures")?,
+        spot: SpotStats {
+            total_spot: u64_field(sp, "total_spot")?,
+            interruptions: u64_field(sp, "interruptions")?,
+            interrupted_vms: u64_field(sp, "interrupted_vms")?,
+            uninterrupted_completions: u64_field(sp, "uninterrupted_completions")?,
+            redeployments: u64_field(sp, "redeployments")?,
+            completed_after_interruption: u64_field(sp, "completed_after_interruption")?,
+            terminated: u64_field(sp, "terminated")?,
+            max_interruptions_per_vm: u32::try_from(max_per_vm)
+                .map_err(|_| "max_interruptions_per_vm out of range".to_string())?,
+            avg_interruption_secs: f64_field(sp, "avg_interruption_secs")?,
+            max_interruption_secs: f64_field(sp, "max_interruption_secs")?,
+            min_interruption_secs: f64_field(sp, "min_interruption_secs")?,
+        },
+    })
+}
+
+fn series_to_json(s: &TimeSeries) -> Json {
+    let mut o = JsonObj::new();
+    o.set(
+        "columns",
+        Json::Arr(s.columns().iter().map(|c| Json::Str(c.clone())).collect()),
+    );
+    o.set("times", Json::Arr(s.times().iter().map(|&t| enc_f64(t)).collect()));
+    let values: Vec<Json> = s
+        .columns()
+        .iter()
+        .map(|name| {
+            let col = s.column(name).expect("series column by its own name");
+            Json::Arr(col.iter().map(|&v| enc_f64(v)).collect())
+        })
+        .collect();
+    o.set("values", Json::Arr(values));
+    Json::Obj(o)
+}
+
+fn series_from_json(v: &Json) -> Result<TimeSeries, String> {
+    let o = as_obj(v, "series")?;
+    let columns = arr_field(o, "columns")?
+        .iter()
+        .map(|c| str_of(c, "series column").map(str::to_string))
+        .collect::<Result<Vec<_>, _>>()?;
+    let times = arr_field(o, "times")?
+        .iter()
+        .map(|t| num_of(t, "series time"))
+        .collect::<Result<Vec<f64>, _>>()?;
+    let value_arrs = arr_field(o, "values")?;
+    if value_arrs.len() != columns.len() {
+        return Err("series value columns do not match the column names".into());
+    }
+    let mut cols: Vec<Vec<f64>> = Vec::with_capacity(value_arrs.len());
+    for arr in value_arrs {
+        let col = arr
+            .as_arr()
+            .ok_or_else(|| "series value column is not an array".to_string())?
+            .iter()
+            .map(|x| num_of(x, "series value"))
+            .collect::<Result<Vec<f64>, _>>()?;
+        if col.len() != times.len() {
+            return Err("series value column length does not match the time column".into());
+        }
+        cols.push(col);
+    }
+    let names: Vec<&str> = columns.iter().map(String::as_str).collect();
+    let mut series = TimeSeries::new(&names);
+    let mut row = vec![0.0; cols.len()];
+    for (i, &t) in times.iter().enumerate() {
+        for (c, col) in cols.iter().enumerate() {
+            row[c] = col[i];
+        }
+        series.push(t, &row);
+    }
+    Ok(series)
+}
+
+fn cell_result_to_json(r: &CellResult) -> Json {
+    let mut o = JsonObj::new();
+    o.set("cell", cell_to_json(&r.cell));
+    match &r.outcome {
+        Ok(report) => {
+            o.set("report", report_to_json(report));
+            o.set("error", Json::Null);
+        }
+        Err(e) => {
+            o.set("report", Json::Null);
+            o.set("error", Json::Str(e.clone()));
+        }
+    }
+    o.set("series", r.series.as_ref().map(series_to_json).unwrap_or(Json::Null));
+    Json::Obj(o)
+}
+
+fn cell_result_from_json(v: &Json) -> Result<CellResult, String> {
+    let o = as_obj(v, "cell result")?;
+    let outcome = match (opt_json(field(o, "report")?), opt_json(field(o, "error")?)) {
+        (Some(report), None) => Ok(report_from_json(report)?),
+        (None, Some(err)) => Err(str_of(err, "error")?.to_string()),
+        _ => return Err("cell result must have exactly one of report/error".into()),
+    };
+    Ok(CellResult {
+        cell: cell_from_json(field(o, "cell")?)?,
+        outcome,
+        series: opt_json(field(o, "series")?).map(series_from_json).transpose()?,
+    })
+}
+
+/// Serialize a slice of cell results (one worker's shard output) -
+/// exposed for the round-trip property in `tests/properties.rs`.
+pub fn results_to_json(results: &[CellResult]) -> Json {
+    Json::Arr(results.iter().map(cell_result_to_json).collect())
+}
+
+/// Inverse of [`results_to_json`].
+pub fn results_from_json(v: &Json) -> Result<Vec<CellResult>, String> {
+    v.as_arr()
+        .ok_or_else(|| "cell results: expected an array".to_string())?
+        .iter()
+        .map(cell_result_from_json)
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Shard and partial files
+// ---------------------------------------------------------------------
+
+fn check_header(o: &JsonObj, format: &str) -> Result<(), String> {
+    let got = str_field(o, "format")?;
+    if got != format {
+        return Err(format!("wrong file format '{got}' (expected '{format}')"));
+    }
+    let version = usize_field(o, "version")? as u64;
+    if version != WIRE_VERSION {
+        return Err(format!("unsupported wire version {version} (expected {WIRE_VERSION})"));
+    }
+    Ok(())
+}
+
+/// Serialize one shard job: header, spec digest, full spec, cell ids.
+pub fn shard_file_json(spec: &SweepSpec, shard: &Shard) -> Json {
+    let mut s = JsonObj::new();
+    s.set("index", enc_usize(shard.index));
+    s.set("of", enc_usize(shard.of));
+    s.set(
+        "cell_ids",
+        Json::Arr(shard.cell_ids.iter().map(|&id| enc_usize(id)).collect()),
+    );
+    let mut o = JsonObj::new();
+    o.set("format", Json::Str(SHARD_FORMAT.to_string()));
+    o.set("version", enc_usize(WIRE_VERSION as usize));
+    o.set("spec_digest", Json::Str(spec_digest(spec)));
+    o.set("shard", Json::Obj(s));
+    o.set("spec", spec_to_json(spec));
+    Json::Obj(o)
+}
+
+/// Write one shard job file (pretty JSON - shard files are the unit
+/// cluster operators copy around and occasionally read).
+pub fn write_shard_file(path: &Path, spec: &SweepSpec, shard: &Shard) -> Result<(), String> {
+    std::fs::write(path, shard_file_json(spec, shard).to_string_pretty())
+        .map_err(|e| format!("writing shard file {}: {e}", path.display()))
+}
+
+/// Read a shard job file back; validates the header, the embedded digest
+/// (against the embedded spec) and the cell ids (in range, strictly
+/// ascending).
+pub fn read_shard_file(path: &Path) -> Result<(SweepSpec, Shard), String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("reading shard file {}: {e}", path.display()))?;
+    let doc = parse(&text).map_err(|e| format!("shard file {}: {e}", path.display()))?;
+    let ctx = |e: String| format!("shard file {}: {e}", path.display());
+    let o = as_obj(&doc, "shard file").map_err(ctx)?;
+    check_header(o, SHARD_FORMAT).map_err(ctx)?;
+    let spec = spec_from_json(field(o, "spec").map_err(ctx)?).map_err(ctx)?;
+    let stored = str_field(o, "spec_digest").map_err(ctx)?;
+    if stored != spec_digest(&spec) {
+        return Err(ctx("spec_digest does not match the embedded spec (edited or corrupt)".into()));
+    }
+    let so = as_obj(field(o, "shard").map_err(ctx)?, "shard").map_err(ctx)?;
+    let cell_ids = arr_field(so, "cell_ids")
+        .map_err(ctx)?
+        .iter()
+        .map(|x| {
+            let v = num_of(x, "cell id")?;
+            if v < 0.0 || v.fract() != 0.0 {
+                return Err("cell id is not a non-negative integer".to_string());
+            }
+            Ok(v as usize)
+        })
+        .collect::<Result<Vec<usize>, _>>()
+        .map_err(ctx)?;
+    let total = spec.cell_count();
+    let mut weight = 0;
+    let cells = spec.cells();
+    for (i, &id) in cell_ids.iter().enumerate() {
+        if id >= total {
+            return Err(ctx(format!("cell id {id} out of range (grid has {total} cells)")));
+        }
+        if i > 0 && cell_ids[i - 1] >= id {
+            return Err(ctx(format!("cell ids not strictly ascending at {id}")));
+        }
+        weight += cell_weight(&cells[id]);
+    }
+    let shard = Shard {
+        index: usize_field(so, "index").map_err(ctx)?,
+        of: usize_field(so, "of").map_err(ctx)?,
+        cell_ids,
+        weight,
+    };
+    Ok((spec, shard))
+}
+
+/// A parsed partial artifact: one worker's shard output plus everything
+/// needed to validate and merge it stand-alone.
+#[derive(Debug)]
+pub struct Partial {
+    pub spec: SweepSpec,
+    pub spec_digest: String,
+    pub shard_index: usize,
+    pub cells: Vec<CellResult>,
+}
+
+/// Serialize one worker's shard output as a self-contained partial.
+pub fn partial_file_json(spec: &SweepSpec, shard_index: usize, results: &[CellResult]) -> Json {
+    let mut o = JsonObj::new();
+    o.set("format", Json::Str(PARTIAL_FORMAT.to_string()));
+    o.set("version", enc_usize(WIRE_VERSION as usize));
+    o.set("spec_digest", Json::Str(spec_digest(spec)));
+    o.set("shard_index", enc_usize(shard_index));
+    o.set("spec", spec_to_json(spec));
+    o.set("cells", results_to_json(results));
+    Json::Obj(o)
+}
+
+/// Write a partial artifact **atomically** (tmp + rename), so a worker
+/// killed mid-write leaves a `.tmp` file, never a truncated partial the
+/// coordinator could half-read.
+pub fn write_partial(
+    path: &Path,
+    spec: &SweepSpec,
+    shard_index: usize,
+    results: &[CellResult],
+) -> Result<(), String> {
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| format!("partial path {} has no file name", path.display()))?;
+    let tmp = path.with_file_name(format!("{}.tmp", file_name.to_string_lossy()));
+    let text = partial_file_json(spec, shard_index, results).to_string_compact();
+    std::fs::write(&tmp, text).map_err(|e| format!("writing {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| format!("renaming {} into place: {e}", tmp.display()))
+}
+
+/// Read a partial artifact back; validates header and embedded digest.
+pub fn read_partial(path: &Path) -> Result<Partial, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("reading partial {}: {e}", path.display()))?;
+    let doc = parse(&text).map_err(|e| format!("partial {}: {e}", path.display()))?;
+    let ctx = |e: String| format!("partial {}: {e}", path.display());
+    let o = as_obj(&doc, "partial").map_err(ctx)?;
+    check_header(o, PARTIAL_FORMAT).map_err(ctx)?;
+    let spec = spec_from_json(field(o, "spec").map_err(ctx)?).map_err(ctx)?;
+    let digest = str_field(o, "spec_digest").map_err(ctx)?.to_string();
+    if digest != spec_digest(&spec) {
+        return Err(ctx("spec_digest does not match the embedded spec (edited or corrupt)".into()));
+    }
+    let cells = results_from_json(field(o, "cells").map_err(ctx)?).map_err(ctx)?;
+    Ok(Partial {
+        spec,
+        spec_digest: digest,
+        shard_index: usize_field(o, "shard_index").map_err(ctx)?,
+        cells,
+    })
+}
+
+/// Merge partial artifacts into the full sweep report. Rejects partials
+/// from different specs, out-of-range or unknown cells, overlapping cell
+/// ids and incomplete coverage, so the merged artifacts either equal the
+/// single-process run's bytes or the merge fails - never something in
+/// between.
+pub fn merge_partials(partials: Vec<Partial>) -> Result<(SweepSpec, SweepReport), String> {
+    let Some(first) = partials.first() else {
+        return Err("no partial artifacts to merge".into());
+    };
+    let digest = first.spec_digest.clone();
+    let spec = first.spec.clone();
+    for p in &partials {
+        if p.spec_digest != digest {
+            return Err(format!(
+                "partial for shard {} comes from a different sweep spec \
+                 (digest {} != {digest})",
+                p.shard_index, p.spec_digest
+            ));
+        }
+    }
+    let expected = spec.cells();
+    let mut all: Vec<CellResult> = Vec::with_capacity(expected.len());
+    for p in partials {
+        all.extend(p.cells);
+    }
+    for r in &all {
+        let Some(want) = expected.get(r.cell.id) else {
+            return Err(format!(
+                "cell id {} out of range (grid has {} cells)",
+                r.cell.id,
+                expected.len()
+            ));
+        };
+        if *want != r.cell {
+            return Err(format!(
+                "cell {} in the partials does not match the spec's enumeration \
+                 (corrupt partial?)",
+                r.cell.id
+            ));
+        }
+    }
+    if all.len() < expected.len() {
+        return Err(format!(
+            "partials cover {} of {} cells - a shard's output is missing",
+            all.len(),
+            expected.len()
+        ));
+    }
+    // Observability-only field; process count is as good a stand-in for
+    // "parallelism used" as any, and it never serializes.
+    let report = SweepReport::merged_from_cells(all, 1)?;
+    Ok((spec, report))
+}
+
+// ---------------------------------------------------------------------
+// Same-host coordinator
+// ---------------------------------------------------------------------
+
+fn shard_path(dir: &Path, index: usize) -> PathBuf {
+    dir.join(format!("sweep_shard{index:04}.json"))
+}
+
+fn partial_path(dir: &Path, index: usize) -> PathBuf {
+    dir.join(format!("sweep_partial{index:04}.json"))
+}
+
+/// Kill and reap every still-running worker. Dropping a `Child` does
+/// NOT kill it, so every error return out of [`coordinate`] must come
+/// through here - an orphaned worker would keep burning CPU for the rest
+/// of its (possibly hours-long) shard and could rename its partial into
+/// the work dir mid-way through a *subsequent* coordinator run,
+/// corrupting that run's view of its own partials. (Coordinator death by
+/// signal is covered separately: workers poll `CLOUDMARKET_SWEEP_PARENT`
+/// liveness between cells and exit on their own.)
+fn kill_workers(running: &mut Vec<(usize, std::process::Child)>) {
+    for (_, child) in running.iter_mut() {
+        let _ = child.kill();
+    }
+    for (_, mut child) in running.drain(..) {
+        let _ = child.wait();
+    }
+}
+
+/// Remove shard/partial files (and their `.tmp` leftovers) from `dir`,
+/// returning how many were deleted. The coordinator calls this before a
+/// run - a re-run after an aborted coordinator must never mix old and
+/// new partials - and after a successful merge to leave only the merged
+/// artifacts behind.
+pub fn clean_work_files(dir: &Path) -> Result<usize, String> {
+    let Ok(entries) = std::fs::read_dir(dir) else { return Ok(0) };
+    let mut removed = 0;
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let is_work = (name.starts_with("sweep_shard") || name.starts_with("sweep_partial"))
+            && (name.ends_with(".json") || name.ends_with(".json.tmp"));
+        if is_work {
+            std::fs::remove_file(entry.path())
+                .map_err(|e| format!("removing stale {}: {e}", entry.path().display()))?;
+            removed += 1;
+        }
+    }
+    Ok(removed)
+}
+
+/// Options for [`coordinate`].
+#[derive(Debug, Clone)]
+pub struct CoordinateOptions {
+    /// Worker subprocesses to run concurrently (also the shard count).
+    pub workers: usize,
+    /// Directory for shard/partial files (cleaned of stale ones first).
+    pub work_dir: PathBuf,
+    /// The `cloudmarket` binary to spawn workers from. The CLI passes
+    /// `std::env::current_exe()`; tests pass `CARGO_BIN_EXE_cloudmarket`.
+    pub worker_exe: PathBuf,
+    /// In-process threads per worker (default 1: the process pool is the
+    /// parallelism; nested thread pools only fight over cores).
+    pub worker_threads: usize,
+    /// Spawn attempts per shard before the whole sweep fails (>= 1).
+    pub max_attempts: usize,
+    /// Emit progress lines on stderr.
+    pub verbose: bool,
+}
+
+impl CoordinateOptions {
+    pub fn new(
+        workers: usize,
+        work_dir: impl Into<PathBuf>,
+        worker_exe: impl Into<PathBuf>,
+    ) -> Self {
+        CoordinateOptions {
+            workers,
+            work_dir: work_dir.into(),
+            worker_exe: worker_exe.into(),
+            worker_threads: 1,
+            max_attempts: 3,
+            verbose: false,
+        }
+    }
+}
+
+/// What a coordinated run did (the report plus fan-out observability;
+/// none of this is serialized).
+#[derive(Debug)]
+pub struct CoordinateOutcome {
+    pub report: SweepReport,
+    /// Shards the grid was partitioned into.
+    pub shards: usize,
+    /// Worker subprocesses spawned in total (>= shards; each retry adds
+    /// one).
+    pub workers_spawned: usize,
+    /// Shards that were reassigned to a fresh worker after a
+    /// crash/kill/corrupt output.
+    pub shards_reassigned: usize,
+}
+
+/// Run `spec` as worker subprocesses: partition, spawn, monitor, reassign
+/// shards from dead workers, merge. The merged report serializes
+/// byte-identically to the in-process [`super::run`] output.
+///
+/// Workers inherit this process's environment, so the (test-only)
+/// `CLOUDMARKET_SWEEP_FAULT` fault-injection hook of `sweep worker`
+/// reaches them - `tests/sweep_process.rs` uses that to kill a worker
+/// mid-shard and pin the reassignment path.
+pub fn coordinate(
+    spec: &SweepSpec,
+    opts: &CoordinateOptions,
+) -> Result<CoordinateOutcome, String> {
+    if opts.workers == 0 || opts.max_attempts == 0 {
+        return Err("coordinate: workers and max_attempts must be >= 1".into());
+    }
+    std::fs::create_dir_all(&opts.work_dir)
+        .map_err(|e| format!("creating {}: {e}", opts.work_dir.display()))?;
+    let stale = clean_work_files(&opts.work_dir)?;
+    if stale > 0 && opts.verbose {
+        eprintln!("sweep: removed {stale} stale shard/partial file(s) from an earlier run");
+    }
+
+    let digest = spec_digest(spec);
+    let shards = partition(spec, opts.workers);
+    let n = shards.len();
+    for shard in &shards {
+        write_shard_file(&shard_path(&opts.work_dir, shard.index), spec, shard)?;
+    }
+
+    let mut pending: VecDeque<usize> = (0..n).collect();
+    let mut running: Vec<(usize, std::process::Child)> = Vec::new();
+    let mut attempts = vec![0usize; n];
+    let mut results: Vec<Option<Vec<CellResult>>> = Vec::with_capacity(n);
+    results.resize_with(n, || None);
+    let mut workers_spawned = 0;
+    let mut shards_reassigned = 0;
+
+    while results.iter().any(Option::is_none) {
+        // Fill free worker slots from the pending queue.
+        while running.len() < opts.workers {
+            let Some(idx) = pending.pop_front() else { break };
+            attempts[idx] += 1;
+            let child = match Command::new(&opts.worker_exe)
+                .arg("sweep")
+                .arg("worker")
+                .arg("--shard")
+                .arg(shard_path(&opts.work_dir, idx))
+                .arg("--out")
+                .arg(partial_path(&opts.work_dir, idx))
+                .arg("--threads")
+                .arg(opts.worker_threads.to_string())
+                // Workers watch this PID between cells and exit when the
+                // coordinator is gone (see `cmd_sweep_worker`), so a
+                // Ctrl-C'd or SIGKILLed coordinator - paths no userspace
+                // cleanup can cover - does not leave orphans running
+                // their full shards and renaming partials into a later
+                // run's work dir.
+                .env("CLOUDMARKET_SWEEP_PARENT", std::process::id().to_string())
+                .stdout(Stdio::null())
+                .spawn()
+            {
+                Ok(child) => child,
+                Err(e) => {
+                    kill_workers(&mut running);
+                    return Err(format!(
+                        "spawning sweep worker ({}): {e}",
+                        opts.worker_exe.display()
+                    ));
+                }
+            };
+            workers_spawned += 1;
+            if opts.verbose {
+                eprintln!(
+                    "sweep: worker pid {} took shard {idx}/{n} ({} cells, attempt {})",
+                    child.id(),
+                    shards[idx].cell_ids.len(),
+                    attempts[idx]
+                );
+            }
+            running.push((idx, child));
+        }
+        if running.is_empty() {
+            return Err("sweep coordinator stalled with unfinished shards (internal bug)".into());
+        }
+
+        // Reap finished workers; a dead worker's shard goes back in the
+        // queue (bounded by max_attempts) for the next free slot.
+        let mut i = 0;
+        while i < running.len() {
+            let (idx, child) = &mut running[i];
+            let idx = *idx;
+            let waited = match child.try_wait() {
+                Ok(waited) => waited,
+                Err(e) => {
+                    kill_workers(&mut running);
+                    return Err(format!("waiting for sweep worker on shard {idx}: {e}"));
+                }
+            };
+            match waited {
+                None => i += 1,
+                Some(status) => {
+                    running.swap_remove(i);
+                    let partial = partial_path(&opts.work_dir, idx);
+                    let outcome = if status.success() {
+                        read_partial(&partial).and_then(|p| {
+                            if p.spec_digest != digest {
+                                Err(format!(
+                                    "partial for shard {idx} was produced by a different spec"
+                                ))
+                            } else if p.shard_index != idx {
+                                Err(format!(
+                                    "partial for shard {idx} reports shard index {}",
+                                    p.shard_index
+                                ))
+                            } else {
+                                Ok(p.cells)
+                            }
+                        })
+                    } else {
+                        Err(format!("worker exited with {status}"))
+                    };
+                    match outcome {
+                        Ok(cells) => {
+                            if opts.verbose {
+                                eprintln!("sweep: shard {idx}/{n} done ({} cells)", cells.len());
+                            }
+                            results[idx] = Some(cells);
+                        }
+                        Err(why) => {
+                            let _ = std::fs::remove_file(&partial);
+                            if attempts[idx] >= opts.max_attempts {
+                                kill_workers(&mut running);
+                                return Err(format!(
+                                    "shard {idx} failed {} time(s), giving up (last: {why})",
+                                    attempts[idx]
+                                ));
+                            }
+                            shards_reassigned += 1;
+                            if opts.verbose {
+                                eprintln!(
+                                    "sweep: shard {idx}/{n} failed ({why}); reassigning to a \
+                                     fresh worker (attempt {}/{})",
+                                    attempts[idx] + 1,
+                                    opts.max_attempts
+                                );
+                            }
+                            pending.push_back(idx);
+                        }
+                    }
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    let mut all: Vec<CellResult> = Vec::with_capacity(spec.cell_count());
+    for cells in results.into_iter().flatten() {
+        all.extend(cells);
+    }
+    let expected = spec.cells();
+    if all.len() != expected.len() {
+        return Err(format!(
+            "workers produced {} of {} cells (coordinator bug)",
+            all.len(),
+            expected.len()
+        ));
+    }
+    let report = SweepReport::merged_from_cells(all, n)?;
+    // Success: the partials are merged, so drop the intermediates and
+    // leave only the artifacts the caller writes from `report`.
+    clean_work_files(&opts.work_dir)?;
+    Ok(CoordinateOutcome { report, shards: n, workers_spawned, shards_reassigned })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mixed_spec() -> SweepSpec {
+        let scenario =
+            ComparisonConfig { seed: 99, terminate_at: 600.0, ..Default::default() };
+        let mut spec = SweepSpec::new(scenario)
+            .with_seeds(vec![1, 2, 18_000_000_000_000_000_001]) // > 2^53: string-encoded seeds
+            .with_policies(vec![
+                PolicySpec::FirstFit,
+                PolicySpec::Hlem { adjusted: true, alpha: -0.5 },
+            ])
+            .with_axis(ScenarioAxis::HlemAlpha(vec![-0.3, -0.7]))
+            .with_axis(ScenarioAxis::SpotWarning(vec![60.0, 120.0]))
+            .with_axis(ScenarioAxis::Victim(vec![VictimPolicy::Youngest]))
+            .with_axis(ScenarioAxis::SpotBehavior(vec![InterruptionBehavior::Terminate]))
+            .with_axis(ScenarioAxis::Substrate(vec![
+                Substrate::Comparison,
+                Substrate::Trace,
+            ]))
+            .with_series_retention(SeriesFilter::parse("policy=first-fit,seed=2").unwrap())
+            .with_cell(77, PolicySpec::BestFit);
+        spec.trace.synth.machines = 10;
+        spec.trace.workload.spot_durations = vec![300.0, 600.5];
+        spec
+    }
+
+    #[test]
+    fn spec_round_trips_through_json_text() {
+        let spec = mixed_spec();
+        let text = spec_to_json(&spec).to_string_pretty();
+        let back = spec_from_json(&parse(&text).unwrap()).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(spec_digest(&back), spec_digest(&spec));
+        assert_eq!(back.cells(), spec.cells(), "decoded spec enumerates the same grid");
+    }
+
+    #[test]
+    fn digest_changes_with_the_spec() {
+        let a = mixed_spec();
+        let mut b = mixed_spec();
+        b.scenario.terminate_at += 1.0;
+        assert_ne!(spec_digest(&a), spec_digest(&b));
+    }
+
+    #[test]
+    fn partition_covers_cells_disjointly_and_balances_weight() {
+        let spec = mixed_spec();
+        let total = spec.cell_count();
+        for shards in [1, 2, 3, 7, 100] {
+            let parts = partition(&spec, shards);
+            assert_eq!(parts.len(), shards.min(total));
+            let mut seen = vec![false; total];
+            for (i, p) in parts.iter().enumerate() {
+                assert_eq!(p.index, i);
+                assert_eq!(p.of, parts.len());
+                assert!(!p.cell_ids.is_empty(), "clamped partitions have no empty shard");
+                for w in p.cell_ids.windows(2) {
+                    assert!(w[0] < w[1], "ids ascending");
+                }
+                for &id in &p.cell_ids {
+                    assert!(!seen[id], "cell {id} in two shards");
+                    seen[id] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "every cell is in some shard");
+            let max = parts.iter().map(|p| p.weight).max().unwrap();
+            let min = parts.iter().map(|p| p.weight).min().unwrap();
+            assert!(
+                max <= min + TRACE_CELL_WEIGHT,
+                "LPT balance bound violated: max {max} min {min}"
+            );
+        }
+        // Determinism.
+        assert_eq!(partition(&spec, 3), partition(&spec, 3));
+    }
+
+    #[test]
+    fn trace_cells_spread_across_shards() {
+        // 2 seeds x (comparison, trace): without weighting, id-contiguous
+        // chunking would put both trace cells in one shard.
+        let mut spec = SweepSpec::new(ComparisonConfig::default())
+            .with_seeds(vec![1, 2])
+            .with_policies(vec![PolicySpec::FirstFit])
+            .with_axis(ScenarioAxis::Substrate(vec![Substrate::Comparison, Substrate::Trace]));
+        spec.trace.synth.machines = 10;
+        let cells = spec.cells();
+        let parts = partition(&spec, 2);
+        for p in &parts {
+            let trace_cells = p
+                .cell_ids
+                .iter()
+                .filter(|&&id| cells[id].spec.substrate == Substrate::Trace)
+                .count();
+            assert_eq!(trace_cells, 1, "each shard gets one expensive trace cell: {parts:?}");
+        }
+    }
+
+    fn fake_result(cell: Cell, ok: bool) -> CellResult {
+        let outcome = if ok {
+            Ok(Report {
+                policy: "first-fit",
+                clock_end: 600.125,
+                events_processed: u64::MAX - 3, // string-encoded: survives > 2^53
+                wall: Duration::from_millis(7), // must NOT survive the wire
+                finished: 10,
+                terminated: 2,
+                failed: 0,
+                still_active: 1,
+                cloudlets_finished: 9,
+                cloudlets_canceled: 1,
+                alloc_attempts: 15,
+                alloc_failures: 3,
+                spot: SpotStats {
+                    total_spot: 5,
+                    interruptions: 4,
+                    interrupted_vms: 3,
+                    uninterrupted_completions: 2,
+                    redeployments: 1,
+                    completed_after_interruption: 1,
+                    terminated: 1,
+                    max_interruptions_per_vm: 2,
+                    avg_interruption_secs: 0.1 + 0.2, // 0.30000000000000004
+                    max_interruption_secs: 1e-300,
+                    min_interruption_secs: 0.0,
+                },
+            })
+        } else {
+            Err("cell exploded".to_string())
+        };
+        let series = ok.then(|| {
+            let mut s = TimeSeries::new(&["spot_running", "od_running"]);
+            s.push(0.0, &[1.0, 0.1 + 0.7]);
+            s.push(10.5, &[2.0, f64::MIN_POSITIVE]);
+            s
+        });
+        CellResult { cell, outcome, series }
+    }
+
+    /// Cell results round-trip bit-exactly (encode . decode . encode is
+    /// the identity on the wire text), wall time excluded by design.
+    #[test]
+    fn results_round_trip_bit_exact() {
+        let spec = mixed_spec();
+        let cells = spec.cells();
+        let results = vec![fake_result(cells[0], true), fake_result(cells[1], false)];
+        let text = results_to_json(&results).to_string_compact();
+        let back = results_from_json(&parse(&text).unwrap()).unwrap();
+        assert_eq!(results_to_json(&back).to_string_compact(), text);
+        let r0 = back[0].report().unwrap();
+        let want = results[0].report().unwrap();
+        assert_eq!(r0.events_processed, want.events_processed);
+        assert_eq!(
+            r0.spot.avg_interruption_secs.to_bits(),
+            want.spot.avg_interruption_secs.to_bits()
+        );
+        assert_eq!(
+            r0.spot.max_interruption_secs.to_bits(),
+            want.spot.max_interruption_secs.to_bits()
+        );
+        assert_eq!(r0.wall, Duration::ZERO, "wall time must not cross the wire");
+        let s0 = back[0].series.as_ref().unwrap();
+        let s_want = results[0].series.as_ref().unwrap();
+        assert_eq!(s0.columns(), s_want.columns());
+        assert_eq!(s0.times(), s_want.times());
+        assert_eq!(s0.column("od_running"), s_want.column("od_running"));
+        assert_eq!(back[1].outcome.as_ref().unwrap_err(), "cell exploded");
+    }
+
+    fn test_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("cloudmarket_shard_{}_{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn shard_files_round_trip_and_validate() {
+        let dir = test_dir("roundtrip");
+        let spec = mixed_spec();
+        let shards = partition(&spec, 3);
+        for shard in &shards {
+            let path = dir.join(format!("sweep_shard{:04}.json", shard.index));
+            write_shard_file(&path, &spec, shard).unwrap();
+            let (back_spec, back_shard) = read_shard_file(&path).unwrap();
+            assert_eq!(back_spec, spec);
+            assert_eq!(&back_shard, shard, "incl. the recomputed weight");
+        }
+        // Corrupt / wrong-format files fail loudly.
+        let bad = dir.join("bad.json");
+        std::fs::write(&bad, "{ not json").unwrap();
+        assert!(read_shard_file(&bad).is_err());
+        std::fs::write(&bad, "{\"format\":\"something-else\",\"version\":1}").unwrap();
+        let err = read_shard_file(&bad).unwrap_err();
+        assert!(err.contains("wrong file format"), "{err}");
+        let missing = dir.join("nope.json");
+        let err = read_shard_file(&missing).unwrap_err();
+        assert!(err.contains("reading shard file"), "{err}");
+        // An edited spec no longer matches the stored digest.
+        let path = dir.join("sweep_shard0000.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, text.replace("\"terminate_at\": 600", "\"terminate_at\": 601"))
+            .unwrap();
+        let err = read_shard_file(&path).unwrap_err();
+        assert!(err.contains("spec_digest"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn partials_merge_back_to_the_full_report() {
+        let dir = test_dir("merge");
+        let spec = mixed_spec();
+        let cells = spec.cells();
+        let shards = partition(&spec, 2);
+        for shard in &shards {
+            let results: Vec<CellResult> =
+                shard.cell_ids.iter().map(|&id| fake_result(cells[id], id % 5 != 0)).collect();
+            write_partial(
+                &dir.join(format!("sweep_partial{:04}.json", shard.index)),
+                &spec,
+                shard.index,
+                &results,
+            )
+            .unwrap();
+        }
+        let partials: Vec<Partial> = (0..2)
+            .map(|i| read_partial(&dir.join(format!("sweep_partial{i:04}.json"))).unwrap())
+            .collect();
+        let (merged_spec, report) = merge_partials(partials).unwrap();
+        assert_eq!(merged_spec, spec);
+        assert_eq!(report.total(), spec.cell_count());
+        for (i, c) in report.cells.iter().enumerate() {
+            assert_eq!(c.cell.id, i);
+            assert_eq!(c.cell, cells[i]);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn merge_rejects_overlap_missing_and_foreign_partials() {
+        let spec = mixed_spec();
+        let shards = partition(&spec, 2);
+        let partial_for = |spec: &SweepSpec, shard: &Shard| Partial {
+            spec: spec.clone(),
+            spec_digest: spec_digest(spec),
+            shard_index: shard.index,
+            cells: shard.cell_ids.iter().map(|&id| fake_result(spec.cells()[id], true)).collect(),
+        };
+
+        assert!(merge_partials(Vec::new()).is_err());
+
+        // Same shard twice: overlap.
+        let err = merge_partials(vec![
+            partial_for(&spec, &shards[0]),
+            partial_for(&spec, &shards[0]),
+            partial_for(&spec, &shards[1]),
+        ])
+        .unwrap_err();
+        assert!(err.contains("overlapping cell id"), "{err}");
+
+        // One shard missing.
+        let err = merge_partials(vec![partial_for(&spec, &shards[0])]).unwrap_err();
+        assert!(err.contains("missing"), "{err}");
+
+        // Foreign spec: digest mismatch.
+        let mut other = mixed_spec();
+        other.scenario.terminate_at += 1.0;
+        let other_shards = partition(&other, 2);
+        let err = merge_partials(vec![
+            partial_for(&spec, &shards[0]),
+            partial_for(&other, &other_shards[1]),
+        ])
+        .unwrap_err();
+        assert!(err.contains("different sweep spec"), "{err}");
+
+        // A partial whose cell disagrees with the enumeration.
+        let mut corrupt = partial_for(&spec, &shards[0]);
+        corrupt.cells[0].cell.seed = corrupt.cells[0].cell.seed.wrapping_add(1);
+        let err =
+            merge_partials(vec![corrupt, partial_for(&spec, &shards[1])]).unwrap_err();
+        assert!(err.contains("does not match the spec's enumeration"), "{err}");
+    }
+
+    #[test]
+    fn clean_work_files_removes_only_work_files() {
+        let dir = test_dir("clean");
+        for name in [
+            "sweep_shard0000.json",
+            "sweep_partial0001.json",
+            "sweep_partial0001.json.tmp",
+            "sweep_cells.csv",
+            "sweep_aggregate.json",
+            "sweep_series_cell0001.csv",
+        ] {
+            std::fs::write(dir.join(name), "x").unwrap();
+        }
+        assert_eq!(clean_work_files(&dir).unwrap(), 3);
+        assert!(dir.join("sweep_cells.csv").exists());
+        assert!(dir.join("sweep_aggregate.json").exists());
+        assert!(dir.join("sweep_series_cell0001.csv").exists());
+        assert!(!dir.join("sweep_shard0000.json").exists());
+        assert_eq!(clean_work_files(&dir).unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,156 @@
+//! Golden-artifact corpus: the serialized sweep artifact formats
+//! (`sweep_cells.csv` column order and float formatting,
+//! `sweep_aggregate.json` field set and number rendering) are pinned to
+//! committed fixtures under `tests/golden/`. Format drift in
+//! `sweep::report` - a reordered column, a changed float format, a new
+//! axis field - fails this test loudly instead of silently changing
+//! published numbers downstream.
+//!
+//! The pinned report is hand-constructed (no engine run), with values
+//! chosen to exercise every formatting path: whole numbers, two-decimal
+//! floats, axis columns, a failed cell (empty columns + `null`
+//! aggregates), and per-variant grouping across substrates. All values
+//! are exact dyadic rationals so the aggregate moments (mean/stddev) are
+//! bit-exact and the fixtures are stable on every platform.
+//!
+//! To update after an *intentional* format change:
+//! `CLOUDMARKET_UPDATE_GOLDEN=1 cargo test --test golden_artifacts`
+//! then review and commit the rewritten fixtures.
+
+use std::path::PathBuf;
+
+use cloudmarket::engine::{Report, SpotStats, VictimPolicy};
+use cloudmarket::sweep::{
+    Cell, CellResult, CellSpec, PolicySpec, SpotOverride, Substrate, SweepReport,
+};
+use cloudmarket::vm::InterruptionBehavior;
+
+#[allow(clippy::too_many_arguments)]
+fn ok_report(
+    policy: &'static str,
+    clock_end: f64,
+    events: u64,
+    finished: u64,
+    terminated: u64,
+    failed: u64,
+    total_spot: u64,
+    interruptions: u64,
+    interrupted_vms: u64,
+    max_per_vm: u32,
+    avg_s: f64,
+    max_s: f64,
+    min_s: f64,
+) -> Report {
+    Report {
+        policy,
+        clock_end,
+        events_processed: events,
+        wall: std::time::Duration::ZERO,
+        finished,
+        terminated,
+        failed,
+        still_active: 0,
+        cloudlets_finished: finished,
+        cloudlets_canceled: 0,
+        alloc_attempts: 0,
+        alloc_failures: 0,
+        spot: SpotStats {
+            total_spot,
+            interruptions,
+            interrupted_vms,
+            max_interruptions_per_vm: max_per_vm,
+            avg_interruption_secs: avg_s,
+            max_interruption_secs: max_s,
+            min_interruption_secs: min_s,
+            ..Default::default()
+        },
+    }
+}
+
+/// The pinned 4-cell report: two comparison first-fit cells (a 2-run
+/// aggregate group), one failed adjusted-HLEM cell (a 0-run group with
+/// `null` moments), and one trace-substrate cell with every axis column
+/// set (a 1-run group).
+fn pinned_report() -> SweepReport {
+    let ff = CellSpec::comparison(PolicySpec::FirstFit);
+    let adj = CellSpec::comparison(PolicySpec::Hlem { adjusted: true, alpha: -0.5 });
+    let trace = CellSpec {
+        substrate: Substrate::Trace,
+        policy: PolicySpec::FirstFit,
+        spot: SpotOverride {
+            warning_time: Some(60.0),
+            hibernation_timeout: Some(900.0),
+            behavior: Some(InterruptionBehavior::Terminate),
+        },
+        victim: Some(VictimPolicy::Youngest),
+    };
+    SweepReport {
+        cells: vec![
+            CellResult {
+                cell: Cell { id: 0, seed: 1, spec: ff },
+                outcome: Ok(ok_report(
+                    "first-fit", 4800.0, 123_456, 950, 30, 0, 400, 3, 3, 2, 10.25, 20.5, 1.25,
+                )),
+                series: None,
+            },
+            CellResult {
+                cell: Cell { id: 1, seed: 1, spec: adj },
+                outcome: Err("engine panicked: boom".to_string()),
+                series: None,
+            },
+            CellResult {
+                cell: Cell { id: 2, seed: 2, spec: ff },
+                outcome: Ok(ok_report(
+                    "first-fit", 4800.0, 123_789, 940, 35, 1, 400, 5, 4, 3, 10.75, 21.5, 1.75,
+                )),
+                series: None,
+            },
+            CellResult {
+                cell: Cell { id: 3, seed: 2, spec: trace },
+                outcome: Ok(ok_report(
+                    "first-fit", 4320.0, 54_321, 120, 7, 0, 20, 7, 6, 4, 32.25, 48.5, 2.5,
+                )),
+                series: None,
+            },
+        ],
+        threads: 1,
+    }
+}
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+#[test]
+fn sweep_artifact_formats_match_golden_corpus() {
+    let report = pinned_report();
+    let cells = report.cells_csv().to_string();
+    let aggregate = report.aggregate_json().to_string_pretty();
+    let dir = golden_dir();
+
+    if std::env::var("CLOUDMARKET_UPDATE_GOLDEN").is_ok() {
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("sweep_cells.csv"), &cells).unwrap();
+        std::fs::write(dir.join("sweep_aggregate.json"), &aggregate).unwrap();
+        panic!(
+            "golden fixtures regenerated under {}; review the diff and commit them",
+            dir.display()
+        );
+    }
+
+    let want_cells = std::fs::read_to_string(dir.join("sweep_cells.csv")).unwrap();
+    let want_aggregate = std::fs::read_to_string(dir.join("sweep_aggregate.json")).unwrap();
+    assert_eq!(
+        cells, want_cells,
+        "sweep_cells.csv format drifted (column order / float formatting / axis \
+         columns). If the change is intentional, regenerate with \
+         CLOUDMARKET_UPDATE_GOLDEN=1 and commit the fixture - downstream published \
+         numbers change shape with it."
+    );
+    assert_eq!(
+        aggregate, want_aggregate,
+        "sweep_aggregate.json format drifted (field set / number rendering). If \
+         intentional, regenerate with CLOUDMARKET_UPDATE_GOLDEN=1 and commit the \
+         fixture."
+    );
+}

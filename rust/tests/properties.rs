@@ -508,3 +508,250 @@ fn prop_scorer_scores_bounded() {
         }
     });
 }
+
+/// Shard partitioning over randomized multi-axis grids: shards are
+/// disjoint, their union is exactly the enumerated cell set, greedy-LPT
+/// balance holds (`max <= min + heaviest cell`), and both the spec and a
+/// shard job file survive the serialize/deserialize round trip unchanged
+/// (the cluster fan-out protocol of `sweep::shard`).
+#[test]
+fn prop_shard_partition_covers_disjointly_and_round_trips() {
+    use cloudmarket::config::scenario::ComparisonConfig;
+    use cloudmarket::engine::VictimPolicy;
+    use cloudmarket::sweep::{
+        shard, PolicySpec, ScenarioAxis, SeriesFilter, Substrate, SweepSpec,
+    };
+    use cloudmarket::util::json::parse;
+
+    forall(24, 0x5AAD, |rng| {
+        let scenario = ComparisonConfig {
+            seed: rng.range_u64(1, 1u64 << 40),
+            terminate_at: rng.uniform(100.0, 5_000.0),
+            ..Default::default()
+        };
+        let mut policies = vec![
+            PolicySpec::FirstFit,
+            PolicySpec::BestFit,
+            PolicySpec::WorstFit,
+            PolicySpec::RoundRobin,
+            PolicySpec::Hlem { adjusted: false, alpha: 0.0 },
+            PolicySpec::Hlem { adjusted: true, alpha: rng.uniform(-1.0, 0.0) },
+        ];
+        rng.shuffle(&mut policies);
+        policies.truncate(1 + rng.below(3) as usize);
+        let n_seeds = 1 + rng.below(3) as usize;
+        let mut spec = SweepSpec::new(scenario)
+            .with_seeds((0..n_seeds).map(|_| rng.next_u64()).collect())
+            .with_policies(policies);
+        if rng.chance(0.5) {
+            let n = 1 + rng.below(3);
+            spec = spec.with_axis(ScenarioAxis::SpotWarning(
+                (0..n).map(|_| rng.uniform(0.0, 300.0)).collect(),
+            ));
+        }
+        if rng.chance(0.5) {
+            spec = spec.with_axis(ScenarioAxis::Substrate(if rng.chance(0.5) {
+                vec![Substrate::Comparison, Substrate::Trace]
+            } else {
+                vec![Substrate::Trace]
+            }));
+        }
+        if rng.chance(0.3) {
+            spec = spec.with_axis(ScenarioAxis::Victim(vec![VictimPolicy::Youngest]));
+        }
+        if rng.chance(0.3) {
+            spec = spec.with_cell(rng.next_u64(), PolicySpec::BestFit);
+        }
+        if rng.chance(0.5) {
+            spec = spec
+                .with_series_retention(SeriesFilter::parse("policy=first-fit,seed=3").unwrap());
+        }
+
+        // The spec round-trips through its wire form unchanged - and so
+        // does the grid it enumerates.
+        let text = shard::spec_to_json(&spec).to_string_pretty();
+        let back = shard::spec_from_json(&parse(&text).unwrap()).unwrap();
+        assert_eq!(back, spec, "spec changed across serialize/deserialize");
+        assert_eq!(back.cells(), spec.cells());
+        assert_eq!(shard::spec_digest(&back), shard::spec_digest(&spec));
+
+        let total = spec.cell_count();
+        let cells = spec.cells();
+        let shards = 1 + rng.below(8) as usize;
+        let parts = shard::partition(&spec, shards);
+        assert_eq!(parts.len(), shards.min(total.max(1)));
+
+        let mut seen = vec![false; total];
+        for (i, p) in parts.iter().enumerate() {
+            assert_eq!(p.index, i);
+            assert_eq!(p.of, parts.len());
+            let mut weight = 0;
+            for pair in p.cell_ids.windows(2) {
+                assert!(pair[0] < pair[1], "shard ids must ascend");
+            }
+            for &id in &p.cell_ids {
+                assert!(id < total, "cell id {id} out of range");
+                assert!(!seen[id], "cell {id} assigned to two shards");
+                seen[id] = true;
+                weight += shard::cell_weight(&cells[id]);
+            }
+            assert_eq!(weight, p.weight, "stored shard weight disagrees with its cells");
+        }
+        assert!(seen.iter().all(|&s| s), "a cell is missing from every shard");
+
+        // Greedy-LPT balance: within one heaviest cell.
+        if total > 0 {
+            let max = parts.iter().map(|p| p.weight).max().unwrap();
+            let min = parts.iter().map(|p| p.weight).min().unwrap();
+            assert!(
+                max <= min + shard::TRACE_CELL_WEIGHT,
+                "weight imbalance: max {max} min {min}"
+            );
+        }
+
+        // A shard job file round-trips unchanged through disk.
+        let dir = std::env::temp_dir()
+            .join(format!("cloudmarket_prop_shard_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("prop_shard.json");
+        shard::write_shard_file(&path, &spec, &parts[0]).unwrap();
+        let (file_spec, file_shard) = shard::read_shard_file(&path).unwrap();
+        assert_eq!(file_spec, spec);
+        assert_eq!(&file_shard, &parts[0]);
+        let _ = std::fs::remove_file(&path);
+    });
+}
+
+/// Randomized cell results (reports, error rows, retained series with
+/// arbitrary finite floats and full-range u64 counters) survive the
+/// partial-artifact wire format bit-exactly: encode-decode-encode is the
+/// identity on the serialized text, and every float round-trips to the
+/// same bits.
+#[test]
+fn prop_partial_results_round_trip_bit_exact() {
+    use cloudmarket::config::scenario::ComparisonConfig;
+    use cloudmarket::engine::{Report, SpotStats};
+    use cloudmarket::metrics::TimeSeries;
+    use cloudmarket::sweep::{shard, CellResult, PolicySpec, SweepSpec};
+    use cloudmarket::util::json::parse;
+
+    const POLICY_NAMES: [&str; 6] = [
+        "first-fit",
+        "best-fit",
+        "worst-fit",
+        "round-robin",
+        "hlem-vmp",
+        "hlem-vmp-adjusted",
+    ];
+
+    forall(16, 0xB17E, |rng| {
+        let spec = SweepSpec::new(ComparisonConfig::default())
+            .with_seeds(vec![rng.next_u64(), rng.next_u64()])
+            .with_policies(vec![PolicySpec::FirstFit, PolicySpec::BestFit]);
+        let cells = spec.cells();
+        let results: Vec<CellResult> = cells
+            .iter()
+            .map(|&cell| {
+                if rng.chance(0.25) {
+                    return CellResult {
+                        cell,
+                        outcome: Err("boom\n\"quoted\", with commas".to_string()),
+                        series: None,
+                    };
+                }
+                let series = rng.chance(0.5).then(|| {
+                    let mut s = TimeSeries::new(&["spot_running", "weird \"col\",name"]);
+                    let mut t = 0.0;
+                    for _ in 0..rng.range_u64(1, 6) {
+                        t += rng.uniform(0.0, 100.0);
+                        s.push(t, &[rng.uniform(0.0, 1e6), rng.uniform(0.0, 1.0)]);
+                    }
+                    s
+                });
+                CellResult {
+                    cell,
+                    outcome: Ok(Report {
+                        policy: POLICY_NAMES[rng.below(6) as usize],
+                        clock_end: rng.uniform(0.0, 1e7),
+                        events_processed: rng.next_u64(),
+                        wall: std::time::Duration::from_nanos(rng.next_u64() >> 32),
+                        finished: rng.next_u64(),
+                        terminated: rng.next_u64(),
+                        failed: rng.next_u64(),
+                        still_active: rng.next_u64(),
+                        cloudlets_finished: rng.next_u64(),
+                        cloudlets_canceled: rng.next_u64(),
+                        alloc_attempts: rng.next_u64(),
+                        alloc_failures: rng.next_u64(),
+                        spot: SpotStats {
+                            total_spot: rng.next_u64(),
+                            interruptions: rng.next_u64(),
+                            interrupted_vms: rng.next_u64(),
+                            uninterrupted_completions: rng.next_u64(),
+                            redeployments: rng.next_u64(),
+                            completed_after_interruption: rng.next_u64(),
+                            terminated: rng.next_u64(),
+                            max_interruptions_per_vm: rng.below(u32::MAX as u64 + 1) as u32,
+                            avg_interruption_secs: rng.uniform(0.0, 1e5),
+                            max_interruption_secs: rng.uniform(0.0, 1e9),
+                            min_interruption_secs: rng.uniform(0.0, 1.0),
+                        },
+                    }),
+                    series,
+                }
+            })
+            .collect();
+
+        let text = shard::results_to_json(&results).to_string_compact();
+        let back = shard::results_from_json(&parse(&text).unwrap()).unwrap();
+        assert_eq!(
+            shard::results_to_json(&back).to_string_compact(),
+            text,
+            "encode . decode . encode must be the identity"
+        );
+        assert_eq!(back.len(), results.len());
+        for (a, b) in results.iter().zip(&back) {
+            assert_eq!(a.cell, b.cell);
+            match (&a.outcome, &b.outcome) {
+                (Ok(x), Ok(y)) => {
+                    assert_eq!(x.policy, y.policy);
+                    assert_eq!(x.clock_end.to_bits(), y.clock_end.to_bits());
+                    assert_eq!(x.events_processed, y.events_processed);
+                    assert_eq!(x.finished, y.finished);
+                    assert_eq!(x.spot.total_spot, y.spot.total_spot);
+                    assert_eq!(
+                        x.spot.avg_interruption_secs.to_bits(),
+                        y.spot.avg_interruption_secs.to_bits()
+                    );
+                    assert_eq!(
+                        x.spot.min_interruption_secs.to_bits(),
+                        y.spot.min_interruption_secs.to_bits()
+                    );
+                    assert_eq!(
+                        x.spot.max_interruptions_per_vm,
+                        y.spot.max_interruptions_per_vm
+                    );
+                    assert_eq!(y.wall, std::time::Duration::ZERO, "wall must not survive");
+                }
+                (Err(x), Err(y)) => assert_eq!(x, y),
+                _ => panic!("outcome kind changed across the wire"),
+            }
+            match (&a.series, &b.series) {
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.columns(), y.columns());
+                    assert_eq!(x.times(), y.times());
+                    for col in x.columns() {
+                        let xa = x.column(col).unwrap();
+                        let ya = y.column(col).unwrap();
+                        assert_eq!(xa.len(), ya.len());
+                        for (va, vb) in xa.iter().zip(ya) {
+                            assert_eq!(va.to_bits(), vb.to_bits());
+                        }
+                    }
+                }
+                (None, None) => {}
+                _ => panic!("series presence changed across the wire"),
+            }
+        }
+    });
+}

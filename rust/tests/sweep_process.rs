@@ -1,0 +1,285 @@
+//! Cross-process determinism + fault injection for the sweep shard
+//! protocol: real `cloudmarket sweep worker` subprocesses (spawned from
+//! `CARGO_BIN_EXE_cloudmarket`) must produce partials that merge into
+//! artifacts **byte-identical** to the in-process `sweep::run` output on
+//! a mixed-axis dual-substrate grid - at 1, 2 and 4 workers, through the
+//! `--workers` coordinator CLI, and after one worker is killed mid-shard
+//! and its shard reassigned.
+//!
+//! The paper's headline numbers come from wide experiment fan-outs; these
+//! tests are what makes the byte-identical-artifact guarantee trustworthy
+//! once that fan-out crosses process (and eventually host) boundaries.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+
+use cloudmarket::config::scenario::ComparisonConfig;
+use cloudmarket::sweep::{
+    self, shard, PolicySpec, ScenarioAxis, SeriesFilter, Substrate, SweepReport, SweepSpec,
+};
+
+const BIN: &str = env!("CARGO_BIN_EXE_cloudmarket");
+
+fn test_dir(name: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("cloudmarket_sweep_process_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The serialized artifact set of a report: exactly what the CLI writes
+/// (cells CSV, aggregate JSON, retained series CSVs in id order).
+fn render(report: &SweepReport) -> (String, String, Vec<(usize, String)>) {
+    (
+        report.cells_csv().to_string(),
+        report.aggregate_json().to_string_pretty(),
+        report
+            .retained_series_csvs()
+            .into_iter()
+            .map(|(id, csv)| (id, csv.to_string()))
+            .collect(),
+    )
+}
+
+/// A mixed-axis dual-substrate grid, small enough for debug-mode test
+/// runs: 1 seed x [first-fit, adjusted-HLEM] x 2 spot warnings x
+/// [comparison, trace] = 8 cells, first-fit series retained.
+fn mixed_spec() -> SweepSpec {
+    let scenario = ComparisonConfig { terminate_at: 600.0, ..Default::default() };
+    let mut spec = SweepSpec::new(scenario)
+        .with_seeds(vec![20_250_710])
+        .with_policies(vec![
+            PolicySpec::FirstFit,
+            PolicySpec::Hlem { adjusted: true, alpha: -0.5 },
+        ])
+        .with_axis(ScenarioAxis::SpotWarning(vec![2.0, 120.0]))
+        .with_axis(ScenarioAxis::Substrate(vec![Substrate::Comparison, Substrate::Trace]))
+        .with_series_retention(SeriesFilter::parse("policy=first-fit").unwrap());
+    spec.trace.synth.machines = 10;
+    spec.trace.synth.days = 0.05;
+    spec.trace.synth.tasks_per_hour = 120.0;
+    spec.trace.workload.spot_instances = 20;
+    spec.trace.workload.spot_durations = vec![300.0, 600.0];
+    spec.trace.workload.max_trace_vms = 50;
+    spec
+}
+
+/// Partition -> real worker subprocesses -> merge, byte-compared against
+/// the in-process run at 1, 2 and 4 workers.
+#[test]
+fn merged_worker_partials_byte_identical_to_in_process_run() {
+    let spec = mixed_spec();
+    assert_eq!(spec.cell_count(), 8);
+    let reference = sweep::run(&spec, 2);
+    assert_eq!(reference.failed(), 0, "no cell may fail");
+    let want = render(&reference);
+    assert_eq!(want.2.len(), 4, "first-fit cells across substrates retain series");
+
+    for workers in [1usize, 2, 4] {
+        let dir = test_dir(&format!("lib_{workers}w"));
+        let shards = shard::partition(&spec, workers);
+        assert_eq!(shards.len(), workers.min(8));
+
+        // All workers run concurrently, like the coordinator would run
+        // them.
+        let mut children = Vec::new();
+        for s in &shards {
+            let shard_file = dir.join(format!("sweep_shard{:04}.json", s.index));
+            let partial_file = dir.join(format!("sweep_partial{:04}.json", s.index));
+            shard::write_shard_file(&shard_file, &spec, s).unwrap();
+            let child = Command::new(BIN)
+                .args(["sweep", "worker", "--shard"])
+                .arg(&shard_file)
+                .arg("--out")
+                .arg(&partial_file)
+                .args(["--threads", "1"])
+                .env_remove("CLOUDMARKET_SWEEP_FAULT")
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .spawn()
+                .expect("spawning sweep worker");
+            children.push((s.index, partial_file, child));
+        }
+        let mut partials = Vec::new();
+        for (index, partial_file, mut child) in children {
+            let status = child.wait().unwrap();
+            assert!(status.success(), "worker for shard {index} failed: {status}");
+            partials.push(shard::read_partial(&partial_file).unwrap());
+        }
+
+        let (merged_spec, merged) = shard::merge_partials(partials).unwrap();
+        assert_eq!(merged_spec, spec, "spec survives the process boundary");
+        assert_eq!(merged.failed(), 0);
+        let got = render(&merged);
+        assert_eq!(
+            got, want,
+            "{workers}-worker merged artifacts differ from the in-process run"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+fn read_artifacts(dir: &Path) -> (String, String, Vec<(String, String)>) {
+    let cells = std::fs::read_to_string(dir.join("sweep_cells.csv")).unwrap();
+    let agg = std::fs::read_to_string(dir.join("sweep_aggregate.json")).unwrap();
+    let mut series: Vec<(String, String)> = std::fs::read_dir(dir)
+        .unwrap()
+        .flatten()
+        .filter_map(|e| {
+            let name = e.file_name().to_string_lossy().into_owned();
+            (name.starts_with("sweep_series_cell") && name.ends_with(".csv"))
+                .then(|| (name, std::fs::read_to_string(e.path()).unwrap()))
+        })
+        .collect();
+    series.sort();
+    (cells, agg, series)
+}
+
+/// Flags for a tiny trace-substrate grid every section of the CLI test
+/// shares (2 seeds x 2 policies = 4 cells; the comparison template is not
+/// CLI-shrinkable, so the cross-process CLI check runs trace-only).
+const CLI_GRID: &[&str] = &[
+    "--seeds",
+    "2",
+    "--seed",
+    "42",
+    "--policies",
+    "first-fit,hlem-vmp",
+    "--substrate",
+    "trace",
+    "--machines",
+    "10",
+    "--days",
+    "0.05",
+    "--spots",
+    "20",
+    "--max-vms",
+    "50",
+    "--retain-series",
+    "policy=first-fit",
+];
+
+fn run_cli(args: &[&str], envs: &[(&str, String)]) -> std::process::Output {
+    let mut cmd = Command::new(BIN);
+    cmd.arg("sweep").args(CLI_GRID).args(args).env_remove("CLOUDMARKET_SWEEP_FAULT");
+    for (k, v) in envs {
+        cmd.env(k, v);
+    }
+    cmd.output().expect("running cloudmarket sweep")
+}
+
+/// End-to-end `--workers` coordinator vs single-process CLI run: byte
+/// identical artifacts, stale work/series files cleaned, no shard/partial
+/// intermediates left behind - and with a fault injected, one worker dies
+/// mid-shard (SIGABRT), its shard is reassigned, and the bytes still
+/// match.
+#[test]
+fn coordinator_cli_matches_single_process_and_survives_worker_kill() {
+    // Reference: single-process, single-thread run of the same flags.
+    let sp = test_dir("cli_sp");
+    let out = run_cli(&["--threads", "1", "--out-dir", sp.to_str().unwrap()], &[]);
+    assert!(out.status.success(), "single-process sweep failed: {out:?}");
+    let want = read_artifacts(&sp);
+    assert!(!want.2.is_empty(), "retained series expected");
+
+    // Coordinator run, with stale files from a "previous aborted run"
+    // dropped in first: they must not survive into the results.
+    let mp = test_dir("cli_mp");
+    std::fs::write(mp.join("sweep_shard9999.json"), "stale").unwrap();
+    std::fs::write(mp.join("sweep_partial9999.json"), "stale").unwrap();
+    std::fs::write(mp.join("sweep_partial9999.json.tmp"), "stale").unwrap();
+    std::fs::write(mp.join("sweep_series_cell9999.csv"), "stale").unwrap();
+    let out = run_cli(&["--workers", "2", "--out-dir", mp.to_str().unwrap()], &[]);
+    assert!(out.status.success(), "coordinator sweep failed: {out:?}");
+    assert_eq!(read_artifacts(&mp), want, "multi-process artifacts differ");
+    for leftover in [
+        "sweep_shard9999.json",
+        "sweep_partial9999.json",
+        "sweep_partial9999.json.tmp",
+        "sweep_series_cell9999.csv",
+        "sweep_shard0000.json",
+        "sweep_partial0000.json",
+    ] {
+        assert!(
+            !mp.join(leftover).exists(),
+            "stale/intermediate file {leftover} survived the coordinator run"
+        );
+    }
+
+    // Fault injection: the worker that takes shard 0 aborts right after
+    // its first completed cell (once - the marker file disarms the
+    // retry). The coordinator must reassign the shard and still produce
+    // identical bytes.
+    let ft = test_dir("cli_fault");
+    let marker = ft.join("fault_marker");
+    let out = run_cli(
+        &["--workers", "2", "--out-dir", ft.to_str().unwrap()],
+        &[("CLOUDMARKET_SWEEP_FAULT", format!("0:{}", marker.display()))],
+    );
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "fault-injected sweep failed:\n{stderr}");
+    assert!(marker.exists(), "the injected fault never fired");
+    assert!(
+        stderr.contains("reassigning"),
+        "coordinator did not report the reassignment:\n{stderr}"
+    );
+    assert!(stderr.contains("1 reassigned"), "unexpected reassignment count:\n{stderr}");
+    assert_eq!(
+        read_artifacts(&ft),
+        want,
+        "artifacts after a mid-shard worker kill differ from the clean run"
+    );
+
+    for dir in [sp, mp, ft] {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// A worker run on a shard file written by hand (the cluster recipe) and
+/// merged via `sweep merge` equals the same cells from `sweep::run` - the
+/// manual shard/worker/merge path stays honest, not just the coordinator.
+#[test]
+fn manual_shard_worker_merge_recipe_works() {
+    let spec = mixed_spec();
+    let reference = sweep::run(&spec, 2);
+    let want = render(&reference);
+
+    let dir = test_dir("manual");
+    let shards = shard::partition(&spec, 2);
+    let mut partial_args: Vec<String> = Vec::new();
+    for s in &shards {
+        let shard_file = dir.join(format!("sweep_shard{:04}.json", s.index));
+        let partial_file = dir.join(format!("sweep_partial{:04}.json", s.index));
+        shard::write_shard_file(&shard_file, &spec, s).unwrap();
+        let out = Command::new(BIN)
+            .args(["sweep", "worker", "--shard"])
+            .arg(&shard_file)
+            .arg("--out")
+            .arg(&partial_file)
+            .env_remove("CLOUDMARKET_SWEEP_FAULT")
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "worker failed: {out:?}");
+        partial_args.push(partial_file.to_string_lossy().into_owned());
+    }
+    let merged_dir = dir.join("merged");
+    let out = Command::new(BIN)
+        .args(["sweep", "merge"])
+        .args(&partial_args)
+        .arg("--out-dir")
+        .arg(&merged_dir)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "merge failed: {out:?}");
+    let (cells, agg, series) = read_artifacts(&merged_dir);
+    assert_eq!(cells, want.0);
+    assert_eq!(agg, want.1);
+    let want_series: Vec<(String, String)> = want
+        .2
+        .iter()
+        .map(|(id, text)| (format!("sweep_series_cell{id:04}.csv"), text.clone()))
+        .collect();
+    assert_eq!(series, want_series);
+    let _ = std::fs::remove_dir_all(&dir);
+}
