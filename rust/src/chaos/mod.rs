@@ -1,0 +1,653 @@
+//! Deterministic chaos injection: correlated failures & capacity shocks.
+//!
+//! The paper evaluates spot policies only against *independent* per-VM
+//! reclaims, but real spot markets fail in correlated bursts (capacity
+//! crunches reclaim whole AZs at once). This module turns seeded,
+//! declarative fault specs - host crash/recovery (MTBF/MTTR), AZ-wide
+//! reclaim storms, broker outage windows and demand surges - into a
+//! pre-scheduled [`ChaosSchedule`] consumed by the existing engine event
+//! loop through four `Tag::Chaos*` events. [`compile`] is a pure function
+//! of `(spec, seed, horizon, n_hosts)`: no wall clock, no global RNG,
+//! per-host derived streams - so compiled schedules are byte-identical at
+//! any thread/worker count and in any compile order, and the sweep's
+//! deterministic-artifact contract (pinned by `tests/sweep_determinism.rs`
+//! and `tests/properties.rs`) is untouched.
+//!
+//! Fault values use a dash-separated `key<number>` grammar. The canonical
+//! [`ChaosSpec`] labels round-trip exactly through the parsers because
+//! every number is emitted with Rust's shortest-round-trip `f64` Display:
+//!
+//! - `chaos.host-mtbf=mtbf20000-mttr600`
+//! - `chaos.reclaim-storm=at1200-frac0.5` (one storm) or
+//!   `at600-frac0.25-x3-every900` (a storm train)
+//! - `chaos.broker-outage=at900-for300`
+//! - `chaos.demand-surge=at600-vms40-pes4-for600`
+
+use crate::cloudlet::Cloudlet;
+use crate::core::EntityId;
+use crate::engine::{Engine, Tag};
+use crate::infra::HostId;
+use crate::stats::Rng;
+use crate::vm::{Vm, VmSpec};
+
+/// Host crash/recovery process: exponential inter-crash times with mean
+/// `mtbf` and exponential repair times with mean `mttr`, drawn per host
+/// from an independent derived RNG stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HostMtbf {
+    /// Mean time between failures (seconds).
+    pub mtbf: f64,
+    /// Mean time to recovery (seconds).
+    pub mttr: f64,
+}
+
+/// AZ-wide spot reclaim storm: at each storm timestamp, a fraction of all
+/// currently interruptible spot VMs receives the interruption warning at
+/// once (correlated reclaim, vs the engine's per-VM preemptions).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReclaimStorm {
+    /// First storm timestamp (seconds).
+    pub at: f64,
+    /// Fraction of interruptible spot VMs reclaimed per storm, in (0, 1].
+    pub frac: f64,
+    /// Number of storms in the train (`x` segment; default 1).
+    pub count: u32,
+    /// Spacing between storms (`every` segment; 0 when `count` is 1).
+    pub every: f64,
+}
+
+/// Broker outage window `[at, at+for)`: pending-request retries are
+/// deferred while the window is open, then drained just after it closes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BrokerOutage {
+    pub at: f64,
+    /// Window duration (seconds; the `for` segment).
+    pub dur: f64,
+}
+
+/// On-demand demand surge: `vms` extra persistent on-demand VMs of `pes`
+/// PEs each arrive at `at` and run for `for` seconds, shrinking the spot
+/// headroom (and preempting spots) for the surge duration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DemandSurge {
+    pub at: f64,
+    pub vms: u32,
+    pub pes: u32,
+    /// Surge duration (seconds; the `for` segment).
+    pub dur: f64,
+}
+
+/// Declarative per-cell chaos configuration: at most one spec per fault
+/// family. [`ChaosSpec::NONE`] (the default) injects nothing and leaves
+/// the engine behavior bit-identical to a chaos-free build.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ChaosSpec {
+    pub host_mtbf: Option<HostMtbf>,
+    pub reclaim_storm: Option<ReclaimStorm>,
+    pub broker_outage: Option<BrokerOutage>,
+    pub demand_surge: Option<DemandSurge>,
+}
+
+impl ChaosSpec {
+    /// The no-chaos spec (every family absent).
+    pub const NONE: ChaosSpec = ChaosSpec {
+        host_mtbf: None,
+        reclaim_storm: None,
+        broker_outage: None,
+        demand_surge: None,
+    };
+
+    pub fn is_none(&self) -> bool {
+        *self == ChaosSpec::NONE
+    }
+}
+
+// ----------------------------------------------------------------------
+// value grammar: dash-separated `key<number>` segments
+// ----------------------------------------------------------------------
+
+/// Split one `key<number>` segment. All grammar numbers are non-negative,
+/// so splitting the value on `-` beforehand is unambiguous.
+fn segment(s: &str) -> Result<(&str, f64), String> {
+    let i = s
+        .find(|c: char| c.is_ascii_digit() || c == '.')
+        .ok_or_else(|| format!("bad chaos segment '{s}' (expected key<number>)"))?;
+    let (key, num) = s.split_at(i);
+    if key.is_empty() {
+        return Err(format!("bad chaos segment '{s}' (missing key)"));
+    }
+    let v: f64 = num
+        .parse()
+        .map_err(|_| format!("bad number '{num}' in chaos segment '{s}'"))?;
+    if !v.is_finite() || v < 0.0 {
+        return Err(format!("chaos segment '{s}' must be a finite non-negative number"));
+    }
+    Ok((key, v))
+}
+
+fn segments(s: &str) -> Result<Vec<(&str, f64)>, String> {
+    s.trim().split('-').map(segment).collect()
+}
+
+/// Check a segment value is a whole number representable as `u32`.
+fn whole(key: &str, v: f64) -> Result<u32, String> {
+    if v.fract() != 0.0 || v > u32::MAX as f64 {
+        return Err(format!("chaos segment '{key}{v}' must be a whole number"));
+    }
+    Ok(v as u32)
+}
+
+impl HostMtbf {
+    /// Canonical value string (`mtbf<secs>-mttr<secs>`).
+    pub fn label(&self) -> String {
+        format!("mtbf{}-mttr{}", self.mtbf, self.mttr)
+    }
+
+    pub fn parse(s: &str) -> Result<HostMtbf, String> {
+        match segments(s)?.as_slice() {
+            [("mtbf", mtbf), ("mttr", mttr)] if *mtbf > 0.0 && *mttr > 0.0 => {
+                Ok(HostMtbf { mtbf: *mtbf, mttr: *mttr })
+            }
+            _ => Err(format!(
+                "bad chaos.host-mtbf value '{s}' (expected mtbf<secs>-mttr<secs>, both > 0)"
+            )),
+        }
+    }
+}
+
+impl ReclaimStorm {
+    /// Canonical value string (`at<t>-frac<f>[-x<n>-every<secs>]`; the
+    /// train segments are omitted for a single storm).
+    pub fn label(&self) -> String {
+        if self.count > 1 {
+            format!("at{}-frac{}-x{}-every{}", self.at, self.frac, self.count, self.every)
+        } else {
+            format!("at{}-frac{}", self.at, self.frac)
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ReclaimStorm, String> {
+        let err = || {
+            format!(
+                "bad chaos.reclaim-storm value '{s}' (expected \
+                 at<t>-frac<f> or at<t>-frac<f>-x<n>-every<secs>, \
+                 frac in (0,1], n >= 1, every > 0)"
+            )
+        };
+        match segments(s)?.as_slice() {
+            [("at", at), ("frac", frac)] if *frac > 0.0 && *frac <= 1.0 => {
+                Ok(ReclaimStorm { at: *at, frac: *frac, count: 1, every: 0.0 })
+            }
+            [("at", at), ("frac", frac), ("x", n), ("every", every)]
+                if *frac > 0.0 && *frac <= 1.0 && *every > 0.0 =>
+            {
+                let count = whole("x", *n)?;
+                if count == 0 {
+                    return Err(err());
+                }
+                if count == 1 {
+                    // Canonical single-storm form omits the train segments.
+                    return Ok(ReclaimStorm { at: *at, frac: *frac, count: 1, every: 0.0 });
+                }
+                Ok(ReclaimStorm { at: *at, frac: *frac, count, every: *every })
+            }
+            _ => Err(err()),
+        }
+    }
+}
+
+impl BrokerOutage {
+    /// Canonical value string (`at<t>-for<secs>`).
+    pub fn label(&self) -> String {
+        format!("at{}-for{}", self.at, self.dur)
+    }
+
+    pub fn parse(s: &str) -> Result<BrokerOutage, String> {
+        match segments(s)?.as_slice() {
+            [("at", at), ("for", dur)] if *dur > 0.0 => {
+                Ok(BrokerOutage { at: *at, dur: *dur })
+            }
+            _ => Err(format!(
+                "bad chaos.broker-outage value '{s}' (expected at<t>-for<secs>, for > 0)"
+            )),
+        }
+    }
+}
+
+impl DemandSurge {
+    /// Canonical value string (`at<t>-vms<n>-pes<p>-for<secs>`).
+    pub fn label(&self) -> String {
+        format!("at{}-vms{}-pes{}-for{}", self.at, self.vms, self.pes, self.dur)
+    }
+
+    pub fn parse(s: &str) -> Result<DemandSurge, String> {
+        match segments(s)?.as_slice() {
+            [("at", at), ("vms", vms), ("pes", pes), ("for", dur)] if *dur > 0.0 => {
+                let vms = whole("vms", *vms)?;
+                let pes = whole("pes", *pes)?;
+                if vms == 0 || pes == 0 {
+                    return Err(format!(
+                        "bad chaos.demand-surge value '{s}' (vms and pes must be >= 1)"
+                    ));
+                }
+                Ok(DemandSurge { at: *at, vms, pes, dur: *dur })
+            }
+            _ => Err(format!(
+                "bad chaos.demand-surge value '{s}' (expected \
+                 at<t>-vms<n>-pes<p>-for<secs>, for > 0)"
+            )),
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// compiled schedule
+// ----------------------------------------------------------------------
+
+/// One compiled host fault: crash at `crash_at`, recover at `recover_at`
+/// (`None` when the repair completes past the horizon).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HostFault {
+    pub host: HostId,
+    pub crash_at: f64,
+    pub recover_at: Option<f64>,
+}
+
+/// One compiled reclaim storm occurrence.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Storm {
+    pub at: f64,
+    pub frac: f64,
+}
+
+/// One compiled demand-surge occurrence.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Surge {
+    pub at: f64,
+    pub vms: u32,
+    pub pes: u32,
+    pub dur: f64,
+}
+
+/// A fully-resolved fault schedule: every random draw consumed, every
+/// event timestamped. Pure data - applying it ([`apply`]) only schedules
+/// engine events, so the same schedule always produces the same run.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ChaosSchedule {
+    /// Host crash/recover pairs, host-major then time-ascending per host.
+    pub host_faults: Vec<HostFault>,
+    pub storms: Vec<Storm>,
+    /// Broker outage windows as half-open `[start, end)` intervals.
+    pub outages: Vec<(f64, f64)>,
+    pub surges: Vec<Surge>,
+}
+
+impl ChaosSchedule {
+    pub fn is_empty(&self) -> bool {
+        self.host_faults.is_empty()
+            && self.storms.is_empty()
+            && self.outages.is_empty()
+            && self.surges.is_empty()
+    }
+}
+
+/// Derive an independent RNG stream for `(seed, family, stream)`. Each
+/// host gets its own stream so the compiled fault list is independent of
+/// host iteration order.
+fn stream_rng(seed: u64, family: u64, stream: u64) -> Rng {
+    Rng::new(
+        seed ^ family.wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            ^ stream.wrapping_mul(0xa076_1d64_78bd_642f),
+    )
+}
+
+/// Exponential draw with the given mean (inverse-CDF on a [0,1) uniform).
+fn draw_exp(rng: &mut Rng, mean: f64) -> f64 {
+    -mean * (1.0 - rng.next_f64()).ln()
+}
+
+const FAMILY_HOST: u64 = 1;
+
+/// Compile `spec` into a [`ChaosSchedule`] - a pure function of the
+/// arguments. `horizon` bounds every event timestamp; `n_hosts` is the
+/// host population the MTBF process runs over.
+pub fn compile(spec: &ChaosSpec, seed: u64, horizon: f64, n_hosts: usize) -> ChaosSchedule {
+    let mut sched = ChaosSchedule::default();
+    if let Some(m) = spec.host_mtbf {
+        for host in 0..n_hosts {
+            let mut rng = stream_rng(seed, FAMILY_HOST, host as u64);
+            let mut t = draw_exp(&mut rng, m.mtbf);
+            while t < horizon {
+                let recover = t + draw_exp(&mut rng, m.mttr);
+                sched.host_faults.push(HostFault {
+                    host,
+                    crash_at: t,
+                    recover_at: if recover < horizon { Some(recover) } else { None },
+                });
+                t = recover + draw_exp(&mut rng, m.mtbf);
+            }
+        }
+    }
+    if let Some(s) = spec.reclaim_storm {
+        for i in 0..s.count {
+            let at = s.at + i as f64 * s.every;
+            if at < horizon {
+                sched.storms.push(Storm { at, frac: s.frac });
+            }
+        }
+    }
+    if let Some(o) = spec.broker_outage {
+        if o.at < horizon {
+            sched.outages.push((o.at, o.at + o.dur));
+        }
+    }
+    if let Some(s) = spec.demand_surge {
+        if s.at < horizon {
+            sched.surges.push(Surge { at: s.at, vms: s.vms, pes: s.pes, dur: s.dur });
+        }
+    }
+    sched
+}
+
+/// Inject a compiled schedule into a freshly-built engine (after the
+/// workload is submitted, before `run`). Only schedules events and
+/// submits surge VMs - the engine core stays unmodified; the chaos event
+/// handlers live behind the new `Tag::Chaos*` dispatch arms.
+pub fn apply(engine: &mut Engine, sched: &ChaosSchedule) {
+    for f in &sched.host_faults {
+        if f.host >= engine.world.hosts.len() {
+            continue; // spec compiled for a larger cluster than built
+        }
+        let dc = engine.world.hosts[f.host].dc;
+        engine.sim.schedule_at(
+            f.crash_at,
+            EntityId::Kernel,
+            EntityId::Datacenter(dc),
+            Tag::ChaosHostCrash(f.host),
+        );
+        if let Some(r) = f.recover_at {
+            engine.sim.schedule_at(
+                r,
+                EntityId::Kernel,
+                EntityId::Datacenter(dc),
+                Tag::ChaosHostRecover(f.host),
+            );
+        }
+    }
+    for (k, s) in sched.storms.iter().enumerate() {
+        engine.chaos_storms.push(s.frac);
+        engine.sim.schedule_at(
+            s.at,
+            EntityId::Kernel,
+            EntityId::Broker(0),
+            Tag::ChaosStorm(k),
+        );
+    }
+    for &(start, end) in &sched.outages {
+        engine.chaos_outages.push((start, end));
+        // Drain strictly after the half-open window closes: one min_dt
+        // step past `end` survives the kernel's time quantization.
+        let drain = end + engine.config.min_dt.max(1e-9);
+        engine.sim.schedule_at(
+            drain,
+            EntityId::Kernel,
+            EntityId::Broker(0),
+            Tag::ChaosRetryDrain,
+        );
+    }
+    for s in &sched.surges {
+        // Surges reuse the ordinary submission machinery: persistent
+        // on-demand VMs that arrive at `at` and hold capacity for `dur`.
+        // On-demand arrivals preempt spots through the normal policy
+        // path, so the surge shrinks spot headroom exactly like organic
+        // demand would.
+        let mips = 1_000.0;
+        for _ in 0..s.vms {
+            let vm = engine.submit_vm(
+                Vm::on_demand(0, VmSpec::new(mips, s.pes))
+                    .with_persistent(s.dur)
+                    .with_delay(s.at),
+            );
+            engine.submit_cloudlet(
+                Cloudlet::new(0, s.dur * mips * s.pes as f64, s.pes).with_vm(vm),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::FirstFit;
+    use crate::engine::EngineConfig;
+    use crate::infra::HostSpec;
+    use crate::vm::SpotConfig;
+
+    fn spec_all() -> ChaosSpec {
+        ChaosSpec {
+            host_mtbf: Some(HostMtbf { mtbf: 2_000.0, mttr: 300.0 }),
+            reclaim_storm: Some(ReclaimStorm { at: 600.0, frac: 0.5, count: 3, every: 900.0 }),
+            broker_outage: Some(BrokerOutage { at: 900.0, dur: 300.0 }),
+            demand_surge: Some(DemandSurge { at: 600.0, vms: 4, pes: 2, dur: 600.0 }),
+        }
+    }
+
+    #[test]
+    fn labels_round_trip_through_parsers() {
+        let s = spec_all();
+        let m = s.host_mtbf.unwrap();
+        assert_eq!(HostMtbf::parse(&m.label()).unwrap(), m);
+        let st = s.reclaim_storm.unwrap();
+        assert_eq!(ReclaimStorm::parse(&st.label()).unwrap(), st);
+        let single = ReclaimStorm { at: 120.0, frac: 0.25, count: 1, every: 0.0 };
+        assert_eq!(single.label(), "at120-frac0.25");
+        assert_eq!(ReclaimStorm::parse(&single.label()).unwrap(), single);
+        let o = s.broker_outage.unwrap();
+        assert_eq!(BrokerOutage::parse(&o.label()).unwrap(), o);
+        let d = s.demand_surge.unwrap();
+        assert_eq!(DemandSurge::parse(&d.label()).unwrap(), d);
+    }
+
+    #[test]
+    fn parsers_reject_bad_grammar() {
+        assert!(HostMtbf::parse("mtbf0-mttr60").is_err());
+        assert!(HostMtbf::parse("mtbf100").is_err());
+        assert!(ReclaimStorm::parse("at100-frac1.5").is_err());
+        assert!(ReclaimStorm::parse("at100-frac0.5-every60").is_err(), "every without x");
+        assert!(ReclaimStorm::parse("at100-frac0.5-x0-every60").is_err());
+        assert!(ReclaimStorm::parse("at100-frac0.5-x2.5-every60").is_err());
+        assert!(BrokerOutage::parse("at100-for0").is_err());
+        assert!(BrokerOutage::parse("at100").is_err());
+        assert!(DemandSurge::parse("at100-vms0-pes2-for60").is_err());
+        assert!(DemandSurge::parse("at100-vms2-pes2").is_err());
+        assert!(segment("frac").is_err());
+        assert!(segment("0.5").is_err());
+    }
+
+    /// An `x1` train parses to the canonical single-storm form, so label
+    /// round-trips stay exact.
+    #[test]
+    fn single_storm_train_canonicalizes() {
+        let s = ReclaimStorm::parse("at100-frac0.5-x1-every60").unwrap();
+        assert_eq!(s, ReclaimStorm { at: 100.0, frac: 0.5, count: 1, every: 0.0 });
+        assert_eq!(s.label(), "at100-frac0.5");
+    }
+
+    /// Compilation is a pure function: identical inputs give identical
+    /// schedules (byte-compared through Debug), different seeds differ.
+    #[test]
+    fn compile_is_seed_deterministic() {
+        let spec = spec_all();
+        let a = compile(&spec, 7, 4_800.0, 20);
+        let b = compile(&spec, 7, 4_800.0, 20);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        let c = compile(&spec, 8, 4_800.0, 20);
+        assert_ne!(a, c);
+    }
+
+    /// Every compiled event timestamp respects the horizon, and repair
+    /// completions past the horizon compile to `recover_at: None`.
+    #[test]
+    fn compile_respects_horizon() {
+        let spec = spec_all();
+        let horizon = 2_000.0;
+        let sched = compile(&spec, 3, horizon, 50);
+        for f in &sched.host_faults {
+            assert!(f.crash_at < horizon);
+            if let Some(r) = f.recover_at {
+                assert!(r < horizon && r > f.crash_at);
+            }
+        }
+        for s in &sched.storms {
+            assert!(s.at < horizon);
+        }
+        // Storm train: 600 and 1500 fire, 2400 is clipped.
+        assert_eq!(sched.storms.len(), 2);
+        for &(start, end) in &sched.outages {
+            assert!(start < horizon && end > start);
+        }
+        assert!(compile(&ChaosSpec::NONE, 3, horizon, 50).is_empty());
+    }
+
+    /// Per-host RNG streams: a host's fault sequence does not depend on
+    /// how many hosts come before it.
+    #[test]
+    fn host_streams_are_independent() {
+        let spec = ChaosSpec { host_mtbf: spec_all().host_mtbf, ..ChaosSpec::NONE };
+        let small = compile(&spec, 11, 10_000.0, 5);
+        let large = compile(&spec, 11, 10_000.0, 50);
+        let faults_of = |s: &ChaosSchedule, h: HostId| {
+            s.host_faults.iter().filter(|f| f.host == h).copied().collect::<Vec<_>>()
+        };
+        for h in 0..5 {
+            assert_eq!(faults_of(&small, h), faults_of(&large, h));
+        }
+    }
+
+    fn engine() -> Engine {
+        let mut cfg = EngineConfig::default();
+        cfg.min_dt = 0.1;
+        cfg.vm_destruction_delay = 0.0;
+        let mut e = Engine::new(cfg, Box::new(FirstFit::new()));
+        let dc = e.add_datacenter("dc0", 1.0);
+        for _ in 0..2 {
+            e.add_host(dc, HostSpec::new(8, 1000.0, 16_384.0, 10_000.0, 1_000_000.0));
+        }
+        e
+    }
+
+    /// A reclaim storm warns the configured fraction of interruptible
+    /// spots at the storm timestamp and the recorder counts it.
+    #[test]
+    fn storm_reclaims_fraction_of_spots() {
+        let mut e = engine();
+        let cfg = SpotConfig::terminate().with_min_running(0.0).with_warning(1.0);
+        for _ in 0..4 {
+            let v = e.submit_vm(Vm::spot(0, VmSpec::new(1000.0, 2), cfg));
+            e.submit_cloudlet(Cloudlet::new(0, 1_000_000.0, 2).with_vm(v));
+        }
+        let sched = ChaosSchedule {
+            storms: vec![Storm { at: 50.0, frac: 0.5 }],
+            ..Default::default()
+        };
+        apply(&mut e, &sched);
+        e.terminate_at(100.0);
+        let report = e.run();
+        assert_eq!(e.recorder.storms, 1);
+        assert_eq!(e.recorder.storm_reclaims, 2, "ceil(4 * 0.5) victims");
+        assert_eq!(report.spot.interruptions, 2);
+        assert_eq!(report.resilience.storms, 1);
+        assert_eq!(report.resilience.interruptions_per_storm, 2.0);
+    }
+
+    /// Host crash evicts and the paired recovery brings the host back;
+    /// a displaced persistent VM recovers and the report times it.
+    #[test]
+    fn host_crash_and_recovery_round_trip() {
+        let mut e = engine();
+        let od = e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 8)).with_persistent(5_000.0));
+        e.submit_cloudlet(Cloudlet::new(0, 800_000.0, 8).with_vm(od));
+        let od2 = e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 8)).with_persistent(5_000.0));
+        e.submit_cloudlet(Cloudlet::new(0, 800_000.0, 8).with_vm(od2));
+        let sched = ChaosSchedule {
+            host_faults: vec![HostFault { host: 0, crash_at: 10.0, recover_at: Some(40.0) }],
+            ..Default::default()
+        };
+        apply(&mut e, &sched);
+        e.terminate_at(300.0);
+        let report = e.run();
+        assert_eq!(e.recorder.host_failures, 1);
+        assert_eq!(report.resilience.host_failures, 1);
+        // The evicted VM waited out the crash and was re-placed.
+        assert_eq!(report.resilience.recoveries, 1);
+        assert!(report.resilience.max_recovery_secs >= 29.0, "{report:?}");
+        assert!(report.resilience.work_recovered_mi > 0.0);
+    }
+
+    /// Crash on a dormant host is a no-op, and a chaos recovery never
+    /// reactivates a host the chaos crash didn't take down.
+    #[test]
+    fn crash_guards_respect_host_state() {
+        let mut e = engine();
+        // Dormant trace-style host: added at t=50, crash scheduled at t=10.
+        let h = e.add_host_at(0, HostSpec::new(8, 1000.0, 16_384.0, 10_000.0, 1_000_000.0), 50.0);
+        let sched = ChaosSchedule {
+            host_faults: vec![HostFault { host: h, crash_at: 10.0, recover_at: Some(20.0) }],
+            ..Default::default()
+        };
+        apply(&mut e, &sched);
+        e.terminate_at(30.0);
+        e.run();
+        assert_eq!(e.recorder.host_failures, 0);
+        // Still dormant at t=30: the stray ChaosHostRecover didn't fire it up.
+        assert!(!e.world.hosts[h].is_active());
+    }
+
+    /// During a broker outage, freed capacity is not handed to waiting
+    /// VMs; the drain event places them right after the window closes.
+    #[test]
+    fn broker_outage_defers_and_drains_retries() {
+        let mut cfg = EngineConfig::default();
+        cfg.min_dt = 0.1;
+        cfg.vm_destruction_delay = 0.0;
+        let mut e = Engine::new(cfg, Box::new(FirstFit::new()));
+        let dc = e.add_datacenter("dc0", 1.0);
+        e.add_host(dc, HostSpec::new(8, 1000.0, 16_384.0, 10_000.0, 1_000_000.0));
+        // Occupy the host for 10 s, then a waiter needs the freed space.
+        let od = e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 8)));
+        e.submit_cloudlet(Cloudlet::new(0, 80_000.0, 8).with_vm(od));
+        let waiter =
+            e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 8)).with_persistent(200.0));
+        e.submit_cloudlet(Cloudlet::new(0, 8_000.0, 8).with_vm(waiter));
+        let sched =
+            ChaosSchedule { outages: vec![(5.0, 30.0)], ..Default::default() };
+        apply(&mut e, &sched);
+        e.terminate_at(100.0);
+        e.run();
+        let start = e.world.vms[waiter].history.first_start().unwrap();
+        assert!(start >= 30.0, "placed during the outage window: {start}");
+        assert!(start < 40.0, "drain event never placed the waiter: {start}");
+    }
+
+    /// A demand surge submits the configured VM fleet and preempts spots
+    /// through the ordinary on-demand path.
+    #[test]
+    fn demand_surge_preempts_spots() {
+        let mut e = engine();
+        let cfg = SpotConfig::terminate().with_min_running(0.0).with_warning(1.0);
+        for _ in 0..2 {
+            let v = e.submit_vm(Vm::spot(0, VmSpec::new(1000.0, 8), cfg));
+            e.submit_cloudlet(Cloudlet::new(0, 1_000_000.0, 8).with_vm(v));
+        }
+        let sched = ChaosSchedule {
+            surges: vec![Surge { at: 20.0, vms: 2, pes: 8, dur: 30.0 }],
+            ..Default::default()
+        };
+        let before = e.world.vms.len();
+        apply(&mut e, &sched);
+        assert_eq!(e.world.vms.len(), before + 2);
+        e.terminate_at(200.0);
+        let report = e.run();
+        assert!(report.spot.interruptions >= 1, "{report:?}");
+    }
+}

@@ -83,7 +83,7 @@ use crate::vm::{InterruptionBehavior, Vm, VmId, VmState};
 
 pub use broker::Broker;
 pub use config::{EngineConfig, VictimPolicy};
-pub use report::{Report, SpotStats};
+pub use report::{Report, ResilienceStats, SpotStats};
 pub use tag::Tag;
 pub use world::World;
 
@@ -157,6 +157,16 @@ pub struct Engine {
     retry_scratch: Vec<VmId>,
     /// Reusable VM-cloudlet-list buffer (place/pause/cancel).
     cloudlet_scratch: Vec<CloudletId>,
+
+    // ---- chaos-injection state (crate::chaos::apply fills these) ----
+    /// Per-storm reclaim fractions; `Tag::ChaosStorm(k)` indexes this.
+    pub(crate) chaos_storms: Vec<f64>,
+    /// Broker outage windows as half-open `[start, end)` intervals;
+    /// `retry_pending` defers while the clock is inside one.
+    pub(crate) chaos_outages: Vec<(f64, f64)>,
+    /// Hosts currently down due to a chaos crash - a chaos recovery only
+    /// reactivates hosts this flags, never dormant/trace-removed ones.
+    chaos_crashed: Vec<bool>,
 }
 
 impl Engine {
@@ -234,6 +244,9 @@ impl Engine {
             share_scratch: shares,
             retry_scratch: retry,
             cloudlet_scratch: cloudlets,
+            chaos_storms: Vec::new(),
+            chaos_outages: Vec::new(),
+            chaos_crashed: Vec::new(),
         }
     }
 
@@ -370,6 +383,10 @@ impl Engine {
             Tag::Sample => self.on_sample(),
             Tag::HostAdd(h) => self.on_host_add(h),
             Tag::HostRemove(h) => self.on_host_remove(h),
+            Tag::ChaosHostCrash(h) => self.on_chaos_host_crash(h),
+            Tag::ChaosHostRecover(h) => self.on_chaos_host_recover(h),
+            Tag::ChaosStorm(k) => self.on_chaos_storm(k),
+            Tag::ChaosRetryDrain => self.retry_pending(),
             Tag::End => {}
         }
     }
@@ -503,6 +520,18 @@ impl Engine {
             self.recorder.log(now, v, LifecycleKind::Allocated);
         }
 
+        // A displaced VM made it back: record the time-to-recover and the
+        // in-flight work it carried across the gap (resilience metrics).
+        if let Some(t0) = self.world.vms[v].displaced_at.take() {
+            let dur = now - t0;
+            self.recorder.recoveries += 1;
+            self.recorder.recovery_secs_sum += dur;
+            if dur > self.recorder.recovery_secs_max {
+                self.recorder.recovery_secs_max = dur;
+            }
+            self.recorder.work_recovered_mi += self.vm_inflight_done_mi(v);
+        }
+
         // Start queued cloudlets / resume paused ones (the VM's cloudlet
         // list is copied into reusable scratch, not cloned per placement).
         let mut cls = std::mem::take(&mut self.cloudlet_scratch);
@@ -589,6 +618,7 @@ impl Engine {
             InterruptionBehavior::Hibernate => {
                 self.world.vms[v].transition(VmState::Hibernated);
                 self.world.vms[v].hibernated_at = Some(now);
+                self.world.vms[v].displaced_at = Some(now);
                 self.pause_cloudlets(v);
                 self.broker.enqueue_resubmitting(v);
                 self.recorder.hibernations += 1;
@@ -603,6 +633,8 @@ impl Engine {
             InterruptionBehavior::Terminate => {
                 self.world.vms[v].transition(VmState::Terminated);
                 self.world.vms[v].stopped_at = Some(now);
+                self.world.vms[v].displaced_at = None;
+                self.recorder.work_lost_mi += self.vm_inflight_done_mi(v);
                 self.cancel_cloudlets(v);
                 self.broker.finished.push(v);
                 self.recorder.spot_terminations += 1;
@@ -625,6 +657,8 @@ impl Engine {
         }
         self.world.vms[v].transition(VmState::Terminated);
         self.world.vms[v].stopped_at = Some(now);
+        self.world.vms[v].displaced_at = None;
+        self.recorder.work_lost_mi += self.vm_inflight_done_mi(v);
         self.cancel_cloudlets(v);
         self.broker.remove_resubmitting(v);
         self.broker.finished.push(v);
@@ -659,9 +693,26 @@ impl Engine {
         let now = self.sim.clock();
         self.world.vms[v].transition(VmState::Failed);
         self.world.vms[v].stopped_at = Some(now);
+        self.world.vms[v].displaced_at = None;
+        self.recorder.work_lost_mi += self.vm_inflight_done_mi(v);
         self.cancel_cloudlets(v);
         self.broker.finished.push(v);
         self.recorder.log(now, v, kind);
+    }
+
+    /// Executed-but-unfinished work (MI) across `v`'s not-yet-done
+    /// cloudlets: the progress a terminal state discards (work lost) or a
+    /// re-placement preserves (work recovered).
+    fn vm_inflight_done_mi(&self, v: VmId) -> f64 {
+        self.world.vms[v]
+            .cloudlets
+            .iter()
+            .filter(|&&c| !self.world.cloudlets[c].is_done())
+            .map(|&c| {
+                let cl = &self.world.cloudlets[c];
+                (cl.length_mi - cl.remaining_mi).max(0.0)
+            })
+            .sum()
     }
 
     /// Destruction-delay check: destroy the VM if it is still idle.
@@ -733,6 +784,12 @@ impl Engine {
     /// backstop retry event picks them up.
     fn retry_pending(&mut self) {
         let now = self.sim.clock();
+        // Broker outage window: retries defer until the scheduled
+        // ChaosRetryDrain fires just past the window. Chaos-free runs have
+        // an empty window list and never hit this.
+        if self.chaos_outages.iter().any(|&(start, end)| now >= start && now < end) {
+            return;
+        }
         let cooldown = self.config.resubmit_cooldown;
         let mut order = std::mem::take(&mut self.retry_scratch);
         {
@@ -960,6 +1017,7 @@ impl Engine {
                     InterruptionBehavior::Hibernate => {
                         self.world.vms[v].transition(VmState::Hibernated);
                         self.world.vms[v].hibernated_at = Some(now);
+                        self.world.vms[v].displaced_at = Some(now);
                         self.pause_cloudlets(v);
                         self.broker.enqueue_resubmitting(v);
                         self.recorder.hibernations += 1;
@@ -974,6 +1032,8 @@ impl Engine {
                     InterruptionBehavior::Terminate => {
                         self.world.vms[v].transition(VmState::Terminated);
                         self.world.vms[v].stopped_at = Some(now);
+                        self.world.vms[v].displaced_at = None;
+                        self.recorder.work_lost_mi += self.vm_inflight_done_mi(v);
                         self.cancel_cloudlets(v);
                         self.broker.finished.push(v);
                         self.recorder.spot_terminations += 1;
@@ -983,6 +1043,7 @@ impl Engine {
             } else {
                 // On-demand: requeue and wait for capacity elsewhere.
                 self.world.vms[v].transition(VmState::Waiting);
+                self.world.vms[v].displaced_at = Some(now);
                 self.pause_cloudlets(v);
                 let deadline = now + self.world.vms[v].waiting_time.max(OD_REQUEUE_WINDOW);
                 self.broker.enqueue_waiting(v, deadline);
@@ -996,6 +1057,55 @@ impl Engine {
         }
         self.world.deactivate_host(h, Some(now));
         self.retry_pending();
+    }
+
+    // ------------------------------------------------------------------
+    // chaos faults (schedules compiled by crate::chaos)
+    // ------------------------------------------------------------------
+
+    /// Chaos host crash: evict like a removal, but flag the host so the
+    /// paired recovery event knows it owns the reactivation.
+    fn on_chaos_host_crash(&mut self, h: HostId) {
+        if !self.world.hosts[h].is_active() {
+            return; // dormant or already down: nothing to crash
+        }
+        if self.chaos_crashed.len() < self.world.hosts.len() {
+            self.chaos_crashed.resize(self.world.hosts.len(), false);
+        }
+        self.chaos_crashed[h] = true;
+        self.recorder.host_failures += 1;
+        self.on_host_remove(h);
+    }
+
+    /// Chaos repair completed. Only reactivates hosts the chaos stream
+    /// took down - never a dormant trace machine awaiting its ADD event
+    /// or a host the trace removed for good.
+    fn on_chaos_host_recover(&mut self, h: HostId) {
+        if self.chaos_crashed.get(h) == Some(&true) {
+            self.chaos_crashed[h] = false;
+            self.on_host_add(h);
+        }
+    }
+
+    /// AZ-wide reclaim storm: warn a fraction of all currently
+    /// interruptible spot VMs at one timestamp (ascending VM id, so the
+    /// victim set is deterministic).
+    fn on_chaos_storm(&mut self, k: usize) {
+        let now = self.sim.clock();
+        let frac = self.chaos_storms[k];
+        self.recorder.storms += 1;
+        let eligible: Vec<VmId> = (0..self.world.vms.len())
+            .filter(|&v| self.world.vms[v].interruptible(now))
+            .collect();
+        if eligible.is_empty() {
+            return;
+        }
+        let take = ((eligible.len() as f64 * frac).ceil() as usize).min(eligible.len());
+        for &v in eligible.iter().take(take) {
+            if self.warn_spot(v).is_some() {
+                self.recorder.storm_reclaims += 1;
+            }
+        }
     }
 
     // ------------------------------------------------------------------
@@ -1016,6 +1126,8 @@ impl Engine {
             s.total_pes as f64,
             if s.total_ram > 0.0 { s.used_ram / s.total_ram } else { 0.0 },
             if s.total_pes > 0 { s.used_pes as f64 / s.total_pes as f64 } else { 0.0 },
+            s.failed_hosts as f64,
+            s.displaced as f64,
         ];
         self.recorder.series.push(now, &row);
         self.next_sample = now + self.config.sample_interval;

@@ -30,6 +30,32 @@ pub struct SpotStats {
     pub min_interruption_secs: f64,
 }
 
+/// Resilience statistics under injected chaos (crate::chaos): correlated
+/// reclaim storms, host crash/recovery, and displacement recovery. All
+/// zero for chaos-free runs except the interruption-duration percentile
+/// and the work/recovery columns, which also cover organic interruptions.
+#[derive(Debug, Clone, Default)]
+pub struct ResilienceStats {
+    /// Reclaim storms fired and the warnings they issued.
+    pub storms: u64,
+    pub storm_reclaims: u64,
+    /// Chaos host crashes injected.
+    pub host_failures: u64,
+    /// Displaced VMs that made it back onto a host.
+    pub recoveries: u64,
+    /// `storm_reclaims / storms` (0 with no storms).
+    pub interruptions_per_storm: f64,
+    /// 95th-percentile interruption duration over history gaps (seconds).
+    pub p95_interruption_secs: f64,
+    /// Displacement-to-running latency (time-to-recover), avg and max.
+    pub avg_recovery_secs: f64,
+    pub max_recovery_secs: f64,
+    /// Partially-executed work discarded by terminal states vs carried
+    /// across a displacement back onto a host (MI).
+    pub work_lost_mi: f64,
+    pub work_recovered_mi: f64,
+}
+
 /// Summary of one engine run.
 #[derive(Debug, Clone)]
 pub struct Report {
@@ -47,6 +73,7 @@ pub struct Report {
     pub alloc_attempts: u64,
     pub alloc_failures: u64,
     pub spot: SpotStats,
+    pub resilience: ResilienceStats,
 }
 
 /// Build the report from a finished engine.
@@ -59,6 +86,7 @@ pub fn build(engine: &Engine, wall: std::time::Duration) -> Report {
 
     let mut spot = SpotStats::default();
     let mut gap_stats = Summary::new();
+    let mut gaps: Vec<f64> = Vec::new();
 
     for vm in &w.vms {
         match vm.state {
@@ -84,6 +112,7 @@ pub fn build(engine: &Engine, wall: std::time::Duration) -> Report {
             }
             for gap in vm.history.interruption_durations() {
                 gap_stats.add(gap);
+                gaps.push(gap);
             }
         }
     }
@@ -92,6 +121,35 @@ pub fn build(engine: &Engine, wall: std::time::Duration) -> Report {
     spot.avg_interruption_secs = if gap_stats.is_empty() { 0.0 } else { gap_stats.mean() };
     spot.max_interruption_secs = if gap_stats.is_empty() { 0.0 } else { gap_stats.max() };
     spot.min_interruption_secs = if gap_stats.is_empty() { 0.0 } else { gap_stats.min() };
+
+    let r = &engine.recorder;
+    let mut resilience = ResilienceStats {
+        storms: r.storms,
+        storm_reclaims: r.storm_reclaims,
+        host_failures: r.host_failures,
+        recoveries: r.recoveries,
+        interruptions_per_storm: if r.storms > 0 {
+            r.storm_reclaims as f64 / r.storms as f64
+        } else {
+            0.0
+        },
+        p95_interruption_secs: 0.0,
+        avg_recovery_secs: if r.recoveries > 0 {
+            r.recovery_secs_sum / r.recoveries as f64
+        } else {
+            0.0
+        },
+        max_recovery_secs: r.recovery_secs_max,
+        work_lost_mi: r.work_lost_mi,
+        work_recovered_mi: r.work_recovered_mi,
+    };
+    if !gaps.is_empty() {
+        gaps.sort_by(|a, b| a.partial_cmp(b).expect("non-finite interruption gap"));
+        let idx = ((0.95 * gaps.len() as f64).ceil() as usize)
+            .saturating_sub(1)
+            .min(gaps.len() - 1);
+        resilience.p95_interruption_secs = gaps[idx];
+    }
 
     let mut cl_fin = 0;
     let mut cl_can = 0;
@@ -117,6 +175,7 @@ pub fn build(engine: &Engine, wall: std::time::Duration) -> Report {
         alloc_attempts: engine.recorder.alloc_attempts,
         alloc_failures: engine.recorder.alloc_failures,
         spot,
+        resilience,
     }
 }
 
@@ -124,6 +183,7 @@ impl Report {
     /// One-paragraph text rendering (examples print this).
     pub fn render(&self) -> String {
         let s = &self.spot;
+        let r = &self.resilience;
         format!(
             "policy={} clock_end={:.1}s events={} wall={:?}\n\
              vms: finished={} terminated={} failed={} active={}\n\
@@ -132,7 +192,11 @@ impl Report {
              spot: total={} interruptions={} interrupted_vms={} \
              uninterrupted_completions={} redeployed={} completed_after_interruption={} \
              terminated={} max_per_vm={}\n\
-             interruption_secs: avg={:.2} max={:.2} min={:.2}",
+             interruption_secs: avg={:.2} max={:.2} min={:.2}\n\
+             resilience: storms={} storm_reclaims={} per_storm={:.2} \
+             p95_interruption_s={:.2} host_failures={} recoveries={} \
+             avg_recovery_s={:.2} max_recovery_s={:.2} \
+             work_lost_mi={:.0} work_recovered_mi={:.0}",
             self.policy,
             self.clock_end,
             self.events_processed,
@@ -156,6 +220,16 @@ impl Report {
             s.avg_interruption_secs,
             s.max_interruption_secs,
             s.min_interruption_secs,
+            r.storms,
+            r.storm_reclaims,
+            r.interruptions_per_storm,
+            r.p95_interruption_secs,
+            r.host_failures,
+            r.recoveries,
+            r.avg_recovery_secs,
+            r.max_recovery_secs,
+            r.work_lost_mi,
+            r.work_recovered_mi,
         )
     }
 
@@ -192,6 +266,19 @@ impl Report {
         sp.set("max_interruption_secs", Json::Num(s.max_interruption_secs));
         sp.set("min_interruption_secs", Json::Num(s.min_interruption_secs));
         o.set("spot", Json::Obj(sp));
+        let r = &self.resilience;
+        let mut rs = JsonObj::new();
+        rs.set("storms", Json::Num(r.storms as f64));
+        rs.set("storm_reclaims", Json::Num(r.storm_reclaims as f64));
+        rs.set("host_failures", Json::Num(r.host_failures as f64));
+        rs.set("recoveries", Json::Num(r.recoveries as f64));
+        rs.set("interruptions_per_storm", Json::Num(r.interruptions_per_storm));
+        rs.set("p95_interruption_secs", Json::Num(r.p95_interruption_secs));
+        rs.set("avg_recovery_secs", Json::Num(r.avg_recovery_secs));
+        rs.set("max_recovery_secs", Json::Num(r.max_recovery_secs));
+        rs.set("work_lost_mi", Json::Num(r.work_lost_mi));
+        rs.set("work_recovered_mi", Json::Num(r.work_recovered_mi));
+        o.set("resilience", Json::Obj(rs));
         Json::Obj(o)
     }
 }

@@ -30,6 +30,15 @@ pub enum Tag {
     HostAdd(HostId),
     /// Trace machine event: host removed (evicts its VMs).
     HostRemove(HostId),
+    /// Chaos host fault: crash (evicts like a removal, but tracked so the
+    /// paired recovery can reactivate exactly the crashed host).
+    ChaosHostCrash(HostId),
+    /// Chaos host fault: repair completed, host comes back.
+    ChaosHostRecover(HostId),
+    /// Chaos reclaim storm `k` (index into the engine's storm table).
+    ChaosStorm(usize),
+    /// Drain retries deferred by a broker outage window.
+    ChaosRetryDrain,
     /// Hard stop marker.
     End,
 }

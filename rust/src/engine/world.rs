@@ -40,6 +40,12 @@ pub struct StateSample {
     pub total_pes: u32,
     pub used_ram: f64,
     pub total_ram: f64,
+    /// Hosts currently down after having been active (trace removals and
+    /// chaos crashes); dormant not-yet-added trace machines don't count.
+    pub failed_hosts: usize,
+    /// VMs currently displaced from a host (hibernated or requeued after
+    /// an eviction) and not yet re-placed.
+    pub displaced: usize,
 }
 
 /// Arena of datacenters, hosts, VMs and cloudlets.
@@ -384,6 +390,9 @@ impl World {
         let mut s = StateSample::default();
         for vm in &self.vms {
             let spot = vm.is_spot();
+            if vm.displaced_at.is_some() {
+                s.displaced += 1;
+            }
             match vm.state {
                 VmState::Running => {
                     if spot {
@@ -416,11 +425,15 @@ impl World {
                 _ => {}
             }
         }
-        for h in self.active_hosts() {
-            s.used_pes += h.used_pes;
-            s.total_pes += h.spec.pes;
-            s.used_ram += h.used_ram;
-            s.total_ram += h.spec.ram;
+        for h in &self.hosts {
+            if h.is_active() {
+                s.used_pes += h.used_pes;
+                s.total_pes += h.spec.pes;
+                s.used_ram += h.used_ram;
+                s.total_ram += h.spec.ram;
+            } else if h.removed_at.is_some() {
+                s.failed_hosts += 1;
+            }
         }
         s
     }
@@ -581,9 +594,14 @@ mod tests {
         w.vms[hib].transition(VmState::Running);
         w.vms[hib].transition(VmState::InterruptWarned);
         w.vms[hib].transition(VmState::Hibernated);
+        w.vms[hib].displaced_at = Some(1.0);
         w.deactivate_host(2, Some(1.0));
 
         let s = w.state_sample();
+        // Resilience gauges: host 2 is down-after-active, `hib` is
+        // displaced and not yet re-placed.
+        assert_eq!(s.failed_hosts, 1);
+        assert_eq!(s.displaced, 1);
         let (od_run, spot_run) = w.count_by_state(VmState::Running);
         let (od_warn, spot_warn) = w.count_by_state(VmState::InterruptWarned);
         let (_, spot_hib) = w.count_by_state(VmState::Hibernated);

@@ -28,6 +28,7 @@
 pub mod allocation;
 pub mod analysis;
 pub mod benchkit;
+pub mod chaos;
 pub mod cloudlet;
 pub mod config;
 pub mod core;

@@ -16,7 +16,9 @@
 //! (`--threads`), one cell per (seed, scenario variant): `--seeds N` runs
 //! seeds `--seed .. --seed+N-1` under every `--policies` entry, multiplied
 //! by any `--axis <name>=<v1,v2,...>` dimensions (spot.warning,
-//! spot.hibernation-timeout, spot.behavior, hlem.alpha, victim, substrate)
+//! spot.hibernation-timeout, spot.behavior, hlem.alpha, victim, substrate,
+//! and the `chaos.*` fault families: chaos.host-mtbf, chaos.reclaim-storm,
+//! chaos.broker-outage, chaos.demand-surge)
 //! and the `--substrate` list (comparison | trace). Artifacts go to
 //! `--out-dir`: `sweep_cells.csv`, `sweep_aggregate.json`, and - for cells
 //! matching `--retain-series` - per-cell `sweep_series_cell*.csv` time
@@ -38,13 +40,29 @@ use cloudmarket::config::scenario::ComparisonConfig;
 use cloudmarket::experiments::{advisor, compare, trace_analysis, trace_sim};
 use cloudmarket::util::cli::{render_help, Args, Spec};
 
+/// Prefix `cmd_sweep_worker` puts on shard-file read/validation errors so
+/// `main` can map them to the permanent-failure exit code without the
+/// command functions calling `process::exit` (untestable in-process).
+const BAD_SHARD_PREFIX: &str = "bad shard: ";
+
+/// Exit-code taxonomy for a failed invocation (see
+/// `sweep::shard::EXIT_*`): a rejected shard job file is permanent (the
+/// coordinator must not reassign it); everything else is a runtime error.
+fn exit_code_for(err: &str) -> i32 {
+    if err.starts_with(BAD_SHARD_PREFIX) {
+        cloudmarket::sweep::EXIT_BAD_SHARD
+    } else {
+        cloudmarket::sweep::EXIT_RUNTIME
+    }
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let code = match run(&argv) {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("error: {e}");
-            2
+            exit_code_for(&e)
         }
     };
     std::process::exit(code);
@@ -60,7 +78,7 @@ fn specs() -> Vec<Spec> {
         Spec { name: "shard", takes_value: true, help: "sweep worker: shard job file to run" },
         Spec { name: "out", takes_value: true, help: "sweep worker: partial artifact output path" },
         Spec { name: "policies", takes_value: true, help: "sweep: comma-separated policy list" },
-        Spec { name: "axis", takes_value: true, help: "sweep: scenario axis <name>=<v1,v2,...>, repeatable (spot.warning | spot.hibernation-timeout | spot.behavior | hlem.alpha | victim | substrate)" },
+        Spec { name: "axis", takes_value: true, help: "sweep: scenario axis <name>=<v1,v2,...>, repeatable (spot.warning | spot.hibernation-timeout | spot.behavior | hlem.alpha | victim | substrate | chaos.host-mtbf | chaos.reclaim-storm | chaos.broker-outage | chaos.demand-surge)" },
         Spec { name: "substrate", takes_value: true, help: "sweep: workload substrate list: comparison | trace (default comparison)" },
         Spec { name: "retain-series", takes_value: true, help: "sweep: keep per-cell time series: all | none | policy=<p>,seed=<s>,id=<n>,substrate=<s> (OR; default none)" },
         Spec { name: "alpha", takes_value: true, help: "spot-load factor for adjusted HLEM (default -0.5)" },
@@ -426,7 +444,12 @@ fn cmd_sweep_worker(args: &Args) -> Result<(), String> {
     let out_path =
         PathBuf::from(args.get("out").ok_or("sweep worker requires --out <file>")?);
     let threads = args.get_positive_usize("threads", 1)?;
-    let (spec, job) = shard::read_shard_file(&shard_path)?;
+    // A shard file that fails to read/validate is a *permanent* problem -
+    // corrupt bytes or a foreign spec digest stay wrong on every retry -
+    // so tag the error for `main` to map onto EXIT_BAD_SHARD instead of
+    // the generic runtime failure the coordinator would reassign.
+    let (spec, job) = shard::read_shard_file(&shard_path)
+        .map_err(|e| format!("{BAD_SHARD_PREFIX}{e}"))?;
     let cells = spec.cells();
     let selected: Vec<sweep::Cell> = job.cell_ids.iter().map(|&id| cells[id]).collect();
 
@@ -473,7 +496,7 @@ fn cmd_sweep_worker(args: &Args) -> Result<(), String> {
         if let Some(probe) = &parent_probe {
             if !probe.exists() {
                 eprintln!("sweep worker: coordinator is gone; exiting mid-shard");
-                std::process::exit(3);
+                std::process::exit(cloudmarket::sweep::EXIT_PARENT_GONE);
             }
         }
     };
@@ -640,6 +663,8 @@ mod tests {
         assert!(err.contains("unknown axis"), "{err}");
         let err = run(&argv(&["sweep", "--axis", "spot.warning=-5"])).unwrap_err();
         assert!(err.contains("negative"), "{err}");
+        let err = run(&argv(&["sweep", "--axis", "chaos.reclaim-storm=at100"])).unwrap_err();
+        assert!(err.contains("chaos.reclaim-storm"), "{err}");
         let err = run(&argv(&["sweep", "--substrate", "cloud"])).unwrap_err();
         assert!(err.contains("unknown substrate"), "{err}");
         let err = run(&argv(&[
@@ -704,6 +729,11 @@ mod tests {
         ]))
         .unwrap_err();
         assert!(err.contains("reading shard file"), "{err}");
+        assert_eq!(
+            exit_code_for(&err),
+            cloudmarket::sweep::EXIT_BAD_SHARD,
+            "unreadable shard files map to the permanent exit code"
+        );
 
         // Corrupt shard file.
         let corrupt = dir.join("corrupt.json");
@@ -718,12 +748,16 @@ mod tests {
         ]))
         .unwrap_err();
         assert!(err.contains("shard file"), "{err}");
+        assert_eq!(exit_code_for(&err), cloudmarket::sweep::EXIT_BAD_SHARD);
         assert!(!out.exists(), "no partial may be written on a bad shard file");
+
+        // Ordinary errors stay on the generic runtime exit code.
+        assert_eq!(exit_code_for("anything else"), cloudmarket::sweep::EXIT_RUNTIME);
         let _ = std::fs::remove_dir_all(&dir);
     }
 
     fn fake_cell_result(cell: cloudmarket::sweep::Cell) -> cloudmarket::sweep::CellResult {
-        use cloudmarket::engine::{Report, SpotStats};
+        use cloudmarket::engine::{Report, ResilienceStats, SpotStats};
         cloudmarket::sweep::CellResult {
             cell,
             outcome: Ok(Report {
@@ -740,6 +774,7 @@ mod tests {
                 alloc_attempts: 0,
                 alloc_failures: 0,
                 spot: SpotStats::default(),
+                resilience: ResilienceStats::default(),
             }),
             series: None,
         }

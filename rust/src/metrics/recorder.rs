@@ -66,12 +66,26 @@ pub struct Recorder {
     /// Allocation attempts / failures (engine health).
     pub alloc_attempts: u64,
     pub alloc_failures: u64,
+    /// Chaos reclaim storms fired and the warnings they issued.
+    pub storms: u64,
+    pub storm_reclaims: u64,
+    /// Chaos host crashes injected.
+    pub host_failures: u64,
+    /// Displaced VMs that made it back onto a host, with their
+    /// displacement-to-running latency (time-to-recover).
+    pub recoveries: u64,
+    pub recovery_secs_sum: f64,
+    pub recovery_secs_max: f64,
+    /// Work (MI) of partially-executed cloudlets discarded by terminal
+    /// states vs carried across a displacement back to a host.
+    pub work_lost_mi: f64,
+    pub work_recovered_mi: f64,
 }
 
 /// Column schema of the sampled state series - static, so a recorder's
 /// schema is interned once and shared (via `Arc`) by every series taken
 /// from it.
-pub const SERIES_COLUMNS: [&str; 8] = [
+pub const SERIES_COLUMNS: [&str; 10] = [
     "od_running",
     "spot_running",
     "hibernated",
@@ -80,6 +94,8 @@ pub const SERIES_COLUMNS: [&str; 8] = [
     "total_pes",
     "ram_used_frac",
     "cpu_used_frac",
+    "failed_hosts",
+    "displaced",
 ];
 
 impl Recorder {
@@ -95,6 +111,14 @@ impl Recorder {
             redeployments: 0,
             alloc_attempts: 0,
             alloc_failures: 0,
+            storms: 0,
+            storm_reclaims: 0,
+            host_failures: 0,
+            recoveries: 0,
+            recovery_secs_sum: 0.0,
+            recovery_secs_max: 0.0,
+            work_lost_mi: 0.0,
+            work_recovered_mi: 0.0,
         }
     }
 
@@ -118,6 +142,14 @@ impl Recorder {
             redeployments,
             alloc_attempts,
             alloc_failures,
+            storms,
+            storm_reclaims,
+            host_failures,
+            recoveries,
+            recovery_secs_sum,
+            recovery_secs_max,
+            work_lost_mi,
+            work_recovered_mi,
         } = self;
         series.clear();
         events.clear();
@@ -129,6 +161,14 @@ impl Recorder {
         *redeployments = 0;
         *alloc_attempts = 0;
         *alloc_failures = 0;
+        *storms = 0;
+        *storm_reclaims = 0;
+        *host_failures = 0;
+        *recoveries = 0;
+        *recovery_secs_sum = 0.0;
+        *recovery_secs_max = 0.0;
+        *work_lost_mi = 0.0;
+        *work_recovered_mi = 0.0;
     }
 
     pub fn log(&mut self, time: f64, vm: VmId, kind: LifecycleKind) {
@@ -198,12 +238,28 @@ mod tests {
         r.log(0.5, 1, LifecycleKind::Allocated); // over cap -> dropped
         r.interruptions = 7;
         r.alloc_attempts = 9;
+        r.storms = 3;
+        r.storm_reclaims = 12;
+        r.host_failures = 2;
+        r.recoveries = 4;
+        r.recovery_secs_sum = 55.0;
+        r.recovery_secs_max = 30.0;
+        r.work_lost_mi = 1_000.0;
+        r.work_recovered_mi = 2_000.0;
         r.reset(5);
         assert!(r.series.is_empty());
         assert!(r.events.is_empty());
         assert_eq!(r.dropped_events(), 0);
         assert_eq!(r.interruptions, 0);
         assert_eq!(r.alloc_attempts, 0);
+        assert_eq!(r.storms, 0);
+        assert_eq!(r.storm_reclaims, 0);
+        assert_eq!(r.host_failures, 0);
+        assert_eq!(r.recoveries, 0);
+        assert_eq!(r.recovery_secs_sum, 0.0);
+        assert_eq!(r.recovery_secs_max, 0.0);
+        assert_eq!(r.work_lost_mi, 0.0);
+        assert_eq!(r.work_recovered_mi, 0.0);
         assert_eq!(r.series.columns().len(), width);
         for i in 0..5 {
             r.log(i as f64, 0, LifecycleKind::Submitted);

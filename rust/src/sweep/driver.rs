@@ -45,13 +45,15 @@
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::chaos::ChaosSchedule;
 use crate::engine::{Engine, EngineScratch};
 use crate::trace::workload::{self, trace_engine_config};
 
 use super::grid::{Cell, Substrate, SweepSpec};
-use super::prebuild::{panic_message, Prebuilt, PrebuildSlots};
+use super::prebuild::{panic_message, ChaosSlots, Prebuilt, PrebuildSlots};
 use super::report::{CellResult, SweepReport};
 
 /// Worker threads to use when the caller does not care: one per available
@@ -148,6 +150,10 @@ fn run_cells_instrumented(
     // affected cell's error row instead of aborting the sweep - the same
     // isolation contract the workers give running cells.
     let slots = PrebuildSlots::for_cells(cells);
+    // Compiled chaos schedules share the same lazy-slot pattern, keyed
+    // per (substrate, seed, chaos spec) triple; chaos-free grids size an
+    // empty table and pay nothing.
+    let chaos_slots = ChaosSlots::for_cells(cells);
 
     let threads = threads.max(1).min(total.max(1));
     let next = AtomicUsize::new(0);
@@ -161,6 +167,7 @@ fn run_cells_instrumented(
 
     std::thread::scope(|scope| {
         let slots = &slots;
+        let chaos_slots = &chaos_slots;
         let next = &next;
         let done = &done;
         let prebuild_ns = &prebuild_ns;
@@ -182,9 +189,12 @@ fn run_cells_instrumented(
                         });
                         let result = match prebuilt {
                             Ok(prebuilt) => {
+                                let chaos = chaos_slots
+                                    .get(spec, i, &cells[i], prebuilt)
+                                    .map(Arc::as_ref);
                                 let t0 = Instant::now();
                                 let (result, returned) =
-                                    run_cell(spec, &cells[i], prebuilt, scratch);
+                                    run_cell(spec, &cells[i], prebuilt, chaos, scratch);
                                 scratch = returned;
                                 cell_ns.fetch_add(
                                     t0.elapsed().as_nanos() as u64,
@@ -246,6 +256,7 @@ fn run_cell(
     spec: &SweepSpec,
     cell: &Cell,
     prebuilt: &Prebuilt,
+    chaos: Option<&ChaosSchedule>,
     scratch: EngineScratch,
 ) -> (CellResult, EngineScratch) {
     let retain = spec.retain.matches(cell);
@@ -274,6 +285,11 @@ fn run_cell(
                 "prebuilt kind does not match cell substrate {substrate:?} (driver bug)"
             ),
         };
+        // Inject after the workload is fully submitted: the schedule is
+        // pure data, so this only enqueues events (plus surge VMs).
+        if let Some(sched) = chaos {
+            crate::chaos::apply(&mut engine, sched);
+        }
         let report = engine.run();
         let series = if retain { Some(engine.recorder.take_series()) } else { None };
         (report, series, engine.into_scratch())
@@ -405,6 +421,36 @@ mod tests {
             assert_eq!(got.clock_end.to_bits(), want.clock_end.to_bits());
             assert_eq!(got.events_processed, want.events_processed);
         }
+    }
+
+    /// A chaos axis threads through the driver end to end: the reclaim
+    /// storm fires, resilience metrics land in the cell reports, and a
+    /// frac=1 storm interrupts at least as much as a frac-0.25 one.
+    #[test]
+    fn chaos_axis_cells_run_with_resilience_metrics() {
+        use crate::chaos::ReclaimStorm;
+        let scenario = ComparisonConfig { terminate_at: 300.0, ..Default::default() };
+        let spec = SweepSpec::new(scenario)
+            .with_seeds(vec![20_250_710])
+            .with_policies(vec![PolicySpec::FirstFit])
+            .with_axis(ScenarioAxis::ChaosReclaimStorm(vec![
+                ReclaimStorm::parse("at150-frac0.25").unwrap(),
+                ReclaimStorm::parse("at150-frac1").unwrap(),
+            ]));
+        let report = run(&spec, 2);
+        assert_eq!(report.total(), 2);
+        assert_eq!(report.failed(), 0, "chaos cell failed: {:?}", report.cells);
+        let quarter = report.cells[0].report().unwrap();
+        let full = report.cells[1].report().unwrap();
+        for r in [quarter, full] {
+            assert_eq!(r.resilience.storms, 1, "{r:?}");
+            assert!(r.resilience.storm_reclaims > 0, "{r:?}");
+            assert_eq!(
+                r.resilience.interruptions_per_storm,
+                r.resilience.storm_reclaims as f64
+            );
+        }
+        assert!(full.resilience.storm_reclaims >= quarter.resilience.storm_reclaims);
     }
 
     /// The timing breakdown reports lazily-built prebuilds and a sane

@@ -28,6 +28,7 @@
 use crate::allocation::{
     AllocationPolicy, BestFit, FirstFit, HlemConfig, HlemVmp, RoundRobin, WorstFit,
 };
+use crate::chaos::{BrokerOutage, ChaosSpec, DemandSurge, HostMtbf, ReclaimStorm};
 use crate::config::scenario::{comparison_engine_config, ComparisonConfig};
 use crate::engine::{EngineConfig, VictimPolicy};
 use crate::trace::synth::SynthConfig;
@@ -242,6 +243,9 @@ pub struct CellSpec {
     /// Victim-selection override; `None` keeps the policy default
     /// (list-order, the paper's behavior).
     pub victim: Option<VictimPolicy>,
+    /// Chaos-injection faults compiled per cell (`crate::chaos`); `NONE`
+    /// keeps the run fault-free.
+    pub chaos: ChaosSpec,
 }
 
 impl CellSpec {
@@ -252,6 +256,7 @@ impl CellSpec {
             policy,
             spot: SpotOverride::NONE,
             victim: None,
+            chaos: ChaosSpec::NONE,
         }
     }
 
@@ -278,6 +283,18 @@ impl CellSpec {
         }
         if let Some(v) = self.victim {
             parts.push(format!("victim={}", v.name()));
+        }
+        if let Some(m) = self.chaos.host_mtbf {
+            parts.push(format!("mtbf={}", m.label()));
+        }
+        if let Some(s) = self.chaos.reclaim_storm {
+            parts.push(format!("storm={}", s.label()));
+        }
+        if let Some(o) = self.chaos.broker_outage {
+            parts.push(format!("outage={}", o.label()));
+        }
+        if let Some(s) = self.chaos.demand_surge {
+            parts.push(format!("surge={}", s.label()));
         }
         if parts.is_empty() {
             "-".to_string()
@@ -308,12 +325,27 @@ pub enum ScenarioAxis {
     Victim(Vec<VictimPolicy>),
     /// Workload substrate (`substrate`).
     Substrate(Vec<Substrate>),
+    /// Per-host crash/recovery fault processes (`chaos.host-mtbf`), values
+    /// in the `mtbf<secs>-mttr<secs>` grammar of [`HostMtbf::parse`].
+    ChaosHostMtbf(Vec<HostMtbf>),
+    /// Correlated spot reclaim storms (`chaos.reclaim-storm`), values in
+    /// the `at<secs>-frac<f>[-x<n>-every<secs>]` grammar of
+    /// [`ReclaimStorm::parse`].
+    ChaosReclaimStorm(Vec<ReclaimStorm>),
+    /// Broker retry-outage windows (`chaos.broker-outage`), values in the
+    /// `at<secs>-for<secs>` grammar of [`BrokerOutage::parse`].
+    ChaosBrokerOutage(Vec<BrokerOutage>),
+    /// On-demand demand surges (`chaos.demand-surge`), values in the
+    /// `at<secs>-vms<n>-pes<n>-for<secs>` grammar of
+    /// [`DemandSurge::parse`].
+    ChaosDemandSurge(Vec<DemandSurge>),
 }
 
 impl ScenarioAxis {
     /// Parse one `--axis` argument: `<name>=<v1,v2,...>` with names
     /// `spot.warning`, `spot.hibernation-timeout`, `spot.behavior`,
-    /// `hlem.alpha`, `victim`, `substrate`.
+    /// `hlem.alpha`, `victim`, `substrate`, `chaos.host-mtbf`,
+    /// `chaos.reclaim-storm`, `chaos.broker-outage`, `chaos.demand-surge`.
     pub fn parse(s: &str) -> Result<ScenarioAxis, String> {
         let (name, vals) = s
             .split_once('=')
@@ -329,9 +361,22 @@ impl ScenarioAxis {
             "hlem.alpha" => Ok(ScenarioAxis::HlemAlpha(parse_f64_list(vals, "hlem.alpha")?)),
             "victim" => Ok(ScenarioAxis::Victim(parse_each(vals, VictimPolicy::parse)?)),
             "substrate" => Ok(ScenarioAxis::Substrate(Substrate::parse_list(vals)?)),
+            "chaos.host-mtbf" => {
+                Ok(ScenarioAxis::ChaosHostMtbf(parse_each(vals, HostMtbf::parse)?))
+            }
+            "chaos.reclaim-storm" => {
+                Ok(ScenarioAxis::ChaosReclaimStorm(parse_each(vals, ReclaimStorm::parse)?))
+            }
+            "chaos.broker-outage" => {
+                Ok(ScenarioAxis::ChaosBrokerOutage(parse_each(vals, BrokerOutage::parse)?))
+            }
+            "chaos.demand-surge" => {
+                Ok(ScenarioAxis::ChaosDemandSurge(parse_each(vals, DemandSurge::parse)?))
+            }
             other => Err(format!(
                 "unknown axis '{other}' (expected spot.warning | spot.hibernation-timeout | \
-                 spot.behavior | hlem.alpha | victim | substrate)"
+                 spot.behavior | hlem.alpha | victim | substrate | chaos.host-mtbf | \
+                 chaos.reclaim-storm | chaos.broker-outage | chaos.demand-surge)"
             )),
         }
     }
@@ -345,6 +390,10 @@ impl ScenarioAxis {
             ScenarioAxis::HlemAlpha(_) => "hlem.alpha",
             ScenarioAxis::Victim(_) => "victim",
             ScenarioAxis::Substrate(_) => "substrate",
+            ScenarioAxis::ChaosHostMtbf(_) => "chaos.host-mtbf",
+            ScenarioAxis::ChaosReclaimStorm(_) => "chaos.reclaim-storm",
+            ScenarioAxis::ChaosBrokerOutage(_) => "chaos.broker-outage",
+            ScenarioAxis::ChaosDemandSurge(_) => "chaos.demand-surge",
         }
     }
 
@@ -356,6 +405,10 @@ impl ScenarioAxis {
             ScenarioAxis::HlemAlpha(v) => v.len(),
             ScenarioAxis::Victim(v) => v.len(),
             ScenarioAxis::Substrate(v) => v.len(),
+            ScenarioAxis::ChaosHostMtbf(v) => v.len(),
+            ScenarioAxis::ChaosReclaimStorm(v) => v.len(),
+            ScenarioAxis::ChaosBrokerOutage(v) => v.len(),
+            ScenarioAxis::ChaosDemandSurge(v) => v.len(),
         }
     }
 
@@ -407,6 +460,34 @@ impl ScenarioAxis {
                 ScenarioAxis::Substrate(vals) => {
                     for &sub in vals {
                         out.push(CellSpec { substrate: sub, ..v });
+                    }
+                }
+                ScenarioAxis::ChaosHostMtbf(vals) => {
+                    for &m in vals {
+                        let mut s = v;
+                        s.chaos.host_mtbf = Some(m);
+                        out.push(s);
+                    }
+                }
+                ScenarioAxis::ChaosReclaimStorm(vals) => {
+                    for &x in vals {
+                        let mut s = v;
+                        s.chaos.reclaim_storm = Some(x);
+                        out.push(s);
+                    }
+                }
+                ScenarioAxis::ChaosBrokerOutage(vals) => {
+                    for &o in vals {
+                        let mut s = v;
+                        s.chaos.broker_outage = Some(o);
+                        out.push(s);
+                    }
+                }
+                ScenarioAxis::ChaosDemandSurge(vals) => {
+                    for &x in vals {
+                        let mut s = v;
+                        s.chaos.demand_surge = Some(x);
+                        out.push(s);
                     }
                 }
             }
@@ -920,6 +1001,28 @@ mod tests {
             ScenarioAxis::parse("substrate=comparison,trace").unwrap(),
             ScenarioAxis::Substrate(vec![Substrate::Comparison, Substrate::Trace])
         );
+        assert_eq!(
+            ScenarioAxis::parse("chaos.host-mtbf=mtbf20000-mttr600").unwrap(),
+            ScenarioAxis::ChaosHostMtbf(vec![HostMtbf::parse("mtbf20000-mttr600").unwrap()])
+        );
+        assert_eq!(
+            ScenarioAxis::parse("chaos.reclaim-storm=at1200-frac0.5,at600-frac0.25-x3-every900")
+                .unwrap(),
+            ScenarioAxis::ChaosReclaimStorm(vec![
+                ReclaimStorm::parse("at1200-frac0.5").unwrap(),
+                ReclaimStorm::parse("at600-frac0.25-x3-every900").unwrap(),
+            ])
+        );
+        assert_eq!(
+            ScenarioAxis::parse("chaos.broker-outage=at900-for300").unwrap(),
+            ScenarioAxis::ChaosBrokerOutage(vec![BrokerOutage::parse("at900-for300").unwrap()])
+        );
+        assert_eq!(
+            ScenarioAxis::parse("chaos.demand-surge=at600-vms40-pes4-for600").unwrap(),
+            ScenarioAxis::ChaosDemandSurge(vec![
+                DemandSurge::parse("at600-vms40-pes4-for600").unwrap()
+            ])
+        );
     }
 
     #[test]
@@ -941,6 +1044,41 @@ mod tests {
         assert!(ScenarioAxis::parse("victim=oldest").is_err(), "unknown victim");
         assert!(ScenarioAxis::parse("substrate=cloud").is_err(), "unknown substrate");
         assert!(ScenarioAxis::parse("frobnicate=1").is_err(), "unknown axis");
+        assert!(ScenarioAxis::parse("chaos.host-mtbf=mtbf0-mttr600").is_err(), "zero mtbf");
+        assert!(ScenarioAxis::parse("chaos.reclaim-storm=at600").is_err(), "missing frac");
+        assert!(
+            ScenarioAxis::parse("chaos.reclaim-storm=at600-frac1.5").is_err(),
+            "frac > 1"
+        );
+        assert!(ScenarioAxis::parse("chaos.broker-outage=at900-for0").is_err(), "zero dur");
+        assert!(
+            ScenarioAxis::parse("chaos.demand-surge=at600-vms0-pes4-for600").is_err(),
+            "zero vms"
+        );
+    }
+
+    /// Chaos axes expand variants like any other axis: variant-major,
+    /// value-minor, fields composing across families.
+    #[test]
+    fn chaos_axes_expand_and_compose() {
+        let storms = vec![
+            ReclaimStorm::parse("at600-frac0.25").unwrap(),
+            ReclaimStorm::parse("at600-frac1").unwrap(),
+        ];
+        let outage = BrokerOutage::parse("at900-for300").unwrap();
+        let spec = SweepSpec::new(ComparisonConfig::default())
+            .with_seeds(vec![1])
+            .with_policies(vec![PolicySpec::FirstFit])
+            .with_axis(ScenarioAxis::ChaosBrokerOutage(vec![outage]))
+            .with_axis(ScenarioAxis::ChaosReclaimStorm(storms.clone()));
+        let variants = spec.variants();
+        assert_eq!(variants.len(), 2);
+        for (v, storm) in variants.iter().zip(&storms) {
+            assert_eq!(v.chaos.broker_outage, Some(outage));
+            assert_eq!(v.chaos.reclaim_storm, Some(*storm));
+            assert!(!v.chaos.is_none());
+        }
+        assert_eq!(spec.cell_count(), 2);
     }
 
     #[test]
@@ -1016,8 +1154,13 @@ mod tests {
             policy: PolicySpec::FirstFit,
             spot: SpotOverride { warning_time: Some(60.0), ..SpotOverride::NONE },
             victim: Some(VictimPolicy::Youngest),
+            chaos: ChaosSpec::NONE,
         };
         assert_eq!(spec.variant_label(), "trace warn=60 victim=youngest");
+        // Chaos axis values label with their canonical parse grammar.
+        let mut chaotic = CellSpec::comparison(PolicySpec::FirstFit);
+        chaotic.chaos.reclaim_storm = Some(ReclaimStorm::parse("at1200-frac0.5").unwrap());
+        assert_eq!(chaotic.variant_label(), "storm=at1200-frac0.5");
         // Adjusted-HLEM rows always carry their alpha, so an hlem.alpha
         // axis stays readable in the aggregate table and progress lines.
         let adj = CellSpec::comparison(PolicySpec::Hlem { adjusted: true, alpha: -0.3 });

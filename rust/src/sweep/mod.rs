@@ -17,9 +17,11 @@
 //!   ([`PolicySpec`] values, built only inside the worker that runs the
 //!   cell) is multiplied by declared [`ScenarioAxis`] values into
 //!   [`CellSpec`] variants - spot warning/hibernation-timeout/behavior
-//!   grids, adjusted-HLEM alpha ranges, victim-policy ablations, and the
+//!   grids, adjusted-HLEM alpha ranges, victim-policy ablations, the
 //!   workload [`Substrate`] (§VII-E comparison template or §VII-D trace
-//!   simulation) - then crossed with seeds (seed-major) plus explicit
+//!   simulation), and the four `chaos.*` fault families of
+//!   [`crate::chaos`] (host MTBF/MTTR, reclaim storms, broker outages,
+//!   demand surges) - then crossed with seeds (seed-major) plus explicit
 //!   extra cells. A [`SeriesFilter`] says which cells keep their sampled
 //!   time series.
 //! - [`prebuild`]: shared read-only workload prebuilds keyed per
@@ -92,8 +94,9 @@ pub use grid::{
     Cell, CellSpec, PolicySpec, ScenarioAxis, SeriesFilter, SpotOverride, Substrate, SweepSpec,
     TraceSubstrate,
 };
-pub use prebuild::{build_prebuilt, Prebuilt, PrebuildCache, PrebuildSlots};
+pub use prebuild::{build_prebuilt, ChaosSlots, Prebuilt, PrebuildCache, PrebuildSlots};
 pub use report::{CellResult, SweepReport, VariantAggregate};
 pub use shard::{
     coordinate, merge_partials, partition, CoordinateOptions, CoordinateOutcome, Partial, Shard,
+    EXIT_BAD_SHARD, EXIT_PARENT_GONE, EXIT_RUNTIME,
 };

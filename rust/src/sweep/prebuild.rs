@@ -28,6 +28,7 @@ use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, OnceLock};
 
+use crate::chaos::{self, ChaosSchedule, ChaosSpec};
 use crate::config::scenario::{plan_comparison_workload, ComparisonConfig, WorkloadPlan};
 use crate::trace::synth::{SynthConfig, TraceGenerator};
 use crate::trace::Trace;
@@ -164,6 +165,95 @@ impl PrebuildSlots {
             on_build(t0.elapsed());
             built
         })
+    }
+}
+
+/// The (horizon, host count) a chaos schedule is compiled against:
+/// comparison cells end at `terminate_at` over the Table II fleet; trace
+/// cells span the generated trace's horizon and machine population.
+fn substrate_extent(spec: &SweepSpec, prebuilt: &Prebuilt) -> (f64, usize) {
+    match prebuilt {
+        Prebuilt::Comparison(_) => (
+            spec.scenario.terminate_at,
+            crate::config::catalog::host_types().iter().map(|t| t.count).sum(),
+        ),
+        Prebuilt::Trace(trace) => (trace.horizon, trace.machine_count()),
+    }
+}
+
+/// Lazy worker-side chaos-schedule table, the [`PrebuildSlots`] pattern
+/// keyed per distinct (substrate, seed, chaos spec) triple: every cell
+/// sharing a triple reuses one compiled [`ChaosSchedule`].
+/// [`chaos::compile`] is deterministic in the triple (plus the substrate
+/// extent, itself a function of (substrate, seed)), so racing builders
+/// produce identical values and the winning worker never leaks into the
+/// merged artifacts. Chaos-free cells map to no slot at all.
+pub struct ChaosSlots {
+    /// Slot index -> key. `ChaosSpec` carries floats (no `Ord`), so dedup
+    /// is a linear scan - grids stay small relative to compile cost.
+    keys: Vec<(u8, u64, ChaosSpec)>,
+    slots: Vec<OnceLock<Arc<ChaosSchedule>>>,
+    /// Cell index (enumeration order) -> slot index; `usize::MAX` marks a
+    /// chaos-free cell.
+    cell_slot: Vec<usize>,
+}
+
+impl ChaosSlots {
+    /// Size the slot table for `cells` (nothing is compiled yet).
+    pub fn for_cells(cells: &[Cell]) -> Self {
+        let mut keys: Vec<(u8, u64, ChaosSpec)> = Vec::new();
+        let mut cell_slot = Vec::with_capacity(cells.len());
+        for cell in cells {
+            if cell.spec.chaos.is_none() {
+                cell_slot.push(usize::MAX);
+                continue;
+            }
+            let (sub, seed) = slot_key(cell);
+            let key = (sub, seed, cell.spec.chaos);
+            let slot = match keys.iter().position(|k| *k == key) {
+                Some(i) => i,
+                None => {
+                    keys.push(key);
+                    keys.len() - 1
+                }
+            };
+            cell_slot.push(slot);
+        }
+        let mut slots = Vec::new();
+        slots.resize_with(keys.len(), OnceLock::new);
+        ChaosSlots { keys, slots, cell_slot }
+    }
+
+    /// Distinct (substrate, seed, chaos) triples the table covers.
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Schedules actually compiled so far.
+    pub fn built(&self) -> usize {
+        self.slots.iter().filter(|s| s.get().is_some()).count()
+    }
+
+    /// The compiled schedule for the cell at `cell_index` of the
+    /// enumeration this table was sized for (compiling it on first use),
+    /// or `None` for a chaos-free cell. `prebuilt` anchors the compile to
+    /// the cell's substrate extent, so it must be the cell's own prebuild.
+    pub fn get(
+        &self,
+        spec: &SweepSpec,
+        cell_index: usize,
+        cell: &Cell,
+        prebuilt: &Prebuilt,
+    ) -> Option<&Arc<ChaosSchedule>> {
+        let slot = self.cell_slot[cell_index];
+        if slot == usize::MAX {
+            return None;
+        }
+        debug_assert_eq!(self.keys[slot].2, cell.spec.chaos, "cell/slot table mismatch");
+        Some(self.slots[slot].get_or_init(|| {
+            let (horizon, n_hosts) = substrate_extent(spec, prebuilt);
+            Arc::new(chaos::compile(&cell.spec.chaos, cell.seed, horizon, n_hosts))
+        }))
     }
 }
 
@@ -367,6 +457,44 @@ mod tests {
         let e2 = slots.get_with(&spec, 1, &cells[1], |_| builds += 1).as_ref().unwrap_err().clone();
         assert_eq!(builds, 0, "cached Err must not re-run the build");
         assert_eq!(e1, e2);
+    }
+
+    /// Chaos slots dedup per (substrate, seed, chaos) triple, share one
+    /// compiled schedule per triple, and skip chaos-free cells entirely.
+    #[test]
+    fn chaos_slots_compile_once_per_triple() {
+        use crate::chaos::ReclaimStorm;
+        use crate::sweep::grid::ScenarioAxis;
+        let storm = ReclaimStorm::parse("at600-frac0.5").unwrap();
+        let spec = crate::sweep::SweepSpec::new(ComparisonConfig::default())
+            .with_seeds(vec![1, 2])
+            .with_policies(vec![PolicySpec::FirstFit, PolicySpec::BestFit])
+            .with_axis(ScenarioAxis::ChaosReclaimStorm(vec![storm]));
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 4);
+        let prebuilds = PrebuildSlots::for_cells(&cells);
+        let chaos = ChaosSlots::for_cells(&cells);
+        assert_eq!(chaos.slot_count(), 2, "two seeds, one chaos value -> two slots");
+        assert_eq!(chaos.built(), 0, "slots are lazy");
+        let pb0 = prebuilds.get(&spec, 0, &cells[0]).as_ref().unwrap().clone();
+        let a = chaos.get(&spec, 0, &cells[0], &pb0).unwrap().clone();
+        let b = chaos.get(&spec, 1, &cells[1], &pb0).unwrap().clone();
+        assert!(Arc::ptr_eq(&a, &b), "same triple must share one schedule");
+        assert_eq!(chaos.built(), 1);
+        assert_eq!(a.storms.len(), 1);
+        let pb2 = prebuilds.get(&spec, 2, &cells[2]).as_ref().unwrap().clone();
+        let c = chaos.get(&spec, 2, &cells[2], &pb2).unwrap().clone();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(chaos.built(), 2);
+
+        // Chaos-free grids never compile anything and return None.
+        let plain = crate::sweep::SweepSpec::new(ComparisonConfig::default())
+            .with_seeds(vec![1])
+            .with_policies(vec![PolicySpec::FirstFit]);
+        let plain_cells = plain.cells();
+        let none = ChaosSlots::for_cells(&plain_cells);
+        assert_eq!(none.slot_count(), 0);
+        assert!(none.get(&plain, 0, &plain_cells[0], &pb0).is_none());
     }
 
     #[test]

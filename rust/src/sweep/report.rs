@@ -55,6 +55,10 @@ pub struct VariantAggregate {
     pub avg_interruption_secs: Summary,
     pub max_interruption_secs: Summary,
     pub max_interruptions_per_vm: u32,
+    /// Resilience moments (chaos sweeps; all-zero for chaos-free cells).
+    pub interruptions_per_storm: Summary,
+    pub max_recovery_secs: Summary,
+    pub work_lost_mi: Summary,
 }
 
 impl SweepReport {
@@ -111,6 +115,9 @@ impl SweepReport {
                         avg_interruption_secs: Summary::new(),
                         max_interruption_secs: Summary::new(),
                         max_interruptions_per_vm: 0,
+                        interruptions_per_storm: Summary::new(),
+                        max_recovery_secs: Summary::new(),
+                        work_lost_mi: Summary::new(),
                     });
                     aggs.len() - 1
                 }
@@ -124,6 +131,9 @@ impl SweepReport {
             a.max_interruption_secs.add(report.spot.max_interruption_secs);
             a.max_interruptions_per_vm =
                 a.max_interruptions_per_vm.max(report.spot.max_interruptions_per_vm);
+            a.interruptions_per_storm.add(report.resilience.interruptions_per_storm);
+            a.max_recovery_secs.add(report.resilience.max_recovery_secs);
+            a.work_lost_mi.add(report.resilience.work_lost_mi);
         }
         aggs
     }
@@ -142,6 +152,10 @@ impl SweepReport {
             "spot_warning",
             "spot_hib_timeout",
             "spot_behavior",
+            "chaos_host_mtbf",
+            "chaos_reclaim_storm",
+            "chaos_broker_outage",
+            "chaos_demand_surge",
             "status",
             "error",
             "clock_end",
@@ -156,6 +170,15 @@ impl SweepReport {
             "avg_interruption_s",
             "max_interruption_s",
             "min_interruption_s",
+            "storms",
+            "storm_reclaims",
+            "interruptions_per_storm",
+            "p95_interruption_s",
+            "recoveries",
+            "avg_recovery_s",
+            "max_recovery_s",
+            "work_lost_mi",
+            "work_recovered_mi",
         ]);
         for c in &self.cells {
             let spec = &c.cell.spec;
@@ -169,6 +192,10 @@ impl SweepReport {
                 spec.spot.warning_time.map(fmt_num).unwrap_or_default(),
                 spec.spot.hibernation_timeout.map(fmt_num).unwrap_or_default(),
                 spec.spot.behavior.map(|b| b.name().to_string()).unwrap_or_default(),
+                spec.chaos.host_mtbf.map(|x| x.label()).unwrap_or_default(),
+                spec.chaos.reclaim_storm.map(|x| x.label()).unwrap_or_default(),
+                spec.chaos.broker_outage.map(|x| x.label()).unwrap_or_default(),
+                spec.chaos.demand_surge.map(|x| x.label()).unwrap_or_default(),
             ];
             match &c.outcome {
                 Ok(r) => row.extend(vec![
@@ -186,11 +213,20 @@ impl SweepReport {
                     fmt_num(r.spot.avg_interruption_secs),
                     fmt_num(r.spot.max_interruption_secs),
                     fmt_num(r.spot.min_interruption_secs),
+                    r.resilience.storms.to_string(),
+                    r.resilience.storm_reclaims.to_string(),
+                    fmt_num(r.resilience.interruptions_per_storm),
+                    fmt_num(r.resilience.p95_interruption_secs),
+                    r.resilience.recoveries.to_string(),
+                    fmt_num(r.resilience.avg_recovery_secs),
+                    fmt_num(r.resilience.max_recovery_secs),
+                    fmt_num(r.resilience.work_lost_mi),
+                    fmt_num(r.resilience.work_recovered_mi),
                 ]),
                 Err(e) => {
                     row.push("failed".into());
                     row.push(e.clone());
-                    row.extend(std::iter::repeat(String::new()).take(12));
+                    row.extend(std::iter::repeat(String::new()).take(21));
                 }
             }
             csv.push(row);
@@ -235,6 +271,31 @@ impl SweepReport {
                     .map(|b| Json::Str(b.name().to_string()))
                     .unwrap_or(Json::Null),
             );
+            o.set(
+                "chaos_host_mtbf",
+                spec.chaos.host_mtbf.map(|x| Json::Str(x.label())).unwrap_or(Json::Null),
+            );
+            o.set(
+                "chaos_reclaim_storm",
+                spec.chaos
+                    .reclaim_storm
+                    .map(|x| Json::Str(x.label()))
+                    .unwrap_or(Json::Null),
+            );
+            o.set(
+                "chaos_broker_outage",
+                spec.chaos
+                    .broker_outage
+                    .map(|x| Json::Str(x.label()))
+                    .unwrap_or(Json::Null),
+            );
+            o.set(
+                "chaos_demand_surge",
+                spec.chaos
+                    .demand_surge
+                    .map(|x| Json::Str(x.label()))
+                    .unwrap_or(Json::Null),
+            );
             o.set("runs", Json::Num(a.runs as f64));
             o.set("interruptions", stat_obj(&a.interruptions));
             o.set("interrupted_vms", stat_obj(&a.interrupted_vms));
@@ -244,6 +305,9 @@ impl SweepReport {
                 "max_interruptions_per_vm",
                 Json::Num(a.max_interruptions_per_vm as f64),
             );
+            o.set("interruptions_per_storm", stat_obj(&a.interruptions_per_storm));
+            o.set("max_recovery_secs", stat_obj(&a.max_recovery_secs));
+            o.set("work_lost_mi", stat_obj(&a.work_lost_mi));
             variants.push(Json::Obj(o));
         }
         root.set("policies", Json::Arr(variants));
@@ -289,7 +353,8 @@ impl SweepReport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::{SpotStats, VictimPolicy};
+    use crate::chaos::{ChaosSpec, ReclaimStorm};
+    use crate::engine::{ResilienceStats, SpotStats, VictimPolicy};
     use crate::sweep::grid::{PolicySpec, SpotOverride, Substrate};
 
     fn fake_report(policy: &'static str, interruptions: u64) -> Report {
@@ -314,6 +379,18 @@ mod tests {
                 max_interruption_secs: 20.0 + interruptions as f64,
                 min_interruption_secs: 1.0,
                 max_interruptions_per_vm: interruptions as u32,
+                ..Default::default()
+            },
+            resilience: ResilienceStats {
+                storms: 1,
+                storm_reclaims: interruptions,
+                interruptions_per_storm: interruptions as f64,
+                p95_interruption_secs: 20.0 + interruptions as f64,
+                recoveries: 1,
+                avg_recovery_secs: 5.0,
+                max_recovery_secs: 8.0,
+                work_lost_mi: 100.0 * interruptions as f64,
+                work_recovered_mi: 50.0,
                 ..Default::default()
             },
         }
@@ -385,11 +462,20 @@ mod tests {
         assert!(text.contains("failed,boom"));
         assert!(text.starts_with(
             "cell,policy,alpha,seed,substrate,victim,spot_warning,spot_hib_timeout,\
-             spot_behavior,status"
+             spot_behavior,chaos_host_mtbf,chaos_reclaim_storm,chaos_broker_outage,\
+             chaos_demand_surge,status"
         ));
+        assert!(
+            text.contains(
+                "min_interruption_s,storms,storm_reclaims,interruptions_per_storm,\
+                 p95_interruption_s,recoveries,avg_recovery_s,max_recovery_s,\
+                 work_lost_mi,work_recovered_mi"
+            ),
+            "resilience columns missing: {text}"
+        );
         // Default variants leave the axis columns empty but name the
         // substrate.
-        assert!(text.contains(",comparison,,,,,ok,"));
+        assert!(text.contains(",comparison,,,,,,,,,ok,"));
     }
 
     #[test]
@@ -404,10 +490,14 @@ mod tests {
                 behavior: Some(crate::vm::InterruptionBehavior::Terminate),
             },
             victim: Some(VictimPolicy::Youngest),
+            chaos: ChaosSpec {
+                reclaim_storm: Some(ReclaimStorm::parse("at1200-frac0.5").unwrap()),
+                ..ChaosSpec::NONE
+            },
         };
         let text = rep.cells_csv().to_string();
         assert!(
-            text.contains(",trace,youngest,60,900,terminate,ok,"),
+            text.contains(",trace,youngest,60,900,terminate,,at1200-frac0.5,,,ok,"),
             "axis columns missing: {text}"
         );
     }
@@ -460,6 +550,17 @@ mod tests {
         );
         assert!(policies[0].path(&["victim"]).is_some());
         assert!(policies[0].path(&["spot_warning"]).is_some());
+        assert!(policies[0].path(&["chaos_reclaim_storm"]).is_some());
+        // fake_report gives first-fit cells 3 and 5 interruptions, so the
+        // per-storm moments follow (one storm per cell).
+        assert_eq!(
+            policies[0].path(&["interruptions_per_storm", "mean"]).unwrap().as_f64(),
+            Some(4.0)
+        );
+        assert_eq!(
+            policies[0].path(&["work_lost_mi", "max"]).unwrap().as_f64(),
+            Some(500.0)
+        );
     }
 
     #[test]

@@ -27,7 +27,11 @@
 //! - [`coordinate`] is the same-host orchestration (`cloudmarket sweep
 //!   --workers N`): it spawns one worker subprocess per shard, monitors
 //!   them, **reassigns the shard of a crashed/killed worker** to a fresh
-//!   subprocess (bounded retries), and merges. For cluster use, run the
+//!   subprocess (bounded retries), and merges. Workers signal *why* they
+//!   died through an exit-code taxonomy ([`EXIT_RUNTIME`],
+//!   [`EXIT_PARENT_GONE`], [`EXIT_BAD_SHARD`]); a bad-shard exit means
+//!   the job file itself is corrupt/foreign, so the coordinator fails
+//!   fast instead of burning retries on it. For cluster use, run the
 //!   shard/worker/merge steps by hand instead (`docs/sweep-cookbook.md`,
 //!   "Cluster-scale sweeps").
 //!
@@ -49,8 +53,9 @@ use std::path::{Path, PathBuf};
 use std::process::{Command, Stdio};
 use std::time::Duration;
 
+use crate::chaos::{BrokerOutage, ChaosSpec, DemandSurge, HostMtbf, ReclaimStorm};
 use crate::config::scenario::ComparisonConfig;
-use crate::engine::{EngineConfig, Report, SpotStats, VictimPolicy};
+use crate::engine::{EngineConfig, Report, ResilienceStats, SpotStats, VictimPolicy};
 use crate::cloudlet::SchedulerKind;
 use crate::metrics::TimeSeries;
 use crate::trace::synth::SynthConfig;
@@ -69,6 +74,21 @@ use super::report::{CellResult, SweepReport};
 pub const WIRE_VERSION: u64 = 1;
 const SHARD_FORMAT: &str = "cloudmarket-sweep-shard";
 const PARTIAL_FORMAT: &str = "cloudmarket-sweep-partial";
+
+/// `cloudmarket sweep worker` exit-code taxonomy. The coordinator uses
+/// these to tell transient failures (worth reassigning the shard to a
+/// fresh subprocess) from permanent ones (fail the sweep immediately).
+///
+/// Runtime cell/IO failure inside an otherwise valid shard - transient
+/// from the coordinator's point of view (bounded retries).
+pub const EXIT_RUNTIME: i32 = 2;
+/// The worker noticed its parent coordinator was gone and stopped on its
+/// own (orphan cleanup, not a shard problem).
+pub const EXIT_PARENT_GONE: i32 = 3;
+/// The shard job file itself is unreadable, corrupt, or foreign (wrong
+/// format/digest). Re-running the same file can only fail the same way,
+/// so the coordinator treats this as **permanent** and never retries.
+pub const EXIT_BAD_SHARD: i32 = 4;
 
 /// Relative cost of one trace-substrate cell vs one comparison cell for
 /// partitioning. Trace cells pay per-seed trace generation plus a larger
@@ -443,6 +463,19 @@ fn axis_to_json(a: &ScenarioAxis) -> Json {
         ScenarioAxis::Substrate(v) => {
             v.iter().map(|s| Json::Str(s.name().to_string())).collect()
         }
+        // Chaos axis values go over the wire as their compact labels:
+        // labels embed f64 fields via shortest-round-trip `Display`, so
+        // `parse(label)` reconstructs the exact same bits.
+        ScenarioAxis::ChaosHostMtbf(v) => v.iter().map(|x| Json::Str(x.label())).collect(),
+        ScenarioAxis::ChaosReclaimStorm(v) => {
+            v.iter().map(|x| Json::Str(x.label())).collect()
+        }
+        ScenarioAxis::ChaosBrokerOutage(v) => {
+            v.iter().map(|x| Json::Str(x.label())).collect()
+        }
+        ScenarioAxis::ChaosDemandSurge(v) => {
+            v.iter().map(|x| Json::Str(x.label())).collect()
+        }
     };
     o.set("values", Json::Arr(values));
     Json::Obj(o)
@@ -475,6 +508,30 @@ fn axis_from_json(v: &Json) -> Result<ScenarioAxis, String> {
             values
                 .iter()
                 .map(|x| Substrate::parse(str_of(x, "axis value")?))
+                .collect::<Result<_, _>>()?,
+        )),
+        "chaos.host-mtbf" => Ok(ScenarioAxis::ChaosHostMtbf(
+            values
+                .iter()
+                .map(|x| HostMtbf::parse(str_of(x, "axis value")?))
+                .collect::<Result<_, _>>()?,
+        )),
+        "chaos.reclaim-storm" => Ok(ScenarioAxis::ChaosReclaimStorm(
+            values
+                .iter()
+                .map(|x| ReclaimStorm::parse(str_of(x, "axis value")?))
+                .collect::<Result<_, _>>()?,
+        )),
+        "chaos.broker-outage" => Ok(ScenarioAxis::ChaosBrokerOutage(
+            values
+                .iter()
+                .map(|x| BrokerOutage::parse(str_of(x, "axis value")?))
+                .collect::<Result<_, _>>()?,
+        )),
+        "chaos.demand-surge" => Ok(ScenarioAxis::ChaosDemandSurge(
+            values
+                .iter()
+                .map(|x| DemandSurge::parse(str_of(x, "axis value")?))
                 .collect::<Result<_, _>>()?,
         )),
         other => Err(format!("unknown axis '{other}'")),
@@ -586,6 +643,24 @@ fn cell_to_json(c: &Cell) -> Json {
         "victim",
         c.spec.victim.map(|v| Json::Str(v.name().to_string())).unwrap_or(Json::Null),
     );
+    let mut ch = JsonObj::new();
+    ch.set(
+        "host_mtbf",
+        c.spec.chaos.host_mtbf.map(|x| Json::Str(x.label())).unwrap_or(Json::Null),
+    );
+    ch.set(
+        "reclaim_storm",
+        c.spec.chaos.reclaim_storm.map(|x| Json::Str(x.label())).unwrap_or(Json::Null),
+    );
+    ch.set(
+        "broker_outage",
+        c.spec.chaos.broker_outage.map(|x| Json::Str(x.label())).unwrap_or(Json::Null),
+    );
+    ch.set(
+        "demand_surge",
+        c.spec.chaos.demand_surge.map(|x| Json::Str(x.label())).unwrap_or(Json::Null),
+    );
+    spec.set("chaos", Json::Obj(ch));
     let mut o = JsonObj::new();
     o.set("id", enc_usize(c.id));
     o.set("seed", enc_u64(c.seed));
@@ -596,6 +671,7 @@ fn cell_to_json(c: &Cell) -> Json {
 fn cell_from_json(v: &Json) -> Result<Cell, String> {
     let o = as_obj(v, "cell")?;
     let so = as_obj(field(o, "spec")?, "cell spec")?;
+    let co = as_obj(field(so, "chaos")?, "cell chaos spec")?;
     let spec = CellSpec {
         substrate: Substrate::parse(str_field(so, "substrate")?)?,
         policy: policy_from_json(field(so, "policy")?)?,
@@ -603,6 +679,20 @@ fn cell_from_json(v: &Json) -> Result<Cell, String> {
         victim: opt_json(field(so, "victim")?)
             .map(|x| VictimPolicy::parse(str_of(x, "victim")?))
             .transpose()?,
+        chaos: ChaosSpec {
+            host_mtbf: opt_json(field(co, "host_mtbf")?)
+                .map(|x| HostMtbf::parse(str_of(x, "host_mtbf")?))
+                .transpose()?,
+            reclaim_storm: opt_json(field(co, "reclaim_storm")?)
+                .map(|x| ReclaimStorm::parse(str_of(x, "reclaim_storm")?))
+                .transpose()?,
+            broker_outage: opt_json(field(co, "broker_outage")?)
+                .map(|x| BrokerOutage::parse(str_of(x, "broker_outage")?))
+                .transpose()?,
+            demand_surge: opt_json(field(co, "demand_surge")?)
+                .map(|x| DemandSurge::parse(str_of(x, "demand_surge")?))
+                .transpose()?,
+        },
     };
     Ok(Cell { id: usize_field(o, "id")?, seed: u64_field(o, "seed")?, spec })
 }
@@ -636,12 +726,26 @@ fn report_to_json(r: &Report) -> Json {
     sp.set("max_interruption_secs", enc_f64(s.max_interruption_secs));
     sp.set("min_interruption_secs", enc_f64(s.min_interruption_secs));
     o.set("spot", Json::Obj(sp));
+    let rs = &r.resilience;
+    let mut re = JsonObj::new();
+    re.set("storms", enc_u64(rs.storms));
+    re.set("storm_reclaims", enc_u64(rs.storm_reclaims));
+    re.set("host_failures", enc_u64(rs.host_failures));
+    re.set("recoveries", enc_u64(rs.recoveries));
+    re.set("interruptions_per_storm", enc_f64(rs.interruptions_per_storm));
+    re.set("p95_interruption_secs", enc_f64(rs.p95_interruption_secs));
+    re.set("avg_recovery_secs", enc_f64(rs.avg_recovery_secs));
+    re.set("max_recovery_secs", enc_f64(rs.max_recovery_secs));
+    re.set("work_lost_mi", enc_f64(rs.work_lost_mi));
+    re.set("work_recovered_mi", enc_f64(rs.work_recovered_mi));
+    o.set("resilience", Json::Obj(re));
     Json::Obj(o)
 }
 
 fn report_from_json(v: &Json) -> Result<Report, String> {
     let o = as_obj(v, "report")?;
     let sp = as_obj(field(o, "spot")?, "spot stats")?;
+    let re = as_obj(field(o, "resilience")?, "resilience stats")?;
     let max_per_vm = u64_field(sp, "max_interruptions_per_vm")?;
     Ok(Report {
         policy: static_policy_name(str_field(o, "policy")?)?,
@@ -671,6 +775,18 @@ fn report_from_json(v: &Json) -> Result<Report, String> {
             avg_interruption_secs: f64_field(sp, "avg_interruption_secs")?,
             max_interruption_secs: f64_field(sp, "max_interruption_secs")?,
             min_interruption_secs: f64_field(sp, "min_interruption_secs")?,
+        },
+        resilience: ResilienceStats {
+            storms: u64_field(re, "storms")?,
+            storm_reclaims: u64_field(re, "storm_reclaims")?,
+            host_failures: u64_field(re, "host_failures")?,
+            recoveries: u64_field(re, "recoveries")?,
+            interruptions_per_storm: f64_field(re, "interruptions_per_storm")?,
+            p95_interruption_secs: f64_field(re, "p95_interruption_secs")?,
+            avg_recovery_secs: f64_field(re, "avg_recovery_secs")?,
+            max_recovery_secs: f64_field(re, "max_recovery_secs")?,
+            work_lost_mi: f64_field(re, "work_lost_mi")?,
+            work_recovered_mi: f64_field(re, "work_recovered_mi")?,
         },
     })
 }
@@ -1218,6 +1334,17 @@ pub fn coordinate(
                         }
                         Err(why) => {
                             let _ = std::fs::remove_file(&partial);
+                            if status.code() == Some(EXIT_BAD_SHARD) {
+                                // The job file itself is corrupt/foreign;
+                                // a fresh worker would read the same bytes
+                                // and die the same way. Permanent.
+                                kill_workers(&mut running);
+                                return Err(format!(
+                                    "shard {idx} job file rejected by worker (exit \
+                                     {EXIT_BAD_SHARD}: corrupt or foreign shard); permanent \
+                                     failure, not reassigning ({why})"
+                                ));
+                            }
                             if attempts[idx] >= opts.max_attempts {
                                 kill_workers(&mut running);
                                 return Err(format!(
@@ -1283,6 +1410,14 @@ mod tests {
                 Substrate::Comparison,
                 Substrate::Trace,
             ]))
+            .with_axis(ScenarioAxis::ChaosReclaimStorm(vec![
+                ReclaimStorm::parse("at1200-frac0.5").unwrap(),
+                ReclaimStorm::parse("at900-frac0.25-x2-every300.5").unwrap(),
+            ]))
+            .with_axis(ScenarioAxis::ChaosBrokerOutage(vec![BrokerOutage::parse(
+                "at600-for120.25",
+            )
+            .unwrap()]))
             .with_series_retention(SeriesFilter::parse("policy=first-fit,seed=2").unwrap())
             .with_cell(77, PolicySpec::BestFit);
         spec.trace.synth.machines = 10;
@@ -1389,6 +1524,18 @@ mod tests {
                     max_interruption_secs: 1e-300,
                     min_interruption_secs: 0.0,
                 },
+                resilience: ResilienceStats {
+                    storms: 2,
+                    storm_reclaims: 6,
+                    host_failures: 1,
+                    recoveries: 1,
+                    interruptions_per_storm: 3.0,
+                    p95_interruption_secs: 0.2 + 0.4, // 0.6000000000000001
+                    avg_recovery_secs: 12.5,
+                    max_recovery_secs: 30.25,
+                    work_lost_mi: 1234.5,
+                    work_recovered_mi: 987.0,
+                },
             })
         } else {
             Err("cell exploded".to_string())
@@ -1422,6 +1569,11 @@ mod tests {
         assert_eq!(
             r0.spot.max_interruption_secs.to_bits(),
             want.spot.max_interruption_secs.to_bits()
+        );
+        assert_eq!(r0.resilience.storm_reclaims, want.resilience.storm_reclaims);
+        assert_eq!(
+            r0.resilience.p95_interruption_secs.to_bits(),
+            want.resilience.p95_interruption_secs.to_bits()
         );
         assert_eq!(r0.wall, Duration::ZERO, "wall time must not cross the wire");
         let s0 = back[0].series.as_ref().unwrap();

@@ -102,6 +102,10 @@ pub struct Vm {
     /// Last time this (on-demand) VM triggered spot preemption; throttles
     /// re-preemption while the freed capacity is still materializing.
     pub preempt_armed_at: Option<f64>,
+    /// When the VM was displaced from a host it was running on
+    /// (hibernation or eviction-requeue); cleared on re-placement or a
+    /// terminal state. Feeds the time-to-recover resilience metrics.
+    pub displaced_at: Option<f64>,
     /// Whether a periodic backstop retry event is already scheduled
     /// (dedupes the engine's hibernation retry stream).
     pub retry_armed: bool,
@@ -127,6 +131,7 @@ impl Vm {
             hibernated_at: None,
             stopped_at: None,
             preempt_armed_at: None,
+            displaced_at: None,
             retry_armed: false,
         }
     }

@@ -19,7 +19,8 @@
 
 use std::path::PathBuf;
 
-use cloudmarket::engine::{Report, SpotStats, VictimPolicy};
+use cloudmarket::chaos::{ChaosSpec, ReclaimStorm};
+use cloudmarket::engine::{Report, ResilienceStats, SpotStats, VictimPolicy};
 use cloudmarket::sweep::{
     Cell, CellResult, CellSpec, PolicySpec, SpotOverride, Substrate, SweepReport,
 };
@@ -40,6 +41,7 @@ fn ok_report(
     avg_s: f64,
     max_s: f64,
     min_s: f64,
+    resilience: ResilienceStats,
 ) -> Report {
     Report {
         policy,
@@ -64,13 +66,15 @@ fn ok_report(
             min_interruption_secs: min_s,
             ..Default::default()
         },
+        resilience,
     }
 }
 
 /// The pinned 4-cell report: two comparison first-fit cells (a 2-run
 /// aggregate group), one failed adjusted-HLEM cell (a 0-run group with
 /// `null` moments), and one trace-substrate cell with every axis column
-/// set (a 1-run group).
+/// set - including a `chaos.reclaim-storm` label - (a 1-run group). All
+/// resilience values are dyadic so the aggregate moments stay bit-exact.
 fn pinned_report() -> SweepReport {
     let ff = CellSpec::comparison(PolicySpec::FirstFit);
     let adj = CellSpec::comparison(PolicySpec::Hlem { adjusted: true, alpha: -0.5 });
@@ -83,13 +87,41 @@ fn pinned_report() -> SweepReport {
             behavior: Some(InterruptionBehavior::Terminate),
         },
         victim: Some(VictimPolicy::Youngest),
+        chaos: ChaosSpec {
+            reclaim_storm: Some(ReclaimStorm::parse("at1200-frac0.5").unwrap()),
+            ..ChaosSpec::NONE
+        },
     };
     SweepReport {
         cells: vec![
             CellResult {
                 cell: Cell { id: 0, seed: 1, spec: ff },
                 outcome: Ok(ok_report(
-                    "first-fit", 4800.0, 123_456, 950, 30, 0, 400, 3, 3, 2, 10.25, 20.5, 1.25,
+                    "first-fit",
+                    4800.0,
+                    123_456,
+                    950,
+                    30,
+                    0,
+                    400,
+                    3,
+                    3,
+                    2,
+                    10.25,
+                    20.5,
+                    1.25,
+                    ResilienceStats {
+                        storms: 1,
+                        storm_reclaims: 3,
+                        recoveries: 2,
+                        interruptions_per_storm: 3.0,
+                        p95_interruption_secs: 20.5,
+                        avg_recovery_secs: 30.25,
+                        max_recovery_secs: 60.5,
+                        work_lost_mi: 1000.0,
+                        work_recovered_mi: 750.0,
+                        ..Default::default()
+                    },
                 )),
                 series: None,
             },
@@ -101,14 +133,62 @@ fn pinned_report() -> SweepReport {
             CellResult {
                 cell: Cell { id: 2, seed: 2, spec: ff },
                 outcome: Ok(ok_report(
-                    "first-fit", 4800.0, 123_789, 940, 35, 1, 400, 5, 4, 3, 10.75, 21.5, 1.75,
+                    "first-fit",
+                    4800.0,
+                    123_789,
+                    940,
+                    35,
+                    1,
+                    400,
+                    5,
+                    4,
+                    3,
+                    10.75,
+                    21.5,
+                    1.75,
+                    ResilienceStats {
+                        storms: 1,
+                        storm_reclaims: 5,
+                        recoveries: 3,
+                        interruptions_per_storm: 5.0,
+                        p95_interruption_secs: 21.5,
+                        avg_recovery_secs: 32.75,
+                        max_recovery_secs: 64.5,
+                        work_lost_mi: 1500.0,
+                        work_recovered_mi: 1250.0,
+                        ..Default::default()
+                    },
                 )),
                 series: None,
             },
             CellResult {
                 cell: Cell { id: 3, seed: 2, spec: trace },
                 outcome: Ok(ok_report(
-                    "first-fit", 4320.0, 54_321, 120, 7, 0, 20, 7, 6, 4, 32.25, 48.5, 2.5,
+                    "first-fit",
+                    4320.0,
+                    54_321,
+                    120,
+                    7,
+                    0,
+                    20,
+                    7,
+                    6,
+                    4,
+                    32.25,
+                    48.5,
+                    2.5,
+                    ResilienceStats {
+                        storms: 2,
+                        storm_reclaims: 7,
+                        recoveries: 4,
+                        interruptions_per_storm: 3.5,
+                        p95_interruption_secs: 48.5,
+                        avg_recovery_secs: 12.25,
+                        max_recovery_secs: 24.5,
+                        work_lost_mi: 500.25,
+                        work_recovered_mi: 250.5,
+                        ..Default::default()
+                    },
                 )),
                 series: None,
             },

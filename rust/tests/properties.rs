@@ -516,6 +516,7 @@ fn prop_scorer_scores_bounded() {
 /// (the cluster fan-out protocol of `sweep::shard`).
 #[test]
 fn prop_shard_partition_covers_disjointly_and_round_trips() {
+    use cloudmarket::chaos::{BrokerOutage, DemandSurge, HostMtbf, ReclaimStorm};
     use cloudmarket::config::scenario::ComparisonConfig;
     use cloudmarket::engine::VictimPolicy;
     use cloudmarket::sweep::{
@@ -558,6 +559,50 @@ fn prop_shard_partition_covers_disjointly_and_round_trips() {
         }
         if rng.chance(0.3) {
             spec = spec.with_axis(ScenarioAxis::Victim(vec![VictimPolicy::Youngest]));
+        }
+        if rng.chance(0.4) {
+            let n = 1 + rng.below(2);
+            spec = spec.with_axis(ScenarioAxis::ChaosReclaimStorm(
+                (0..n)
+                    .map(|_| {
+                        if rng.chance(0.5) {
+                            ReclaimStorm {
+                                at: rng.uniform(0.0, 4_000.0),
+                                frac: 0.25 + 0.5 * rng.uniform(0.0, 1.0),
+                                count: 1,
+                                every: 0.0,
+                            }
+                        } else {
+                            ReclaimStorm {
+                                at: rng.uniform(0.0, 4_000.0),
+                                frac: 0.25 + 0.5 * rng.uniform(0.0, 1.0),
+                                count: 2 + rng.below(3) as u32,
+                                every: rng.uniform(10.0, 400.0),
+                            }
+                        }
+                    })
+                    .collect(),
+            ));
+        }
+        if rng.chance(0.3) {
+            spec = spec.with_axis(ScenarioAxis::ChaosHostMtbf(vec![HostMtbf {
+                mtbf: rng.uniform(50.0, 2_000.0),
+                mttr: rng.uniform(5.0, 500.0),
+            }]));
+        }
+        if rng.chance(0.3) {
+            spec = spec.with_axis(ScenarioAxis::ChaosBrokerOutage(vec![BrokerOutage {
+                at: rng.uniform(0.0, 3_000.0),
+                dur: rng.uniform(1.0, 600.0),
+            }]));
+        }
+        if rng.chance(0.3) {
+            spec = spec.with_axis(ScenarioAxis::ChaosDemandSurge(vec![DemandSurge {
+                at: rng.uniform(0.0, 3_000.0),
+                vms: 1 + rng.below(30) as u32,
+                pes: 1 + rng.below(4) as u32,
+                dur: rng.uniform(10.0, 600.0),
+            }]));
         }
         if rng.chance(0.3) {
             spec = spec.with_cell(rng.next_u64(), PolicySpec::BestFit);
@@ -696,6 +741,18 @@ fn prop_partial_results_round_trip_bit_exact() {
                             max_interruption_secs: rng.uniform(0.0, 1e9),
                             min_interruption_secs: rng.uniform(0.0, 1.0),
                         },
+                        resilience: cloudmarket::engine::ResilienceStats {
+                            storms: rng.next_u64(),
+                            storm_reclaims: rng.next_u64(),
+                            host_failures: rng.next_u64(),
+                            recoveries: rng.next_u64(),
+                            interruptions_per_storm: rng.uniform(0.0, 1e4),
+                            p95_interruption_secs: rng.uniform(0.0, 1e6),
+                            avg_recovery_secs: rng.uniform(0.0, 1e5),
+                            max_recovery_secs: rng.uniform(0.0, 1e6),
+                            work_lost_mi: rng.uniform(0.0, 1e12),
+                            work_recovered_mi: rng.uniform(0.0, 1e12),
+                        },
                     }),
                     series,
                 }
@@ -731,6 +788,16 @@ fn prop_partial_results_round_trip_bit_exact() {
                         x.spot.max_interruptions_per_vm,
                         y.spot.max_interruptions_per_vm
                     );
+                    assert_eq!(x.resilience.storms, y.resilience.storms);
+                    assert_eq!(x.resilience.storm_reclaims, y.resilience.storm_reclaims);
+                    assert_eq!(
+                        x.resilience.p95_interruption_secs.to_bits(),
+                        y.resilience.p95_interruption_secs.to_bits()
+                    );
+                    assert_eq!(
+                        x.resilience.work_lost_mi.to_bits(),
+                        y.resilience.work_lost_mi.to_bits()
+                    );
                     assert_eq!(y.wall, std::time::Duration::ZERO, "wall must not survive");
                 }
                 (Err(x), Err(y)) => assert_eq!(x, y),
@@ -752,6 +819,80 @@ fn prop_partial_results_round_trip_bit_exact() {
                 (None, None) => {}
                 _ => panic!("series presence changed across the wire"),
             }
+        }
+    });
+}
+
+/// Compiled chaos schedules are a pure function of (spec, seed, horizon,
+/// n_hosts): the bytes are identical no matter which thread compiles
+/// them, how many compiles run concurrently, or what other compiles (for
+/// other seeds) happen in between. This is the foundation of the sweep's
+/// byte-identity contract once `chaos.*` axes are in the grid - lazy
+/// `ChaosSlots` may compile a schedule from any worker thread at any
+/// point in the run.
+#[test]
+fn prop_chaos_schedule_compile_is_thread_and_order_invariant() {
+    use cloudmarket::chaos::{
+        self, BrokerOutage, ChaosSpec, DemandSurge, HostMtbf, ReclaimStorm,
+    };
+
+    forall(12, 0xC405, |rng| {
+        let spec = ChaosSpec {
+            host_mtbf: rng.chance(0.7).then(|| HostMtbf {
+                mtbf: rng.uniform(50.0, 2_000.0),
+                mttr: rng.uniform(5.0, 500.0),
+            }),
+            reclaim_storm: rng.chance(0.7).then(|| ReclaimStorm {
+                at: rng.uniform(0.0, 4_000.0),
+                frac: 0.25 + 0.5 * rng.uniform(0.0, 1.0),
+                count: 1 + rng.below(3) as u32,
+                every: rng.uniform(10.0, 400.0),
+            }),
+            broker_outage: rng.chance(0.5).then(|| BrokerOutage {
+                at: rng.uniform(0.0, 3_000.0),
+                dur: rng.uniform(1.0, 600.0),
+            }),
+            demand_surge: rng.chance(0.5).then(|| DemandSurge {
+                at: rng.uniform(0.0, 3_000.0),
+                vms: 1 + rng.below(30) as u32,
+                pes: 1 + rng.below(4) as u32,
+                dur: rng.uniform(10.0, 600.0),
+            }),
+        };
+        let seed = rng.next_u64();
+        let horizon = rng.uniform(500.0, 6_000.0);
+        let n_hosts = 1 + rng.below(200) as usize;
+
+        let reference = format!("{:?}", chaos::compile(&spec, seed, horizon, n_hosts));
+        // Interleave a compile for a different seed: per-family streams
+        // must have no hidden shared state that the extra compile shifts.
+        let _ = chaos::compile(&spec, seed ^ 0xDEAD_BEEF, horizon, n_hosts);
+        assert_eq!(
+            format!("{:?}", chaos::compile(&spec, seed, horizon, n_hosts)),
+            reference,
+            "recompiling after an unrelated compile changed the schedule"
+        );
+
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    // Each thread compiles a different number of times;
+                    // only the last result is compared, so any order- or
+                    // count-dependence would show up as a mismatch.
+                    let mut last = String::new();
+                    for _ in 0..=(i % 3) {
+                        last = format!("{:?}", chaos::compile(&spec, seed, horizon, n_hosts));
+                    }
+                    last
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(
+                h.join().unwrap(),
+                reference,
+                "chaos compile must be thread-invariant"
+            );
         }
     });
 }

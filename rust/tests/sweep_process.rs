@@ -283,3 +283,122 @@ fn manual_shard_worker_merge_recipe_works() {
     assert_eq!(series, want_series);
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+/// A chaos grid (reclaim-storm severity x policy) through real worker
+/// subprocesses: the coordinator's merged artifacts are byte-identical
+/// to the in-process run at 1 and 2 workers, with the resilience columns
+/// populated and the chaos labels in the cells CSV.
+#[test]
+fn chaos_storm_grid_byte_identical_across_processes() {
+    use cloudmarket::chaos::ReclaimStorm;
+
+    let scenario = ComparisonConfig { terminate_at: 400.0, ..Default::default() };
+    let spec = SweepSpec::new(scenario)
+        .with_seeds(vec![20_250_710])
+        .with_policies(vec![PolicySpec::FirstFit, PolicySpec::BestFit])
+        .with_axis(ScenarioAxis::ChaosReclaimStorm(vec![
+            ReclaimStorm::parse("at150-frac0.5").unwrap(),
+            ReclaimStorm::parse("at150-frac1").unwrap(),
+        ]));
+    assert_eq!(spec.cell_count(), 4);
+
+    let reference = sweep::run(&spec, 2);
+    assert_eq!(reference.failed(), 0, "no chaos cell may fail");
+    let r0 = reference.cells[0].report().unwrap();
+    assert_eq!(r0.resilience.storms, 1, "the storm must have fired");
+    assert!(r0.resilience.storm_reclaims > 0, "the storm reclaimed nothing");
+    let want = render(&reference);
+    assert!(want.0.contains("at150-frac0.5"), "chaos label missing from cells CSV");
+    assert!(want.1.contains("chaos_reclaim_storm"), "chaos key missing from aggregate");
+
+    for workers in [1usize, 2] {
+        let dir = test_dir(&format!("chaos_{workers}w"));
+        let outcome =
+            shard::coordinate(&spec, &shard::CoordinateOptions::new(workers, &dir, BIN))
+                .unwrap();
+        assert_eq!(
+            render(&outcome.report),
+            want,
+            "{workers}-worker chaos artifacts differ from the in-process run"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// A corrupt or foreign shard file makes the worker exit with the
+/// dedicated bad-shard code, distinct from generic runtime failures, and
+/// write no partial.
+#[test]
+fn worker_exits_bad_shard_code_on_corrupt_shard_file() {
+    let dir = test_dir("badshard");
+    let shard_file = dir.join("sweep_shard0000.json");
+    let partial_file = dir.join("sweep_partial0000.json");
+    for bad in ["{ not json", "{\"format\":\"something-else\",\"version\":1}"] {
+        std::fs::write(&shard_file, bad).unwrap();
+        let out = Command::new(BIN)
+            .args(["sweep", "worker", "--shard"])
+            .arg(&shard_file)
+            .arg("--out")
+            .arg(&partial_file)
+            .output()
+            .unwrap();
+        assert!(!out.status.success());
+        assert_eq!(
+            out.status.code(),
+            Some(shard::EXIT_BAD_SHARD),
+            "bad shard file must map to the permanent exit code: {out:?}"
+        );
+        assert!(!partial_file.exists(), "no partial may be written for a bad shard");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The coordinator's retry policy follows the worker exit-code taxonomy:
+/// a runtime failure gets the shard reassigned (up to `max_attempts`),
+/// while the bad-shard code fails the sweep on first sight - re-reading
+/// a corrupt job file can never succeed, so retries would only burn time.
+#[cfg(unix)]
+#[test]
+fn coordinator_retries_runtime_failures_but_not_bad_shards() {
+    use std::os::unix::fs::PermissionsExt;
+
+    // A stand-in worker that logs each spawn and exits with a fixed code.
+    let write_fake_worker = |dir: &Path, code: i32| -> (PathBuf, PathBuf) {
+        let exe = dir.join(format!("fake_worker_{code}.sh"));
+        let count = dir.join(format!("spawn_count_{code}"));
+        std::fs::write(
+            &exe,
+            format!("#!/bin/sh\necho x >> {}\nexit {code}\n", count.display()),
+        )
+        .unwrap();
+        std::fs::set_permissions(&exe, std::fs::Permissions::from_mode(0o755)).unwrap();
+        (exe, count)
+    };
+    let spec = SweepSpec::new(ComparisonConfig::default())
+        .with_seeds(vec![1])
+        .with_policies(vec![PolicySpec::FirstFit, PolicySpec::BestFit]);
+
+    // Runtime failures (EXIT_RUNTIME) are retried before giving up.
+    let dir = test_dir("taxonomy_runtime");
+    let (exe, count) = write_fake_worker(&dir, shard::EXIT_RUNTIME);
+    let mut opts = shard::CoordinateOptions::new(2, &dir, &exe);
+    opts.max_attempts = 2;
+    let err = shard::coordinate(&spec, &opts).unwrap_err();
+    assert!(err.contains("giving up"), "{err}");
+    let spawns = std::fs::read_to_string(&count).unwrap().lines().count();
+    assert!(spawns >= 3, "expected at least one reassignment before failing ({spawns} spawns)");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Bad-shard exits are permanent: both shards spawn once, the first
+    // reap kills the run, and nothing is reassigned.
+    let dir = test_dir("taxonomy_badshard");
+    let (exe, count) = write_fake_worker(&dir, shard::EXIT_BAD_SHARD);
+    let mut opts = shard::CoordinateOptions::new(2, &dir, &exe);
+    opts.max_attempts = 3;
+    let err = shard::coordinate(&spec, &opts).unwrap_err();
+    assert!(err.contains("permanent"), "{err}");
+    assert!(err.contains("not reassigning"), "{err}");
+    let spawns = std::fs::read_to_string(&count).unwrap().lines().count();
+    assert_eq!(spawns, 2, "a permanent failure must never respawn a worker");
+    let _ = std::fs::remove_dir_all(&dir);
+}
