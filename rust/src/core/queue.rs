@@ -50,6 +50,9 @@ pub struct EventQueue<T> {
     /// Min-heap of keys into `slab`, ordered by `before` (time, seq).
     heap: Vec<HeapKey>,
     next_seq: u64,
+    /// Deepest the pending-event heap has ever been since the last
+    /// [`Self::reset`] (telemetry counter; one branch per push).
+    high_water: usize,
 }
 
 impl<T> Default for EventQueue<T> {
@@ -60,7 +63,7 @@ impl<T> Default for EventQueue<T> {
 
 impl<T> EventQueue<T> {
     pub fn new() -> Self {
-        EventQueue { slab: Vec::new(), free: Vec::new(), heap: Vec::new(), next_seq: 0 }
+        EventQueue { slab: Vec::new(), free: Vec::new(), heap: Vec::new(), next_seq: 0, high_water: 0 }
     }
 
     pub fn len(&self) -> usize {
@@ -74,6 +77,13 @@ impl<T> EventQueue<T> {
     /// Slab high-water mark (diagnostics: slots allocated, free or live).
     pub fn slab_len(&self) -> usize {
         self.slab.len()
+    }
+
+    /// Queue-depth high-water mark: the most events that were ever pending
+    /// at once since the last [`Self::reset`]. Deterministic (depends only
+    /// on the event stream), surfaced through the telemetry sidecar.
+    pub fn high_water(&self) -> usize {
+        self.high_water
     }
 
     /// Schedule an event; assigns the FIFO sequence number. Panics on a
@@ -97,6 +107,9 @@ impl<T> EventQueue<T> {
             }
         };
         self.heap.push(HeapKey { slot, ..key });
+        if self.heap.len() > self.high_water {
+            self.high_water = self.heap.len();
+        }
         self.sift_up(self.heap.len() - 1);
     }
 
@@ -148,10 +161,13 @@ impl<T> EventQueue<T> {
 
     /// [`Self::clear`] plus a sequence restart: a recycled queue behaves
     /// exactly like a fresh one while keeping its slab/heap allocations
-    /// (sweep workers reuse one queue across consecutive cells).
+    /// (sweep workers reuse one queue across consecutive cells). The
+    /// high-water mark restarts too, so recycled queues report per-cell
+    /// peaks rather than a sweep-wide maximum.
     pub fn reset(&mut self) {
         self.clear();
         self.next_seq = 0;
+        self.high_water = 0;
     }
 
     fn sift_up(&mut self, mut i: usize) {
@@ -366,6 +382,27 @@ mod tests {
             while q.pop().is_some() {}
         }
         assert!(q.slab_len() <= 4, "slab grew past its high-water mark: {}", q.slab_len());
+    }
+
+    /// The depth high-water mark tracks the peak, survives `clear`, and
+    /// restarts on `reset` (per-cell peaks for recycled queues).
+    #[test]
+    fn high_water_tracks_peak_depth_until_reset() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.high_water(), 0);
+        for d in 0..5 {
+            q.push(ev(d as f64, d));
+        }
+        q.pop();
+        q.pop();
+        q.push(ev(9.0, 9));
+        assert_eq!(q.high_water(), 5, "peak was 5 pending events");
+        q.clear();
+        assert_eq!(q.high_water(), 5, "clear keeps the mark");
+        q.reset();
+        assert_eq!(q.high_water(), 0, "reset restarts the mark");
+        q.push(ev(1.0, 0));
+        assert_eq!(q.high_water(), 1);
     }
 
     /// `reset` restarts sequence numbering; `clear` does not.

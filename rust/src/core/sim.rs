@@ -60,6 +60,12 @@ impl<T> Simulation<T> {
         self.queue.len()
     }
 
+    /// Queue-depth high-water mark for this simulation (see
+    /// [`EventQueue::high_water`]); a deterministic telemetry counter.
+    pub fn queue_high_water(&self) -> usize {
+        self.queue.high_water()
+    }
+
     /// Set the hard stop time (paper: `simulation.terminateAt(70)`).
     pub fn terminate_at(&mut self, t: f64) {
         assert!(t.is_finite());
@@ -167,6 +173,7 @@ mod tests {
         assert_eq!((e.data, sim.clock()), (1, 5.0));
         assert!(sim.is_finished());
         assert_eq!(sim.processed_events(), 2);
+        assert_eq!(sim.queue_high_water(), 2, "both events were pending at once");
     }
 
     #[test]

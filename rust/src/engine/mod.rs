@@ -79,6 +79,7 @@ use crate::cloudlet::{allocate_mips_into, Cloudlet, CloudletId, CloudletState};
 use crate::core::{EntityId, EventQueue, SimEvent, Simulation};
 use crate::infra::{DcId, HostId, HostSpec};
 use crate::metrics::{LifecycleKind, Recorder};
+use crate::obs::EngineCounters;
 use crate::vm::{InterruptionBehavior, Vm, VmId, VmState};
 
 pub use broker::Broker;
@@ -113,11 +114,20 @@ pub struct EngineScratch {
     shares: Vec<(CloudletId, f64)>,
     retry: Vec<VmId>,
     cloudlets: Vec<CloudletId>,
+    /// Final counter values of the cell this scratch last ran (telemetry
+    /// harvest; a fresh engine starts from zeroed counters regardless).
+    counters: EngineCounters,
 }
 
 impl EngineScratch {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Engine counters captured by the last [`Engine::into_scratch`] - how
+    /// the sweep driver harvests per-cell counts for the telemetry sidecar.
+    pub fn counters(&self) -> EngineCounters {
+        self.counters
     }
 }
 
@@ -128,6 +138,9 @@ pub struct Engine {
     pub broker: Broker,
     pub recorder: Recorder,
     pub config: EngineConfig,
+    /// Cheap deterministic activity counters (telemetry sidecar only -
+    /// never part of the report artifacts).
+    pub counters: EngineCounters,
     policy: Box<dyn AllocationPolicy>,
     backend: Box<dyn progress::ProgressBackend>,
 
@@ -197,6 +210,7 @@ impl Engine {
             mut shares,
             mut retry,
             mut cloudlets,
+            counters: _,
         } = scratch;
         let recorder = match recorder {
             Some(mut r) => {
@@ -226,6 +240,7 @@ impl Engine {
             broker: Broker::new(),
             recorder,
             config,
+            counters: EngineCounters::default(),
             policy,
             backend: Box::new(progress::BatchedBackend),
             run_list,
@@ -251,8 +266,10 @@ impl Engine {
     }
 
     /// Tear the engine down, handing its reusable buffers back for the
-    /// next [`Engine::with_scratch`].
-    pub fn into_scratch(self) -> EngineScratch {
+    /// next [`Engine::with_scratch`]. The final counter values (including
+    /// the queue-depth high-water mark) ride along for telemetry harvest.
+    pub fn into_scratch(mut self) -> EngineScratch {
+        self.counters.queue_high_water = self.sim.queue_high_water() as u64;
         EngineScratch {
             recorder: Some(self.recorder),
             queue: Some(self.sim.into_queue()),
@@ -267,6 +284,7 @@ impl Engine {
             shares: self.share_scratch,
             retry: self.retry_scratch,
             cloudlets: self.cloudlet_scratch,
+            counters: self.counters,
         }
     }
 
@@ -354,6 +372,7 @@ impl Engine {
                 break;
             }
             let n = batch.len();
+            self.counters.events_popped += n as u64;
             for (i, ev) in batch.drain(..).enumerate() {
                 self.batch_pending = n - 1 - i;
                 self.handle(ev.data);
@@ -386,7 +405,10 @@ impl Engine {
             Tag::ChaosHostCrash(h) => self.on_chaos_host_crash(h),
             Tag::ChaosHostRecover(h) => self.on_chaos_host_recover(h),
             Tag::ChaosStorm(k) => self.on_chaos_storm(k),
-            Tag::ChaosRetryDrain => self.retry_pending(),
+            Tag::ChaosRetryDrain => {
+                self.counters.chaos_events += 1;
+                self.retry_pending();
+            }
             Tag::End => {}
         }
     }
@@ -411,8 +433,10 @@ impl Engine {
             return false; // stale retry event
         }
         self.recorder.alloc_attempts += 1;
+        self.counters.placement_probes += 1;
 
         if let Some(host) = self.policy.select_host(&self.world, v, now) {
+            self.counters.placement_hits += 1;
             self.place(v, host);
             return true;
         }
@@ -433,6 +457,7 @@ impl Engine {
             Some(armed_at) => now >= armed_at + self.preempt_rearm_delay(),
         };
         if is_od && can_arm {
+            self.counters.preemption_scans += 1;
             if let Some((_host, victims)) = self.policy.select_preemption(&self.world, v, now) {
                 for victim in victims {
                     if let Some(w) = self.warn_spot(victim) {
@@ -1073,6 +1098,7 @@ impl Engine {
             self.chaos_crashed.resize(self.world.hosts.len(), false);
         }
         self.chaos_crashed[h] = true;
+        self.counters.chaos_events += 1;
         self.recorder.host_failures += 1;
         self.on_host_remove(h);
     }
@@ -1083,6 +1109,7 @@ impl Engine {
     fn on_chaos_host_recover(&mut self, h: HostId) {
         if self.chaos_crashed.get(h) == Some(&true) {
             self.chaos_crashed[h] = false;
+            self.counters.chaos_events += 1;
             self.on_host_add(h);
         }
     }
@@ -1093,6 +1120,7 @@ impl Engine {
     fn on_chaos_storm(&mut self, k: usize) {
         let now = self.sim.clock();
         let frac = self.chaos_storms[k];
+        self.counters.chaos_events += 1;
         self.recorder.storms += 1;
         let eligible: Vec<VmId> = (0..self.world.vms.len())
             .filter(|&v| self.world.vms[v].interruptible(now))
@@ -1363,6 +1391,33 @@ mod tests {
         assert_eq!(r1.spot.redeployments, r2.spot.redeployments);
         assert_eq!(s1, s2, "sampled series must be identical on recycled scratch");
         assert_eq!(ev1, ev2);
+    }
+
+    /// Engine counters are populated, internally consistent, and exactly
+    /// reproducible (they depend only on the event stream).
+    #[test]
+    fn counters_track_activity_deterministically() {
+        let run = || {
+            let mut e = engine();
+            let cfg = SpotConfig::terminate().with_min_running(0.0).with_warning(1.0);
+            let spot = e.submit_vm(Vm::spot(0, VmSpec::new(1000.0, 8), cfg));
+            e.submit_cloudlet(Cloudlet::new(0, 1_000_000.0, 8).with_vm(spot));
+            let od = e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 8)).with_delay(5.0));
+            e.submit_cloudlet(Cloudlet::new(0, 8_000.0, 8).with_vm(od));
+            e.terminate_at(100.0);
+            e.run();
+            let popped = e.sim.processed_events();
+            (e.into_scratch().counters(), popped)
+        };
+        let (c1, popped) = run();
+        let (c2, _) = run();
+        assert_eq!(c1, c2, "counters must be deterministic");
+        assert_eq!(c1.events_popped, popped, "batch counting must match the kernel");
+        assert!(c1.placement_probes >= c1.placement_hits, "{c1:?}");
+        assert!(c1.placement_hits >= 2, "both VMs were placed: {c1:?}");
+        assert!(c1.preemption_scans >= 1, "the od VM had to preempt: {c1:?}");
+        assert!(c1.queue_high_water >= 2, "{c1:?}");
+        assert_eq!(c1.chaos_events, 0, "chaos-free run");
     }
 
     /// Deterministic: identical seeds/config produce identical reports.

@@ -36,6 +36,7 @@ pub mod engine;
 pub mod experiments;
 pub mod infra;
 pub mod metrics;
+pub mod obs;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod testkit;

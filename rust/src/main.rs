@@ -88,6 +88,10 @@ fn specs() -> Vec<Spec> {
         Spec { name: "spots", takes_value: true, help: "injected spot instances" },
         Spec { name: "max-vms", takes_value: true, help: "cap on trace VMs (scale knob)" },
         Spec { name: "no-profile", takes_value: false, help: "disable the /proc self-profiler" },
+        Spec { name: "telemetry", takes_value: false, help: "sweep: write a JSONL telemetry sidecar to <out-dir>/telemetry/ (never changes the artifacts)" },
+        Spec { name: "self-profile", takes_value: false, help: "sweep: sample this process's CPU/RSS into the telemetry dir (implies --telemetry)" },
+        Spec { name: "verbose", takes_value: false, help: "sweep: print the phase-timing breakdown after the run" },
+        Spec { name: "heartbeat", takes_value: true, help: "sweep worker: JSONL file to append progress heartbeats to" },
         Spec { name: "out-dir", takes_value: true, help: "CSV/JSON output directory (default results/)" },
         Spec { name: "advisor", takes_value: true, help: "real spot-advisor JSON (else synthetic)" },
         Spec { name: "help", takes_value: false, help: "show help" },
@@ -96,7 +100,7 @@ fn specs() -> Vec<Spec> {
 
 fn usage() -> String {
     format!(
-        "usage: cloudmarket <quickstart|compare|sweep|trace|trace-analysis|advisor|tables> [flags]\n       cloudmarket sweep worker --shard <file> --out <file>\n       cloudmarket sweep merge <partial.json>... [--out-dir <dir>]\n{}",
+        "usage: cloudmarket <quickstart|compare|sweep|trace|trace-analysis|advisor|tables> [flags]\n       cloudmarket sweep worker --shard <file> --out <file>\n       cloudmarket sweep merge <partial.json>... [--out-dir <dir>]\n       cloudmarket sweep status <out-dir>\n{}",
         render_help(&specs())
     )
 }
@@ -115,8 +119,10 @@ fn run(argv: &[String]) -> Result<(), String> {
             None => cmd_sweep(&args, &out_dir),
             Some("worker") => cmd_sweep_worker(&args),
             Some("merge") => cmd_sweep_merge(&args, &out_dir),
+            Some("status") => cmd_sweep_status(&args, &out_dir),
             Some(other) => Err(format!(
-                "unknown sweep subcommand '{other}' (expected worker | merge, or flags only)"
+                "unknown sweep subcommand '{other}' (expected worker | merge | status, or \
+                 flags only)"
             )),
         },
         "trace" => cmd_trace(&args, &out_dir),
@@ -247,6 +253,7 @@ fn cmd_compare(args: &Args, out_dir: &std::path::Path) -> Result<(), String> {
 /// pool. One cell per (seed, scenario variant); merged output is
 /// deterministic regardless of `--threads`.
 fn cmd_sweep(args: &Args, out_dir: &std::path::Path) -> Result<(), String> {
+    use cloudmarket::obs::telemetry as tel;
     use cloudmarket::sweep::{self, CellResult, PolicySpec, ScenarioAxis, SeriesFilter, Substrate, SweepSpec};
 
     let seed = args.get_u64("seed", 20_250_710)?;
@@ -341,7 +348,35 @@ fn cmd_sweep(args: &Args, out_dir: &std::path::Path) -> Result<(), String> {
             r.cell.spec.variant_label(),
         );
     }
-    let report = match workers {
+
+    // Observability sidecar (the two-channel rule: everything below goes
+    // to <out-dir>/telemetry/ and never touches the artifact bytes).
+    let telemetry = if args.has("telemetry") || args.has("self-profile") {
+        Some(std::sync::Arc::new(
+            cloudmarket::obs::Telemetry::create(out_dir)
+                .map_err(|e| format!("creating telemetry sidecar: {e}"))?,
+        ))
+    } else {
+        None
+    };
+    let profiler = args
+        .has("self-profile")
+        .then(|| cloudmarket::metrics::selfprof::SelfProfiler::start(
+            std::time::Duration::from_millis(250),
+        ));
+    let run_started = std::time::Instant::now();
+    if let Some(t) = &telemetry {
+        t.emit(tel::run_start(
+            &sweep::shard::spec_digest(&spec),
+            total,
+            n_variants,
+            seeds,
+            if workers.is_some() { "workers" } else { "threads" },
+            workers.unwrap_or(threads),
+        ));
+    }
+
+    let (report, timing) = match workers {
         Some(w) => {
             // Process-level fan-out: shard files + worker subprocesses in
             // out_dir, crashed workers' shards reassigned, merged by cell
@@ -351,17 +386,87 @@ fn cmd_sweep(args: &Args, out_dir: &std::path::Path) -> Result<(), String> {
             let mut opts = sweep::CoordinateOptions::new(w, out_dir, exe);
             opts.worker_threads = args.get_positive_usize("threads", 1)?;
             opts.verbose = true;
+            opts.telemetry = telemetry.clone();
+            if telemetry.is_some() {
+                opts.heartbeat_dir = Some(cloudmarket::obs::telemetry_dir(out_dir));
+            }
             let outcome = sweep::coordinate(&spec, &opts)?;
             eprintln!(
                 "sweep: {} shard(s) done on {} worker process(es) spawned ({} reassigned)",
                 outcome.shards, outcome.workers_spawned, outcome.shards_reassigned
             );
-            outcome.report
+            (outcome.report, None)
         }
-        None => sweep::run_with_progress(&spec, threads, Some(&progress)),
+        None => {
+            let (report, timing) =
+                sweep::run_observed(&spec, threads, Some(&progress), telemetry.as_deref());
+            (report, Some(timing))
+        }
     };
 
+    if args.has("verbose") {
+        if let Some(t) = &timing {
+            eprintln!("{}", phase_table(t).render());
+            eprintln!("sweep: {} lazy prebuild(s) built", t.prebuilds_built);
+        }
+    }
+    if let Some(prof) = profiler {
+        let series = prof.stop();
+        let path = cloudmarket::obs::telemetry_dir(out_dir).join("selfprofile.csv");
+        series.to_csv().write_file(&path).map_err(|e| e.to_string())?;
+        eprintln!(
+            "sweep: self-profile cpu peak {:.0}%  rss peak {:.0} MB ({} samples) -> {}",
+            series.max_of("cpu_pct").unwrap_or(0.0),
+            series.max_of("rss_mb").unwrap_or(0.0),
+            series.len(),
+            path.display()
+        );
+    }
+    if let Some(t) = &telemetry {
+        use std::time::Duration;
+        let ok = report.failed() == 0;
+        t.emit(match timing {
+            Some(ti) => tel::run_end(
+                ok,
+                ti.wall,
+                ti.prebuild_busy,
+                ti.cell_busy,
+                ti.merge,
+                ti.first_cell_done,
+                ti.prebuilds_built,
+            ),
+            // The coordinator path has no in-process phase breakdown;
+            // only end-to-end wall time is meaningful.
+            None => tel::run_end(
+                ok,
+                run_started.elapsed(),
+                Duration::ZERO,
+                Duration::ZERO,
+                Duration::ZERO,
+                Duration::ZERO,
+                0,
+            ),
+        });
+    }
+
     finish_sweep(&report, out_dir)
+}
+
+/// Render a [`SweepTiming`](cloudmarket::sweep::SweepTiming) as the
+/// `--verbose` phase table (also the shape `sweep status` prints from a
+/// run log's `run_end` event).
+fn phase_table(t: &cloudmarket::sweep::SweepTiming) -> cloudmarket::util::table::TextTable {
+    use cloudmarket::util::table::{Align, TextTable};
+    let mut table = TextTable::new("Sweep phase breakdown")
+        .column("phase", Align::Left)
+        .column("ms", Align::Right);
+    let ms = |d: std::time::Duration| format!("{:.1}", d.as_secs_f64() * 1e3);
+    table.push(vec!["wall".into(), ms(t.wall)]);
+    table.push(vec!["prebuild busy (summed)".into(), ms(t.prebuild_busy)]);
+    table.push(vec!["cell busy (summed)".into(), ms(t.cell_busy)]);
+    table.push(vec!["merge".into(), ms(t.merge)]);
+    table.push(vec!["first cell done".into(), ms(t.first_cell_done)]);
+    table
 }
 
 /// Shared epilogue of `sweep`, `sweep --workers` and `sweep merge`:
@@ -488,7 +593,30 @@ fn cmd_sweep_worker(args: &Args) -> Result<(), String> {
         .map(|pid| PathBuf::from(format!("/proc/{pid}")))
         .filter(|probe| probe.exists());
     let watch_parent = parent_probe.is_some();
-    let per_cell = move |done: usize, _total: usize, _r: &sweep::CellResult| {
+    // Sidecar heartbeats: one line at start, one per completed cell, one
+    // at the end. A heartbeat failure never fails the shard.
+    let heartbeat = match args.get("heartbeat") {
+        Some(path) => {
+            let path = PathBuf::from(path);
+            match cloudmarket::obs::HeartbeatWriter::create(&path, job.index, selected.len()) {
+                Ok(writer) => Some(writer),
+                Err(e) => {
+                    eprintln!(
+                        "sweep worker: cannot create heartbeat file {} ({e}); running \
+                         without heartbeats",
+                        path.display()
+                    );
+                    None
+                }
+            }
+        }
+        None => None,
+    };
+    let hb = &heartbeat;
+    let per_cell = move |done: usize, _total: usize, r: &sweep::CellResult| {
+        if let Some(h) = hb {
+            h.beat(done, Some(r.cell.id));
+        }
         if armed && done >= 1 {
             eprintln!("sweep worker: injected fault firing (aborting mid-shard)");
             std::process::abort();
@@ -507,14 +635,20 @@ fn cmd_sweep_worker(args: &Args) -> Result<(), String> {
         job.of,
         selected.len()
     );
+    if let Some(h) = &heartbeat {
+        h.beat(0, None);
+    }
     let results = sweep::run_cells(
         &spec,
         &selected,
         threads,
-        if armed || watch_parent { Some(&per_cell) } else { None },
+        if armed || watch_parent || heartbeat.is_some() { Some(&per_cell) } else { None },
     );
     let failed = results.iter().filter(|r| r.outcome.is_err()).count();
     shard::write_partial(&out_path, &spec, job.index, &results)?;
+    if let Some(h) = &heartbeat {
+        h.beat(results.len(), None);
+    }
     eprintln!(
         "sweep worker: shard {} done ({} cells, {failed} failed) -> {}",
         job.index,
@@ -545,6 +679,186 @@ fn cmd_sweep_merge(args: &Args, out_dir: &std::path::Path) -> Result<(), String>
         .collect::<Result<Vec<_>, _>>()?;
     let (_spec, report) = shard::merge_partials(partials)?;
     finish_sweep(&report, out_dir)
+}
+
+/// `cloudmarket sweep status <out-dir>`: render a live or post-hoc run
+/// summary from the telemetry sidecar - manifest, per-shard heartbeat
+/// progress, slowest cells, phase breakdown and engine-counter totals.
+/// Reads only the sidecar channel; works mid-run (a torn final JSONL line
+/// is tolerated) and validates every complete line against the schema.
+fn cmd_sweep_status(args: &Args, out_dir: &std::path::Path) -> Result<(), String> {
+    use cloudmarket::obs::{self, telemetry as tel, EngineCounters};
+    use cloudmarket::util::json::Json;
+    use cloudmarket::util::table::{Align, TextTable};
+
+    let dir = match args.positional.get(2) {
+        Some(p) => PathBuf::from(p),
+        None => out_dir.to_path_buf(),
+    };
+    let tdir = obs::telemetry_dir(&dir);
+    let log = tdir.join(obs::RUN_LOG);
+    if !log.exists() {
+        return Err(format!(
+            "no telemetry sidecar at {} (run `cloudmarket sweep --telemetry` first)",
+            log.display()
+        ));
+    }
+    let lines = obs::read_jsonl(&log).map_err(|e| e.to_string())?;
+
+    let mut manifest: Option<String> = None;
+    let mut cells_ok = 0usize;
+    let mut cells_failed = 0usize;
+    let mut totals = EngineCounters::default();
+    let mut cell_ms: Vec<(usize, f64)> = Vec::new();
+    let mut prebuilds = 0usize;
+    let mut prebuild_ms = 0.0;
+    let mut assigns = 0usize;
+    let mut reassigns = 0usize;
+    let mut stalls = 0usize;
+    let mut run_end: Option<cloudmarket::sweep::SweepTiming> = None;
+    let mut run_ok: Option<bool> = None;
+    for (i, line) in lines.iter().enumerate() {
+        let event = obs::validate_event(line)
+            .map_err(|e| format!("{} line {}: {e}", log.display(), i + 1))?;
+        let o = line.as_obj().expect("validated events are objects");
+        let num = |key: &str| o.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+        match event {
+            "run_start" => {
+                manifest = Some(format!(
+                    "spec {}  {} cells ({} variants x {} seeds), {} mode, parallelism {}",
+                    o.get("spec_digest").and_then(Json::as_str).unwrap_or("?"),
+                    num("cells"),
+                    num("variants"),
+                    num("seeds"),
+                    o.get("mode").and_then(Json::as_str).unwrap_or("?"),
+                    num("parallelism"),
+                ));
+            }
+            "cell_end" => {
+                if o.get("ok").and_then(Json::as_bool).unwrap_or(false) {
+                    cells_ok += 1;
+                } else {
+                    cells_failed += 1;
+                }
+                if let Some(c) = o.get("counters").and_then(|c| EngineCounters::from_json(c)) {
+                    totals.add(&c);
+                }
+                cell_ms.push((num("cell") as usize, num("ms")));
+            }
+            "prebuild" => {
+                prebuilds += 1;
+                prebuild_ms += num("ms");
+            }
+            "shard_assign" => assigns += 1,
+            "shard_reassign" => reassigns += 1,
+            "stall" => stalls += 1,
+            "run_end" => {
+                let d = |key: &str| std::time::Duration::from_secs_f64(num(key).max(0.0) / 1e3);
+                run_ok = o.get("ok").and_then(Json::as_bool);
+                run_end = Some(cloudmarket::sweep::SweepTiming {
+                    wall: d("wall_ms"),
+                    prebuild_busy: d("prebuild_busy_ms"),
+                    cell_busy: d("cell_busy_ms"),
+                    merge: d("merge_ms"),
+                    first_cell_done: d("first_cell_done_ms"),
+                    prebuilds_built: num("prebuilds_built") as usize,
+                });
+            }
+            _ => {}
+        }
+    }
+
+    println!("sweep status: {} ({} events)", log.display(), lines.len());
+    if let Some(m) = manifest {
+        println!("  {m}");
+    }
+    match run_ok {
+        Some(true) => println!("  run finished: ok"),
+        Some(false) => println!("  run finished: FAILED cells"),
+        None => println!("  run in progress (no run_end event yet)"),
+    }
+    println!(
+        "  cells: {cells_ok} ok, {cells_failed} failed; {prebuilds} prebuild(s) \
+         ({prebuild_ms:.1} ms)"
+    );
+    if assigns > 0 {
+        println!("  shards: {assigns} assigned, {reassigns} reassigned, {stalls} stall warning(s)");
+    }
+
+    // Per-shard last-known progress from the heartbeat files.
+    let mut hb_paths: Vec<PathBuf> = std::fs::read_dir(&tdir)
+        .map(|entries| {
+            entries
+                .flatten()
+                .map(|e| e.path())
+                .filter(|p| {
+                    p.file_name()
+                        .map(|n| {
+                            let n = n.to_string_lossy();
+                            n.starts_with("heartbeat-") && n.ends_with(".jsonl")
+                        })
+                        .unwrap_or(false)
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    hb_paths.sort();
+    if !hb_paths.is_empty() {
+        let mut table = TextTable::new("Shard heartbeats")
+            .column("shard", Align::Right)
+            .column("progress", Align::Right)
+            .column("last cell", Align::Right)
+            .column("rss MB", Align::Right)
+            .column("age s", Align::Right);
+        for path in &hb_paths {
+            if let Some(h) = obs::read_last_heartbeat(path) {
+                let age = tel::now_ms().saturating_sub(h.ts_ms) as f64 / 1e3;
+                table.push(vec![
+                    h.shard.to_string(),
+                    format!("{}/{}", h.done, h.total),
+                    h.cell.map(|c| c.to_string()).unwrap_or_else(|| "-".into()),
+                    h.rss_mb.map(|r| format!("{r:.0}")).unwrap_or_else(|| "-".into()),
+                    format!("{age:.1}"),
+                ]);
+            }
+        }
+        if table.row_count() > 0 {
+            println!("{}", table.render());
+        }
+    }
+
+    // Slowest cells (wall time is sidecar-only data, so this exists only
+    // here, never in the artifacts).
+    if !cell_ms.is_empty() {
+        cell_ms.sort_by(|a, b| b.1.total_cmp(&a.1));
+        let mut table = TextTable::new("Slowest cells")
+            .column("cell", Align::Right)
+            .column("ms", Align::Right);
+        for (cell, ms) in cell_ms.iter().take(5) {
+            table.push(vec![cell.to_string(), format!("{ms:.1}")]);
+        }
+        println!("{}", table.render());
+    }
+
+    if let Some(t) = run_end {
+        println!("{}", phase_table(&t).render());
+    }
+
+    let mut table = TextTable::new("Engine counter totals")
+        .column("counter", Align::Left)
+        .column("total", Align::Right);
+    for (name, value) in [
+        ("events popped", totals.events_popped),
+        ("queue high-water (max)", totals.queue_high_water),
+        ("placement probes", totals.placement_probes),
+        ("placement hits", totals.placement_hits),
+        ("preemption scans", totals.preemption_scans),
+        ("chaos events", totals.chaos_events),
+    ] {
+        table.push(vec![name.into(), value.to_string()]);
+    }
+    println!("{}", table.render());
+    Ok(())
 }
 
 fn cmd_trace(args: &Args, out_dir: &std::path::Path) -> Result<(), String> {
@@ -901,5 +1215,56 @@ mod tests {
         {
             assert!(docs.contains(cmd), "docs/cli.md missing subcommand {cmd}");
         }
+    }
+
+    /// `sweep status` renders a summary from a hand-built sidecar, rejects
+    /// dirs without one, and hard-errors on mid-file schema violations.
+    #[test]
+    fn sweep_status_reads_sidecar_and_rejects_missing() {
+        use cloudmarket::obs::{self, telemetry as tel, EngineCounters, HeartbeatWriter};
+        use std::time::Duration;
+
+        let empty = test_dir("status_missing");
+        let err = run(&argv(&["sweep", "status", empty.to_str().unwrap()])).unwrap_err();
+        assert!(err.contains("no telemetry sidecar"), "{err}");
+
+        let dir = test_dir("status_smoke");
+        let t = obs::Telemetry::create(&dir).unwrap();
+        let c = EngineCounters { events_popped: 10, queue_high_water: 3, ..Default::default() };
+        t.emit(tel::run_start("00bebfa81eefea11", 4, 2, 2, "workers", 2));
+        t.emit(tel::shard_assign(0, 0, 4242));
+        t.emit(tel::cell_start(0, 42, "policy=first-fit"));
+        t.emit(tel::prebuild(0, 12.5));
+        t.emit(tel::cell_end(0, true, 3.5, &c));
+        t.emit(tel::cell_end(1, false, 9.0, &c));
+        t.emit(tel::stall(0, 31_000, None));
+        t.emit(tel::shard_exit(0, true, Some(0), "completed"));
+        t.emit(tel::merge(1, 4, true));
+        t.emit(tel::run_end(
+            false,
+            Duration::from_millis(900),
+            Duration::from_millis(100),
+            Duration::from_millis(700),
+            Duration::from_millis(5),
+            Duration::from_millis(40),
+            1,
+        ));
+        drop(t);
+        let hb_path = obs::heartbeat_file(&obs::telemetry_dir(&dir), 0);
+        HeartbeatWriter::create(&hb_path, 0, 2).unwrap().beat(1, Some(0));
+        run(&argv(&["sweep", "status", dir.to_str().unwrap()]))
+            .expect("status renders a well-formed sidecar");
+
+        // A schema violation on a complete line is a hard, line-numbered
+        // error (only a torn *final* line is tolerated).
+        let log = obs::telemetry_dir(&dir).join(obs::RUN_LOG);
+        let text = std::fs::read_to_string(&log).unwrap();
+        std::fs::write(&log, text.replacen("run_start", "not_an_event", 1)).unwrap();
+        let err = run(&argv(&["sweep", "status", dir.to_str().unwrap()])).unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        assert!(err.contains("unknown event"), "{err}");
+
+        let _ = std::fs::remove_dir_all(&empty);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -19,6 +19,13 @@ struct Snapshot {
     rss_mb: f64,
 }
 
+/// Current resident set size in MB, read from /proc. Public so worker
+/// heartbeats ([`crate::obs::heartbeat`]) can report memory without
+/// spinning up a whole sampler thread.
+pub fn rss_mb_now() -> Option<f64> {
+    read_snapshot().map(|s| s.rss_mb)
+}
+
 fn read_snapshot() -> Option<Snapshot> {
     let stat = std::fs::read_to_string("/proc/self/stat").ok()?;
     // Fields 14 (utime) and 15 (stime), 1-indexed, after the comm field
@@ -31,6 +38,29 @@ fn read_snapshot() -> Option<Snapshot> {
     let rss_pages: u64 = statm.split_whitespace().nth(1)?.parse().ok()?;
     let page_kb = 4; // x86-64/aarch64 default page size
     Some(Snapshot { cpu_ticks: utime + stime, rss_mb: (rss_pages * page_kb) as f64 / 1024.0 })
+}
+
+/// Append one (cpu_pct, rss_mb) sample covering the interval since the
+/// previous snapshot. Zero-length intervals are skipped so the series
+/// never carries duplicate time points.
+fn sample_into(
+    series: &mut TimeSeries,
+    t0: Instant,
+    prev: &mut Option<Snapshot>,
+    prev_t: &mut Instant,
+) {
+    let ticks_per_sec = 100.0; // CLK_TCK on linux
+    let now = Instant::now();
+    if let (Some(p), Some(c)) = (*prev, read_snapshot()) {
+        let dt = now.duration_since(*prev_t).as_secs_f64();
+        if dt > 0.0 {
+            let cpu_pct =
+                100.0 * (c.cpu_ticks.saturating_sub(p.cpu_ticks)) as f64 / ticks_per_sec / dt;
+            series.push(now.duration_since(t0).as_secs_f64(), &[cpu_pct, c.rss_mb]);
+            *prev = Some(c);
+            *prev_t = now;
+        }
+    }
 }
 
 /// Background sampler thread producing a (cpu_pct, rss_mb) time series.
@@ -46,27 +76,27 @@ impl SelfProfiler {
         let stop2 = stop.clone();
         let handle = std::thread::spawn(move || {
             let mut series = TimeSeries::new(&["cpu_pct", "rss_mb"]);
-            let ticks_per_sec = 100.0; // CLK_TCK on linux
             let t0 = Instant::now();
             let mut prev = read_snapshot();
             let mut prev_t = t0;
             while !stop2.load(Ordering::Relaxed) {
-                std::thread::sleep(period);
-                let now = Instant::now();
-                if let (Some(p), Some(c)) = (prev, read_snapshot()) {
-                    let dt = now.duration_since(prev_t).as_secs_f64();
-                    let cpu_pct = if dt > 0.0 {
-                        100.0 * (c.cpu_ticks.saturating_sub(p.cpu_ticks)) as f64
-                            / ticks_per_sec
-                            / dt
-                    } else {
-                        0.0
-                    };
-                    series.push(now.duration_since(t0).as_secs_f64(), &[cpu_pct, c.rss_mb]);
-                    prev = Some(c);
-                    prev_t = now;
+                // Sleep in short slices so a stop request is honored
+                // promptly even with a long sampling period.
+                let mut slept = Duration::ZERO;
+                while slept < period && !stop2.load(Ordering::Relaxed) {
+                    let slice = (period - slept).min(Duration::from_millis(25));
+                    std::thread::sleep(slice);
+                    slept += slice;
                 }
+                if stop2.load(Ordering::Relaxed) {
+                    break;
+                }
+                sample_into(&mut series, t0, &mut prev, &mut prev_t);
             }
+            // The stop request almost always lands mid-sleep; without this
+            // final sample the partial interval since the last tick (the
+            // end of the profiled run) would be dropped entirely.
+            sample_into(&mut series, t0, &mut prev, &mut prev_t);
             series
         });
         SelfProfiler { stop, handle: Some(handle) }
@@ -96,6 +126,23 @@ mod tests {
     fn snapshot_reads_proc() {
         let s = read_snapshot().expect("should read /proc on linux");
         assert!(s.rss_mb > 0.0);
+    }
+
+    #[test]
+    fn rss_reader_is_public_and_sane() {
+        let rss = rss_mb_now().expect("should read /proc on linux");
+        assert!(rss > 0.0 && rss < 1e6, "implausible RSS {rss} MB");
+    }
+
+    #[test]
+    fn stop_captures_final_partial_interval() {
+        // Period far longer than the run: without the final flush sample,
+        // stopping mid-first-interval would return an empty series.
+        let p = SelfProfiler::start(Duration::from_secs(3600));
+        std::thread::sleep(Duration::from_millis(40));
+        let series = p.stop();
+        assert!(series.len() >= 1, "final partial interval must be sampled");
+        assert!(series.max_of("rss_mb").unwrap() > 0.0);
     }
 
     #[test]

@@ -1,0 +1,110 @@
+//! Cheap per-cell engine counters.
+//!
+//! `EngineCounters` rides inside [`crate::engine::EngineScratch`] so the
+//! engine can bump plain `u64`s on its hot paths (one add per event batch,
+//! one per placement probe, ...) without any allocation or synchronization.
+//! The counts are **deterministic** — they depend only on the cell spec and
+//! seed — but they are still emitted exclusively through the telemetry
+//! sidecar, never into `sweep_cells.csv`/aggregates, so the byte-identity
+//! contract of the primary artifacts stays trivially intact.
+
+use crate::util::json::{Json, JsonObj};
+
+/// Per-cell engine activity counters, reset at the start of every cell.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct EngineCounters {
+    /// Events drained from the queue by the main loop.
+    pub events_popped: u64,
+    /// High-water mark of the event-queue depth (pending events).
+    pub queue_high_water: u64,
+    /// Placement probes: calls into `AllocationPolicy::select_host`.
+    pub placement_probes: u64,
+    /// Placement probes that returned a host.
+    pub placement_hits: u64,
+    /// Preemption scans: calls into `AllocationPolicy::select_preemption`.
+    pub preemption_scans: u64,
+    /// Chaos events applied (host crashes/recoveries, storms, outages).
+    pub chaos_events: u64,
+}
+
+impl EngineCounters {
+    /// Zero every counter (start of a cell).
+    pub fn reset(&mut self) {
+        *self = EngineCounters::default();
+    }
+
+    /// Accumulate another cell's counters into a running total.
+    pub fn add(&mut self, other: &EngineCounters) {
+        self.events_popped += other.events_popped;
+        self.queue_high_water = self.queue_high_water.max(other.queue_high_water);
+        self.placement_probes += other.placement_probes;
+        self.placement_hits += other.placement_hits;
+        self.preemption_scans += other.preemption_scans;
+        self.chaos_events += other.chaos_events;
+    }
+
+    /// Serialize for the telemetry sidecar. Counter magnitudes stay far
+    /// below 2^53 in practice, so plain JSON numbers are exact.
+    pub fn to_json(&self) -> JsonObj {
+        let mut o = JsonObj::new();
+        o.set("events_popped", Json::Num(self.events_popped as f64));
+        o.set("queue_high_water", Json::Num(self.queue_high_water as f64));
+        o.set("placement_probes", Json::Num(self.placement_probes as f64));
+        o.set("placement_hits", Json::Num(self.placement_hits as f64));
+        o.set("preemption_scans", Json::Num(self.preemption_scans as f64));
+        o.set("chaos_events", Json::Num(self.chaos_events as f64));
+        o
+    }
+
+    /// Parse the sidecar representation back (used by `sweep status` and
+    /// the schema round-trip tests).
+    pub fn from_json(v: &Json) -> Option<EngineCounters> {
+        let o = v.as_obj()?;
+        let num = |k: &str| o.get(k).and_then(Json::as_f64).map(|n| n as u64);
+        Some(EngineCounters {
+            events_popped: num("events_popped")?,
+            queue_high_water: num("queue_high_water")?,
+            placement_probes: num("placement_probes")?,
+            placement_hits: num("placement_hits")?,
+            preemption_scans: num("preemption_scans")?,
+            chaos_events: num("chaos_events")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let c = EngineCounters {
+            events_popped: 12345,
+            queue_high_water: 99,
+            placement_probes: 400,
+            placement_hits: 398,
+            preemption_scans: 7,
+            chaos_events: 3,
+        };
+        let text = Json::Obj(c.to_json()).to_string_compact();
+        let back = EngineCounters::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn add_sums_counts_and_maxes_high_water() {
+        let mut total = EngineCounters { queue_high_water: 5, events_popped: 10, ..Default::default() };
+        total.add(&EngineCounters { queue_high_water: 3, events_popped: 4, ..Default::default() });
+        assert_eq!(total.events_popped, 14);
+        assert_eq!(total.queue_high_water, 5);
+        total.add(&EngineCounters { queue_high_water: 8, ..Default::default() });
+        assert_eq!(total.queue_high_water, 8);
+    }
+
+    #[test]
+    fn reset_zeroes_everything() {
+        let mut c = EngineCounters { events_popped: 1, chaos_events: 2, ..Default::default() };
+        c.reset();
+        assert_eq!(c, EngineCounters::default());
+    }
+}

@@ -1,0 +1,242 @@
+//! Worker heartbeats and coordinator-side stall detection.
+//!
+//! Each `sweep worker` process appends one JSONL line to its own
+//! `heartbeat-<shard>.jsonl` (sidecar channel) when it starts, after every
+//! completed cell, and when it finishes — so *silence during a cell* is
+//! exactly the signal a stalled worker emits. The coordinator polls the
+//! files with [`StallTracker`]: a worker that is alive but has not beaten
+//! for longer than the threshold gets a one-shot stall warning, and the
+//! last-known progress enriches shard-reassignment events when a worker
+//! dies. Per-shard files (rather than one shared log) keep the protocol
+//! append-only with a single writer, so no cross-process locking is needed.
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::telemetry::{heartbeat_event, read_jsonl, validate_event};
+use crate::metrics::selfprof::rss_mb_now;
+use crate::util::json::Json;
+
+/// Heartbeat file name for one shard (lives in the telemetry dir).
+pub fn heartbeat_file(telemetry_dir: &Path, shard: usize) -> PathBuf {
+    telemetry_dir.join(format!("heartbeat-{shard:04}.jsonl"))
+}
+
+/// One parsed heartbeat line.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Heartbeat {
+    pub shard: usize,
+    /// Cells completed so far in this shard.
+    pub done: usize,
+    /// Cells in this shard.
+    pub total: usize,
+    /// Cell id this beat refers to (the most recently completed cell;
+    /// `None` on the start/end beats).
+    pub cell: Option<usize>,
+    /// Wall-clock ms since the unix epoch when the beat was written.
+    pub ts_ms: u64,
+    /// Worker RSS in MB at beat time (from the /proc self-profiler reader).
+    pub rss_mb: Option<f64>,
+}
+
+impl Heartbeat {
+    fn from_json(v: &Json) -> Option<Heartbeat> {
+        if validate_event(v) != Ok("heartbeat") {
+            return None;
+        }
+        let num = |k: &str| v.path(&[k]).and_then(Json::as_f64);
+        Some(Heartbeat {
+            shard: num("shard")? as usize,
+            done: num("done")? as usize,
+            total: num("total")? as usize,
+            cell: num("cell").map(|c| c as usize),
+            ts_ms: num("ts_ms")? as u64,
+            rss_mb: num("rss_mb"),
+        })
+    }
+}
+
+/// Worker-side heartbeat emitter. Truncates the shard's file on creation
+/// (a respawned worker starts a fresh beat history) and appends one line
+/// per beat; IO errors are swallowed — heartbeats must never fail a shard.
+pub struct HeartbeatWriter {
+    file: Mutex<File>,
+    shard: usize,
+    total: usize,
+}
+
+impl HeartbeatWriter {
+    pub fn create(path: &Path, shard: usize, total: usize) -> std::io::Result<HeartbeatWriter> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        Ok(HeartbeatWriter { file: Mutex::new(File::create(path)?), shard, total })
+    }
+
+    /// Append one beat: progress so far plus current RSS.
+    pub fn beat(&self, done: usize, cell: Option<usize>) {
+        let event = heartbeat_event(self.shard, done, self.total, cell, rss_mb_now());
+        let mut line = Json::Obj(event).to_string_compact();
+        line.push('\n');
+        if let Ok(mut f) = self.file.lock() {
+            let _ = f.write_all(line.as_bytes());
+        }
+    }
+}
+
+/// Read the most recent well-formed heartbeat from a shard's file.
+/// `None` if the file does not exist yet or holds no valid beat.
+pub fn read_last_heartbeat(path: &Path) -> Option<Heartbeat> {
+    let lines = read_jsonl(path).ok()?;
+    lines.iter().rev().find_map(Heartbeat::from_json)
+}
+
+/// A one-shot warning that a live worker has gone silent.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StallWarning {
+    pub shard: usize,
+    /// How long the worker has been silent.
+    pub silent: Duration,
+    /// Last-known progress, if any beat was ever observed.
+    pub last: Option<Heartbeat>,
+}
+
+struct ShardWatch {
+    last: Option<Heartbeat>,
+    /// Coordinator-side instant when progress was last observed to change
+    /// (worker and coordinator clocks are never compared).
+    last_change: Instant,
+    warned: bool,
+}
+
+/// Coordinator-side staleness detector over per-shard heartbeats.
+///
+/// Feed it every poll via [`StallTracker::observe`]; it fires a
+/// [`StallWarning`] once per silence episode (re-arming as soon as the
+/// worker beats again) and remembers each shard's last-known progress for
+/// reassignment enrichment. Staleness is judged purely by coordinator-side
+/// [`Instant`]s between observations, so worker clock skew cannot cause
+/// false stalls.
+pub struct StallTracker {
+    threshold: Duration,
+    state: HashMap<usize, ShardWatch>,
+}
+
+impl StallTracker {
+    pub fn new(threshold: Duration) -> StallTracker {
+        StallTracker { threshold, state: HashMap::new() }
+    }
+
+    /// Start (or restart, on worker respawn) watching a shard.
+    pub fn watch(&mut self, shard: usize, now: Instant) {
+        self.state.insert(shard, ShardWatch { last: None, last_change: now, warned: false });
+    }
+
+    /// Stop watching a shard (its worker exited).
+    pub fn unwatch(&mut self, shard: usize) {
+        self.state.remove(&shard);
+    }
+
+    /// Report the latest heartbeat (or lack of one) for a watched shard.
+    /// Returns a warning the first poll after the shard crosses the
+    /// silence threshold; beats re-arm the warning.
+    pub fn observe(
+        &mut self,
+        shard: usize,
+        beat: Option<Heartbeat>,
+        now: Instant,
+    ) -> Option<StallWarning> {
+        let watch = self
+            .state
+            .entry(shard)
+            .or_insert(ShardWatch { last: None, last_change: now, warned: false });
+        if beat.is_some() && beat != watch.last {
+            watch.last = beat;
+            watch.last_change = now;
+            watch.warned = false;
+            return None;
+        }
+        let silent = now.duration_since(watch.last_change);
+        if silent >= self.threshold && !watch.warned {
+            watch.warned = true;
+            return Some(StallWarning { shard, silent, last: watch.last });
+        }
+        None
+    }
+
+    /// Last-known progress for a shard, surviving `unwatch` only until the
+    /// next `watch` (a respawn starts a fresh history).
+    pub fn last_progress(&self, shard: usize) -> Option<Heartbeat> {
+        self.state.get(&shard).and_then(|w| w.last)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn beat(done: usize, ts_ms: u64) -> Heartbeat {
+        Heartbeat { shard: 0, done, total: 8, cell: Some(done), ts_ms, rss_mb: Some(10.0) }
+    }
+
+    #[test]
+    fn writer_emits_readable_beats() {
+        let dir = std::env::temp_dir().join(format!("cloudmarket_hb_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = heartbeat_file(&dir, 3);
+        let w = HeartbeatWriter::create(&path, 3, 8).unwrap();
+        w.beat(0, None);
+        w.beat(1, Some(5));
+        let last = read_last_heartbeat(&path).expect("beats readable");
+        assert_eq!((last.shard, last.done, last.total, last.cell), (3, 1, 8, Some(5)));
+        assert!(last.rss_mb.unwrap_or(0.0) > 0.0, "RSS should come from /proc");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stall_fires_once_then_rearms_on_progress() {
+        let t0 = Instant::now();
+        let mut tracker = StallTracker::new(Duration::from_secs(30));
+        tracker.watch(0, t0);
+        assert!(tracker.observe(0, Some(beat(1, 100)), t0 + Duration::from_secs(1)).is_none());
+        // Same beat repeated: silence accumulates from the last change.
+        assert!(tracker.observe(0, Some(beat(1, 100)), t0 + Duration::from_secs(20)).is_none());
+        let warn = tracker
+            .observe(0, Some(beat(1, 100)), t0 + Duration::from_secs(40))
+            .expect("crosses threshold");
+        assert_eq!(warn.shard, 0);
+        assert!(warn.silent >= Duration::from_secs(30));
+        assert_eq!(warn.last.unwrap().done, 1);
+        // Fires once per episode.
+        assert!(tracker.observe(0, Some(beat(1, 100)), t0 + Duration::from_secs(60)).is_none());
+        // Progress re-arms; a later silence warns again.
+        assert!(tracker.observe(0, Some(beat(2, 200)), t0 + Duration::from_secs(61)).is_none());
+        assert!(tracker.observe(0, Some(beat(2, 200)), t0 + Duration::from_secs(100)).is_some());
+    }
+
+    #[test]
+    fn stall_warns_for_workers_that_never_beat() {
+        let t0 = Instant::now();
+        let mut tracker = StallTracker::new(Duration::from_secs(30));
+        tracker.watch(1, t0);
+        assert!(tracker.observe(1, None, t0 + Duration::from_secs(10)).is_none());
+        let warn = tracker.observe(1, None, t0 + Duration::from_secs(31)).expect("silent from birth");
+        assert!(warn.last.is_none());
+        assert_eq!(tracker.last_progress(1), None);
+    }
+
+    #[test]
+    fn respawn_resets_history() {
+        let t0 = Instant::now();
+        let mut tracker = StallTracker::new(Duration::from_secs(30));
+        tracker.watch(0, t0);
+        tracker.observe(0, Some(beat(3, 100)), t0 + Duration::from_secs(1));
+        assert_eq!(tracker.last_progress(0).unwrap().done, 3);
+        tracker.watch(0, t0 + Duration::from_secs(2));
+        assert_eq!(tracker.last_progress(0), None, "respawn starts fresh");
+    }
+}

@@ -1,0 +1,37 @@
+//! Deterministic-safe observability: the telemetry sidecar.
+//!
+//! The paper's §IV-B treats "simulation output and monitoring" as a
+//! first-class contribution (execution history, interruption counts, the
+//! simulator's own CPU/RAM in Figs. 10-11). This module is that substrate
+//! for the sweep/shard stack, built around a hard **two-channel rule**:
+//!
+//! 1. The primary artifacts (`sweep_cells.csv`, aggregates, partials,
+//!    retained series) stay byte-identical with telemetry on or off, at
+//!    any `--threads`/`--workers` count.
+//! 2. Everything wall-clock or host-specific — run logs, phase timings,
+//!    worker heartbeats, RSS — goes to `<out-dir>/telemetry/` and only
+//!    there.
+//!
+//! Submodules:
+//!
+//! - [`counters`] — [`EngineCounters`]: cheap deterministic per-cell
+//!   engine counters threaded through `EngineScratch`.
+//! - [`telemetry`] — [`Telemetry`]: the versioned JSONL run-log sink plus
+//!   the event builders and [`validate_event`] schema checker.
+//! - [`heartbeat`] — [`HeartbeatWriter`]/[`StallTracker`]: per-shard
+//!   worker liveness files and coordinator-side stall detection.
+//!
+//! `cloudmarket sweep status <out-dir>` renders a human summary from
+//! these files; see `docs/observability.md` for the schema.
+
+pub mod counters;
+pub mod heartbeat;
+pub mod telemetry;
+
+pub use counters::EngineCounters;
+pub use heartbeat::{
+    heartbeat_file, read_last_heartbeat, Heartbeat, HeartbeatWriter, StallTracker, StallWarning,
+};
+pub use telemetry::{
+    read_jsonl, telemetry_dir, validate_event, Telemetry, RUN_LOG, SCHEMA_VERSION, TELEMETRY_DIR,
+};

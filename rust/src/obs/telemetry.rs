@@ -1,0 +1,439 @@
+//! The telemetry sidecar: versioned JSONL run logs.
+//!
+//! # The two-channel rule
+//!
+//! The repo's core invariant is that the primary sweep artifacts
+//! (`sweep_cells.csv`, aggregates, partials, retained series) are
+//! **byte-identical** at any `--threads`/`--workers` count. Telemetry must
+//! never weaken that, so observability is split into two channels:
+//!
+//! - **Primary channel** — the existing artifacts. Deterministic only; no
+//!   wall-clock, host, pid, or scheduling data may ever reach them.
+//! - **Sidecar channel** — `<out-dir>/telemetry/`: `run.jsonl` (one event
+//!   per line, written by this module), per-shard `heartbeat-*.jsonl`
+//!   files, and the optional self-profile series. Everything wall-clock or
+//!   host-specific lives here and **only** here.
+//!
+//! Every sidecar line is a JSON object carrying the schema version (`"v"`),
+//! an event name (`"event"`) and a wall-clock timestamp (`"ts_ms"`, ms
+//! since the unix epoch). [`validate_event`] is the single source of truth
+//! for the per-event required fields; the schema is documented for humans
+//! in `docs/observability.md`.
+
+use std::fs::{self, File};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
+
+use super::counters::EngineCounters;
+use super::heartbeat::Heartbeat;
+use crate::util::json::{parse, Json, JsonObj};
+
+/// Version stamped into every sidecar line; bump on any breaking change to
+/// an event's fields.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Sidecar directory name under the sweep `--out-dir`.
+pub const TELEMETRY_DIR: &str = "telemetry";
+
+/// Run-log file name inside the sidecar directory.
+pub const RUN_LOG: &str = "run.jsonl";
+
+/// `<out_dir>/telemetry` — the sidecar channel for a sweep output dir.
+pub fn telemetry_dir(out_dir: &Path) -> PathBuf {
+    out_dir.join(TELEMETRY_DIR)
+}
+
+/// Wall-clock milliseconds since the unix epoch (sidecar-only data).
+pub fn now_ms() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_millis() as u64).unwrap_or(0)
+}
+
+/// Append-only JSONL event sink. `Sync`: sweep worker threads share one
+/// sink and each event is a single `write_all`, so concurrent lines never
+/// interleave mid-byte.
+pub struct Telemetry {
+    file: Mutex<File>,
+}
+
+impl std::fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Telemetry").finish_non_exhaustive()
+    }
+}
+
+impl Telemetry {
+    /// Create `<out_dir>/telemetry/run.jsonl`, truncating a previous run's
+    /// log (the sidecar describes *this* run only).
+    pub fn create(out_dir: &Path) -> std::io::Result<Telemetry> {
+        let dir = telemetry_dir(out_dir);
+        fs::create_dir_all(&dir)?;
+        let file = File::create(dir.join(RUN_LOG))?;
+        Ok(Telemetry { file: Mutex::new(file) })
+    }
+
+    /// Append one event line. IO errors are swallowed: telemetry must never
+    /// fail a run that would otherwise succeed.
+    pub fn emit(&self, event: JsonObj) {
+        let mut line = Json::Obj(event).to_string_compact();
+        line.push('\n');
+        if let Ok(mut f) = self.file.lock() {
+            let _ = f.write_all(line.as_bytes());
+        }
+    }
+}
+
+fn base(event: &str) -> JsonObj {
+    let mut o = JsonObj::new();
+    o.set("v", Json::Num(SCHEMA_VERSION as f64));
+    o.set("event", Json::Str(event.to_string()));
+    o.set("ts_ms", Json::Num(now_ms() as f64));
+    o
+}
+
+fn num(n: f64) -> Json {
+    Json::Num(n)
+}
+
+fn opt_num(n: Option<f64>) -> Json {
+    n.map(Json::Num).unwrap_or(Json::Null)
+}
+
+/// Run manifest, first line of every run log. The spec digest is the
+/// same hex string the shard wire format embeds
+/// ([`crate::sweep::shard::spec_digest`]), so sidecar and artifacts can
+/// be cross-checked.
+pub fn run_start(
+    spec_digest: &str,
+    cells: usize,
+    variants: usize,
+    seeds: usize,
+    mode: &str,
+    parallelism: usize,
+) -> JsonObj {
+    let mut o = base("run_start");
+    o.set("spec_digest", Json::Str(spec_digest.to_string()));
+    o.set("cells", num(cells as f64));
+    o.set("variants", num(variants as f64));
+    o.set("seeds", num(seeds as f64));
+    o.set("mode", Json::Str(mode.to_string()));
+    o.set("parallelism", num(parallelism as f64));
+    o
+}
+
+/// A worker thread picked up a cell.
+pub fn cell_start(cell: usize, seed: u64, variant: &str) -> JsonObj {
+    let mut o = base("cell_start");
+    o.set("cell", num(cell as f64));
+    o.set("seed", Json::Str(seed.to_string()));
+    o.set("variant", Json::Str(variant.to_string()));
+    o
+}
+
+/// A cell finished (ok or failed/panicked) with its wall time and the
+/// deterministic engine counters it accumulated.
+pub fn cell_end(cell: usize, ok: bool, ms: f64, counters: &EngineCounters) -> JsonObj {
+    let mut o = base("cell_end");
+    o.set("cell", num(cell as f64));
+    o.set("ok", Json::Bool(ok));
+    o.set("ms", num(ms));
+    o.set("counters", Json::Obj(counters.to_json()));
+    o
+}
+
+/// A lazy prebuild slot was actually built; `cell` is the id of the cell
+/// whose claim triggered the build.
+pub fn prebuild(cell: usize, ms: f64) -> JsonObj {
+    let mut o = base("prebuild");
+    o.set("cell", num(cell as f64));
+    o.set("ms", num(ms));
+    o
+}
+
+/// Coordinator handed a shard to a freshly spawned worker process.
+pub fn shard_assign(shard: usize, attempt: usize, pid: u32) -> JsonObj {
+    let mut o = base("shard_assign");
+    o.set("shard", num(shard as f64));
+    o.set("attempt", num(attempt as f64));
+    o.set("pid", num(pid as f64));
+    o
+}
+
+/// A worker process exited; `detail` carries the exit taxonomy
+/// (`completed`, `runtime`, `parent-gone`, `bad-shard`, `signal`, ...).
+pub fn shard_exit(shard: usize, ok: bool, code: Option<i32>, detail: &str) -> JsonObj {
+    let mut o = base("shard_exit");
+    o.set("shard", num(shard as f64));
+    o.set("ok", Json::Bool(ok));
+    o.set("code", opt_num(code.map(|c| c as f64)));
+    o.set("detail", Json::Str(detail.to_string()));
+    o
+}
+
+/// A failed shard goes back on the queue, enriched with the crashed
+/// worker's last-known heartbeat progress.
+pub fn shard_reassign(shard: usize, attempt: usize, last: Option<&Heartbeat>) -> JsonObj {
+    let mut o = base("shard_reassign");
+    o.set("shard", num(shard as f64));
+    o.set("attempt", num(attempt as f64));
+    o.set("last_done", opt_num(last.map(|h| h.done as f64)));
+    o.set("last_total", opt_num(last.map(|h| h.total as f64)));
+    o
+}
+
+/// A live worker has gone silent past the stall threshold.
+pub fn stall(shard: usize, silent_ms: u64, last: Option<&Heartbeat>) -> JsonObj {
+    let mut o = base("stall");
+    o.set("shard", num(shard as f64));
+    o.set("silent_ms", num(silent_ms as f64));
+    o.set("last_done", opt_num(last.map(|h| h.done as f64)));
+    o.set("last_total", opt_num(last.map(|h| h.total as f64)));
+    o
+}
+
+/// Partial-merge validation outcome.
+pub fn merge(shards: usize, cells: usize, ok: bool) -> JsonObj {
+    let mut o = base("merge");
+    o.set("shards", num(shards as f64));
+    o.set("cells", num(cells as f64));
+    o.set("ok", Json::Bool(ok));
+    o
+}
+
+/// Final line of a run log: the `SweepTiming` phase breakdown.
+#[allow(clippy::too_many_arguments)]
+pub fn run_end(
+    ok: bool,
+    wall: Duration,
+    prebuild_busy: Duration,
+    cell_busy: Duration,
+    merge: Duration,
+    first_cell_done: Duration,
+    prebuilds_built: usize,
+) -> JsonObj {
+    let ms = |d: Duration| num(d.as_secs_f64() * 1e3);
+    let mut o = base("run_end");
+    o.set("ok", Json::Bool(ok));
+    o.set("wall_ms", ms(wall));
+    o.set("prebuild_busy_ms", ms(prebuild_busy));
+    o.set("cell_busy_ms", ms(cell_busy));
+    o.set("merge_ms", ms(merge));
+    o.set("first_cell_done_ms", ms(first_cell_done));
+    o.set("prebuilds_built", num(prebuilds_built as f64));
+    o
+}
+
+/// One worker heartbeat line (lives in `heartbeat-<shard>.jsonl`, same
+/// schema family as the run log).
+pub fn heartbeat_event(
+    shard: usize,
+    done: usize,
+    total: usize,
+    cell: Option<usize>,
+    rss_mb: Option<f64>,
+) -> JsonObj {
+    let mut o = base("heartbeat");
+    o.set("shard", num(shard as f64));
+    o.set("done", num(done as f64));
+    o.set("total", num(total as f64));
+    o.set("cell", opt_num(cell.map(|c| c as f64)));
+    o.set("rss_mb", opt_num(rss_mb));
+    o
+}
+
+enum Kind {
+    Num,
+    Str,
+    Bool,
+    NumOrNull,
+    Counters,
+}
+
+fn check_field(o: &JsonObj, name: &str, kind: &Kind) -> Result<(), String> {
+    let v = o.get(name).ok_or_else(|| format!("missing field '{name}'"))?;
+    let ok = match kind {
+        Kind::Num => matches!(v, Json::Num(_)),
+        Kind::Str => matches!(v, Json::Str(_)),
+        Kind::Bool => matches!(v, Json::Bool(_)),
+        Kind::NumOrNull => matches!(v, Json::Num(_) | Json::Null),
+        Kind::Counters => EngineCounters::from_json(v).is_some(),
+    };
+    if ok {
+        Ok(())
+    } else {
+        Err(format!("field '{name}' has the wrong type"))
+    }
+}
+
+/// Validate one sidecar line against the versioned schema; returns the
+/// event name. This is the machine-checkable definition of the schema that
+/// `docs/observability.md` documents, used by the round-trip tests, the CI
+/// smoke, and `sweep status`.
+pub fn validate_event(v: &Json) -> Result<&str, String> {
+    use Kind::*;
+    let o = v.as_obj().ok_or_else(|| "event is not a JSON object".to_string())?;
+    let ver = o
+        .get("v")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| "missing numeric 'v'".to_string())? as u64;
+    if ver != SCHEMA_VERSION {
+        return Err(format!("unsupported schema version {ver} (expected {SCHEMA_VERSION})"));
+    }
+    let event = o
+        .get("event")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "missing string 'event'".to_string())?;
+    check_field(o, "ts_ms", &Num)?;
+    let required: &[(&str, Kind)] = match event {
+        "run_start" => &[
+            ("spec_digest", Str),
+            ("cells", Num),
+            ("variants", Num),
+            ("seeds", Num),
+            ("mode", Str),
+            ("parallelism", Num),
+        ],
+        "cell_start" => &[("cell", Num), ("seed", Str), ("variant", Str)],
+        "cell_end" => &[("cell", Num), ("ok", Bool), ("ms", Num), ("counters", Counters)],
+        "prebuild" => &[("cell", Num), ("ms", Num)],
+        "shard_assign" => &[("shard", Num), ("attempt", Num), ("pid", Num)],
+        "shard_exit" => &[("shard", Num), ("ok", Bool), ("code", NumOrNull), ("detail", Str)],
+        "shard_reassign" => {
+            &[("shard", Num), ("attempt", Num), ("last_done", NumOrNull), ("last_total", NumOrNull)]
+        }
+        "stall" => {
+            &[("shard", Num), ("silent_ms", Num), ("last_done", NumOrNull), ("last_total", NumOrNull)]
+        }
+        "merge" => &[("shards", Num), ("cells", Num), ("ok", Bool)],
+        "run_end" => &[
+            ("ok", Bool),
+            ("wall_ms", Num),
+            ("prebuild_busy_ms", Num),
+            ("cell_busy_ms", Num),
+            ("merge_ms", Num),
+            ("first_cell_done_ms", Num),
+            ("prebuilds_built", Num),
+        ],
+        "heartbeat" => &[
+            ("shard", Num),
+            ("done", Num),
+            ("total", Num),
+            ("cell", NumOrNull),
+            ("rss_mb", NumOrNull),
+        ],
+        other => return Err(format!("unknown event '{other}'")),
+    };
+    for (name, kind) in required {
+        check_field(o, name, kind)?;
+    }
+    Ok(event)
+}
+
+/// Read a JSONL sidecar file. A torn **final** line (a live writer caught
+/// mid-append) is tolerated and skipped; a malformed earlier line is
+/// corruption and errors loudly.
+pub fn read_jsonl(path: &Path) -> std::io::Result<Vec<Json>> {
+    let text = fs::read_to_string(path)?;
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    let mut out = Vec::with_capacity(lines.len());
+    for (i, line) in lines.iter().enumerate() {
+        match parse(line) {
+            Ok(v) => out.push(v),
+            Err(_) if i + 1 == lines.len() => {}
+            Err(e) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("{} line {}: {e}", path.display(), i + 1),
+                ))
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("cloudmarket_tel_{}_{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn every_builder_validates() {
+        let hb = Heartbeat { shard: 1, done: 3, total: 8, cell: Some(5), ts_ms: 1, rss_mb: Some(12.5) };
+        let c = EngineCounters { events_popped: 10, ..Default::default() };
+        let events = vec![
+            run_start("00bebfa81eefea11", 48, 6, 8, "workers", 2),
+            cell_start(7, 20250710, "policy=first-fit"),
+            cell_end(7, true, 12.25, &c),
+            prebuild(1, 80.5),
+            shard_assign(0, 1, 4242),
+            shard_exit(0, false, Some(2), "runtime"),
+            shard_reassign(0, 2, Some(&hb)),
+            stall(1, 30_000, None),
+            merge(2, 48, true),
+            run_end(
+                true,
+                Duration::from_millis(900),
+                Duration::from_millis(100),
+                Duration::from_millis(700),
+                Duration::from_millis(5),
+                Duration::from_millis(40),
+                3,
+            ),
+            heartbeat_event(1, 3, 8, Some(5), Some(12.5)),
+        ];
+        for e in events {
+            let text = Json::Obj(e).to_string_compact();
+            let v = parse(&text).unwrap();
+            validate_event(&v).unwrap_or_else(|err| panic!("{err}: {text}"));
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_events() {
+        for (line, why) in [
+            (r#"{"event":"merge","ts_ms":1}"#, "missing version"),
+            (r#"{"v":99,"event":"merge","ts_ms":1,"shards":1,"cells":1,"ok":true}"#, "bad version"),
+            (r#"{"v":1,"event":"nope","ts_ms":1}"#, "unknown event"),
+            (r#"{"v":1,"event":"merge","ts_ms":1,"shards":1,"cells":1}"#, "missing field"),
+            (r#"{"v":1,"event":"merge","ts_ms":1,"shards":"x","cells":1,"ok":true}"#, "wrong type"),
+            (r#"{"v":1,"event":"cell_end","ts_ms":1,"cell":0,"ok":true,"ms":1,"counters":{}}"#, "bad counters"),
+            (r#"[1,2]"#, "not an object"),
+        ] {
+            let v = parse(line).unwrap();
+            assert!(validate_event(&v).is_err(), "should reject ({why}): {line}");
+        }
+    }
+
+    #[test]
+    fn sink_writes_one_valid_line_per_event() {
+        let dir = test_dir("sink");
+        let t = Telemetry::create(&dir).unwrap();
+        t.emit(merge(2, 48, true));
+        t.emit(shard_exit(1, true, Some(0), "completed"));
+        drop(t);
+        let lines = read_jsonl(&telemetry_dir(&dir).join(RUN_LOG)).unwrap();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(validate_event(&lines[0]).unwrap(), "merge");
+        assert_eq!(validate_event(&lines[1]).unwrap(), "shard_exit");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_jsonl_tolerates_torn_tail_only() {
+        let dir = test_dir("torn");
+        let p = dir.join("x.jsonl");
+        fs::write(&p, "{\"a\":1}\n{\"b\":2}\n{\"tor").unwrap();
+        let lines = read_jsonl(&p).unwrap();
+        assert_eq!(lines.len(), 2);
+        fs::write(&p, "{\"a\":1}\n{\"tor\n{\"b\":2}\n").unwrap();
+        assert!(read_jsonl(&p).is_err(), "mid-file corruption must error");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -50,6 +50,7 @@ use std::time::{Duration, Instant};
 
 use crate::chaos::ChaosSchedule;
 use crate::engine::{Engine, EngineScratch};
+use crate::obs::{telemetry as tel, EngineCounters, Telemetry};
 use crate::trace::workload::{self, trace_engine_config};
 
 use super::grid::{Cell, Substrate, SweepSpec};
@@ -93,7 +94,7 @@ pub struct SweepTiming {
 
 /// Run the sweep on `threads` workers (clamped to `1..=cells`).
 pub fn run(spec: &SweepSpec, threads: usize) -> SweepReport {
-    run_instrumented(spec, threads, None).0
+    run_instrumented(spec, threads, None, None).0
 }
 
 /// [`run`], reporting each finished cell to `on_cell`.
@@ -102,12 +103,25 @@ pub fn run_with_progress(
     threads: usize,
     on_cell: Option<ProgressFn<'_>>,
 ) -> SweepReport {
-    run_instrumented(spec, threads, on_cell).0
+    run_instrumented(spec, threads, on_cell, None).0
 }
 
 /// [`run`], also returning the phase-timing breakdown (bench support).
 pub fn run_with_timing(spec: &SweepSpec, threads: usize) -> (SweepReport, SweepTiming) {
-    run_instrumented(spec, threads, None)
+    run_instrumented(spec, threads, None, None)
+}
+
+/// [`run_with_progress`] + [`run_with_timing`], additionally streaming
+/// per-cell spans, prebuild events and engine counters to the telemetry
+/// sidecar. The report is byte-identical to the unobserved entry points -
+/// telemetry is written on the side, never threaded into results.
+pub fn run_observed(
+    spec: &SweepSpec,
+    threads: usize,
+    on_cell: Option<ProgressFn<'_>>,
+    telemetry: Option<&Telemetry>,
+) -> (SweepReport, SweepTiming) {
+    run_instrumented(spec, threads, on_cell, telemetry)
 }
 
 /// Run exactly `cells` (a subset of `spec`'s enumeration, e.g. one
@@ -121,17 +135,29 @@ pub fn run_cells(
     threads: usize,
     on_cell: Option<ProgressFn<'_>>,
 ) -> Vec<CellResult> {
-    run_cells_instrumented(spec, cells, threads, on_cell).0
+    run_cells_instrumented(spec, cells, threads, on_cell, None).0
+}
+
+/// [`run_cells`] with a telemetry sidecar (see [`run_observed`]).
+pub fn run_cells_observed(
+    spec: &SweepSpec,
+    cells: &[Cell],
+    threads: usize,
+    on_cell: Option<ProgressFn<'_>>,
+    telemetry: Option<&Telemetry>,
+) -> (Vec<CellResult>, SweepTiming) {
+    run_cells_instrumented(spec, cells, threads, on_cell, telemetry)
 }
 
 fn run_instrumented(
     spec: &SweepSpec,
     threads: usize,
     on_cell: Option<ProgressFn<'_>>,
+    telemetry: Option<&Telemetry>,
 ) -> (SweepReport, SweepTiming) {
     let cells = spec.cells();
     let threads = threads.max(1).min(cells.len().max(1));
-    let (results, timing) = run_cells_instrumented(spec, &cells, threads, on_cell);
+    let (results, timing) = run_cells_instrumented(spec, &cells, threads, on_cell, telemetry);
     (SweepReport { cells: results, threads }, timing)
 }
 
@@ -140,6 +166,7 @@ fn run_cells_instrumented(
     cells: &[Cell],
     threads: usize,
     on_cell: Option<ProgressFn<'_>>,
+    telemetry: Option<&Telemetry>,
 ) -> (Vec<CellResult>, SweepTiming) {
     let start = Instant::now();
     let total = cells.len();
@@ -183,11 +210,24 @@ fn run_cells_instrumented(
                         if i >= total {
                             break;
                         }
+                        if let Some(t) = telemetry {
+                            t.emit(tel::cell_start(
+                                cells[i].id,
+                                cells[i].seed,
+                                &cells[i].spec.variant_label(),
+                            ));
+                        }
                         let prebuilt = slots.get_with(spec, i, &cells[i], |took| {
                             prebuild_ns
                                 .fetch_add(took.as_nanos() as u64, Ordering::Relaxed);
+                            if let Some(t) = telemetry {
+                                t.emit(tel::prebuild(
+                                    cells[i].id,
+                                    took.as_secs_f64() * 1e3,
+                                ));
+                            }
                         });
-                        let result = match prebuilt {
+                        let (result, counters, cell_ms) = match prebuilt {
                             Ok(prebuilt) => {
                                 let chaos = chaos_slots
                                     .get(spec, i, &cells[i], prebuilt)
@@ -196,18 +236,31 @@ fn run_cells_instrumented(
                                 let (result, returned) =
                                     run_cell(spec, &cells[i], prebuilt, chaos, scratch);
                                 scratch = returned;
+                                let elapsed = t0.elapsed();
                                 cell_ns.fetch_add(
-                                    t0.elapsed().as_nanos() as u64,
+                                    elapsed.as_nanos() as u64,
                                     Ordering::Relaxed,
                                 );
-                                result
+                                (result, scratch.counters(), elapsed.as_secs_f64() * 1e3)
                             }
-                            Err(e) => CellResult {
-                                cell: cells[i],
-                                outcome: Err(e.clone()),
-                                series: None,
-                            },
+                            Err(e) => (
+                                CellResult {
+                                    cell: cells[i],
+                                    outcome: Err(e.clone()),
+                                    series: None,
+                                },
+                                EngineCounters::default(),
+                                0.0,
+                            ),
                         };
+                        if let Some(t) = telemetry {
+                            t.emit(tel::cell_end(
+                                cells[i].id,
+                                result.outcome.is_ok(),
+                                cell_ms,
+                                &counters,
+                            ));
+                        }
                         first_done_ns
                             .fetch_min(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
                         let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
@@ -451,6 +504,55 @@ mod tests {
             );
         }
         assert!(full.resilience.storm_reclaims >= quarter.resilience.storm_reclaims);
+    }
+
+    /// `run_observed` streams a validating event stream to the sidecar
+    /// (one cell_start + cell_end per cell, one prebuild per distinct
+    /// (substrate, seed) pair) and its report bit-matches the unobserved
+    /// run: telemetry is a pure side channel.
+    #[test]
+    fn run_observed_emits_valid_spans_without_touching_results() {
+        let dir = std::env::temp_dir()
+            .join(format!("cloudmarket_drv_obs_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let scenario = ComparisonConfig { terminate_at: 300.0, ..Default::default() };
+        let spec = SweepSpec::new(scenario)
+            .with_seeds(vec![20_250_710, 20_250_711])
+            .with_policies(vec![PolicySpec::FirstFit, PolicySpec::BestFit]);
+        let telemetry = Telemetry::create(&dir).unwrap();
+        let (observed, _) = run_observed(&spec, 2, None, Some(&telemetry));
+        drop(telemetry);
+        let plain = run(&spec, 2);
+        for (a, b) in observed.cells.iter().zip(&plain.cells) {
+            let (a, b) = (a.report().unwrap(), b.report().unwrap());
+            assert_eq!(a.events_processed, b.events_processed);
+            assert_eq!(a.clock_end.to_bits(), b.clock_end.to_bits());
+        }
+        let log = crate::obs::telemetry_dir(&dir).join(tel::RUN_LOG);
+        let lines = crate::obs::read_jsonl(&log).unwrap();
+        let mut starts = 0;
+        let mut ends = 0;
+        let mut prebuilds = 0;
+        for line in &lines {
+            match crate::obs::validate_event(line).expect("every line validates") {
+                "cell_start" => starts += 1,
+                "cell_end" => {
+                    ends += 1;
+                    let counters = EngineCounters::from_json(
+                        line.as_obj().unwrap().get("counters").unwrap(),
+                    )
+                    .unwrap();
+                    assert!(counters.events_popped > 0, "cell ran events");
+                }
+                "prebuild" => prebuilds += 1,
+                other => panic!("unexpected event {other}"),
+            }
+        }
+        assert_eq!(starts, 4);
+        assert_eq!(ends, 4);
+        assert_eq!(prebuilds, 2, "one build per distinct seed");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     /// The timing breakdown reports lazily-built prebuilds and a sane

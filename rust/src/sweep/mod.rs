@@ -88,7 +88,8 @@ pub mod report;
 pub mod shard;
 
 pub use driver::{
-    default_threads, run, run_cells, run_with_progress, run_with_timing, SweepTiming,
+    default_threads, run, run_cells, run_cells_observed, run_observed, run_with_progress,
+    run_with_timing, SweepTiming,
 };
 pub use grid::{
     Cell, CellSpec, PolicySpec, ScenarioAxis, SeriesFilter, SpotOverride, Substrate, SweepSpec,

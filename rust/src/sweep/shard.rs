@@ -51,9 +51,11 @@
 use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
 use std::process::{Command, Stdio};
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::chaos::{BrokerOutage, ChaosSpec, DemandSurge, HostMtbf, ReclaimStorm};
+use crate::obs::{heartbeat_file, read_last_heartbeat, telemetry as tel, StallTracker, Telemetry};
 use crate::config::scenario::ComparisonConfig;
 use crate::engine::{EngineConfig, Report, ResilienceStats, SpotStats, VictimPolicy};
 use crate::cloudlet::SchedulerKind;
@@ -1170,6 +1172,18 @@ pub struct CoordinateOptions {
     pub max_attempts: usize,
     /// Emit progress lines on stderr.
     pub verbose: bool,
+    /// Sidecar sink for shard lifecycle events (assign/exit/reassign,
+    /// stalls, merge). `None` disables telemetry; results are identical
+    /// either way (the two-channel rule).
+    pub telemetry: Option<Arc<Telemetry>>,
+    /// Directory for per-shard worker heartbeat files (normally the
+    /// telemetry dir). When set, workers are spawned with `--heartbeat`
+    /// and the coordinator polls the files for stall detection and
+    /// reassignment enrichment.
+    pub heartbeat_dir: Option<PathBuf>,
+    /// A live worker silent for this long earns a stall warning (one per
+    /// silence episode). Only meaningful with `heartbeat_dir`.
+    pub stall_after: Duration,
 }
 
 impl CoordinateOptions {
@@ -1185,6 +1199,9 @@ impl CoordinateOptions {
             worker_threads: 1,
             max_attempts: 3,
             verbose: false,
+            telemetry: None,
+            heartbeat_dir: None,
+            stall_after: Duration::from_secs(30),
         }
     }
 }
@@ -1232,6 +1249,20 @@ pub fn coordinate(
     for shard in &shards {
         write_shard_file(&shard_path(&opts.work_dir, shard.index), spec, shard)?;
     }
+    // Stale heartbeat files from an earlier run must not feed this run's
+    // stall tracker before the fresh workers truncate them.
+    if let Some(dir) = &opts.heartbeat_dir {
+        for i in 0..n {
+            let _ = std::fs::remove_file(heartbeat_file(dir, i));
+        }
+    }
+    let emit = |event: JsonObj| {
+        if let Some(t) = &opts.telemetry {
+            t.emit(event);
+        }
+    };
+    let mut stalls = StallTracker::new(opts.stall_after);
+    let mut last_hb_poll = Instant::now();
 
     let mut pending: VecDeque<usize> = (0..n).collect();
     let mut running: Vec<(usize, std::process::Child)> = Vec::new();
@@ -1246,25 +1277,27 @@ pub fn coordinate(
         while running.len() < opts.workers {
             let Some(idx) = pending.pop_front() else { break };
             attempts[idx] += 1;
-            let child = match Command::new(&opts.worker_exe)
-                .arg("sweep")
+            let mut cmd = Command::new(&opts.worker_exe);
+            cmd.arg("sweep")
                 .arg("worker")
                 .arg("--shard")
                 .arg(shard_path(&opts.work_dir, idx))
                 .arg("--out")
                 .arg(partial_path(&opts.work_dir, idx))
                 .arg("--threads")
-                .arg(opts.worker_threads.to_string())
-                // Workers watch this PID between cells and exit when the
-                // coordinator is gone (see `cmd_sweep_worker`), so a
-                // Ctrl-C'd or SIGKILLed coordinator - paths no userspace
-                // cleanup can cover - does not leave orphans running
-                // their full shards and renaming partials into a later
-                // run's work dir.
-                .env("CLOUDMARKET_SWEEP_PARENT", std::process::id().to_string())
-                .stdout(Stdio::null())
-                .spawn()
-            {
+                .arg(opts.worker_threads.to_string());
+            if let Some(dir) = &opts.heartbeat_dir {
+                cmd.arg("--heartbeat").arg(heartbeat_file(dir, idx));
+            }
+            // Workers watch this PID between cells and exit when the
+            // coordinator is gone (see `cmd_sweep_worker`), so a
+            // Ctrl-C'd or SIGKILLed coordinator - paths no userspace
+            // cleanup can cover - does not leave orphans running
+            // their full shards and renaming partials into a later
+            // run's work dir.
+            cmd.env("CLOUDMARKET_SWEEP_PARENT", std::process::id().to_string())
+                .stdout(Stdio::null());
+            let child = match cmd.spawn() {
                 Ok(child) => child,
                 Err(e) => {
                     kill_workers(&mut running);
@@ -1275,6 +1308,8 @@ pub fn coordinate(
                 }
             };
             workers_spawned += 1;
+            stalls.watch(idx, Instant::now());
+            emit(tel::shard_assign(idx, attempts[idx], child.id()));
             if opts.verbose {
                 eprintln!(
                     "sweep: worker pid {} took shard {idx}/{n} ({} cells, attempt {})",
@@ -1287,6 +1322,32 @@ pub fn coordinate(
         }
         if running.is_empty() {
             return Err("sweep coordinator stalled with unfinished shards (internal bug)".into());
+        }
+
+        // Poll heartbeats (throttled: the reap loop spins at 5ms) for
+        // workers that are alive but silent - a crash is detected by
+        // try_wait, but a *hang* only shows up as heartbeat staleness.
+        if let Some(dir) = &opts.heartbeat_dir {
+            let now = Instant::now();
+            if now.duration_since(last_hb_poll) >= Duration::from_millis(500) {
+                last_hb_poll = now;
+                for (idx, _) in &running {
+                    let beat = read_last_heartbeat(&heartbeat_file(dir, *idx));
+                    if let Some(w) = stalls.observe(*idx, beat, now) {
+                        let progress = w
+                            .last
+                            .map(|h| format!(", last progress {}/{} cells", h.done, h.total))
+                            .unwrap_or_else(|| ", no heartbeat seen yet".to_string());
+                        eprintln!(
+                            "sweep: warning: shard {} worker is alive but silent for \
+                             {:.0}s{progress}",
+                            w.shard,
+                            w.silent.as_secs_f64()
+                        );
+                        emit(tel::stall(w.shard, w.silent.as_millis() as u64, w.last.as_ref()));
+                    }
+                }
+            }
         }
 
         // Reap finished workers; a dead worker's shard goes back in the
@@ -1325,8 +1386,19 @@ pub fn coordinate(
                     } else {
                         Err(format!("worker exited with {status}"))
                     };
+                    let detail = match status.code() {
+                        Some(0) if outcome.is_ok() => "completed",
+                        Some(0) => "bad-partial",
+                        Some(EXIT_RUNTIME) => "runtime",
+                        Some(EXIT_PARENT_GONE) => "parent-gone",
+                        Some(EXIT_BAD_SHARD) => "bad-shard",
+                        Some(_) => "unknown",
+                        None => "signal",
+                    };
+                    emit(tel::shard_exit(idx, outcome.is_ok(), status.code(), detail));
                     match outcome {
                         Ok(cells) => {
+                            stalls.unwatch(idx);
                             if opts.verbose {
                                 eprintln!("sweep: shard {idx}/{n} done ({} cells)", cells.len());
                             }
@@ -1353,10 +1425,15 @@ pub fn coordinate(
                                 ));
                             }
                             shards_reassigned += 1;
+                            let last = stalls.last_progress(idx);
+                            emit(tel::shard_reassign(idx, attempts[idx] + 1, last.as_ref()));
                             if opts.verbose {
+                                let progress = last
+                                    .map(|h| format!("; died at {}/{} cells", h.done, h.total))
+                                    .unwrap_or_default();
                                 eprintln!(
-                                    "sweep: shard {idx}/{n} failed ({why}); reassigning to a \
-                                     fresh worker (attempt {}/{})",
+                                    "sweep: shard {idx}/{n} failed ({why}){progress}; \
+                                     reassigning to a fresh worker (attempt {}/{})",
                                     attempts[idx] + 1,
                                     opts.max_attempts
                                 );
@@ -1375,14 +1452,24 @@ pub fn coordinate(
         all.extend(cells);
     }
     let expected = spec.cells();
-    if all.len() != expected.len() {
+    let merged_cells = all.len();
+    if merged_cells != expected.len() {
+        emit(tel::merge(n, merged_cells, false));
         return Err(format!(
-            "workers produced {} of {} cells (coordinator bug)",
-            all.len(),
+            "workers produced {merged_cells} of {} cells (coordinator bug)",
             expected.len()
         ));
     }
-    let report = SweepReport::merged_from_cells(all, n)?;
+    let report = match SweepReport::merged_from_cells(all, n) {
+        Ok(report) => {
+            emit(tel::merge(n, merged_cells, true));
+            report
+        }
+        Err(e) => {
+            emit(tel::merge(n, merged_cells, false));
+            return Err(e);
+        }
+    };
     // Success: the partials are merged, so drop the intermediates and
     // leave only the artifacts the caller writes from `report`.
     clean_work_files(&opts.work_dir)?;

@@ -1,0 +1,323 @@
+//! The two-channel rule, end to end: turning telemetry on must leave the
+//! primary sweep artifacts (`sweep_cells.csv`, aggregate JSON, retained
+//! series) **byte-identical** — in-process at 1/2/4 threads and through
+//! real `--workers` subprocesses — while the sidecar
+//! (`<out-dir>/telemetry/`) fills with schema-valid JSONL events and
+//! per-shard heartbeat files. Also covers the hung-worker detection path:
+//! a fake worker that beats once and then hangs (alive but silent) is
+//! flagged by [`StallTracker`] exactly once per silence episode.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::time::{Duration, Instant};
+
+use cloudmarket::config::scenario::ComparisonConfig;
+use cloudmarket::obs::{self, telemetry as tel, StallTracker, Telemetry};
+use cloudmarket::sweep::{self, PolicySpec, SeriesFilter, SweepReport, SweepSpec};
+use cloudmarket::util::json::{parse, Json};
+
+const BIN: &str = env!("CARGO_BIN_EXE_cloudmarket");
+
+fn test_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("cloudmarket_sweep_telemetry_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The serialized artifact set of a report: exactly what the CLI writes.
+fn render(report: &SweepReport) -> (String, String, Vec<(usize, String)>) {
+    (
+        report.cells_csv().to_string(),
+        report.aggregate_json().to_string_pretty(),
+        report
+            .retained_series_csvs()
+            .into_iter()
+            .map(|(id, csv)| (id, csv.to_string()))
+            .collect(),
+    )
+}
+
+/// A small comparison-substrate grid: 2 seeds x 2 policies = 4 cells,
+/// first-fit series retained.
+fn small_spec() -> SweepSpec {
+    let scenario = ComparisonConfig { terminate_at: 400.0, ..Default::default() };
+    SweepSpec::new(scenario)
+        .with_seeds(vec![20_250_710, 20_250_711])
+        .with_policies(vec![PolicySpec::FirstFit, PolicySpec::Hlem { adjusted: true, alpha: -0.5 }])
+        .with_series_retention(SeriesFilter::parse("policy=first-fit").unwrap())
+}
+
+/// Count schema-validated events of one kind in a run log.
+fn count(lines: &[Json], name: &str) -> usize {
+    lines.iter().filter(|l| obs::validate_event(l) == Ok(name)).count()
+}
+
+/// In-process: `run_observed` with a sidecar produces byte-identical
+/// artifacts to the unobserved `run` at 1, 2 and 4 threads, and every
+/// sidecar line validates against the schema with the expected per-cell
+/// span structure.
+#[test]
+fn observed_run_artifacts_byte_identical_at_any_thread_count() {
+    let spec = small_spec();
+    let reference = sweep::run(&spec, 2);
+    assert_eq!(reference.failed(), 0, "no cell may fail");
+    let want = render(&reference);
+
+    for threads in [1usize, 2, 4] {
+        let dir = test_dir(&format!("inproc_{threads}t"));
+        let t = Telemetry::create(&dir).unwrap();
+        t.emit(tel::run_start("test", spec.cell_count(), 2, 2, "threads", threads));
+        let (report, timing) = sweep::run_observed(&spec, threads, None, Some(&t));
+        t.emit(tel::run_end(
+            report.failed() == 0,
+            timing.wall,
+            timing.prebuild_busy,
+            timing.cell_busy,
+            timing.merge,
+            timing.first_cell_done,
+            timing.prebuilds_built,
+        ));
+        drop(t);
+        assert_eq!(
+            render(&report),
+            want,
+            "{threads}-thread observed artifacts differ from the unobserved run"
+        );
+
+        let lines = obs::read_jsonl(&obs::telemetry_dir(&dir).join(obs::RUN_LOG)).unwrap();
+        for (i, line) in lines.iter().enumerate() {
+            obs::validate_event(line).unwrap_or_else(|e| panic!("line {}: {e}", i + 1));
+        }
+        assert_eq!(count(&lines, "cell_start"), spec.cell_count());
+        assert_eq!(count(&lines, "cell_end"), spec.cell_count());
+        assert_eq!(count(&lines, "run_start"), 1);
+        assert_eq!(count(&lines, "run_end"), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Flags for a tiny trace-substrate grid (2 seeds x 2 policies = 4
+/// cells), mirroring the cross-process CLI test in `sweep_process.rs`.
+const CLI_GRID: &[&str] = &[
+    "--seeds",
+    "2",
+    "--seed",
+    "42",
+    "--policies",
+    "first-fit,hlem-vmp",
+    "--substrate",
+    "trace",
+    "--machines",
+    "10",
+    "--days",
+    "0.05",
+    "--spots",
+    "20",
+    "--max-vms",
+    "50",
+    "--retain-series",
+    "policy=first-fit",
+];
+
+fn run_cli(args: &[&str]) -> std::process::Output {
+    Command::new(BIN)
+        .arg("sweep")
+        .args(CLI_GRID)
+        .args(args)
+        .env_remove("CLOUDMARKET_SWEEP_FAULT")
+        .output()
+        .expect("running cloudmarket sweep")
+}
+
+/// Every top-level artifact file (name + bytes), excluding the sidecar.
+fn artifact_files(dir: &Path) -> Vec<(String, Vec<u8>)> {
+    let mut out: Vec<(String, Vec<u8>)> = std::fs::read_dir(dir)
+        .unwrap()
+        .flatten()
+        .filter(|e| e.file_name().to_string_lossy() != obs::TELEMETRY_DIR)
+        .map(|e| {
+            (e.file_name().to_string_lossy().into_owned(), std::fs::read(e.path()).unwrap())
+        })
+        .collect();
+    out.sort();
+    out
+}
+
+/// Through real subprocesses: `--telemetry` (single-process and
+/// `--workers 2`) leaves every artifact byte-identical to the
+/// telemetry-off run, fills the sidecar with valid events including one
+/// heartbeat file per shard, and `sweep status` renders the result.
+#[test]
+fn cli_telemetry_keeps_artifacts_byte_identical_and_writes_sidecar() {
+    let off = test_dir("cli_off");
+    let out = run_cli(&["--threads", "1", "--out-dir", off.to_str().unwrap()]);
+    assert!(out.status.success(), "telemetry-off sweep failed: {out:?}");
+    let want = artifact_files(&off);
+    assert!(!obs::telemetry_dir(&off).exists(), "no sidecar may appear without --telemetry");
+
+    // Single-process with telemetry (and the phase table on stderr).
+    let tp = test_dir("cli_tp");
+    let out =
+        run_cli(&["--threads", "2", "--telemetry", "--verbose", "--out-dir", tp.to_str().unwrap()]);
+    assert!(out.status.success(), "telemetry sweep failed: {out:?}");
+    assert_eq!(artifact_files(&tp), want, "telemetry-on artifacts differ (threads mode)");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("Sweep phase breakdown"), "--verbose phase table missing:\n{stderr}");
+    let lines = obs::read_jsonl(&obs::telemetry_dir(&tp).join(obs::RUN_LOG)).unwrap();
+    for line in &lines {
+        obs::validate_event(line).unwrap();
+    }
+    assert_eq!(count(&lines, "cell_end"), 4);
+
+    // Coordinator with telemetry: shard lifecycle events plus one
+    // heartbeat file per shard, each ending on a completed final beat.
+    let mp = test_dir("cli_mp");
+    let out = run_cli(&["--workers", "2", "--telemetry", "--out-dir", mp.to_str().unwrap()]);
+    assert!(out.status.success(), "coordinator telemetry sweep failed: {out:?}");
+    assert_eq!(artifact_files(&mp), want, "telemetry-on artifacts differ (workers mode)");
+    let tdir = obs::telemetry_dir(&mp);
+    let lines = obs::read_jsonl(&tdir.join(obs::RUN_LOG)).unwrap();
+    for line in &lines {
+        obs::validate_event(line).unwrap();
+    }
+    assert_eq!(count(&lines, "run_start"), 1);
+    assert_eq!(count(&lines, "shard_assign"), 2);
+    assert_eq!(count(&lines, "shard_exit"), 2);
+    assert_eq!(count(&lines, "merge"), 1);
+    assert_eq!(count(&lines, "run_end"), 1);
+    for shard in 0..2 {
+        let path = obs::heartbeat_file(&tdir, shard);
+        assert!(path.exists(), "missing heartbeat file for shard {shard}");
+        let last = obs::read_last_heartbeat(&path)
+            .unwrap_or_else(|| panic!("no valid beat in {}", path.display()));
+        assert_eq!(last.shard, shard);
+        assert_eq!(last.done, last.total, "final beat must report a completed shard");
+        assert!(last.cell.is_none(), "the end beat carries no cell id");
+    }
+
+    // `sweep status` renders the sidecar.
+    let out = Command::new(BIN)
+        .args(["sweep", "status", mp.to_str().unwrap()])
+        .output()
+        .expect("running sweep status");
+    assert!(out.status.success(), "sweep status failed: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("sweep status"), "{stdout}");
+    assert!(stdout.contains("run finished: ok"), "{stdout}");
+    assert!(stdout.contains("shards: 2 assigned"), "{stdout}");
+    assert!(stdout.contains("Shard heartbeats"), "{stdout}");
+    assert!(stdout.contains("Engine counter totals"), "{stdout}");
+
+    for dir in [off, tp, mp] {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Schema round-trip property: heartbeat events built from a spread of
+/// pseudo-random values survive serialize -> parse -> validate -> read
+/// back with every field intact (including the `None` encodings).
+#[test]
+fn heartbeat_schema_roundtrip_property() {
+    let dir = test_dir("roundtrip");
+    let path = dir.join("beats.jsonl");
+    let mut state = 0x2545_f491_4f6c_dd1du64;
+    let mut next = move || {
+        // xorshift64* - deterministic spread, no external crates.
+        state ^= state >> 12;
+        state ^= state << 25;
+        state ^= state >> 27;
+        state = state.wrapping_mul(0x2545_f491_4f6c_dd1d);
+        state
+    };
+    let mut wrote = Vec::new();
+    let mut text = String::new();
+    for _ in 0..100 {
+        let shard = (next() % 64) as usize;
+        let done = (next() % 1000) as usize;
+        let total = done + (next() % 1000) as usize;
+        let cell = (next() % 2 == 0).then(|| (next() % 4096) as usize);
+        let rss = (next() % 2 == 0).then(|| (next() % 10_000) as f64 / 10.0);
+        let event = tel::heartbeat_event(shard, done, total, cell, rss);
+        text.push_str(&Json::Obj(event).to_string_compact());
+        text.push('\n');
+        wrote.push((shard, done, total, cell, rss));
+    }
+    std::fs::write(&path, &text).unwrap();
+
+    let lines = obs::read_jsonl(&path).unwrap();
+    assert_eq!(lines.len(), wrote.len());
+    for (line, (shard, done, total, cell, rss)) in lines.iter().zip(&wrote) {
+        assert_eq!(obs::validate_event(line), Ok("heartbeat"));
+        // Round-trip a second time through the compact writer: the schema
+        // must be stable under re-serialization.
+        let twice = parse(&Json::to_string_compact(line)).unwrap();
+        assert_eq!(obs::validate_event(&twice), Ok("heartbeat"));
+        let o = line.as_obj().unwrap();
+        let num = |k: &str| o.get(k).and_then(Json::as_f64);
+        assert_eq!(num("shard"), Some(*shard as f64));
+        assert_eq!(num("done"), Some(*done as f64));
+        assert_eq!(num("total"), Some(*total as f64));
+        assert_eq!(num("cell"), cell.map(|c| c as f64));
+        assert_eq!(num("rss_mb"), *rss);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A worker that is alive but hung: the fake worker writes one heartbeat
+/// and then sleeps forever. The stall tracker must flag it (once per
+/// silence episode) while the process is demonstrably still running -
+/// this is the case exit-code reaping can never catch.
+#[cfg(unix)]
+#[test]
+fn stall_tracker_flags_alive_but_silent_fake_worker() {
+    use std::os::unix::fs::PermissionsExt;
+
+    let dir = test_dir("hung");
+    let hb_path = obs::heartbeat_file(&dir, 0);
+    let line = Json::Obj(tel::heartbeat_event(0, 1, 8, Some(3), Some(10.0))).to_string_compact();
+    let exe = dir.join("fake_worker.sh");
+    std::fs::write(
+        &exe,
+        format!("#!/bin/sh\nprintf '%s\\n' '{line}' > {}\nsleep 60\n", hb_path.display()),
+    )
+    .unwrap();
+    std::fs::set_permissions(&exe, std::fs::Permissions::from_mode(0o755)).unwrap();
+    let mut child = Command::new(&exe).spawn().expect("spawning fake worker");
+
+    // Wait for the single beat to land.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let beat = loop {
+        if let Some(b) = obs::read_last_heartbeat(&hb_path) {
+            break b;
+        }
+        assert!(Instant::now() < deadline, "fake worker never wrote its beat");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    assert_eq!((beat.shard, beat.done, beat.cell), (0, 1, Some(3)));
+
+    let mut tracker = StallTracker::new(Duration::from_millis(100));
+    tracker.watch(0, Instant::now());
+    // First observation registers the beat as progress - no warning.
+    assert!(tracker.observe(0, Some(beat), Instant::now()).is_none());
+
+    // The worker stays silent past the threshold while provably alive.
+    std::thread::sleep(Duration::from_millis(150));
+    assert!(
+        child.try_wait().expect("try_wait").is_none(),
+        "fake worker must still be running - that is the whole point"
+    );
+    let warn = tracker
+        .observe(0, obs::read_last_heartbeat(&hb_path), Instant::now())
+        .expect("silent-but-alive worker must be flagged");
+    assert_eq!(warn.shard, 0);
+    assert!(warn.silent >= Duration::from_millis(100));
+    assert_eq!(warn.last.expect("last progress recorded").done, 1);
+    // Once per episode: the same silence does not warn again.
+    assert!(tracker.observe(0, obs::read_last_heartbeat(&hb_path), Instant::now()).is_none());
+
+    let _ = child.kill();
+    let _ = child.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
