@@ -84,7 +84,7 @@ use crate::vm::{InterruptionBehavior, Vm, VmId, VmState};
 
 pub use broker::Broker;
 pub use config::{EngineConfig, VictimPolicy};
-pub use report::{Report, ResilienceStats, SpotStats};
+pub use report::{MarketStats, Report, ResilienceStats, SpotStats};
 pub use tag::Tag;
 pub use world::World;
 
@@ -180,6 +180,12 @@ pub struct Engine {
     /// Hosts currently down due to a chaos crash - a chaos recovery only
     /// reactivates hosts this flags, never dormant/trace-removed ones.
     chaos_crashed: Vec<bool>,
+
+    // ---- market state (crate::market::apply fills this) ----
+    /// Compiled spot-price path: `Tag::MarketCrossing(k)` indexes its
+    /// crossings, spot placement holds while the price sits above the
+    /// bid, and report-time cost accounting integrates it.
+    pub(crate) market: Option<std::sync::Arc<crate::market::MarketSchedule>>,
 }
 
 impl Engine {
@@ -262,6 +268,7 @@ impl Engine {
             chaos_storms: Vec::new(),
             chaos_outages: Vec::new(),
             chaos_crashed: Vec::new(),
+            market: None,
         }
     }
 
@@ -409,6 +416,7 @@ impl Engine {
                 self.counters.chaos_events += 1;
                 self.retry_pending();
             }
+            Tag::MarketCrossing(k) => self.on_market_crossing(k),
             Tag::End => {}
         }
     }
@@ -431,6 +439,28 @@ impl Engine {
         let state = self.world.vms[v].state;
         if !matches!(state, VmState::Waiting | VmState::Hibernated) {
             return false; // stale retry event
+        }
+        // Market out-bid hold: while the spot price sits above the bid,
+        // spot capacity is unavailable however idle the hosts are. The
+        // request stays parked (waiting queue / resubmission list) until
+        // the downward price crossing retries it.
+        if self.market_holds_spot(v) {
+            if state == VmState::Waiting && first {
+                let vm = &self.world.vms[v];
+                if vm.persistent && vm.waiting_time > 0.0 {
+                    let deadline = now + vm.waiting_time;
+                    self.broker.enqueue_waiting(v, deadline);
+                    self.sim.schedule_at(
+                        deadline,
+                        EntityId::Broker(0),
+                        EntityId::Broker(0),
+                        Tag::WaitingExpired(v),
+                    );
+                } else {
+                    self.fail(v, LifecycleKind::Failed);
+                }
+            }
+            return false;
         }
         self.recorder.alloc_attempts += 1;
         self.counters.placement_probes += 1;
@@ -1133,6 +1163,47 @@ impl Engine {
             if self.warn_spot(v).is_some() {
                 self.recorder.storm_reclaims += 1;
             }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // market price events (schedules compiled by crate::market)
+    // ------------------------------------------------------------------
+
+    /// `v` is a spot VM whose bid is currently under the market price
+    /// (its placement requests hold until the next downward crossing).
+    fn market_holds_spot(&self, v: VmId) -> bool {
+        if !self.world.vms[v].is_spot() {
+            return false;
+        }
+        match self.market.as_ref() {
+            Some(m) => !m.is_empty() && m.price_at(self.sim.clock()) > m.bid,
+            None => false,
+        }
+    }
+
+    /// The spot price crossed the bid level. An upward crossing out-bids
+    /// every currently interruptible spot VM (ascending VM id, so the
+    /// victim set is deterministic); a downward crossing drains the
+    /// retry queue so held/hibernated spots get capacity back.
+    fn on_market_crossing(&mut self, k: usize) {
+        self.counters.market_events += 1;
+        let up = match self.market.as_ref().and_then(|m| m.crossings.get(k)) {
+            Some(c) => c.up,
+            None => return,
+        };
+        if up {
+            let now = self.sim.clock();
+            let eligible: Vec<VmId> = (0..self.world.vms.len())
+                .filter(|&v| self.world.vms[v].interruptible(now))
+                .collect();
+            for v in eligible {
+                if self.warn_spot(v).is_some() {
+                    self.recorder.price_reclaims += 1;
+                }
+            }
+        } else {
+            self.retry_pending();
         }
     }
 

@@ -56,6 +56,27 @@ pub struct ResilienceStats {
     pub work_recovered_mi: f64,
 }
 
+/// Cost statistics under the dynamic spot-price market
+/// (crate::market). Prices are normalized to an on-demand price of
+/// 1.0 $/PE-hour; costs integrate the compiled piecewise-constant price
+/// path over each spot VM's host intervals, PE-weighted. All zero for
+/// market-free runs.
+#[derive(Debug, Clone, Default)]
+pub struct MarketStats {
+    /// Total spot spend over all spot-VM run intervals ($).
+    pub spot_cost_usd: f64,
+    /// What the same PE-hours would have cost on-demand ($).
+    pub on_demand_cost_usd: f64,
+    /// `1 - spot/on-demand` (0 with no on-demand cost).
+    pub savings_ratio: f64,
+    /// Spot reclaims caused by an upward price crossing.
+    pub price_reclaims: u64,
+    /// PE-hour-weighted mean spot price paid ($/PE-hour).
+    pub mean_price_paid: f64,
+    /// Highest tick price overlapping any paid run interval ($/PE-hour).
+    pub max_price_paid: f64,
+}
+
 /// Summary of one engine run.
 #[derive(Debug, Clone)]
 pub struct Report {
@@ -74,6 +95,7 @@ pub struct Report {
     pub alloc_failures: u64,
     pub spot: SpotStats,
     pub resilience: ResilienceStats,
+    pub market: MarketStats,
 }
 
 /// Build the report from a finished engine.
@@ -151,6 +173,40 @@ pub fn build(engine: &Engine, wall: std::time::Duration) -> Report {
         resilience.p95_interruption_secs = gaps[idx];
     }
 
+    // Market cost accounting: integrate the compiled price path over
+    // every spot VM's host intervals (PE-weighted, $/PE-hour prices).
+    let market = match engine.market.as_ref() {
+        Some(sched) if !sched.is_empty() => {
+            let clock_end = engine.sim.clock();
+            let mut spot_cost = 0.0;
+            let mut od_cost = 0.0;
+            let mut pe_secs = 0.0;
+            let mut max_price = 0.0f64;
+            for vm in w.vms.iter().filter(|vm| vm.vm_type == VmType::Spot) {
+                let pes = vm.spec.pes as f64;
+                for iv in vm.history.intervals() {
+                    let end = iv.stop.unwrap_or(clock_end);
+                    if end <= iv.start {
+                        continue;
+                    }
+                    spot_cost += pes * sched.cost_over(iv.start, end) / 3600.0;
+                    od_cost += pes * sched.od_price * (end - iv.start) / 3600.0;
+                    pe_secs += pes * (end - iv.start);
+                    max_price = max_price.max(sched.max_price_over(iv.start, end));
+                }
+            }
+            MarketStats {
+                spot_cost_usd: spot_cost,
+                on_demand_cost_usd: od_cost,
+                savings_ratio: if od_cost > 0.0 { 1.0 - spot_cost / od_cost } else { 0.0 },
+                price_reclaims: r.price_reclaims,
+                mean_price_paid: if pe_secs > 0.0 { spot_cost * 3600.0 / pe_secs } else { 0.0 },
+                max_price_paid: max_price,
+            }
+        }
+        _ => MarketStats::default(),
+    };
+
     let mut cl_fin = 0;
     let mut cl_can = 0;
     for cl in &w.cloudlets {
@@ -176,6 +232,7 @@ pub fn build(engine: &Engine, wall: std::time::Duration) -> Report {
         alloc_failures: engine.recorder.alloc_failures,
         spot,
         resilience,
+        market,
     }
 }
 
@@ -184,6 +241,7 @@ impl Report {
     pub fn render(&self) -> String {
         let s = &self.spot;
         let r = &self.resilience;
+        let m = &self.market;
         format!(
             "policy={} clock_end={:.1}s events={} wall={:?}\n\
              vms: finished={} terminated={} failed={} active={}\n\
@@ -196,7 +254,9 @@ impl Report {
              resilience: storms={} storm_reclaims={} per_storm={:.2} \
              p95_interruption_s={:.2} host_failures={} recoveries={} \
              avg_recovery_s={:.2} max_recovery_s={:.2} \
-             work_lost_mi={:.0} work_recovered_mi={:.0}",
+             work_lost_mi={:.0} work_recovered_mi={:.0}\n\
+             market: spot_cost=${:.2} od_cost=${:.2} savings={:.2} \
+             price_reclaims={} mean_price={:.3} max_price={:.3}",
             self.policy,
             self.clock_end,
             self.events_processed,
@@ -230,6 +290,12 @@ impl Report {
             r.max_recovery_secs,
             r.work_lost_mi,
             r.work_recovered_mi,
+            m.spot_cost_usd,
+            m.on_demand_cost_usd,
+            m.savings_ratio,
+            m.price_reclaims,
+            m.mean_price_paid,
+            m.max_price_paid,
         )
     }
 
@@ -279,6 +345,15 @@ impl Report {
         rs.set("work_lost_mi", Json::Num(r.work_lost_mi));
         rs.set("work_recovered_mi", Json::Num(r.work_recovered_mi));
         o.set("resilience", Json::Obj(rs));
+        let m = &self.market;
+        let mut mk = JsonObj::new();
+        mk.set("spot_cost_usd", Json::Num(m.spot_cost_usd));
+        mk.set("on_demand_cost_usd", Json::Num(m.on_demand_cost_usd));
+        mk.set("savings_ratio", Json::Num(m.savings_ratio));
+        mk.set("price_reclaims", Json::Num(m.price_reclaims as f64));
+        mk.set("mean_price_paid", Json::Num(m.mean_price_paid));
+        mk.set("max_price_paid", Json::Num(m.max_price_paid));
+        o.set("market", Json::Obj(mk));
         Json::Obj(o)
     }
 }

@@ -39,6 +39,9 @@ pub enum Tag {
     ChaosStorm(usize),
     /// Drain retries deferred by a broker outage window.
     ChaosRetryDrain,
+    /// Spot price crossed the bid level: crossing `k` of the compiled
+    /// market schedule (up = out-bid reclaims, down = retry drain).
+    MarketCrossing(usize),
     /// Hard stop marker.
     End,
 }

@@ -35,6 +35,7 @@ pub mod core;
 pub mod engine;
 pub mod experiments;
 pub mod infra;
+pub mod market;
 pub mod metrics;
 pub mod obs;
 #[cfg(feature = "pjrt")]

@@ -1,0 +1,473 @@
+//! Dynamic spot-price market substrate (the paper's core premise):
+//! spot interruptions arise from *price dynamics*, not fixed schedules.
+//!
+//! The price process is a seeded Ornstein-Uhlenbeck mean-reverting walk
+//! with a daily periodic component, discretized on a fixed 60 s tick
+//! grid (exact AR(1) discretization, unconditionally stable):
+//!
+//! ```text
+//! mu(t)    = MEAN * (1 + amp * sin(2*pi*t / 86400))
+//! X_{k+1}  = mu_{k+1} + (X_k - mu_k) * a + vol * sqrt(1 - a^2) * xi_k
+//! a        = exp(-theta * TICK)
+//! ```
+//!
+//! Prices are normalized to an on-demand price of 1.0 $/PE-hour; the
+//! per-VM bid level is `on-demand price x bid margin`. Like the chaos
+//! engine, the whole path is **compiled up front** into a
+//! [`MarketSchedule`] - a pure function of `(spec, seed, horizon)` - and
+//! [`apply`] only schedules the pre-computed bid-crossing events into
+//! the DES queue. The core event loop stays untouched, so artifacts are
+//! byte-identical at any `--threads`/`--workers` count.
+//!
+//! An *upward* crossing (price rises above the bid) out-bids every
+//! currently interruptible spot VM and feeds the existing interruption
+//! lifecycle (`vm/spot.rs` warning -> hibernate/terminate paths); while
+//! the price stays above the bid, spot placement requests are held
+//! (out-bid capacity is unavailable, however idle the hosts are). A
+//! *downward* crossing lifts the hold and drains the broker retry queue
+//! so hibernated spots resume on the again-affordable capacity. Cost
+//! accounting
+//! (spot $ vs on-demand $, savings ratio, mean/max price paid)
+//! integrates the piecewise-constant path over each spot VM's host
+//! intervals at report time (`engine::report::MarketStats`).
+
+use std::sync::Arc;
+
+use crate::core::EntityId;
+use crate::engine::{Engine, Tag};
+use crate::stats::{Dist, Rng};
+
+/// Normalized on-demand price, $ per PE-hour. All spot prices and bids
+/// are expressed relative to this.
+pub const ON_DEMAND_PRICE: f64 = 1.0;
+/// Long-run mean of the spot price as a fraction of the on-demand price
+/// (clouds historically clear spot around 30-70% off on-demand).
+pub const SPOT_MEAN_RATIO: f64 = 0.4;
+/// Price-path discretization step, seconds (one market tick a minute).
+pub const TICK_SECS: f64 = 60.0;
+/// Prices never fall below this floor (keeps costs strictly positive).
+pub const PRICE_FLOOR: f64 = 0.001;
+/// Period of the daily demand cycle, seconds.
+pub const DAY_SECS: f64 = 86_400.0;
+
+/// Default stationary volatility (std-dev of the OU process, $/PE-hour).
+pub const DEFAULT_VOLATILITY: f64 = 0.05;
+/// Default mean-reversion rate theta, 1/seconds (time constant ~83 min).
+pub const DEFAULT_MEAN_REVERSION: f64 = 2e-4;
+/// Default daily periodic amplitude, fraction of the long-run mean.
+pub const DEFAULT_DAILY_AMPLITUDE: f64 = 0.25;
+/// Default bid level as a fraction of the on-demand price.
+pub const DEFAULT_BID_MARGIN: f64 = 0.5;
+
+/// Derived-stream family tag for price paths (chaos uses 1).
+const FAMILY_PRICE: u64 = 2;
+
+/// Market price-model parameters for one cell. `None` fields fall back
+/// to the `DEFAULT_*` constants; the market is active as soon as any
+/// field is set (each parameter is its own `market.*` scenario axis).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct MarketSpec {
+    /// Stationary volatility of the OU process ($/PE-hour), >= 0.
+    pub volatility: Option<f64>,
+    /// Mean-reversion rate theta (1/seconds), > 0.
+    pub mean_reversion: Option<f64>,
+    /// Daily periodic amplitude (fraction of the mean), in [0, 1].
+    pub daily_amplitude: Option<f64>,
+    /// Bid level as a fraction of the on-demand price, > 0.
+    pub bid_margin: Option<f64>,
+}
+
+impl MarketSpec {
+    pub const NONE: MarketSpec = MarketSpec {
+        volatility: None,
+        mean_reversion: None,
+        daily_amplitude: None,
+        bid_margin: None,
+    };
+
+    /// No market axis set: the cell runs without a price process.
+    pub fn is_none(&self) -> bool {
+        *self == Self::NONE
+    }
+
+    pub fn volatility(&self) -> f64 {
+        self.volatility.unwrap_or(DEFAULT_VOLATILITY)
+    }
+
+    pub fn mean_reversion(&self) -> f64 {
+        self.mean_reversion.unwrap_or(DEFAULT_MEAN_REVERSION)
+    }
+
+    pub fn daily_amplitude(&self) -> f64 {
+        self.daily_amplitude.unwrap_or(DEFAULT_DAILY_AMPLITUDE)
+    }
+
+    pub fn bid_margin(&self) -> f64 {
+        self.bid_margin.unwrap_or(DEFAULT_BID_MARGIN)
+    }
+}
+
+/// Exact-round-trip label for a market axis value: Rust's shortest
+/// `f64` Display, whose `str::parse` inverse is the identity.
+pub fn label_f64(v: f64) -> String {
+    format!("{v}")
+}
+
+/// The price crossed the bid level at `at`. `up` = the price rose above
+/// the bid (spot VMs are out-bid); `!up` = it fell back under.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Crossing {
+    pub at: f64,
+    pub up: bool,
+}
+
+/// A compiled price path: pure function of `(spec, seed, horizon)`.
+/// `prices[k]` holds on `[k*tick, (k+1)*tick)`; the last price extends
+/// to the end of the run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MarketSchedule {
+    /// Discretization step, seconds.
+    pub tick: f64,
+    /// On-demand reference price, $/PE-hour.
+    pub od_price: f64,
+    /// Bid level, $/PE-hour (`od_price x bid margin`).
+    pub bid: f64,
+    /// Piecewise-constant spot price, one value per tick.
+    pub prices: Vec<f64>,
+    /// Pre-computed bid crossings, ascending in time.
+    pub crossings: Vec<Crossing>,
+}
+
+impl MarketSchedule {
+    pub fn is_empty(&self) -> bool {
+        self.prices.is_empty()
+    }
+
+    /// The spot price in force at time `t`.
+    pub fn price_at(&self, t: f64) -> f64 {
+        if self.prices.is_empty() {
+            return 0.0;
+        }
+        let k = ((t.max(0.0) / self.tick).floor() as usize).min(self.prices.len() - 1);
+        self.prices[k]
+    }
+
+    /// Integral of the price over `[start, end)` in price-seconds
+    /// (divide by 3600 for $ per PE at 1 PE).
+    pub fn cost_over(&self, start: f64, end: f64) -> f64 {
+        if self.prices.is_empty() || !(end > start) {
+            return 0.0;
+        }
+        let last = self.prices.len() - 1;
+        let mut total = 0.0;
+        let mut t = start.max(0.0);
+        while t < end {
+            let k = ((t / self.tick).floor() as usize).min(last);
+            let seg_end =
+                if k == last { end } else { ((k as f64 + 1.0) * self.tick).min(end) };
+            total += self.prices[k] * (seg_end - t);
+            t = seg_end;
+        }
+        total
+    }
+
+    /// Highest tick price overlapping `[start, end)` (0 when degenerate).
+    pub fn max_price_over(&self, start: f64, end: f64) -> f64 {
+        if self.prices.is_empty() || !(end > start) {
+            return 0.0;
+        }
+        let last = self.prices.len() - 1;
+        let k0 = ((start.max(0.0) / self.tick).floor() as usize).min(last);
+        let k1 = (((end / self.tick).ceil() as usize).max(k0 + 1) - 1).min(last);
+        self.prices[k0..=k1].iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+fn stream_rng(seed: u64, stream: u64) -> Rng {
+    Rng::new(
+        seed ^ FAMILY_PRICE.wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            ^ stream.wrapping_mul(0xa076_1d64_78bd_642f),
+    )
+}
+
+/// Compile `spec` into a concrete price path + crossing schedule for one
+/// cell. Pure function of its arguments - the sweep prebuild layer
+/// caches it per `(substrate, seed, spec)` triple exactly like chaos
+/// schedules, and callers at any thread/worker count get the same path.
+pub fn compile(spec: &MarketSpec, seed: u64, horizon: f64) -> MarketSchedule {
+    let empty = MarketSchedule {
+        tick: TICK_SECS,
+        od_price: ON_DEMAND_PRICE,
+        bid: ON_DEMAND_PRICE * spec.bid_margin(),
+        prices: Vec::new(),
+        crossings: Vec::new(),
+    };
+    if spec.is_none() || !horizon.is_finite() || horizon <= 0.0 {
+        return empty;
+    }
+    let vol = spec.volatility();
+    let theta = spec.mean_reversion();
+    let amp = spec.daily_amplitude();
+    let bid = ON_DEMAND_PRICE * spec.bid_margin();
+
+    let mean =
+        |t: f64| SPOT_MEAN_RATIO * ON_DEMAND_PRICE * (1.0 + amp * (std::f64::consts::TAU * t / DAY_SECS).sin());
+    // Exact AR(1) discretization of the OU process: stable for any
+    // theta/tick combination (a in (0, 1]), stationary std-dev = vol.
+    let a = (-theta * TICK_SECS).exp();
+    let diffusion = vol * (1.0 - a * a).max(0.0).sqrt();
+    let noise = Dist::Normal { mu: 0.0, sigma: 1.0 };
+    let mut rng = stream_rng(seed, 0);
+
+    let n = ((horizon / TICK_SECS).ceil() as usize).max(1);
+    let mut prices = Vec::with_capacity(n);
+    let mut x = mean(0.0).max(PRICE_FLOOR);
+    prices.push(x);
+    for k in 1..n {
+        let t0 = (k - 1) as f64 * TICK_SECS;
+        let t1 = k as f64 * TICK_SECS;
+        x = mean(t1) + (x - mean(t0)) * a + diffusion * noise.sample(&mut rng);
+        x = x.max(PRICE_FLOOR);
+        prices.push(x);
+    }
+
+    let mut crossings = Vec::new();
+    if prices[0] > bid {
+        crossings.push(Crossing { at: 0.0, up: true });
+    }
+    for k in 1..n {
+        let was = prices[k - 1] > bid;
+        let is = prices[k] > bid;
+        if is != was {
+            crossings.push(Crossing { at: k as f64 * TICK_SECS, up: is });
+        }
+    }
+    MarketSchedule { tick: TICK_SECS, od_price: ON_DEMAND_PRICE, bid, prices, crossings }
+}
+
+/// Inject a compiled schedule into an engine: store the path for cost
+/// accounting and schedule the pre-computed crossing events. Call after
+/// workload submission, before `engine.run()`.
+pub fn apply(engine: &mut Engine, sched: &Arc<MarketSchedule>) {
+    if sched.is_empty() {
+        return;
+    }
+    engine.market = Some(Arc::clone(sched));
+    for (k, c) in sched.crossings.iter().enumerate() {
+        engine.sim.schedule_at(
+            c.at,
+            EntityId::Kernel,
+            EntityId::Broker(0),
+            Tag::MarketCrossing(k),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::FirstFit;
+    use crate::cloudlet::Cloudlet;
+    use crate::engine::EngineConfig;
+    use crate::infra::HostSpec;
+    use crate::vm::{SpotConfig, Vm, VmSpec, VmState};
+
+    fn active_spec() -> MarketSpec {
+        MarketSpec {
+            volatility: Some(0.1),
+            mean_reversion: Some(1e-3),
+            daily_amplitude: Some(0.25),
+            bid_margin: Some(0.5),
+        }
+    }
+
+    #[test]
+    fn none_spec_compiles_empty() {
+        let sched = compile(&MarketSpec::NONE, 1, 86_400.0);
+        assert!(sched.is_empty());
+        assert!(sched.crossings.is_empty());
+        assert_eq!(compile(&active_spec(), 1, 0.0).prices.len(), 0);
+    }
+
+    #[test]
+    fn compile_is_seed_deterministic() {
+        let spec = active_spec();
+        let a = compile(&spec, 42, 86_400.0);
+        let b = compile(&spec, 42, 86_400.0);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        let c = compile(&spec, 43, 86_400.0);
+        assert_ne!(format!("{a:?}"), format!("{c:?}"), "seed must matter");
+    }
+
+    #[test]
+    fn compile_respects_horizon_and_floor() {
+        let spec = MarketSpec { volatility: Some(5.0), ..active_spec() };
+        let horizon = 3.0 * 3600.0;
+        let sched = compile(&spec, 7, horizon);
+        assert_eq!(sched.prices.len(), (horizon / TICK_SECS).ceil() as usize);
+        for &p in &sched.prices {
+            assert!(p.is_finite() && p >= PRICE_FLOOR, "price {p}");
+        }
+        for c in &sched.crossings {
+            assert!(c.at >= 0.0 && c.at < horizon, "crossing at {}", c.at);
+        }
+    }
+
+    #[test]
+    fn crossings_alternate_and_match_path() {
+        let sched = compile(&active_spec(), 99, 86_400.0);
+        assert!(!sched.crossings.is_empty(), "a volatile day should cross the bid");
+        for w in sched.crossings.windows(2) {
+            assert!(w[0].at < w[1].at, "crossings must be ascending");
+            assert_ne!(w[0].up, w[1].up, "crossing directions must alternate");
+        }
+        for c in &sched.crossings {
+            let k = (c.at / sched.tick).round() as usize;
+            assert_eq!(sched.prices[k] > sched.bid, c.up);
+            if k > 0 {
+                assert_eq!(sched.prices[k - 1] > sched.bid, !c.up);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_volatility_path_follows_the_daily_mean() {
+        let spec = MarketSpec {
+            volatility: Some(0.0),
+            mean_reversion: Some(1e-3),
+            daily_amplitude: Some(0.5),
+            bid_margin: Some(0.5),
+        };
+        let sched = compile(&spec, 5, 86_400.0);
+        for (k, &p) in sched.prices.iter().enumerate() {
+            let t = k as f64 * TICK_SECS;
+            let mu = SPOT_MEAN_RATIO
+                * ON_DEMAND_PRICE
+                * (1.0 + 0.5 * (std::f64::consts::TAU * t / DAY_SECS).sin());
+            assert!((p - mu.max(PRICE_FLOOR)).abs() < 1e-9, "tick {k}: {p} vs {mu}");
+        }
+        // amp 0.5: the mean peaks at 0.6 > bid 0.5 -> deterministic crossings.
+        assert_eq!(sched.crossings.len(), 2);
+        assert!(sched.crossings[0].up && !sched.crossings[1].up);
+    }
+
+    #[test]
+    fn cost_integration_is_piecewise_exact() {
+        let sched = MarketSchedule {
+            tick: 60.0,
+            od_price: 1.0,
+            bid: 0.5,
+            prices: vec![0.25, 0.5, 1.0],
+            crossings: Vec::new(),
+        };
+        assert_eq!(sched.price_at(0.0), 0.25);
+        assert_eq!(sched.price_at(65.0), 0.5);
+        assert_eq!(sched.price_at(1e9), 1.0, "last price extends forever");
+        // 30 s @ .25 + 60 s @ .5 + 30 s @ 1.0
+        let c = sched.cost_over(30.0, 150.0);
+        assert!((c - (30.0 * 0.25 + 60.0 * 0.5 + 30.0 * 1.0)).abs() < 1e-9, "{c}");
+        // Beyond the path: the last tick price carries.
+        let tail = sched.cost_over(180.0, 240.0);
+        assert!((tail - 60.0).abs() < 1e-9, "{tail}");
+        assert_eq!(sched.cost_over(10.0, 10.0), 0.0);
+        assert_eq!(sched.max_price_over(0.0, 70.0), 0.5);
+        assert_eq!(sched.max_price_over(0.0, 60.0), 0.25);
+        assert_eq!(sched.max_price_over(150.0, 1e9), 1.0);
+    }
+
+    /// Engine-level: an up-crossing out-bids a running spot VM and the
+    /// report carries price-derived cost stats.
+    #[test]
+    fn up_crossing_reclaims_spot_vm() {
+        let mut cfg = EngineConfig::default();
+        cfg.min_dt = 0.1;
+        cfg.vm_destruction_delay = 0.0;
+        let mut e = Engine::new(cfg, Box::new(FirstFit::new()));
+        let dc = e.add_datacenter("dc0", 1.0);
+        e.add_host(dc, HostSpec::new(8, 1000.0, 16_384.0, 10_000.0, 1_000_000.0));
+        let spot_cfg = SpotConfig::terminate().with_min_running(0.0).with_warning(1.0);
+        let spot = e.submit_vm(Vm::spot(0, VmSpec::new(1000.0, 4), spot_cfg));
+        e.submit_cloudlet(Cloudlet::new(0, 1_000_000.0, 4).with_vm(spot));
+        // Hand-built schedule: price jumps above the bid at t=120.
+        let sched = Arc::new(MarketSchedule {
+            tick: 60.0,
+            od_price: 1.0,
+            bid: 0.5,
+            prices: vec![0.3, 0.3, 0.7, 0.7],
+            crossings: vec![Crossing { at: 120.0, up: true }],
+        });
+        apply(&mut e, &sched);
+        e.terminate_at(600.0);
+        let report = e.run();
+        assert_eq!(e.world.vms[spot].state, VmState::Terminated);
+        let stopped = e.world.vms[spot].stopped_at.unwrap();
+        assert!((stopped - 121.0).abs() < 0.5, "warned at 120 + 1 s warning: {stopped}");
+        assert_eq!(report.market.price_reclaims, 1);
+        assert_eq!(report.spot.interruptions, 1);
+        // Ran [0, 121) on 4 PEs at 0.3 then 0.7 $/PE-hour.
+        assert!(report.market.spot_cost_usd > 0.0);
+        assert!(report.market.on_demand_cost_usd > report.market.spot_cost_usd);
+        assert!(report.market.savings_ratio > 0.0 && report.market.savings_ratio < 1.0);
+        assert!((report.market.max_price_paid - 0.7).abs() < 1e-9);
+        assert!(report.market.mean_price_paid > 0.3 && report.market.mean_price_paid < 0.7);
+    }
+
+    /// Engine-level: a down-crossing drains the retry queue so a
+    /// hibernated spot resumes once the price dips back under its bid.
+    #[test]
+    fn down_crossing_resumes_hibernated_spot() {
+        let mut cfg = EngineConfig::default();
+        cfg.min_dt = 0.1;
+        cfg.vm_destruction_delay = 0.0;
+        cfg.resubmit_cooldown = 1.0;
+        cfg.retry_interval = 1e6; // only the market event can wake it up
+        let mut e = Engine::new(cfg, Box::new(FirstFit::new()));
+        let dc = e.add_datacenter("dc0", 1.0);
+        e.add_host(dc, HostSpec::new(8, 1000.0, 16_384.0, 10_000.0, 1_000_000.0));
+        let spot_cfg = SpotConfig::hibernate()
+            .with_min_running(0.0)
+            .with_warning(0.0)
+            .with_hibernation_timeout(10_000.0);
+        let spot =
+            e.submit_vm(Vm::spot(0, VmSpec::new(1000.0, 8), spot_cfg).with_persistent(1_000.0));
+        // 80_000 MI at 8000 MIPS -> 10 s of work once resumed.
+        e.submit_cloudlet(Cloudlet::new(0, 80_000.0, 8).with_vm(spot));
+        let sched = Arc::new(MarketSchedule {
+            tick: 60.0,
+            od_price: 1.0,
+            bid: 0.5,
+            prices: vec![0.3, 0.7, 0.7, 0.3, 0.3],
+            crossings: vec![
+                Crossing { at: 60.0, up: true },
+                Crossing { at: 180.0, up: false },
+            ],
+        });
+        apply(&mut e, &sched);
+        e.terminate_at(600.0);
+        let report = e.run();
+        assert_eq!(e.world.vms[spot].state, VmState::Finished, "resumed and finished");
+        assert_eq!(report.market.price_reclaims, 1);
+        assert_eq!(report.spot.redeployments, 1);
+        // Interrupted at 60, resumed at the 180 s down-crossing.
+        let ivs = e.world.vms[spot].history.intervals();
+        assert_eq!(ivs.len(), 2);
+        assert!((ivs[1].start - 180.0).abs() < 2.0, "resumed at {}", ivs[1].start);
+    }
+
+    /// Market-free engines report all-zero market stats.
+    #[test]
+    fn market_free_run_reports_zero_stats() {
+        let mut cfg = EngineConfig::default();
+        cfg.min_dt = 0.1;
+        cfg.vm_destruction_delay = 0.0;
+        let mut e = Engine::new(cfg, Box::new(FirstFit::new()));
+        let dc = e.add_datacenter("dc0", 1.0);
+        e.add_host(dc, HostSpec::new(8, 1000.0, 16_384.0, 10_000.0, 1_000_000.0));
+        let vm = e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 2)));
+        e.submit_cloudlet(Cloudlet::new(0, 20_000.0, 2).with_vm(vm));
+        let report = e.run();
+        assert_eq!(report.market.price_reclaims, 0);
+        assert_eq!(report.market.spot_cost_usd, 0.0);
+        assert_eq!(report.market.savings_ratio, 0.0);
+    }
+}

@@ -69,6 +69,9 @@ pub struct Recorder {
     /// Chaos reclaim storms fired and the warnings they issued.
     pub storms: u64,
     pub storm_reclaims: u64,
+    /// Spot reclaims caused by an upward market price crossing (the
+    /// spot price rose above the bid level).
+    pub price_reclaims: u64,
     /// Chaos host crashes injected.
     pub host_failures: u64,
     /// Displaced VMs that made it back onto a host, with their
@@ -113,6 +116,7 @@ impl Recorder {
             alloc_failures: 0,
             storms: 0,
             storm_reclaims: 0,
+            price_reclaims: 0,
             host_failures: 0,
             recoveries: 0,
             recovery_secs_sum: 0.0,
@@ -144,6 +148,7 @@ impl Recorder {
             alloc_failures,
             storms,
             storm_reclaims,
+            price_reclaims,
             host_failures,
             recoveries,
             recovery_secs_sum,
@@ -163,6 +168,7 @@ impl Recorder {
         *alloc_failures = 0;
         *storms = 0;
         *storm_reclaims = 0;
+        *price_reclaims = 0;
         *host_failures = 0;
         *recoveries = 0;
         *recovery_secs_sum = 0.0;
@@ -240,6 +246,7 @@ mod tests {
         r.alloc_attempts = 9;
         r.storms = 3;
         r.storm_reclaims = 12;
+        r.price_reclaims = 6;
         r.host_failures = 2;
         r.recoveries = 4;
         r.recovery_secs_sum = 55.0;
@@ -254,6 +261,7 @@ mod tests {
         assert_eq!(r.alloc_attempts, 0);
         assert_eq!(r.storms, 0);
         assert_eq!(r.storm_reclaims, 0);
+        assert_eq!(r.price_reclaims, 0);
         assert_eq!(r.host_failures, 0);
         assert_eq!(r.recoveries, 0);
         assert_eq!(r.recovery_secs_sum, 0.0);

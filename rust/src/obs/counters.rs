@@ -25,6 +25,8 @@ pub struct EngineCounters {
     pub preemption_scans: u64,
     /// Chaos events applied (host crashes/recoveries, storms, outages).
     pub chaos_events: u64,
+    /// Market price-crossing events applied (up and down crossings).
+    pub market_events: u64,
 }
 
 impl EngineCounters {
@@ -41,6 +43,7 @@ impl EngineCounters {
         self.placement_hits += other.placement_hits;
         self.preemption_scans += other.preemption_scans;
         self.chaos_events += other.chaos_events;
+        self.market_events += other.market_events;
     }
 
     /// Serialize for the telemetry sidecar. Counter magnitudes stay far
@@ -53,6 +56,7 @@ impl EngineCounters {
         o.set("placement_hits", Json::Num(self.placement_hits as f64));
         o.set("preemption_scans", Json::Num(self.preemption_scans as f64));
         o.set("chaos_events", Json::Num(self.chaos_events as f64));
+        o.set("market_events", Json::Num(self.market_events as f64));
         o
     }
 
@@ -68,6 +72,7 @@ impl EngineCounters {
             placement_hits: num("placement_hits")?,
             preemption_scans: num("preemption_scans")?,
             chaos_events: num("chaos_events")?,
+            market_events: num("market_events")?,
         })
     }
 }
@@ -85,6 +90,7 @@ mod tests {
             placement_hits: 398,
             preemption_scans: 7,
             chaos_events: 3,
+            market_events: 11,
         };
         let text = Json::Obj(c.to_json()).to_string_compact();
         let back = EngineCounters::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();

@@ -50,11 +50,12 @@ use std::time::{Duration, Instant};
 
 use crate::chaos::ChaosSchedule;
 use crate::engine::{Engine, EngineScratch};
+use crate::market::MarketSchedule;
 use crate::obs::{telemetry as tel, EngineCounters, Telemetry};
 use crate::trace::workload::{self, trace_engine_config};
 
 use super::grid::{Cell, Substrate, SweepSpec};
-use super::prebuild::{panic_message, ChaosSlots, Prebuilt, PrebuildSlots};
+use super::prebuild::{panic_message, ChaosSlots, MarketSlots, Prebuilt, PrebuildSlots};
 use super::report::{CellResult, SweepReport};
 
 /// Worker threads to use when the caller does not care: one per available
@@ -181,6 +182,9 @@ fn run_cells_instrumented(
     // per (substrate, seed, chaos spec) triple; chaos-free grids size an
     // empty table and pay nothing.
     let chaos_slots = ChaosSlots::for_cells(cells);
+    // Compiled spot-price paths likewise, keyed per
+    // (substrate, seed, market spec) triple.
+    let market_slots = MarketSlots::for_cells(cells);
 
     let threads = threads.max(1).min(total.max(1));
     let next = AtomicUsize::new(0);
@@ -195,6 +199,7 @@ fn run_cells_instrumented(
     std::thread::scope(|scope| {
         let slots = &slots;
         let chaos_slots = &chaos_slots;
+        let market_slots = &market_slots;
         let next = &next;
         let done = &done;
         let prebuild_ns = &prebuild_ns;
@@ -232,9 +237,10 @@ fn run_cells_instrumented(
                                 let chaos = chaos_slots
                                     .get(spec, i, &cells[i], prebuilt)
                                     .map(Arc::as_ref);
+                                let market = market_slots.get(spec, i, &cells[i], prebuilt);
                                 let t0 = Instant::now();
                                 let (result, returned) =
-                                    run_cell(spec, &cells[i], prebuilt, chaos, scratch);
+                                    run_cell(spec, &cells[i], prebuilt, chaos, market, scratch);
                                 scratch = returned;
                                 let elapsed = t0.elapsed();
                                 cell_ns.fetch_add(
@@ -310,6 +316,7 @@ fn run_cell(
     cell: &Cell,
     prebuilt: &Prebuilt,
     chaos: Option<&ChaosSchedule>,
+    market: Option<&Arc<MarketSchedule>>,
     scratch: EngineScratch,
 ) -> (CellResult, EngineScratch) {
     let retain = spec.retain.matches(cell);
@@ -342,6 +349,9 @@ fn run_cell(
         // pure data, so this only enqueues events (plus surge VMs).
         if let Some(sched) = chaos {
             crate::chaos::apply(&mut engine, sched);
+        }
+        if let Some(sched) = market {
+            crate::market::apply(&mut engine, sched);
         }
         let report = engine.run();
         let series = if retain { Some(engine.recorder.take_series()) } else { None };
@@ -504,6 +514,73 @@ mod tests {
             );
         }
         assert!(full.resilience.storm_reclaims >= quarter.resilience.storm_reclaims);
+    }
+
+    /// A market axis threads through the driver end to end: the price
+    /// path compiles, crossings fire, and cost stats land in the cell
+    /// reports (high volatility reclaims at least as often as zero
+    /// volatility, which never crosses a bid above the mean).
+    #[test]
+    fn market_axis_cells_run_with_cost_metrics() {
+        let scenario = ComparisonConfig { terminate_at: 600.0, ..Default::default() };
+        let spec = SweepSpec::new(scenario)
+            .with_seeds(vec![20_250_710])
+            .with_policies(vec![PolicySpec::FirstFit])
+            .with_axis(ScenarioAxis::MarketBidMargin(vec![1.5]))
+            .with_axis(ScenarioAxis::MarketVolatility(vec![0.0, 2.0]));
+        let report = run(&spec, 2);
+        assert_eq!(report.total(), 2);
+        assert_eq!(report.failed(), 0, "market cell failed: {:?}", report.cells);
+        let calm = report.cells[0].report().unwrap();
+        let wild = report.cells[1].report().unwrap();
+        for r in [calm, wild] {
+            assert!(r.market.spot_cost_usd > 0.0, "spots ran, so they accrued cost: {r:?}");
+            assert!(r.market.on_demand_cost_usd > 0.0, "{r:?}");
+            assert!(r.market.mean_price_paid > 0.0, "{r:?}");
+            assert!(r.market.max_price_paid >= r.market.mean_price_paid, "{r:?}");
+        }
+        // A zero-volatility path follows the daily mean (peak 0.5), far
+        // under both the 1.5x on-demand bid and the on-demand price.
+        assert_eq!(calm.market.price_reclaims, 0, "flat path stays under a 1.5x on-demand bid");
+        assert!(calm.market.on_demand_cost_usd > calm.market.spot_cost_usd);
+        assert!(calm.market.savings_ratio > 0.0 && calm.market.savings_ratio < 1.0);
+        assert!(wild.market.price_reclaims >= calm.market.price_reclaims);
+    }
+
+    /// Market state cannot leak across cells through a recycled worker
+    /// scratch: a threads=1 run (one scratch threaded through every cell)
+    /// bit-matches per-cell runs on fresh scratches, including the cell
+    /// where a market cell is followed by a market-free one.
+    #[test]
+    fn recycled_scratch_keeps_market_cells_isolated() {
+        let scenario = ComparisonConfig { terminate_at: 600.0, ..Default::default() };
+        let spec = SweepSpec::new(scenario)
+            .with_seeds(vec![20_250_710])
+            .with_policies(vec![PolicySpec::FirstFit, PolicySpec::BestFit])
+            .with_axis(ScenarioAxis::MarketVolatility(vec![2.0]))
+            // Market-free cells after market ones exercise the reset path.
+            .with_cell(20_250_710, PolicySpec::FirstFit);
+        let recycled = run(&spec, 1);
+        assert_eq!(recycled.failed(), 0, "{:?}", recycled.cells);
+        let cells = spec.cells();
+        for (i, cell) in cells.iter().enumerate() {
+            let fresh = run_cells(&spec, &[*cell], 1, None);
+            let want = fresh[0].report().unwrap();
+            let got = recycled.cells[i].report().unwrap();
+            assert_eq!(got.events_processed, want.events_processed, "cell {i}");
+            assert_eq!(got.clock_end.to_bits(), want.clock_end.to_bits(), "cell {i}");
+            assert_eq!(got.market.price_reclaims, want.market.price_reclaims, "cell {i}");
+            assert_eq!(
+                got.market.spot_cost_usd.to_bits(),
+                want.market.spot_cost_usd.to_bits(),
+                "cell {i}"
+            );
+        }
+        // The market-free trailing cell reports zero market stats.
+        let plain = recycled.cells.last().unwrap().report().unwrap();
+        assert_eq!(plain.market.price_reclaims, 0);
+        assert_eq!(plain.market.spot_cost_usd, 0.0);
+        assert_eq!(plain.market.max_price_paid, 0.0);
     }
 
     /// `run_observed` streams a validating event stream to the sidecar

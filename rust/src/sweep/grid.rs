@@ -31,6 +31,7 @@ use crate::allocation::{
 use crate::chaos::{BrokerOutage, ChaosSpec, DemandSurge, HostMtbf, ReclaimStorm};
 use crate::config::scenario::{comparison_engine_config, ComparisonConfig};
 use crate::engine::{EngineConfig, VictimPolicy};
+use crate::market::MarketSpec;
 use crate::trace::synth::SynthConfig;
 use crate::trace::workload::WorkloadConfig;
 use crate::vm::{InterruptionBehavior, SpotConfig};
@@ -246,6 +247,9 @@ pub struct CellSpec {
     /// Chaos-injection faults compiled per cell (`crate::chaos`); `NONE`
     /// keeps the run fault-free.
     pub chaos: ChaosSpec,
+    /// Spot-price market model compiled per cell (`crate::market`);
+    /// `NONE` keeps the run market-free.
+    pub market: MarketSpec,
 }
 
 impl CellSpec {
@@ -257,6 +261,7 @@ impl CellSpec {
             spot: SpotOverride::NONE,
             victim: None,
             chaos: ChaosSpec::NONE,
+            market: MarketSpec::NONE,
         }
     }
 
@@ -295,6 +300,18 @@ impl CellSpec {
         }
         if let Some(s) = self.chaos.demand_surge {
             parts.push(format!("surge={}", s.label()));
+        }
+        if let Some(v) = self.market.volatility {
+            parts.push(format!("vol={v}"));
+        }
+        if let Some(v) = self.market.mean_reversion {
+            parts.push(format!("rev={v}"));
+        }
+        if let Some(v) = self.market.daily_amplitude {
+            parts.push(format!("amp={v}"));
+        }
+        if let Some(v) = self.market.bid_margin {
+            parts.push(format!("bid={v}"));
         }
         if parts.is_empty() {
             "-".to_string()
@@ -339,13 +356,26 @@ pub enum ScenarioAxis {
     /// `at<secs>-vms<n>-pes<n>-for<secs>` grammar of
     /// [`DemandSurge::parse`].
     ChaosDemandSurge(Vec<DemandSurge>),
+    /// Spot-price OU volatility values (`market.volatility`), >= 0.
+    MarketVolatility(Vec<f64>),
+    /// Spot-price OU mean-reversion rates (`market.mean-reversion`),
+    /// per-second, > 0.
+    MarketMeanReversion(Vec<f64>),
+    /// Daily periodic price-amplitude fractions
+    /// (`market.daily-amplitude`), in [0, 1].
+    MarketDailyAmplitude(Vec<f64>),
+    /// Bid levels as a margin over the long-run spot mean
+    /// (`market.bid-margin`), > 0; bid = on-demand price x margin.
+    MarketBidMargin(Vec<f64>),
 }
 
 impl ScenarioAxis {
     /// Parse one `--axis` argument: `<name>=<v1,v2,...>` with names
     /// `spot.warning`, `spot.hibernation-timeout`, `spot.behavior`,
     /// `hlem.alpha`, `victim`, `substrate`, `chaos.host-mtbf`,
-    /// `chaos.reclaim-storm`, `chaos.broker-outage`, `chaos.demand-surge`.
+    /// `chaos.reclaim-storm`, `chaos.broker-outage`, `chaos.demand-surge`,
+    /// `market.volatility`, `market.mean-reversion`,
+    /// `market.daily-amplitude`, `market.bid-margin`.
     pub fn parse(s: &str) -> Result<ScenarioAxis, String> {
         let (name, vals) = s
             .split_once('=')
@@ -373,10 +403,32 @@ impl ScenarioAxis {
             "chaos.demand-surge" => {
                 Ok(ScenarioAxis::ChaosDemandSurge(parse_each(vals, DemandSurge::parse)?))
             }
+            "market.volatility" => Ok(ScenarioAxis::MarketVolatility(parse_market_list(
+                vals,
+                "market.volatility",
+                MarketBound::NonNegative,
+            )?)),
+            "market.mean-reversion" => Ok(ScenarioAxis::MarketMeanReversion(parse_market_list(
+                vals,
+                "market.mean-reversion",
+                MarketBound::Positive,
+            )?)),
+            "market.daily-amplitude" => Ok(ScenarioAxis::MarketDailyAmplitude(parse_market_list(
+                vals,
+                "market.daily-amplitude",
+                MarketBound::UnitInterval,
+            )?)),
+            "market.bid-margin" => Ok(ScenarioAxis::MarketBidMargin(parse_market_list(
+                vals,
+                "market.bid-margin",
+                MarketBound::Positive,
+            )?)),
             other => Err(format!(
                 "unknown axis '{other}' (expected spot.warning | spot.hibernation-timeout | \
                  spot.behavior | hlem.alpha | victim | substrate | chaos.host-mtbf | \
-                 chaos.reclaim-storm | chaos.broker-outage | chaos.demand-surge)"
+                 chaos.reclaim-storm | chaos.broker-outage | chaos.demand-surge | \
+                 market.volatility | market.mean-reversion | market.daily-amplitude | \
+                 market.bid-margin)"
             )),
         }
     }
@@ -394,6 +446,10 @@ impl ScenarioAxis {
             ScenarioAxis::ChaosReclaimStorm(_) => "chaos.reclaim-storm",
             ScenarioAxis::ChaosBrokerOutage(_) => "chaos.broker-outage",
             ScenarioAxis::ChaosDemandSurge(_) => "chaos.demand-surge",
+            ScenarioAxis::MarketVolatility(_) => "market.volatility",
+            ScenarioAxis::MarketMeanReversion(_) => "market.mean-reversion",
+            ScenarioAxis::MarketDailyAmplitude(_) => "market.daily-amplitude",
+            ScenarioAxis::MarketBidMargin(_) => "market.bid-margin",
         }
     }
 
@@ -409,6 +465,10 @@ impl ScenarioAxis {
             ScenarioAxis::ChaosReclaimStorm(v) => v.len(),
             ScenarioAxis::ChaosBrokerOutage(v) => v.len(),
             ScenarioAxis::ChaosDemandSurge(v) => v.len(),
+            ScenarioAxis::MarketVolatility(v)
+            | ScenarioAxis::MarketMeanReversion(v)
+            | ScenarioAxis::MarketDailyAmplitude(v)
+            | ScenarioAxis::MarketBidMargin(v) => v.len(),
         }
     }
 
@@ -490,6 +550,34 @@ impl ScenarioAxis {
                         out.push(s);
                     }
                 }
+                ScenarioAxis::MarketVolatility(vals) => {
+                    for &x in vals {
+                        let mut s = v;
+                        s.market.volatility = Some(x);
+                        out.push(s);
+                    }
+                }
+                ScenarioAxis::MarketMeanReversion(vals) => {
+                    for &x in vals {
+                        let mut s = v;
+                        s.market.mean_reversion = Some(x);
+                        out.push(s);
+                    }
+                }
+                ScenarioAxis::MarketDailyAmplitude(vals) => {
+                    for &x in vals {
+                        let mut s = v;
+                        s.market.daily_amplitude = Some(x);
+                        out.push(s);
+                    }
+                }
+                ScenarioAxis::MarketBidMargin(vals) => {
+                    for &x in vals {
+                        let mut s = v;
+                        s.market.bid_margin = Some(x);
+                        out.push(s);
+                    }
+                }
             }
         }
         out
@@ -525,6 +613,36 @@ fn parse_secs_list(list: &str, axis: &str) -> Result<Vec<f64>, String> {
     let vals = parse_f64_list(list, axis)?;
     if let Some(bad) = vals.iter().find(|v| **v < 0.0) {
         return Err(format!("axis {axis}: {bad} is negative (seconds must be >= 0)"));
+    }
+    Ok(vals)
+}
+
+/// Domain constraint on one `market.*` axis's values.
+#[derive(Clone, Copy)]
+enum MarketBound {
+    /// `>= 0` (volatility).
+    NonNegative,
+    /// `> 0` (mean-reversion rate, bid margin).
+    Positive,
+    /// `[0, 1]` (daily amplitude fraction).
+    UnitInterval,
+}
+
+fn parse_market_list(list: &str, axis: &str, bound: MarketBound) -> Result<Vec<f64>, String> {
+    let vals = parse_f64_list(list, axis)?;
+    for v in &vals {
+        match bound {
+            MarketBound::NonNegative if *v < 0.0 => {
+                return Err(format!("axis {axis}: {v} is negative (must be >= 0)"));
+            }
+            MarketBound::Positive if *v <= 0.0 => {
+                return Err(format!("axis {axis}: {v} must be > 0"));
+            }
+            MarketBound::UnitInterval if !(0.0..=1.0).contains(v) => {
+                return Err(format!("axis {axis}: {v} is outside [0, 1]"));
+            }
+            _ => {}
+        }
     }
     Ok(vals)
 }
@@ -1023,6 +1141,22 @@ mod tests {
                 DemandSurge::parse("at600-vms40-pes4-for600").unwrap()
             ])
         );
+        assert_eq!(
+            ScenarioAxis::parse("market.volatility=0,0.05,0.2").unwrap(),
+            ScenarioAxis::MarketVolatility(vec![0.0, 0.05, 0.2])
+        );
+        assert_eq!(
+            ScenarioAxis::parse("market.mean-reversion=0.0002,0.001").unwrap(),
+            ScenarioAxis::MarketMeanReversion(vec![0.0002, 0.001])
+        );
+        assert_eq!(
+            ScenarioAxis::parse("market.daily-amplitude=0,0.25,1").unwrap(),
+            ScenarioAxis::MarketDailyAmplitude(vec![0.0, 0.25, 1.0])
+        );
+        assert_eq!(
+            ScenarioAxis::parse("market.bid-margin=0.5,0.75").unwrap(),
+            ScenarioAxis::MarketBidMargin(vec![0.5, 0.75])
+        );
     }
 
     #[test]
@@ -1055,6 +1189,13 @@ mod tests {
             ScenarioAxis::parse("chaos.demand-surge=at600-vms0-pes4-for600").is_err(),
             "zero vms"
         );
+        assert!(ScenarioAxis::parse("market.volatility=-0.1").is_err(), "negative vol");
+        assert!(ScenarioAxis::parse("market.volatility=inf").is_err(), "non-finite vol");
+        assert!(ScenarioAxis::parse("market.mean-reversion=0").is_err(), "zero reversion");
+        assert!(ScenarioAxis::parse("market.daily-amplitude=1.5").is_err(), "amp > 1");
+        assert!(ScenarioAxis::parse("market.daily-amplitude=-0.1").is_err(), "amp < 0");
+        assert!(ScenarioAxis::parse("market.bid-margin=0").is_err(), "zero margin");
+        assert!(ScenarioAxis::parse("market.bid-margin=abc").is_err(), "non-numeric");
     }
 
     /// Chaos axes expand variants like any other axis: variant-major,
@@ -1077,6 +1218,29 @@ mod tests {
             assert_eq!(v.chaos.broker_outage, Some(outage));
             assert_eq!(v.chaos.reclaim_storm, Some(*storm));
             assert!(!v.chaos.is_none());
+        }
+        assert_eq!(spec.cell_count(), 2);
+    }
+
+    /// Market axes expand variants like the chaos axes: variant-major,
+    /// value-minor, fields composing across `market.*` families (and with
+    /// chaos axes on the same grid).
+    #[test]
+    fn market_axes_expand_and_compose() {
+        let outage = BrokerOutage::parse("at900-for300").unwrap();
+        let spec = SweepSpec::new(ComparisonConfig::default())
+            .with_seeds(vec![1])
+            .with_policies(vec![PolicySpec::FirstFit])
+            .with_axis(ScenarioAxis::ChaosBrokerOutage(vec![outage]))
+            .with_axis(ScenarioAxis::MarketBidMargin(vec![0.5]))
+            .with_axis(ScenarioAxis::MarketVolatility(vec![0.05, 0.2]));
+        let variants = spec.variants();
+        assert_eq!(variants.len(), 2);
+        for (v, vol) in variants.iter().zip(&[0.05, 0.2]) {
+            assert_eq!(v.chaos.broker_outage, Some(outage));
+            assert_eq!(v.market.bid_margin, Some(0.5));
+            assert_eq!(v.market.volatility, Some(*vol));
+            assert!(!v.market.is_none());
         }
         assert_eq!(spec.cell_count(), 2);
     }
@@ -1155,12 +1319,19 @@ mod tests {
             spot: SpotOverride { warning_time: Some(60.0), ..SpotOverride::NONE },
             victim: Some(VictimPolicy::Youngest),
             chaos: ChaosSpec::NONE,
+            market: MarketSpec::NONE,
         };
         assert_eq!(spec.variant_label(), "trace warn=60 victim=youngest");
         // Chaos axis values label with their canonical parse grammar.
         let mut chaotic = CellSpec::comparison(PolicySpec::FirstFit);
         chaotic.chaos.reclaim_storm = Some(ReclaimStorm::parse("at1200-frac0.5").unwrap());
         assert_eq!(chaotic.variant_label(), "storm=at1200-frac0.5");
+        // Market values label with shortest-f64 Display, so the label
+        // parses back to the exact same value.
+        let mut market = CellSpec::comparison(PolicySpec::FirstFit);
+        market.market.volatility = Some(0.05);
+        market.market.bid_margin = Some(0.5);
+        assert_eq!(market.variant_label(), "vol=0.05 bid=0.5");
         // Adjusted-HLEM rows always carry their alpha, so an hlem.alpha
         // axis stays readable in the aggregate table and progress lines.
         let adj = CellSpec::comparison(PolicySpec::Hlem { adjusted: true, alpha: -0.3 });

@@ -30,6 +30,7 @@ use std::sync::{Arc, OnceLock};
 
 use crate::chaos::{self, ChaosSchedule, ChaosSpec};
 use crate::config::scenario::{plan_comparison_workload, ComparisonConfig, WorkloadPlan};
+use crate::market::{self, MarketSchedule, MarketSpec};
 use crate::trace::synth::{SynthConfig, TraceGenerator};
 use crate::trace::Trace;
 
@@ -253,6 +254,82 @@ impl ChaosSlots {
         Some(self.slots[slot].get_or_init(|| {
             let (horizon, n_hosts) = substrate_extent(spec, prebuilt);
             Arc::new(chaos::compile(&cell.spec.chaos, cell.seed, horizon, n_hosts))
+        }))
+    }
+}
+
+/// Lazy worker-side market-schedule table, the [`ChaosSlots`] pattern
+/// keyed per distinct (substrate, seed, market spec) triple: every cell
+/// sharing a triple reuses one compiled price path.
+/// [`market::compile`] is deterministic in the triple (plus the substrate
+/// horizon, itself a function of (substrate, seed)), so racing builders
+/// produce identical values and the winning worker never leaks into the
+/// merged artifacts. Market-free cells map to no slot at all.
+pub struct MarketSlots {
+    /// Slot index -> key. `MarketSpec` carries floats (no `Ord`), so dedup
+    /// is a linear scan - grids stay small relative to compile cost.
+    keys: Vec<(u8, u64, MarketSpec)>,
+    slots: Vec<OnceLock<Arc<MarketSchedule>>>,
+    /// Cell index (enumeration order) -> slot index; `usize::MAX` marks a
+    /// market-free cell.
+    cell_slot: Vec<usize>,
+}
+
+impl MarketSlots {
+    /// Size the slot table for `cells` (nothing is compiled yet).
+    pub fn for_cells(cells: &[Cell]) -> Self {
+        let mut keys: Vec<(u8, u64, MarketSpec)> = Vec::new();
+        let mut cell_slot = Vec::with_capacity(cells.len());
+        for cell in cells {
+            if cell.spec.market.is_none() {
+                cell_slot.push(usize::MAX);
+                continue;
+            }
+            let (sub, seed) = slot_key(cell);
+            let key = (sub, seed, cell.spec.market);
+            let slot = match keys.iter().position(|k| *k == key) {
+                Some(i) => i,
+                None => {
+                    keys.push(key);
+                    keys.len() - 1
+                }
+            };
+            cell_slot.push(slot);
+        }
+        let mut slots = Vec::new();
+        slots.resize_with(keys.len(), OnceLock::new);
+        MarketSlots { keys, slots, cell_slot }
+    }
+
+    /// Distinct (substrate, seed, market) triples the table covers.
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Schedules actually compiled so far.
+    pub fn built(&self) -> usize {
+        self.slots.iter().filter(|s| s.get().is_some()).count()
+    }
+
+    /// The compiled price schedule for the cell at `cell_index` of the
+    /// enumeration this table was sized for (compiling it on first use),
+    /// or `None` for a market-free cell. `prebuilt` anchors the compile to
+    /// the cell's substrate horizon, so it must be the cell's own prebuild.
+    pub fn get(
+        &self,
+        spec: &SweepSpec,
+        cell_index: usize,
+        cell: &Cell,
+        prebuilt: &Prebuilt,
+    ) -> Option<&Arc<MarketSchedule>> {
+        let slot = self.cell_slot[cell_index];
+        if slot == usize::MAX {
+            return None;
+        }
+        debug_assert_eq!(self.keys[slot].2, cell.spec.market, "cell/slot table mismatch");
+        Some(self.slots[slot].get_or_init(|| {
+            let (horizon, _) = substrate_extent(spec, prebuilt);
+            Arc::new(market::compile(&cell.spec.market, cell.seed, horizon))
         }))
     }
 }
@@ -493,6 +570,43 @@ mod tests {
             .with_policies(vec![PolicySpec::FirstFit]);
         let plain_cells = plain.cells();
         let none = ChaosSlots::for_cells(&plain_cells);
+        assert_eq!(none.slot_count(), 0);
+        assert!(none.get(&plain, 0, &plain_cells[0], &pb0).is_none());
+    }
+
+    /// Market slots dedup per (substrate, seed, market) triple, share one
+    /// compiled price path per triple, and skip market-free cells.
+    #[test]
+    fn market_slots_compile_once_per_triple() {
+        use crate::sweep::grid::ScenarioAxis;
+        let spec = crate::sweep::SweepSpec::new(ComparisonConfig::default())
+            .with_seeds(vec![1, 2])
+            .with_policies(vec![PolicySpec::FirstFit, PolicySpec::BestFit])
+            .with_axis(ScenarioAxis::MarketVolatility(vec![0.1]));
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 4);
+        let prebuilds = PrebuildSlots::for_cells(&cells);
+        let market = MarketSlots::for_cells(&cells);
+        assert_eq!(market.slot_count(), 2, "two seeds, one market value -> two slots");
+        assert_eq!(market.built(), 0, "slots are lazy");
+        let pb0 = prebuilds.get(&spec, 0, &cells[0]).as_ref().unwrap().clone();
+        let a = market.get(&spec, 0, &cells[0], &pb0).unwrap().clone();
+        let b = market.get(&spec, 1, &cells[1], &pb0).unwrap().clone();
+        assert!(Arc::ptr_eq(&a, &b), "same triple must share one schedule");
+        assert_eq!(market.built(), 1);
+        assert!(!a.is_empty(), "an active spec compiles a non-empty price path");
+        let pb2 = prebuilds.get(&spec, 2, &cells[2]).as_ref().unwrap().clone();
+        let c = market.get(&spec, 2, &cells[2], &pb2).unwrap().clone();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(market.built(), 2);
+        assert_ne!(a.prices, c.prices, "different seeds walk different paths");
+
+        // Market-free grids never compile anything and return None.
+        let plain = crate::sweep::SweepSpec::new(ComparisonConfig::default())
+            .with_seeds(vec![1])
+            .with_policies(vec![PolicySpec::FirstFit]);
+        let plain_cells = plain.cells();
+        let none = MarketSlots::for_cells(&plain_cells);
         assert_eq!(none.slot_count(), 0);
         assert!(none.get(&plain, 0, &plain_cells[0], &pb0).is_none());
     }

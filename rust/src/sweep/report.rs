@@ -59,6 +59,11 @@ pub struct VariantAggregate {
     pub interruptions_per_storm: Summary,
     pub max_recovery_secs: Summary,
     pub work_lost_mi: Summary,
+    /// Market cost/reliability moments (market sweeps; all-zero for
+    /// market-free cells).
+    pub spot_cost_usd: Summary,
+    pub savings_ratio: Summary,
+    pub price_reclaims: Summary,
 }
 
 impl SweepReport {
@@ -118,6 +123,9 @@ impl SweepReport {
                         interruptions_per_storm: Summary::new(),
                         max_recovery_secs: Summary::new(),
                         work_lost_mi: Summary::new(),
+                        spot_cost_usd: Summary::new(),
+                        savings_ratio: Summary::new(),
+                        price_reclaims: Summary::new(),
                     });
                     aggs.len() - 1
                 }
@@ -134,6 +142,9 @@ impl SweepReport {
             a.interruptions_per_storm.add(report.resilience.interruptions_per_storm);
             a.max_recovery_secs.add(report.resilience.max_recovery_secs);
             a.work_lost_mi.add(report.resilience.work_lost_mi);
+            a.spot_cost_usd.add(report.market.spot_cost_usd);
+            a.savings_ratio.add(report.market.savings_ratio);
+            a.price_reclaims.add(report.market.price_reclaims as f64);
         }
         aggs
     }
@@ -156,6 +167,10 @@ impl SweepReport {
             "chaos_reclaim_storm",
             "chaos_broker_outage",
             "chaos_demand_surge",
+            "market_volatility",
+            "market_mean_reversion",
+            "market_daily_amplitude",
+            "market_bid_margin",
             "status",
             "error",
             "clock_end",
@@ -179,6 +194,12 @@ impl SweepReport {
             "max_recovery_s",
             "work_lost_mi",
             "work_recovered_mi",
+            "spot_cost_usd",
+            "od_cost_usd",
+            "savings_ratio",
+            "price_reclaims",
+            "mean_price_paid",
+            "max_price_paid",
         ]);
         for c in &self.cells {
             let spec = &c.cell.spec;
@@ -196,6 +217,10 @@ impl SweepReport {
                 spec.chaos.reclaim_storm.map(|x| x.label()).unwrap_or_default(),
                 spec.chaos.broker_outage.map(|x| x.label()).unwrap_or_default(),
                 spec.chaos.demand_surge.map(|x| x.label()).unwrap_or_default(),
+                spec.market.volatility.map(crate::market::label_f64).unwrap_or_default(),
+                spec.market.mean_reversion.map(crate::market::label_f64).unwrap_or_default(),
+                spec.market.daily_amplitude.map(crate::market::label_f64).unwrap_or_default(),
+                spec.market.bid_margin.map(crate::market::label_f64).unwrap_or_default(),
             ];
             match &c.outcome {
                 Ok(r) => row.extend(vec![
@@ -222,11 +247,17 @@ impl SweepReport {
                     fmt_num(r.resilience.max_recovery_secs),
                     fmt_num(r.resilience.work_lost_mi),
                     fmt_num(r.resilience.work_recovered_mi),
+                    fmt_num(r.market.spot_cost_usd),
+                    fmt_num(r.market.on_demand_cost_usd),
+                    fmt_num(r.market.savings_ratio),
+                    r.market.price_reclaims.to_string(),
+                    fmt_num(r.market.mean_price_paid),
+                    fmt_num(r.market.max_price_paid),
                 ]),
                 Err(e) => {
                     row.push("failed".into());
                     row.push(e.clone());
-                    row.extend(std::iter::repeat(String::new()).take(21));
+                    row.extend(std::iter::repeat(String::new()).take(27));
                 }
             }
             csv.push(row);
@@ -296,6 +327,10 @@ impl SweepReport {
                     .map(|x| Json::Str(x.label()))
                     .unwrap_or(Json::Null),
             );
+            o.set("market_volatility", opt_num(spec.market.volatility));
+            o.set("market_mean_reversion", opt_num(spec.market.mean_reversion));
+            o.set("market_daily_amplitude", opt_num(spec.market.daily_amplitude));
+            o.set("market_bid_margin", opt_num(spec.market.bid_margin));
             o.set("runs", Json::Num(a.runs as f64));
             o.set("interruptions", stat_obj(&a.interruptions));
             o.set("interrupted_vms", stat_obj(&a.interrupted_vms));
@@ -308,6 +343,9 @@ impl SweepReport {
             o.set("interruptions_per_storm", stat_obj(&a.interruptions_per_storm));
             o.set("max_recovery_secs", stat_obj(&a.max_recovery_secs));
             o.set("work_lost_mi", stat_obj(&a.work_lost_mi));
+            o.set("spot_cost_usd", stat_obj(&a.spot_cost_usd));
+            o.set("savings_ratio", stat_obj(&a.savings_ratio));
+            o.set("price_reclaims", stat_obj(&a.price_reclaims));
             variants.push(Json::Obj(o));
         }
         root.set("policies", Json::Arr(variants));
@@ -354,7 +392,8 @@ impl SweepReport {
 mod tests {
     use super::*;
     use crate::chaos::{ChaosSpec, ReclaimStorm};
-    use crate::engine::{ResilienceStats, SpotStats, VictimPolicy};
+    use crate::engine::{MarketStats, ResilienceStats, SpotStats, VictimPolicy};
+    use crate::market::MarketSpec;
     use crate::sweep::grid::{PolicySpec, SpotOverride, Substrate};
 
     fn fake_report(policy: &'static str, interruptions: u64) -> Report {
@@ -392,6 +431,14 @@ mod tests {
                 work_lost_mi: 100.0 * interruptions as f64,
                 work_recovered_mi: 50.0,
                 ..Default::default()
+            },
+            market: MarketStats {
+                spot_cost_usd: 2.0 * interruptions as f64,
+                on_demand_cost_usd: 5.0 * interruptions as f64,
+                savings_ratio: 0.6,
+                price_reclaims: interruptions,
+                mean_price_paid: 0.25,
+                max_price_paid: 0.75,
             },
         }
     }
@@ -463,19 +510,21 @@ mod tests {
         assert!(text.starts_with(
             "cell,policy,alpha,seed,substrate,victim,spot_warning,spot_hib_timeout,\
              spot_behavior,chaos_host_mtbf,chaos_reclaim_storm,chaos_broker_outage,\
-             chaos_demand_surge,status"
+             chaos_demand_surge,market_volatility,market_mean_reversion,\
+             market_daily_amplitude,market_bid_margin,status"
         ));
         assert!(
             text.contains(
                 "min_interruption_s,storms,storm_reclaims,interruptions_per_storm,\
                  p95_interruption_s,recoveries,avg_recovery_s,max_recovery_s,\
-                 work_lost_mi,work_recovered_mi"
+                 work_lost_mi,work_recovered_mi,spot_cost_usd,od_cost_usd,\
+                 savings_ratio,price_reclaims,mean_price_paid,max_price_paid"
             ),
-            "resilience columns missing: {text}"
+            "resilience/market columns missing: {text}"
         );
         // Default variants leave the axis columns empty but name the
         // substrate.
-        assert!(text.contains(",comparison,,,,,,,,,ok,"));
+        assert!(text.contains(",comparison,,,,,,,,,,,,,ok,"));
     }
 
     #[test]
@@ -494,10 +543,15 @@ mod tests {
                 reclaim_storm: Some(ReclaimStorm::parse("at1200-frac0.5").unwrap()),
                 ..ChaosSpec::NONE
             },
+            market: MarketSpec {
+                volatility: Some(0.25),
+                bid_margin: Some(0.5),
+                ..MarketSpec::NONE
+            },
         };
         let text = rep.cells_csv().to_string();
         assert!(
-            text.contains(",trace,youngest,60,900,terminate,,at1200-frac0.5,,,ok,"),
+            text.contains(",trace,youngest,60,900,terminate,,at1200-frac0.5,,,0.25,,,0.5,ok,"),
             "axis columns missing: {text}"
         );
     }
@@ -560,6 +614,22 @@ mod tests {
         assert_eq!(
             policies[0].path(&["work_lost_mi", "max"]).unwrap().as_f64(),
             Some(500.0)
+        );
+        // Market axis keys are always present (null when market-free), and
+        // cost moments follow fake_report's 2.0 * interruptions spot cost.
+        assert!(policies[0].path(&["market_volatility"]).is_some());
+        assert!(policies[0].path(&["market_bid_margin"]).is_some());
+        assert_eq!(
+            policies[0].path(&["spot_cost_usd", "mean"]).unwrap().as_f64(),
+            Some(8.0)
+        );
+        assert_eq!(
+            policies[0].path(&["price_reclaims", "max"]).unwrap().as_f64(),
+            Some(5.0)
+        );
+        assert_eq!(
+            policies[0].path(&["savings_ratio", "mean"]).unwrap().as_f64(),
+            Some(0.6)
         );
     }
 

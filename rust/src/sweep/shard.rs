@@ -57,8 +57,9 @@ use std::time::{Duration, Instant};
 use crate::chaos::{BrokerOutage, ChaosSpec, DemandSurge, HostMtbf, ReclaimStorm};
 use crate::obs::{heartbeat_file, read_last_heartbeat, telemetry as tel, StallTracker, Telemetry};
 use crate::config::scenario::ComparisonConfig;
-use crate::engine::{EngineConfig, Report, ResilienceStats, SpotStats, VictimPolicy};
+use crate::engine::{EngineConfig, MarketStats, Report, ResilienceStats, SpotStats, VictimPolicy};
 use crate::cloudlet::SchedulerKind;
+use crate::market::MarketSpec;
 use crate::metrics::TimeSeries;
 use crate::trace::synth::SynthConfig;
 use crate::trace::workload::WorkloadConfig;
@@ -478,6 +479,12 @@ fn axis_to_json(a: &ScenarioAxis) -> Json {
         ScenarioAxis::ChaosDemandSurge(v) => {
             v.iter().map(|x| Json::Str(x.label())).collect()
         }
+        // Market axis values are plain finite f64s: JSON numbers are
+        // exact via shortest-round-trip Display.
+        ScenarioAxis::MarketVolatility(v)
+        | ScenarioAxis::MarketMeanReversion(v)
+        | ScenarioAxis::MarketDailyAmplitude(v)
+        | ScenarioAxis::MarketBidMargin(v) => v.iter().map(|&x| enc_f64(x)).collect(),
     };
     o.set("values", Json::Arr(values));
     Json::Obj(o)
@@ -536,6 +543,10 @@ fn axis_from_json(v: &Json) -> Result<ScenarioAxis, String> {
                 .map(|x| DemandSurge::parse(str_of(x, "axis value")?))
                 .collect::<Result<_, _>>()?,
         )),
+        "market.volatility" => Ok(ScenarioAxis::MarketVolatility(nums()?)),
+        "market.mean-reversion" => Ok(ScenarioAxis::MarketMeanReversion(nums()?)),
+        "market.daily-amplitude" => Ok(ScenarioAxis::MarketDailyAmplitude(nums()?)),
+        "market.bid-margin" => Ok(ScenarioAxis::MarketBidMargin(nums()?)),
         other => Err(format!("unknown axis '{other}'")),
     }
 }
@@ -663,6 +674,13 @@ fn cell_to_json(c: &Cell) -> Json {
         c.spec.chaos.demand_surge.map(|x| Json::Str(x.label())).unwrap_or(Json::Null),
     );
     spec.set("chaos", Json::Obj(ch));
+    let opt_num = |v: Option<f64>| v.map(enc_f64).unwrap_or(Json::Null);
+    let mut mk = JsonObj::new();
+    mk.set("volatility", opt_num(c.spec.market.volatility));
+    mk.set("mean_reversion", opt_num(c.spec.market.mean_reversion));
+    mk.set("daily_amplitude", opt_num(c.spec.market.daily_amplitude));
+    mk.set("bid_margin", opt_num(c.spec.market.bid_margin));
+    spec.set("market", Json::Obj(mk));
     let mut o = JsonObj::new();
     o.set("id", enc_usize(c.id));
     o.set("seed", enc_u64(c.seed));
@@ -674,6 +692,10 @@ fn cell_from_json(v: &Json) -> Result<Cell, String> {
     let o = as_obj(v, "cell")?;
     let so = as_obj(field(o, "spec")?, "cell spec")?;
     let co = as_obj(field(so, "chaos")?, "cell chaos spec")?;
+    let mo = as_obj(field(so, "market")?, "cell market spec")?;
+    let mk_num = |key: &str| -> Result<Option<f64>, String> {
+        opt_json(field(mo, key)?).map(|x| num_of(x, key)).transpose()
+    };
     let spec = CellSpec {
         substrate: Substrate::parse(str_field(so, "substrate")?)?,
         policy: policy_from_json(field(so, "policy")?)?,
@@ -694,6 +716,12 @@ fn cell_from_json(v: &Json) -> Result<Cell, String> {
             demand_surge: opt_json(field(co, "demand_surge")?)
                 .map(|x| DemandSurge::parse(str_of(x, "demand_surge")?))
                 .transpose()?,
+        },
+        market: MarketSpec {
+            volatility: mk_num("volatility")?,
+            mean_reversion: mk_num("mean_reversion")?,
+            daily_amplitude: mk_num("daily_amplitude")?,
+            bid_margin: mk_num("bid_margin")?,
         },
     };
     Ok(Cell { id: usize_field(o, "id")?, seed: u64_field(o, "seed")?, spec })
@@ -741,6 +769,15 @@ fn report_to_json(r: &Report) -> Json {
     re.set("work_lost_mi", enc_f64(rs.work_lost_mi));
     re.set("work_recovered_mi", enc_f64(rs.work_recovered_mi));
     o.set("resilience", Json::Obj(re));
+    let m = &r.market;
+    let mut mk = JsonObj::new();
+    mk.set("spot_cost_usd", enc_f64(m.spot_cost_usd));
+    mk.set("on_demand_cost_usd", enc_f64(m.on_demand_cost_usd));
+    mk.set("savings_ratio", enc_f64(m.savings_ratio));
+    mk.set("price_reclaims", enc_u64(m.price_reclaims));
+    mk.set("mean_price_paid", enc_f64(m.mean_price_paid));
+    mk.set("max_price_paid", enc_f64(m.max_price_paid));
+    o.set("market", Json::Obj(mk));
     Json::Obj(o)
 }
 
@@ -748,6 +785,7 @@ fn report_from_json(v: &Json) -> Result<Report, String> {
     let o = as_obj(v, "report")?;
     let sp = as_obj(field(o, "spot")?, "spot stats")?;
     let re = as_obj(field(o, "resilience")?, "resilience stats")?;
+    let mk = as_obj(field(o, "market")?, "market stats")?;
     let max_per_vm = u64_field(sp, "max_interruptions_per_vm")?;
     Ok(Report {
         policy: static_policy_name(str_field(o, "policy")?)?,
@@ -789,6 +827,14 @@ fn report_from_json(v: &Json) -> Result<Report, String> {
             max_recovery_secs: f64_field(re, "max_recovery_secs")?,
             work_lost_mi: f64_field(re, "work_lost_mi")?,
             work_recovered_mi: f64_field(re, "work_recovered_mi")?,
+        },
+        market: MarketStats {
+            spot_cost_usd: f64_field(mk, "spot_cost_usd")?,
+            on_demand_cost_usd: f64_field(mk, "on_demand_cost_usd")?,
+            savings_ratio: f64_field(mk, "savings_ratio")?,
+            price_reclaims: u64_field(mk, "price_reclaims")?,
+            mean_price_paid: f64_field(mk, "mean_price_paid")?,
+            max_price_paid: f64_field(mk, "max_price_paid")?,
         },
     })
 }
@@ -1505,6 +1551,10 @@ mod tests {
                 "at600-for120.25",
             )
             .unwrap()]))
+            // Non-dyadic f64 axis values: exact only because JSON numbers
+            // use shortest-round-trip Display.
+            .with_axis(ScenarioAxis::MarketVolatility(vec![0.05, 0.2]))
+            .with_axis(ScenarioAxis::MarketBidMargin(vec![0.1 + 0.7]))
             .with_series_retention(SeriesFilter::parse("policy=first-fit,seed=2").unwrap())
             .with_cell(77, PolicySpec::BestFit);
         spec.trace.synth.machines = 10;
@@ -1623,6 +1673,14 @@ mod tests {
                     work_lost_mi: 1234.5,
                     work_recovered_mi: 987.0,
                 },
+                market: MarketStats {
+                    spot_cost_usd: 0.1 + 0.2, // 0.30000000000000004
+                    on_demand_cost_usd: 1.25,
+                    savings_ratio: 1.0 - (0.1 + 0.2) / 1.25,
+                    price_reclaims: u64::MAX - 9, // string-encoded: > 2^53
+                    mean_price_paid: 0.4125,
+                    max_price_paid: 1e-300,
+                },
             })
         } else {
             Err("cell exploded".to_string())
@@ -1662,6 +1720,19 @@ mod tests {
             r0.resilience.p95_interruption_secs.to_bits(),
             want.resilience.p95_interruption_secs.to_bits()
         );
+        assert_eq!(
+            r0.market.spot_cost_usd.to_bits(),
+            want.market.spot_cost_usd.to_bits()
+        );
+        assert_eq!(
+            r0.market.savings_ratio.to_bits(),
+            want.market.savings_ratio.to_bits()
+        );
+        assert_eq!(
+            r0.market.max_price_paid.to_bits(),
+            want.market.max_price_paid.to_bits()
+        );
+        assert_eq!(r0.market.price_reclaims, want.market.price_reclaims);
         assert_eq!(r0.wall, Duration::ZERO, "wall time must not cross the wire");
         let s0 = back[0].series.as_ref().unwrap();
         let s_want = results[0].series.as_ref().unwrap();

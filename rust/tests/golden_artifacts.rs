@@ -20,7 +20,8 @@
 use std::path::PathBuf;
 
 use cloudmarket::chaos::{ChaosSpec, ReclaimStorm};
-use cloudmarket::engine::{Report, ResilienceStats, SpotStats, VictimPolicy};
+use cloudmarket::engine::{MarketStats, Report, ResilienceStats, SpotStats, VictimPolicy};
+use cloudmarket::market::MarketSpec;
 use cloudmarket::sweep::{
     Cell, CellResult, CellSpec, PolicySpec, SpotOverride, Substrate, SweepReport,
 };
@@ -42,6 +43,7 @@ fn ok_report(
     max_s: f64,
     min_s: f64,
     resilience: ResilienceStats,
+    market: MarketStats,
 ) -> Report {
     Report {
         policy,
@@ -67,14 +69,16 @@ fn ok_report(
             ..Default::default()
         },
         resilience,
+        market,
     }
 }
 
 /// The pinned 4-cell report: two comparison first-fit cells (a 2-run
 /// aggregate group), one failed adjusted-HLEM cell (a 0-run group with
 /// `null` moments), and one trace-substrate cell with every axis column
-/// set - including a `chaos.reclaim-storm` label - (a 1-run group). All
-/// resilience values are dyadic so the aggregate moments stay bit-exact.
+/// set - including a `chaos.reclaim-storm` label and a full dyadic
+/// `market.*` spec with cost stats - (a 1-run group). All resilience and
+/// market values are dyadic so the aggregate moments stay bit-exact.
 fn pinned_report() -> SweepReport {
     let ff = CellSpec::comparison(PolicySpec::FirstFit);
     let adj = CellSpec::comparison(PolicySpec::Hlem { adjusted: true, alpha: -0.5 });
@@ -90,6 +94,12 @@ fn pinned_report() -> SweepReport {
         chaos: ChaosSpec {
             reclaim_storm: Some(ReclaimStorm::parse("at1200-frac0.5").unwrap()),
             ..ChaosSpec::NONE
+        },
+        market: MarketSpec {
+            volatility: Some(0.25),
+            mean_reversion: Some(0.5),
+            daily_amplitude: Some(0.5),
+            bid_margin: Some(0.5),
         },
     };
     SweepReport {
@@ -122,6 +132,7 @@ fn pinned_report() -> SweepReport {
                         work_recovered_mi: 750.0,
                         ..Default::default()
                     },
+                    MarketStats::default(),
                 )),
                 series: None,
             },
@@ -158,6 +169,7 @@ fn pinned_report() -> SweepReport {
                         work_recovered_mi: 1250.0,
                         ..Default::default()
                     },
+                    MarketStats::default(),
                 )),
                 series: None,
             },
@@ -188,6 +200,14 @@ fn pinned_report() -> SweepReport {
                         work_lost_mi: 500.25,
                         work_recovered_mi: 250.5,
                         ..Default::default()
+                    },
+                    MarketStats {
+                        spot_cost_usd: 12.25,
+                        on_demand_cost_usd: 24.5,
+                        savings_ratio: 0.5,
+                        price_reclaims: 2,
+                        mean_price_paid: 0.25,
+                        max_price_paid: 0.75,
                     },
                 )),
                 series: None,
@@ -233,4 +253,32 @@ fn sweep_artifact_formats_match_golden_corpus() {
          intentional, regenerate with CLOUDMARKET_UPDATE_GOLDEN=1 and commit the \
          fixture."
     );
+}
+
+/// The cells-CSV column order is pinned verbatim, independent of the
+/// fixture files: appending a column is a visible (reviewable) change,
+/// but *reordering* or renaming existing columns silently breaks every
+/// downstream consumer that indexes by position or header name.
+#[test]
+fn cells_csv_column_order_is_pinned() {
+    let text = pinned_report().cells_csv().to_string();
+    let header = text.lines().next().unwrap();
+    assert_eq!(
+        header,
+        "cell,policy,alpha,seed,substrate,victim,spot_warning,spot_hib_timeout,\
+         spot_behavior,chaos_host_mtbf,chaos_reclaim_storm,chaos_broker_outage,\
+         chaos_demand_surge,market_volatility,market_mean_reversion,\
+         market_daily_amplitude,market_bid_margin,status,error,clock_end,events,\
+         vms_finished,vms_terminated,vms_failed,spot_total,interruptions,\
+         interrupted_vms,max_per_vm,avg_interruption_s,max_interruption_s,\
+         min_interruption_s,storms,storm_reclaims,interruptions_per_storm,\
+         p95_interruption_s,recoveries,avg_recovery_s,max_recovery_s,work_lost_mi,\
+         work_recovered_mi,spot_cost_usd,od_cost_usd,savings_ratio,price_reclaims,\
+         mean_price_paid,max_price_paid",
+        "cells CSV column order drifted"
+    );
+    // Every row carries the full column count (46), including error rows.
+    for line in text.lines() {
+        assert_eq!(line.split(',').count(), 46, "ragged row: {line}");
+    }
 }

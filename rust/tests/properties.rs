@@ -604,6 +604,23 @@ fn prop_shard_partition_covers_disjointly_and_round_trips() {
                 dur: rng.uniform(10.0, 600.0),
             }]));
         }
+        if rng.chance(0.4) {
+            let n = 1 + rng.below(3);
+            spec = spec.with_axis(ScenarioAxis::MarketVolatility(
+                (0..n).map(|_| rng.uniform(0.0, 0.5)).collect(),
+            ));
+        }
+        if rng.chance(0.3) {
+            spec = spec.with_axis(ScenarioAxis::MarketMeanReversion(vec![rng
+                .uniform(1e-5, 1e-2)]));
+        }
+        if rng.chance(0.3) {
+            spec = spec.with_axis(ScenarioAxis::MarketDailyAmplitude(vec![rng
+                .uniform(0.0, 1.0)]));
+        }
+        if rng.chance(0.3) {
+            spec = spec.with_axis(ScenarioAxis::MarketBidMargin(vec![rng.uniform(0.1, 2.0)]));
+        }
         if rng.chance(0.3) {
             spec = spec.with_cell(rng.next_u64(), PolicySpec::BestFit);
         }
@@ -753,6 +770,14 @@ fn prop_partial_results_round_trip_bit_exact() {
                             work_lost_mi: rng.uniform(0.0, 1e12),
                             work_recovered_mi: rng.uniform(0.0, 1e12),
                         },
+                        market: cloudmarket::engine::MarketStats {
+                            spot_cost_usd: rng.uniform(0.0, 1e6),
+                            on_demand_cost_usd: rng.uniform(0.0, 1e6),
+                            savings_ratio: rng.uniform(-1.0, 1.0),
+                            price_reclaims: rng.next_u64(),
+                            mean_price_paid: rng.uniform(0.0, 2.0),
+                            max_price_paid: rng.uniform(0.0, 2.0),
+                        },
                     }),
                     series,
                 }
@@ -798,6 +823,19 @@ fn prop_partial_results_round_trip_bit_exact() {
                         x.resilience.work_lost_mi.to_bits(),
                         y.resilience.work_lost_mi.to_bits()
                     );
+                    assert_eq!(
+                        x.market.spot_cost_usd.to_bits(),
+                        y.market.spot_cost_usd.to_bits()
+                    );
+                    assert_eq!(
+                        x.market.savings_ratio.to_bits(),
+                        y.market.savings_ratio.to_bits()
+                    );
+                    assert_eq!(
+                        x.market.max_price_paid.to_bits(),
+                        y.market.max_price_paid.to_bits()
+                    );
+                    assert_eq!(x.market.price_reclaims, y.market.price_reclaims);
                     assert_eq!(y.wall, std::time::Duration::ZERO, "wall must not survive");
                 }
                 (Err(x), Err(y)) => assert_eq!(x, y),
@@ -892,6 +930,144 @@ fn prop_chaos_schedule_compile_is_thread_and_order_invariant() {
                 h.join().unwrap(),
                 reference,
                 "chaos compile must be thread-invariant"
+            );
+        }
+    });
+}
+
+/// Compiled price paths are a pure function of (spec, seed, horizon):
+/// identical bytes no matter which thread compiles them, how many
+/// compiles run concurrently, or what other compiles (for other seeds)
+/// happen in between - the `MarketSlots` analogue of the chaos property
+/// above.
+#[test]
+fn prop_market_schedule_compile_is_thread_and_order_invariant() {
+    use cloudmarket::market::{self, MarketSpec};
+
+    forall(12, 0xFA51, |rng| {
+        let spec = MarketSpec {
+            volatility: rng.chance(0.8).then(|| rng.uniform(0.0, 0.5)),
+            mean_reversion: rng.chance(0.5).then(|| rng.uniform(1e-5, 1e-2)),
+            daily_amplitude: rng.chance(0.5).then(|| rng.uniform(0.0, 1.0)),
+            bid_margin: rng.chance(0.5).then(|| rng.uniform(0.1, 2.0)),
+        };
+        let seed = rng.next_u64();
+        let horizon = rng.uniform(500.0, 200_000.0);
+
+        let reference = format!("{:?}", market::compile(&spec, seed, horizon));
+        // Interleave a compile for a different seed: the price stream must
+        // have no hidden shared state that the extra compile shifts.
+        let _ = market::compile(&spec, seed ^ 0xDEAD_BEEF, horizon);
+        assert_eq!(
+            format!("{:?}", market::compile(&spec, seed, horizon)),
+            reference,
+            "recompiling after an unrelated compile changed the path"
+        );
+
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let mut last = String::new();
+                    for _ in 0..=(i % 3) {
+                        last = format!("{:?}", market::compile(&spec, seed, horizon));
+                    }
+                    last
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(
+                h.join().unwrap(),
+                reference,
+                "market compile must be thread-invariant"
+            );
+        }
+    });
+}
+
+/// For arbitrary in-range OU parameters the compiled path is well-formed:
+/// every price is finite and >= the floor, the tick count matches the
+/// horizon, and the crossing list is exactly the sign changes of
+/// `price > bid` (ascending, alternating, starting consistent with the
+/// first tick).
+#[test]
+fn prop_market_price_paths_finite_positive_and_crossings_consistent() {
+    use cloudmarket::market::{self, MarketSpec, PRICE_FLOOR, TICK_SECS};
+
+    forall(32, 0x0FAB, |rng| {
+        let spec = MarketSpec {
+            volatility: Some(rng.uniform(0.0, 2.0)),
+            mean_reversion: rng.chance(0.7).then(|| rng.uniform(1e-6, 1e-1)),
+            daily_amplitude: rng.chance(0.7).then(|| rng.uniform(0.0, 1.0)),
+            bid_margin: rng.chance(0.7).then(|| rng.uniform(0.05, 3.0)),
+        };
+        let seed = rng.next_u64();
+        let horizon = rng.uniform(100.0, 300_000.0);
+        let sched = market::compile(&spec, seed, horizon);
+
+        assert_eq!(sched.prices.len(), (horizon / TICK_SECS).ceil() as usize);
+        for &p in &sched.prices {
+            assert!(p.is_finite() && p >= PRICE_FLOOR, "price {p} escaped the floor");
+        }
+        // Reconstruct the crossing list from the path and compare.
+        let mut expect = Vec::new();
+        if sched.prices[0] > sched.bid {
+            expect.push((0.0f64, true));
+        }
+        for k in 1..sched.prices.len() {
+            let was = sched.prices[k - 1] > sched.bid;
+            let is = sched.prices[k] > sched.bid;
+            if is != was {
+                expect.push((k as f64 * TICK_SECS, is));
+            }
+        }
+        let got: Vec<(f64, bool)> = sched.crossings.iter().map(|c| (c.at, c.up)).collect();
+        assert_eq!(got, expect, "crossings must be exactly the bid sign changes");
+        for w in sched.crossings.windows(2) {
+            assert!(w[0].at < w[1].at);
+            assert_ne!(w[0].up, w[1].up, "crossing directions must alternate");
+        }
+    });
+}
+
+/// `market.*` axis labels round-trip exactly: formatting a random
+/// in-range value with the shortest-Display label and re-parsing the
+/// axis string reproduces the original bits (the contract that makes
+/// `sweep_cells.csv` axis columns greppable back into `--axis` flags).
+#[test]
+fn prop_market_axis_labels_round_trip_exactly() {
+    use cloudmarket::market::label_f64;
+    use cloudmarket::sweep::ScenarioAxis;
+
+    forall(40, 0x1AB31, |rng| {
+        let n = 1 + rng.below(4) as usize;
+        let vol: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 3.0)).collect();
+        let rev: Vec<f64> = (0..n).map(|_| rng.uniform(1e-7, 1.0)).collect();
+        let amp: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 1.0)).collect();
+        let bid: Vec<f64> = (0..n).map(|_| rng.uniform(1e-3, 4.0)).collect();
+        for (name, vals) in [
+            ("market.volatility", &vol),
+            ("market.mean-reversion", &rev),
+            ("market.daily-amplitude", &amp),
+            ("market.bid-margin", &bid),
+        ] {
+            for &v in vals.iter() {
+                let back: f64 = label_f64(v).parse().unwrap();
+                assert_eq!(back.to_bits(), v.to_bits(), "label_f64 must invert exactly");
+            }
+            let joined: Vec<String> = vals.iter().map(|&v| label_f64(v)).collect();
+            let axis = ScenarioAxis::parse(&format!("{name}={}", joined.join(","))).unwrap();
+            let got = match &axis {
+                ScenarioAxis::MarketVolatility(v)
+                | ScenarioAxis::MarketMeanReversion(v)
+                | ScenarioAxis::MarketDailyAmplitude(v)
+                | ScenarioAxis::MarketBidMargin(v) => v,
+                other => panic!("parsed into the wrong axis: {other:?}"),
+            };
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                vals.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{name} values changed across label round-trip"
             );
         }
     });

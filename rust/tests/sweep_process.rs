@@ -325,6 +325,58 @@ fn chaos_storm_grid_byte_identical_across_processes() {
     }
 }
 
+/// A market x chaos grid (spot-price volatility x bid margin crossed
+/// with a reclaim storm) through real worker subprocesses: the
+/// coordinator's merged artifacts - including retained series - are
+/// byte-identical to the in-process single-thread run at 1 and 2
+/// workers, with the cost columns populated and the market labels in
+/// the cells CSV. This is the cross-process leg of the market
+/// determinism contract: lazily compiled price paths must not let
+/// worker count leak into any artifact byte.
+#[test]
+fn market_chaos_grid_byte_identical_across_processes() {
+    use cloudmarket::chaos::ReclaimStorm;
+
+    let scenario = ComparisonConfig { terminate_at: 400.0, ..Default::default() };
+    let spec = SweepSpec::new(scenario)
+        .with_seeds(vec![20_250_710])
+        .with_policies(vec![PolicySpec::FirstFit, PolicySpec::BestFit])
+        .with_axis(ScenarioAxis::ChaosReclaimStorm(vec![
+            ReclaimStorm::parse("at150-frac0.5").unwrap(),
+        ]))
+        .with_axis(ScenarioAxis::MarketVolatility(vec![0.05, 2.0]))
+        .with_axis(ScenarioAxis::MarketBidMargin(vec![1.5]))
+        .with_series_retention(SeriesFilter::parse("policy=first-fit").unwrap());
+    assert_eq!(spec.cell_count(), 4);
+
+    let reference = sweep::run(&spec, 1);
+    assert_eq!(reference.failed(), 0, "no market cell may fail");
+    for c in &reference.cells {
+        let r = c.report().unwrap();
+        assert!(r.market.spot_cost_usd > 0.0, "cell {} accrued no spot cost", c.cell.id);
+        assert!(r.market.on_demand_cost_usd > 0.0, "cell {} has no od reference", c.cell.id);
+    }
+    let want = render(&reference);
+    assert!(!want.2.is_empty(), "retained first-fit series expected");
+    assert!(want.0.contains("market_volatility"), "market columns missing from cells CSV");
+    assert!(want.0.contains(",1.5,"), "bid-margin label missing from cells CSV");
+    assert!(want.1.contains("market_bid_margin"), "market key missing from aggregate");
+    assert!(want.1.contains("savings_ratio"), "cost moments missing from aggregate");
+
+    for workers in [1usize, 2] {
+        let dir = test_dir(&format!("market_{workers}w"));
+        let outcome =
+            shard::coordinate(&spec, &shard::CoordinateOptions::new(workers, &dir, BIN))
+                .unwrap();
+        assert_eq!(
+            render(&outcome.report),
+            want,
+            "{workers}-worker market artifacts differ from the in-process run"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
 /// A corrupt or foreign shard file makes the worker exit with the
 /// dedicated bad-shard code, distinct from generic runtime failures, and
 /// write no partial.
