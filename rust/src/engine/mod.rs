@@ -84,7 +84,7 @@ use crate::vm::{InterruptionBehavior, Vm, VmId, VmState};
 
 pub use broker::Broker;
 pub use config::{EngineConfig, VictimPolicy};
-pub use report::{MarketStats, Report, ResilienceStats, SpotStats};
+pub use report::{MarketStats, RecoveryStats, Report, ResilienceStats, SpotStats};
 pub use tag::Tag;
 pub use world::World;
 
@@ -186,6 +186,19 @@ pub struct Engine {
     /// crossings, spot placement holds while the price sits above the
     /// bid, and report-time cost accounting integrates it.
     pub(crate) market: Option<std::sync::Arc<crate::market::MarketSchedule>>,
+
+    // ---- recovery state (crate::recovery::apply fills this) ----
+    /// Compiled recovery parameters: warning windows take checkpoint
+    /// snapshots, terminate-behavior interruptions convert into
+    /// checkpoint-carrying requeues, and displaced VMs flow through the
+    /// batched reassignment matcher. `None` leaves every interruption
+    /// path byte-identical to the recovery-free engine.
+    pub(crate) recovery: Option<std::sync::Arc<crate::recovery::RecoverySchedule>>,
+    /// Displaced VMs awaiting the next batched reassignment matching.
+    recovery_displaced: Vec<VmId>,
+    /// Whether a `RecoveryReassign` event is already scheduled
+    /// (coalesces one storm's victims into a single matching problem).
+    recovery_reassign_armed: bool,
 }
 
 impl Engine {
@@ -269,6 +282,9 @@ impl Engine {
             chaos_outages: Vec::new(),
             chaos_crashed: Vec::new(),
             market: None,
+            recovery: None,
+            recovery_displaced: Vec::new(),
+            recovery_reassign_armed: false,
         }
     }
 
@@ -417,6 +433,9 @@ impl Engine {
                 self.retry_pending();
             }
             Tag::MarketCrossing(k) => self.on_market_crossing(k),
+            Tag::RecoveryCheckpoint(v) => self.on_recovery_checkpoint(v),
+            Tag::RecoveryReassign => self.on_recovery_reassign(),
+            Tag::RecoveryMigrate(v, h) => self.on_recovery_migrate(v, h),
             Tag::End => {}
         }
     }
@@ -585,7 +604,10 @@ impl Engine {
                 self.recorder.recovery_secs_max = dur;
             }
             self.recorder.work_recovered_mi += self.vm_inflight_done_mi(v);
+            self.recorder.requeue_latency.push(dur);
         }
+        // Any checkpoint taken for the displacement is consumed by now.
+        self.world.vms[v].checkpoint_mi = None;
 
         // Start queued cloudlets / resume paused ones (the VM's cloudlet
         // list is copied into reusable scratch, not cloned per placement).
@@ -654,6 +676,17 @@ impl Engine {
             EntityId::Broker(0),
             Tag::SpotInterrupt(v),
         );
+        // Checkpointing recovery modes snapshot at the start of the grace
+        // window. Scheduled *after* SpotInterrupt at the same source, so a
+        // zero-length window interrupts first and (correctly) saves nothing.
+        if self.recovery.as_ref().map_or(false, |s| s.mode.checkpoints()) {
+            self.sim.schedule(
+                0.0,
+                EntityId::Datacenter(0),
+                EntityId::Broker(0),
+                Tag::RecoveryCheckpoint(v),
+            );
+        }
         Some(cfg.warning_time)
     }
 
@@ -686,15 +719,25 @@ impl Engine {
                 );
             }
             InterruptionBehavior::Terminate => {
-                self.world.vms[v].transition(VmState::Terminated);
-                self.world.vms[v].stopped_at = Some(now);
-                self.world.vms[v].displaced_at = None;
-                self.recorder.work_lost_mi += self.vm_inflight_done_mi(v);
-                self.cancel_cloudlets(v);
-                self.broker.finished.push(v);
-                self.recorder.spot_terminations += 1;
-                self.recorder.log(now, v, LifecycleKind::Terminated);
+                if self.recovery.is_some() {
+                    // Recovery substrate active: the grace-window
+                    // checkpoint (if any) turns the kill into a requeue.
+                    self.recovery_requeue(v, cfg.hibernation_timeout);
+                } else {
+                    self.world.vms[v].transition(VmState::Terminated);
+                    self.world.vms[v].stopped_at = Some(now);
+                    self.world.vms[v].displaced_at = None;
+                    self.recorder.work_lost_mi += self.vm_inflight_done_mi(v);
+                    self.cancel_cloudlets(v);
+                    self.broker.finished.push(v);
+                    self.recorder.spot_terminations += 1;
+                    self.recorder.log(now, v, LifecycleKind::Terminated);
+                }
             }
+        }
+        let migrates = self.recovery.as_ref().map_or(false, |s| s.mode.migrates());
+        if migrates && self.world.vms[v].state == VmState::Hibernated {
+            self.queue_displaced(v);
         }
         self.retry_pending();
     }
@@ -1085,15 +1128,26 @@ impl Engine {
                         );
                     }
                     InterruptionBehavior::Terminate => {
-                        self.world.vms[v].transition(VmState::Terminated);
-                        self.world.vms[v].stopped_at = Some(now);
-                        self.world.vms[v].displaced_at = None;
-                        self.recorder.work_lost_mi += self.vm_inflight_done_mi(v);
-                        self.cancel_cloudlets(v);
-                        self.broker.finished.push(v);
-                        self.recorder.spot_terminations += 1;
-                        self.recorder.log(now, v, LifecycleKind::Terminated);
+                        if self.recovery.is_some() {
+                            // Unwarned loss: no checkpoint was taken, so
+                            // the requeue restarts from zero progress, but
+                            // the VM still survives for reassignment.
+                            self.recovery_requeue(v, cfg.hibernation_timeout);
+                        } else {
+                            self.world.vms[v].transition(VmState::Terminated);
+                            self.world.vms[v].stopped_at = Some(now);
+                            self.world.vms[v].displaced_at = None;
+                            self.recorder.work_lost_mi += self.vm_inflight_done_mi(v);
+                            self.cancel_cloudlets(v);
+                            self.broker.finished.push(v);
+                            self.recorder.spot_terminations += 1;
+                            self.recorder.log(now, v, LifecycleKind::Terminated);
+                        }
                     }
+                }
+                let migrates = self.recovery.as_ref().map_or(false, |s| s.mode.migrates());
+                if migrates && self.world.vms[v].state == VmState::Hibernated {
+                    self.queue_displaced(v);
                 }
             } else {
                 // On-demand: requeue and wait for capacity elsewhere.
@@ -1205,6 +1259,207 @@ impl Engine {
         } else {
             self.retry_pending();
         }
+    }
+
+    // ------------------------------------------------------------------
+    // recovery (parameters compiled by crate::recovery)
+    // ------------------------------------------------------------------
+
+    /// Warning-window checkpoint: snapshot how much of the VM's in-flight
+    /// progress fits through the grace window at the recovery bandwidth
+    /// (full / partial / restart decision, see [`crate::recovery`]).
+    fn on_recovery_checkpoint(&mut self, v: VmId) {
+        let sched = match self.recovery.as_ref() {
+            Some(s) => std::sync::Arc::clone(s),
+            None => return,
+        };
+        if self.world.vms[v].state != VmState::InterruptWarned {
+            return; // interruption already resolved during the window
+        }
+        let now = self.sim.clock();
+        self.counters.recovery_events += 1;
+        self.apply_progress(now);
+        let progress = self.vm_inflight_done_mi(v);
+        let cfg = self.world.vms[v].spot.expect("spot vm without config");
+        let d = sched.decide(progress, cfg.warning_time);
+        self.world.vms[v].checkpoint_mi = Some(d.saved_mi);
+        if d.saved_mi > 0.0 {
+            self.recorder.checkpoints += 1;
+            self.recorder.checkpoint_mb += d.bytes_mb;
+            self.recorder.log(now, v, LifecycleKind::Checkpointed);
+        }
+    }
+
+    /// Convert a terminate-behavior interruption into a checkpoint-carrying
+    /// requeue: progress beyond the saved checkpoint is lost, the remainder
+    /// rides the hibernation path back through the allocator. The caller
+    /// has already taken the VM off its host.
+    fn recovery_requeue(&mut self, v: VmId, hibernation_timeout: f64) {
+        let now = self.sim.clock();
+        self.counters.recovery_events += 1;
+        let progress = self.vm_inflight_done_mi(v);
+        let retained = self.world.vms[v].checkpoint_mi.take().unwrap_or(0.0).min(progress);
+        self.recorder.work_lost_mi += (progress - retained).max(0.0);
+        self.truncate_progress(v, retained);
+        self.world.vms[v].transition(VmState::Hibernated);
+        self.world.vms[v].hibernated_at = Some(now);
+        self.world.vms[v].displaced_at = Some(now);
+        self.pause_cloudlets(v);
+        self.broker.enqueue_resubmitting(v);
+        self.recorder.hibernations += 1;
+        self.recorder.log(now, v, LifecycleKind::Hibernated);
+        self.sim.schedule(
+            hibernation_timeout,
+            EntityId::Broker(0),
+            EntityId::Broker(0),
+            Tag::HibernationTimeout(v),
+        );
+    }
+
+    /// Rewrite `v`'s unfinished cloudlets so their total completed work
+    /// equals `retained_mi` (allocated front to back), dropping the rest.
+    /// Must run while `v` is off-host: the leading `apply_progress` flushes
+    /// the parallel arrays and rebuilds them *without* this VM's cloudlets,
+    /// so no later array writeback can clobber the truncation.
+    fn truncate_progress(&mut self, v: VmId, retained_mi: f64) {
+        let now = self.sim.clock();
+        self.apply_progress(now);
+        let mut budget = retained_mi.max(0.0);
+        let mut cls = std::mem::take(&mut self.cloudlet_scratch);
+        cls.clear();
+        cls.extend_from_slice(&self.world.vms[v].cloudlets);
+        for &c in &cls {
+            let cl = &mut self.world.cloudlets[c];
+            if cl.is_done() {
+                continue;
+            }
+            let done = (cl.length_mi - cl.remaining_mi).max(0.0);
+            let keep = done.min(budget);
+            cl.remaining_mi = cl.length_mi - keep;
+            budget -= keep;
+        }
+        self.cloudlet_scratch = cls;
+    }
+
+    /// Register a displaced VM for the next batched reassignment matching,
+    /// arming a single `RecoveryReassign` event per batch window (one
+    /// storm's victims become one matching problem).
+    fn queue_displaced(&mut self, v: VmId) {
+        if !self.recovery_displaced.contains(&v) {
+            self.recovery_displaced.push(v);
+        }
+        if !self.recovery_reassign_armed {
+            self.recovery_reassign_armed = true;
+            self.sim.schedule(
+                self.sim.min_dt().max(1e-3),
+                EntityId::Broker(0),
+                EntityId::Broker(0),
+                Tag::RecoveryReassign,
+            );
+        }
+    }
+
+    /// Batched displaced-VM reassignment: build the VM x host cost matrix
+    /// and dispatch checkpoint transfers per the configured matcher
+    /// (greedy first-fit baseline or Kuhn-Munkres min-cost matching).
+    /// Unmatched VMs stay on the resubmission list and fall back to the
+    /// periodic retry path.
+    fn on_recovery_reassign(&mut self) {
+        self.recovery_reassign_armed = false;
+        let sched = match self.recovery.as_ref() {
+            Some(s) => std::sync::Arc::clone(s),
+            None => {
+                self.recovery_displaced.clear();
+                return;
+            }
+        };
+        let mut displaced = std::mem::take(&mut self.recovery_displaced);
+        displaced.retain(|&v| self.world.vms[v].state == VmState::Hibernated);
+        if displaced.is_empty() {
+            self.recovery_displaced = displaced;
+            return;
+        }
+        self.counters.recovery_events += 1;
+        let hosts: Vec<HostId> =
+            (0..self.world.hosts.len()).filter(|&h| self.world.hosts[h].is_active()).collect();
+        if !hosts.is_empty() {
+            let costs: Vec<Vec<f64>> = displaced
+                .iter()
+                .map(|&v| hosts.iter().map(|&h| self.migration_cost(v, h, &sched)).collect())
+                .collect();
+            let assign = match sched.mode {
+                crate::recovery::RecoveryMode::MigrateOptimal => {
+                    crate::recovery::assign_optimal(&costs)
+                }
+                _ => crate::recovery::assign_greedy(&costs),
+            };
+            for (i, slot) in assign.iter().enumerate() {
+                if let Some(j) = *slot {
+                    let v = displaced[i];
+                    let delay = self.transfer_secs(v, &sched).max(self.sim.min_dt());
+                    self.sim.schedule(
+                        delay,
+                        EntityId::Broker(0),
+                        EntityId::Broker(0),
+                        Tag::RecoveryMigrate(v, hosts[j]),
+                    );
+                }
+            }
+        }
+        displaced.clear();
+        self.recovery_displaced = displaced;
+    }
+
+    /// Reassignment cost of resuming displaced `v` on `host`: checkpoint
+    /// transfer time plus the remaining-work redo time inflated by the
+    /// target's current load, so the optimal matcher spreads victims over
+    /// idle hosts where greedy piles them onto the first fit.
+    fn migration_cost(
+        &self,
+        v: VmId,
+        host: HostId,
+        sched: &crate::recovery::RecoverySchedule,
+    ) -> f64 {
+        let vm = &self.world.vms[v];
+        let h = &self.world.hosts[host];
+        if !h.fits(vm.spec.pes, vm.spec.ram, vm.spec.bw, vm.spec.storage) {
+            return f64::INFINITY;
+        }
+        let remaining: f64 = vm
+            .cloudlets
+            .iter()
+            .filter(|&&c| !self.world.cloudlets[c].is_done())
+            .map(|&c| self.world.cloudlets[c].remaining_mi.max(0.0))
+            .sum();
+        let redo = remaining / vm.spec.total_mips().max(1e-9);
+        self.transfer_secs(v, sched) + redo * (1.0 + h.cpu_utilization())
+    }
+
+    /// Checkpoint-image transfer time of displaced `v` at the schedule's
+    /// recovery bandwidth (image size scales with the retained progress).
+    fn transfer_secs(&self, v: VmId, sched: &crate::recovery::RecoverySchedule) -> f64 {
+        let image_mb = self.vm_inflight_done_mi(v) * crate::recovery::CHECKPOINT_MB_PER_MI;
+        image_mb / sched.bandwidth_mb_s.max(1e-9)
+    }
+
+    /// A displaced VM's checkpoint transfer landed: resume it on the chosen
+    /// host, or count a failed migration if the slot evaporated meanwhile.
+    fn on_recovery_migrate(&mut self, v: VmId, host: HostId) {
+        let now = self.sim.clock();
+        if self.world.vms[v].state != VmState::Hibernated {
+            return; // resumed elsewhere or timed out while transferring
+        }
+        self.counters.recovery_events += 1;
+        let vm = &self.world.vms[v];
+        let fits =
+            self.world.hosts[host].fits(vm.spec.pes, vm.spec.ram, vm.spec.bw, vm.spec.storage);
+        if !fits || self.market_holds_spot(v) {
+            self.recorder.failed_migrations += 1;
+            return; // falls back to the periodic retry path
+        }
+        self.recorder.migrations += 1;
+        self.recorder.log(now, v, LifecycleKind::Migrated);
+        self.place(v, host);
     }
 
     // ------------------------------------------------------------------
@@ -1489,6 +1744,135 @@ mod tests {
         assert!(c1.preemption_scans >= 1, "the od VM had to preempt: {c1:?}");
         assert!(c1.queue_high_water >= 2, "{c1:?}");
         assert_eq!(c1.chaos_events, 0, "chaos-free run");
+        assert_eq!(c1.recovery_events, 0, "recovery-free run");
+    }
+
+    /// Install a compiled recovery schedule with a bandwidth high enough
+    /// that every warned checkpoint is full.
+    fn apply_recovery(e: &mut Engine, mode: crate::recovery::RecoveryMode) {
+        let spec = crate::recovery::RecoverySpec {
+            mode: Some(mode),
+            bandwidth: Some(1_000_000.0),
+            checkpoint_threshold: Some(0.25),
+        };
+        let sched = crate::recovery::compile(&spec, 0, 10_000.0);
+        crate::recovery::apply(e, &std::sync::Arc::new(sched));
+    }
+
+    /// Checkpoint mode: a terminate-behavior interruption keeps the work
+    /// saved at the start of the warning window and the VM survives as a
+    /// requeue instead of dying.
+    #[test]
+    fn checkpoint_requeue_recovers_warned_work() {
+        let mut e = engine();
+        apply_recovery(&mut e, crate::recovery::RecoveryMode::Checkpoint);
+        let cfg = SpotConfig::terminate().with_min_running(0.0).with_warning(2.0);
+        let spot = e.submit_vm(Vm::spot(0, VmSpec::new(1000.0, 8), cfg));
+        // 1_000_000 MI at 8000 MIPS; warned at t=5 with 40_000 MI done.
+        e.submit_cloudlet(Cloudlet::new(0, 1_000_000.0, 8).with_vm(spot));
+        let od = e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 8)).with_delay(5.0));
+        e.submit_cloudlet(Cloudlet::new(0, 8_000.0, 8).with_vm(od));
+        e.terminate_at(300.0);
+        let report = e.run();
+
+        assert_eq!(e.world.vms[spot].state, VmState::Finished, "spot survived the kill");
+        assert_eq!(report.recovery.checkpoints, 1);
+        assert!(report.recovery.checkpoint_mb > 0.0);
+        // Checkpoint snapshot at warn time (t=5): 40_000 MI; the 2 s of
+        // progress made during the warning window (16_000 MI) is lost.
+        let rec = report.recovery.work_recovered_mi;
+        assert!((39_000.0..41_000.0).contains(&rec), "recovered {rec}");
+        assert!(report.recovery.work_lost_mi >= 15_000.0, "{report:?}");
+        assert!(report.recovery.recovered_fraction > 0.5, "{report:?}");
+        assert!(report.recovery.requeue_p50_s > 0.0);
+        assert!(report.recovery.requeue_max_s >= report.recovery.requeue_p50_s);
+    }
+
+    /// Restart mode: the VM survives as a requeue but carries zero
+    /// progress across the interruption (no checkpoint is ever taken).
+    #[test]
+    fn restart_requeue_loses_all_progress() {
+        let mut e = engine();
+        apply_recovery(&mut e, crate::recovery::RecoveryMode::Restart);
+        let cfg = SpotConfig::terminate().with_min_running(0.0).with_warning(2.0);
+        let spot = e.submit_vm(Vm::spot(0, VmSpec::new(1000.0, 8), cfg));
+        e.submit_cloudlet(Cloudlet::new(0, 1_000_000.0, 8).with_vm(spot));
+        let od = e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 8)).with_delay(5.0));
+        e.submit_cloudlet(Cloudlet::new(0, 8_000.0, 8).with_vm(od));
+        e.terminate_at(300.0);
+        let report = e.run();
+
+        assert_eq!(e.world.vms[spot].state, VmState::Finished, "spot survived the kill");
+        assert_eq!(report.recovery.checkpoints, 0);
+        assert_eq!(report.recovery.work_recovered_mi, 0.0);
+        assert_eq!(report.recovery.recovered_fraction, 0.0);
+        assert!(report.recovery.work_lost_mi >= 55_000.0, "{report:?}");
+        assert_eq!(report.recovery.migrations, 0);
+    }
+
+    /// Migrate mode: the displaced VM's checkpoint is transferred to the
+    /// other (feasible) host and it resumes there.
+    #[test]
+    fn migrate_moves_displaced_vm_to_feasible_host() {
+        let mut e = engine();
+        let h2 = e.add_host(0, HostSpec::new(4, 1000.0, 16_384.0, 10_000.0, 1_000_000.0));
+        apply_recovery(&mut e, crate::recovery::RecoveryMode::MigrateGreedy);
+        let cfg = SpotConfig::terminate().with_min_running(0.0).with_warning(2.0);
+        // 4-PE spot on host 0; the 8-PE on-demand VM fits neither host
+        // without preempting it, and host 0 is full once the OD lands, so
+        // the matcher must route the displaced spot to host 2.
+        let spot = e.submit_vm(Vm::spot(0, VmSpec::new(1000.0, 4), cfg));
+        e.submit_cloudlet(Cloudlet::new(0, 1_000_000.0, 4).with_vm(spot));
+        let od = e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 8)).with_delay(5.0));
+        e.submit_cloudlet(Cloudlet::new(0, 2_000_000.0, 8).with_vm(od));
+        e.terminate_at(400.0);
+        let report = e.run();
+
+        assert_eq!(report.recovery.checkpoints, 1);
+        assert_eq!(report.recovery.migrations, 1, "{report:?}");
+        assert_eq!(report.recovery.failed_migrations, 0, "{report:?}");
+        assert_eq!(e.world.vms[spot].state, VmState::Finished);
+        let intervals = e.world.vms[spot].history.intervals();
+        assert_eq!(intervals.last().unwrap().host, h2, "resumed on the other host");
+        assert!(report.recovery.recovered_fraction > 0.5, "{report:?}");
+    }
+
+    /// Regression: a hibernated VM that resumed and re-hibernated must not
+    /// be killed by the *first* hibernation's leftover timeout event - only
+    /// the second hibernation's own deadline may fire.
+    #[test]
+    fn stale_hibernation_timeout_does_not_kill_rehibernated_vm() {
+        let mut e = engine();
+        let cfg = SpotConfig::hibernate()
+            .with_min_running(0.0)
+            .with_warning(0.0)
+            .with_hibernation_timeout(30.0);
+        let spot = e.submit_vm(Vm::spot(0, VmSpec::new(1000.0, 8), cfg).with_persistent(1_000.0));
+        e.submit_cloudlet(Cloudlet::new(0, 1_000_000.0, 8).with_vm(spot));
+        // OD 1 displaces the spot at t=5 for ~1 s (timeout armed for t=35).
+        let od1 = e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 8)).with_delay(5.0));
+        e.submit_cloudlet(Cloudlet::new(0, 8_000.0, 8).with_vm(od1));
+        // OD 2 displaces it again at t=20 and holds the host past t=50
+        // (new timeout armed for t=50; the t=35 event is now stale).
+        let od2 = e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 8)).with_delay(20.0));
+        e.submit_cloudlet(Cloudlet::new(0, 2_000_000.0, 8).with_vm(od2));
+        e.terminate_at(300.0);
+        e.run();
+
+        assert_eq!(e.world.vms[spot].state, VmState::Terminated);
+        let stopped = e.world.vms[spot].stopped_at.unwrap();
+        assert!(
+            (stopped - 50.0).abs() < 1.0,
+            "second hibernation must get its full window, stopped {stopped}"
+        );
+        let timeouts = e
+            .recorder
+            .events
+            .iter()
+            .filter(|ev| ev.kind == LifecycleKind::HibernationTimedOut)
+            .count();
+        assert_eq!(timeouts, 1, "exactly one (non-stale) timeout fired");
+        assert_eq!(e.recorder.hibernations, 2);
     }
 
     /// Deterministic: identical seeds/config produce identical reports.

@@ -77,6 +77,34 @@ pub struct MarketStats {
     pub max_price_paid: f64,
 }
 
+/// Work-survival statistics under the recovery subsystem
+/// (crate::recovery): grace-window checkpointing and displaced-VM
+/// migration. The work/latency columns also cover organic
+/// hibernation-resume recoveries, so they are meaningful (and the
+/// fraction well-defined) even for recovery-free runs; the
+/// checkpoint/migration counts are zero without an active
+/// `RecoverySchedule`.
+#[derive(Debug, Clone, Default)]
+pub struct RecoveryStats {
+    /// Checkpoints taken (full or partial) and the MB they transferred
+    /// through the warning window.
+    pub checkpoints: u64,
+    pub checkpoint_mb: f64,
+    /// Displaced-VM migrations completed vs dropped at transfer end.
+    pub migrations: u64,
+    pub failed_migrations: u64,
+    /// Work carried back onto a host vs discarded (MI) - same totals as
+    /// [`ResilienceStats`], repeated here so the fraction has its parts.
+    pub work_recovered_mi: f64,
+    pub work_lost_mi: f64,
+    /// `recovered / (recovered + lost)` (0 when no work was displaced).
+    pub recovered_fraction: f64,
+    /// Displacement-to-running latency percentiles (seconds).
+    pub requeue_p50_s: f64,
+    pub requeue_p95_s: f64,
+    pub requeue_max_s: f64,
+}
+
 /// Summary of one engine run.
 #[derive(Debug, Clone)]
 pub struct Report {
@@ -96,6 +124,7 @@ pub struct Report {
     pub spot: SpotStats,
     pub resilience: ResilienceStats,
     pub market: MarketStats,
+    pub recovery: RecoveryStats,
 }
 
 /// Build the report from a finished engine.
@@ -207,6 +236,36 @@ pub fn build(engine: &Engine, wall: std::time::Duration) -> Report {
         _ => MarketStats::default(),
     };
 
+    // Work-survival accounting: percentiles over the recorded
+    // displacement-to-running latency samples (same ceil-index
+    // convention as the interruption-duration p95 above).
+    let mut recovery = RecoveryStats {
+        checkpoints: r.checkpoints,
+        checkpoint_mb: r.checkpoint_mb,
+        migrations: r.migrations,
+        failed_migrations: r.failed_migrations,
+        work_recovered_mi: r.work_recovered_mi,
+        work_lost_mi: r.work_lost_mi,
+        recovered_fraction: {
+            let total = r.work_recovered_mi + r.work_lost_mi;
+            if total > 0.0 { r.work_recovered_mi / total } else { 0.0 }
+        },
+        ..Default::default()
+    };
+    if !r.requeue_latency.is_empty() {
+        let mut lat = r.requeue_latency.clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).expect("non-finite requeue latency"));
+        let pct = |q: f64| {
+            let idx = ((q * lat.len() as f64).ceil() as usize)
+                .saturating_sub(1)
+                .min(lat.len() - 1);
+            lat[idx]
+        };
+        recovery.requeue_p50_s = pct(0.50);
+        recovery.requeue_p95_s = pct(0.95);
+        recovery.requeue_max_s = lat[lat.len() - 1];
+    }
+
     let mut cl_fin = 0;
     let mut cl_can = 0;
     for cl in &w.cloudlets {
@@ -233,6 +292,7 @@ pub fn build(engine: &Engine, wall: std::time::Duration) -> Report {
         spot,
         resilience,
         market,
+        recovery,
     }
 }
 
@@ -242,6 +302,7 @@ impl Report {
         let s = &self.spot;
         let r = &self.resilience;
         let m = &self.market;
+        let rc = &self.recovery;
         format!(
             "policy={} clock_end={:.1}s events={} wall={:?}\n\
              vms: finished={} terminated={} failed={} active={}\n\
@@ -256,7 +317,10 @@ impl Report {
              avg_recovery_s={:.2} max_recovery_s={:.2} \
              work_lost_mi={:.0} work_recovered_mi={:.0}\n\
              market: spot_cost=${:.2} od_cost=${:.2} savings={:.2} \
-             price_reclaims={} mean_price={:.3} max_price={:.3}",
+             price_reclaims={} mean_price={:.3} max_price={:.3}\n\
+             recovery: checkpoints={} checkpoint_mb={:.1} migrations={} \
+             failed_migrations={} recovered_fraction={:.2} \
+             requeue_s: p50={:.2} p95={:.2} max={:.2}",
             self.policy,
             self.clock_end,
             self.events_processed,
@@ -296,6 +360,14 @@ impl Report {
             m.price_reclaims,
             m.mean_price_paid,
             m.max_price_paid,
+            rc.checkpoints,
+            rc.checkpoint_mb,
+            rc.migrations,
+            rc.failed_migrations,
+            rc.recovered_fraction,
+            rc.requeue_p50_s,
+            rc.requeue_p95_s,
+            rc.requeue_max_s,
         )
     }
 
@@ -354,6 +426,19 @@ impl Report {
         mk.set("mean_price_paid", Json::Num(m.mean_price_paid));
         mk.set("max_price_paid", Json::Num(m.max_price_paid));
         o.set("market", Json::Obj(mk));
+        let rc = &self.recovery;
+        let mut rv = JsonObj::new();
+        rv.set("checkpoints", Json::Num(rc.checkpoints as f64));
+        rv.set("checkpoint_mb", Json::Num(rc.checkpoint_mb));
+        rv.set("migrations", Json::Num(rc.migrations as f64));
+        rv.set("failed_migrations", Json::Num(rc.failed_migrations as f64));
+        rv.set("work_recovered_mi", Json::Num(rc.work_recovered_mi));
+        rv.set("work_lost_mi", Json::Num(rc.work_lost_mi));
+        rv.set("recovered_fraction", Json::Num(rc.recovered_fraction));
+        rv.set("requeue_p50_s", Json::Num(rc.requeue_p50_s));
+        rv.set("requeue_p95_s", Json::Num(rc.requeue_p95_s));
+        rv.set("requeue_max_s", Json::Num(rc.requeue_max_s));
+        o.set("recovery", Json::Obj(rv));
         Json::Obj(o)
     }
 }

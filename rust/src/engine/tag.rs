@@ -42,6 +42,15 @@ pub enum Tag {
     /// Spot price crossed the bid level: crossing `k` of the compiled
     /// market schedule (up = out-bid reclaims, down = retry drain).
     MarketCrossing(usize),
+    /// Recovery checkpoint snapshot at the start of a warning window
+    /// (captures the progress a later interruption can carry over).
+    RecoveryCheckpoint(VmId),
+    /// Batched reassignment matching over currently displaced VMs
+    /// (coalesces one storm's victims into a single matching problem).
+    RecoveryReassign,
+    /// A displaced VM's checkpoint transfer to the chosen host finished:
+    /// resume it there (or count a failed migration if it no longer fits).
+    RecoveryMigrate(VmId, HostId),
     /// Hard stop marker.
     End,
 }

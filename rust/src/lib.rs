@@ -38,6 +38,7 @@ pub mod infra;
 pub mod market;
 pub mod metrics;
 pub mod obs;
+pub mod recovery;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod testkit;

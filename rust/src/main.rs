@@ -20,7 +20,8 @@
 //! and the `chaos.*` fault families: chaos.host-mtbf, chaos.reclaim-storm,
 //! chaos.broker-outage, chaos.demand-surge; and the `market.*` spot-price
 //! axes: market.volatility, market.mean-reversion, market.daily-amplitude,
-//! market.bid-margin)
+//! market.bid-margin; and the `recovery.*` work-survival axes:
+//! recovery.mode, recovery.bandwidth, recovery.checkpoint-threshold)
 //! and the `--substrate` list (comparison | trace). Artifacts go to
 //! `--out-dir`: `sweep_cells.csv`, `sweep_aggregate.json`, and - for cells
 //! matching `--retain-series` - per-cell `sweep_series_cell*.csv` time
@@ -80,7 +81,7 @@ fn specs() -> Vec<Spec> {
         Spec { name: "shard", takes_value: true, help: "sweep worker: shard job file to run" },
         Spec { name: "out", takes_value: true, help: "sweep worker: partial artifact output path" },
         Spec { name: "policies", takes_value: true, help: "sweep: comma-separated policy list" },
-        Spec { name: "axis", takes_value: true, help: "sweep: scenario axis <name>=<v1,v2,...>, repeatable (spot.warning | spot.hibernation-timeout | spot.behavior | hlem.alpha | victim | substrate | chaos.host-mtbf | chaos.reclaim-storm | chaos.broker-outage | chaos.demand-surge | market.volatility | market.mean-reversion | market.daily-amplitude | market.bid-margin)" },
+        Spec { name: "axis", takes_value: true, help: "sweep: scenario axis <name>=<v1,v2,...>, repeatable (spot.warning | spot.hibernation-timeout | spot.behavior | hlem.alpha | victim | substrate | chaos.host-mtbf | chaos.reclaim-storm | chaos.broker-outage | chaos.demand-surge | market.volatility | market.mean-reversion | market.daily-amplitude | market.bid-margin | recovery.mode | recovery.bandwidth | recovery.checkpoint-threshold)" },
         Spec { name: "substrate", takes_value: true, help: "sweep: workload substrate list: comparison | trace (default comparison)" },
         Spec { name: "retain-series", takes_value: true, help: "sweep: keep per-cell time series: all | none | policy=<p>,seed=<s>,id=<n>,substrate=<s> (OR; default none)" },
         Spec { name: "alpha", takes_value: true, help: "spot-load factor for adjusted HLEM (default -0.5)" },
@@ -857,6 +858,7 @@ fn cmd_sweep_status(args: &Args, out_dir: &std::path::Path) -> Result<(), String
         ("preemption scans", totals.preemption_scans),
         ("chaos events", totals.chaos_events),
         ("market events", totals.market_events),
+        ("recovery events", totals.recovery_events),
     ] {
         table.push(vec![name.into(), value.to_string()]);
     }
@@ -988,6 +990,13 @@ mod tests {
         assert!(err.contains("must be > 0"), "{err}");
         let err = run(&argv(&["sweep", "--axis", "market.daily-amplitude=1.5"])).unwrap_err();
         assert!(err.contains("outside [0, 1]"), "{err}");
+        let err = run(&argv(&["sweep", "--axis", "recovery.mode=teleport"])).unwrap_err();
+        assert!(err.contains("recovery.mode"), "{err}");
+        let err = run(&argv(&["sweep", "--axis", "recovery.bandwidth=0"])).unwrap_err();
+        assert!(err.contains("must be > 0"), "{err}");
+        let err =
+            run(&argv(&["sweep", "--axis", "recovery.checkpoint-threshold=1.5"])).unwrap_err();
+        assert!(err.contains("outside [0, 1]"), "{err}");
         let err = run(&argv(&["sweep", "--substrate", "cloud"])).unwrap_err();
         assert!(err.contains("unknown substrate"), "{err}");
         let err = run(&argv(&[
@@ -1080,7 +1089,7 @@ mod tests {
     }
 
     fn fake_cell_result(cell: cloudmarket::sweep::Cell) -> cloudmarket::sweep::CellResult {
-        use cloudmarket::engine::{MarketStats, Report, ResilienceStats, SpotStats};
+        use cloudmarket::engine::{MarketStats, RecoveryStats, Report, ResilienceStats, SpotStats};
         cloudmarket::sweep::CellResult {
             cell,
             outcome: Ok(Report {
@@ -1099,6 +1108,7 @@ mod tests {
                 spot: SpotStats::default(),
                 resilience: ResilienceStats::default(),
                 market: MarketStats::default(),
+                recovery: RecoveryStats::default(),
             }),
             series: None,
         }

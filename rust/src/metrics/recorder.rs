@@ -18,6 +18,8 @@ pub enum LifecycleKind {
     Failed,
     WaitingExpired,
     HibernationTimedOut,
+    Checkpointed,
+    Migrated,
 }
 
 impl std::fmt::Display for LifecycleKind {
@@ -34,6 +36,8 @@ impl std::fmt::Display for LifecycleKind {
             LifecycleKind::Failed => "FAILED",
             LifecycleKind::WaitingExpired => "WAITING_EXPIRED",
             LifecycleKind::HibernationTimedOut => "HIBERNATION_TIMED_OUT",
+            LifecycleKind::Checkpointed => "CHECKPOINTED",
+            LifecycleKind::Migrated => "MIGRATED",
         };
         f.write_str(s)
     }
@@ -83,6 +87,17 @@ pub struct Recorder {
     /// states vs carried across a displacement back to a host.
     pub work_lost_mi: f64,
     pub work_recovered_mi: f64,
+    /// Recovery checkpoints taken (full or partial) and the bytes they
+    /// transferred through the warning window (MB).
+    pub checkpoints: u64,
+    pub checkpoint_mb: f64,
+    /// Displaced-VM migrations completed vs dropped at transfer end
+    /// (target no longer fit / market hold).
+    pub migrations: u64,
+    pub failed_migrations: u64,
+    /// Per-recovery displacement-to-running latency samples (seconds);
+    /// feeds the requeue-latency percentiles in `RecoveryStats`.
+    pub requeue_latency: Vec<f64>,
 }
 
 /// Column schema of the sampled state series - static, so a recorder's
@@ -123,6 +138,11 @@ impl Recorder {
             recovery_secs_max: 0.0,
             work_lost_mi: 0.0,
             work_recovered_mi: 0.0,
+            checkpoints: 0,
+            checkpoint_mb: 0.0,
+            migrations: 0,
+            failed_migrations: 0,
+            requeue_latency: Vec::new(),
         }
     }
 
@@ -155,6 +175,11 @@ impl Recorder {
             recovery_secs_max,
             work_lost_mi,
             work_recovered_mi,
+            checkpoints,
+            checkpoint_mb,
+            migrations,
+            failed_migrations,
+            requeue_latency,
         } = self;
         series.clear();
         events.clear();
@@ -175,6 +200,11 @@ impl Recorder {
         *recovery_secs_max = 0.0;
         *work_lost_mi = 0.0;
         *work_recovered_mi = 0.0;
+        *checkpoints = 0;
+        *checkpoint_mb = 0.0;
+        *migrations = 0;
+        *failed_migrations = 0;
+        requeue_latency.clear();
     }
 
     pub fn log(&mut self, time: f64, vm: VmId, kind: LifecycleKind) {
@@ -253,6 +283,11 @@ mod tests {
         r.recovery_secs_max = 30.0;
         r.work_lost_mi = 1_000.0;
         r.work_recovered_mi = 2_000.0;
+        r.checkpoints = 3;
+        r.checkpoint_mb = 48.5;
+        r.migrations = 2;
+        r.failed_migrations = 1;
+        r.requeue_latency.push(12.5);
         r.reset(5);
         assert!(r.series.is_empty());
         assert!(r.events.is_empty());
@@ -268,6 +303,11 @@ mod tests {
         assert_eq!(r.recovery_secs_max, 0.0);
         assert_eq!(r.work_lost_mi, 0.0);
         assert_eq!(r.work_recovered_mi, 0.0);
+        assert_eq!(r.checkpoints, 0);
+        assert_eq!(r.checkpoint_mb, 0.0);
+        assert_eq!(r.migrations, 0);
+        assert_eq!(r.failed_migrations, 0);
+        assert!(r.requeue_latency.is_empty());
         assert_eq!(r.series.columns().len(), width);
         for i in 0..5 {
             r.log(i as f64, 0, LifecycleKind::Submitted);

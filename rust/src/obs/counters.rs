@@ -27,6 +27,9 @@ pub struct EngineCounters {
     pub chaos_events: u64,
     /// Market price-crossing events applied (up and down crossings).
     pub market_events: u64,
+    /// Recovery events applied (checkpoint snapshots, reassignment
+    /// matchings, migration arrivals, checkpoint-converted requeues).
+    pub recovery_events: u64,
 }
 
 impl EngineCounters {
@@ -44,6 +47,7 @@ impl EngineCounters {
         self.preemption_scans += other.preemption_scans;
         self.chaos_events += other.chaos_events;
         self.market_events += other.market_events;
+        self.recovery_events += other.recovery_events;
     }
 
     /// Serialize for the telemetry sidecar. Counter magnitudes stay far
@@ -57,6 +61,7 @@ impl EngineCounters {
         o.set("preemption_scans", Json::Num(self.preemption_scans as f64));
         o.set("chaos_events", Json::Num(self.chaos_events as f64));
         o.set("market_events", Json::Num(self.market_events as f64));
+        o.set("recovery_events", Json::Num(self.recovery_events as f64));
         o
     }
 
@@ -73,6 +78,7 @@ impl EngineCounters {
             preemption_scans: num("preemption_scans")?,
             chaos_events: num("chaos_events")?,
             market_events: num("market_events")?,
+            recovery_events: num("recovery_events")?,
         })
     }
 }
@@ -91,6 +97,7 @@ mod tests {
             preemption_scans: 7,
             chaos_events: 3,
             market_events: 11,
+            recovery_events: 6,
         };
         let text = Json::Obj(c.to_json()).to_string_compact();
         let back = EngineCounters::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();

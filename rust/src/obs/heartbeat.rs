@@ -39,7 +39,9 @@ pub struct Heartbeat {
     pub cell: Option<usize>,
     /// Wall-clock ms since the unix epoch when the beat was written.
     pub ts_ms: u64,
-    /// Worker RSS in MB at beat time (from the /proc self-profiler reader).
+    /// Worker RSS in MB at beat time (from the /proc self-profiler
+    /// reader); `None` where /proc is unavailable (off Linux) - readers
+    /// render a placeholder, never fail.
     pub rss_mb: Option<f64>,
 }
 
@@ -193,6 +195,9 @@ mod tests {
         w.beat(1, Some(5));
         let last = read_last_heartbeat(&path).expect("beats readable");
         assert_eq!((last.shard, last.done, last.total, last.cell), (3, 1, 8, Some(5)));
+        // RSS rides along only where /proc exists; elsewhere the beat is
+        // still valid with rss_mb = None (graceful degradation).
+        #[cfg(target_os = "linux")]
         assert!(last.rss_mb.unwrap_or(0.0) > 0.0, "RSS should come from /proc");
         let _ = std::fs::remove_dir_all(&dir);
     }

@@ -1,0 +1,533 @@
+//! Checkpoint- and migration-aware recovery: what survives a spot
+//! interruption, and how displaced VMs get back onto hosts.
+//!
+//! The paper's comparison counts interruptions and their durations; this
+//! module extends it to the *work-survival* question raised by the
+//! fault-tolerance literature (Voorsluys & Buyya's checkpoint/migration
+//! provisioning vs. Alourani & Kshemkalyani's no-fault-tolerance
+//! baseline): the reclaim warning window is long enough to checkpoint
+//! in-flight state, and displaced VMs can be reassigned to surviving
+//! hosts instead of waiting in the retry queue.
+//!
+//! Three pieces, mirroring the `chaos`/`market` template:
+//!
+//! - [`RecoverySpec`]: the declarative per-cell knob set (`recovery.*`
+//!   sweep axes) - a [`RecoveryMode`], a checkpoint transfer bandwidth,
+//!   and the full/partial/restart decision threshold.
+//! - [`compile`]: resolves a spec into an immutable [`RecoverySchedule`]
+//!   parameter block, a pure function of `(spec, seed, horizon)` so
+//!   sweep artifacts stay byte-identical at any thread/worker count
+//!   (the recovery machinery is reactive - it consumes interruption
+//!   events - so unlike chaos/market the schedule carries no event
+//!   stream, just the resolved decision parameters).
+//! - [`apply`]: hands the compiled schedule to an engine. The engine
+//!   reacts through dedicated event tags (`RecoveryCheckpoint`,
+//!   `RecoveryReassign`, `RecoveryMigrate`) outside the untouched core
+//!   queue logic.
+//!
+//! The reassignment layer offers two strategies over the same
+//! `displaced VMs x candidate hosts` cost matrix (cost = restart
+//! penalty + checkpoint transfer time): [`assign_greedy`] (each VM in
+//! displacement order takes its cheapest free host) and
+//! [`assign_optimal`] (Kuhn-Munkres min-cost matching). The greedy path
+//! is retained as a parity-comparable baseline: the optimal total cost
+//! is never larger, and the two agree exactly when one VM is displaced
+//! (`tests/properties.rs` pins both invariants).
+
+/// Checkpoint image size per MI of executed work (MB). The image grows
+/// with progress, so long-running work needs proportionally more of the
+/// warning window to save.
+pub const CHECKPOINT_MB_PER_MI: f64 = 0.001;
+
+/// Default checkpoint transfer bandwidth (MB/s) when only other
+/// `recovery.*` axes are set.
+pub const DEFAULT_BANDWIDTH_MB_S: f64 = 100.0;
+
+/// Default full/partial-vs-restart decision threshold: checkpoint only
+/// when at least this fraction of the in-flight progress fits through
+/// the warning window.
+pub const DEFAULT_CHECKPOINT_THRESHOLD: f64 = 0.25;
+
+/// Recovery strategy applied when a spot interruption fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryMode {
+    /// No recovery machinery at all - the engine's baseline behavior.
+    None,
+    /// Displaced VMs are requeued but restart from scratch (terminated
+    /// work re-enters the queue carrying zero progress).
+    Restart,
+    /// Grace-window checkpointing: the warning window transfers
+    /// `bandwidth x window` MB of state; the decision function keeps a
+    /// full or partial image, or falls back to restart below the
+    /// threshold.
+    Checkpoint,
+    /// Checkpointing plus displaced-VM migration via greedy first-fit
+    /// reassignment (each displaced VM takes its cheapest free host).
+    MigrateGreedy,
+    /// Checkpointing plus displaced-VM migration via Kuhn-Munkres
+    /// min-cost matching over displaced VMs x candidate hosts.
+    MigrateOptimal,
+}
+
+impl RecoveryMode {
+    /// Stable label (sweep-axis vocabulary and artifact column value).
+    pub fn label(&self) -> &'static str {
+        match self {
+            RecoveryMode::None => "none",
+            RecoveryMode::Restart => "restart",
+            RecoveryMode::Checkpoint => "checkpoint",
+            RecoveryMode::MigrateGreedy => "migrate-greedy",
+            RecoveryMode::MigrateOptimal => "migrate-optimal",
+        }
+    }
+
+    /// Parse one mode label (`--axis recovery.mode=...` vocabulary).
+    pub fn parse(s: &str) -> Result<RecoveryMode, String> {
+        match s.trim() {
+            "none" => Ok(RecoveryMode::None),
+            "restart" => Ok(RecoveryMode::Restart),
+            "checkpoint" => Ok(RecoveryMode::Checkpoint),
+            "migrate-greedy" => Ok(RecoveryMode::MigrateGreedy),
+            "migrate-optimal" => Ok(RecoveryMode::MigrateOptimal),
+            other => Err(format!(
+                "unknown recovery mode '{other}' (expected none | restart | checkpoint | \
+                 migrate-greedy | migrate-optimal)"
+            )),
+        }
+    }
+
+    /// Whether this mode takes checkpoints during the warning window.
+    pub fn checkpoints(&self) -> bool {
+        matches!(
+            self,
+            RecoveryMode::Checkpoint | RecoveryMode::MigrateGreedy | RecoveryMode::MigrateOptimal
+        )
+    }
+
+    /// Whether this mode migrates displaced VMs through the matcher.
+    pub fn migrates(&self) -> bool {
+        matches!(self, RecoveryMode::MigrateGreedy | RecoveryMode::MigrateOptimal)
+    }
+}
+
+/// Declarative recovery knob set of one sweep cell. Unset fields fall
+/// back to the `DEFAULT_*` constants; a fully-unset spec (or an explicit
+/// `mode=none`) leaves the engine's baseline behavior untouched.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct RecoverySpec {
+    /// Recovery strategy (`recovery.mode` axis). Unset with other
+    /// fields set defaults to [`RecoveryMode::Checkpoint`].
+    pub mode: Option<RecoveryMode>,
+    /// Checkpoint transfer bandwidth in MB/s (`recovery.bandwidth`).
+    pub bandwidth: Option<f64>,
+    /// Full/partial-vs-restart decision threshold in `[0, 1]`
+    /// (`recovery.checkpoint-threshold`).
+    pub checkpoint_threshold: Option<f64>,
+}
+
+impl RecoverySpec {
+    /// The recovery-free spec (baseline engine behavior).
+    pub const NONE: RecoverySpec = RecoverySpec { mode: None, bandwidth: None, checkpoint_threshold: None };
+
+    /// Whether every knob is unset.
+    pub fn is_none(&self) -> bool {
+        self.mode.is_none() && self.bandwidth.is_none() && self.checkpoint_threshold.is_none()
+    }
+
+    /// Resolved mode (default: checkpoint, so setting only a numeric
+    /// axis activates the checkpoint model it parameterizes).
+    pub fn mode(&self) -> RecoveryMode {
+        self.mode.unwrap_or(RecoveryMode::Checkpoint)
+    }
+
+    /// Resolved checkpoint transfer bandwidth (MB/s).
+    pub fn bandwidth(&self) -> f64 {
+        self.bandwidth.unwrap_or(DEFAULT_BANDWIDTH_MB_S)
+    }
+
+    /// Resolved checkpoint decision threshold.
+    pub fn checkpoint_threshold(&self) -> f64 {
+        self.checkpoint_threshold.unwrap_or(DEFAULT_CHECKPOINT_THRESHOLD)
+    }
+}
+
+/// Exact round-trip rendering for numeric recovery axis values (same
+/// contract as `market::label_f64`: shortest `Display` form, whose
+/// `str::parse` inverse is the identity).
+pub fn label_f64(v: f64) -> String {
+    format!("{v}")
+}
+
+/// Compiled recovery parameters of one cell. Unlike the chaos/market
+/// schedules this carries no event stream - recovery reacts to
+/// interruptions - but it goes through the same compile/apply/`Arc`
+/// slot machinery so the determinism story is identical.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoverySchedule {
+    pub mode: RecoveryMode,
+    pub bandwidth_mb_s: f64,
+    pub checkpoint_threshold: f64,
+    pub horizon: f64,
+}
+
+impl RecoverySchedule {
+    /// An empty schedule applies nothing to the engine.
+    pub fn is_empty(&self) -> bool {
+        self.mode == RecoveryMode::None
+    }
+
+    /// Checkpoint decision for `progress_mi` of in-flight work given a
+    /// `window_secs` warning window (see [`checkpoint_decision`]).
+    pub fn decide(&self, progress_mi: f64, window_secs: f64) -> CheckpointDecision {
+        checkpoint_decision(progress_mi, self.bandwidth_mb_s, window_secs, self.checkpoint_threshold)
+    }
+}
+
+/// What the warning-window checkpoint keeps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CheckpointKind {
+    /// The whole image fit through the window: all progress survives.
+    Full,
+    /// Only a prefix fit, but enough to beat the threshold.
+    Partial,
+    /// Too little would survive: don't bother transferring anything.
+    Restart,
+}
+
+/// Outcome of the warning-window checkpoint decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CheckpointDecision {
+    pub kind: CheckpointKind,
+    /// Progress (MI) that survives the interruption.
+    pub saved_mi: f64,
+    /// Checkpoint bytes actually transferred (MB).
+    pub bytes_mb: f64,
+}
+
+/// The warning-window checkpoint model: the image holds
+/// `progress_mi x CHECKPOINT_MB_PER_MI` MB, the window transfers at most
+/// `bandwidth_mb_s x window_secs` MB, and the decision keeps a full
+/// image, a partial prefix (when the saveable fraction reaches
+/// `threshold`), or nothing (restart). Monotone in both bandwidth and
+/// window; never saves more than `progress_mi`.
+pub fn checkpoint_decision(
+    progress_mi: f64,
+    bandwidth_mb_s: f64,
+    window_secs: f64,
+    threshold: f64,
+) -> CheckpointDecision {
+    let progress = progress_mi.max(0.0);
+    if progress <= 0.0 {
+        return CheckpointDecision { kind: CheckpointKind::Full, saved_mi: 0.0, bytes_mb: 0.0 };
+    }
+    let image_mb = progress * CHECKPOINT_MB_PER_MI;
+    let transferable_mb = (bandwidth_mb_s.max(0.0) * window_secs.max(0.0)).max(0.0);
+    if transferable_mb >= image_mb {
+        return CheckpointDecision { kind: CheckpointKind::Full, saved_mi: progress, bytes_mb: image_mb };
+    }
+    let fraction = transferable_mb / image_mb;
+    if fraction + 1e-12 >= threshold {
+        CheckpointDecision {
+            kind: CheckpointKind::Partial,
+            saved_mi: progress * fraction,
+            bytes_mb: transferable_mb,
+        }
+    } else {
+        CheckpointDecision { kind: CheckpointKind::Restart, saved_mi: 0.0, bytes_mb: 0.0 }
+    }
+}
+
+/// Compile a recovery spec into its immutable schedule. A pure function
+/// of `(spec, seed, horizon)`: the `seed` is accepted for template
+/// uniformity with chaos/market but the resolved parameters carry no
+/// randomness, so identical specs compile identically on every thread.
+pub fn compile(spec: &RecoverySpec, _seed: u64, horizon: f64) -> RecoverySchedule {
+    if spec.is_none() || horizon <= 0.0 {
+        return RecoverySchedule {
+            mode: RecoveryMode::None,
+            bandwidth_mb_s: DEFAULT_BANDWIDTH_MB_S,
+            checkpoint_threshold: DEFAULT_CHECKPOINT_THRESHOLD,
+            horizon: horizon.max(0.0),
+        };
+    }
+    RecoverySchedule {
+        mode: spec.mode(),
+        bandwidth_mb_s: spec.bandwidth(),
+        checkpoint_threshold: spec.checkpoint_threshold(),
+        horizon,
+    }
+}
+
+/// Hand a compiled schedule to an engine. Empty schedules (mode `none`)
+/// leave the engine byte-identical to a recovery-free run.
+pub fn apply(engine: &mut crate::engine::Engine, sched: &std::sync::Arc<RecoverySchedule>) {
+    if sched.is_empty() {
+        return;
+    }
+    engine.recovery = Some(std::sync::Arc::clone(sched));
+}
+
+/// Cost-matrix entries at or above this magnitude mean "infeasible"
+/// (the matcher also treats non-finite entries this way).
+const INFEASIBLE: f64 = 1e15;
+
+/// Greedy first-fit reassignment baseline: each displaced VM, in
+/// displacement order, takes the cheapest still-free feasible host
+/// (ties break on the lower host index). Returns one `Option<host
+/// column>` per row; `None` rows stay on the normal retry path.
+pub fn assign_greedy(costs: &[Vec<f64>]) -> Vec<Option<usize>> {
+    let m = costs.first().map_or(0, Vec::len);
+    let mut taken = vec![false; m];
+    costs
+        .iter()
+        .map(|row| {
+            let mut best: Option<usize> = None;
+            for (j, &c) in row.iter().enumerate() {
+                if taken[j] || !c.is_finite() || c >= INFEASIBLE {
+                    continue;
+                }
+                if best.map_or(true, |b| c < row[b]) {
+                    best = Some(j);
+                }
+            }
+            if let Some(j) = best {
+                taken[j] = true;
+            }
+            best
+        })
+        .collect()
+}
+
+/// Kuhn-Munkres (Hungarian) min-cost reassignment: the matching over
+/// displaced VMs x candidate hosts minimizing total cost. Infeasible
+/// pairs (non-finite or >= the infeasible sentinel) are never assigned.
+/// Total cost never exceeds [`assign_greedy`]'s, and the two agree
+/// exactly for a single displaced VM.
+pub fn assign_optimal(costs: &[Vec<f64>]) -> Vec<Option<usize>> {
+    let n = costs.len();
+    let m = costs.first().map_or(0, Vec::len);
+    if n == 0 || m == 0 {
+        return vec![None; n];
+    }
+    // Pad to square with the infeasible sentinel; dummy rows/columns
+    // absorb the imbalance and infeasible-sentinel assignments are
+    // dropped afterwards.
+    let size = n.max(m);
+    let padded: Vec<Vec<f64>> = (0..size)
+        .map(|i| {
+            (0..size)
+                .map(|j| match costs.get(i).and_then(|row| row.get(j)) {
+                    Some(&c) if c.is_finite() && c < INFEASIBLE => c,
+                    _ => INFEASIBLE,
+                })
+                .collect()
+        })
+        .collect();
+    let row_to_col = hungarian_square(&padded);
+    (0..n)
+        .map(|i| {
+            let j = row_to_col[i];
+            if j < m && costs[i][j].is_finite() && costs[i][j] < INFEASIBLE {
+                Some(j)
+            } else {
+                None
+            }
+        })
+        .collect()
+}
+
+/// Total cost of an assignment over the same cost matrix.
+pub fn assignment_total(costs: &[Vec<f64>], assign: &[Option<usize>]) -> f64 {
+    assign
+        .iter()
+        .enumerate()
+        .filter_map(|(i, a)| a.map(|j| costs[i][j]))
+        .sum()
+}
+
+/// Classic O(n^3) Hungarian algorithm on a square matrix (potentials
+/// formulation, 1-indexed internals). Deterministic: iteration order is
+/// fixed, so equal-cost matchings resolve identically on every run.
+fn hungarian_square(cost: &[Vec<f64>]) -> Vec<usize> {
+    let n = cost.len();
+    let mut u = vec![0.0f64; n + 1];
+    let mut v = vec![0.0f64; n + 1];
+    // p[j] = row matched to column j (1-indexed; 0 = unmatched).
+    let mut p = vec![0usize; n + 1];
+    let mut way = vec![0usize; n + 1];
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![f64::INFINITY; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = f64::INFINITY;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if !used[j] {
+                    let cur = cost[i0 - 1][j - 1] - u[i0] - v[j];
+                    if cur < minv[j] {
+                        minv[j] = cur;
+                        way[j] = j0;
+                    }
+                    if minv[j] < delta {
+                        delta = minv[j];
+                        j1 = j;
+                    }
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+    let mut row_to_col = vec![usize::MAX; n];
+    for j in 1..=n {
+        if p[j] != 0 {
+            row_to_col[p[j] - 1] = j - 1;
+        }
+    }
+    row_to_col
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_labels_round_trip() {
+        for m in [
+            RecoveryMode::None,
+            RecoveryMode::Restart,
+            RecoveryMode::Checkpoint,
+            RecoveryMode::MigrateGreedy,
+            RecoveryMode::MigrateOptimal,
+        ] {
+            assert_eq!(RecoveryMode::parse(m.label()).unwrap(), m);
+        }
+        let err = RecoveryMode::parse("teleport").unwrap_err();
+        assert!(err.contains("migrate-optimal"), "{err}");
+    }
+
+    #[test]
+    fn spec_defaults_resolve() {
+        let spec = RecoverySpec { bandwidth: Some(50.0), ..RecoverySpec::NONE };
+        assert!(!spec.is_none());
+        assert_eq!(spec.mode(), RecoveryMode::Checkpoint);
+        assert_eq!(spec.bandwidth(), 50.0);
+        assert_eq!(spec.checkpoint_threshold(), DEFAULT_CHECKPOINT_THRESHOLD);
+        assert!(RecoverySpec::NONE.is_none());
+    }
+
+    #[test]
+    fn compile_is_pure_and_gates_on_spec_and_horizon() {
+        let spec = RecoverySpec {
+            mode: Some(RecoveryMode::MigrateOptimal),
+            bandwidth: Some(200.0),
+            checkpoint_threshold: Some(0.5),
+        };
+        let a = compile(&spec, 1, 4800.0);
+        let b = compile(&spec, 99, 4800.0);
+        assert_eq!(a, b, "seed does not perturb the compiled parameters");
+        assert_eq!(a.mode, RecoveryMode::MigrateOptimal);
+        assert!(compile(&RecoverySpec::NONE, 1, 4800.0).is_empty());
+        assert!(compile(&spec, 1, 0.0).is_empty());
+        assert!(compile(&RecoverySpec { mode: Some(RecoveryMode::None), ..RecoverySpec::NONE }, 1, 4800.0)
+            .is_empty());
+    }
+
+    #[test]
+    fn checkpoint_decision_full_partial_restart() {
+        // 1000 MI -> 1 MB image. Window moves 2 MB: full.
+        let d = checkpoint_decision(1000.0, 1.0, 2.0, 0.25);
+        assert_eq!(d.kind, CheckpointKind::Full);
+        assert_eq!(d.saved_mi, 1000.0);
+        assert_eq!(d.bytes_mb, 1.0);
+        // Window moves 0.5 MB of a 1 MB image: partial at threshold 0.25.
+        let d = checkpoint_decision(1000.0, 0.25, 2.0, 0.25);
+        assert_eq!(d.kind, CheckpointKind::Partial);
+        assert_eq!(d.saved_mi, 500.0);
+        assert_eq!(d.bytes_mb, 0.5);
+        // Window moves 0.1 MB of a 1 MB image: below threshold, restart.
+        let d = checkpoint_decision(1000.0, 0.05, 2.0, 0.25);
+        assert_eq!(d.kind, CheckpointKind::Restart);
+        assert_eq!(d.saved_mi, 0.0);
+        // Zero progress: trivially full, nothing moved.
+        let d = checkpoint_decision(0.0, 100.0, 120.0, 0.25);
+        assert_eq!(d.kind, CheckpointKind::Full);
+        assert_eq!(d.saved_mi, 0.0);
+    }
+
+    #[test]
+    fn greedy_takes_cheapest_free_host_in_row_order() {
+        let costs = vec![vec![5.0, 1.0, 9.0], vec![2.0, 1.5, 9.0]];
+        let a = assign_greedy(&costs);
+        // Row 0 takes column 1 (cheapest); row 1's cheapest (1) is taken,
+        // so it takes column 0.
+        assert_eq!(a, vec![Some(1), Some(0)]);
+    }
+
+    #[test]
+    fn greedy_skips_infeasible_entries() {
+        let costs = vec![vec![f64::INFINITY, 3.0], vec![INFEASIBLE, f64::NAN]];
+        let a = assign_greedy(&costs);
+        assert_eq!(a, vec![Some(1), None]);
+    }
+
+    #[test]
+    fn optimal_beats_greedy_on_conflict() {
+        // Greedy: row 0 grabs column 0 (cost 1), forcing row 1 to column 1
+        // (cost 10) -> total 11. Optimal crosses them for 2 + 2 = 4.
+        let costs = vec![vec![1.0, 2.0], vec![2.0, 10.0]];
+        let g = assign_greedy(&costs);
+        let o = assign_optimal(&costs);
+        assert_eq!(assignment_total(&costs, &g), 11.0);
+        assert_eq!(assignment_total(&costs, &o), 4.0);
+        assert_eq!(o, vec![Some(1), Some(0)]);
+    }
+
+    #[test]
+    fn optimal_and_greedy_agree_on_single_row() {
+        let costs = vec![vec![7.0, 3.0, 5.0]];
+        assert_eq!(assign_greedy(&costs), assign_optimal(&costs));
+        assert_eq!(assign_optimal(&costs), vec![Some(1)]);
+    }
+
+    #[test]
+    fn optimal_handles_more_vms_than_hosts() {
+        // Three displaced VMs, two hosts: the cheapest total pairing wins
+        // and one VM stays unassigned.
+        let costs = vec![vec![1.0, 4.0], vec![2.0, 2.0], vec![3.0, 1.0]];
+        let o = assign_optimal(&costs);
+        let assigned: Vec<usize> = o.iter().flatten().copied().collect();
+        assert_eq!(assigned.len(), 2);
+        assert_eq!(o[0], Some(0));
+        assert_eq!(o[2], Some(1));
+        assert_eq!(o[1], None);
+    }
+
+    #[test]
+    fn optimal_leaves_fully_infeasible_rows_unassigned() {
+        let costs = vec![vec![INFEASIBLE, f64::INFINITY], vec![1.0, 2.0]];
+        assert_eq!(assign_optimal(&costs), vec![None, Some(0)]);
+    }
+}

@@ -52,10 +52,13 @@ use crate::chaos::ChaosSchedule;
 use crate::engine::{Engine, EngineScratch};
 use crate::market::MarketSchedule;
 use crate::obs::{telemetry as tel, EngineCounters, Telemetry};
+use crate::recovery::RecoverySchedule;
 use crate::trace::workload::{self, trace_engine_config};
 
 use super::grid::{Cell, Substrate, SweepSpec};
-use super::prebuild::{panic_message, ChaosSlots, MarketSlots, Prebuilt, PrebuildSlots};
+use super::prebuild::{
+    panic_message, ChaosSlots, MarketSlots, Prebuilt, PrebuildSlots, RecoverySlots,
+};
 use super::report::{CellResult, SweepReport};
 
 /// Worker threads to use when the caller does not care: one per available
@@ -185,6 +188,9 @@ fn run_cells_instrumented(
     // Compiled spot-price paths likewise, keyed per
     // (substrate, seed, market spec) triple.
     let market_slots = MarketSlots::for_cells(cells);
+    // Compiled recovery parameter blocks likewise, keyed per
+    // (substrate, seed, recovery spec) triple.
+    let recovery_slots = RecoverySlots::for_cells(cells);
 
     let threads = threads.max(1).min(total.max(1));
     let next = AtomicUsize::new(0);
@@ -200,6 +206,7 @@ fn run_cells_instrumented(
         let slots = &slots;
         let chaos_slots = &chaos_slots;
         let market_slots = &market_slots;
+        let recovery_slots = &recovery_slots;
         let next = &next;
         let done = &done;
         let prebuild_ns = &prebuild_ns;
@@ -238,9 +245,12 @@ fn run_cells_instrumented(
                                     .get(spec, i, &cells[i], prebuilt)
                                     .map(Arc::as_ref);
                                 let market = market_slots.get(spec, i, &cells[i], prebuilt);
+                                let recovery =
+                                    recovery_slots.get(spec, i, &cells[i], prebuilt);
                                 let t0 = Instant::now();
-                                let (result, returned) =
-                                    run_cell(spec, &cells[i], prebuilt, chaos, market, scratch);
+                                let (result, returned) = run_cell(
+                                    spec, &cells[i], prebuilt, chaos, market, recovery, scratch,
+                                );
                                 scratch = returned;
                                 let elapsed = t0.elapsed();
                                 cell_ns.fetch_add(
@@ -317,6 +327,7 @@ fn run_cell(
     prebuilt: &Prebuilt,
     chaos: Option<&ChaosSchedule>,
     market: Option<&Arc<MarketSchedule>>,
+    recovery: Option<&Arc<RecoverySchedule>>,
     scratch: EngineScratch,
 ) -> (CellResult, EngineScratch) {
     let retain = spec.retain.matches(cell);
@@ -352,6 +363,9 @@ fn run_cell(
         }
         if let Some(sched) = market {
             crate::market::apply(&mut engine, sched);
+        }
+        if let Some(sched) = recovery {
+            crate::recovery::apply(&mut engine, sched);
         }
         let report = engine.run();
         let series = if retain { Some(engine.recorder.take_series()) } else { None };
@@ -545,6 +559,44 @@ mod tests {
         assert!(calm.market.on_demand_cost_usd > calm.market.spot_cost_usd);
         assert!(calm.market.savings_ratio > 0.0 && calm.market.savings_ratio < 1.0);
         assert!(wild.market.price_reclaims >= calm.market.price_reclaims);
+    }
+
+    /// A recovery axis threads through the driver end to end: under a
+    /// reclaim storm with terminate-behavior spots, a checkpointing cell
+    /// survives warned work while a `rec=none` cell loses everything the
+    /// storm touched (no checkpoints, no requeues, zero recovery).
+    #[test]
+    fn recovery_axis_cells_run_with_work_survival_metrics() {
+        use crate::chaos::ReclaimStorm;
+        use crate::recovery::RecoveryMode;
+        use crate::vm::InterruptionBehavior;
+        let scenario = ComparisonConfig { terminate_at: 600.0, ..Default::default() };
+        let spec = SweepSpec::new(scenario)
+            .with_seeds(vec![20_250_710])
+            .with_policies(vec![PolicySpec::FirstFit])
+            .with_axis(ScenarioAxis::SpotBehavior(vec![InterruptionBehavior::Terminate]))
+            .with_axis(ScenarioAxis::ChaosReclaimStorm(vec![
+                ReclaimStorm::parse("at150-frac1").unwrap(),
+            ]))
+            .with_axis(ScenarioAxis::RecoveryMode(vec![
+                RecoveryMode::None,
+                RecoveryMode::Checkpoint,
+            ]));
+        let report = run(&spec, 2);
+        assert_eq!(report.total(), 2);
+        assert_eq!(report.failed(), 0, "recovery cell failed: {:?}", report.cells);
+        let none = report.cells[0].report().unwrap();
+        let ckpt = report.cells[1].report().unwrap();
+        assert_eq!(none.recovery.checkpoints, 0, "{none:?}");
+        assert_eq!(none.recovery.work_recovered_mi, 0.0, "terminated VMs never return");
+        assert_eq!(none.recovery.recovered_fraction, 0.0);
+        assert!(none.recovery.work_lost_mi > 0.0, "the storm killed in-flight work");
+        assert_eq!(none.recovery.requeue_max_s, 0.0, "mode none never requeues");
+        assert!(ckpt.recovery.checkpoints > 0, "{ckpt:?}");
+        assert!(ckpt.recovery.checkpoint_mb > 0.0);
+        assert!(ckpt.recovery.work_recovered_mi > 0.0);
+        assert!(ckpt.recovery.recovered_fraction > 0.0);
+        assert!(ckpt.recovery.requeue_max_s >= ckpt.recovery.requeue_p50_s);
     }
 
     /// Market state cannot leak across cells through a recycled worker

@@ -32,6 +32,7 @@ use crate::chaos::{BrokerOutage, ChaosSpec, DemandSurge, HostMtbf, ReclaimStorm}
 use crate::config::scenario::{comparison_engine_config, ComparisonConfig};
 use crate::engine::{EngineConfig, VictimPolicy};
 use crate::market::MarketSpec;
+use crate::recovery::{RecoveryMode, RecoverySpec};
 use crate::trace::synth::SynthConfig;
 use crate::trace::workload::WorkloadConfig;
 use crate::vm::{InterruptionBehavior, SpotConfig};
@@ -250,6 +251,9 @@ pub struct CellSpec {
     /// Spot-price market model compiled per cell (`crate::market`);
     /// `NONE` keeps the run market-free.
     pub market: MarketSpec,
+    /// Checkpoint/migration recovery model compiled per cell
+    /// (`crate::recovery`); `NONE` keeps the run recovery-free.
+    pub recovery: RecoverySpec,
 }
 
 impl CellSpec {
@@ -262,6 +266,7 @@ impl CellSpec {
             victim: None,
             chaos: ChaosSpec::NONE,
             market: MarketSpec::NONE,
+            recovery: RecoverySpec::NONE,
         }
     }
 
@@ -312,6 +317,15 @@ impl CellSpec {
         }
         if let Some(v) = self.market.bid_margin {
             parts.push(format!("bid={v}"));
+        }
+        if let Some(m) = self.recovery.mode {
+            parts.push(format!("rec={}", m.label()));
+        }
+        if let Some(v) = self.recovery.bandwidth {
+            parts.push(format!("bw={v}"));
+        }
+        if let Some(v) = self.recovery.checkpoint_threshold {
+            parts.push(format!("ckpt={v}"));
         }
         if parts.is_empty() {
             "-".to_string()
@@ -367,6 +381,15 @@ pub enum ScenarioAxis {
     /// Bid levels as a margin over the long-run spot mean
     /// (`market.bid-margin`), > 0; bid = on-demand price x margin.
     MarketBidMargin(Vec<f64>),
+    /// Interruption-recovery mode ablation (`recovery.mode`), values in
+    /// the [`RecoveryMode::parse`] vocabulary
+    /// (none | restart | checkpoint | migrate-greedy | migrate-optimal).
+    RecoveryMode(Vec<RecoveryMode>),
+    /// Checkpoint-transfer bandwidths in MB/s (`recovery.bandwidth`), > 0.
+    RecoveryBandwidth(Vec<f64>),
+    /// Minimum transferable fraction for a partial checkpoint
+    /// (`recovery.checkpoint-threshold`), in [0, 1].
+    RecoveryCheckpointThreshold(Vec<f64>),
 }
 
 impl ScenarioAxis {
@@ -375,7 +398,8 @@ impl ScenarioAxis {
     /// `hlem.alpha`, `victim`, `substrate`, `chaos.host-mtbf`,
     /// `chaos.reclaim-storm`, `chaos.broker-outage`, `chaos.demand-surge`,
     /// `market.volatility`, `market.mean-reversion`,
-    /// `market.daily-amplitude`, `market.bid-margin`.
+    /// `market.daily-amplitude`, `market.bid-margin`, `recovery.mode`,
+    /// `recovery.bandwidth`, `recovery.checkpoint-threshold`.
     pub fn parse(s: &str) -> Result<ScenarioAxis, String> {
         let (name, vals) = s
             .split_once('=')
@@ -423,12 +447,28 @@ impl ScenarioAxis {
                 "market.bid-margin",
                 MarketBound::Positive,
             )?)),
+            "recovery.mode" => {
+                Ok(ScenarioAxis::RecoveryMode(parse_each(vals, RecoveryMode::parse)?))
+            }
+            "recovery.bandwidth" => Ok(ScenarioAxis::RecoveryBandwidth(parse_market_list(
+                vals,
+                "recovery.bandwidth",
+                MarketBound::Positive,
+            )?)),
+            "recovery.checkpoint-threshold" => {
+                Ok(ScenarioAxis::RecoveryCheckpointThreshold(parse_market_list(
+                    vals,
+                    "recovery.checkpoint-threshold",
+                    MarketBound::UnitInterval,
+                )?))
+            }
             other => Err(format!(
                 "unknown axis '{other}' (expected spot.warning | spot.hibernation-timeout | \
                  spot.behavior | hlem.alpha | victim | substrate | chaos.host-mtbf | \
                  chaos.reclaim-storm | chaos.broker-outage | chaos.demand-surge | \
                  market.volatility | market.mean-reversion | market.daily-amplitude | \
-                 market.bid-margin)"
+                 market.bid-margin | recovery.mode | recovery.bandwidth | \
+                 recovery.checkpoint-threshold)"
             )),
         }
     }
@@ -450,6 +490,9 @@ impl ScenarioAxis {
             ScenarioAxis::MarketMeanReversion(_) => "market.mean-reversion",
             ScenarioAxis::MarketDailyAmplitude(_) => "market.daily-amplitude",
             ScenarioAxis::MarketBidMargin(_) => "market.bid-margin",
+            ScenarioAxis::RecoveryMode(_) => "recovery.mode",
+            ScenarioAxis::RecoveryBandwidth(_) => "recovery.bandwidth",
+            ScenarioAxis::RecoveryCheckpointThreshold(_) => "recovery.checkpoint-threshold",
         }
     }
 
@@ -469,6 +512,9 @@ impl ScenarioAxis {
             | ScenarioAxis::MarketMeanReversion(v)
             | ScenarioAxis::MarketDailyAmplitude(v)
             | ScenarioAxis::MarketBidMargin(v) => v.len(),
+            ScenarioAxis::RecoveryMode(v) => v.len(),
+            ScenarioAxis::RecoveryBandwidth(v)
+            | ScenarioAxis::RecoveryCheckpointThreshold(v) => v.len(),
         }
     }
 
@@ -575,6 +621,27 @@ impl ScenarioAxis {
                     for &x in vals {
                         let mut s = v;
                         s.market.bid_margin = Some(x);
+                        out.push(s);
+                    }
+                }
+                ScenarioAxis::RecoveryMode(vals) => {
+                    for &m in vals {
+                        let mut s = v;
+                        s.recovery.mode = Some(m);
+                        out.push(s);
+                    }
+                }
+                ScenarioAxis::RecoveryBandwidth(vals) => {
+                    for &x in vals {
+                        let mut s = v;
+                        s.recovery.bandwidth = Some(x);
+                        out.push(s);
+                    }
+                }
+                ScenarioAxis::RecoveryCheckpointThreshold(vals) => {
+                    for &x in vals {
+                        let mut s = v;
+                        s.recovery.checkpoint_threshold = Some(x);
                         out.push(s);
                     }
                 }
@@ -1320,6 +1387,7 @@ mod tests {
             victim: Some(VictimPolicy::Youngest),
             chaos: ChaosSpec::NONE,
             market: MarketSpec::NONE,
+            recovery: RecoverySpec::NONE,
         };
         assert_eq!(spec.variant_label(), "trace warn=60 victim=youngest");
         // Chaos axis values label with their canonical parse grammar.
@@ -1336,5 +1404,60 @@ mod tests {
         // axis stays readable in the aggregate table and progress lines.
         let adj = CellSpec::comparison(PolicySpec::Hlem { adjusted: true, alpha: -0.3 });
         assert_eq!(adj.variant_label(), "alpha=-0.30");
+        // Recovery values label like the market axes: mode vocabulary plus
+        // shortest-f64 Display for the numeric knobs.
+        let mut rec = CellSpec::comparison(PolicySpec::FirstFit);
+        rec.recovery.mode = Some(RecoveryMode::MigrateOptimal);
+        rec.recovery.bandwidth = Some(128.0);
+        rec.recovery.checkpoint_threshold = Some(0.25);
+        assert_eq!(rec.variant_label(), "rec=migrate-optimal bw=128 ckpt=0.25");
+    }
+
+    /// Recovery axes parse, expand and compose like the chaos/market axes.
+    #[test]
+    fn recovery_axes_parse_expand_and_compose() {
+        assert_eq!(
+            ScenarioAxis::parse("recovery.mode=none,restart,checkpoint,migrate-greedy,migrate-optimal")
+                .unwrap(),
+            ScenarioAxis::RecoveryMode(vec![
+                RecoveryMode::None,
+                RecoveryMode::Restart,
+                RecoveryMode::Checkpoint,
+                RecoveryMode::MigrateGreedy,
+                RecoveryMode::MigrateOptimal,
+            ])
+        );
+        assert_eq!(
+            ScenarioAxis::parse("recovery.bandwidth=50,200").unwrap(),
+            ScenarioAxis::RecoveryBandwidth(vec![50.0, 200.0])
+        );
+        assert_eq!(
+            ScenarioAxis::parse("recovery.checkpoint-threshold=0,0.25,1").unwrap(),
+            ScenarioAxis::RecoveryCheckpointThreshold(vec![0.0, 0.25, 1.0])
+        );
+        assert!(ScenarioAxis::parse("recovery.mode=teleport").is_err(), "unknown mode");
+        assert!(ScenarioAxis::parse("recovery.bandwidth=0").is_err(), "zero bandwidth");
+        assert!(ScenarioAxis::parse("recovery.bandwidth=-5").is_err(), "negative bandwidth");
+        assert!(
+            ScenarioAxis::parse("recovery.checkpoint-threshold=1.5").is_err(),
+            "threshold > 1"
+        );
+
+        let spec = SweepSpec::new(ComparisonConfig::default())
+            .with_seeds(vec![1])
+            .with_policies(vec![PolicySpec::FirstFit])
+            .with_axis(ScenarioAxis::RecoveryBandwidth(vec![100.0]))
+            .with_axis(ScenarioAxis::RecoveryMode(vec![
+                RecoveryMode::Restart,
+                RecoveryMode::Checkpoint,
+            ]));
+        let variants = spec.variants();
+        assert_eq!(variants.len(), 2);
+        for (v, mode) in variants.iter().zip(&[RecoveryMode::Restart, RecoveryMode::Checkpoint]) {
+            assert_eq!(v.recovery.bandwidth, Some(100.0));
+            assert_eq!(v.recovery.mode, Some(*mode));
+            assert!(!v.recovery.is_none());
+        }
+        assert_eq!(spec.cell_count(), 2);
     }
 }

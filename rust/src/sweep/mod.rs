@@ -95,7 +95,9 @@ pub use grid::{
     Cell, CellSpec, PolicySpec, ScenarioAxis, SeriesFilter, SpotOverride, Substrate, SweepSpec,
     TraceSubstrate,
 };
-pub use prebuild::{build_prebuilt, ChaosSlots, MarketSlots, Prebuilt, PrebuildCache, PrebuildSlots};
+pub use prebuild::{
+    build_prebuilt, ChaosSlots, MarketSlots, Prebuilt, PrebuildCache, PrebuildSlots, RecoverySlots,
+};
 pub use report::{CellResult, SweepReport, VariantAggregate};
 pub use shard::{
     coordinate, merge_partials, partition, CoordinateOptions, CoordinateOutcome, Partial, Shard,

@@ -31,6 +31,7 @@ use std::sync::{Arc, OnceLock};
 use crate::chaos::{self, ChaosSchedule, ChaosSpec};
 use crate::config::scenario::{plan_comparison_workload, ComparisonConfig, WorkloadPlan};
 use crate::market::{self, MarketSchedule, MarketSpec};
+use crate::recovery::{self, RecoverySchedule, RecoverySpec};
 use crate::trace::synth::{SynthConfig, TraceGenerator};
 use crate::trace::Trace;
 
@@ -334,6 +335,83 @@ impl MarketSlots {
     }
 }
 
+/// Lazy worker-side recovery-schedule table, the [`ChaosSlots`] pattern
+/// keyed per distinct (substrate, seed, recovery spec) triple: every cell
+/// sharing a triple reuses one compiled parameter block.
+/// [`recovery::compile`] is a pure function of the triple (plus the
+/// substrate horizon, itself a function of (substrate, seed)), so racing
+/// builders produce identical values and the winning worker never leaks
+/// into the merged artifacts. Recovery-free cells map to no slot at all.
+pub struct RecoverySlots {
+    /// Slot index -> key. `RecoverySpec` carries floats (no `Ord`), so
+    /// dedup is a linear scan - grids stay small relative to compile cost.
+    keys: Vec<(u8, u64, RecoverySpec)>,
+    slots: Vec<OnceLock<Arc<RecoverySchedule>>>,
+    /// Cell index (enumeration order) -> slot index; `usize::MAX` marks a
+    /// recovery-free cell.
+    cell_slot: Vec<usize>,
+}
+
+impl RecoverySlots {
+    /// Size the slot table for `cells` (nothing is compiled yet).
+    pub fn for_cells(cells: &[Cell]) -> Self {
+        let mut keys: Vec<(u8, u64, RecoverySpec)> = Vec::new();
+        let mut cell_slot = Vec::with_capacity(cells.len());
+        for cell in cells {
+            if cell.spec.recovery.is_none() {
+                cell_slot.push(usize::MAX);
+                continue;
+            }
+            let (sub, seed) = slot_key(cell);
+            let key = (sub, seed, cell.spec.recovery);
+            let slot = match keys.iter().position(|k| *k == key) {
+                Some(i) => i,
+                None => {
+                    keys.push(key);
+                    keys.len() - 1
+                }
+            };
+            cell_slot.push(slot);
+        }
+        let mut slots = Vec::new();
+        slots.resize_with(keys.len(), OnceLock::new);
+        RecoverySlots { keys, slots, cell_slot }
+    }
+
+    /// Distinct (substrate, seed, recovery) triples the table covers.
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Schedules actually compiled so far.
+    pub fn built(&self) -> usize {
+        self.slots.iter().filter(|s| s.get().is_some()).count()
+    }
+
+    /// The compiled recovery schedule for the cell at `cell_index` of the
+    /// enumeration this table was sized for (compiling it on first use),
+    /// or `None` for a recovery-free cell. `prebuilt` anchors the compile
+    /// to the cell's substrate horizon, so it must be the cell's own
+    /// prebuild.
+    pub fn get(
+        &self,
+        spec: &SweepSpec,
+        cell_index: usize,
+        cell: &Cell,
+        prebuilt: &Prebuilt,
+    ) -> Option<&Arc<RecoverySchedule>> {
+        let slot = self.cell_slot[cell_index];
+        if slot == usize::MAX {
+            return None;
+        }
+        debug_assert_eq!(self.keys[slot].2, cell.spec.recovery, "cell/slot table mismatch");
+        Some(self.slots[slot].get_or_init(|| {
+            let (horizon, _) = substrate_extent(spec, prebuilt);
+            Arc::new(recovery::compile(&cell.spec.recovery, cell.seed, horizon))
+        }))
+    }
+}
+
 /// (Substrate, seed)-keyed cache of workload prebuilds.
 ///
 /// Within each substrate, prebuilds are keyed by seed alone, so one cache
@@ -607,6 +685,41 @@ mod tests {
             .with_policies(vec![PolicySpec::FirstFit]);
         let plain_cells = plain.cells();
         let none = MarketSlots::for_cells(&plain_cells);
+        assert_eq!(none.slot_count(), 0);
+        assert!(none.get(&plain, 0, &plain_cells[0], &pb0).is_none());
+    }
+
+    /// Recovery slots dedup per (substrate, seed, recovery) triple, share
+    /// one compiled parameter block per triple, and skip recovery-free
+    /// cells entirely.
+    #[test]
+    fn recovery_slots_compile_once_per_triple() {
+        use crate::recovery::RecoveryMode;
+        use crate::sweep::grid::ScenarioAxis;
+        let spec = crate::sweep::SweepSpec::new(ComparisonConfig::default())
+            .with_seeds(vec![1, 2])
+            .with_policies(vec![PolicySpec::FirstFit, PolicySpec::BestFit])
+            .with_axis(ScenarioAxis::RecoveryMode(vec![RecoveryMode::Checkpoint]));
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 4);
+        let prebuilds = PrebuildSlots::for_cells(&cells);
+        let recovery = RecoverySlots::for_cells(&cells);
+        assert_eq!(recovery.slot_count(), 2, "two seeds, one recovery value -> two slots");
+        assert_eq!(recovery.built(), 0, "slots are lazy");
+        let pb0 = prebuilds.get(&spec, 0, &cells[0]).as_ref().unwrap().clone();
+        let a = recovery.get(&spec, 0, &cells[0], &pb0).unwrap().clone();
+        let b = recovery.get(&spec, 1, &cells[1], &pb0).unwrap().clone();
+        assert!(Arc::ptr_eq(&a, &b), "same triple must share one schedule");
+        assert_eq!(recovery.built(), 1);
+        assert!(!a.is_empty(), "an active spec compiles an active schedule");
+        assert_eq!(a.mode, RecoveryMode::Checkpoint);
+
+        // Recovery-free grids never compile anything and return None.
+        let plain = crate::sweep::SweepSpec::new(ComparisonConfig::default())
+            .with_seeds(vec![1])
+            .with_policies(vec![PolicySpec::FirstFit]);
+        let plain_cells = plain.cells();
+        let none = RecoverySlots::for_cells(&plain_cells);
         assert_eq!(none.slot_count(), 0);
         assert!(none.get(&plain, 0, &plain_cells[0], &pb0).is_none());
     }

@@ -64,6 +64,11 @@ pub struct VariantAggregate {
     pub spot_cost_usd: Summary,
     pub savings_ratio: Summary,
     pub price_reclaims: Summary,
+    /// Work-survival moments (recovery sweeps; all-zero for
+    /// recovery-free cells).
+    pub recovered_fraction: Summary,
+    pub requeue_p95_s: Summary,
+    pub migrations: Summary,
 }
 
 impl SweepReport {
@@ -126,6 +131,9 @@ impl SweepReport {
                         spot_cost_usd: Summary::new(),
                         savings_ratio: Summary::new(),
                         price_reclaims: Summary::new(),
+                        recovered_fraction: Summary::new(),
+                        requeue_p95_s: Summary::new(),
+                        migrations: Summary::new(),
                     });
                     aggs.len() - 1
                 }
@@ -145,6 +153,9 @@ impl SweepReport {
             a.spot_cost_usd.add(report.market.spot_cost_usd);
             a.savings_ratio.add(report.market.savings_ratio);
             a.price_reclaims.add(report.market.price_reclaims as f64);
+            a.recovered_fraction.add(report.recovery.recovered_fraction);
+            a.requeue_p95_s.add(report.recovery.requeue_p95_s);
+            a.migrations.add(report.recovery.migrations as f64);
         }
         aggs
     }
@@ -171,6 +182,9 @@ impl SweepReport {
             "market_mean_reversion",
             "market_daily_amplitude",
             "market_bid_margin",
+            "recovery_mode",
+            "recovery_bandwidth",
+            "recovery_checkpoint_threshold",
             "status",
             "error",
             "clock_end",
@@ -200,6 +214,14 @@ impl SweepReport {
             "price_reclaims",
             "mean_price_paid",
             "max_price_paid",
+            "checkpoints",
+            "checkpoint_mb",
+            "migrations",
+            "failed_migrations",
+            "recovered_fraction",
+            "requeue_p50_s",
+            "requeue_p95_s",
+            "requeue_max_s",
         ]);
         for c in &self.cells {
             let spec = &c.cell.spec;
@@ -221,6 +243,12 @@ impl SweepReport {
                 spec.market.mean_reversion.map(crate::market::label_f64).unwrap_or_default(),
                 spec.market.daily_amplitude.map(crate::market::label_f64).unwrap_or_default(),
                 spec.market.bid_margin.map(crate::market::label_f64).unwrap_or_default(),
+                spec.recovery.mode.map(|m| m.label().to_string()).unwrap_or_default(),
+                spec.recovery.bandwidth.map(crate::recovery::label_f64).unwrap_or_default(),
+                spec.recovery
+                    .checkpoint_threshold
+                    .map(crate::recovery::label_f64)
+                    .unwrap_or_default(),
             ];
             match &c.outcome {
                 Ok(r) => row.extend(vec![
@@ -253,11 +281,19 @@ impl SweepReport {
                     r.market.price_reclaims.to_string(),
                     fmt_num(r.market.mean_price_paid),
                     fmt_num(r.market.max_price_paid),
+                    r.recovery.checkpoints.to_string(),
+                    fmt_num(r.recovery.checkpoint_mb),
+                    r.recovery.migrations.to_string(),
+                    r.recovery.failed_migrations.to_string(),
+                    fmt_num(r.recovery.recovered_fraction),
+                    fmt_num(r.recovery.requeue_p50_s),
+                    fmt_num(r.recovery.requeue_p95_s),
+                    fmt_num(r.recovery.requeue_max_s),
                 ]),
                 Err(e) => {
                     row.push("failed".into());
                     row.push(e.clone());
-                    row.extend(std::iter::repeat(String::new()).take(27));
+                    row.extend(std::iter::repeat(String::new()).take(35));
                 }
             }
             csv.push(row);
@@ -331,6 +367,18 @@ impl SweepReport {
             o.set("market_mean_reversion", opt_num(spec.market.mean_reversion));
             o.set("market_daily_amplitude", opt_num(spec.market.daily_amplitude));
             o.set("market_bid_margin", opt_num(spec.market.bid_margin));
+            o.set(
+                "recovery_mode",
+                spec.recovery
+                    .mode
+                    .map(|m| Json::Str(m.label().to_string()))
+                    .unwrap_or(Json::Null),
+            );
+            o.set("recovery_bandwidth", opt_num(spec.recovery.bandwidth));
+            o.set(
+                "recovery_checkpoint_threshold",
+                opt_num(spec.recovery.checkpoint_threshold),
+            );
             o.set("runs", Json::Num(a.runs as f64));
             o.set("interruptions", stat_obj(&a.interruptions));
             o.set("interrupted_vms", stat_obj(&a.interrupted_vms));
@@ -346,6 +394,9 @@ impl SweepReport {
             o.set("spot_cost_usd", stat_obj(&a.spot_cost_usd));
             o.set("savings_ratio", stat_obj(&a.savings_ratio));
             o.set("price_reclaims", stat_obj(&a.price_reclaims));
+            o.set("recovered_fraction", stat_obj(&a.recovered_fraction));
+            o.set("requeue_p95_s", stat_obj(&a.requeue_p95_s));
+            o.set("migrations", stat_obj(&a.migrations));
             variants.push(Json::Obj(o));
         }
         root.set("policies", Json::Arr(variants));
@@ -392,8 +443,9 @@ impl SweepReport {
 mod tests {
     use super::*;
     use crate::chaos::{ChaosSpec, ReclaimStorm};
-    use crate::engine::{MarketStats, ResilienceStats, SpotStats, VictimPolicy};
+    use crate::engine::{MarketStats, RecoveryStats, ResilienceStats, SpotStats, VictimPolicy};
     use crate::market::MarketSpec;
+    use crate::recovery::{RecoveryMode, RecoverySpec};
     use crate::sweep::grid::{PolicySpec, SpotOverride, Substrate};
 
     fn fake_report(policy: &'static str, interruptions: u64) -> Report {
@@ -439,6 +491,18 @@ mod tests {
                 price_reclaims: interruptions,
                 mean_price_paid: 0.25,
                 max_price_paid: 0.75,
+            },
+            recovery: RecoveryStats {
+                checkpoints: interruptions,
+                checkpoint_mb: 0.5 * interruptions as f64,
+                migrations: 1,
+                failed_migrations: 0,
+                work_recovered_mi: 50.0,
+                work_lost_mi: 100.0 * interruptions as f64,
+                recovered_fraction: 0.25,
+                requeue_p50_s: 4.0,
+                requeue_p95_s: 9.0 + interruptions as f64,
+                requeue_max_s: 12.0,
             },
         }
     }
@@ -511,20 +575,23 @@ mod tests {
             "cell,policy,alpha,seed,substrate,victim,spot_warning,spot_hib_timeout,\
              spot_behavior,chaos_host_mtbf,chaos_reclaim_storm,chaos_broker_outage,\
              chaos_demand_surge,market_volatility,market_mean_reversion,\
-             market_daily_amplitude,market_bid_margin,status"
+             market_daily_amplitude,market_bid_margin,recovery_mode,recovery_bandwidth,\
+             recovery_checkpoint_threshold,status"
         ));
         assert!(
             text.contains(
                 "min_interruption_s,storms,storm_reclaims,interruptions_per_storm,\
                  p95_interruption_s,recoveries,avg_recovery_s,max_recovery_s,\
                  work_lost_mi,work_recovered_mi,spot_cost_usd,od_cost_usd,\
-                 savings_ratio,price_reclaims,mean_price_paid,max_price_paid"
+                 savings_ratio,price_reclaims,mean_price_paid,max_price_paid,\
+                 checkpoints,checkpoint_mb,migrations,failed_migrations,\
+                 recovered_fraction,requeue_p50_s,requeue_p95_s,requeue_max_s"
             ),
-            "resilience/market columns missing: {text}"
+            "resilience/market/recovery columns missing: {text}"
         );
         // Default variants leave the axis columns empty but name the
         // substrate.
-        assert!(text.contains(",comparison,,,,,,,,,,,,,ok,"));
+        assert!(text.contains(",comparison,,,,,,,,,,,,,,,,ok,"));
     }
 
     #[test]
@@ -548,10 +615,18 @@ mod tests {
                 bid_margin: Some(0.5),
                 ..MarketSpec::NONE
             },
+            recovery: RecoverySpec {
+                mode: Some(RecoveryMode::Checkpoint),
+                bandwidth: Some(128.0),
+                checkpoint_threshold: Some(0.25),
+            },
         };
         let text = rep.cells_csv().to_string();
         assert!(
-            text.contains(",trace,youngest,60,900,terminate,,at1200-frac0.5,,,0.25,,,0.5,ok,"),
+            text.contains(
+                ",trace,youngest,60,900,terminate,,at1200-frac0.5,,,0.25,,,0.5,\
+                 checkpoint,128,0.25,ok,"
+            ),
             "axis columns missing: {text}"
         );
     }
@@ -630,6 +705,24 @@ mod tests {
         assert_eq!(
             policies[0].path(&["savings_ratio", "mean"]).unwrap().as_f64(),
             Some(0.6)
+        );
+        // Recovery axis keys are always present (null when recovery-free),
+        // and the work-survival moments follow fake_report's values.
+        assert!(policies[0].path(&["recovery_mode"]).is_some());
+        assert!(policies[0].path(&["recovery_bandwidth"]).is_some());
+        assert!(policies[0].path(&["recovery_checkpoint_threshold"]).is_some());
+        assert_eq!(
+            policies[0].path(&["recovered_fraction", "mean"]).unwrap().as_f64(),
+            Some(0.25)
+        );
+        // first-fit cells have 3 and 5 interruptions -> p95 12 and 14.
+        assert_eq!(
+            policies[0].path(&["requeue_p95_s", "max"]).unwrap().as_f64(),
+            Some(14.0)
+        );
+        assert_eq!(
+            policies[0].path(&["migrations", "mean"]).unwrap().as_f64(),
+            Some(1.0)
         );
     }
 

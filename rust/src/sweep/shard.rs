@@ -57,9 +57,12 @@ use std::time::{Duration, Instant};
 use crate::chaos::{BrokerOutage, ChaosSpec, DemandSurge, HostMtbf, ReclaimStorm};
 use crate::obs::{heartbeat_file, read_last_heartbeat, telemetry as tel, StallTracker, Telemetry};
 use crate::config::scenario::ComparisonConfig;
-use crate::engine::{EngineConfig, MarketStats, Report, ResilienceStats, SpotStats, VictimPolicy};
+use crate::engine::{
+    EngineConfig, MarketStats, RecoveryStats, Report, ResilienceStats, SpotStats, VictimPolicy,
+};
 use crate::cloudlet::SchedulerKind;
 use crate::market::MarketSpec;
+use crate::recovery::{RecoveryMode, RecoverySpec};
 use crate::metrics::TimeSeries;
 use crate::trace::synth::SynthConfig;
 use crate::trace::workload::WorkloadConfig;
@@ -485,6 +488,13 @@ fn axis_to_json(a: &ScenarioAxis) -> Json {
         | ScenarioAxis::MarketMeanReversion(v)
         | ScenarioAxis::MarketDailyAmplitude(v)
         | ScenarioAxis::MarketBidMargin(v) => v.iter().map(|&x| enc_f64(x)).collect(),
+        ScenarioAxis::RecoveryMode(v) => {
+            v.iter().map(|m| Json::Str(m.label().to_string())).collect()
+        }
+        // Recovery numeric axes share the market exactness rule.
+        ScenarioAxis::RecoveryBandwidth(v) | ScenarioAxis::RecoveryCheckpointThreshold(v) => {
+            v.iter().map(|&x| enc_f64(x)).collect()
+        }
     };
     o.set("values", Json::Arr(values));
     Json::Obj(o)
@@ -547,6 +557,14 @@ fn axis_from_json(v: &Json) -> Result<ScenarioAxis, String> {
         "market.mean-reversion" => Ok(ScenarioAxis::MarketMeanReversion(nums()?)),
         "market.daily-amplitude" => Ok(ScenarioAxis::MarketDailyAmplitude(nums()?)),
         "market.bid-margin" => Ok(ScenarioAxis::MarketBidMargin(nums()?)),
+        "recovery.mode" => Ok(ScenarioAxis::RecoveryMode(
+            values
+                .iter()
+                .map(|x| RecoveryMode::parse(str_of(x, "axis value")?))
+                .collect::<Result<_, _>>()?,
+        )),
+        "recovery.bandwidth" => Ok(ScenarioAxis::RecoveryBandwidth(nums()?)),
+        "recovery.checkpoint-threshold" => Ok(ScenarioAxis::RecoveryCheckpointThreshold(nums()?)),
         other => Err(format!("unknown axis '{other}'")),
     }
 }
@@ -681,6 +699,14 @@ fn cell_to_json(c: &Cell) -> Json {
     mk.set("daily_amplitude", opt_num(c.spec.market.daily_amplitude));
     mk.set("bid_margin", opt_num(c.spec.market.bid_margin));
     spec.set("market", Json::Obj(mk));
+    let mut rc = JsonObj::new();
+    rc.set(
+        "mode",
+        c.spec.recovery.mode.map(|m| Json::Str(m.label().to_string())).unwrap_or(Json::Null),
+    );
+    rc.set("bandwidth", opt_num(c.spec.recovery.bandwidth));
+    rc.set("checkpoint_threshold", opt_num(c.spec.recovery.checkpoint_threshold));
+    spec.set("recovery", Json::Obj(rc));
     let mut o = JsonObj::new();
     o.set("id", enc_usize(c.id));
     o.set("seed", enc_u64(c.seed));
@@ -693,8 +719,12 @@ fn cell_from_json(v: &Json) -> Result<Cell, String> {
     let so = as_obj(field(o, "spec")?, "cell spec")?;
     let co = as_obj(field(so, "chaos")?, "cell chaos spec")?;
     let mo = as_obj(field(so, "market")?, "cell market spec")?;
+    let ro = as_obj(field(so, "recovery")?, "cell recovery spec")?;
     let mk_num = |key: &str| -> Result<Option<f64>, String> {
         opt_json(field(mo, key)?).map(|x| num_of(x, key)).transpose()
+    };
+    let rc_num = |key: &str| -> Result<Option<f64>, String> {
+        opt_json(field(ro, key)?).map(|x| num_of(x, key)).transpose()
     };
     let spec = CellSpec {
         substrate: Substrate::parse(str_field(so, "substrate")?)?,
@@ -722,6 +752,13 @@ fn cell_from_json(v: &Json) -> Result<Cell, String> {
             mean_reversion: mk_num("mean_reversion")?,
             daily_amplitude: mk_num("daily_amplitude")?,
             bid_margin: mk_num("bid_margin")?,
+        },
+        recovery: RecoverySpec {
+            mode: opt_json(field(ro, "mode")?)
+                .map(|x| RecoveryMode::parse(str_of(x, "mode")?))
+                .transpose()?,
+            bandwidth: rc_num("bandwidth")?,
+            checkpoint_threshold: rc_num("checkpoint_threshold")?,
         },
     };
     Ok(Cell { id: usize_field(o, "id")?, seed: u64_field(o, "seed")?, spec })
@@ -778,6 +815,19 @@ fn report_to_json(r: &Report) -> Json {
     mk.set("mean_price_paid", enc_f64(m.mean_price_paid));
     mk.set("max_price_paid", enc_f64(m.max_price_paid));
     o.set("market", Json::Obj(mk));
+    let rc = &r.recovery;
+    let mut rv = JsonObj::new();
+    rv.set("checkpoints", enc_u64(rc.checkpoints));
+    rv.set("checkpoint_mb", enc_f64(rc.checkpoint_mb));
+    rv.set("migrations", enc_u64(rc.migrations));
+    rv.set("failed_migrations", enc_u64(rc.failed_migrations));
+    rv.set("work_recovered_mi", enc_f64(rc.work_recovered_mi));
+    rv.set("work_lost_mi", enc_f64(rc.work_lost_mi));
+    rv.set("recovered_fraction", enc_f64(rc.recovered_fraction));
+    rv.set("requeue_p50_s", enc_f64(rc.requeue_p50_s));
+    rv.set("requeue_p95_s", enc_f64(rc.requeue_p95_s));
+    rv.set("requeue_max_s", enc_f64(rc.requeue_max_s));
+    o.set("recovery", Json::Obj(rv));
     Json::Obj(o)
 }
 
@@ -786,6 +836,7 @@ fn report_from_json(v: &Json) -> Result<Report, String> {
     let sp = as_obj(field(o, "spot")?, "spot stats")?;
     let re = as_obj(field(o, "resilience")?, "resilience stats")?;
     let mk = as_obj(field(o, "market")?, "market stats")?;
+    let rc = as_obj(field(o, "recovery")?, "recovery stats")?;
     let max_per_vm = u64_field(sp, "max_interruptions_per_vm")?;
     Ok(Report {
         policy: static_policy_name(str_field(o, "policy")?)?,
@@ -835,6 +886,18 @@ fn report_from_json(v: &Json) -> Result<Report, String> {
             price_reclaims: u64_field(mk, "price_reclaims")?,
             mean_price_paid: f64_field(mk, "mean_price_paid")?,
             max_price_paid: f64_field(mk, "max_price_paid")?,
+        },
+        recovery: RecoveryStats {
+            checkpoints: u64_field(rc, "checkpoints")?,
+            checkpoint_mb: f64_field(rc, "checkpoint_mb")?,
+            migrations: u64_field(rc, "migrations")?,
+            failed_migrations: u64_field(rc, "failed_migrations")?,
+            work_recovered_mi: f64_field(rc, "work_recovered_mi")?,
+            work_lost_mi: f64_field(rc, "work_lost_mi")?,
+            recovered_fraction: f64_field(rc, "recovered_fraction")?,
+            requeue_p50_s: f64_field(rc, "requeue_p50_s")?,
+            requeue_p95_s: f64_field(rc, "requeue_p95_s")?,
+            requeue_max_s: f64_field(rc, "requeue_max_s")?,
         },
     })
 }
@@ -1555,6 +1618,9 @@ mod tests {
             // use shortest-round-trip Display.
             .with_axis(ScenarioAxis::MarketVolatility(vec![0.05, 0.2]))
             .with_axis(ScenarioAxis::MarketBidMargin(vec![0.1 + 0.7]))
+            .with_axis(ScenarioAxis::RecoveryMode(vec![RecoveryMode::MigrateOptimal]))
+            .with_axis(ScenarioAxis::RecoveryBandwidth(vec![0.1 + 0.2]))
+            .with_axis(ScenarioAxis::RecoveryCheckpointThreshold(vec![0.25]))
             .with_series_retention(SeriesFilter::parse("policy=first-fit,seed=2").unwrap())
             .with_cell(77, PolicySpec::BestFit);
         spec.trace.synth.machines = 10;
@@ -1681,6 +1747,18 @@ mod tests {
                     mean_price_paid: 0.4125,
                     max_price_paid: 1e-300,
                 },
+                recovery: RecoveryStats {
+                    checkpoints: u64::MAX - 17, // string-encoded: > 2^53
+                    checkpoint_mb: 0.1 + 0.2,   // 0.30000000000000004
+                    migrations: 3,
+                    failed_migrations: 1,
+                    work_recovered_mi: 987.5,
+                    work_lost_mi: 1e-300,
+                    recovered_fraction: 987.5 / (987.5 + 1e-300),
+                    requeue_p50_s: 0.2 + 0.4, // 0.6000000000000001
+                    requeue_p95_s: 12.25,
+                    requeue_max_s: 30.125,
+                },
             })
         } else {
             Err("cell exploded".to_string())
@@ -1733,6 +1811,19 @@ mod tests {
             want.market.max_price_paid.to_bits()
         );
         assert_eq!(r0.market.price_reclaims, want.market.price_reclaims);
+        assert_eq!(r0.recovery.checkpoints, want.recovery.checkpoints);
+        assert_eq!(
+            r0.recovery.checkpoint_mb.to_bits(),
+            want.recovery.checkpoint_mb.to_bits()
+        );
+        assert_eq!(
+            r0.recovery.work_lost_mi.to_bits(),
+            want.recovery.work_lost_mi.to_bits()
+        );
+        assert_eq!(
+            r0.recovery.requeue_p50_s.to_bits(),
+            want.recovery.requeue_p50_s.to_bits()
+        );
         assert_eq!(r0.wall, Duration::ZERO, "wall time must not cross the wire");
         let s0 = back[0].series.as_ref().unwrap();
         let s_want = results[0].series.as_ref().unwrap();

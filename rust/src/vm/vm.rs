@@ -109,6 +109,10 @@ pub struct Vm {
     /// Whether a periodic backstop retry event is already scheduled
     /// (dedupes the engine's hibernation retry stream).
     pub retry_armed: bool,
+    /// Progress (MI) captured by a recovery checkpoint during the
+    /// current warning window; consumed when the interruption fires and
+    /// cleared on re-placement (see `crate::recovery`).
+    pub checkpoint_mi: Option<f64>,
 }
 
 impl Vm {
@@ -133,6 +137,7 @@ impl Vm {
             preempt_armed_at: None,
             displaced_at: None,
             retry_armed: false,
+            checkpoint_mi: None,
         }
     }
 

@@ -20,8 +20,11 @@
 use std::path::PathBuf;
 
 use cloudmarket::chaos::{ChaosSpec, ReclaimStorm};
-use cloudmarket::engine::{MarketStats, Report, ResilienceStats, SpotStats, VictimPolicy};
+use cloudmarket::engine::{
+    MarketStats, RecoveryStats, Report, ResilienceStats, SpotStats, VictimPolicy,
+};
 use cloudmarket::market::MarketSpec;
+use cloudmarket::recovery::{RecoveryMode, RecoverySpec};
 use cloudmarket::sweep::{
     Cell, CellResult, CellSpec, PolicySpec, SpotOverride, Substrate, SweepReport,
 };
@@ -44,6 +47,7 @@ fn ok_report(
     min_s: f64,
     resilience: ResilienceStats,
     market: MarketStats,
+    recovery: RecoveryStats,
 ) -> Report {
     Report {
         policy,
@@ -70,15 +74,17 @@ fn ok_report(
         },
         resilience,
         market,
+        recovery,
     }
 }
 
 /// The pinned 4-cell report: two comparison first-fit cells (a 2-run
 /// aggregate group), one failed adjusted-HLEM cell (a 0-run group with
 /// `null` moments), and one trace-substrate cell with every axis column
-/// set - including a `chaos.reclaim-storm` label and a full dyadic
-/// `market.*` spec with cost stats - (a 1-run group). All resilience and
-/// market values are dyadic so the aggregate moments stay bit-exact.
+/// set - including a `chaos.reclaim-storm` label, a full dyadic
+/// `market.*` spec with cost stats, and a `recovery.*` spec with
+/// work-survival stats - (a 1-run group). All resilience, market, and
+/// recovery values are dyadic so the aggregate moments stay bit-exact.
 fn pinned_report() -> SweepReport {
     let ff = CellSpec::comparison(PolicySpec::FirstFit);
     let adj = CellSpec::comparison(PolicySpec::Hlem { adjusted: true, alpha: -0.5 });
@@ -100,6 +106,11 @@ fn pinned_report() -> SweepReport {
             mean_reversion: Some(0.5),
             daily_amplitude: Some(0.5),
             bid_margin: Some(0.5),
+        },
+        recovery: RecoverySpec {
+            mode: Some(RecoveryMode::Checkpoint),
+            bandwidth: Some(128.0),
+            checkpoint_threshold: Some(0.25),
         },
     };
     SweepReport {
@@ -133,6 +144,7 @@ fn pinned_report() -> SweepReport {
                         ..Default::default()
                     },
                     MarketStats::default(),
+                    RecoveryStats::default(),
                 )),
                 series: None,
             },
@@ -170,6 +182,7 @@ fn pinned_report() -> SweepReport {
                         ..Default::default()
                     },
                     MarketStats::default(),
+                    RecoveryStats::default(),
                 )),
                 series: None,
             },
@@ -208,6 +221,18 @@ fn pinned_report() -> SweepReport {
                         price_reclaims: 2,
                         mean_price_paid: 0.25,
                         max_price_paid: 0.75,
+                    },
+                    RecoveryStats {
+                        checkpoints: 2,
+                        checkpoint_mb: 512.25,
+                        migrations: 1,
+                        failed_migrations: 1,
+                        work_recovered_mi: 250.5,
+                        work_lost_mi: 500.25,
+                        recovered_fraction: 0.25,
+                        requeue_p50_s: 10.5,
+                        requeue_p95_s: 20.25,
+                        requeue_max_s: 24.5,
                     },
                 )),
                 series: None,
@@ -268,17 +293,20 @@ fn cells_csv_column_order_is_pinned() {
         "cell,policy,alpha,seed,substrate,victim,spot_warning,spot_hib_timeout,\
          spot_behavior,chaos_host_mtbf,chaos_reclaim_storm,chaos_broker_outage,\
          chaos_demand_surge,market_volatility,market_mean_reversion,\
-         market_daily_amplitude,market_bid_margin,status,error,clock_end,events,\
+         market_daily_amplitude,market_bid_margin,recovery_mode,recovery_bandwidth,\
+         recovery_checkpoint_threshold,status,error,clock_end,events,\
          vms_finished,vms_terminated,vms_failed,spot_total,interruptions,\
          interrupted_vms,max_per_vm,avg_interruption_s,max_interruption_s,\
          min_interruption_s,storms,storm_reclaims,interruptions_per_storm,\
          p95_interruption_s,recoveries,avg_recovery_s,max_recovery_s,work_lost_mi,\
          work_recovered_mi,spot_cost_usd,od_cost_usd,savings_ratio,price_reclaims,\
-         mean_price_paid,max_price_paid",
+         mean_price_paid,max_price_paid,checkpoints,checkpoint_mb,migrations,\
+         failed_migrations,recovered_fraction,requeue_p50_s,requeue_p95_s,\
+         requeue_max_s",
         "cells CSV column order drifted"
     );
-    // Every row carries the full column count (46), including error rows.
+    // Every row carries the full column count (57), including error rows.
     for line in text.lines() {
-        assert_eq!(line.split(',').count(), 46, "ragged row: {line}");
+        assert_eq!(line.split(',').count(), 57, "ragged row: {line}");
     }
 }

@@ -621,6 +621,28 @@ fn prop_shard_partition_covers_disjointly_and_round_trips() {
         if rng.chance(0.3) {
             spec = spec.with_axis(ScenarioAxis::MarketBidMargin(vec![rng.uniform(0.1, 2.0)]));
         }
+        if rng.chance(0.4) {
+            use cloudmarket::recovery::RecoveryMode;
+            let modes = [
+                RecoveryMode::None,
+                RecoveryMode::Restart,
+                RecoveryMode::Checkpoint,
+                RecoveryMode::MigrateGreedy,
+                RecoveryMode::MigrateOptimal,
+            ];
+            let n = 1 + rng.below(3);
+            spec = spec.with_axis(ScenarioAxis::RecoveryMode(
+                (0..n).map(|_| modes[rng.below(5) as usize]).collect(),
+            ));
+        }
+        if rng.chance(0.3) {
+            spec = spec
+                .with_axis(ScenarioAxis::RecoveryBandwidth(vec![rng.uniform(1.0, 500.0)]));
+        }
+        if rng.chance(0.3) {
+            spec = spec.with_axis(ScenarioAxis::RecoveryCheckpointThreshold(vec![rng
+                .uniform(0.0, 1.0)]));
+        }
         if rng.chance(0.3) {
             spec = spec.with_cell(rng.next_u64(), PolicySpec::BestFit);
         }
@@ -778,6 +800,18 @@ fn prop_partial_results_round_trip_bit_exact() {
                             mean_price_paid: rng.uniform(0.0, 2.0),
                             max_price_paid: rng.uniform(0.0, 2.0),
                         },
+                        recovery: cloudmarket::engine::RecoveryStats {
+                            checkpoints: rng.next_u64(),
+                            checkpoint_mb: rng.uniform(0.0, 1e6),
+                            migrations: rng.next_u64(),
+                            failed_migrations: rng.next_u64(),
+                            work_recovered_mi: rng.uniform(0.0, 1e12),
+                            work_lost_mi: rng.uniform(0.0, 1e12),
+                            recovered_fraction: rng.uniform(0.0, 1.0),
+                            requeue_p50_s: rng.uniform(0.0, 1e4),
+                            requeue_p95_s: rng.uniform(0.0, 1e4),
+                            requeue_max_s: rng.uniform(0.0, 1e4),
+                        },
                     }),
                     series,
                 }
@@ -836,6 +870,25 @@ fn prop_partial_results_round_trip_bit_exact() {
                         y.market.max_price_paid.to_bits()
                     );
                     assert_eq!(x.market.price_reclaims, y.market.price_reclaims);
+                    assert_eq!(x.recovery.checkpoints, y.recovery.checkpoints);
+                    assert_eq!(x.recovery.migrations, y.recovery.migrations);
+                    assert_eq!(x.recovery.failed_migrations, y.recovery.failed_migrations);
+                    assert_eq!(
+                        x.recovery.checkpoint_mb.to_bits(),
+                        y.recovery.checkpoint_mb.to_bits()
+                    );
+                    assert_eq!(
+                        x.recovery.work_recovered_mi.to_bits(),
+                        y.recovery.work_recovered_mi.to_bits()
+                    );
+                    assert_eq!(
+                        x.recovery.recovered_fraction.to_bits(),
+                        y.recovery.recovered_fraction.to_bits()
+                    );
+                    assert_eq!(
+                        x.recovery.requeue_p95_s.to_bits(),
+                        y.recovery.requeue_p95_s.to_bits()
+                    );
                     assert_eq!(y.wall, std::time::Duration::ZERO, "wall must not survive");
                 }
                 (Err(x), Err(y)) => assert_eq!(x, y),
@@ -1069,6 +1122,242 @@ fn prop_market_axis_labels_round_trip_exactly() {
                 vals.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
                 "{name} values changed across label round-trip"
             );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// recovery properties
+// ---------------------------------------------------------------------
+
+/// The warning-window checkpoint decision is monotone in both bandwidth
+/// and window length, never saves more than the accumulated progress,
+/// and never transfers more than the image holds - for arbitrary
+/// progress/bandwidth/window/threshold combinations.
+#[test]
+fn prop_checkpoint_decision_monotone_and_bounded() {
+    use cloudmarket::recovery::{checkpoint_decision, CheckpointKind, CHECKPOINT_MB_PER_MI};
+
+    forall(60, 0xC4EC, |rng| {
+        let progress = rng.uniform(0.0, 1e6);
+        let threshold = rng.uniform(0.0, 1.0);
+        let (b1, b2) = {
+            let a = rng.uniform(0.0, 500.0);
+            let b = rng.uniform(0.0, 500.0);
+            (a.min(b), a.max(b))
+        };
+        let (w1, w2) = {
+            let a = rng.uniform(0.0, 600.0);
+            let b = rng.uniform(0.0, 600.0);
+            (a.min(b), a.max(b))
+        };
+        for (b, w) in [(b1, w1), (b1, w2), (b2, w1), (b2, w2)] {
+            let d = checkpoint_decision(progress, b, w, threshold);
+            assert!(d.saved_mi >= 0.0 && d.bytes_mb >= 0.0);
+            assert!(d.saved_mi <= progress + 1e-9, "saved more than progress");
+            assert!(
+                d.bytes_mb <= progress * CHECKPOINT_MB_PER_MI + 1e-9,
+                "transferred more than the image holds"
+            );
+            match d.kind {
+                CheckpointKind::Full => assert!((d.saved_mi - progress).abs() < 1e-9),
+                CheckpointKind::Partial => assert!(
+                    d.saved_mi + 1e-6 >= threshold * progress,
+                    "partial save below the threshold fraction"
+                ),
+                CheckpointKind::Restart => assert_eq!(d.saved_mi, 0.0),
+            }
+        }
+        // Monotone in bandwidth (window fixed) and in window (bandwidth
+        // fixed): more transfer capacity never loses work.
+        let saved = |b: f64, w: f64| checkpoint_decision(progress, b, w, threshold).saved_mi;
+        assert!(saved(b1, w1) <= saved(b2, w1) + 1e-9, "not monotone in bandwidth");
+        assert!(saved(b1, w2) <= saved(b2, w2) + 1e-9, "not monotone in bandwidth");
+        assert!(saved(b1, w1) <= saved(b1, w2) + 1e-9, "not monotone in window");
+        assert!(saved(b2, w1) <= saved(b2, w2) + 1e-9, "not monotone in window");
+    });
+}
+
+/// The Kuhn-Munkres reassignment never costs more than the greedy
+/// first-fit baseline on fully-feasible matrices (both place every
+/// displaced VM when hosts suffice), agrees with greedy exactly for a
+/// single displaced VM, and with infeasible pairs in the mix it stays
+/// injective, never assigns an infeasible pair, and places at least as
+/// many VMs as greedy does.
+#[test]
+fn prop_optimal_reassignment_never_worse_than_greedy() {
+    use cloudmarket::recovery::{assign_greedy, assign_optimal, assignment_total};
+
+    fn check_injective_and_feasible(costs: &[Vec<f64>], assign: &[Option<usize>]) {
+        let m = costs.first().map(Vec::len).unwrap_or(0);
+        let mut taken = vec![false; m];
+        for (i, a) in assign.iter().enumerate() {
+            if let Some(j) = *a {
+                assert!(j < m, "assigned column out of range");
+                assert!(!taken[j], "two VMs assigned to one host");
+                taken[j] = true;
+                assert!(costs[i][j].is_finite() && costs[i][j] < 1e14, "infeasible pair assigned");
+            }
+        }
+    }
+
+    forall(40, 0x6B4D, |rng| {
+        let n = 1 + rng.below(6) as usize;
+        let m = n + rng.below(5) as usize;
+
+        // Fully feasible, hosts >= VMs: both algorithms place everyone, so
+        // the totals are directly comparable.
+        let costs: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..m).map(|_| rng.uniform(0.0, 100.0)).collect()).collect();
+        let greedy = assign_greedy(&costs);
+        let optimal = assign_optimal(&costs);
+        check_injective_and_feasible(&costs, &greedy);
+        check_injective_and_feasible(&costs, &optimal);
+        assert!(greedy.iter().all(Option::is_some), "greedy must place all (feasible, m>=n)");
+        assert!(optimal.iter().all(Option::is_some), "optimal must place all (feasible, m>=n)");
+        let g = assignment_total(&costs, &greedy);
+        let o = assignment_total(&costs, &optimal);
+        assert!(o <= g + 1e-6, "optimal total {o} exceeds greedy total {g}");
+        if n == 1 {
+            assert_eq!(optimal, greedy, "single displaced VM: exact parity");
+        }
+
+        // Sprinkle infeasible pairs: the matching must stay valid, and the
+        // min-cost matching (sentinel-padded) never strands a VM greedy
+        // could have placed.
+        let mut sparse = costs.clone();
+        for row in sparse.iter_mut() {
+            for c in row.iter_mut() {
+                if rng.chance(0.4) {
+                    *c = 1e15;
+                }
+            }
+        }
+        let greedy = assign_greedy(&sparse);
+        let optimal = assign_optimal(&sparse);
+        check_injective_and_feasible(&sparse, &greedy);
+        check_injective_and_feasible(&sparse, &optimal);
+        let placed = |a: &[Option<usize>]| a.iter().filter(|x| x.is_some()).count();
+        assert!(
+            placed(&optimal) >= placed(&greedy),
+            "optimal placed {} VMs, greedy {}",
+            placed(&optimal),
+            placed(&greedy)
+        );
+    });
+}
+
+/// Compiled recovery schedules are a pure function of (spec, seed,
+/// horizon): identical no matter which thread compiles them or what
+/// other compiles happen in between - the `RecoverySlots` analogue of
+/// the chaos/market compile-invariance properties above.
+#[test]
+fn prop_recovery_schedule_compile_is_thread_and_order_invariant() {
+    use cloudmarket::recovery::{self, RecoveryMode, RecoverySpec};
+
+    forall(12, 0x4EC0, |rng| {
+        let modes = [
+            RecoveryMode::None,
+            RecoveryMode::Restart,
+            RecoveryMode::Checkpoint,
+            RecoveryMode::MigrateGreedy,
+            RecoveryMode::MigrateOptimal,
+        ];
+        let spec = RecoverySpec {
+            mode: rng.chance(0.8).then(|| modes[rng.below(5) as usize]),
+            bandwidth: rng.chance(0.6).then(|| rng.uniform(1.0, 500.0)),
+            checkpoint_threshold: rng.chance(0.6).then(|| rng.uniform(0.0, 1.0)),
+        };
+        let seed = rng.next_u64();
+        let horizon = rng.uniform(500.0, 200_000.0);
+
+        let reference = format!("{:?}", recovery::compile(&spec, seed, horizon));
+        // Interleave a compile for a different seed: resolved parameters
+        // must have no hidden shared state the extra compile shifts.
+        let _ = recovery::compile(&spec, seed ^ 0xDEAD_BEEF, horizon);
+        assert_eq!(
+            format!("{:?}", recovery::compile(&spec, seed, horizon)),
+            reference,
+            "recompiling after an unrelated compile changed the schedule"
+        );
+        // The schedule carries no randomness at all: a different seed
+        // resolves to the identical parameter block.
+        assert_eq!(
+            format!("{:?}", recovery::compile(&spec, seed ^ 1, horizon)),
+            reference,
+            "recovery schedules must be seed-independent"
+        );
+
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let mut last = String::new();
+                    for _ in 0..=(i % 3) {
+                        last = format!("{:?}", recovery::compile(&spec, seed, horizon));
+                    }
+                    last
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(
+                h.join().unwrap(),
+                reference,
+                "recovery compile must be thread-invariant"
+            );
+        }
+    });
+}
+
+/// `recovery.*` axis labels round-trip exactly, mode labels included:
+/// formatting values with the shortest-Display label and re-parsing the
+/// axis string reproduces the original bits/variants.
+#[test]
+fn prop_recovery_axis_labels_round_trip_exactly() {
+    use cloudmarket::recovery::{label_f64, RecoveryMode};
+    use cloudmarket::sweep::ScenarioAxis;
+
+    forall(40, 0x4EC1AB, |rng| {
+        let n = 1 + rng.below(4) as usize;
+        let bw: Vec<f64> = (0..n).map(|_| rng.uniform(1e-3, 1e4)).collect();
+        let th: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 1.0)).collect();
+        for (name, vals) in
+            [("recovery.bandwidth", &bw), ("recovery.checkpoint-threshold", &th)]
+        {
+            for &v in vals.iter() {
+                let back: f64 = label_f64(v).parse().unwrap();
+                assert_eq!(back.to_bits(), v.to_bits(), "label_f64 must invert exactly");
+            }
+            let joined: Vec<String> = vals.iter().map(|&v| label_f64(v)).collect();
+            let axis = ScenarioAxis::parse(&format!("{name}={}", joined.join(","))).unwrap();
+            let got = match &axis {
+                ScenarioAxis::RecoveryBandwidth(v)
+                | ScenarioAxis::RecoveryCheckpointThreshold(v) => v,
+                other => panic!("parsed into the wrong axis: {other:?}"),
+            };
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                vals.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{name} values changed across label round-trip"
+            );
+        }
+        let modes = [
+            RecoveryMode::None,
+            RecoveryMode::Restart,
+            RecoveryMode::Checkpoint,
+            RecoveryMode::MigrateGreedy,
+            RecoveryMode::MigrateOptimal,
+        ];
+        let picked: Vec<RecoveryMode> =
+            (0..n).map(|_| modes[rng.below(5) as usize]).collect();
+        let joined: Vec<&str> = picked.iter().map(|m| m.label()).collect();
+        let axis =
+            ScenarioAxis::parse(&format!("recovery.mode={}", joined.join(","))).unwrap();
+        match axis {
+            ScenarioAxis::RecoveryMode(v) => {
+                assert_eq!(v, picked, "mode labels changed across round-trip")
+            }
+            other => panic!("parsed into the wrong axis: {other:?}"),
         }
     });
 }

@@ -377,6 +377,76 @@ fn market_chaos_grid_byte_identical_across_processes() {
     }
 }
 
+/// A recovery-mode ablation under a full reclaim storm with
+/// terminate-behavior spots, through real worker subprocesses: the
+/// checkpointing and migrating cells must show surviving work
+/// (`recovered_fraction > 0`) while `none`/`restart` recover nothing,
+/// and the coordinator's merged artifacts are byte-identical to the
+/// in-process run at 1 and 2 workers. Lazily compiled recovery
+/// schedules must not let worker count leak into any artifact byte.
+#[test]
+fn recovery_storm_grid_byte_identical_across_processes() {
+    use cloudmarket::chaos::ReclaimStorm;
+    use cloudmarket::recovery::RecoveryMode;
+    use cloudmarket::vm::InterruptionBehavior;
+
+    let scenario = ComparisonConfig { terminate_at: 600.0, ..Default::default() };
+    let spec = SweepSpec::new(scenario)
+        .with_seeds(vec![20_250_710])
+        .with_policies(vec![PolicySpec::FirstFit])
+        .with_axis(ScenarioAxis::SpotBehavior(vec![InterruptionBehavior::Terminate]))
+        .with_axis(ScenarioAxis::ChaosReclaimStorm(vec![
+            ReclaimStorm::parse("at150-frac1").unwrap(),
+        ]))
+        .with_axis(ScenarioAxis::RecoveryMode(vec![
+            RecoveryMode::None,
+            RecoveryMode::Restart,
+            RecoveryMode::Checkpoint,
+            RecoveryMode::MigrateGreedy,
+            RecoveryMode::MigrateOptimal,
+        ]));
+    assert_eq!(spec.cell_count(), 5);
+
+    let reference = sweep::run(&spec, 1);
+    assert_eq!(reference.failed(), 0, "no recovery cell may fail");
+    for c in &reference.cells {
+        let r = c.report().unwrap();
+        let mode = c.cell.spec.recovery.mode.unwrap_or(RecoveryMode::None);
+        if mode.checkpoints() {
+            assert!(r.recovery.checkpoints > 0, "cell {} took no checkpoints", c.cell.id);
+            assert!(
+                r.recovery.recovered_fraction > 0.0,
+                "cell {} ({mode:?}) salvaged no warned work",
+                c.cell.id
+            );
+        } else {
+            assert_eq!(
+                r.recovery.recovered_fraction, 0.0,
+                "cell {} ({mode:?}) must recover nothing",
+                c.cell.id
+            );
+            assert!(r.recovery.work_lost_mi > 0.0, "the storm lost no work in cell {}", c.cell.id);
+        }
+    }
+    let want = render(&reference);
+    assert!(want.0.contains("migrate-optimal"), "recovery label missing from cells CSV");
+    assert!(want.0.contains("recovered_fraction"), "recovery columns missing from cells CSV");
+    assert!(want.1.contains("recovered_fraction"), "recovery moments missing from aggregate");
+
+    for workers in [1usize, 2] {
+        let dir = test_dir(&format!("recovery_{workers}w"));
+        let outcome =
+            shard::coordinate(&spec, &shard::CoordinateOptions::new(workers, &dir, BIN))
+                .unwrap();
+        assert_eq!(
+            render(&outcome.report),
+            want,
+            "{workers}-worker recovery artifacts differ from the in-process run"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
 /// A corrupt or foreign shard file makes the worker exit with the
 /// dedicated bad-shard code, distinct from generic runtime failures, and
 /// write no partial.
