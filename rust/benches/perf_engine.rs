@@ -7,25 +7,44 @@
 //!   baseline is the exact pre-index implementation, kept in `World` as
 //!   the `_scan` oracles; parity is asserted before timing),
 //! - end-to-end events/sec on the comparison scenario (the headline
-//!   "simulator speed" number vs the paper's 1.5 days per simulated day).
+//!   "simulator speed" number vs the paper's 1.5 days per simulated day),
+//! - the million-entity scale tier: 100 000 hosts / 1.1 M committed VMs
+//!   exercising the SoA hot state (`engine::soa`), with O(1)
+//!   `state_sample` vs the walking `_scan` oracle, a churn+sample
+//!   throughput row, and the process peak RSS (VmHWM) recorded as a
+//!   byte-valued row - CI gates both against the committed baseline
+//!   (see docs/perf.md).
 //!
 //! All results land in `BENCH_engine.json` at the repo root (the
 //! decision-latency trajectory CI validates). Set `BENCH_FAST=1` to skip
-//! the 10 000-host tier (CI smoke).
+//! the 10 000-host decision tier (CI smoke); the scale tier always runs -
+//! it is the row CI's RSS ceiling and throughput gates key on.
 //!
 //! The decision world is first-fit-shaped: the head of the cluster is
 //! packed solid (free_pes = 0) and only the tail keeps headroom, which is
 //! what a loaded cluster looks like and is exactly the case where the
 //! pre-index scans waste their time walking infeasible hosts.
 
+use std::time::{Duration, Instant};
+
 use cloudmarket::allocation::{AllocationPolicy, BestFit, FirstFit, HlemVmp, RoundRobin, WorstFit};
-use cloudmarket::benchkit::{banner, black_box, fast_mode, Bencher};
+use cloudmarket::benchkit::{banner, black_box, fast_mode, BenchResult, Bencher};
 use cloudmarket::config::scenario::{build_comparison_workload, ComparisonConfig};
 use cloudmarket::core::{EntityId, EventQueue, HeapEventQueue, SimEvent};
 use cloudmarket::engine::{Engine, EngineConfig, World};
 use cloudmarket::infra::HostSpec;
 use cloudmarket::stats::Rng;
-use cloudmarket::vm::{SpotConfig, Vm, VmId, VmSpec};
+use cloudmarket::vm::{SpotConfig, Vm, VmId, VmSpec, VmState};
+
+/// Peak resident set of this process in bytes (`VmHWM` from
+/// `/proc/self/status`). `None` off Linux - the RSS row is then skipped
+/// (CI runs on Linux, where the row is required and gated).
+fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: u64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024)
+}
 
 /// A cluster of `n_hosts` with the head packed solid, spot VMs sprinkled
 /// through the packed region, and ~8% tail headroom; plus a small probe
@@ -213,6 +232,122 @@ fn main() {
         black_box(engine.run());
     });
     println!("(events per e2e run: {events})");
+
+    // --- scale tier: 100k hosts / 1M+ VMs --------------------------------
+    // Not gated on `fast`: this tier is exactly what CI's RSS ceiling and
+    // scale-throughput gates consume, so the BENCH_FAST smoke must still
+    // produce it. The workload uses integral-MB RAM values only, so the
+    // incremental counters are required to stay on the exact O(1) path
+    // (`sample_is_incremental`) for the whole tier.
+    banner("scale tier: 100k hosts / 1M+ VMs (SoA hot state, O(1) sampling)");
+    const SCALE_HOSTS: usize = 100_000;
+    const VMS_PER_HOST: usize = 11;
+    let t0 = Instant::now();
+    let mut w = World::new();
+    let dc = w.add_datacenter("dc", 1.0);
+    for _ in 0..SCALE_HOSTS {
+        w.add_host(dc, HostSpec::new(16, 1000.0, 65_536.0, 40_000.0, 4_000_000.0), 0.0);
+    }
+    let mut n_vms = 0usize;
+    for h in 0..SCALE_HOSTS {
+        for k in 0..VMS_PER_HOST {
+            let spec = VmSpec::new(1000.0, 1).with_ram(512.0).with_bw(10.0).with_storage(100.0);
+            // One spot VM per host keeps every spot-usage vector and the
+            // spot-host set populated at full scale.
+            let vm = if k == 0 {
+                w.add_vm(Vm::spot(0, spec, SpotConfig::hibernate()))
+            } else {
+                w.add_vm(Vm::on_demand(0, spec))
+            };
+            w.commit_vm(h, vm);
+            w.transition_vm(vm, VmState::Running);
+            n_vms += 1;
+        }
+    }
+    let build = t0.elapsed().max(Duration::from_nanos(1));
+    assert!(n_vms >= 1_000_000, "scale tier must commit at least 1M VMs (got {n_vms})");
+    assert!(
+        w.sample_is_incremental(),
+        "integral-MB scale workload must stay on the O(1) RAM path"
+    );
+    assert!(
+        w.state_sample().bits_eq(&w.state_sample_scan()),
+        "incremental/scan sample divergence at scale"
+    );
+    b.record(BenchResult {
+        name: format!("scale tier build {SCALE_HOSTS} hosts / {n_vms} vms"),
+        iterations: 1,
+        median: build,
+        mean: build,
+        p95: build,
+        min: build,
+        items_per_iter: Some(n_vms as f64),
+    });
+
+    // O(1) sampling vs the walking oracle at scale. The inner loop keeps
+    // the per-iteration time measurable for the incremental path.
+    const SAMPLE_CALLS: usize = 4_096;
+    let ri = b.bench(
+        &format!("state_sample[incremental] {SCALE_HOSTS} hosts"),
+        Some(SAMPLE_CALLS as f64),
+        || {
+            for _ in 0..SAMPLE_CALLS {
+                black_box(w.state_sample());
+            }
+        },
+    );
+    let rs = b.bench(&format!("state_sample[scan-oracle] {SCALE_HOSTS} hosts"), Some(1.0), || {
+        black_box(w.state_sample_scan());
+    });
+    println!(
+        "    -> incremental sample {:.0}x over the walking oracle at {SCALE_HOSTS} hosts",
+        rs.median.as_secs_f64()
+            / (ri.median.as_secs_f64() / SAMPLE_CALLS as f64).max(1e-12)
+    );
+
+    // Churn+sample throughput: release + re-commit one resident VM and
+    // take a sample, hopping across the cluster - the steady-state
+    // mutation pattern of a big run (index update, SoA maintenance, spot
+    // fold extend/rebuild, O(1) sample). This is the scale-tier
+    // cells/sec row CI gates against the committed baseline.
+    const CHURN: usize = 2_048;
+    let mut cursor = 0usize;
+    b.bench(
+        &format!("scale tier churn+sample {SCALE_HOSTS} hosts / {n_vms} vms"),
+        Some(CHURN as f64),
+        || {
+            for _ in 0..CHURN {
+                let h = cursor % SCALE_HOSTS;
+                let vm = w.hosts[h].vms[0];
+                w.release_vm(h, vm);
+                w.commit_vm(h, vm);
+                black_box(w.state_sample());
+                cursor = cursor.wrapping_add(7_919);
+            }
+        },
+    );
+    w.check_index().expect("index + SoA mirrors consistent after scale churn");
+
+    // Peak RSS of the whole bench process (the scale world dominates),
+    // encoded as a byte-valued row: median_ns == bytes, iterations == 1.
+    // CI fails when this exceeds the committed baseline by >20%.
+    match peak_rss_bytes() {
+        Some(bytes) => {
+            let d = Duration::from_nanos(bytes.max(1));
+            b.record(BenchResult {
+                name: format!("scale tier max RSS bytes {SCALE_HOSTS} hosts / {n_vms} vms"),
+                iterations: 1,
+                median: d,
+                mean: d,
+                p95: d,
+                min: d,
+                items_per_iter: None,
+            });
+            println!("    -> peak RSS {:.0} MB (VmHWM)", bytes as f64 / (1024.0 * 1024.0));
+        }
+        None => println!("(VmHWM unavailable on this platform; RSS row skipped)"),
+    }
+    drop(w);
 
     // --- trajectory file --------------------------------------------------
     b.merge(&hb);

@@ -15,13 +15,18 @@
 //! pairs; CI gates on `first-cell-done` staying a small fraction of the
 //! wall time.
 //!
+//! A local-only **scale tier** (skipped under `BENCH_FAST`) times a grid
+//! of large trace cells so deep sweep-level cells/sec can be watched
+//! outside CI; the CI-gated million-entity numbers live in
+//! `perf_engine`'s always-on scale tier.
+//!
 //! Results land in `BENCH_sweep.json` at the repo root (regenerate with
 //! `cargo bench --bench perf_sweep`; CI refreshes and validates it next
 //! to `BENCH_engine.json`, and gates cells/sec against the committed
 //! baseline - see docs/perf.md). Set `BENCH_FAST=1` for the CI smoke
 //! (fewer seeds, shorter horizon).
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use cloudmarket::benchkit::{banner, black_box, fast_mode, BenchResult, Bencher};
 use cloudmarket::config::scenario::ComparisonConfig;
@@ -131,6 +136,51 @@ fn main() {
         timing.first_cell_done,
         timing.wall,
     );
+
+    // --- scale tier: heavyweight trace cells (local-only) ---------------
+    // One timed pass over a grid of *large* trace cells - the per-cell
+    // entity counts approach the engine scale tier's regime rather than
+    // the smoke-sized grids above. Skipped under BENCH_FAST: CI exercises
+    // the million-entity regime through `perf_engine`'s always-on scale
+    // tier (which also carries the gated RSS row); this row exists so
+    // local runs can watch sweep-level cells/sec at depth. Because it
+    // never runs under BENCH_FAST it also never appears in CI-generated
+    // BENCH_sweep.json, keeping the CI regression gate's row set stable.
+    if !fast {
+        banner("PERF: sweep scale tier (large trace cells)");
+        let scale_scenario = ComparisonConfig { terminate_at: 2_400.0, ..Default::default() };
+        let mut scale = SweepSpec::new(scale_scenario)
+            .with_seed_range(20_250_808, 4)
+            .with_policies(vec![
+                PolicySpec::FirstFit,
+                PolicySpec::Hlem { adjusted: true, alpha: -0.5 },
+            ])
+            .with_axis(ScenarioAxis::Substrate(vec![Substrate::Trace]));
+        scale.trace.synth.machines = 500;
+        scale.trace.synth.days = 0.25;
+        scale.trace.synth.tasks_per_hour = 600.0;
+        scale.trace.workload.spot_instances = 500;
+        scale.trace.workload.max_trace_vms = 5_000;
+        let scale_cells = scale.cell_count();
+
+        let started = Instant::now();
+        let report = sweep::run(&scale, n_threads);
+        let took = started.elapsed().max(Duration::from_nanos(1));
+        assert_eq!(report.failed(), 0, "scale-tier sweep cells failed");
+        b.record(BenchResult {
+            name: format!("sweep scale tier {scale_cells} cells trace [threads={n_threads}]"),
+            iterations: 1,
+            median: took,
+            mean: took,
+            p95: took,
+            min: took,
+            items_per_iter: Some(scale_cells as f64),
+        });
+        println!(
+            "    -> {scale_cells} large trace cells in {took:?} ({:.2} cells/sec)",
+            scale_cells as f64 / took.as_secs_f64().max(1e-12),
+        );
+    }
 
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()

@@ -297,14 +297,14 @@ mod tests {
         let cfg = SpotConfig::terminate().with_min_running(0.0);
         let sp = w.add_vm(Vm::spot(0, VmSpec::new(1000.0, 2), cfg));
         w.commit_vm(0, sp);
-        w.vms[sp].transition(VmState::Running);
+        w.transition_vm(sp, VmState::Running);
         w.vms[sp].history.record_start(0, 0.0);
         // Fill hosts 1 and 2 completely with on-demand.
         for h in [1usize, 2] {
             let pes = w.hosts[h].spec.pes;
             let od = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, pes)));
             w.commit_vm(h, od);
-            w.vms[od].transition(VmState::Running);
+            w.transition_vm(od, VmState::Running);
         }
         let od_new = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, 2)));
         let spot_new = w.add_vm(Vm::spot(0, VmSpec::new(1000.0, 2), cfg));

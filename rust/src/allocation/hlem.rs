@@ -325,7 +325,7 @@ mod tests {
 
     fn commit_running(w: &mut World, host: HostId, vm: VmId, start: f64) {
         w.commit_vm(host, vm);
-        w.vms[vm].transition(VmState::Running);
+        w.transition_vm(vm, VmState::Running);
         w.vms[vm].host = Some(host);
         w.vms[vm].history.record_start(host, start);
     }

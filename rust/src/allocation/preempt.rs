@@ -117,7 +117,7 @@ mod tests {
             let cfg = SpotConfig::terminate().with_min_running(0.0);
             let id = w.add_vm(Vm::spot(0, VmSpec::new(1000.0, 2), cfg));
             w.commit_vm(h, id);
-            w.vms[id].transition(VmState::Running);
+            w.transition_vm(id, VmState::Running);
             w.vms[id].host = Some(h);
             w.vms[id].history.record_start(h, i as f64 * 10.0);
         }
@@ -160,7 +160,7 @@ mod tests {
         let cfg = SpotConfig::terminate().with_min_running(1_000.0);
         let sp = w.add_vm(Vm::spot(0, VmSpec::new(1000.0, 8), cfg));
         w.commit_vm(h, sp);
-        w.vms[sp].transition(VmState::Running);
+        w.transition_vm(sp, VmState::Running);
         w.vms[sp].history.record_start(h, 0.0);
         let vm = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, 4)));
         // At t=10 the spot has not met its min running time yet.

@@ -85,7 +85,11 @@ impl PlacementIndex {
     }
 
     /// Index an (active) host with the given free-PE count. Idempotent:
-    /// re-inserting moves the host to the right bucket.
+    /// re-inserting moves the host to the right bucket (and re-inserting
+    /// with the same count is a no-op). `World::activate_host` guards
+    /// against duplicate activation before calling this, so the sampling
+    /// counters never see a double-add even though the index itself
+    /// would tolerate one.
     pub fn insert(&mut self, h: HostId, free_pes: u32) {
         self.ensure_host_slot(h);
         if let Some(old) = self.free_of[h] {

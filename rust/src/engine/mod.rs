@@ -45,6 +45,24 @@
 //! `BENCH_engine.json` at the repo root (regenerate with
 //! `cargo bench --bench perf_engine`; CI refreshes and validates it).
 //!
+//! # SoA hot state + O(1) sampling (§Perf: million-entity runs)
+//!
+//! The fields placement and sampling actually read are mirrored from the
+//! arena structs into struct-of-arrays columns (`engine::soa`), and the
+//! per-sample metrics are fully incremental: `World::state_sample` is an
+//! O(1) read of counters maintained at every VM state transition
+//! (`World::transition_vm`), displacement mark/clear and host
+//! activate/deactivate/commit/release - no VM or host walks on the
+//! sample path. The walking implementation survives as
+//! `World::state_sample_scan`, pinned bitwise by `World::check_index`,
+//! the property tests and a per-sample `debug_assert` here; RAM
+//! aggregates carry an exactness guard (see `engine::soa`) so the
+//! incremental sums match the oracle's fold bit-for-bit or degrade to a
+//! two-field host walk. The 100k-host / 1M-VM scale tier in
+//! `benches/perf_engine.rs` records cells/sec and max RSS into
+//! `BENCH_engine.json`; `docs/perf.md` documents the counter invariants
+//! and how CI gates those rows.
+//!
 //! # The zero-allocation hot loop (§Perf: kernel + recorder)
 //!
 //! The event loop drains the future queue in same-timestamp batches
@@ -71,6 +89,7 @@ pub mod config;
 pub mod index;
 pub mod progress;
 pub mod report;
+mod soa;
 pub mod tag;
 pub mod world;
 
@@ -578,11 +597,11 @@ impl Engine {
         self.world.commit_vm(host, v);
 
         let resumed = self.world.vms[v].state == VmState::Hibernated;
-        self.world.vms[v].transition(VmState::Running);
+        self.world.transition_vm(v, VmState::Running);
         self.world.vms[v].preempt_armed_at = None;
         self.world.vms[v].host = Some(host);
         self.world.vms[v].history.record_start(host, now);
-        self.world.vms[v].hibernated_at = None;
+        self.world.set_hibernated_at(v, None);
         self.running_vms.push(v);
 
         if resumed {
@@ -596,7 +615,7 @@ impl Engine {
 
         // A displaced VM made it back: record the time-to-recover and the
         // in-flight work it carried across the gap (resilience metrics).
-        if let Some(t0) = self.world.vms[v].displaced_at.take() {
+        if let Some(t0) = self.world.take_displaced(v) {
             let dur = now - t0;
             self.recorder.recoveries += 1;
             self.recorder.recovery_secs_sum += dur;
@@ -668,7 +687,7 @@ impl Engine {
             return None;
         }
         let cfg = vm.spot.expect("spot vm without config");
-        self.world.vms[v].transition(VmState::InterruptWarned);
+        self.world.transition_vm(v, VmState::InterruptWarned);
         self.recorder.log(now, v, LifecycleKind::InterruptWarned);
         self.sim.schedule(
             cfg.warning_time,
@@ -704,9 +723,9 @@ impl Engine {
         self.remove_from_host(v);
         match cfg.behavior {
             InterruptionBehavior::Hibernate => {
-                self.world.vms[v].transition(VmState::Hibernated);
-                self.world.vms[v].hibernated_at = Some(now);
-                self.world.vms[v].displaced_at = Some(now);
+                self.world.transition_vm(v, VmState::Hibernated);
+                self.world.set_hibernated_at(v, Some(now));
+                self.world.mark_displaced(v, now);
                 self.pause_cloudlets(v);
                 self.broker.enqueue_resubmitting(v);
                 self.recorder.hibernations += 1;
@@ -724,9 +743,9 @@ impl Engine {
                     // checkpoint (if any) turns the kill into a requeue.
                     self.recovery_requeue(v, cfg.hibernation_timeout);
                 } else {
-                    self.world.vms[v].transition(VmState::Terminated);
+                    // Terminal transition also clears any displacement.
+                    self.world.transition_vm(v, VmState::Terminated);
                     self.world.vms[v].stopped_at = Some(now);
-                    self.world.vms[v].displaced_at = None;
                     self.recorder.work_lost_mi += self.vm_inflight_done_mi(v);
                     self.cancel_cloudlets(v);
                     self.broker.finished.push(v);
@@ -753,9 +772,10 @@ impl Engine {
         if now + 1e-9 < hib_at + cfg.hibernation_timeout {
             return; // stale timeout from an earlier hibernation
         }
-        self.world.vms[v].transition(VmState::Terminated);
+        // Terminal transition also clears any displacement (the VM dies
+        // while displaced; the gauge must not leak).
+        self.world.transition_vm(v, VmState::Terminated);
         self.world.vms[v].stopped_at = Some(now);
-        self.world.vms[v].displaced_at = None;
         self.recorder.work_lost_mi += self.vm_inflight_done_mi(v);
         self.cancel_cloudlets(v);
         self.broker.remove_resubmitting(v);
@@ -789,9 +809,9 @@ impl Engine {
 
     fn fail(&mut self, v: VmId, kind: LifecycleKind) {
         let now = self.sim.clock();
-        self.world.vms[v].transition(VmState::Failed);
+        // Terminal transition also clears any displacement.
+        self.world.transition_vm(v, VmState::Failed);
         self.world.vms[v].stopped_at = Some(now);
-        self.world.vms[v].displaced_at = None;
         self.recorder.work_lost_mi += self.vm_inflight_done_mi(v);
         self.cancel_cloudlets(v);
         self.broker.finished.push(v);
@@ -826,7 +846,7 @@ impl Engine {
         }
         self.apply_progress(now);
         self.remove_from_host(v);
-        self.world.vms[v].transition(VmState::Finished);
+        self.world.transition_vm(v, VmState::Finished);
         self.world.vms[v].stopped_at = Some(now);
         self.broker.finished.push(v);
         self.recorder.log(now, v, LifecycleKind::Finished);
@@ -1113,9 +1133,9 @@ impl Engine {
                 let cfg = self.world.vms[v].spot.expect("spot vm without config");
                 match cfg.behavior {
                     InterruptionBehavior::Hibernate => {
-                        self.world.vms[v].transition(VmState::Hibernated);
-                        self.world.vms[v].hibernated_at = Some(now);
-                        self.world.vms[v].displaced_at = Some(now);
+                        self.world.transition_vm(v, VmState::Hibernated);
+                        self.world.set_hibernated_at(v, Some(now));
+                        self.world.mark_displaced(v, now);
                         self.pause_cloudlets(v);
                         self.broker.enqueue_resubmitting(v);
                         self.recorder.hibernations += 1;
@@ -1134,9 +1154,9 @@ impl Engine {
                             // the VM still survives for reassignment.
                             self.recovery_requeue(v, cfg.hibernation_timeout);
                         } else {
-                            self.world.vms[v].transition(VmState::Terminated);
+                            // Terminal transition clears any displacement.
+                            self.world.transition_vm(v, VmState::Terminated);
                             self.world.vms[v].stopped_at = Some(now);
-                            self.world.vms[v].displaced_at = None;
                             self.recorder.work_lost_mi += self.vm_inflight_done_mi(v);
                             self.cancel_cloudlets(v);
                             self.broker.finished.push(v);
@@ -1151,8 +1171,8 @@ impl Engine {
                 }
             } else {
                 // On-demand: requeue and wait for capacity elsewhere.
-                self.world.vms[v].transition(VmState::Waiting);
-                self.world.vms[v].displaced_at = Some(now);
+                self.world.transition_vm(v, VmState::Waiting);
+                self.world.mark_displaced(v, now);
                 self.pause_cloudlets(v);
                 let deadline = now + self.world.vms[v].waiting_time.max(OD_REQUEUE_WINDOW);
                 self.broker.enqueue_waiting(v, deadline);
@@ -1301,9 +1321,9 @@ impl Engine {
         let retained = self.world.vms[v].checkpoint_mi.take().unwrap_or(0.0).min(progress);
         self.recorder.work_lost_mi += (progress - retained).max(0.0);
         self.truncate_progress(v, retained);
-        self.world.vms[v].transition(VmState::Hibernated);
-        self.world.vms[v].hibernated_at = Some(now);
-        self.world.vms[v].displaced_at = Some(now);
+        self.world.transition_vm(v, VmState::Hibernated);
+        self.world.set_hibernated_at(v, Some(now));
+        self.world.mark_displaced(v, now);
         self.pause_cloudlets(v);
         self.broker.enqueue_resubmitting(v);
         self.recorder.hibernations += 1;
@@ -1468,22 +1488,16 @@ impl Engine {
 
     fn sample(&mut self) {
         let now = self.sim.clock();
-        // One VM walk + one host walk (`World::state_sample`), one stack
-        // row into the column-major series: a sample allocates nothing.
+        // O(1) counter read (`World::state_sample`), one stack row into
+        // the column-major series: a sample walks nothing and allocates
+        // nothing. Debug builds re-verify every sample of every test run
+        // against the retained walking oracle, bitwise.
         let s = self.world.state_sample();
-        let row = [
-            (s.od_running + s.od_warned) as f64,
-            (s.spot_running + s.spot_warned) as f64,
-            s.hibernated as f64,
-            (s.od_waiting + s.spot_waiting) as f64,
-            s.used_pes as f64,
-            s.total_pes as f64,
-            if s.total_ram > 0.0 { s.used_ram / s.total_ram } else { 0.0 },
-            if s.total_pes > 0 { s.used_pes as f64 / s.total_pes as f64 } else { 0.0 },
-            s.failed_hosts as f64,
-            s.displaced as f64,
-        ];
-        self.recorder.series.push(now, &row);
+        debug_assert!(
+            s.bits_eq(&self.world.state_sample_scan()),
+            "incremental state_sample diverged from scan oracle at t={now}"
+        );
+        self.recorder.push_sample(now, &s);
         self.next_sample = now + self.config.sample_interval;
         self.sim.schedule_at(
             self.next_sample,

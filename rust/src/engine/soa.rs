@@ -1,0 +1,363 @@
+//! Struct-of-arrays hot state + incremental sampling counters (§Perf:
+//! million-entity runs).
+//!
+//! The arena ([`super::world::World`]) keeps `Vm`/`Host` structs as the
+//! authoritative store, but two hot paths used to walk them wholesale:
+//!
+//! - every placement decision touched `Host` structs scattered across a
+//!   ~200-byte-stride `Vec<Host>` just to evaluate `fits` on four
+//!   resource dimensions;
+//! - every `Sample` tick walked **all** VMs and hosts
+//!   (`World::state_sample`), which at 100k hosts / 1M+ VMs turns a
+//!   10-column series row into milliseconds of pointer-chasing.
+//!
+//! [`HotState`] fixes both: the fields those paths read are mirrored into
+//! dense id-indexed columns (state, spot flag, request vectors,
+//! active/free resources, displaced/hibernation timestamps), and the
+//! sample itself becomes an O(1) read of counters maintained at every VM
+//! state transition and host activate/deactivate/commit/release. The
+//! mirrors are written only by `World`'s mutation API - the same
+//! choke-points that already maintain the placement index - and
+//! `World::check_index` cross-validates columns, counters and the
+//! retained `_scan` oracles after every step of the property tests.
+//!
+//! # Bitwise parity of the float aggregates
+//!
+//! Integer counters (per-state VM counts, used/total PEs, failed hosts,
+//! displaced gauge) are trivially exact. The RAM sums are not: f64
+//! addition is non-associative, so an incrementally maintained
+//! `used_ram` can differ in the last bit from the scan oracle's
+//! host-id-ordered left fold. Example: summing `{2^52, 0.5, 0.5}` as
+//! `(0.5 + 0.5) + 2^52` gives `2^52 + 1` exactly, while the fold order
+//! `(2^52 + 0.5) + 0.5` rounds to `2^52` twice (ties-to-even) - every
+//! individual addition is exact, yet the totals differ.
+//!
+//! Instead of compensated summation (which changes the rounding of the
+//! *oracle's* order, not just the error), the counters use an exactness
+//! guard: a RAM value participates in the incremental sums only if it is
+//! a non-negative multiple of 2^-10 MB no larger than 2^42 MB, and the
+//! running totals stay below 2^43 MB. Under those bounds every partial
+//! sum - in *any* association order, including the oracle's fold - is an
+//! integer multiple of 2^-10 below 2^53 x 2^-10, hence exactly
+//! representable; no addition ever rounds, so incremental == fold
+//! bit-for-bit. Every in-repo host catalog and workload uses integral-MB
+//! RAM, so the guard holds on the hot path. The first value that
+//! violates it (e.g. randomized non-dyadic RAM in property tests) sets a
+//! sticky `ram_dirty` flag and `state_sample` recomputes *only* the two
+//! RAM fields with the oracle's own host walk - correctness never
+//! depends on the guard, only the O(1) fast path does.
+//!
+//! The spot-usage vectors need no guard at all: `Host::commit` appends
+//! the VM at the *end* of the host's VM list, so adding its request
+//! vector last extends the scan oracle's left fold exactly (see
+//! `World::commit_vm`); only release rebuilds (see
+//! `World::release_vm`). The full invariant table lives in
+//! `docs/perf.md`.
+
+use crate::infra::Host;
+use crate::vm::{Vm, VmState};
+
+use super::world::StateSample;
+
+/// Number of [`VmState`] variants (size of a per-state count bucket row).
+const N_STATES: usize = 7;
+
+/// Dense index of a [`VmState`] into the count buckets.
+#[inline]
+fn state_slot(s: VmState) -> usize {
+    match s {
+        VmState::Waiting => 0,
+        VmState::Running => 1,
+        VmState::InterruptWarned => 2,
+        VmState::Hibernated => 3,
+        VmState::Finished => 4,
+        VmState::Terminated => 5,
+        VmState::Failed => 6,
+    }
+}
+
+/// Finest RAM granularity (2^-10 MB) the exactness guard admits.
+const RAM_QUANTUM: f64 = 1024.0; // reciprocal: values are checked * 1024
+/// Largest single RAM value the guard admits (2^42 MB = 4 EiB-ish).
+const RAM_MAX_ADDEND: f64 = 4_398_046_511_104.0;
+/// Ceiling on the running totals (2^43 MB): while every addend is a
+/// multiple of 2^-10 and totals stay below this, all partial sums fit in
+/// 53 significand bits and every f64 addition is exact.
+const RAM_MAX_TOTAL: f64 = 8_796_093_022_208.0;
+
+/// Whether `x` can join the incremental RAM sums without any f64
+/// addition ever rounding (see module docs).
+#[inline]
+fn exactly_summable(x: f64) -> bool {
+    x.is_finite() && x >= 0.0 && x <= RAM_MAX_ADDEND && (x * RAM_QUANTUM).fract() == 0.0
+}
+
+/// Struct-of-arrays mirror of the arena's hot fields plus the O(1)
+/// sampling counters. Owned by `World`; all writes flow through the
+/// `World` mutation API.
+#[derive(Default)]
+pub(crate) struct HotState {
+    // --- VM columns (dense, indexed by VmId) --------------------------
+    pub(crate) vm_state: Vec<VmState>,
+    pub(crate) vm_spot: Vec<bool>,
+    pub(crate) vm_pes: Vec<u32>,
+    /// Request vectors in artifact dimension order (MIPS, RAM, BW,
+    /// storage) - the HLEM scoring columns.
+    pub(crate) vm_request: Vec<[f64; 4]>,
+    /// Displacement timestamp; NaN = not displaced.
+    pub(crate) vm_displaced_at: Vec<f64>,
+    /// Hibernation timestamp; NaN = not hibernated.
+    pub(crate) vm_hibernated_at: Vec<f64>,
+    // --- host columns (dense, indexed by HostId) ----------------------
+    pub(crate) host_active: Vec<bool>,
+    pub(crate) host_free_pes: Vec<u32>,
+    pub(crate) host_free_ram: Vec<f64>,
+    pub(crate) host_free_bw: Vec<f64>,
+    pub(crate) host_free_storage: Vec<f64>,
+    pub(crate) host_spot_used: Vec<[f64; 4]>,
+    pub(crate) host_spot_vms: Vec<u32>,
+    // --- incremental sampling counters --------------------------------
+    /// Per-(spot, state) VM counts; `counts[is_spot as usize][slot]`.
+    counts: [[usize; N_STATES]; 2],
+    displaced: usize,
+    failed_hosts: usize,
+    used_pes: u32,
+    total_pes: u32,
+    used_ram: f64,
+    total_ram: f64,
+    /// Sticky: a RAM value failed the exactness guard, so the
+    /// incremental RAM sums can no longer promise bitwise parity and
+    /// `state_sample` re-walks hosts for the two RAM fields only.
+    ram_dirty: bool,
+}
+
+impl HotState {
+    /// Append the columns for a freshly added VM and count its initial
+    /// state.
+    pub(crate) fn push_vm(&mut self, vm: &Vm) {
+        debug_assert_eq!(vm.id, self.vm_state.len(), "VM ids must stay dense");
+        self.vm_state.push(vm.state);
+        self.vm_spot.push(vm.is_spot());
+        self.vm_pes.push(vm.spec.pes);
+        self.vm_request.push(vm.spec.request_vec());
+        self.vm_displaced_at.push(vm.displaced_at.unwrap_or(f64::NAN));
+        self.vm_hibernated_at.push(vm.hibernated_at.unwrap_or(f64::NAN));
+        self.counts[vm.is_spot() as usize][state_slot(vm.state)] += 1;
+        if vm.displaced_at.is_some() {
+            self.displaced += 1;
+        }
+    }
+
+    /// Append the columns for a freshly added host (contribution counters
+    /// are handled by the caller, which knows the activation story).
+    pub(crate) fn push_host(&mut self, host: &Host) {
+        debug_assert_eq!(host.id, self.host_active.len(), "host ids must stay dense");
+        self.host_active.push(host.is_active());
+        self.host_free_pes.push(host.free_pes());
+        self.host_free_ram.push(host.free_ram());
+        self.host_free_bw.push(host.free_bw());
+        self.host_free_storage.push(host.free_storage());
+        self.host_spot_used.push(host.spot_used);
+        self.host_spot_vms.push(host.spot_vms);
+    }
+
+    /// Re-copy one host's derived columns from its authoritative struct.
+    /// Called after every struct mutation so SoA reads decide exactly as
+    /// struct reads would.
+    pub(crate) fn sync_host(&mut self, host: &Host) {
+        let h = host.id;
+        self.host_active[h] = host.is_active();
+        self.host_free_pes[h] = host.free_pes();
+        self.host_free_ram[h] = host.free_ram();
+        self.host_free_bw[h] = host.free_bw();
+        self.host_free_storage[h] = host.free_storage();
+        self.host_spot_used[h] = host.spot_used;
+        self.host_spot_vms[h] = host.spot_vms;
+    }
+
+    /// SoA twin of [`Host::fits`]: same comparisons over precomputed
+    /// columns, so indexed placement decisions match struct-based scans
+    /// bit-for-bit while reading contiguous memory.
+    #[inline]
+    pub(crate) fn host_fits(&self, h: usize, pes: u32, ram: f64, bw: f64, storage: f64) -> bool {
+        self.host_active[h]
+            && self.host_free_pes[h] >= pes
+            && self.host_free_ram[h] + 1e-9 >= ram
+            && self.host_free_bw[h] + 1e-9 >= bw
+            && self.host_free_storage[h] + 1e-9 >= storage
+    }
+
+    /// Move one VM between state buckets and update its state column.
+    /// Reads the previous state from the column itself, which the caller
+    /// guarantees was in sync before the struct-side transition.
+    pub(crate) fn vm_transition(&mut self, v: usize, next: VmState) {
+        let spot = self.vm_spot[v] as usize;
+        let prev = self.vm_state[v];
+        self.counts[spot][state_slot(prev)] -= 1;
+        self.counts[spot][state_slot(next)] += 1;
+        self.vm_state[v] = next;
+    }
+
+    pub(crate) fn inc_displaced(&mut self) {
+        self.displaced += 1;
+    }
+
+    pub(crate) fn dec_displaced(&mut self) {
+        self.displaced -= 1;
+    }
+
+    pub(crate) fn inc_failed_hosts(&mut self) {
+        self.failed_hosts += 1;
+    }
+
+    pub(crate) fn dec_failed_hosts(&mut self) {
+        self.failed_hosts -= 1;
+    }
+
+    /// Add an active host's (used, total) PE contribution.
+    pub(crate) fn add_pes(&mut self, used: u32, total: u32) {
+        self.used_pes += used;
+        self.total_pes += total;
+    }
+
+    /// Remove an active host's (used, total) PE contribution.
+    pub(crate) fn sub_pes(&mut self, used: u32, total: u32) {
+        self.used_pes -= used;
+        self.total_pes -= total;
+    }
+
+    pub(crate) fn add_used_ram(&mut self, x: f64) {
+        if self.ram_dirty {
+            return;
+        }
+        if !exactly_summable(x) {
+            self.ram_dirty = true;
+            return;
+        }
+        self.used_ram += x;
+        if self.used_ram > RAM_MAX_TOTAL {
+            self.ram_dirty = true;
+        }
+    }
+
+    pub(crate) fn sub_used_ram(&mut self, x: f64) {
+        if self.ram_dirty {
+            return;
+        }
+        if !exactly_summable(x) || x > self.used_ram {
+            self.ram_dirty = true;
+            return;
+        }
+        self.used_ram -= x;
+    }
+
+    pub(crate) fn add_total_ram(&mut self, x: f64) {
+        if self.ram_dirty {
+            return;
+        }
+        if !exactly_summable(x) {
+            self.ram_dirty = true;
+            return;
+        }
+        self.total_ram += x;
+        if self.total_ram > RAM_MAX_TOTAL {
+            self.ram_dirty = true;
+        }
+    }
+
+    pub(crate) fn sub_total_ram(&mut self, x: f64) {
+        if self.ram_dirty {
+            return;
+        }
+        if !exactly_summable(x) || x > self.total_ram {
+            self.ram_dirty = true;
+            return;
+        }
+        self.total_ram -= x;
+    }
+
+    /// Whether the incremental RAM sums still carry the bitwise-parity
+    /// guarantee (i.e. `state_sample` takes the O(1) path).
+    pub(crate) fn ram_exact(&self) -> bool {
+        !self.ram_dirty
+    }
+
+    /// Assemble a sample from the counters. When the RAM guard has
+    /// tripped the caller overwrites the two RAM fields with a host walk.
+    pub(crate) fn sample_counts(&self) -> StateSample {
+        StateSample {
+            od_running: self.counts[0][state_slot(VmState::Running)],
+            spot_running: self.counts[1][state_slot(VmState::Running)],
+            od_warned: self.counts[0][state_slot(VmState::InterruptWarned)],
+            spot_warned: self.counts[1][state_slot(VmState::InterruptWarned)],
+            // The sampled series only charts spot hibernations; the
+            // on-demand bucket exists but is not reported (on-demand VMs
+            // never hibernate in the engine).
+            hibernated: self.counts[1][state_slot(VmState::Hibernated)],
+            od_waiting: self.counts[0][state_slot(VmState::Waiting)],
+            spot_waiting: self.counts[1][state_slot(VmState::Waiting)],
+            used_pes: self.used_pes,
+            total_pes: self.total_pes,
+            used_ram: self.used_ram,
+            total_ram: self.total_ram,
+            failed_hosts: self.failed_hosts,
+            displaced: self.displaced,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infra::HostSpec;
+
+    #[test]
+    fn exactness_guard_accepts_quantized_ram() {
+        // Integral-MB values (every in-repo catalog) and sub-MB dyadics.
+        for x in [0.0, 512.0, 16_384.0, 262_144.0, 0.5, 0.0009765625] {
+            assert!(exactly_summable(x), "{x} should be summable");
+        }
+    }
+
+    #[test]
+    fn exactness_guard_rejects_unsafe_values() {
+        // Non-dyadic fractions, negatives, non-finite, and magnitudes
+        // whose partial sums could round.
+        for x in [0.1, 1e-4, -1.0, f64::NAN, f64::INFINITY, RAM_MAX_ADDEND * 2.0] {
+            assert!(!exactly_summable(x), "{x} should be rejected");
+        }
+        // The order-dependence counterexample from the module docs: each
+        // addition of {2^52, 0.5, 0.5} is individually exact, yet the two
+        // association orders disagree - which is exactly why the guard
+        // bounds magnitude rather than checking per-op rounding.
+        let big = 2f64.powi(52);
+        assert_ne!((0.5 + 0.5) + big, (big + 0.5) + 0.5);
+        assert!(!exactly_summable(big));
+    }
+
+    #[test]
+    fn dirty_flag_is_sticky() {
+        let mut h = HotState::default();
+        h.add_used_ram(512.0);
+        assert!(h.ram_exact());
+        h.add_used_ram(0.1); // non-dyadic -> parity lost
+        assert!(!h.ram_exact());
+        h.add_used_ram(512.0); // exact values no longer help
+        assert!(!h.ram_exact());
+    }
+
+    #[test]
+    fn host_fits_matches_struct_fits() {
+        let spec = HostSpec::new(8, 1000.0, 16_384.0, 5_000.0, 200_000.0);
+        let host = Host::new(0, 0, spec, 0.0);
+        let mut hot = HotState::default();
+        hot.push_host(&host);
+        for (pes, ram) in [(1u32, 512.0), (8, 16_384.0), (9, 512.0), (1, 20_000.0)] {
+            assert_eq!(
+                hot.host_fits(0, pes, ram, 100.0, 100.0),
+                host.fits(pes, ram, 100.0, 100.0),
+                "pes={pes} ram={ram}"
+            );
+        }
+    }
+}

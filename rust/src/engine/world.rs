@@ -8,22 +8,25 @@
 //! calls.
 //!
 //! All placement-relevant mutation goes through [`World::commit_vm`],
-//! [`World::release_vm`], [`World::activate_host`] and
-//! [`World::deactivate_host`]: these keep the [`PlacementIndex`]
-//! (free-PE buckets, spot-host set) and each host's O(1) spot-usage
-//! vector consistent with the arena. The raw [`Host::commit`] /
-//! [`Host::release`] accounting primitives are still public for
-//! host-local unit tests but bypass the index - production code and
-//! policies must use the `World` methods. Every indexed query has a
+//! [`World::release_vm`], [`World::activate_host`],
+//! [`World::deactivate_host`], [`World::transition_vm`] and the
+//! displacement/hibernation setters: these keep the [`PlacementIndex`]
+//! (free-PE buckets, spot-host set), the struct-of-arrays hot columns and
+//! the O(1) sampling counters ([`super::soa::HotState`]) consistent with
+//! the arena. The raw [`Host::commit`] / [`Host::release`] accounting
+//! primitives are still public for host-local unit tests but bypass the
+//! index - production code and policies must use the `World` methods.
+//! Every indexed query and the O(1) [`World::state_sample`] have a
 //! `_scan` twin that recomputes the answer with the pre-index linear
-//! scan; the property/parity tests pin the two together, and the decision
-//! benches use the scans as the baseline.
+//! walk; the property/parity tests pin the two together bitwise, and the
+//! decision benches use the scans as the baseline.
 
 use crate::cloudlet::{Cloudlet, CloudletId};
 use crate::infra::{Datacenter, DcId, Host, HostId, HostSpec, HostState};
 use crate::vm::{Vm, VmId, VmState};
 
 use super::index::PlacementIndex;
+use super::soa::HotState;
 
 /// One-pass sampling snapshot (see [`World::state_sample`]).
 #[derive(Debug, Default, Clone, Copy, PartialEq)]
@@ -48,6 +51,27 @@ pub struct StateSample {
     pub displaced: usize,
 }
 
+impl StateSample {
+    /// Bitwise equality (f64 fields compared via `to_bits`) - the
+    /// contract the incremental counters must uphold against the scan
+    /// oracle so sampled series stay byte-identical.
+    pub fn bits_eq(&self, o: &StateSample) -> bool {
+        self.od_running == o.od_running
+            && self.spot_running == o.spot_running
+            && self.od_warned == o.od_warned
+            && self.spot_warned == o.spot_warned
+            && self.hibernated == o.hibernated
+            && self.od_waiting == o.od_waiting
+            && self.spot_waiting == o.spot_waiting
+            && self.used_pes == o.used_pes
+            && self.total_pes == o.total_pes
+            && self.used_ram.to_bits() == o.used_ram.to_bits()
+            && self.total_ram.to_bits() == o.total_ram.to_bits()
+            && self.failed_hosts == o.failed_hosts
+            && self.displaced == o.displaced
+    }
+}
+
 /// Arena of datacenters, hosts, VMs and cloudlets.
 #[derive(Default)]
 pub struct World {
@@ -56,6 +80,7 @@ pub struct World {
     pub vms: Vec<Vm>,
     pub cloudlets: Vec<Cloudlet>,
     index: PlacementIndex,
+    hot: HotState,
 }
 
 impl World {
@@ -75,6 +100,8 @@ impl World {
         self.hosts.push(Host::new(id, dc, spec, now));
         self.datacenters[dc].hosts.push(id);
         self.index.insert(id, spec.pes);
+        self.hot.push_host(&self.hosts[id]);
+        self.add_host_contribution(id);
         id
     }
 
@@ -83,6 +110,7 @@ impl World {
         let id = self.vms.len();
         vm.id = id;
         self.vms.push(vm);
+        self.hot.push_vm(&self.vms[id]);
         id
     }
 
@@ -97,39 +125,75 @@ impl World {
     }
 
     // ------------------------------------------------------------------
-    // index-maintaining mutation API
+    // index- and counter-maintaining mutation API
     // ------------------------------------------------------------------
 
     /// Commit `vm`'s requested resources on `host`, keeping the placement
-    /// index and the host's spot-usage vector in sync.
+    /// index, the SoA columns, the sampling counters and the host's
+    /// spot-usage vector in sync.
     pub fn commit_vm(&mut self, host: HostId, vm: VmId) {
         let spec = self.vms[vm].spec;
         let is_spot = self.vms[vm].is_spot();
         self.hosts[host].commit(vm, spec.pes, spec.ram, spec.bw, spec.storage);
         if self.hosts[host].is_active() {
             self.index.update_free(host, self.hosts[host].free_pes());
+            // An inactive host contributes nothing to the sample, so its
+            // usage joins the counters only while it is active (the
+            // activate/deactivate contribution delta covers the rest).
+            self.hot.add_pes(spec.pes, 0);
+            self.hot.add_used_ram(spec.ram);
         }
         if is_spot {
-            self.refresh_spot(host);
+            // Incremental O(1) update: `Host::commit` appended `vm` at
+            // the END of the host's VM list, so adding its request vector
+            // last extends the scan oracle's left fold bit-for-bit - no
+            // rebuild and no exactness assumption needed (release is the
+            // asymmetric case, see `release_vm`).
+            let r = spec.request_vec();
+            let h = &mut self.hosts[host];
+            for d in 0..4 {
+                h.spot_used[d] += r[d];
+            }
+            h.spot_vms += 1;
+            self.index.set_spot(host, true);
         }
+        self.hot.sync_host(&self.hosts[host]);
     }
 
     /// Release `vm`'s resources from `host` (deallocation, interruption,
-    /// eviction), keeping the index and spot vector in sync.
+    /// eviction), keeping the index, columns and counters in sync.
     pub fn release_vm(&mut self, host: HostId, vm: VmId) {
         let spec = self.vms[vm].spec;
         let is_spot = self.vms[vm].is_spot();
         self.hosts[host].release(vm, spec.pes, spec.ram, spec.bw, spec.storage);
         if self.hosts[host].is_active() {
             self.index.update_free(host, self.hosts[host].free_pes());
+            self.hot.sub_pes(spec.pes, 0);
+            self.hot.sub_used_ram(spec.ram);
         }
         if is_spot {
+            // Rebuild (not subtract): f64 subtraction is not a bitwise
+            // inverse of addition, and removing a VM from the middle of
+            // the list changes every later partial sum of the oracle's
+            // fold - so only a re-walk of this one host's VM list in
+            // allocation order can preserve bitwise parity with
+            // `spot_used_vec_scan`.
             self.refresh_spot(host);
         }
+        self.hot.sync_host(&self.hosts[host]);
     }
 
     /// Mark a host active (host add / trace ADD event) and index it.
+    ///
+    /// Idempotent: a duplicate trace ADD (or chaos recovery racing one)
+    /// for an already-active host is a no-op - re-running the body would
+    /// clobber `created_at` and double-add the host's sampling
+    /// contribution.
     pub fn activate_host(&mut self, h: HostId, now: f64) {
+        if self.hosts[h].is_active() {
+            return;
+        }
+        let was_failed = self.hosts[h].removed_at.is_some();
         let host = &mut self.hosts[h];
         host.state = HostState::Active;
         host.created_at = now;
@@ -138,23 +202,117 @@ impl World {
         let has_spot = host.spot_vms > 0;
         self.index.insert(h, free);
         self.index.set_spot(h, has_spot);
+        if was_failed {
+            // Down-after-active host coming back: no longer failed.
+            self.hot.dec_failed_hosts();
+        }
+        self.add_host_contribution(h);
+        self.hot.sync_host(&self.hosts[h]);
     }
 
     /// Mark a host removed/dormant and drop it from the index.
     /// `removed_at` is `None` for hosts that were never active (dormant
-    /// trace machines awaiting their ADD event).
+    /// trace machines awaiting their ADD event). Idempotent for repeated
+    /// deactivations (the contribution delta is only applied once).
     pub fn deactivate_host(&mut self, h: HostId, removed_at: Option<f64>) {
-        let host = &mut self.hosts[h];
-        host.state = HostState::Removed;
-        if removed_at.is_some() {
-            host.removed_at = removed_at;
+        let was_active = self.hosts[h].is_active();
+        let was_failed = !was_active && self.hosts[h].removed_at.is_some();
+        {
+            let host = &mut self.hosts[h];
+            host.state = HostState::Removed;
+            if removed_at.is_some() {
+                host.removed_at = removed_at;
+            }
         }
         self.index.remove(h);
+        if was_active {
+            self.remove_host_contribution(h);
+        }
+        let now_failed = self.hosts[h].removed_at.is_some();
+        match (was_failed, now_failed) {
+            (false, true) => self.hot.inc_failed_hosts(),
+            (true, false) => self.hot.dec_failed_hosts(),
+            _ => {}
+        }
+        self.hot.sync_host(&self.hosts[h]);
+    }
+
+    /// Transition `v` to `next`, keeping the per-state sampling counters
+    /// and the SoA state column in sync. Terminal transitions also clear
+    /// any pending displacement (a VM that dies while displaced must not
+    /// inflate the `displaced` gauge forever) - engine code must use this
+    /// instead of raw [`Vm::transition`].
+    pub fn transition_vm(&mut self, v: VmId, next: VmState) {
+        self.vms[v].transition(next);
+        self.hot.vm_transition(v, next);
+        if next.is_final() && self.vms[v].displaced_at.take().is_some() {
+            self.hot.dec_displaced();
+            self.hot.vm_displaced_at[v] = f64::NAN;
+        }
+    }
+
+    /// Mark `v` displaced at `now` (evicted/hibernated off a host and not
+    /// yet re-placed). Re-marking an already-displaced VM refreshes the
+    /// timestamp without double-counting the gauge.
+    pub fn mark_displaced(&mut self, v: VmId, now: f64) {
+        if self.vms[v].displaced_at.is_none() {
+            self.hot.inc_displaced();
+        }
+        self.vms[v].displaced_at = Some(now);
+        self.hot.vm_displaced_at[v] = now;
+    }
+
+    /// Clear `v`'s displacement (re-placement or terminal state),
+    /// returning the displacement timestamp for recovery metrics.
+    pub fn take_displaced(&mut self, v: VmId) -> Option<f64> {
+        let t = self.vms[v].displaced_at.take();
+        if t.is_some() {
+            self.hot.dec_displaced();
+            self.hot.vm_displaced_at[v] = f64::NAN;
+        }
+        t
+    }
+
+    /// Set or clear `v`'s hibernation timestamp (struct + SoA column).
+    pub fn set_hibernated_at(&mut self, v: VmId, at: Option<f64>) {
+        self.vms[v].hibernated_at = at;
+        self.hot.vm_hibernated_at[v] = at.unwrap_or(f64::NAN);
+    }
+
+    /// Whether `state_sample` currently serves the RAM aggregates from
+    /// the O(1) counters (true for all quantized-RAM workloads) or falls
+    /// back to a host walk for those two fields (see `engine::soa`).
+    pub fn sample_is_incremental(&self) -> bool {
+        self.hot.ram_exact()
+    }
+
+    /// Add an active host's current usage to the aggregate counters.
+    fn add_host_contribution(&mut self, h: HostId) {
+        let (used_pes, pes, used_ram, ram) = {
+            let host = &self.hosts[h];
+            (host.used_pes, host.spec.pes, host.used_ram, host.spec.ram)
+        };
+        self.hot.add_pes(used_pes, pes);
+        self.hot.add_used_ram(used_ram);
+        self.hot.add_total_ram(ram);
+    }
+
+    /// Remove a deactivating host's current usage from the counters.
+    fn remove_host_contribution(&mut self, h: HostId) {
+        let (used_pes, pes, used_ram, ram) = {
+            let host = &self.hosts[h];
+            (host.used_pes, host.spec.pes, host.used_ram, host.spec.ram)
+        };
+        self.hot.sub_pes(used_pes, pes);
+        self.hot.sub_used_ram(used_ram);
+        self.hot.sub_total_ram(ram);
     }
 
     /// Rebuild `host`'s spot-usage vector by walking its VM list in
     /// allocation order - the exact summation order of the scan oracle,
     /// so O(1) reads stay bitwise equal to a from-scratch recompute.
+    /// Only the release path needs this; commits extend the fold
+    /// incrementally (see `commit_vm`).
     fn refresh_spot(&mut self, host: HostId) {
         let mut acc = [0.0f64; 4];
         let mut n = 0u32;
@@ -172,6 +330,7 @@ impl World {
         h.spot_used = acc;
         h.spot_vms = n;
         self.index.set_spot(host, n > 0);
+        self.hot.sync_host(&self.hosts[host]);
     }
 
     // ------------------------------------------------------------------
@@ -184,7 +343,9 @@ impl World {
     /// case hits on the first one), then - if many PE-feasible hosts keep
     /// failing the RAM/BW/storage dimensions - a plain ordered walk over
     /// the remaining id range, so the degenerate case is never
-    /// asymptotically worse than the pre-index linear scan.
+    /// asymptotically worse than the pre-index linear scan. Feasibility
+    /// checks read the SoA columns ([`HotState::host_fits`]), which the
+    /// mutation API keeps bitwise in sync with [`Host::fits`].
     pub fn first_fit_host(&self, vm: &Vm) -> Option<HostId> {
         let s = vm.spec;
         const PROBE_LIMIT: usize = 8;
@@ -192,17 +353,17 @@ impl World {
         for _ in 0..PROBE_LIMIT {
             match self.index.first_feasible_after(s.pes, after) {
                 None => return None,
-                Some(id) if self.hosts[id].fits(s.pes, s.ram, s.bw, s.storage) => {
+                Some(id) if self.hot.host_fits(id, s.pes, s.ram, s.bw, s.storage) => {
                     return Some(id)
                 }
                 Some(id) => after = Some(id),
             }
         }
+        // `after` was probed and rejected, so resume one past it; when
+        // `after` is the last host this yields an empty range, not an
+        // out-of-bounds slice.
         let start = after.map_or(0, |a| a + 1);
-        self.hosts[start..]
-            .iter()
-            .find(|h| h.fits(s.pes, s.ram, s.bw, s.storage))
-            .map(|h| h.id)
+        (start..self.hosts.len()).find(|&h| self.hot.host_fits(h, s.pes, s.ram, s.bw, s.storage))
     }
 
     /// Pre-index First-Fit linear scan (oracle / bench baseline).
@@ -214,7 +375,7 @@ impl World {
     /// Best-Fit: feasible host with the fewest free PEs (ties: lowest id).
     pub fn best_fit_host(&self, vm: &Vm) -> Option<HostId> {
         let s = vm.spec;
-        self.index.best_fit(s.pes, |id| self.hosts[id].fits(s.pes, s.ram, s.bw, s.storage))
+        self.index.best_fit(s.pes, |id| self.hot.host_fits(id, s.pes, s.ram, s.bw, s.storage))
     }
 
     /// Pre-index Best-Fit linear scan (oracle / bench baseline).
@@ -230,7 +391,7 @@ impl World {
     /// matching `max_by_key` over the id-ascending scan).
     pub fn worst_fit_host(&self, vm: &Vm) -> Option<HostId> {
         let s = vm.spec;
-        self.index.worst_fit(s.pes, |id| self.hosts[id].fits(s.pes, s.ram, s.bw, s.storage))
+        self.index.worst_fit(s.pes, |id| self.hot.host_fits(id, s.pes, s.ram, s.bw, s.storage))
     }
 
     /// Pre-index Worst-Fit linear scan (oracle / bench baseline).
@@ -248,7 +409,7 @@ impl World {
         let s = vm.spec;
         self.index.feasible_into(
             s.pes,
-            |id| self.hosts[id].fits(s.pes, s.ram, s.bw, s.storage),
+            |id| self.hot.host_fits(id, s.pes, s.ram, s.bw, s.storage),
             out,
         );
     }
@@ -331,10 +492,12 @@ impl World {
             && st + 1e-9 >= vm.spec.storage
     }
 
-    /// Verify the incremental index against a recompute-from-scratch
-    /// oracle (test/debug support; O(hosts x vms)). Checks bucket
-    /// membership, spot-host membership and bitwise equality of every
-    /// spot-usage vector.
+    /// Verify the incremental index, the SoA columns and the sampling
+    /// counters against recompute-from-scratch oracles (test/debug
+    /// support; O(hosts x vms)). Checks bucket membership, spot-host
+    /// membership, bitwise equality of every spot-usage vector, bitwise
+    /// equality of every mirrored hot column, and bitwise equality of
+    /// `state_sample` with `state_sample_scan`.
     pub fn check_index(&self) -> Result<(), String> {
         let mut indexed = 0usize;
         for host in &self.hosts {
@@ -370,6 +533,18 @@ impl World {
             if in_spot_set != should {
                 return Err(format!("host {h}: spot-set membership {in_spot_set} != {should}"));
             }
+            // SoA host columns mirror the struct's derived accessors.
+            let hot = &self.hot;
+            if hot.host_active[h] != host.is_active()
+                || hot.host_free_pes[h] != host.free_pes()
+                || hot.host_free_ram[h].to_bits() != host.free_ram().to_bits()
+                || hot.host_free_bw[h].to_bits() != host.free_bw().to_bits()
+                || hot.host_free_storage[h].to_bits() != host.free_storage().to_bits()
+                || hot.host_spot_used[h] != host.spot_used
+                || hot.host_spot_vms[h] != host.spot_vms
+            {
+                return Err(format!("host {h}: SoA columns diverged from struct"));
+            }
         }
         if indexed != self.index.len() {
             return Err(format!(
@@ -377,16 +552,80 @@ impl World {
                 self.index.len()
             ));
         }
+        for vm in &self.vms {
+            let v = vm.id;
+            let hot = &self.hot;
+            if hot.vm_state[v] != vm.state
+                || hot.vm_spot[v] != vm.is_spot()
+                || hot.vm_pes[v] != vm.spec.pes
+                || hot.vm_request[v] != vm.spec.request_vec()
+            {
+                return Err(format!("vm {v}: SoA columns diverged from struct"));
+            }
+            let displaced_mirror = if hot.vm_displaced_at[v].is_nan() {
+                None
+            } else {
+                Some(hot.vm_displaced_at[v])
+            };
+            if displaced_mirror != vm.displaced_at {
+                return Err(format!(
+                    "vm {v}: displaced mirror {displaced_mirror:?} != {:?}",
+                    vm.displaced_at
+                ));
+            }
+            let hibernated_mirror = if hot.vm_hibernated_at[v].is_nan() {
+                None
+            } else {
+                Some(hot.vm_hibernated_at[v])
+            };
+            if hibernated_mirror != vm.hibernated_at {
+                return Err(format!(
+                    "vm {v}: hibernated mirror {hibernated_mirror:?} != {:?}",
+                    vm.hibernated_at
+                ));
+            }
+        }
+        let inc = self.state_sample();
+        let scan = self.state_sample_scan();
+        if !inc.bits_eq(&scan) {
+            return Err(format!("state_sample {inc:?} != scan oracle {scan:?}"));
+        }
         Ok(())
     }
 
-    /// One-pass sampling snapshot for the engine's `Sample` tick: all the
-    /// per-state VM counts plus aggregate host utilization in a single VM
-    /// walk and a single host walk. Replaces four [`Self::count_by_state`]
-    /// walks + [`Self::pe_usage`] + [`Self::ram_usage`] per sample; the
-    /// accumulation order per counter is identical to the individual
-    /// queries, so sampled series stay bit-identical.
+    /// Sampling snapshot for the engine's `Sample` tick: an O(1) read of
+    /// counters maintained by every VM state transition and host
+    /// activate/deactivate/commit/release. When a RAM value has violated
+    /// the exactness guard (`engine::soa` module docs), only the two RAM
+    /// aggregates fall back to the oracle's host walk; all other fields
+    /// stay O(1). Pinned bitwise against [`Self::state_sample_scan`] by
+    /// `check_index`, the property tests and a debug assertion on every
+    /// engine sample.
     pub fn state_sample(&self) -> StateSample {
+        let mut s = self.hot.sample_counts();
+        if !self.hot.ram_exact() {
+            let mut used = 0.0f64;
+            let mut total = 0.0f64;
+            for h in &self.hosts {
+                if h.is_active() {
+                    used += h.used_ram;
+                    total += h.spec.ram;
+                }
+            }
+            s.used_ram = used;
+            s.total_ram = total;
+        }
+        s
+    }
+
+    /// The pre-SoA walking implementation, retained as the oracle: all
+    /// the per-state VM counts plus aggregate host utilization in a
+    /// single VM walk and a single host walk. The accumulation order per
+    /// counter is identical to the individual queries
+    /// ([`Self::count_by_state`] / [`Self::pe_usage`] /
+    /// [`Self::ram_usage`]), so sampled series stay bit-identical across
+    /// all three generations of the sampler.
+    pub fn state_sample_scan(&self) -> StateSample {
         let mut s = StateSample::default();
         for vm in &self.vms {
             let spot = vm.is_spot();
@@ -574,8 +813,89 @@ mod tests {
         w.check_index().unwrap();
     }
 
+    /// Satellite regression: a duplicate trace ADD (double-activate) must
+    /// be a no-op - before the idempotency guard it clobbered
+    /// `created_at` and (with incremental counters) would double-add the
+    /// host's sampling contribution.
+    #[test]
+    fn activate_host_is_idempotent() {
+        let (mut w, h) = world_with_host();
+        let sp = w.add_vm(Vm::spot(0, VmSpec::new(1000.0, 2), SpotConfig::hibernate()));
+        w.commit_vm(h, sp);
+
+        // Double-activate on an already-active host.
+        w.activate_host(h, 5.0);
+        assert_eq!(w.hosts[h].created_at, 0.0, "duplicate ADD must not clobber created_at");
+        w.check_index().unwrap();
+
+        // Deactivate, then two ADDs in a row (chaos recovery racing a
+        // trace ADD): the first wins, the second is a no-op.
+        w.deactivate_host(h, Some(7.0));
+        assert_eq!(w.state_sample().failed_hosts, 1);
+        w.check_index().unwrap();
+        w.activate_host(h, 9.0);
+        w.activate_host(h, 11.0);
+        assert_eq!(w.hosts[h].created_at, 9.0);
+        assert_eq!(w.state_sample().failed_hosts, 0);
+        w.check_index().unwrap();
+
+        // Double-deactivate only counts the failure once (the later
+        // timestamp wins, matching the pre-guard overwrite semantics).
+        w.deactivate_host(h, Some(20.0));
+        w.deactivate_host(h, Some(21.0));
+        assert_eq!(w.hosts[h].removed_at, Some(21.0));
+        assert_eq!(w.state_sample().failed_hosts, 1);
+        w.check_index().unwrap();
+    }
+
+    /// Satellite regression: when PROBE_LIMIT index probes all fail the
+    /// non-PE dimensions, the fallback ordered walk must agree with the
+    /// full linear scan - including finding a feasible host past the
+    /// probed prefix.
+    #[test]
+    fn first_fit_fallback_agrees_with_scan_when_probes_exhaust() {
+        let mut w = World::new();
+        let dc = w.add_datacenter("dc", 1.0);
+        // Eleven PE-feasible hosts whose RAM is too small, then one that
+        // fits: the 8 probes reject ids 0..=7, the fallback walk starts
+        // at 8 and must find id 11 exactly like the scan does.
+        for _ in 0..11 {
+            w.add_host(dc, HostSpec::new(8, 1000.0, 1_024.0, 5_000.0, 200_000.0), 0.0);
+        }
+        let big = w.add_host(dc, HostSpec::new(8, 1000.0, 65_536.0, 5_000.0, 200_000.0), 0.0);
+        let mut probe = Vm::on_demand(0, VmSpec::new(1000.0, 2));
+        probe.spec.ram = 2_048.0;
+        assert_eq!(w.first_fit_host(&probe), Some(big));
+        assert_eq!(w.first_fit_host(&probe), w.first_fit_host_scan(&probe));
+
+        // No host feasible at all: both sides agree on None.
+        probe.spec.ram = 1_000_000.0;
+        assert_eq!(w.first_fit_host(&probe), None);
+        assert_eq!(w.first_fit_host_scan(&probe), None);
+        w.check_index().unwrap();
+    }
+
+    /// Satellite regression (off-by-one): when the last rejected probe is
+    /// the last active host, the fallback starts at `after + 1 ==
+    /// hosts.len()` - an empty range, not a panic.
+    #[test]
+    fn first_fit_fallback_when_probes_exhaust_on_last_host() {
+        let mut w = World::new();
+        let dc = w.add_datacenter("dc", 1.0);
+        for _ in 0..8 {
+            w.add_host(dc, HostSpec::new(8, 1000.0, 1_024.0, 5_000.0, 200_000.0), 0.0);
+        }
+        let mut probe = Vm::on_demand(0, VmSpec::new(1000.0, 2));
+        probe.spec.ram = 2_048.0;
+        // Probes reject ids 0..=7; `after` is then the last active host.
+        assert_eq!(w.first_fit_host(&probe), None);
+        assert_eq!(w.first_fit_host_scan(&probe), None);
+        w.check_index().unwrap();
+    }
+
     /// The one-pass sampling snapshot agrees with the individual queries
-    /// it replaces.
+    /// it replaces, and the O(1) counters agree with the walking oracle
+    /// bitwise.
     #[test]
     fn state_sample_matches_individual_queries() {
         let mut w = World::new();
@@ -588,16 +908,18 @@ mod tests {
         let hib = w.add_vm(Vm::spot(0, VmSpec::new(1000.0, 1), SpotConfig::hibernate()));
         w.commit_vm(0, od);
         w.commit_vm(1, sp);
-        w.vms[od].transition(VmState::Running);
-        w.vms[sp].transition(VmState::Running);
-        w.vms[sp].transition(VmState::InterruptWarned);
-        w.vms[hib].transition(VmState::Running);
-        w.vms[hib].transition(VmState::InterruptWarned);
-        w.vms[hib].transition(VmState::Hibernated);
-        w.vms[hib].displaced_at = Some(1.0);
+        w.transition_vm(od, VmState::Running);
+        w.transition_vm(sp, VmState::Running);
+        w.transition_vm(sp, VmState::InterruptWarned);
+        w.transition_vm(hib, VmState::Running);
+        w.transition_vm(hib, VmState::InterruptWarned);
+        w.transition_vm(hib, VmState::Hibernated);
+        w.mark_displaced(hib, 1.0);
         w.deactivate_host(2, Some(1.0));
 
+        assert!(w.sample_is_incremental(), "dyadic-RAM workload must stay on the O(1) path");
         let s = w.state_sample();
+        assert!(s.bits_eq(&w.state_sample_scan()), "incremental sample != scan oracle");
         // Resilience gauges: host 2 is down-after-active, `hib` is
         // displaced and not yet re-placed.
         assert_eq!(s.failed_hosts, 1);
@@ -615,6 +937,44 @@ mod tests {
         assert_eq!((s.hibernated, s.od_waiting, s.spot_waiting), (spot_hib, od_wait, spot_wait));
         assert_eq!((s.used_pes, s.total_pes), (used_pes, total_pes));
         assert_eq!((s.used_ram.to_bits(), s.total_ram.to_bits()), (used_ram.to_bits(), total_ram.to_bits()));
+    }
+
+    /// A terminal transition clears a pending displacement so the gauge
+    /// cannot leak (world-level twin of the engine lifecycle test).
+    #[test]
+    fn terminal_transition_clears_displacement() {
+        let (mut w, h) = world_with_host();
+        let sp = w.add_vm(Vm::spot(0, VmSpec::new(1000.0, 1), SpotConfig::hibernate()));
+        w.commit_vm(h, sp);
+        w.transition_vm(sp, VmState::Running);
+        w.transition_vm(sp, VmState::InterruptWarned);
+        w.release_vm(h, sp);
+        w.transition_vm(sp, VmState::Hibernated);
+        w.mark_displaced(sp, 2.0);
+        assert_eq!(w.state_sample().displaced, 1);
+        w.transition_vm(sp, VmState::Terminated);
+        assert_eq!(w.vms[sp].displaced_at, None);
+        assert_eq!(w.state_sample().displaced, 0);
+        w.check_index().unwrap();
+    }
+
+    /// Non-dyadic RAM values trip the exactness guard: the sample
+    /// degrades to a host walk for the two RAM fields only and stays
+    /// bitwise equal to the oracle.
+    #[test]
+    fn state_sample_falls_back_to_walk_on_non_dyadic_ram() {
+        let mut w = World::new();
+        let dc = w.add_datacenter("dc", 1.0);
+        w.add_host(dc, HostSpec::new(8, 1000.0, 10_000.1, 5_000.0, 200_000.0), 0.0);
+        assert!(!w.sample_is_incremental());
+        let mut vm = Vm::on_demand(0, VmSpec::new(1000.0, 1));
+        vm.spec.ram = 333.3;
+        let v = w.add_vm(vm);
+        w.commit_vm(0, v);
+        w.transition_vm(v, VmState::Running);
+        let s = w.state_sample();
+        assert!(s.bits_eq(&w.state_sample_scan()));
+        w.check_index().unwrap();
     }
 
     #[test]

@@ -134,6 +134,10 @@ impl Host {
 
     /// Commit resources for a VM (engine-internal; panics on oversubscribe,
     /// which would indicate a policy bug - policies must check `fits`).
+    ///
+    /// The VM is appended at the END of `self.vms`: `World::commit_vm`
+    /// relies on that order to extend the spot-usage fold incrementally
+    /// while staying bitwise equal to the walking oracle.
     pub fn commit(&mut self, vm: VmId, pes: u32, ram: f64, bw: f64, storage: f64) {
         assert!(self.fits(pes, ram, bw, storage), "host {} oversubscribed by vm {}", self.id, vm);
         self.used_pes += pes;

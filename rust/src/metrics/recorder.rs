@@ -2,6 +2,7 @@
 //! history, interruption counts, and average interruption times").
 
 use super::series::TimeSeries;
+use crate::engine::world::StateSample;
 use crate::vm::VmId;
 
 /// Kind of lifecycle event recorded for observability.
@@ -205,6 +206,26 @@ impl Recorder {
         *migrations = 0;
         *failed_migrations = 0;
         requeue_latency.clear();
+    }
+
+    /// Append one sampled-state row (schema: [`SERIES_COLUMNS`]) from an
+    /// engine `Sample` tick. Pure projection of the snapshot - the row
+    /// math lives here, next to the column schema it must match, so the
+    /// engine's sampler stays a counter read plus this call.
+    pub fn push_sample(&mut self, now: f64, s: &StateSample) {
+        let row = [
+            (s.od_running + s.od_warned) as f64,
+            (s.spot_running + s.spot_warned) as f64,
+            s.hibernated as f64,
+            (s.od_waiting + s.spot_waiting) as f64,
+            s.used_pes as f64,
+            s.total_pes as f64,
+            if s.total_ram > 0.0 { s.used_ram / s.total_ram } else { 0.0 },
+            if s.total_pes > 0 { s.used_pes as f64 / s.total_pes as f64 } else { 0.0 },
+            s.failed_hosts as f64,
+            s.displaced as f64,
+        ];
+        self.series.push(now, &row);
     }
 
     pub fn log(&mut self, time: f64, vm: VmId, kind: LifecycleKind) {

@@ -123,18 +123,18 @@ mod tests {
         let od = w.add_vm(Vm::on_demand(0, VmSpec::new(1000.0, 4)));
         let sp = w.add_vm(Vm::spot(0, VmSpec::new(1000.0, 2), SpotConfig::hibernate()));
         // Simulate lifecycles.
-        w.vms[od].transition(VmState::Running);
+        w.transition_vm(od, VmState::Running);
         w.vms[od].history.record_start(h, 10.0);
         w.vms[od].history.record_stop(32.0);
-        w.vms[od].state = VmState::Finished;
+        w.transition_vm(od, VmState::Finished);
         w.vms[od].stopped_at = Some(32.0);
-        w.vms[sp].transition(VmState::Running);
+        w.transition_vm(sp, VmState::Running);
         w.vms[sp].history.record_start(h, 0.0);
         w.vms[sp].history.record_stop(10.0);
         w.vms[sp].history.record_start(h, 32.0);
         w.vms[sp].history.record_stop(43.0);
         w.vms[sp].interruptions = 1;
-        w.vms[sp].state = VmState::Finished;
+        w.transition_vm(sp, VmState::Finished);
         w.vms[sp].stopped_at = Some(43.0);
         (w, od, sp)
     }

@@ -165,6 +165,10 @@ impl Vm {
     }
 
     /// State transition with legality check (engine invariant).
+    ///
+    /// Raw struct-level transition: code holding a `World` must go
+    /// through `World::transition_vm` instead, which wraps this and also
+    /// maintains the O(1) sampling counters and SoA state column.
     pub fn transition(&mut self, next: VmState) {
         assert!(
             self.state.can_transition_to(next),

@@ -285,3 +285,105 @@ fn tables_render_on_finished_world() {
     let spot_count = e.world.vms.iter().filter(|v| v.vm_type == VmType::Spot).count();
     assert_eq!(spot_count, 2);
 }
+
+/// Satellite regression (displaced-gauge leak): a VM that is terminated,
+/// failed, or finished while displaced must always return the `displaced`
+/// gauge to zero. Drives one displaced VM through each terminal path and
+/// cross-checks the incremental sample against the walking oracle.
+#[test]
+fn displaced_gauge_returns_to_zero_on_every_terminal_path() {
+    // Path 1: hibernated-while-displaced -> hibernation timeout -> Terminated.
+    // First stop mid-hibernation to prove the gauge actually went up.
+    for (stop_at, want_displaced, want_state) in
+        [(15.0, 1u64, VmState::Hibernated), (100.0, 0u64, VmState::Terminated)]
+    {
+        let mut cfg = EngineConfig::default();
+        cfg.vm_destruction_delay = 0.0;
+        let mut e = Engine::new(cfg, Box::new(FirstFit::new()));
+        let dc = e.add_datacenter("dc", 1.0);
+        e.add_host(dc, HostSpec::new(4, 1000.0, 8_192.0, 10_000.0, 500_000.0));
+        let spot_cfg = SpotConfig::hibernate()
+            .with_min_running(0.0)
+            .with_warning(0.0)
+            .with_hibernation_timeout(20.0);
+        let spot =
+            e.submit_vm(Vm::spot(0, VmSpec::new(1000.0, 4), spot_cfg).with_persistent(500.0));
+        e.submit_cloudlet(Cloudlet::new(0, 1_000_000.0, 4).with_vm(spot));
+        // The on-demand arrival at t=5 preempts (displaces) the spot VM and
+        // then keeps the host full past the hibernation timeout at t=25.
+        let od = e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 4)).with_delay(5.0));
+        e.submit_cloudlet(Cloudlet::new(0, 400_000.0, 4).with_vm(od));
+        e.terminate_at(stop_at);
+        let report = e.run();
+
+        assert_eq!(e.world.vms[spot].state, want_state, "[hibernate t={stop_at}]");
+        let s = e.world.state_sample();
+        assert_eq!(s.displaced, want_displaced, "[hibernate t={stop_at}]");
+        assert_eq!(
+            e.world.vms[spot].displaced_at.is_some(),
+            want_displaced > 0,
+            "[hibernate t={stop_at}] gauge and Option must agree"
+        );
+        assert!(s.bits_eq(&e.world.state_sample_scan()), "[hibernate t={stop_at}]");
+        e.world.check_index().expect("consistent after hibernate-timeout path");
+        assert_eq!(report.spot.interruptions, 1, "[hibernate t={stop_at}]");
+    }
+
+    // Path 2: on-demand evicted by host removal -> Waiting (displaced) ->
+    // WaitingExpired -> Failed. The requeue window is 3600 s for
+    // non-persistent on-demand VMs, so the deadline lands at t=3610.
+    for (stop_at, want_displaced, want_state) in
+        [(1_000.0, 1u64, VmState::Waiting), (4_000.0, 0u64, VmState::Failed)]
+    {
+        let mut cfg = EngineConfig::default();
+        cfg.vm_destruction_delay = 0.0;
+        let mut e = Engine::new(cfg, Box::new(FirstFit::new()));
+        let dc = e.add_datacenter("dc", 1.0);
+        e.add_host(dc, HostSpec::new(4, 1000.0, 8_192.0, 10_000.0, 500_000.0));
+        let od = e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 4)));
+        e.submit_cloudlet(Cloudlet::new(0, 1_000_000.0, 4).with_vm(od));
+        e.remove_host_at(0, 10.0);
+        e.terminate_at(stop_at);
+        e.run();
+
+        assert_eq!(e.world.vms[od].state, want_state, "[evict t={stop_at}]");
+        let s = e.world.state_sample();
+        assert_eq!(s.displaced, want_displaced, "[evict t={stop_at}]");
+        assert_eq!(
+            e.world.vms[od].displaced_at.is_some(),
+            want_displaced > 0,
+            "[evict t={stop_at}] gauge and Option must agree"
+        );
+        assert!(s.bits_eq(&e.world.state_sample_scan()), "[evict t={stop_at}]");
+        e.world.check_index().expect("consistent after eviction path");
+    }
+
+    // Path 3: displaced -> resumed -> Finished (the recovery path clears
+    // the gauge on re-placement, not at the terminal transition).
+    {
+        let mut cfg = EngineConfig::default();
+        cfg.vm_destruction_delay = 0.0;
+        let mut e = Engine::new(cfg, Box::new(FirstFit::new()));
+        let dc = e.add_datacenter("dc", 1.0);
+        e.add_host(dc, HostSpec::new(4, 1000.0, 8_192.0, 10_000.0, 500_000.0));
+        let spot_cfg = SpotConfig::hibernate()
+            .with_min_running(0.0)
+            .with_warning(0.0)
+            .with_hibernation_timeout(500.0);
+        let spot =
+            e.submit_vm(Vm::spot(0, VmSpec::new(1000.0, 4), spot_cfg).with_persistent(500.0));
+        e.submit_cloudlet(Cloudlet::new(0, 40_000.0, 4).with_vm(spot));
+        let od = e.submit_vm(Vm::on_demand(0, VmSpec::new(1000.0, 4)).with_delay(5.0));
+        e.submit_cloudlet(Cloudlet::new(0, 20_000.0, 4).with_vm(od));
+        e.terminate_at(300.0);
+        let report = e.run();
+
+        assert_eq!(e.world.vms[spot].state, VmState::Finished, "[resume]");
+        assert_eq!(report.spot.redeployments, 1, "[resume]");
+        let s = e.world.state_sample();
+        assert_eq!(s.displaced, 0, "[resume] gauge must clear on re-placement");
+        assert!(e.world.vms[spot].displaced_at.is_none(), "[resume]");
+        assert!(s.bits_eq(&e.world.state_sample_scan()), "[resume]");
+        e.world.check_index().expect("consistent after resume path");
+    }
+}

@@ -132,3 +132,49 @@ fn hlem_plain_index_matches_scan() {
 fn hlem_adjusted_index_matches_scan() {
     parity_for(|scan| Box::new(HlemVmp::adjusted().with_scan_mode(scan)), 12, 0xAD05);
 }
+
+/// Degenerate many-feasible-hosts case: a uniform fleet where every host
+/// can take every request, so the bounded-probe first-fit accepts its
+/// first probe each time while the scan oracle walks from id 0 - any
+/// probe-order bug shows up as a placement divergence. A handful of
+/// oversized requests is mixed in so the probe budget also exhausts and
+/// the fallback tail scan is exercised end to end.
+#[test]
+fn first_fit_many_feasible_hosts_parity() {
+    fn build(rng: &mut Rng, policy: Box<dyn AllocationPolicy>) -> Engine {
+        let mut cfg = EngineConfig::default();
+        cfg.vm_destruction_delay = 0.0;
+        let mut e = Engine::new(cfg, policy);
+        let dc = e.add_datacenter("dc", 1.0);
+        let n_hosts = rng.range_u64(16, 48);
+        for _ in 0..n_hosts {
+            e.add_host(dc, cloudmarket::infra::HostSpec::new(16, 1000.0, 65_536.0, 20_000.0, 1_000_000.0));
+        }
+        // One high-id machine with extra RAM: the only feasible target
+        // for the oversized requests below, past the probe budget.
+        e.add_host(dc, cloudmarket::infra::HostSpec::new(16, 1000.0, 1_048_576.0, 20_000.0, 1_000_000.0));
+        for i in 0..rng.range_u64(20, 60) {
+            let oversized = i % 7 == 0;
+            let spec = if oversized {
+                cloudmarket::vm::VmSpec::new(1000.0, 1).with_ram(100_000.0)
+            } else {
+                cloudmarket::vm::VmSpec::new(1000.0, rng.range_u64(1, 4) as u32)
+            };
+            let vm = e.submit_vm(Vm::on_demand(0, spec).with_delay(rng.uniform(0.0, 40.0)));
+            e.submit_cloudlet(Cloudlet::new(0, rng.uniform(1_000.0, 60_000.0), 1).with_vm(vm));
+        }
+        e.terminate_at(200.0);
+        e
+    }
+    forall(8, 0xFFDE6E, |rng| {
+        let wl_seed = rng.next_u64();
+        let mut scan = build(&mut Rng::new(wl_seed), Box::new(FirstFit::new().with_scan_mode(true)));
+        let mut indexed =
+            build(&mut Rng::new(wl_seed), Box::new(FirstFit::new().with_scan_mode(false)));
+        let r_scan = scan.run();
+        let r_indexed = indexed.run();
+        assert_eq!(r_scan.events_processed, r_indexed.events_processed, "event streams diverged");
+        assert_eq!(fingerprint(&scan), fingerprint(&indexed), "per-VM outcomes diverged");
+        indexed.world.check_index().expect("index consistent after many-feasible parity run");
+    });
+}

@@ -11,9 +11,10 @@ use cloudmarket::allocation::{AllocationPolicy, BestFit, FirstFit, HlemVmp, Roun
 use cloudmarket::cloudlet::Cloudlet;
 use cloudmarket::core::{EntityId, EventQueue, HeapEventQueue, SimEvent};
 use cloudmarket::engine::{Engine, EngineConfig, World};
+use cloudmarket::infra::HostSpec;
 use cloudmarket::stats::Rng;
 use cloudmarket::testkit::{forall, gen};
-use cloudmarket::vm::{Vm, VmState};
+use cloudmarket::vm::{Vm, VmSpec, VmState};
 
 /// The slab/index-heap event queue pops the exact (time, seq) order of
 /// the retained `BinaryHeap` oracle over randomized op sequences -
@@ -389,6 +390,36 @@ fn prop_indexed_queries_match_scan_oracles() {
             w.feasible_host_ids_scan(&probe, &mut b);
             assert_eq!(a, b, "feasible candidate list (order-sensitive)");
         }
+        // Degenerate probes: 1-PE requests whose RAM demand makes every
+        // host feasible (ram=0), most hosts infeasible (the bounded-probe
+        // first-fit exhausts its probe budget and falls back to the
+        // linear tail scan), or no host feasible at all.
+        for ram in [0.0, 60_000.0, 200_000.0, 1e9] {
+            let mut probe = Vm::on_demand(0, gen::vm_spec(rng));
+            probe.spec.pes = 1;
+            probe.spec.ram = ram;
+            probe.spec.bw = 1.0;
+            probe.spec.storage = 1.0;
+            assert_eq!(
+                w.first_fit_host(&probe),
+                w.first_fit_host_scan(&probe),
+                "first-fit degenerate ram={ram}"
+            );
+            assert_eq!(
+                w.best_fit_host(&probe),
+                w.best_fit_host_scan(&probe),
+                "best-fit degenerate ram={ram}"
+            );
+            assert_eq!(
+                w.worst_fit_host(&probe),
+                w.worst_fit_host_scan(&probe),
+                "worst-fit degenerate ram={ram}"
+            );
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            w.feasible_host_ids(&probe, &mut a);
+            w.feasible_host_ids_scan(&probe, &mut b);
+            assert_eq!(a, b, "feasible list degenerate ram={ram}");
+        }
         // Spot-usage vectors: O(1) reads bitwise equal to the walk.
         for h in w.active_hosts() {
             assert_eq!(w.spot_used_vec(h), w.spot_used_vec_scan(h), "host {}", h.id);
@@ -400,6 +431,188 @@ fn prop_indexed_queries_match_scan_oracles() {
             .map(|h| h.id)
             .collect();
         assert_eq!(w.spot_host_ids().collect::<Vec<_>>(), oracle);
+    });
+}
+
+/// The O(1) incremental `state_sample` is *bitwise* equal to the walking
+/// oracle after every single world mutation - commit, release, state
+/// transition, displacement mark/clear and host lifecycle churn
+/// (including duplicate activations/deactivations, which must be inert).
+/// Runs both on integral-MB (dyadic) RAM values, where the counters must
+/// never leave the exact O(1) path, and on non-dyadic values from the
+/// default generators, which exercise the used/total-RAM fallback walk.
+#[test]
+fn prop_state_sample_matches_scan_after_every_op() {
+    fn dyadic_host(rng: &mut Rng) -> HostSpec {
+        // Power-of-two RAM (4 GB .. 256 GB): always exactly summable.
+        HostSpec::new(
+            rng.range_u64(1, 32) as u32,
+            1000.0,
+            (1u64 << rng.range_u64(12, 18)) as f64,
+            10_000.0,
+            500_000.0,
+        )
+    }
+    fn dyadic_vm(rng: &mut Rng) -> VmSpec {
+        VmSpec::new(1000.0, rng.range_u64(1, 8) as u32)
+            .with_ram((1u64 << rng.range_u64(8, 13)) as f64)
+            .with_bw(100.0)
+            .with_storage(1_000.0)
+    }
+
+    forall(24, 0x5A3D1E, |rng| {
+        let dyadic = rng.chance(0.5);
+        let mut w = World::new();
+        let dc = w.add_datacenter("dc", 1.0);
+        for _ in 0..rng.range_u64(2, 8) {
+            let spec = if dyadic { dyadic_host(rng) } else { gen::host_spec(rng) };
+            w.add_host(dc, spec, 0.0);
+        }
+        // VMs currently on a host (Running / InterruptWarned) and VMs
+        // parked off-host (Waiting / Hibernated); terminal VMs drop out.
+        let mut placed: Vec<(usize, usize)> = Vec::new();
+        let mut parked: Vec<usize> = Vec::new();
+        let steps = rng.range_u64(40, 160);
+        for step in 0..steps {
+            let t = step as f64;
+            match rng.below(100) {
+                // Submit a fresh VM; place it first-fit or park it.
+                0..=29 => {
+                    let spec = if dyadic { dyadic_vm(rng) } else { gen::vm_spec(rng) };
+                    let vm = if rng.chance(0.4) {
+                        w.add_vm(Vm::spot(0, spec, gen::spot_config(rng)))
+                    } else {
+                        w.add_vm(Vm::on_demand(0, spec))
+                    };
+                    if let Some(h) = w.first_fit_host_scan(&w.vms[vm]) {
+                        w.commit_vm(h, vm);
+                        w.transition_vm(vm, VmState::Running);
+                        placed.push((vm, h));
+                    } else {
+                        parked.push(vm); // stays Waiting
+                    }
+                }
+                // Warn a running VM, or finish one off its host.
+                30..=44 => {
+                    if !placed.is_empty() {
+                        let i = rng.below(placed.len() as u64) as usize;
+                        let (vm, h) = placed[i];
+                        if w.vms[vm].state == VmState::Running && rng.chance(0.5) {
+                            w.transition_vm(vm, VmState::InterruptWarned);
+                        } else {
+                            placed.swap_remove(i);
+                            w.transition_vm(vm, VmState::Finished);
+                            w.release_vm(h, vm);
+                        }
+                    }
+                }
+                // Displace: off the host into Hibernated (spot interrupt)
+                // or Waiting (on-demand requeue), gauge raised.
+                45..=59 => {
+                    if !placed.is_empty() {
+                        let i = rng.below(placed.len() as u64) as usize;
+                        let (vm, h) = placed.swap_remove(i);
+                        w.release_vm(h, vm);
+                        if w.vms[vm].state == VmState::InterruptWarned || rng.chance(0.5) {
+                            w.transition_vm(vm, VmState::Hibernated);
+                            w.set_hibernated_at(vm, Some(t));
+                        } else {
+                            w.transition_vm(vm, VmState::Waiting);
+                        }
+                        w.mark_displaced(vm, t);
+                        parked.push(vm);
+                    }
+                }
+                // Terminal path for a parked (possibly displaced) VM: the
+                // displaced gauge must auto-clear on the transition.
+                60..=69 => {
+                    if !parked.is_empty() {
+                        let i = rng.below(parked.len() as u64) as usize;
+                        let vm = parked.swap_remove(i);
+                        match w.vms[vm].state {
+                            VmState::Hibernated => w.transition_vm(vm, VmState::Terminated),
+                            _ => w.transition_vm(vm, VmState::Failed),
+                        }
+                        assert!(
+                            w.vms[vm].displaced_at.is_none(),
+                            "terminal transition must clear displaced_at"
+                        );
+                    }
+                }
+                // Resume / first placement of a parked VM.
+                70..=79 => {
+                    if !parked.is_empty() {
+                        let i = rng.below(parked.len() as u64) as usize;
+                        let vm = parked[i];
+                        if let Some(h) = w.first_fit_host_scan(&w.vms[vm]) {
+                            parked.swap_remove(i);
+                            w.commit_vm(h, vm);
+                            w.transition_vm(vm, VmState::Running);
+                            w.set_hibernated_at(vm, None);
+                            let _ = w.take_displaced(vm);
+                            placed.push((vm, h));
+                        }
+                    }
+                }
+                // Trace ADD: a new host joins mid-run.
+                80..=85 => {
+                    let spec = if dyadic { dyadic_host(rng) } else { gen::host_spec(rng) };
+                    w.add_host(dc, spec, t);
+                }
+                // Trace REMOVE / crash: evict residents, deactivate -
+                // sometimes twice (the duplicate must be inert).
+                86..=92 => {
+                    let active: Vec<usize> = w.active_hosts().map(|h| h.id).collect();
+                    if !active.is_empty() {
+                        let h = active[rng.below(active.len() as u64) as usize];
+                        let vms: Vec<usize> = w.hosts[h].vms.clone();
+                        for vm in vms {
+                            w.release_vm(h, vm);
+                            placed.retain(|&(v, _)| v != vm);
+                            if w.vms[vm].state == VmState::Running && rng.chance(0.5) {
+                                w.transition_vm(vm, VmState::Waiting);
+                            } else {
+                                w.transition_vm(vm, VmState::Hibernated);
+                                w.set_hibernated_at(vm, Some(t));
+                            }
+                            w.mark_displaced(vm, t);
+                            parked.push(vm);
+                        }
+                        let removed_at = rng.chance(0.7).then_some(t);
+                        w.deactivate_host(h, removed_at);
+                        if rng.chance(0.25) {
+                            w.deactivate_host(h, Some(t + 0.5));
+                        }
+                    }
+                }
+                // Reactivate a down host - sometimes twice (idempotent).
+                _ => {
+                    let inactive: Vec<usize> =
+                        w.hosts.iter().filter(|h| !h.is_active()).map(|h| h.id).collect();
+                    if !inactive.is_empty() {
+                        let h = inactive[rng.below(inactive.len() as u64) as usize];
+                        w.activate_host(h, t);
+                        if rng.chance(0.25) {
+                            w.activate_host(h, t + 0.5);
+                        }
+                    }
+                }
+            }
+            assert!(
+                w.state_sample().bits_eq(&w.state_sample_scan()),
+                "incremental sample diverged from scan oracle at step {step} (dyadic={dyadic})"
+            );
+            if step % 8 == 0 {
+                w.check_index().expect("index + SoA mirrors consistent mid-workout");
+            }
+        }
+        w.check_index().unwrap();
+        if dyadic {
+            assert!(
+                w.sample_is_incremental(),
+                "integral-MB workload must never trip the RAM exactness guard"
+            );
+        }
     });
 }
 
